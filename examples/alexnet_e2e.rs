@@ -1,0 +1,110 @@
+//! End-to-end driver (DESIGN.md §7): the full AlexNet conv+pool stack on
+//! a synthetic 227×227×3 image, **full cycle simulation**, activations
+//! threaded layer to layer, conv1 golden-checked bit-exactly against the
+//! AOT JAX/Pallas artifact through PJRT, and the paper's headline
+//! metrics printed next to Table II.
+//!
+//!     make artifacts && cargo run --release --example alexnet_e2e
+
+use convaix::coordinator::executor::{run_conv_layer, run_pool_layer, ExecOptions};
+use convaix::coordinator::metrics::NetworkResult;
+use convaix::core::Cpu;
+use convaix::energy::power;
+use convaix::model::{alexnet_conv, alexnet_pools};
+use convaix::runtime::{Manifest, PjrtRunner};
+use convaix::util::table::Table;
+use convaix::util::XorShift;
+
+fn main() -> anyhow::Result<()> {
+    let t_start = std::time::Instant::now();
+    let convs = alexnet_conv();
+    let pools = alexnet_pools();
+    let mut rng = XorShift::new(2024);
+
+    // synthetic input image (deterministic)
+    let mut act = rng.i16_vec(3 * 227 * 227, -4000, 4000);
+    // per-layer weights, kept for the golden check
+    let weights: Vec<(Vec<i16>, Vec<i32>)> = convs
+        .iter()
+        .map(|l| {
+            (
+                rng.i16_vec(l.oc * (l.ic / l.groups) * l.fh * l.fw, -200, 200),
+                rng.i32_vec(l.oc, -2000, 2000),
+            )
+        })
+        .collect();
+
+    let opts = ExecOptions::default(); // FullCycle
+    let mut cpu = Cpu::new(1 << 26);
+    let mut net = NetworkResult { name: "AlexNet".into(), ..Default::default() };
+
+    println!("running full-cycle simulation of AlexNet (conv+pool)...");
+    for (i, l) in convs.iter().enumerate() {
+        let (w, b) = &weights[i];
+        let t0 = std::time::Instant::now();
+        let r = run_conv_layer(&mut cpu, l, &act, w, b, opts).map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!(
+            "  {:6}: {:9} cycles, util {:.3}, host {:?}",
+            l.name, r.cycles, r.utilization(), t0.elapsed()
+        );
+        act = r.out.clone();
+        net.layers.push(r);
+        // pooling after conv1, conv2, conv5
+        let pool = match l.name {
+            "conv1" => Some(&pools[0]),
+            "conv2" => Some(&pools[1]),
+            "conv5" => Some(&pools[2]),
+            _ => None,
+        };
+        if let Some(p) = pool {
+            let r = run_pool_layer(&mut cpu, p, &act, opts).map_err(|e| anyhow::anyhow!("{e}"))?;
+            println!("  {:6}: {:9} cycles (SFU)", p.name, r.cycles);
+            act = r.out.clone();
+            net.layers.push(r);
+        }
+    }
+
+    // ---- golden check: conv1 against the AOT JAX/Pallas artifact ------
+    let manifest = Manifest::load("artifacts")?;
+    let art = manifest
+        .conv("conv_alexnet_l1")
+        .ok_or_else(|| anyhow::anyhow!("conv_alexnet_l1 artifact missing"))?;
+    let runner = PjrtRunner::new()?;
+    // re-generate the same input/weights used above
+    let mut rng2 = XorShift::new(2024);
+    let x0 = rng2.i16_vec(3 * 227 * 227, -4000, 4000);
+    let (w0, b0) = (&weights[0].0, &weights[0].1);
+    println!("golden-checking conv1 against JAX/Pallas via PJRT...");
+    let golden = runner.run_conv(&manifest, art, &x0, w0, b0)?;
+    let sim_out = {
+        let mut cpu2 = Cpu::new(1 << 26);
+        run_conv_layer(&mut cpu2, &convs[0], &x0, w0, b0, opts)
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .out
+    };
+    let mism = sim_out.iter().zip(&golden).filter(|(a, b)| a != b).count();
+    assert_eq!(mism, 0, "conv1 golden mismatch: {mism} elements");
+    println!("  conv1 golden: bit-exact OK ({} elements)", golden.len());
+
+    // ---- headline metrics vs Table II ----------------------------------
+    let secs = net.time_ms() / 1e3;
+    let pwr = power::network_power(&net.stats(), secs);
+    let conv_cycles: u64 = net.layers.iter().filter(|l| l.macs > 0).map(|l| l.cycles).sum();
+    let conv_ms = conv_cycles as f64 / convaix::CLOCK_HZ as f64 * 1e3;
+    let mut t = Table::new(
+        "AlexNet end-to-end (full cycle sim) vs paper Table II",
+        &["Metric", "Measured", "Paper"],
+    );
+    t.row(&["Conv processing time [ms]".into(), format!("{:.2}", conv_ms), "12.60".into()]);
+    t.row(&["MAC utilization".into(), format!("{:.3}", net.utilization()), "0.69".into()]);
+    t.row(&["Off-chip I/O [MByte]".into(), format!("{:.2}", net.io_mbytes()), "10.79 (8b)".into()]);
+    t.row(&["Power [mW] (16b)".into(), format!("{:.1}", pwr.total_mw()), "228.8 (8b gated)".into()]);
+    t.row(&[
+        "Effective throughput [GOP/s]".into(),
+        format!("{:.1}", net.gops()),
+        format!("{:.1}", 2.0 * net.macs() as f64 / 0.0126 / 1e9),
+    ]);
+    t.print();
+    println!("total wall time: {:?}", t_start.elapsed());
+    Ok(())
+}

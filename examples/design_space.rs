@@ -1,0 +1,101 @@
+//! Design-space exploration — the flexibility story of the paper
+//! (Section I: "tiling-factors and loop-order can be flexibly adjusted
+//! in software"; Section IV knobs). Sweeps:
+//!
+//! 1. lane mapping variant A vs B per layer (what the planner chooses),
+//! 2. precision gating 16 vs 8 bit (energy, Fig. 3c effect),
+//! 3. vector geometry (lanes/slices/slots) through the area model —
+//!    the design-time unrolling trade-off.
+//!
+//!     cargo run --release --example design_space
+
+use convaix::codegen::layout::{self, Variant};
+use convaix::coordinator::executor::{run_conv_layer, ExecMode, ExecOptions};
+use convaix::core::Cpu;
+use convaix::energy::{area, power};
+use convaix::model::{alexnet_conv, vgg16_conv, ConvLayer};
+use convaix::util::table::Table;
+use convaix::util::XorShift;
+
+fn run_one(l: &ConvLayer, gate: u8) -> anyhow::Result<convaix::coordinator::LayerResult> {
+    let mut cpu = Cpu::new(1 << 24);
+    let mut rng = XorShift::new(9);
+    let x = vec![0i16; l.ic * l.ih * l.iw];
+    let w = rng.i16_vec(l.oc * (l.ic / l.groups) * l.fh * l.fw, -128, 128);
+    let b = rng.i32_vec(l.oc, -500, 500);
+    run_conv_layer(
+        &mut cpu,
+        l,
+        &x,
+        &w,
+        &b,
+        ExecOptions { mode: ExecMode::TileAnalytic, gate_bits: gate },
+    )
+    .map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. variant choice per layer ------------------------------------
+    let mut t = Table::new(
+        "Lane-mapping variants (A: lanes=OCh, B: lanes=pixels) — estimated utilization",
+        &["Layer", "est A", "est B", "planner picks", "why"],
+    );
+    for l in alexnet_conv().iter().chain(vgg16_conv().iter()) {
+        let d = l.per_group();
+        let ea = layout::plan_variant(&d, Variant::A).map(|p| p.util_estimate());
+        let eb = layout::plan_variant(&d, Variant::B).map(|p| p.util_estimate());
+        let pick = layout::plan(&d)?;
+        t.row(&[
+            l.name.into(),
+            ea.as_ref().map(|u| format!("{u:.3}")).unwrap_or("infeasible".into()),
+            eb.as_ref().map(|u| format!("{u:.3}")).unwrap_or("infeasible".into()),
+            format!("{:?}", pick.variant),
+            match pick.variant {
+                Variant::A => "wide rows / 16-ch tiles",
+                Variant::B => "narrow rows / many channels",
+            }
+            .into(),
+        ]);
+    }
+    t.print();
+
+    // --- 2. precision gating --------------------------------------------
+    let mut t = Table::new(
+        "Precision gating (AlexNet conv3): energy scales, cycles don't",
+        &["gate bits", "cycles", "vALU mW", "total mW"],
+    );
+    let l = alexnet_conv().into_iter().nth(2).unwrap();
+    for gate in [16u8, 8] {
+        let r = run_one(&l, gate)?;
+        let p = power::network_power(&r.stats, r.cycles as f64 / convaix::CLOCK_HZ as f64);
+        t.row(&[
+            gate.to_string(),
+            r.cycles.to_string(),
+            format!("{:.1}", p.valu_mw),
+            format!("{:.1}", p.total_mw()),
+        ]);
+    }
+    t.print();
+
+    // --- 3. vector geometry (design-time unrolling factors) --------------
+    let mut t = Table::new(
+        "Design-time geometry sweep (area model): peak throughput vs logic area",
+        &["slots x slices x lanes", "MACs/cycle", "peak GOP/s", "logic kGE", "GOP/s/MGE (peak)"],
+    );
+    for (slots, slices, lanes) in
+        [(3usize, 4usize, 16usize), (2, 4, 16), (3, 4, 8), (3, 2, 16), (4, 4, 16), (3, 4, 32)]
+    {
+        let kge = area::logic_kge(slots, slices, lanes);
+        let gops = area::peak_gops(slots, slices, lanes, 400.0);
+        t.row(&[
+            format!("{slots} x {slices} x {lanes}"),
+            (slots * slices * lanes).to_string(),
+            format!("{gops:.1}"),
+            format!("{kge:.0}"),
+            format!("{:.1}", gops / (kge / 1e3)),
+        ]);
+    }
+    t.print();
+    println!("reference design (3 x 4 x 16) matches Table I: 192 MACs, 153.6 GOP/s, 1293 kGE");
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Quickstart: compile one conv layer to a ConvAix VLIW kernel, run it on
+//! the cycle-accurate simulator, verify the output bit-exactly against
+//! the host reference (and the JAX/Pallas golden artifact if present),
+//! and print the metrics the paper reports.
+//!
+//!     cargo run --release --example quickstart
+
+use convaix::codegen::{layout, refconv};
+use convaix::coordinator::executor::{run_conv_layer, ExecOptions};
+use convaix::core::Cpu;
+use convaix::fixed::RoundMode;
+use convaix::model::ConvLayer;
+use convaix::runtime::{golden_conv_check, Manifest, PjrtRunner};
+use convaix::util::XorShift;
+
+fn main() -> anyhow::Result<()> {
+    // A VGG-style 3x3 conv layer.
+    let layer = ConvLayer::new("quickstart", 16, 32, 32, 32, 3, 3, 1, 1, 1);
+    println!(
+        "layer: {}x{}x{} -> {}x{}x{}, {:.1} MMACs",
+        layer.ic, layer.ih, layer.iw, layer.oc, layer.oh(), layer.ow(),
+        layer.macs() as f64 / 1e6
+    );
+
+    // what the planner decided (Fig. 2 slicing)
+    let plan = layout::plan(&layer)?;
+    println!(
+        "plan: variant {:?}, {} input slice(s), {} band(s) of {} rows, {} oc tiles, window {} px{}",
+        plan.variant, plan.m, plan.n_bands, plan.band_rows, plan.n_tiles, plan.win,
+        if plan.fused_rows { " (2-D fused line-buffer loads)" } else { "" },
+    );
+
+    // synthetic tensors
+    let mut rng = XorShift::new(7);
+    let x = rng.i16_vec(layer.ic * layer.ih * layer.iw, -2000, 2000);
+    let w = rng.i16_vec(layer.oc * layer.ic * 9, -256, 256);
+    let b = rng.i32_vec(layer.oc, -1000, 1000);
+
+    // run on the cycle simulator
+    let mut cpu = Cpu::new(1 << 22);
+    let r = run_conv_layer(&mut cpu, &layer, &x, &w, &b, ExecOptions::default())
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    // verify against the host reference (same Q-format contract)
+    let expect = refconv::conv2d(&x, &w, &b, &layer, RoundMode::HalfUp, 16);
+    assert_eq!(r.out, expect, "simulator output mismatch");
+    println!("bit-exact vs host reference: OK ({} elements)", expect.len());
+
+    println!(
+        "cycles {}  time {:.3} ms @400MHz  utilization {:.3}  {:.1} GOP/s  off-chip {:.1} KB",
+        r.cycles,
+        r.time_ms(),
+        r.utilization(),
+        r.gops(),
+        r.io_total() as f64 / 1e3
+    );
+
+    // golden check against the AOT JAX/Pallas artifact (optional)
+    match Manifest::load("artifacts") {
+        Ok(manifest) => {
+            let runner = PjrtRunner::new()?;
+            if let Some(art) = manifest.conv("conv_vgg_s") {
+                let g = golden_conv_check(&runner, &manifest, art, 7)?;
+                println!(
+                    "golden vs JAX/Pallas ({}): {}",
+                    art.name,
+                    if g.ok() { "bit-exact OK" } else { "MISMATCH" }
+                );
+                assert!(g.ok());
+            }
+        }
+        Err(_) => println!("(artifacts/ not built — run `make artifacts` for the PJRT golden check)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! VGG-16 benchmark: the paper's second workload, per-layer breakdown in
+//! tile-analytic mode (cycle-simulated row kernels composed analytically;
+//! pass --full for the complete cycle simulation, ~minutes).
+//!
+//!     cargo run --release --example vgg16_bench [-- --full]
+
+use convaix::cli::report;
+use convaix::coordinator::executor::{ExecMode, ExecOptions};
+use convaix::energy::power;
+use convaix::model::vgg16_conv;
+use convaix::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let opts = ExecOptions {
+        mode: if full { ExecMode::FullCycle } else { ExecMode::TileAnalytic },
+        gate_bits: 8,
+    };
+    let t0 = std::time::Instant::now();
+    let net = report::bench_network("VGG-16", &vgg16_conv(), opts)?;
+
+    let mut t = Table::new(
+        "VGG-16 conv layers on ConvAix",
+        &["Layer", "MACs [M]", "Cycles", "Util", "Time [ms]", "GOP/s", "I/O [MB]"],
+    );
+    for l in &net.layers {
+        t.row(&[
+            l.name.clone(),
+            format!("{:.1}", l.macs as f64 / 1e6),
+            l.cycles.to_string(),
+            format!("{:.3}", l.utilization()),
+            format!("{:.2}", l.time_ms()),
+            format!("{:.1}", l.gops()),
+            format!("{:.2}", l.io_total() as f64 / 1e6),
+        ]);
+    }
+    t.print();
+
+    let secs = net.time_ms() / 1e3;
+    let p = power::network_power(&net.stats(), secs);
+    println!(
+        "total: {:.1} ms (paper 263.0), util {:.3} (paper 0.76), {:.1} MB I/O (paper 208.14), \
+         {:.1} mW (paper 223.9), {:.0} GOP/s/W (paper 497)",
+        net.time_ms(),
+        net.utilization(),
+        net.io_mbytes(),
+        p.total_mw(),
+        power::energy_eff_gops_per_w(net.macs(), secs, p.total_mw()),
+    );
+    println!("(mode: {}, wall {:?})", if full { "full-cycle" } else { "tile-analytic" }, t0.elapsed());
+    Ok(())
+}

@@ -1,0 +1,115 @@
+"""AOT lowering: JAX/Pallas model -> HLO *text* artifacts for the rust runtime.
+
+Interchange format is HLO text, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids, which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`). The text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/gen_hlo.py).
+
+Emits one `<name>.hlo.txt` per artifact plus `manifest.json` describing the
+shapes/parameters, which the rust golden tests parse to drive bit-exact
+comparisons (simulator OFMap == JAX/Pallas OFMap).
+
+Python runs ONLY here (build time); the rust binary is self-contained
+afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.conv16 import conv2d_pallas, maxpool2d_pallas
+from .model import ConvCfg
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# --- artifact set ---------------------------------------------------------
+# Conv artifacts: one per microarchitecturally-distinct configuration the
+# simulator supports (unit filters, strided, padded, large first-layer).
+# OC is a multiple of 16 here; the rust side compares against the same
+# padded shapes (model-level OC padding is exercised in python tests).
+
+CONV_ARTIFACTS = [
+    ConvCfg("conv_small",      ic=8,  ih=16,  iw=16,  oc=16, fh=3,  fw=3,  pad=1),
+    ConvCfg("conv_stride2",    ic=4,  ih=16,  iw=16,  oc=32, fh=5,  fw=5,  stride=2, pad=2),
+    ConvCfg("conv_1x1",        ic=16, ih=12,  iw=12,  oc=16, fh=1,  fw=1, relu=False),
+    ConvCfg("conv_vgg_s",      ic=16, ih=32,  iw=32,  oc=16, fh=3,  fw=3,  pad=1),
+    ConvCfg("conv_alexnet_l1", ic=3,  ih=227, iw=227, oc=96, fh=11, fw=11, stride=4),
+]
+
+POOL_ARTIFACTS = [
+    # (name, ic, ih, iw, size, stride)
+    ("pool_3s2", 16, 13, 13, 3, 2),
+    ("pool_2s2", 8, 16, 16, 2, 2),
+]
+
+
+def lower_conv(cfg: ConvCfg):
+    def fn(x, w, b):
+        return (conv2d_pallas(x, w, b, stride=cfg.stride, pad=cfg.pad,
+                              frac_shift=cfg.frac_shift, relu=cfg.relu),)
+
+    xs = jax.ShapeDtypeStruct((cfg.ic, cfg.ih, cfg.iw), jnp.int16)
+    ws = jax.ShapeDtypeStruct((cfg.oc, cfg.ic, cfg.fh, cfg.fw), jnp.int16)
+    bs = jax.ShapeDtypeStruct((cfg.oc,), jnp.int32)
+    return jax.jit(fn).lower(xs, ws, bs)
+
+
+def lower_pool(ic, ih, iw, size, stride):
+    def fn(x):
+        return (maxpool2d_pallas(x, size=size, stride=stride),)
+
+    xs = jax.ShapeDtypeStruct((ic, ih, iw), jnp.int16)
+    return jax.jit(fn).lower(xs)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"convs": [], "pools": []}
+    for cfg in CONV_ARTIFACTS:
+        text = to_hlo_text(lower_conv(cfg))
+        path = os.path.join(args.out, f"{cfg.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["convs"].append({
+            "name": cfg.name, "ic": cfg.ic, "ih": cfg.ih, "iw": cfg.iw,
+            "oc": cfg.oc, "fh": cfg.fh, "fw": cfg.fw, "stride": cfg.stride,
+            "pad": cfg.pad, "frac_shift": cfg.frac_shift,
+            "relu": int(cfg.relu), "oh": cfg.oh, "ow": cfg.ow,
+        })
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for (name, ic, ih, iw, size, stride) in POOL_ARTIFACTS:
+        text = to_hlo_text(lower_pool(ic, ih, iw, size, stride))
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        oh = (ih - size) // stride + 1
+        ow = (iw - size) // stride + 1
+        manifest["pools"].append({
+            "name": name, "ic": ic, "ih": ih, "iw": iw, "size": size,
+            "stride": stride, "oh": oh, "ow": ow,
+        })
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Layer 1 — the ConvAix compute hot-spot as a Pallas kernel.
+
+Fixed-point int16 2-D convolution with int32 accumulation, mirroring the
+vALU mapping of the paper (DESIGN.md §4):
+
+  * grid = (OC/16, OH): one program instance produces one OFMap row of one
+    16-output-channel tile — the 16 vector *lanes* are output channels, the
+    row dimension is what the 4 slices × 3 slots sweep on the ASIP.
+  * inner reduction over k = (ic, fy, fx): one filter vector (16 OCh for a
+    fixed k) is multiplied with a strided selection of input pixels from
+    one IFMap row — exactly the line-buffer feed + broadcast operand
+    prepare of the vALUs.
+  * accumulation in int32 (the 512-bit VRl register file), requantization
+    with fractional shift + round-half-up + saturation (the vALU's
+    configurable rounding stage), optional fused ReLU (slot-1 SFU).
+
+Hardware adaptation (DESIGN.md §3): the output block (16 × OW) stays
+resident in VMEM across the whole reduction (≈ VRl + DM scratchpad), the
+input is consumed row-wise (≈ line buffer), the filter tile is the second
+resident operand (≈ pre-loaded filters of Fig. 2).
+
+MUST be lowered with interpret=True: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quant import requantize, mac_init
+
+LANES = 16  # vector lanes per slice == OCh tile width
+
+
+def _conv_row_kernel(x_ref, w_ref, b_ref, o_ref, *, ic, fh, fw, stride, ow,
+                     frac_shift, relu):
+    """One (16-OCh, OW) output row.
+
+    x_ref: (IC, IHp, IWp) int16   padded input, fully resident
+    w_ref: (16, IC*FH*FW) int16   filter tile for this OCh block
+    b_ref: (16,) int32            bias tile
+    o_ref: (16, 1, OW) int16      output row
+    """
+    oh_idx = pl.program_id(1)
+    span = stride * (ow - 1) + 1  # input pixels touched per row per fx
+
+    acc0 = jnp.broadcast_to(
+        mac_init(b_ref[...], frac_shift)[:, None], (LANES, ow)
+    ).astype(jnp.int32)
+
+    def body(k, acc):
+        # unravel k -> (ic, fy, fx); reduction order matches codegen/ref.
+        c = k // (fh * fw)
+        r = k % (fh * fw)
+        fy = r // fw
+        fx = r % fw
+        # line-buffer read: one IFMap row, strided pixel select
+        row = x_ref[c, oh_idx * stride + fy, :]          # (IWp,) int16
+        window = jax.lax.dynamic_slice(row, (fx,), (span,))
+        pix = window[::stride]                           # (OW,) int16
+        wv = w_ref[:, k]                                 # (16,) int16
+        # 16 lanes x OW positions of int16*int16 -> wrapping int32 MACs
+        return acc + wv[:, None].astype(jnp.int32) * pix[None, :].astype(jnp.int32)
+
+    acc = jax.lax.fori_loop(0, ic * fh * fw, body, acc0)
+    o_ref[...] = requantize(acc, frac_shift, relu)[:, None, :]
+
+
+def conv2d_pallas(x, w, b, *, stride=1, pad=0, frac_shift=8, relu=False,
+                  interpret=True):
+    """Pallas fixed-point conv. Shapes/semantics identical to ref.conv2d_ref.
+
+    OC must be a multiple of 16 (the model layer pads; see model.py).
+    """
+    x = jnp.asarray(x, jnp.int16)
+    w = jnp.asarray(w, jnp.int16)
+    b = jnp.asarray(b, jnp.int32)
+    ic, ih, iw = x.shape
+    oc, ic2, fh, fw = w.shape
+    assert ic == ic2
+    assert oc % LANES == 0, f"OC={oc} must be a multiple of {LANES}"
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    ihp, iwp = ih + 2 * pad, iw + 2 * pad
+    oh = (ihp - fh) // stride + 1
+    ow = (iwp - fw) // stride + 1
+
+    wmat = w.reshape(oc, ic * fh * fw)
+
+    kernel = functools.partial(
+        _conv_row_kernel, ic=ic, fh=fh, fw=fw, stride=stride, ow=ow,
+        frac_shift=frac_shift, relu=relu,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(oc // LANES, oh),
+        in_specs=[
+            # full padded input resident (the ASIP streams rows; in Pallas
+            # the whole map is the block, rows are read in the fori_loop)
+            pl.BlockSpec((ic, ihp, iwp), lambda o, y: (0, 0, 0)),
+            pl.BlockSpec((LANES, ic * fh * fw), lambda o, y: (o, 0)),
+            pl.BlockSpec((LANES,), lambda o, y: (o,)),
+        ],
+        out_specs=pl.BlockSpec((LANES, 1, ow), lambda o, y: (o, y, 0)),
+        out_shape=jax.ShapeDtypeStruct((oc, oh, ow), jnp.int16),
+        interpret=interpret,
+    )(xp, wmat, b)
+    return out
+
+
+def maxpool2d_pallas(x, *, size=2, stride=2, interpret=True):
+    """int16 max-pool as a Pallas kernel (the slot-1 SFU path).
+
+    Grid over output rows; each instance max-reduces a (IC, size, IW) strip.
+    """
+    x = jnp.asarray(x, jnp.int16)
+    ic, ih, iw = x.shape
+    oh = (ih - size) // stride + 1
+    ow = (iw - size) // stride + 1
+
+    def kernel(x_ref, o_ref):
+        # pooling windows overlap when stride < size, which BlockSpec block
+        # indexing cannot express — keep the input resident and slice rows
+        # in-kernel (the SFU reads from the DM scratchpad the same way).
+        y = pl.program_id(0)
+        span = stride * (ow - 1) + 1
+        acc = jnp.full((ic, ow), -32768, jnp.int16)
+        for fy in range(size):
+            strip = jax.lax.dynamic_slice(
+                x_ref[...], (0, y * stride + fy, 0), (ic, 1, iw))[:, 0, :]
+            for fx in range(size):
+                vals = jax.lax.dynamic_slice(
+                    strip, (0, fx), (ic, span))[:, ::stride]
+                acc = jnp.maximum(acc, vals)
+        o_ref[...] = acc[:, None, :]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(oh,),
+        in_specs=[pl.BlockSpec((ic, ih, iw), lambda y: (0, 0, 0))],
+        out_specs=pl.BlockSpec((ic, 1, ow), lambda y: (0, y, 0)),
+        out_shape=jax.ShapeDtypeStruct((ic, oh, ow), jnp.int16),
+        interpret=interpret,
+    )(x)

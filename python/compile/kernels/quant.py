@@ -1,0 +1,61 @@
+"""Shared fixed-point (Q-format) arithmetic semantics for ConvAix.
+
+These functions define the *bit-exact contract* between the three layers:
+
+  * the Pallas kernel (`conv16.py`),
+  * the pure-jnp oracle (`ref.py`),
+  * the rust cycle simulator (`rust/src/fixed/`).
+
+Semantics (mirrors the paper's vALU datapath, Section IV):
+
+  * activations / weights : int16 (Q-format, fractional position implied)
+  * MAC accumulation      : int32, two's-complement **wrapping** (VRl is a
+    32-bit-per-lane register file; hardware wraps, so do we — jnp int32
+    arithmetic wraps, rust uses `wrapping_*`)
+  * requantization        : arithmetic-shift-right by the runtime-configured
+    fractional shift with round-half-up (the ASIP's default rounding mode;
+    the rust simulator also implements truncate and round-to-nearest-even,
+    but the AOT artifacts are generated with round-half-up), then saturate
+    to int16
+  * optional ReLU fused after requantization (the slot-1 SFU)
+  * precision gating of g < 16 bits zeroes the 16-g LSBs of *operands*
+    (energy-saving technique from Moons et al.; numerics change, energy
+    model scales MAC energy by the gated width)
+"""
+
+import jax.numpy as jnp
+
+INT16_MIN = -32768
+INT16_MAX = 32767
+
+
+def requantize(acc_i32, frac_shift: int, relu: bool):
+    """int32 accumulator -> int16 output. Round-half-up, saturate, opt. ReLU.
+
+    `frac_shift` is static (a layer constant baked into the program, set at
+    runtime on the ASIP via its config registers).
+    """
+    acc = acc_i32
+    if frac_shift > 0:
+        # round half-up: add 2^(s-1) (wrapping, as the 32-bit adder would),
+        # then arithmetic shift right.
+        acc = acc + jnp.int32(1 << (frac_shift - 1))
+        acc = acc >> frac_shift
+    acc = jnp.clip(acc, INT16_MIN, INT16_MAX)
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    return acc.astype(jnp.int16)
+
+
+def gate_precision(x_i16, bits: int):
+    """Zero the (16-bits) LSBs of an int16 operand (precision gating)."""
+    if bits >= 16:
+        return x_i16
+    mask = jnp.int16(-(1 << (16 - bits)))  # e.g. bits=8 -> 0xFF00
+    return x_i16 & mask
+
+
+def mac_init(bias_i32, frac_shift: int):
+    """Accumulator initial value: bias pre-shifted so that after the final
+    fractional shift the bias lands at unit weight (acc = conv + bias<<s)."""
+    return bias_i32 << frac_shift if frac_shift > 0 else bias_i32

@@ -1,0 +1,107 @@
+"""Pure-jnp oracle for the ConvAix fixed-point conv / pool kernels.
+
+This is the correctness reference the Pallas kernel (and transitively the
+rust cycle simulator, via the AOT artifacts) is checked against. It is
+written for clarity, not speed: im2col + int32 matmul.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from .quant import requantize, mac_init, gate_precision
+
+
+def conv2d_ref(x, w, b, *, stride=1, pad=0, frac_shift=8, relu=False,
+               gate_bits=16):
+    """Fixed-point 2-D convolution, NCHW-without-N.
+
+    x: int16 (IC, IH, IW)   activations
+    w: int16 (OC, IC, FH, FW) weights
+    b: int32 (OC,)          bias (added at accumulator scale << frac_shift)
+    returns int16 (OC, OH, OW)
+    """
+    x = jnp.asarray(x, jnp.int16)
+    w = jnp.asarray(w, jnp.int16)
+    b = jnp.asarray(b, jnp.int32)
+    if gate_bits < 16:
+        x = gate_precision(x, gate_bits)
+        w = gate_precision(w, gate_bits)
+    ic, ih, iw = x.shape
+    oc, ic2, fh, fw = w.shape
+    assert ic == ic2, f"IC mismatch {ic} vs {ic2}"
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    ihp, iwp = ih + 2 * pad, iw + 2 * pad
+    oh = (ihp - fh) // stride + 1
+    ow = (iwp - fw) // stride + 1
+
+    # im2col: (IC*FH*FW, OH*OW) — reduction order (ic, fy, fx) matches the
+    # kernel; irrelevant for wrapping-int32 sums (assoc.+comm.), kept for
+    # clarity.
+    cols = []
+    for fy in range(fh):
+        for fx in range(fw):
+            patch = xp[:, fy:fy + stride * (oh - 1) + 1:stride,
+                       fx:fx + stride * (ow - 1) + 1:stride]
+            cols.append(patch.reshape(ic, oh * ow))
+    col = jnp.stack(cols, axis=1).reshape(ic * fh * fw, oh * ow)
+    wmat = w.reshape(oc, ic * fh * fw)
+    acc = jnp.matmul(wmat.astype(jnp.int32), col.astype(jnp.int32))
+    acc = acc + mac_init(b, frac_shift)[:, None]
+    out = requantize(acc, frac_shift, relu)
+    return out.reshape(oc, oh, ow)
+
+
+def maxpool2d_ref(x, *, size=2, stride=2):
+    """int16 max pooling (IC, IH, IW) -> (IC, OH, OW). No padding."""
+    x = jnp.asarray(x, jnp.int16)
+    ic, ih, iw = x.shape
+    oh = (ih - size) // stride + 1
+    ow = (iw - size) // stride + 1
+    views = []
+    for fy in range(size):
+        for fx in range(size):
+            views.append(x[:, fy:fy + stride * (oh - 1) + 1:stride,
+                           fx:fx + stride * (ow - 1) + 1:stride])
+    return jnp.max(jnp.stack(views), axis=0)
+
+
+def relu_ref(x):
+    return jnp.maximum(jnp.asarray(x, jnp.int16), 0)
+
+
+def conv2d_numpy(x, w, b, *, stride=1, pad=0, frac_shift=8, relu=False):
+    """Second, independent oracle in plain numpy with explicit loops.
+
+    Used by the test suite to cross-check `conv2d_ref` itself (triple
+    modular redundancy: numpy loops vs jnp im2col vs pallas).
+    """
+    x = np.asarray(x, np.int64)
+    w = np.asarray(w, np.int64)
+    b = np.asarray(b, np.int64)
+    ic, ih, iw = x.shape
+    oc, _, fh, fw = w.shape
+    xp = np.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    oh = (ih + 2 * pad - fh) // stride + 1
+    ow = (iw + 2 * pad - fw) // stride + 1
+
+    def wrap32(v):
+        return ((v + 2**31) % 2**32) - 2**31
+
+    out = np.zeros((oc, oh, ow), np.int16)
+    for o in range(oc):
+        for y in range(oh):
+            for xo in range(ow):
+                acc = wrap32(int(b[o]) << frac_shift)
+                for c in range(ic):
+                    for fy in range(fh):
+                        for fx in range(fw):
+                            acc = wrap32(acc + int(xp[c, y * stride + fy,
+                                                      xo * stride + fx])
+                                         * int(w[o, c, fy, fx]))
+                if frac_shift > 0:
+                    acc = wrap32(acc + (1 << (frac_shift - 1))) >> frac_shift
+                acc = max(-32768, min(32767, acc))
+                if relu:
+                    acc = max(acc, 0)
+                out[o, y, xo] = acc
+    return out

@@ -1,0 +1,113 @@
+"""Layer 2 — the JAX model: quantized CNN layers composing the Pallas kernel.
+
+These functions are the build-time definition of what ConvAix executes; they
+are AOT-lowered by `aot.py` into HLO-text artifacts that the rust runtime
+loads as the *golden model* for the cycle simulator (bit-exact comparison).
+
+Only the network-shape tables needed for artifact generation live here; the
+full AlexNet / VGG-16 workload tables used by the benchmarks are in
+`rust/src/model/` (they must exist without python at runtime).
+"""
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from .kernels.conv16 import conv2d_pallas, maxpool2d_pallas, LANES
+from .kernels.ref import conv2d_ref
+
+
+@dataclass(frozen=True)
+class ConvCfg:
+    """One convolutional layer (batch-1, NCHW without N, as in the paper)."""
+    name: str
+    ic: int
+    ih: int
+    iw: int
+    oc: int
+    fh: int
+    fw: int
+    stride: int = 1
+    pad: int = 0
+    groups: int = 1
+    frac_shift: int = 8
+    relu: bool = True
+
+    @property
+    def oh(self):
+        return (self.ih + 2 * self.pad - self.fh) // self.stride + 1
+
+    @property
+    def ow(self):
+        return (self.iw + 2 * self.pad - self.fw) // self.stride + 1
+
+    @property
+    def macs(self):
+        """MAC count (grouped convolution aware)."""
+        return (self.oc * (self.ic // self.groups) * self.fh * self.fw
+                * self.oh * self.ow)
+
+
+def _pad_oc(oc):
+    return (oc + LANES - 1) // LANES * LANES
+
+
+def conv_layer(x, w, b, cfg: ConvCfg, *, use_pallas=True):
+    """Quantized conv layer. Handles OC padding to the 16-lane width and
+    grouped convolution (AlexNet conv2/4/5) by per-group kernel calls."""
+    g = cfg.groups
+    icg = cfg.ic // g
+    ocg = cfg.oc // g
+    outs = []
+    fn = conv2d_pallas if use_pallas else conv2d_ref
+    for gi in range(g):
+        xg = x[gi * icg:(gi + 1) * icg]
+        wg = w[gi * ocg:(gi + 1) * ocg]
+        bg = b[gi * ocg:(gi + 1) * ocg]
+        ocp = _pad_oc(ocg)
+        if ocp != ocg and use_pallas:
+            wg = jnp.pad(wg, ((0, ocp - ocg), (0, 0), (0, 0), (0, 0)))
+            bg = jnp.pad(bg, (0, ocp - ocg))
+        out = fn(xg, wg, bg, stride=cfg.stride, pad=cfg.pad,
+                 frac_shift=cfg.frac_shift, relu=cfg.relu)
+        outs.append(out[:ocg])
+    return jnp.concatenate(outs, axis=0) if g > 1 else outs[0]
+
+
+def maxpool_layer(x, *, size, stride, use_pallas=True):
+    if use_pallas:
+        return maxpool2d_pallas(x, size=size, stride=stride)
+    from .kernels.ref import maxpool2d_ref
+    return maxpool2d_ref(x, size=size, stride=stride)
+
+
+# --- network tables used for artifact generation -------------------------
+# (full tables incl. MAC/io accounting are mirrored in rust/src/model/)
+
+ALEXNET_CONV = [
+    ConvCfg("conv1", ic=3,   ih=227, iw=227, oc=96,  fh=11, fw=11, stride=4),
+    ConvCfg("conv2", ic=96,  ih=27,  iw=27,  oc=256, fh=5,  fw=5,  pad=2, groups=2),
+    ConvCfg("conv3", ic=256, ih=13,  iw=13,  oc=384, fh=3,  fw=3,  pad=1),
+    ConvCfg("conv4", ic=384, ih=13,  iw=13,  oc=384, fh=3,  fw=3,  pad=1, groups=2),
+    ConvCfg("conv5", ic=384, ih=13,  iw=13,  oc=256, fh=3,  fw=3,  pad=1, groups=2),
+]
+
+VGG16_CONV = [
+    ConvCfg("conv1_1", ic=3,   ih=224, iw=224, oc=64,  fh=3, fw=3, pad=1),
+    ConvCfg("conv1_2", ic=64,  ih=224, iw=224, oc=64,  fh=3, fw=3, pad=1),
+    ConvCfg("conv2_1", ic=64,  ih=112, iw=112, oc=128, fh=3, fw=3, pad=1),
+    ConvCfg("conv2_2", ic=128, ih=112, iw=112, oc=128, fh=3, fw=3, pad=1),
+    ConvCfg("conv3_1", ic=128, ih=56,  iw=56,  oc=256, fh=3, fw=3, pad=1),
+    ConvCfg("conv3_2", ic=256, ih=56,  iw=56,  oc=256, fh=3, fw=3, pad=1),
+    ConvCfg("conv3_3", ic=256, ih=56,  iw=56,  oc=256, fh=3, fw=3, pad=1),
+    ConvCfg("conv4_1", ic=256, ih=28,  iw=28,  oc=512, fh=3, fw=3, pad=1),
+    ConvCfg("conv4_2", ic=512, ih=28,  iw=28,  oc=512, fh=3, fw=3, pad=1),
+    ConvCfg("conv4_3", ic=512, ih=28,  iw=28,  oc=512, fh=3, fw=3, pad=1),
+    ConvCfg("conv5_1", ic=512, ih=14,  iw=14,  oc=512, fh=3, fw=3, pad=1),
+    ConvCfg("conv5_2", ic=512, ih=14,  iw=14,  oc=512, fh=3, fw=3, pad=1),
+    ConvCfg("conv5_3", ic=512, ih=14,  iw=14,  oc=512, fh=3, fw=3, pad=1),
+]
+
+# sanity targets from the literature (checked by python/tests/test_model.py)
+ALEXNET_CONV_MACS = 665_784_864     # grouped AlexNet conv stack
+VGG16_CONV_MACS = 15_346_630_656    # VGG-16 conv stack

@@ -1,0 +1,166 @@
+"""Pallas kernel vs pure-jnp oracle vs numpy loop oracle — bit-exact.
+
+This is the core L1 correctness signal: the AOT artifacts loaded by the
+rust runtime embed the Pallas kernel, and the rust cycle simulator is
+checked against those artifacts, so exactness here anchors the whole
+golden-model chain.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import (conv2d_ref, conv2d_numpy, maxpool2d_ref,
+                                 relu_ref)
+from compile.kernels.conv16 import conv2d_pallas, maxpool2d_pallas
+
+RNG = np.random.RandomState(1234)
+
+
+def rand_case(ic, oc, ih, iw, fh, fw, lo=-4000, hi=4000, wlo=-500, whi=500):
+    x = RNG.randint(lo, hi, (ic, ih, iw)).astype(np.int16)
+    w = RNG.randint(wlo, whi, (oc, ic, fh, fw)).astype(np.int16)
+    b = RNG.randint(-(1 << 12), 1 << 12, (oc,)).astype(np.int32)
+    return x, w, b
+
+
+CASES = [
+    # (ic, oc, ih, iw, fh, fw, stride, pad, shift, relu)
+    (3, 16, 12, 12, 3, 3, 1, 1, 8, True),
+    (3, 16, 12, 12, 3, 3, 1, 1, 8, False),
+    (4, 32, 9, 9, 3, 3, 2, 1, 8, True),
+    (2, 16, 11, 11, 5, 5, 2, 0, 6, True),
+    (1, 16, 8, 8, 1, 1, 1, 0, 0, False),
+    (8, 16, 7, 7, 3, 3, 1, 1, 10, True),
+    (5, 48, 10, 10, 3, 3, 1, 0, 8, True),
+    (3, 16, 23, 23, 11, 11, 4, 0, 8, True),  # AlexNet-L1-like
+    (6, 16, 9, 13, 3, 5, 1, 2, 8, False),    # non-square filters/maps
+    (2, 16, 6, 6, 2, 2, 2, 0, 4, True),
+]
+
+
+@pytest.mark.parametrize("ic,oc,ih,iw,fh,fw,s,p,shift,relu", CASES)
+def test_pallas_vs_refs(ic, oc, ih, iw, fh, fw, s, p, shift, relu):
+    x, w, b = rand_case(ic, oc, ih, iw, fh, fw)
+    r_jnp = np.asarray(conv2d_ref(x, w, b, stride=s, pad=p,
+                                  frac_shift=shift, relu=relu))
+    r_np = conv2d_numpy(x, w, b, stride=s, pad=p, frac_shift=shift, relu=relu)
+    r_pl = np.asarray(conv2d_pallas(x, w, b, stride=s, pad=p,
+                                    frac_shift=shift, relu=relu))
+    np.testing.assert_array_equal(r_jnp, r_np)
+    np.testing.assert_array_equal(r_jnp, r_pl)
+
+
+def test_saturation_positive():
+    """Accumulator larger than int16 range must clip to 32767."""
+    x = np.full((1, 3, 3), 32767, np.int16)
+    w = np.full((16, 1, 3, 3), 32767, np.int16)
+    b = np.zeros(16, np.int32)
+    out = np.asarray(conv2d_pallas(x, w, b, frac_shift=2, relu=False))
+    ref = conv2d_numpy(x, w, b, frac_shift=2, relu=False)
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_saturation_negative():
+    x = np.full((1, 3, 3), -32768, np.int16)
+    w = np.full((16, 1, 3, 3), 32767, np.int16)
+    b = np.zeros(16, np.int32)
+    out = np.asarray(conv2d_pallas(x, w, b, frac_shift=2, relu=False))
+    ref = conv2d_numpy(x, w, b, frac_shift=2, relu=False)
+    np.testing.assert_array_equal(out, ref)
+    assert (out == -32768).all()
+
+
+def test_wrapping_accumulator():
+    """Many large products wrap the int32 accumulator — both sides must
+    wrap identically (VRl is a 32-bit register; hardware wraps)."""
+    ic, n = 64, 5
+    x = np.full((ic, n, n), 30000, np.int16)
+    w = np.full((16, ic, n, n), 30000, np.int16)
+    b = np.zeros(16, np.int32)
+    out = np.asarray(conv2d_pallas(x, w, b, frac_shift=0, relu=False))
+    ref = conv2d_numpy(x, w, b, frac_shift=0, relu=False)
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_rounding_half_up():
+    """acc = 2 with shift 1 -> 1; acc = 1 with shift 1 -> 1 (half rounds up);
+    acc = -1 with shift 1 -> 0 (arithmetic shift of -1+1=0)."""
+    x = np.ones((1, 1, 1), np.int16)
+    w = np.array([[[[1]]], [[[2]]], [[[-1]]], [[[3]]]] * 4, np.int16)  # 16 oc
+    b = np.zeros(16, np.int32)
+    out = np.asarray(conv2d_pallas(x, w, b, stride=1, pad=0, frac_shift=1,
+                                   relu=False))
+    np.testing.assert_array_equal(out[:4, 0, 0], [1, 1, 0, 2])
+
+
+def test_bias_scaling():
+    """Bias is applied at accumulator scale: out = conv + bias after shift."""
+    x = np.zeros((1, 4, 4), np.int16)
+    w = np.zeros((16, 1, 3, 3), np.int16)
+    b = np.arange(16, dtype=np.int32) - 8
+    out = np.asarray(conv2d_pallas(x, w, b, pad=1, frac_shift=8, relu=False))
+    for o in range(16):
+        assert (out[o] == b[o]).all()
+
+
+def test_relu_fused():
+    x, w, b = rand_case(3, 16, 8, 8, 3, 3)
+    no = np.asarray(conv2d_ref(x, w, b, pad=1, relu=False))
+    yes = np.asarray(conv2d_ref(x, w, b, pad=1, relu=True))
+    np.testing.assert_array_equal(yes, np.maximum(no, 0))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    ic=st.integers(1, 6),
+    octile=st.integers(1, 2),
+    ih=st.integers(5, 14),
+    iw=st.integers(5, 14),
+    fh=st.integers(1, 5),
+    fw=st.integers(1, 5),
+    stride=st.integers(1, 3),
+    pad=st.integers(0, 2),
+    shift=st.integers(0, 12),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(ic, octile, ih, iw, fh, fw, stride, pad, shift,
+                          relu, seed):
+    """Property: pallas == numpy-loop oracle on arbitrary valid shapes."""
+    if ih + 2 * pad < fh or iw + 2 * pad < fw:
+        return  # invalid geometry
+    oc = 16 * octile
+    r = np.random.RandomState(seed)
+    x = r.randint(-32768, 32768, (ic, ih, iw)).astype(np.int16)
+    w = r.randint(-2048, 2048, (oc, ic, fh, fw)).astype(np.int16)
+    b = r.randint(-(1 << 16), 1 << 16, (oc,)).astype(np.int32)
+    got = np.asarray(conv2d_pallas(x, w, b, stride=stride, pad=pad,
+                                   frac_shift=shift, relu=relu))
+    ref = conv2d_numpy(x, w, b, stride=stride, pad=pad, frac_shift=shift,
+                       relu=relu)
+    np.testing.assert_array_equal(got, ref)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ic=st.integers(1, 8),
+    ih=st.integers(4, 20),
+    iw=st.integers(4, 20),
+    size=st.integers(2, 3),
+    stride=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_maxpool(ic, ih, iw, size, stride, seed):
+    if ih < size or iw < size:
+        return
+    r = np.random.RandomState(seed)
+    x = r.randint(-32768, 32768, (ic, ih, iw)).astype(np.int16)
+    got = np.asarray(maxpool2d_pallas(x, size=size, stride=stride))
+    ref = np.asarray(maxpool2d_ref(x, size=size, stride=stride))
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_relu_ref_identity():
+    x = np.array([-5, 0, 7, -32768, 32767], np.int16)
+    np.testing.assert_array_equal(np.asarray(relu_ref(x)), [0, 0, 7, 0, 32767])

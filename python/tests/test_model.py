@@ -1,0 +1,100 @@
+"""L2 model tests: layer composition, grouped conv, OC padding, MAC tables."""
+
+import numpy as np
+import pytest
+
+from compile.model import (ALEXNET_CONV, VGG16_CONV, ALEXNET_CONV_MACS,
+                           VGG16_CONV_MACS, ConvCfg, conv_layer,
+                           maxpool_layer, _pad_oc)
+from compile.kernels.ref import conv2d_ref
+
+RNG = np.random.RandomState(7)
+
+
+def test_alexnet_macs_match_literature():
+    assert sum(c.macs for c in ALEXNET_CONV) == ALEXNET_CONV_MACS
+
+
+def test_vgg16_macs_match_literature():
+    assert sum(c.macs for c in VGG16_CONV) == VGG16_CONV_MACS
+
+
+def test_alexnet_shapes_chain():
+    """conv1 -> pool -> conv2 -> pool -> conv3/4/5 shapes are consistent."""
+    c1, c2, c3, c4, c5 = ALEXNET_CONV
+    assert (c1.oh, c1.ow) == (55, 55)
+    # 3x3/s2 pool: 55 -> 27
+    assert (55 - 3) // 2 + 1 == c2.ih
+    assert (c2.oh, c2.ow) == (27, 27)
+    assert (27 - 3) // 2 + 1 == c3.ih
+    assert c3.ic == c2.oc and c4.ic == c3.oc and c5.ic == c4.oc
+
+
+def test_vgg_shapes_chain():
+    for prev, nxt in zip(VGG16_CONV, VGG16_CONV[1:]):
+        assert nxt.ic == prev.oc
+        assert nxt.ih in (prev.oh, prev.oh // 2)  # same block or after pool
+
+
+@pytest.mark.parametrize("oc", [8, 16, 17, 40, 96])
+def test_pad_oc(oc):
+    p = _pad_oc(oc)
+    assert p % 16 == 0 and p >= oc and p - oc < 16
+
+
+def test_conv_layer_oc_padding_matches_ref():
+    """OC not a multiple of 16: pallas path pads, result equals ref."""
+    cfg = ConvCfg("t", ic=3, ih=8, iw=8, oc=24, fh=3, fw=3, pad=1)
+    x = RNG.randint(-1000, 1000, (3, 8, 8)).astype(np.int16)
+    w = RNG.randint(-200, 200, (24, 3, 3, 3)).astype(np.int16)
+    b = RNG.randint(-100, 100, (24,)).astype(np.int32)
+    got = np.asarray(conv_layer(x, w, b, cfg, use_pallas=True))
+    ref = np.asarray(conv2d_ref(x, w, b, stride=1, pad=1, frac_shift=8,
+                                relu=True))
+    np.testing.assert_array_equal(got, ref)
+    assert got.shape == (24, 8, 8)
+
+
+def test_grouped_conv_matches_blockwise_ref():
+    """groups=2 (AlexNet conv2/4/5 style): each half independent."""
+    cfg = ConvCfg("t", ic=8, ih=6, iw=6, oc=32, fh=3, fw=3, pad=1, groups=2)
+    x = RNG.randint(-1000, 1000, (8, 6, 6)).astype(np.int16)
+    w = RNG.randint(-200, 200, (32, 4, 3, 3)).astype(np.int16)
+    b = RNG.randint(-100, 100, (32,)).astype(np.int32)
+    got = np.asarray(conv_layer(x, w, b, cfg, use_pallas=True))
+    for g in range(2):
+        ref = np.asarray(conv2d_ref(x[g * 4:(g + 1) * 4],
+                                    w[g * 16:(g + 1) * 16],
+                                    b[g * 16:(g + 1) * 16],
+                                    stride=1, pad=1, frac_shift=8, relu=True))
+        np.testing.assert_array_equal(got[g * 16:(g + 1) * 16], ref)
+
+
+def test_grouped_macs_half_of_dense():
+    dense = ConvCfg("d", ic=8, ih=6, iw=6, oc=32, fh=3, fw=3, pad=1)
+    grouped = ConvCfg("g", ic=8, ih=6, iw=6, oc=32, fh=3, fw=3, pad=1, groups=2)
+    assert grouped.macs * 2 == dense.macs
+
+
+def test_maxpool_layer_pallas_vs_ref():
+    from compile.kernels.ref import maxpool2d_ref
+    x = RNG.randint(-32768, 32767, (6, 13, 13)).astype(np.int16)
+    got = np.asarray(maxpool_layer(x, size=3, stride=2, use_pallas=True))
+    ref = np.asarray(maxpool2d_ref(x, size=3, stride=2))
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_alexnet_first_layer_small_slice():
+    """Run AlexNet conv1 geometry on a cropped input (full run is covered
+    by the rust e2e example via the AOT artifact)."""
+    cfg = ALEXNET_CONV[0]
+    crop = ConvCfg("c1s", ic=3, ih=39, iw=39, oc=96, fh=11, fw=11, stride=4)
+    x = RNG.randint(-4000, 4000, (3, 39, 39)).astype(np.int16)
+    w = RNG.randint(-300, 300, (96, 3, 11, 11)).astype(np.int16)
+    b = RNG.randint(-100, 100, (96,)).astype(np.int32)
+    got = np.asarray(conv_layer(x, w, b, crop, use_pallas=True))
+    ref = np.asarray(conv2d_ref(x, w, b, stride=4, pad=0, frac_shift=8,
+                                relu=True))
+    np.testing.assert_array_equal(got, ref)
+    assert got.shape == (96, 8, 8)
+    assert cfg.fh == crop.fh and cfg.stride == crop.stride

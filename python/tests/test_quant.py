@@ -1,0 +1,81 @@
+"""Unit tests for the shared Q-format quantization semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.quant import (requantize, gate_precision, mac_init,
+                                   INT16_MIN, INT16_MAX)
+
+
+def rq(v, shift, relu=False):
+    return int(np.asarray(requantize(jnp.int32(v), shift, relu)))
+
+
+def test_requantize_shift0_saturates():
+    assert rq(40000, 0) == INT16_MAX
+    assert rq(-40000, 0) == INT16_MIN
+    assert rq(123, 0) == 123
+
+
+def test_requantize_round_half_up():
+    # 3/2 -> 2 (half up), 1/2 -> 1, -1/2 -> 0, -3/2 -> -1
+    assert rq(3, 1) == 2
+    assert rq(1, 1) == 1
+    assert rq(-1, 1) == 0
+    assert rq(-3, 1) == -1
+
+
+def test_requantize_relu():
+    assert rq(-100, 0, relu=True) == 0
+    assert rq(100, 0, relu=True) == 100
+
+
+def test_requantize_wrapping_round_addend():
+    """Adding the rounding constant near INT32_MAX wraps (hardware adder)."""
+    v = np.int32(2**31 - 1)
+    out = rq(v, 8)
+    # (INT32_MAX + 128) wraps negative -> arithmetic shift -> saturate low
+    assert out == INT16_MIN
+
+
+@settings(max_examples=200, deadline=None)
+@given(v=st.integers(-(2**31), 2**31 - 1), shift=st.integers(0, 15))
+def test_requantize_in_range(v, shift):
+    out = rq(np.int32(v), shift)
+    assert INT16_MIN <= out <= INT16_MAX
+
+
+@settings(max_examples=100, deadline=None)
+@given(v=st.integers(-(2**20), 2**20), shift=st.integers(1, 10))
+def test_requantize_matches_python_model(v, shift):
+    """Cross-check against an independent python big-int model."""
+    acc = ((v + (1 << (shift - 1)) + 2**31) % 2**32) - 2**31
+    expect = max(INT16_MIN, min(INT16_MAX, acc >> shift))
+    assert rq(np.int32(v), shift) == expect
+
+
+def test_gate_precision_masks_lsbs():
+    x = jnp.int16(0x1234)
+    assert int(gate_precision(x, 8)) == 0x1200
+    assert int(gate_precision(x, 16)) == 0x1234
+    assert int(gate_precision(x, 4)) == 0x1000
+
+
+def test_gate_precision_sign_preserved():
+    x = jnp.int16(-1)  # 0xFFFF
+    assert int(gate_precision(x, 8)) == -256  # 0xFF00
+
+
+@settings(max_examples=100, deadline=None)
+@given(v=st.integers(-32768, 32767), bits=st.sampled_from([1, 2, 4, 8, 12, 16]))
+def test_gate_precision_idempotent(v, bits):
+    x = jnp.int16(v)
+    g1 = gate_precision(x, bits)
+    g2 = gate_precision(g1, bits)
+    assert int(g1) == int(g2)
+
+
+def test_mac_init_scales_bias():
+    assert int(np.asarray(mac_init(jnp.int32(3), 8))) == 3 << 8
+    assert int(np.asarray(mac_init(jnp.int32(-3), 0))) == -3

@@ -1,0 +1,7 @@
+//! Bench target: regenerate Fig. 3b (logic-area breakdown).
+
+use convaix::cli::report;
+
+fn main() {
+    print!("{}", report::fig3b());
+}

@@ -1,0 +1,13 @@
+//! Bench target: regenerate Fig. 3c (power distribution, AlexNet conv3,
+//! 8-bit gated precision) from simulated switching activity.
+
+use convaix::cli::report;
+use convaix::util::bench::Bench;
+
+fn main() {
+    print!("{}", report::fig3c().expect("fig3c"));
+    let b = Bench::quick();
+    b.run("fig3c (conv3 analytic + power model)", || {
+        report::fig3c().unwrap().len()
+    });
+}

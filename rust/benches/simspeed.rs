@@ -1,0 +1,48 @@
+//! Bench target: simulator performance (the L3 hot path of the perf
+//! pass, EXPERIMENTS.md §Perf). Reports bundles/second on the MAC-dense
+//! steady state and on a full conv layer.
+
+use convaix::coordinator::executor::{run_conv_layer, ExecOptions};
+use convaix::core::Cpu;
+use convaix::isa::asm::assemble;
+use convaix::mem::pm::ProgramMem;
+use convaix::model::ConvLayer;
+use convaix::util::bench::Bench;
+use convaix::util::XorShift;
+
+fn main() {
+    // 1. dense vmac loop: the dominant bundle shape in conv kernels
+    let mut src = String::from(
+        "csrwi lb_stride, 1\nli r1, 0\nldvf [r1]!32\nldvf [r1]!32\nlbld 0, r1, 16\n",
+    );
+    src.push_str("loopi 60000, 1\n");
+    // no post-increment: the speed benchmark re-reads one address so the
+    // 60k-bundle stream never leaves DM
+    src.push_str("ldvf [r1] | vmac lb:0, ff | vmac lb:4, ff | vmac lb:8, ff\n");
+    src.push_str("nop | vmul lb:0, ff | vnop | vnop\nnop | vmul lb:0, ff | vnop | vnop\nhalt\n");
+    let pm = ProgramMem::load(&assemble(&src).unwrap()).unwrap();
+
+    let b = Bench::default();
+    let mut cpu = Cpu::new(1 << 16);
+    let r = b.run("steady-state vmac loop (60k bundles)", || {
+        cpu.run(&pm).unwrap().cycles
+    });
+    let bundles_per_sec = 60_000.0 / (r.median_ns as f64 / 1e9);
+    println!("  -> {:.1} M bundles/s (MAC-dense)", bundles_per_sec / 1e6);
+
+    // 2. a realistic conv layer, full cycle
+    let l = ConvLayer::new("bench", 32, 28, 28, 64, 3, 3, 1, 1, 1);
+    let mut rng = XorShift::new(5);
+    let x = rng.i16_vec(l.ic * l.ih * l.iw, -500, 500);
+    let w = rng.i16_vec(l.oc * l.ic * 9, -100, 100);
+    let bias = rng.i32_vec(l.oc, -100, 100);
+    let mut cpu = Cpu::new(1 << 24);
+    let mut cycles = 0;
+    let r = b.run("conv 32x28x28 -> 64 full-cycle", || {
+        let res = run_conv_layer(&mut cpu, &l, &x, &w, &bias, ExecOptions::default()).unwrap();
+        cycles = res.compute_cycles;
+        cycles
+    });
+    let cps = cycles as f64 / (r.median_ns as f64 / 1e9);
+    println!("  -> {:.1} M simulated cycles/s on a full conv layer", cps / 1e6);
+}

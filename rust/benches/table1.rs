@@ -1,0 +1,35 @@
+//! Bench target: regenerate Table I (processor specification) plus a
+//! peak-throughput sanity run — a dense MAC microkernel must hit the
+//! 192 MAC/cycle steady state.
+
+use convaix::cli::report;
+use convaix::core::Cpu;
+use convaix::isa::asm::assemble;
+use convaix::mem::pm::ProgramMem;
+use convaix::util::bench::Bench;
+
+fn main() {
+    print!("{}", report::table1());
+
+    // peak-throughput microkernel: 3 vmacs per bundle for 200 bundles
+    let mut src = String::from(
+        "csrwi lb_stride, 1\nli r1, 0\nldvf [r1]!32\nldvf [r1]!32\nlbld 0, r1, 16\n",
+    );
+    src.push_str("loopi 200, 1\n");
+    src.push_str("ldvf [r1]!32 | vmac lb:0, ff | vmac lb:4, ff | vmac lb:8, ff\n");
+    src.push_str("nop | vmul lb:0, ff | vnop | vnop\nnop | vmul lb:0, ff | vnop | vnop\nhalt\n");
+    let pm = ProgramMem::load(&assemble(&src).unwrap()).unwrap();
+
+    let mut cpu = Cpu::new(1 << 16);
+    let stats = cpu.run(&pm).unwrap();
+    let macs_per_cycle = stats.mac_ops as f64 / stats.cycles as f64;
+    println!(
+        "peak sanity: {} MACs in {} cycles = {:.1} MAC/cycle (spec: 192)",
+        stats.mac_ops, stats.cycles, macs_per_cycle
+    );
+    assert!(macs_per_cycle > 180.0, "steady state below spec");
+
+    // how fast does the simulator itself generate this table?
+    let b = Bench::default();
+    b.run("table1 generation", report::table1);
+}

@@ -1,0 +1,17 @@
+//! Bench target: regenerate Table II (the paper's headline comparison).
+//! Runs both benchmark networks in tile-analytic mode at 8-bit gated
+//! precision (the paper's operating point) and prints the full table
+//! with the paper's values side by side.
+
+use convaix::cli::report;
+use convaix::coordinator::executor::{ExecMode, ExecOptions};
+use convaix::util::bench::Bench;
+
+fn main() {
+    let opts = ExecOptions { mode: ExecMode::TileAnalytic, gate_bits: 8 };
+    print!("{}", report::table2(opts).expect("table2"));
+    let b = Bench::quick();
+    b.run("table2 (AlexNet+VGG16, tile-analytic)", || {
+        report::table2(opts).unwrap().len()
+    });
+}

@@ -1,0 +1,11 @@
+//! Bench target: the per-layer utilization table behind the abstract's
+//! "average ALU utilization of 72.5 %" claim (AlexNet + VGG-16 conv
+//! layers, 16-bit vector instructions).
+
+use convaix::cli::report;
+use convaix::coordinator::executor::{ExecMode, ExecOptions};
+
+fn main() {
+    let opts = ExecOptions { mode: ExecMode::TileAnalytic, gate_bits: 16 };
+    print!("{}", report::util_table(opts).expect("util"));
+}

@@ -1,0 +1,278 @@
+//! Baseline accelerators for the Table II comparison: Envision [7] and
+//! Eyeriss [6].
+//!
+//! Two levels of fidelity:
+//!
+//! * [`published`] — the literature values the paper itself tabulates
+//!   (we cannot re-measure other groups' silicon; the paper doesn't
+//!   either). These feed the Table II regenerator verbatim, with the
+//!   derived columns (effective GOP/s, area efficiency, scaled energy
+//!   efficiency) recomputed by our code — a genuine consistency check on
+//!   the paper's arithmetic.
+//! * [`eyeriss_model`] / [`envision_model`] — first-order dataflow-shape
+//!   models (row-stationary 12×14 array; 16×16 MAC array) giving
+//!   order-of-magnitude time/utilization estimates from array geometry
+//!   and per-pass ramp costs. They capture spatial mapping losses but
+//!   not psum-depth or batching effects (the full driver of Eyeriss's
+//!   published VGG-16 collapse to 0.36) — Table II therefore uses the
+//!   `published` values for the comparison columns, and these models
+//!   feed the ablation bench only.
+
+pub mod published {
+    /// Static spec of a comparison design (Table II upper rows).
+    #[derive(Debug, Clone)]
+    pub struct BaselineSpec {
+        pub name: &'static str,
+        pub tech_nm: f64,
+        pub voltage: f64,
+        pub kge: f64,
+        pub sram_kb: f64,
+        pub freq_mhz: f64,
+        pub n_macs: u32,
+        pub peak_gops: f64,
+        pub arch: &'static str,
+        pub precision: &'static str,
+    }
+
+    /// Published per-network measurement (Table II lower rows).
+    #[derive(Debug, Clone)]
+    pub struct BaselineNet {
+        pub net: &'static str,
+        pub time_ms: f64,
+        pub power_mw: f64,
+        pub io_mbytes: f64,
+        pub util: f64,
+        /// Energy efficiency as printed (GOP/s/W, unscaled).
+        pub eff_printed: f64,
+        /// Scaled efficiency as printed (28 nm / 1 V).
+        pub eff_scaled_printed: f64,
+        /// Network GOPs (2·MACs), conv stack.
+        pub gop: f64,
+    }
+
+    pub fn envision() -> (BaselineSpec, Vec<BaselineNet>) {
+        (
+            BaselineSpec {
+                name: "Envision [7]",
+                tech_nm: 40.0,
+                voltage: 0.905, // mid of the published 0.85–0.92 range
+                kge: 1600.0,
+                sram_kb: 148.0,
+                freq_mhz: 204.0,
+                n_macs: 256,
+                peak_gops: 104.5,
+                arch: "RISC + MAC array",
+                precision: "1-16b scalable",
+            },
+            vec![BaselineNet {
+                net: "AlexNet",
+                time_ms: 21.07,
+                power_mw: 70.1,
+                io_mbytes: 9.97,
+                util: 0.61,
+                eff_printed: 815.0,
+                eff_scaled_printed: 955.0,
+                gop: 1.3316,
+            }],
+        )
+    }
+
+    pub fn eyeriss() -> (BaselineSpec, Vec<BaselineNet>) {
+        (
+            BaselineSpec {
+                name: "Eyeriss [6]",
+                tech_nm: 65.0,
+                voltage: 1.0,
+                kge: 1176.0,
+                sram_kb: 181.5,
+                freq_mhz: 200.0,
+                n_macs: 168,
+                peak_gops: 67.2,
+                arch: "ASIC (row stationary)",
+                precision: "16b fixed",
+            },
+            vec![
+                BaselineNet {
+                    net: "AlexNet",
+                    time_ms: 25.88,
+                    power_mw: 116.8,
+                    io_mbytes: 7.19,
+                    util: 0.77,
+                    eff_printed: 187.0,
+                    eff_scaled_printed: 434.0,
+                    gop: 1.3316,
+                },
+                BaselineNet {
+                    net: "VGG-16",
+                    time_ms: 1251.63,
+                    power_mw: 104.8,
+                    io_mbytes: 125.8,
+                    util: 0.36,
+                    eff_printed: 104.0,
+                    eff_scaled_printed: 242.0,
+                    gop: 30.693,
+                },
+            ],
+        )
+    }
+
+    impl BaselineNet {
+        /// Effective throughput (GOP/s) from published time.
+        pub fn eff_gops(&self) -> f64 {
+            self.gop / (self.time_ms / 1e3)
+        }
+        /// Area efficiency (GOP/s/MGE) — effective throughput per mega
+        /// gate, the Table II definition.
+        pub fn area_eff(&self, spec: &BaselineSpec) -> f64 {
+            self.eff_gops() / (spec.kge / 1e3)
+        }
+        /// Energy efficiency scaled to 28 nm / 1 V with the paper's
+        /// formula, from the printed unscaled value.
+        pub fn eff_scaled(&self, spec: &BaselineSpec) -> f64 {
+            crate::energy::scale_energy_eff(self.eff_printed, spec.tech_nm, spec.voltage, 28.0, 1.0)
+        }
+    }
+}
+
+/// First-order row-stationary (Eyeriss) utilization/time model.
+///
+/// A 12×14 PE array; each PE runs a 1-D convolution of one filter row.
+/// A *pass* maps `FH` filter rows × up to 14 output-row strips, and is
+/// replicated `floor(12/FH)` times vertically. Between passes the array
+/// is re-configured and filter/psum state is ramped through the NoC —
+/// `RAMP_CYCLES` per pass. Deep layers (VGG: 512 channels, 3×3 filters)
+/// need many short passes, collapsing utilization — the effect the paper
+/// quotes (0.36 for VGG vs 0.77 for AlexNet).
+pub mod eyeriss_model {
+    use crate::model::ConvLayer;
+
+    pub const ROWS: usize = 12;
+    pub const COLS: usize = 14;
+    pub const FREQ_MHZ: f64 = 200.0;
+    /// Reconfiguration + fill/drain cost per pass (calibrated to the
+    /// published utilization gap).
+    pub const RAMP_CYCLES: f64 = 600.0;
+
+    pub struct EyerissEstimate {
+        pub util: f64,
+        pub time_ms: f64,
+    }
+
+    pub fn estimate_layer(l: &ConvLayer) -> EyerissEstimate {
+        let lg = l.per_group();
+        let repl = (ROWS / lg.fh).max(1);
+        let active_rows = (repl * lg.fh).min(ROWS);
+        let spatial = active_rows as f64 / ROWS as f64
+            * (lg.ow().min(COLS) as f64 / COLS as f64);
+        // one pass: `repl` filters × 1 input channel × 14-wide strip
+        let strips = lg.ow().div_ceil(COLS);
+        let passes = (lg.oc.div_ceil(repl) * lg.ic * strips) as f64 / 8.0; // psum depth reuse across passes
+        let active_pes = (active_rows * COLS.min(lg.ow())) as f64;
+        let compute_cycles = l.macs() as f64 / (active_pes * spatial.max(1e-9));
+        let cycles = compute_cycles + passes * RAMP_CYCLES;
+        let ideal = l.macs() as f64 / (ROWS * COLS) as f64;
+        EyerissEstimate {
+            util: ideal / cycles,
+            time_ms: cycles / (FREQ_MHZ * 1e6) * 1e3,
+        }
+    }
+
+    pub fn estimate_network(layers: &[ConvLayer]) -> EyerissEstimate {
+        let mut cycles = 0.0;
+        let mut macs = 0u64;
+        for l in layers {
+            let e = estimate_layer(l);
+            cycles += e.time_ms / 1e3 * FREQ_MHZ * 1e6;
+            macs += l.macs();
+        }
+        let ideal = macs as f64 / (ROWS * COLS) as f64;
+        EyerissEstimate { util: ideal / cycles, time_ms: cycles / (FREQ_MHZ * 1e6) * 1e3 }
+    }
+}
+
+/// First-order Envision model: 16×16 MAC array fed by a RISC core;
+/// parallelism over (16 output channels × 16 pixels); per-tile setup by
+/// the scalar core costs `SETUP_CYCLES`.
+pub mod envision_model {
+    use crate::model::ConvLayer;
+
+    pub const ARRAY: usize = 16;
+    pub const FREQ_MHZ: f64 = 204.0;
+    pub const SETUP_CYCLES: f64 = 160.0;
+
+    pub struct EnvisionEstimate {
+        pub util: f64,
+        pub time_ms: f64,
+    }
+
+    pub fn estimate_layer(l: &ConvLayer) -> EnvisionEstimate {
+        let lg = l.per_group();
+        let oc_eff = lg.oc.min(ARRAY) as f64 / ARRAY as f64;
+        let px_eff = (lg.ow() * lg.oh()).min(ARRAY) as f64 / ARRAY as f64;
+        let spatial = oc_eff * px_eff.max(1.0_f64.min(px_eff));
+        let tiles = lg.oc.div_ceil(ARRAY) * (lg.ow() * lg.oh()).div_ceil(ARRAY) * lg.ic;
+        let compute = l.macs() as f64 / ((ARRAY * ARRAY) as f64 * spatial);
+        let cycles = compute + tiles as f64 * SETUP_CYCLES / (lg.fh * lg.fw) as f64;
+        let ideal = l.macs() as f64 / (ARRAY * ARRAY) as f64;
+        EnvisionEstimate { util: ideal / cycles, time_ms: cycles / (FREQ_MHZ * 1e6) * 1e3 }
+    }
+
+    pub fn estimate_network(layers: &[ConvLayer]) -> EnvisionEstimate {
+        let mut cycles = 0.0;
+        let mut macs = 0u64;
+        for l in layers {
+            let e = estimate_layer(l);
+            cycles += e.time_ms / 1e3 * FREQ_MHZ * 1e6;
+            macs += l.macs();
+        }
+        let ideal = macs as f64 / (ARRAY * ARRAY) as f64;
+        EnvisionEstimate { util: ideal / cycles, time_ms: cycles / (FREQ_MHZ * 1e6) * 1e3 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{alexnet_conv, vgg16_conv};
+
+    #[test]
+    fn published_area_eff_matches_paper() {
+        let (spec, nets) = published::eyeriss();
+        // paper: 44.01 (AlexNet), 20.85 (VGG)
+        assert!((nets[0].area_eff(&spec) - 44.01).abs() < 0.8, "{}", nets[0].area_eff(&spec));
+        assert!((nets[1].area_eff(&spec) - 20.85).abs() < 0.5, "{}", nets[1].area_eff(&spec));
+        let (espec, enets) = published::envision();
+        // paper: 39.73
+        assert!((enets[0].area_eff(&espec) - 39.73).abs() < 0.8, "{}", enets[0].area_eff(&espec));
+    }
+
+    #[test]
+    fn published_eff_scaling_matches_paper() {
+        let (spec, nets) = published::eyeriss();
+        assert!((nets[0].eff_scaled(&spec) - nets[0].eff_scaled_printed).abs() < 5.0);
+        assert!((nets[1].eff_scaled(&spec) - nets[1].eff_scaled_printed).abs() < 5.0);
+        let (espec, enets) = published::envision();
+        assert!((enets[0].eff_scaled(&espec) - enets[0].eff_scaled_printed).abs() < 15.0);
+    }
+
+    #[test]
+    fn eyeriss_model_plausible_magnitudes() {
+        // First-order model: right order of magnitude for time/util.
+        // (The published VGG collapse to 0.36 needs psum-depth and batch
+        // effects the first-order model does not capture — Table II uses
+        // the `published` values; see module docs.)
+        let alex = eyeriss_model::estimate_network(&alexnet_conv());
+        let vgg = eyeriss_model::estimate_network(&vgg16_conv());
+        assert!(alex.util > 0.15 && alex.util <= 1.0, "alex {}", alex.util);
+        assert!(vgg.util > 0.15 && vgg.util <= 1.0, "vgg {}", vgg.util);
+        // both designs are slower than ConvAix's published times
+        assert!(alex.time_ms > 12.6);
+        assert!(vgg.time_ms > 263.0);
+    }
+
+    #[test]
+    fn envision_model_plausible() {
+        let alex = envision_model::estimate_network(&alexnet_conv());
+        assert!(alex.util > 0.35 && alex.util <= 1.0, "{}", alex.util);
+    }
+}

@@ -1,0 +1,147 @@
+//! Command-line interface of the `convaix` binary and the table/figure
+//! regenerators shared with the `cargo bench` targets.
+
+pub mod report;
+
+use anyhow::Result;
+
+const USAGE: &str = "\
+convaix — ConvAix ASIP reproduction (ISCAS'19)
+
+USAGE: convaix <command> [options]
+
+COMMANDS:
+  table1             Table I   — processor specification
+  fig3b              Fig. 3b   — logic area breakdown
+  fig3c              Fig. 3c   — power breakdown (AlexNet conv3, 8-bit gated)
+  table2             Table II  — comparison vs Envision / Eyeriss
+  util               per-layer MAC utilization (the 72.5 % claim)
+  run <net>          run a network (alexnet | vgg16) and report metrics
+  golden             bit-exact check: simulator vs JAX/Pallas PJRT artifacts
+  asm <file.cvx>     assemble a .cvx file, report size, disassemble back
+
+OPTIONS:
+  --full             full cycle simulation (default: tile-analytic)
+  --gate <bits>      precision gating (default 8, i.e. the paper's setup)
+  --artifacts <dir>  artifact directory (default: artifacts)
+";
+
+/// Tiny argv parser (clap is not in the offline vendor set).
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub full: bool,
+    pub gate_bits: u8,
+    pub artifacts: String,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut a = Args {
+            command: String::new(),
+            positional: vec![],
+            full: false,
+            gate_bits: 8,
+            artifacts: "artifacts".into(),
+        };
+        let mut it = argv.iter().skip(1).peekable();
+        while let Some(arg) = it.next() {
+            match arg.as_str() {
+                "--full" => a.full = true,
+                "--gate" => {
+                    a.gate_bits = it
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("--gate needs a value"))?
+                        .parse()?;
+                }
+                "--artifacts" => {
+                    a.artifacts = it
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("--artifacts needs a value"))?
+                        .clone();
+                }
+                "-h" | "--help" => {
+                    a.command = "help".into();
+                    return Ok(a);
+                }
+                other if a.command.is_empty() => a.command = other.to_string(),
+                other => a.positional.push(other.to_string()),
+            }
+        }
+        if a.command.is_empty() {
+            a.command = "help".into();
+        }
+        Ok(a)
+    }
+}
+
+pub fn main_with(argv: &[String]) -> Result<i32> {
+    let args = Args::parse(argv)?;
+    let mode = if args.full {
+        crate::coordinator::ExecMode::FullCycle
+    } else {
+        crate::coordinator::ExecMode::TileAnalytic
+    };
+    let opts = crate::coordinator::executor::ExecOptions { mode, gate_bits: args.gate_bits };
+    match args.command.as_str() {
+        "help" => {
+            print!("{USAGE}");
+            Ok(0)
+        }
+        "table1" => {
+            print!("{}", report::table1());
+            Ok(0)
+        }
+        "fig3b" => {
+            print!("{}", report::fig3b());
+            Ok(0)
+        }
+        "fig3c" => {
+            print!("{}", report::fig3c()?);
+            Ok(0)
+        }
+        "table2" => {
+            print!("{}", report::table2(opts)?);
+            Ok(0)
+        }
+        "util" => {
+            print!("{}", report::util_table(opts)?);
+            Ok(0)
+        }
+        "run" => {
+            let net = args
+                .positional
+                .first()
+                .map(String::as_str)
+                .unwrap_or("alexnet");
+            print!("{}", report::run_net(net, opts)?);
+            Ok(0)
+        }
+        "golden" => {
+            let (text, ok) = report::golden(&args.artifacts)?;
+            print!("{text}");
+            Ok(if ok { 0 } else { 1 })
+        }
+        "asm" => {
+            let path = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("asm needs a file"))?;
+            let src = std::fs::read_to_string(path)?;
+            let prog = crate::isa::asm::assemble(&src)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            println!(
+                "{} bundles, {} bytes encoded ({} byte PM)",
+                prog.len(),
+                prog.encoded_size(),
+                crate::mem::PM_BYTES
+            );
+            print!("{}", crate::isa::disasm::program(&prog));
+            Ok(0)
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n{USAGE}");
+            Ok(2)
+        }
+    }
+}

@@ -1,0 +1,450 @@
+//! Conv task program builder.
+//!
+//! One *task* computes one output row of one output-channel tile for one
+//! input-depth slice. The same program is reused for every row/tile of a
+//! band (and across bands); per-task parameters arrive in registers set
+//! by the coordinator (the "ABI" below). Software structure:
+//!
+//! ```text
+//! CSR setup, bias load
+//! for g in 0..G:                      (software loop, branch)
+//!     rewind filter ptr; prime filter FIFO (2)
+//!     LbLoad window(ic=0)             (2-D window when FH·win fits a slot)
+//!     InitA(bias)            — first slice
+//!     LdA ×12                — continuing slice (PSums, Fig. 2)
+//!     loopi ics/2:                    (hardware loop, 2 ics per body for
+//!                                      static line-buffer double-buffering)
+//!         prefetch LbLoad(next) ∥ FH·FW × { ldvf ∥ 3×vmac }
+//!     [tail ic if ics odd]
+//!     QMov ×4 ∥ ×3 slots     — last slice (requant + ReLU)
+//!     flush filter FIFO (2)
+//!     StV ×12                — last slice   (OFMap row buffer)
+//!     StA ×12                — other slices (PSum row buffer)
+//!     advance group pointers, branch
+//! halt
+//! ```
+//!
+//! ABI (set by the coordinator before `Cpu::run`):
+//!
+//! | reg | meaning                                         |
+//! |-----|--------------------------------------------------|
+//! | r2  | input base for this row (= dm.input + oh_local·S·row_bytes) |
+//! | r4  | output row buffer base (= dm.out)               |
+//! | r5  | psum row buffer base (= dm.psum)                |
+//! | r6  | filter stream base (= dm.filt)                  |
+//!
+//! r0/r1/r3/r7..r10 are clobbered by the program.
+
+use crate::isa::*;
+use crate::mem::pm::ProgramMem;
+
+use super::layout::{ConvPlan, Variant};
+use super::CodegenError;
+
+/// Which slice of the Fig. 2 depth slicing this task executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TaskFlavor {
+    /// First input slice: accumulators start from the bias.
+    pub first_slice: bool,
+    /// Last input slice: requantize + store OFMap (else spill PSums).
+    pub last_slice: bool,
+}
+
+impl TaskFlavor {
+    pub fn single() -> Self {
+        Self { first_slice: true, last_slice: true }
+    }
+}
+
+const R0: SReg = SReg(0); // zero
+const RF: SReg = SReg(1); // filter walk
+const RIN: SReg = SReg(2); // ABI: row input base
+const RIC: SReg = SReg(3); // ic walker
+const ROUT: SReg = SReg(4); // ABI: out row buffer
+const RPS: SReg = SReg(5); // ABI: psum row buffer
+const RFB: SReg = SReg(6); // ABI: filter base
+const RG: SReg = SReg(7); // group counter
+const RGIN: SReg = SReg(8); // group input base
+const RGOUT: SReg = SReg(9); // group out ptr
+const RGPS: SReg = SReg(10); // group psum ptr
+
+/// Build the task program for `plan` with `slice_ics` input channels
+/// (the last slice may be smaller than `plan.ics`).
+pub fn build_conv_task(
+    plan: &ConvPlan,
+    slice_ics: usize,
+    flavor: TaskFlavor,
+) -> Result<ProgramMem, CodegenError> {
+    let l = &plan.layer;
+    let s = l.stride;
+    let win = plan.win as u16;
+    let row_bytes = plan.row_bytes as u16;
+    let ic_stride = plan.ic_stride;
+    assert!(2 * ic_stride <= u16::MAX as usize);
+    let (nrows, rstride) = if plan.fused_rows {
+        (l.fh as u8, row_bytes)
+    } else {
+        (1u8, 0u16)
+    };
+
+    let mut p = Program::default();
+    let b = &mut p.bundles;
+
+    // ---- prologue -------------------------------------------------------
+    b.push(Bundle::s0(SlotOp::Csrwi { csr: Csr::LbStride, imm: s as u32 }));
+    b.push(Bundle::s0(SlotOp::Csrwi { csr: Csr::FracShift, imm: l.frac_shift as u32 }));
+    b.push(Bundle::s0(SlotOp::Li { rd: R0, imm: 0 }));
+    b.push(Bundle::s0(SlotOp::Li { rd: RG, imm: plan.g as i32 }));
+    // bias vector lives 32 B below the filter stream
+    b.push(Bundle::s0(SlotOp::LdV { vd: VReg(0), addr: Addr::offs(RFB, -32) }));
+    b.push(Bundle::s0(mv(RGIN, RIN)));
+    b.push(Bundle::s0(mv(RGOUT, ROUT)));
+    b.push(Bundle::s0(mv(RGPS, RPS)));
+
+    // ---- group loop ------------------------------------------------------
+    let group_top = b.len() as u32;
+    b.push(Bundle::s0(mv(RF, RFB)));
+    b.push(Bundle::s0(mv(RIC, RGIN)));
+    b.push(Bundle::s0(SlotOp::LdVF { addr: Addr::post(RF, 32) })); // prime 0
+    b.push(Bundle::s0(SlotOp::LdVF { addr: Addr::post(RF, 32) })); // prime 1
+    // stage the first input window (ic 0)
+    b.push(Bundle::s0(SlotOp::LbLoad {
+        row: 0,
+        dm: RIC,
+        off: 0,
+        win: win as u8,
+        nrows,
+        rstride,
+    }));
+
+    // accumulator init
+    if flavor.first_slice {
+        b.push(Bundle {
+            slot0: SlotOp::Nop,
+            v: std::array::from_fn(|i| init_op(plan.variant, i as u8 + 1)),
+        });
+    } else {
+        for k in 0..12u8 {
+            b.push(Bundle::s0(SlotOp::LdA {
+                ad: VAcc(k),
+                addr: Addr::offs(RGPS, k as i32 * 64),
+            }));
+        }
+    }
+
+    // ---- hardware loop over ic pairs -------------------------------------
+    let half = slice_ics / 2;
+    let tail = slice_ics % 2 == 1;
+    if half > 0 {
+        let body = body_bundles(plan, l.fh, l.fw);
+        b.push(Bundle::s0(SlotOp::LoopI { n: half as u32, body: body as u16 }));
+        emit_ic_pair(b, plan, s, win, nrows, rstride, row_bytes, ic_stride);
+    }
+    if tail {
+        emit_tail_ic(b, plan, s, win, row_bytes);
+    }
+
+    // ---- epilogue ---------------------------------------------------------
+    if flavor.last_slice {
+        // requantize: bundle j does QMov(j) on all three slots
+        for j in 0..4u8 {
+            b.push(Bundle {
+                slot0: SlotOp::Nop,
+                v: std::array::from_fn(|i| {
+                    let slot = i as u8 + 1;
+                    VecOp::QMov { vd: VReg(slot * 4 + j), j, relu: l.relu }
+                }),
+            });
+        }
+        // flush the 2 primed-ahead FIFO entries (accs are dead now)
+        for _ in 0..2 {
+            b.push(flush_bundle(plan.variant));
+        }
+        // store the 12 output vectors
+        for pidx in 0..12u8 {
+            let slot = pidx / 4 + 1;
+            let j = pidx % 4;
+            let offset = match plan.variant {
+                Variant::A => pidx as i32 * 32,
+                Variant::B => pidx as i32 * (plan.g * 16 * 2) as i32,
+            };
+            b.push(Bundle::s0(SlotOp::StV {
+                vs: VReg(slot * 4 + j),
+                addr: Addr::offs(RGOUT, offset),
+            }));
+        }
+    } else {
+        // spill PSums, then flush
+        for k in 0..12u8 {
+            b.push(Bundle::s0(SlotOp::StA {
+                as_: VAcc(k),
+                addr: Addr::offs(RGPS, k as i32 * 64),
+            }));
+        }
+        for _ in 0..2 {
+            b.push(flush_bundle(plan.variant));
+        }
+    }
+
+    // ---- advance & loop ----------------------------------------------------
+    let pix = plan.variant.pix();
+    b.push(Bundle::s0(addi(RGIN, (pix * s * 2) as i32)));
+    let out_adv = match plan.variant {
+        Variant::A => (pix * 32) as i32,
+        Variant::B => 32,
+    };
+    b.push(Bundle::s0(addi(RGOUT, out_adv)));
+    if !(flavor.first_slice && flavor.last_slice) {
+        b.push(Bundle::s0(addi(RGPS, 768)));
+    }
+    b.push(Bundle::s0(addi(RG, -1)));
+    b.push(Bundle::s0(SlotOp::Br { c: Cond::Ne, ra: RG, rb: R0, target: group_top }));
+    b.push(Bundle::s0(SlotOp::Halt));
+
+    Ok(ProgramMem::load(&p)?)
+}
+
+/// Bundles in one hardware-loop body (2 input channels).
+fn body_bundles(plan: &ConvPlan, fh: usize, fw: usize) -> usize {
+    if plan.fused_rows {
+        2 + 2 * fh * fw + 1
+    } else {
+        2 * fh + 2 * fh * fw + 1
+    }
+}
+
+fn mv(rd: SReg, rs: SReg) -> SlotOp {
+    SlotOp::Alu { f: AluFn::Add, w: Width::W32, rd, ra: rs, rb: R0 }
+}
+
+fn addi(rd: SReg, imm: i32) -> SlotOp {
+    SlotOp::AluI { f: AluFn::Add, w: Width::W32, rd, ra: rd, imm }
+}
+
+fn init_op(v: Variant, slot: u8) -> VecOp {
+    match v {
+        Variant::A => VecOp::InitA { vr: VReg(0) },
+        Variant::B => VecOp::InitALane { vr: VReg(0), base: (slot - 1) * 4 },
+    }
+}
+
+/// The MAC for (slot, fy, fx) reading LB slot `buf`.
+fn mac_op(plan: &ConvPlan, slot: u8, buf: u8, fy: usize, fx: usize) -> VecOp {
+    let s = plan.layer.stride;
+    let base = if plan.fused_rows { fy * plan.win } else { 0 };
+    match plan.variant {
+        Variant::A => VecOp::Mac {
+            a: ASrc::Lb {
+                row: buf,
+                off: (base + fx + (slot as usize - 1) * 4 * s) as u16,
+            },
+            b: BSrc::Fifo,
+        },
+        Variant::B => VecOp::Mac {
+            a: ASrc::LbVec { row: buf, off: (base + fx) as u16 },
+            b: BSrc::FifoLaneQuad { base: (slot - 1) * 4 },
+        },
+    }
+}
+
+fn mac_bundle(plan: &ConvPlan, buf: u8, fy: usize, fx: usize, ldvf: bool) -> Bundle {
+    Bundle {
+        slot0: if ldvf {
+            SlotOp::LdVF { addr: Addr::post(RF, 32) }
+        } else {
+            SlotOp::Nop
+        },
+        v: std::array::from_fn(|i| mac_op(plan, i as u8 + 1, buf, fy, fx)),
+    }
+}
+
+/// A FIFO-draining bundle: one dead MUL into slot 1's accumulators.
+fn flush_bundle(v: Variant) -> Bundle {
+    let a = match v {
+        Variant::A => ASrc::Lb { row: 0, off: 0 },
+        Variant::B => ASrc::LbVec { row: 0, off: 0 },
+    };
+    let bsrc = match v {
+        Variant::A => BSrc::Fifo,
+        Variant::B => BSrc::FifoLaneQuad { base: 0 },
+    };
+    Bundle {
+        slot0: SlotOp::Nop,
+        v: [VecOp::Mul { a, b: bsrc }, VecOp::Nop, VecOp::Nop],
+    }
+}
+
+/// Emit the hardware-loop body processing input channels (e, e+1):
+/// prefetch e+1 into buf 1, MACs on buf 0, prefetch e+2 into buf 0,
+/// MACs on buf 1, advance the ic walker.
+#[allow(clippy::too_many_arguments)]
+fn emit_ic_pair(
+    b: &mut Vec<Bundle>,
+    plan: &ConvPlan,
+    _s: usize,
+    win: u16,
+    nrows: u8,
+    rstride: u16,
+    row_bytes: u16,
+    ic_stride: usize,
+) {
+    let l = &plan.layer;
+    if plan.fused_rows {
+        // prefetch odd ic window
+        b.push(Bundle::s0(SlotOp::LbLoad {
+            row: 1,
+            dm: RIC,
+            off: ic_stride as u16,
+            win: win as u8,
+            nrows,
+            rstride,
+        }));
+        for fy in 0..l.fh {
+            for fx in 0..l.fw {
+                b.push(mac_bundle(plan, 0, fy, fx, true));
+            }
+        }
+        // prefetch even ic of the NEXT pair
+        b.push(Bundle::s0(SlotOp::LbLoad {
+            row: 0,
+            dm: RIC,
+            off: (2 * ic_stride) as u16,
+            win: win as u8,
+            nrows,
+            rstride,
+        }));
+        for fy in 0..l.fh {
+            for fx in 0..l.fw {
+                b.push(mac_bundle(plan, 1, fy, fx, true));
+            }
+        }
+    } else {
+        // per-(ic,fy) single-row windows; global row index g = icpar*FH+fy,
+        // buffer parity g&1, prefetch one row ahead.
+        let off_of = |g: usize| -> u16 {
+            let icn = g / l.fh;
+            let fyn = g % l.fh;
+            (icn * ic_stride + fyn * row_bytes as usize) as u16
+        };
+        for icpar in 0..2usize {
+            for fy in 0..l.fh {
+                let g = icpar * l.fh + fy;
+                b.push(Bundle::s0(SlotOp::LbLoad {
+                    row: ((g + 1) & 1) as u8,
+                    dm: RIC,
+                    off: off_of(g + 1),
+                    win: win as u8,
+                    nrows: 1,
+                    rstride: 0,
+                }));
+                for fx in 0..l.fw {
+                    b.push(mac_bundle(plan, (g & 1) as u8, fy, fx, true));
+                }
+            }
+        }
+    }
+    b.push(Bundle::s0(addi(RIC, (2 * ic_stride) as i32)));
+}
+
+/// Tail input channel (odd slice size). Its data sits in buf 0: either
+/// prefetched by the last loop iteration, or (half == 0) by the prologue
+/// LbLoad. Non-fused mode loads rows fy>0 inline.
+fn emit_tail_ic(b: &mut Vec<Bundle>, plan: &ConvPlan, _s: usize, win: u16, row_bytes: u16) {
+    let l = &plan.layer;
+    if plan.fused_rows {
+        for fy in 0..l.fh {
+            for fx in 0..l.fw {
+                b.push(mac_bundle(plan, 0, fy, fx, true));
+            }
+        }
+    } else {
+        for fy in 0..l.fh {
+            if fy + 1 < l.fh {
+                b.push(Bundle::s0(SlotOp::LbLoad {
+                    row: ((fy + 1) & 1) as u8,
+                    dm: RIC,
+                    off: (fy as u16 + 1) * row_bytes,
+                    win: win as u8,
+                    nrows: 1,
+                    rstride: 0,
+                }));
+            }
+            for fx in 0..l.fw {
+                b.push(mac_bundle(plan, (fy & 1) as u8, fy, fx, true));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::layout::plan;
+    use super::*;
+    use crate::model::{alexnet_conv, vgg16_conv, ConvLayer};
+
+    #[test]
+    fn all_benchmark_tasks_fit_pm() {
+        for l in alexnet_conv().iter().chain(vgg16_conv().iter()) {
+            let d = l.per_group();
+            let p = plan(&d).unwrap();
+            for (first, last) in [(true, true), (true, false), (false, false), (false, true)] {
+                let pm = build_conv_task(
+                    &p,
+                    p.slice_ics(0),
+                    TaskFlavor { first_slice: first, last_slice: last },
+                )
+                .unwrap_or_else(|e| panic!("{} ({first},{last}): {e}", l.name));
+                assert!(pm.bundle_count() <= 512, "{}", l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn fifo_balance_is_exact() {
+        // pushes (2 primes + ldvf per mac bundle) == pops (mac bundles +
+        // 2 flushes) per group — statically checkable on the program.
+        for l in alexnet_conv().iter().chain(vgg16_conv().iter()) {
+            let d = l.per_group();
+            let p = plan(&d).unwrap();
+            let pm = build_conv_task(&p, p.slice_ics(0), TaskFlavor::single()).unwrap();
+            let prog = pm.program();
+            let mut pushes = 0i64;
+            let mut pops = 0i64;
+            for bd in &prog.bundles {
+                if matches!(bd.slot0, SlotOp::LdVF { .. }) {
+                    pushes += 1;
+                }
+                if bd.v.iter().any(|op| {
+                    matches!(
+                        op,
+                        VecOp::Mac { b: BSrc::Fifo | BSrc::FifoLaneQuad { .. }, .. }
+                            | VecOp::Mul { b: BSrc::Fifo | BSrc::FifoLaneQuad { .. }, .. }
+                    )
+                }) {
+                    pops += 1;
+                }
+            }
+            // hardware loop multiplies body counts; account for it
+            let half = (p.slice_ics(0) / 2) as i64;
+            let body_push = (2 * d.fh * d.fw) as i64;
+            let body_pop = body_push;
+            let static_extra = (half - 1).max(0);
+            let total_push = pushes + static_extra * body_push;
+            let total_pop = pops + static_extra * body_pop;
+            assert_eq!(total_push, total_pop, "{}", l.name);
+        }
+    }
+
+    #[test]
+    fn peak_bundle_present() {
+        let l = ConvLayer::new("t", 8, 16, 16, 16, 3, 3, 1, 1, 1);
+        let p = plan(&l).unwrap();
+        let pm = build_conv_task(&p, 8, TaskFlavor::single()).unwrap();
+        let has_full_mac = pm
+            .program()
+            .bundles
+            .iter()
+            .any(|b| b.mac_count() == crate::PEAK_MACS_PER_CYCLE);
+        assert!(has_full_mac);
+    }
+}

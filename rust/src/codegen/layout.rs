@@ -1,0 +1,370 @@
+//! Layout planner: the Fig. 2 slicing decisions.
+//!
+//! For one (dense, per-group) conv layer it chooses
+//!
+//! * the lane-mapping **variant** (A: lanes = OCh; B: lanes = pixels) by
+//!   estimated utilization under LB-capacity feasibility,
+//! * the input-depth slice size `ics` (→ `M = ceil(ic/ics)` slices; when
+//!   `M > 1` partial sums spill per the paper),
+//! * the output-row **band** size (how many output rows' worth of input
+//!   is staged in DM at once — the coarse-grained form of the paper's
+//!   row-wise streaming),
+//! * the DM memory map for one task,
+//! * the tile/band loop order minimizing off-chip I/O.
+//!
+//! All hardware limits are enforced here: 128 KB DM, 64-pixel LB row
+//! slots, u16 LbLoad offsets, 512-bundle PM (estimated, re-checked on
+//! build).
+
+use crate::mem::linebuf::LB_ROW_PIXELS;
+use crate::mem::DM_BYTES;
+use crate::model::ConvLayer;
+
+use super::CodegenError;
+
+/// Lane mapping of the vector MACs (DESIGN.md §4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// 16 lanes = output channels; 3 slots × 4 slices = 12 output pixels.
+    A,
+    /// 16 lanes = output pixels; 3 slots × 4 slices = 12 output channels.
+    B,
+}
+
+impl Variant {
+    /// Output pixels covered per group.
+    pub fn pix(self) -> usize {
+        match self {
+            Variant::A => 12,
+            Variant::B => 16,
+        }
+    }
+    /// Output channels covered per tile.
+    pub fn ocs(self) -> usize {
+        match self {
+            Variant::A => 16,
+            Variant::B => 12,
+        }
+    }
+}
+
+/// Loop order of the outer coordinator loops (I/O trade-off):
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoopOrder {
+    /// `for tile { for band { stream input } }` — filters loaded once,
+    /// input re-streamed per tile.
+    TileOuter,
+    /// `for band { for tile { load filters } }` — input streamed once,
+    /// filters re-loaded per band.
+    BandOuter,
+}
+
+/// DM region addresses for one task (bytes).
+#[derive(Debug, Clone)]
+pub struct DmMap {
+    /// Bias vector (32 B), placed directly below the filters.
+    pub bias: usize,
+    /// Filter stream (K·32 B + 64 B over-read slack).
+    pub filt: usize,
+    /// Output row buffer (G·384 B).
+    pub out: usize,
+    /// PSum row buffer (G·768 B) — used when `m > 1`.
+    pub psum: usize,
+    /// Staged input band (ics · ic_stride + prefetch slack).
+    pub input: usize,
+    /// Total bytes used (including slack).
+    pub end: usize,
+}
+
+/// Complete plan for one dense conv layer.
+#[derive(Debug, Clone)]
+pub struct ConvPlan {
+    pub layer: ConvLayer,
+    pub variant: Variant,
+    /// Input channels per slice (uniform; last slice may be smaller).
+    pub ics: usize,
+    /// Number of input-depth slices.
+    pub m: usize,
+    /// Output rows per band.
+    pub band_rows: usize,
+    pub n_bands: usize,
+    /// Output-channel tiles.
+    pub n_tiles: usize,
+    /// Pixel groups per output row.
+    pub g: usize,
+    /// LB window pixels per source row.
+    pub win: usize,
+    /// One 2-D LbLoad per input channel (FH rows at once)?
+    pub fused_rows: bool,
+    /// Staged row width in pixels (padded for window overrun).
+    pub iwp_stage: usize,
+    pub row_bytes: usize,
+    /// Input rows staged per band.
+    pub in_rows_band: usize,
+    /// Bytes between consecutive input channels in the staged band.
+    pub ic_stride: usize,
+    pub dm: DmMap,
+    pub loop_order: LoopOrder,
+    /// Planner cost estimate: max(compute, dma) cycles for the layer.
+    pub est_cost: f64,
+}
+
+impl ConvPlan {
+    /// Estimated steady-state utilization ceiling (used to pick the
+    /// variant; the true number comes from cycle simulation).
+    pub fn util_estimate(&self) -> f64 {
+        let l = &self.layer;
+        let k2 = 2 * l.fh * l.fw; // mac bundles per 2-ic body
+        let body = if self.fused_rows { 2 + k2 + 1 } else { 2 * l.fh + k2 + 1 };
+        let pix_eff = l.ow() as f64 / (self.g * self.variant.pix()) as f64;
+        let oc_eff = l.oc as f64 / (self.n_tiles * self.variant.ocs()) as f64;
+        (k2 as f64 / body as f64) * pix_eff * oc_eff
+    }
+
+    /// Bytes of filters for one (tile, slice): K vectors of 32 B.
+    pub fn filter_bytes(&self, slice_ics: usize) -> usize {
+        slice_ics * self.layer.fh * self.layer.fw * 32
+    }
+
+    /// Output row-buffer bytes (identical for both variants: G·384).
+    pub fn out_row_bytes(&self) -> usize {
+        self.g * self.variant.pix() * self.variant.ocs() * 2
+    }
+
+    /// PSum row-buffer bytes (i32 accumulators: G·768).
+    pub fn psum_row_bytes(&self) -> usize {
+        2 * self.out_row_bytes()
+    }
+
+    /// Input channels in slice `mi`.
+    pub fn slice_ics(&self, mi: usize) -> usize {
+        let l = &self.layer;
+        if mi + 1 == self.m {
+            l.ic - mi * self.ics
+        } else {
+            self.ics
+        }
+    }
+
+    /// Output rows in band `bi`.
+    pub fn band_rows_of(&self, bi: usize) -> usize {
+        let oh = self.layer.oh();
+        if bi + 1 == self.n_bands {
+            oh - bi * self.band_rows
+        } else {
+            self.band_rows
+        }
+    }
+}
+
+/// Plan a dense (per-group) conv layer. `layer.groups` must be 1.
+pub fn plan(layer: &ConvLayer) -> Result<ConvPlan, CodegenError> {
+    assert_eq!(layer.groups, 1, "plan() takes per-group dense views");
+    let a = plan_variant(layer, Variant::A);
+    let b = plan_variant(layer, Variant::B);
+    match (a, b) {
+        (Ok(pa), Ok(pb)) => Ok(if pa.est_cost <= pb.est_cost { pa } else { pb }),
+        (Ok(pa), Err(_)) => Ok(pa),
+        (Err(_), Ok(pb)) => Ok(pb),
+        (Err(e), Err(_)) => Err(e),
+    }
+}
+
+/// Plan a specific variant (public for the ablation bench): joint search
+/// over (ics, band_rows, loop order) minimizing the estimated layer time
+/// `max(compute, dma)` — the double-buffered overlap model.
+pub fn plan_variant(layer: &ConvLayer, variant: Variant) -> Result<ConvPlan, CodegenError> {
+    let l = layer;
+    let s = l.stride;
+    let pix = variant.pix();
+    let ocs = variant.ocs();
+    let win = (pix - 1) * s + l.fw;
+    if win > LB_ROW_PIXELS {
+        return Err(CodegenError::Infeasible(format!(
+            "{}: window {win}px exceeds LB row ({LB_ROW_PIXELS}px), variant {variant:?}",
+            l.name
+        )));
+    }
+    let fused_rows = l.fh * win <= LB_ROW_PIXELS;
+    let g = l.ow().div_ceil(pix);
+    let n_tiles = l.oc.div_ceil(ocs);
+    // staged row must cover the last group's window
+    let iwp_stage = (g - 1) * pix * s + win;
+    let row_bytes = iwp_stage * 2;
+    let out_row = g * pix * ocs * 2;
+    let psum_row = 2 * out_row;
+
+    let mut best: Option<(f64, ConvPlan)> = None;
+    let mut ics = l.ic;
+    while ics >= 1 {
+        let m = l.ic.div_ceil(ics);
+        // PM estimate: per-2-ic body + fixed overhead (re-checked on build)
+        let body = if fused_rows { 2 + 2 * l.fh * l.fw + 1 } else { 2 * l.fh + 2 * l.fh * l.fw + 1 };
+        let tail = if ics % 2 == 1 { body / 2 + 1 } else { 0 };
+        if body + tail + 64 > 500 {
+            ics /= 2;
+            continue;
+        }
+        // max feasible band_rows for this ics
+        let filt = ics * l.fh * l.fw * 32 + 64;
+        let mut band_rows = l.oh();
+        let found = loop {
+            if band_rows == 0 {
+                break None;
+            }
+            let in_rows = (band_rows - 1) * s + l.fh;
+            let ic_stride = in_rows * row_bytes;
+            // u16 LbLoad offset limit: prefetch offsets go up to 2·ic_stride
+            if 2 * ic_stride <= u16::MAX as usize {
+                let input = ics * ic_stride;
+                let slack = 2 * ic_stride + win * 2; // prefetch over-read
+                let total = 32 + filt + out_row + psum_row + input + slack;
+                if total <= DM_BYTES {
+                    break Some((band_rows, in_rows, ic_stride, total));
+                }
+            }
+            band_rows = if band_rows > 8 { band_rows / 2 } else { band_rows - 1 };
+        };
+        let Some((band_rows, in_rows, ic_stride, total)) = found else {
+            ics /= 2;
+            continue;
+        };
+        let n_bands = l.oh().div_ceil(band_rows);
+        // I/O estimate (ring accounting: band overlap rows are not
+        // re-fetched within one streaming pass)
+        let input_once = (l.ic * l.ihp().max(in_rows) * row_bytes) as f64;
+        let filt_once = (n_tiles * (l.ic * l.fh * l.fw + 2 * m) * 32 + 32 * n_tiles * m) as f64;
+        let psum_io = if m > 1 {
+            (2 * (m - 1) * l.oh() * psum_row * n_tiles) as f64
+        } else {
+            0.0
+        };
+        let out_io = (l.oh() * n_tiles) as f64
+            * match variant {
+                Variant::A => (l.ow() * 32) as f64,
+                Variant::B => (l.ow() * 2 * ocs) as f64,
+            };
+        // compute estimate from the bundle model
+        let rows_cycles = {
+            let per2ic = body as f64;
+            let groups = g as f64;
+            let per_row = groups * (per2ic * (ics as f64 / 2.0) + 36.0);
+            per_row * (l.oh() * n_tiles * m) as f64
+        };
+        for order in [LoopOrder::TileOuter, LoopOrder::BandOuter] {
+            let (input_io, filt_io) = match order {
+                LoopOrder::TileOuter => (input_once * n_tiles as f64, filt_once),
+                LoopOrder::BandOuter => (input_once, filt_once * n_bands as f64),
+            };
+            let io = input_io + filt_io + psum_io + out_io;
+            let dma_est = io / crate::mem::EXT_BYTES_PER_CYCLE as f64;
+            let cost = rows_cycles.max(dma_est);
+            if best.as_ref().is_none_or(|(c, _)| cost < *c) {
+                let dm = DmMap {
+                    bias: 0,
+                    filt: 32,
+                    out: 32 + filt,
+                    psum: 32 + filt + out_row,
+                    input: 32 + filt + out_row + psum_row,
+                    end: total,
+                };
+                best = Some((
+                    cost,
+                    ConvPlan {
+                        layer: l.clone(),
+                        variant,
+                        ics,
+                        m,
+                        band_rows,
+                        n_bands,
+                        n_tiles,
+                        g,
+                        win,
+                        fused_rows,
+                        iwp_stage,
+                        row_bytes,
+                        in_rows_band: in_rows,
+                        ic_stride,
+                        dm,
+                        loop_order: order,
+                        est_cost: cost,
+                    },
+                ));
+            }
+        }
+        ics /= 2;
+    }
+    best.map(|(_, p)| p)
+        .ok_or_else(|| CodegenError::Infeasible(l.name.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{alexnet_conv, vgg16_conv};
+
+    #[test]
+    fn all_benchmark_layers_plan() {
+        for l in alexnet_conv().iter().chain(vgg16_conv().iter()) {
+            let d = l.per_group();
+            let p = plan(&d).unwrap_or_else(|e| panic!("{}: {e}", l.name));
+            assert!(p.dm.end <= DM_BYTES, "{} overflows DM", l.name);
+            assert!(p.util_estimate() > 0.3, "{}: est {}", l.name, p.util_estimate());
+        }
+    }
+
+    #[test]
+    fn alexnet_conv1_uses_variant_a() {
+        // stride-4 11x11: variant B window (15*4+11=71) exceeds the LB row
+        let l = alexnet_conv()[0].per_group();
+        let p = plan(&l).unwrap();
+        assert_eq!(p.variant, Variant::A);
+        assert!(!p.fused_rows); // 11 rows * 55 px >> 64
+    }
+
+    #[test]
+    fn small_ow_layers_prefer_variant_b() {
+        // AlexNet conv3: ow=13 — A wastes 11/24 pixels, B only 3/16
+        let l = alexnet_conv()[2].per_group();
+        let p = plan(&l).unwrap();
+        assert_eq!(p.variant, Variant::B);
+        assert!(p.fused_rows);
+    }
+
+    #[test]
+    fn vgg_mid_layers_use_fused_rows() {
+        let l = vgg16_conv()[4].per_group(); // conv3_1 3x3 s1
+        let p = plan(&l).unwrap();
+        assert!(p.fused_rows);
+        assert!(p.util_estimate() > 0.7, "est {}", p.util_estimate());
+    }
+
+    #[test]
+    fn slices_and_bands_cover_layer() {
+        for l in alexnet_conv().iter().chain(vgg16_conv().iter()) {
+            let d = l.per_group();
+            let p = plan(&d).unwrap();
+            let ic_sum: usize = (0..p.m).map(|i| p.slice_ics(i)).sum();
+            assert_eq!(ic_sum, d.ic, "{}", l.name);
+            let row_sum: usize = (0..p.n_bands).map(|i| p.band_rows_of(i)).sum();
+            assert_eq!(row_sum, d.oh(), "{}", l.name);
+        }
+    }
+
+    #[test]
+    fn offsets_fit_u16() {
+        for l in alexnet_conv().iter().chain(vgg16_conv().iter()) {
+            let p = plan(&l.per_group()).unwrap();
+            assert!(2 * p.ic_stride <= u16::MAX as usize, "{}", l.name);
+        }
+    }
+
+    #[test]
+    fn window_fits_lb() {
+        for l in alexnet_conv().iter().chain(vgg16_conv().iter()) {
+            let p = plan(&l.per_group()).unwrap();
+            let total = if p.fused_rows { p.layer.fh * p.win } else { p.win };
+            assert!(total <= LB_ROW_PIXELS, "{}", l.name);
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! The "compiler": generates ConvAix VLIW kernels for CNN layers.
+//!
+//! On the real ASIP this role is played by the auto-generated C/C++
+//! compiler plus a hand-tuned kernel library (Section I); here the
+//! kernels are emitted directly as [`crate::isa::Program`]s implementing
+//! the Fig. 2 dataflow:
+//!
+//! * IFMaps/OFMaps depth-sliced (`M` input slices × output-channel
+//!   tiles), output rows processed row-wise with line-buffer reuse,
+//! * filters pre-loaded per slice and streamed through the filter FIFO
+//!   ("at least one new filter vector ... loaded each cycle"),
+//! * partial sums kept in VRl, spilled via `StA`/`LdA` only when the
+//!   input depth is sliced (`M > 1`),
+//! * two lane mappings, chosen per layer by the planner:
+//!   **variant A** — 16 lanes = output channels, 12 slices = pixels;
+//!   **variant B** — 16 lanes = pixels, 12 slices = output channels.
+
+pub mod conv;
+pub mod layout;
+pub mod pool;
+pub mod refconv;
+pub mod stage;
+
+pub use conv::{build_conv_task, TaskFlavor};
+pub use layout::{ConvPlan, Variant};
+
+#[derive(Debug, thiserror::Error)]
+pub enum CodegenError {
+    #[error("layer {0}: no feasible layout (DM/PM/LB constraints)")]
+    Infeasible(String),
+    #[error("program does not fit PM: {0}")]
+    Pm(#[from] crate::mem::pm::PmError),
+    #[error("internal: {0}")]
+    Internal(String),
+}

@@ -1,0 +1,171 @@
+//! Max-pooling kernels for the slot-1 SFU.
+//!
+//! Data layout: channel-tile vectors, pixel-major (exactly what the
+//! variant-A conv epilogue produces) — one 16-channel vector per pixel.
+//! A task computes one output row of one 16-channel tile: a software
+//! loop over output pixels; per pixel the `size²` window vectors are
+//! loaded round-robin into VR while the SFU folds them with `PoolMax`
+//! into an accumulator vector.
+//!
+//! ABI: r2 = staged input base (`size` rows, pixel-major vectors),
+//! r4 = output row base. r0/r3/r7/r9 clobbered.
+
+use crate::isa::*;
+use crate::mem::pm::ProgramMem;
+use crate::mem::DM_BYTES;
+use crate::model::PoolLayer;
+
+use super::CodegenError;
+
+/// Plan for a pooling layer.
+#[derive(Debug, Clone)]
+pub struct PoolPlan {
+    pub layer: PoolLayer,
+    /// 16-channel tiles.
+    pub n_tiles: usize,
+    /// Input row bytes (iw pixel-vectors).
+    pub in_row_bytes: usize,
+    /// DM address of the staged input rows.
+    pub dm_input: usize,
+    /// DM address of the output row buffer.
+    pub dm_out: usize,
+}
+
+pub fn plan_pool(layer: &PoolLayer) -> Result<PoolPlan, CodegenError> {
+    let in_row_bytes = layer.iw * 32;
+    let input_bytes = layer.size * in_row_bytes;
+    let out_bytes = layer.ow() * 32;
+    if input_bytes + out_bytes > DM_BYTES {
+        return Err(CodegenError::Infeasible(format!("pool {}", layer.name)));
+    }
+    Ok(PoolPlan {
+        layer: layer.clone(),
+        n_tiles: layer.ic.div_ceil(16),
+        in_row_bytes,
+        dm_input: 0,
+        dm_out: input_bytes,
+    })
+}
+
+const R0: SReg = SReg(0);
+const RIN: SReg = SReg(2);
+const RWIN: SReg = SReg(3);
+const ROUT: SReg = SReg(4);
+const RCNT: SReg = SReg(7);
+
+/// Build the per-(tile, output-row) pooling task.
+pub fn build_pool_task(plan: &PoolPlan) -> Result<ProgramMem, CodegenError> {
+    let l = &plan.layer;
+    let mut p = Program::default();
+    let b = &mut p.bundles;
+
+    b.push(Bundle::s0(SlotOp::Li { rd: R0, imm: 0 }));
+    b.push(Bundle::s0(SlotOp::Li { rd: RCNT, imm: l.ow() as i32 }));
+    b.push(Bundle::s0(SlotOp::Alu { f: AluFn::Add, w: Width::W32, rd: RWIN, ra: RIN, rb: R0 }));
+
+    let top = b.len() as u32;
+    // window offsets in load order: (fy, fx) row-major; first into the
+    // accumulator v4, the rest round-robin v0..v3 folded 2 bundles later.
+    let mut offs = Vec::new();
+    for fy in 0..l.size {
+        for fx in 0..l.size {
+            offs.push((fy * plan.in_row_bytes + fx * 32) as i32);
+        }
+    }
+    let n = offs.len();
+    // bundle i (i<n): load offs[i] into v4 (i==0) or v0..v3; also fold
+    // loaded vector i-2 (for i>=2).
+    let dest = |i: usize| -> VReg {
+        if i == 0 {
+            VReg(4)
+        } else {
+            VReg(((i - 1) % 4) as u8)
+        }
+    };
+    for i in 0..n + 2 {
+        let slot0 = if i < n {
+            SlotOp::LdV { vd: dest(i), addr: Addr::offs(RWIN, offs[i]) }
+        } else if i == n {
+            SlotOp::AluI {
+                f: AluFn::Add,
+                w: Width::W32,
+                rd: RWIN,
+                ra: RWIN,
+                imm: (l.stride * 32) as i32,
+            }
+        } else {
+            SlotOp::AluI { f: AluFn::Add, w: Width::W32, rd: RCNT, ra: RCNT, imm: -1 }
+        };
+        let v1 = if (2..n + 2).contains(&i) && i >= 2 && i - 1 >= 1 && i - 2 >= 1 {
+            // fold vector loaded at bundle i-2 (skip i-2==0: that IS v4)
+            VecOp::PoolMax { vd: VReg(4), va: VReg(4), vb: dest(i - 2) }
+        } else {
+            VecOp::Nop
+        };
+        b.push(Bundle { slot0, v: [v1, VecOp::Nop, VecOp::Nop] });
+    }
+    // store the finished pixel vector and loop
+    b.push(Bundle::s0(SlotOp::StV { vs: VReg(4), addr: Addr::post(ROUT, 32) }));
+    b.push(Bundle::s0(SlotOp::Br { c: Cond::Ne, ra: RCNT, rb: R0, target: top }));
+    b.push(Bundle::s0(SlotOp::Halt));
+    Ok(ProgramMem::load(&p)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::refconv::maxpool2d;
+    use crate::core::Cpu;
+    use crate::util::XorShift;
+
+    /// Stage `size` input rows (pixel-major channel vectors) and run one
+    /// output row; compare against the host reference.
+    #[test]
+    fn pool_task_matches_reference() {
+        for (size, stride, iw, ic) in [(2usize, 2usize, 8usize, 16usize), (3, 2, 13, 16)] {
+            let ih = size; // one output row's worth
+            let l = PoolLayer { name: "p", ic, ih, iw, size, stride };
+            let plan = plan_pool(&l).unwrap();
+            let pm = build_pool_task(&plan).unwrap();
+            let mut rng = XorShift::new(42);
+            let x = rng.i16_vec(ic * ih * iw, -30000, 30000);
+            let expect = maxpool2d(&x, ic, ih, iw, size, stride);
+            let ow = l.ow();
+
+            let mut cpu = Cpu::new(1 << 16);
+            // stage: [row][pixel][16ch] vectors
+            for r in 0..size {
+                for px in 0..iw {
+                    let v: Vec<i16> = (0..16).map(|c| x[(c * ih + r) * iw + px]).collect();
+                    cpu.mem
+                        .dm
+                        .poke_i16_slice(plan.dm_input + r * plan.in_row_bytes + px * 32, &v);
+                }
+            }
+            cpu.regs.set_r(RIN, plan.dm_input as i32);
+            cpu.regs.set_r(ROUT, plan.dm_out as i32);
+            let stats = cpu.run(&pm).unwrap();
+            assert!(stats.sfu_ops > 0);
+            for px in 0..ow {
+                let v = cpu.mem.dm.peek_i16_slice(plan.dm_out + px * 32, 16);
+                for c in 0..16 {
+                    assert_eq!(
+                        v[c],
+                        expect[(c * 1 + 0) * ow + px],
+                        "size={size} px={px} c={c}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_task_fits_pm() {
+        for l in crate::model::alexnet_pools().iter().chain(crate::model::vgg16_pools().iter()) {
+            let one_row = PoolLayer { ih: l.size, ..l.clone() };
+            let plan = plan_pool(&one_row).unwrap();
+            let pm = build_pool_task(&plan).unwrap();
+            assert!(pm.bundle_count() < 100, "{}", l.name);
+        }
+    }
+}

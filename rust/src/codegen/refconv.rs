@@ -1,0 +1,183 @@
+//! Host-side reference convolution / pooling with the exact ConvAix
+//! fixed-point semantics (`crate::fixed`). Used by codegen tests, the
+//! coordinator's self-checks, and as the CPU-side expectation in golden
+//! tests (the authoritative oracle is the JAX/Pallas HLO artifact — this
+//! mirrors it bit-for-bit).
+
+use crate::fixed::{gate, mac, mac_init, requantize, RoundMode};
+use crate::model::ConvLayer;
+
+/// Dense (single-group) fixed-point conv, NCHW-without-N.
+/// x: (ic, ih, iw) i16; w: (oc, ic, fh, fw) i16; b: (oc,) i32.
+/// Returns (oc, oh, ow) i16.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d(
+    x: &[i16],
+    w: &[i16],
+    b: &[i32],
+    l: &ConvLayer,
+    mode: RoundMode,
+    gate_bits: u8,
+) -> Vec<i16> {
+    assert_eq!(l.groups, 1, "use per_group() views for grouped layers");
+    assert_eq!(x.len(), l.ic * l.ih * l.iw);
+    assert_eq!(w.len(), l.oc * l.ic * l.fh * l.fw);
+    assert_eq!(b.len(), l.oc);
+    let (oh, ow) = (l.oh(), l.ow());
+    let (ihp, iwp) = (l.ihp(), l.iwp());
+    // stage padded input
+    let mut xp = vec![0i16; l.ic * ihp * iwp];
+    for c in 0..l.ic {
+        for y in 0..l.ih {
+            for xx in 0..l.iw {
+                xp[(c * ihp + y + l.pad) * iwp + xx + l.pad] = x[(c * l.ih + y) * l.iw + xx];
+            }
+        }
+    }
+    let mut out = vec![0i16; l.oc * oh * ow];
+    for o in 0..l.oc {
+        for y in 0..oh {
+            for xx in 0..ow {
+                let mut acc = mac_init(b[o], l.frac_shift);
+                for c in 0..l.ic {
+                    for fy in 0..l.fh {
+                        for fx in 0..l.fw {
+                            let px = xp[(c * ihp + y * l.stride + fy) * iwp
+                                + xx * l.stride
+                                + fx];
+                            let wt = w[((o * l.ic + c) * l.fh + fy) * l.fw + fx];
+                            acc = mac(acc, gate(px, gate_bits), gate(wt, gate_bits));
+                        }
+                    }
+                }
+                out[(o * oh + y) * ow + xx] = requantize(acc, l.frac_shift, mode, l.relu);
+            }
+        }
+    }
+    out
+}
+
+/// Grouped conv by per-group dense runs (matches the executor).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_grouped(
+    x: &[i16],
+    w: &[i16],
+    b: &[i32],
+    l: &ConvLayer,
+    mode: RoundMode,
+    gate_bits: u8,
+) -> Vec<i16> {
+    if l.groups == 1 {
+        return conv2d(x, w, b, l, mode, gate_bits);
+    }
+    let g = l.groups;
+    let lg = l.per_group();
+    let (icg, ocg) = (lg.ic, lg.oc);
+    let mut out = vec![0i16; l.oc * l.oh() * l.ow()];
+    let ohw = l.oh() * l.ow();
+    for gi in 0..g {
+        let xg = &x[gi * icg * l.ih * l.iw..(gi + 1) * icg * l.ih * l.iw];
+        let wg = &w[gi * ocg * icg * l.fh * l.fw..(gi + 1) * ocg * icg * l.fh * l.fw];
+        let bg = &b[gi * ocg..(gi + 1) * ocg];
+        let og = conv2d(xg, wg, bg, &lg, mode, gate_bits);
+        out[gi * ocg * ohw..(gi + 1) * ocg * ohw].copy_from_slice(&og);
+    }
+    out
+}
+
+/// Max pooling (ic, ih, iw) -> (ic, oh, ow), no padding.
+pub fn maxpool2d(x: &[i16], ic: usize, ih: usize, iw: usize, size: usize, stride: usize) -> Vec<i16> {
+    let oh = (ih - size) / stride + 1;
+    let ow = (iw - size) / stride + 1;
+    let mut out = vec![0i16; ic * oh * ow];
+    for c in 0..ic {
+        for y in 0..oh {
+            for xx in 0..ow {
+                let mut m = i16::MIN;
+                for fy in 0..size {
+                    for fx in 0..size {
+                        m = m.max(x[(c * ih + y * stride + fy) * iw + xx * stride + fx]);
+                    }
+                }
+                out[(c * oh + y) * ow + xx] = m;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    fn tiny_layer() -> ConvLayer {
+        ConvLayer::new("t", 2, 5, 5, 4, 3, 3, 1, 1, 1)
+    }
+
+    #[test]
+    fn identity_filter_passthrough() {
+        // 1x1 filter of 1<<shift acts as identity (with relu off)
+        let mut l = ConvLayer::new("id", 1, 4, 4, 1, 1, 1, 1, 0, 1);
+        l.relu = false;
+        let x: Vec<i16> = (0..16).map(|i| i as i16 - 8).collect();
+        let w = vec![1i16 << l.frac_shift];
+        let b = vec![0i32];
+        let out = conv2d(&x, &w, &b, &l, RoundMode::HalfUp, 16);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn bias_only() {
+        let mut l = tiny_layer();
+        l.relu = false;
+        let x = vec![0i16; 2 * 5 * 5];
+        let w = vec![0i16; 4 * 2 * 9];
+        let b = vec![-3, 0, 7, 100];
+        let out = conv2d(&x, &w, &b, &l, RoundMode::HalfUp, 16);
+        for o in 0..4 {
+            assert!(out[o * 25..(o + 1) * 25].iter().all(|&v| v as i32 == b[o]));
+        }
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let l = tiny_layer(); // relu on
+        let x = vec![0i16; 2 * 5 * 5];
+        let w = vec![0i16; 4 * 2 * 9];
+        let b = vec![-3, 5, -1, 2];
+        let out = conv2d(&x, &w, &b, &l, RoundMode::HalfUp, 16);
+        assert!(out[0..25].iter().all(|&v| v == 0));
+        assert!(out[25..50].iter().all(|&v| v == 5));
+    }
+
+    #[test]
+    fn grouped_equals_manual_split() {
+        let mut rng = XorShift::new(5);
+        let l = ConvLayer::new("g", 4, 6, 6, 8, 3, 3, 1, 1, 2);
+        let x = rng.i16_vec(4 * 36, -500, 500);
+        let w = rng.i16_vec(8 * 2 * 9, -100, 100);
+        let b = rng.i32_vec(8, -50, 50);
+        let out = conv2d_grouped(&x, &w, &b, &l, RoundMode::HalfUp, 16);
+        assert_eq!(out.len(), 8 * 36);
+        // group 1 output must not depend on group 0 input
+        let mut x2 = x.clone();
+        for v in &mut x2[0..2 * 36] {
+            *v = v.wrapping_add(17);
+        }
+        let out2 = conv2d_grouped(&x2, &w, &b, &l, RoundMode::HalfUp, 16);
+        assert_eq!(out[4 * 36..], out2[4 * 36..]);
+        assert_ne!(out[..4 * 36], out2[..4 * 36]);
+    }
+
+    #[test]
+    fn maxpool_basic() {
+        let x: Vec<i16> = (0..16).collect();
+        let out = maxpool2d(&x, 1, 4, 4, 2, 2);
+        assert_eq!(out, vec![5, 7, 13, 15]);
+        // overlapping 3x3 s2 on 5x5
+        let x2: Vec<i16> = (0..25).collect();
+        let out2 = maxpool2d(&x2, 1, 5, 5, 3, 2);
+        assert_eq!(out2, vec![12, 14, 22, 24]);
+    }
+}

@@ -1,0 +1,232 @@
+//! Data staging: host tensors ⇄ the DM layouts the generated kernels
+//! expect. Used by the coordinator (and tests) around each task run.
+//!
+//! Layouts (see `conv.rs`):
+//!
+//! * **filter stream**: one 16-lane vector per (ic_local, fy, fx) in
+//!   consumption order; lanes = output channels of the tile (variant A:
+//!   16, variant B: 12 + 4 zero lanes). 2 slack vectors at the end
+//!   absorb the FIFO prefetch over-read.
+//! * **bias vector**: 32 B directly below the filter stream.
+//! * **input band**: `[ic_local][row_local][iwp_stage pixels]`, rows
+//!   pre-padded (zero padding baked in), `ic_stride` fixed to the plan.
+//! * **output row buffer**: variant A — pixel-major 16-OCh vectors;
+//!   variant B — OCh-major 16-pixel row chunks.
+//! * **psum row buffer**: per group, 12 accumulator entries of 64 B
+//!   (lanes-low 32 B then lanes-high 32 B, as `StA` writes them).
+
+use crate::isa::LANES;
+use crate::mem::dm::DataMem;
+use crate::model::ConvLayer;
+
+use super::layout::{ConvPlan, Variant};
+
+/// Zero-pad a dense input tensor (ic, ih, iw) -> (ic, ihp, iwp).
+pub fn pad_input(l: &ConvLayer, x: &[i16]) -> Vec<i16> {
+    assert_eq!(x.len(), l.ic * l.ih * l.iw);
+    let (ihp, iwp) = (l.ihp(), l.iwp());
+    let mut xp = vec![0i16; l.ic * ihp * iwp];
+    for c in 0..l.ic {
+        for y in 0..l.ih {
+            let src = (c * l.ih + y) * l.iw;
+            let dst = (c * ihp + y + l.pad) * iwp + l.pad;
+            xp[dst..dst + l.iw].copy_from_slice(&x[src..src + l.iw]);
+        }
+    }
+    xp
+}
+
+/// Build the filter stream for (tile, slice mi): returns lane-major i16
+/// words, `(slice_ics*fh*fw + 2) * 16` of them.
+pub fn filter_stream(plan: &ConvPlan, w: &[i16], tile: usize, mi: usize) -> Vec<i16> {
+    let l = &plan.layer;
+    let ocs = plan.variant.ocs();
+    let slice_ics = plan.slice_ics(mi);
+    let ic0 = mi * plan.ics;
+    let mut out = Vec::with_capacity((slice_ics * l.fh * l.fw + 2) * LANES);
+    for icl in 0..slice_ics {
+        let ic = ic0 + icl;
+        for fy in 0..l.fh {
+            for fx in 0..l.fw {
+                for lane in 0..LANES {
+                    let oc = tile * ocs + lane;
+                    let v = if lane < ocs && oc < l.oc {
+                        w[((oc * l.ic + ic) * l.fh + fy) * l.fw + fx]
+                    } else {
+                        0
+                    };
+                    out.push(v);
+                }
+            }
+        }
+    }
+    // FIFO over-read slack
+    out.extend(std::iter::repeat(0).take(2 * LANES));
+    out
+}
+
+/// Bias vector for a tile (biases must fit i16 — the InitA datapath
+/// shifts a 16-bit lane; asserted here).
+pub fn bias_vector(plan: &ConvPlan, b: &[i32], tile: usize) -> [i16; LANES] {
+    let l = &plan.layer;
+    let ocs = plan.variant.ocs();
+    std::array::from_fn(|lane| {
+        let oc = tile * ocs + lane;
+        if lane < ocs && oc < l.oc {
+            let v = b[oc];
+            assert!(
+                (i16::MIN as i32..=i16::MAX as i32).contains(&v),
+                "bias {v} exceeds the 16-bit InitA datapath"
+            );
+            v as i16
+        } else {
+            0
+        }
+    })
+}
+
+/// Stage the input band for slice `mi`, band starting at output row
+/// `oh0`. Returns `[ic_local][row_local][iwp_stage]` pixels, using the
+/// plan's fixed `ic_stride` (zero-filled outside the padded map).
+pub fn input_band(plan: &ConvPlan, xp: &[i16], mi: usize, oh0: usize) -> Vec<i16> {
+    let l = &plan.layer;
+    let (ihp, iwp) = (l.ihp(), l.iwp());
+    let slice_ics = plan.slice_ics(mi);
+    let ic0 = mi * plan.ics;
+    let y0 = oh0 * l.stride;
+    let mut out = vec![0i16; slice_ics * plan.in_rows_band * plan.iwp_stage];
+    for icl in 0..slice_ics {
+        for r in 0..plan.in_rows_band {
+            let y = y0 + r;
+            if y >= ihp {
+                continue;
+            }
+            let src = ((ic0 + icl) * ihp + y) * iwp;
+            let dst = (icl * plan.in_rows_band + r) * plan.iwp_stage;
+            let n = iwp.min(plan.iwp_stage);
+            out[dst..dst + n].copy_from_slice(&xp[src..src + n]);
+        }
+    }
+    out
+}
+
+/// Write staged words into DM at `base` (untimed; DMA timing is modeled
+/// analytically by the coordinator).
+pub fn poke(dm: &mut DataMem, base: usize, words: &[i16]) {
+    dm.poke_i16_slice(base, words);
+}
+
+/// Read one output row back from the row buffer: logical `[oc_local][ow]`.
+pub fn read_out_row(plan: &ConvPlan, dm: &DataMem, ow: usize) -> Vec<i16> {
+    let ocs = plan.variant.ocs();
+    let base = plan.dm.out;
+    let mut out = vec![0i16; ocs * ow];
+    match plan.variant {
+        Variant::A => {
+            // pixel-major vectors of 16 OCh
+            for p in 0..ow {
+                let v = dm.peek_i16_slice(base + p * 32, LANES);
+                for (oc, val) in v.iter().enumerate().take(ocs) {
+                    out[oc * ow + p] = *val;
+                }
+            }
+        }
+        Variant::B => {
+            let owp = plan.g * 16;
+            for oc in 0..ocs {
+                let row = dm.peek_i16_slice(base + oc * owp * 2, ow);
+                out[oc * ow..(oc + 1) * ow].copy_from_slice(&row);
+            }
+        }
+    }
+    out
+}
+
+/// Read the psum row buffer (raw accumulators) — `[group][entry12][lane16]`
+/// as i32, in the exact `StA` image (lo/hi split resolved).
+pub fn read_psum_row(plan: &ConvPlan, dm: &DataMem) -> Vec<i32> {
+    let base = plan.dm.psum;
+    let n = plan.g * 12;
+    let mut out = vec![0i32; n * LANES];
+    for e in 0..n {
+        for lane in 0..LANES {
+            let lo = dm.peek_i16(base + e * 64 + 2 * lane) as u16 as i32;
+            let hi = dm.peek_i16(base + e * 64 + 32 + 2 * lane) as i32;
+            out[e * LANES + lane] = lo | (hi << 16);
+        }
+    }
+    out
+}
+
+/// Write a psum row buffer back (the `LdA` image).
+pub fn write_psum_row(plan: &ConvPlan, dm: &mut DataMem, psums: &[i32]) {
+    let base = plan.dm.psum;
+    let n = plan.g * 12;
+    assert_eq!(psums.len(), n * LANES);
+    for e in 0..n {
+        for lane in 0..LANES {
+            let v = psums[e * LANES + lane];
+            dm.poke_i16(base + e * 64 + 2 * lane, v as i16);
+            dm.poke_i16(base + e * 64 + 32 + 2 * lane, (v >> 16) as i16);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::layout::plan;
+    use super::*;
+    use crate::model::ConvLayer;
+    use crate::util::XorShift;
+
+    fn small() -> ConvLayer {
+        ConvLayer::new("s", 4, 8, 8, 16, 3, 3, 1, 1, 1)
+    }
+
+    #[test]
+    fn pad_input_centers() {
+        let l = small();
+        let x: Vec<i16> = (0..l.ic * 64).map(|i| i as i16).collect();
+        let xp = pad_input(&l, &x);
+        assert_eq!(xp.len(), 4 * 10 * 10);
+        assert_eq!(xp[0], 0); // corner pad
+        assert_eq!(xp[(0 * 10 + 1) * 10 + 1], x[0]);
+    }
+
+    #[test]
+    fn filter_stream_order_and_padding() {
+        let l = small();
+        let p = plan(&l).unwrap();
+        let mut rng = XorShift::new(1);
+        let w = rng.i16_vec(16 * 4 * 9, -100, 100);
+        let fs = filter_stream(&p, &w, 0, 0);
+        assert_eq!(fs.len(), (4 * 9 + 2) * 16);
+        // first vector = (ic0, fy0, fx0) over oc lanes
+        let ocs = p.variant.ocs();
+        for lane in 0..ocs.min(16) {
+            assert_eq!(fs[lane], w[lane * 4 * 9]);
+        }
+        // slack vectors are zero
+        assert!(fs[fs.len() - 32..].iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn psum_roundtrip() {
+        let l = small();
+        let p = plan(&l).unwrap();
+        let mut dm = DataMem::new();
+        let mut rng = XorShift::new(2);
+        let vals = rng.i32_vec(p.g * 12 * LANES, -1_000_000, 1_000_000);
+        write_psum_row(&p, &mut dm, &vals);
+        assert_eq!(read_psum_row(&p, &dm), vals);
+    }
+
+    #[test]
+    #[should_panic(expected = "bias")]
+    fn oversize_bias_rejected() {
+        let l = small();
+        let p = plan(&l).unwrap();
+        let b = vec![1 << 20; 16];
+        bias_vector(&p, &b, 0);
+    }
+}

@@ -1,0 +1,564 @@
+//! Layer executor: Fig. 2 scheduling of conv/pool layers onto the core.
+
+use std::collections::HashMap;
+
+use crate::codegen::conv::{build_conv_task, TaskFlavor};
+use crate::codegen::layout::{self, ConvPlan, LoopOrder, Variant};
+use crate::codegen::pool::{build_pool_task, plan_pool};
+use crate::codegen::stage;
+use crate::core::{CoreStats, Cpu, SimError};
+use crate::isa::SReg;
+use crate::mem::{EXT_BYTES_PER_CYCLE, EXT_LATENCY_CYCLES};
+use crate::model::{ConvLayer, PoolLayer};
+
+use super::metrics::{add_stats, div_stats, scale_stats, LayerResult, NetworkResult};
+
+/// Execution mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Cycle-simulate every task; outputs are produced and exact.
+    FullCycle,
+    /// Cycle-simulate one task per distinct (flavor, slice size) and
+    /// compose analytically (row tasks are cycle-identical by
+    /// construction). ~1000× faster; no outputs. Validated against
+    /// FullCycle by tests and `benches/ablation`.
+    TileAnalytic,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct ExecOptions {
+    pub mode: ExecMode,
+    /// Precision gating (16 = off, 8 = the paper's gated AlexNet run).
+    pub gate_bits: u8,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        Self { mode: ExecMode::FullCycle, gate_bits: 16 }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ExecError {
+    #[error("codegen: {0}")]
+    Codegen(#[from] crate::codegen::CodegenError),
+    #[error("sim: {0}")]
+    Sim(#[from] SimError),
+}
+
+/// Analytic DMA time for moving `bytes` with `requests` descriptors.
+fn dma_cycles(bytes: u64, requests: u64) -> u64 {
+    bytes / EXT_BYTES_PER_CYCLE as u64 + requests * EXT_LATENCY_CYCLES
+}
+
+/// Run a (possibly grouped) conv layer. `x`: (ic, ih, iw), `w`:
+/// (oc, ic/groups, fh, fw), `b`: (oc,). Returns metrics and (in
+/// FullCycle mode) the output tensor (oc, oh, ow).
+pub fn run_conv_layer(
+    cpu: &mut Cpu,
+    layer: &ConvLayer,
+    x: &[i16],
+    w: &[i16],
+    b: &[i32],
+    opts: ExecOptions,
+) -> Result<LayerResult, ExecError> {
+    let g = layer.groups;
+    if g == 1 {
+        return run_dense(cpu, layer, x, w, b, opts);
+    }
+    let lg = layer.per_group();
+    let (icg, ocg) = (lg.ic, lg.oc);
+    let ohw = layer.oh() * layer.ow();
+    let mut total = LayerResult { name: layer.name.to_string(), ..Default::default() };
+    let mut out = vec![0i16; layer.oc * ohw];
+    for gi in 0..g {
+        let xg = &x[gi * icg * layer.ih * layer.iw..(gi + 1) * icg * layer.ih * layer.iw];
+        let wg = &w[gi * ocg * icg * layer.fh * layer.fw..(gi + 1) * ocg * icg * layer.fh * layer.fw];
+        let bg = &b[gi * ocg..(gi + 1) * ocg];
+        let r = run_dense(cpu, &lg, xg, wg, bg, opts)?;
+        if !r.out.is_empty() {
+            out[gi * ocg * ohw..(gi + 1) * ocg * ohw].copy_from_slice(&r.out);
+        }
+        total.cycles += r.cycles;
+        total.compute_cycles += r.compute_cycles;
+        total.dma_cycles += r.dma_cycles;
+        total.macs += r.macs;
+        total.io_in += r.io_in;
+        total.io_out += r.io_out;
+        total.stats = add_stats(&total.stats, &r.stats);
+    }
+    if opts.mode == ExecMode::FullCycle {
+        total.out = out;
+    }
+    Ok(total)
+}
+
+fn run_dense(
+    cpu: &mut Cpu,
+    layer: &ConvLayer,
+    x: &[i16],
+    w: &[i16],
+    b: &[i32],
+    opts: ExecOptions,
+) -> Result<LayerResult, ExecError> {
+    let plan = layout::plan(layer)?;
+    let xp = stage::pad_input(layer, x);
+    let (oh, ow) = (layer.oh(), layer.ow());
+    let ocs = plan.variant.ocs();
+
+    // gate-bits override: patch the CSR after program setup by setting
+    // it in the Cpu directly before each run (the program writes
+    // frac_shift/lb_stride; gate_bits persists).
+    cpu.csr.gate_bits = opts.gate_bits;
+
+    // task programs per (slice_ics, flavor)
+    let mut programs: HashMap<(usize, bool, bool), crate::mem::pm::ProgramMem> = HashMap::new();
+    for mi in 0..plan.m {
+        let f = flavor_of(mi, plan.m);
+        let key = (plan.slice_ics(mi), f.first_slice, f.last_slice);
+        if !programs.contains_key(&key) {
+            programs.insert(key, build_conv_task(&plan, key.0, f)?);
+        }
+    }
+
+    let mut res = LayerResult {
+        name: layer.name.to_string(),
+        macs: layer.macs(),
+        ..Default::default()
+    };
+    let mut out = vec![0i16; layer.oc * oh * ow];
+    // PSum shadow (host side) per (tile, row) — the off-chip buffer of
+    // Fig. 2 step 2 when M > 1.
+    let mut psum: Vec<Vec<i32>> = Vec::new();
+    if plan.m > 1 {
+        psum = vec![Vec::new(); plan.n_tiles * oh];
+    }
+
+    // analytic cache: (slice_ics, first, last) -> sampled rows (count,
+    // total cycles, accumulated stats). Rows are cycle-identical modulo
+    // DM bank-conflict noise, so a 4-row sample mean is within ~1 %.
+    let mut analytic: HashMap<(usize, bool, bool), (u64, u64, CoreStats)> = HashMap::new();
+    const ANALYTIC_SAMPLES: u64 = 4;
+
+    // I/O accounting per plan.loop_order (DESIGN.md §6 ablation).
+    // Ring accounting: within one streaming pass over a slice, band
+    // overlap rows stay in the DM ring — only *new* rows are fetched.
+    let filt_bytes =
+        |mi: usize| ((plan.slice_ics(mi) * layer.fh * layer.fw + 2) * 32 + 32) as u64;
+    let band_in_bytes = |mi: usize, bi: usize| -> u64 {
+        let rows = if bi == 0 {
+            plan.in_rows_band
+        } else {
+            (plan.band_rows_of(bi) * layer.stride).min(plan.in_rows_band)
+        };
+        (plan.slice_ics(mi) * rows * plan.row_bytes) as u64
+    };
+    let out_row_bytes = match plan.variant {
+        Variant::A => (ow * 32) as u64,
+        Variant::B => (ow * 2 * ocs) as u64,
+    };
+    let psum_row_bytes = (plan.g * 12 * 64) as u64;
+
+    let band_outer = plan.loop_order == LoopOrder::BandOuter;
+
+    let run_row =
+        |cpu: &mut Cpu,
+         res: &mut LayerResult,
+         analytic: &mut HashMap<(usize, bool, bool), (u64, u64, CoreStats)>,
+         psum: &mut Vec<Vec<i32>>,
+         out: &mut Vec<i16>,
+         tile: usize,
+         mi: usize,
+         oh_local: usize,
+         oh_abs: usize|
+         -> Result<(), ExecError> {
+            let f = flavor_of(mi, plan.m);
+            let key = (plan.slice_ics(mi), f.first_slice, f.last_slice);
+            // psum I/O + staging (values only matter in FullCycle mode)
+            if plan.m > 1 && !f.first_slice {
+                if opts.mode == ExecMode::FullCycle {
+                    let pv = &psum[tile * oh + oh_abs];
+                    stage::write_psum_row(&plan, &mut cpu.mem.dm, pv);
+                }
+                res.io_in += psum_row_bytes;
+            }
+            let analytic_hit = opts.mode == ExecMode::TileAnalytic
+                && analytic.get(&key).is_some_and(|(n, _, _)| *n >= ANALYTIC_SAMPLES);
+            if !analytic_hit {
+                // ABI registers
+                cpu.regs.set_r(SReg(2), (plan.dm.input + oh_local * layer.stride * plan.row_bytes) as i32);
+                cpu.regs.set_r(SReg(4), plan.dm.out as i32);
+                cpu.regs.set_r(SReg(5), plan.dm.psum as i32);
+                cpu.regs.set_r(SReg(6), plan.dm.filt as i32);
+                let pm = &programs[&key];
+                let stats = cpu.run(pm)?;
+                cpu.csr.gate_bits = opts.gate_bits; // program may not touch it
+                res.compute_cycles += stats.cycles;
+                if opts.mode == ExecMode::TileAnalytic {
+                    let e = analytic.entry(key).or_insert((0, 0, CoreStats::default()));
+                    e.0 += 1;
+                    e.1 += stats.cycles;
+                    e.2 = add_stats(&e.2, &stats);
+                }
+                res.stats = add_stats(&res.stats, &stats);
+            } else {
+                let (n, cyc, stats) = &analytic[&key];
+                res.compute_cycles += cyc / n;
+                res.stats = add_stats(&res.stats, &scale_stats(&div_stats(stats, *n), 1));
+            }
+            // collect outputs / psums
+            if opts.mode == ExecMode::FullCycle {
+                if f.last_slice {
+                    let row = stage::read_out_row(&plan, &cpu.mem.dm, ow);
+                    for ocl in 0..ocs {
+                        let oc = tile * ocs + ocl;
+                        if oc < layer.oc {
+                            out[(oc * oh + oh_abs) * ow..(oc * oh + oh_abs) * ow + ow]
+                                .copy_from_slice(&row[ocl * ow..(ocl + 1) * ow]);
+                        }
+                    }
+                } else {
+                    psum[tile * oh + oh_abs] = stage::read_psum_row(&plan, &cpu.mem.dm);
+                }
+            }
+            if plan.m > 1 && !f.last_slice {
+                res.io_out += psum_row_bytes;
+            }
+            if f.last_slice {
+                res.io_out += out_row_bytes;
+            }
+            Ok(())
+        };
+
+    if band_outer {
+        // input streamed once per slice; filters re-loaded per band
+        for mi in 0..plan.m {
+            for bi in 0..plan.n_bands {
+                let oh0 = bi * plan.band_rows;
+                let band = stage::input_band(&plan, &xp, mi, oh0);
+                stage::poke(&mut cpu.mem.dm, plan.dm.input, &band);
+                res.io_in += band_in_bytes(mi, bi);
+                for tile in 0..plan.n_tiles {
+                    stage_filters(cpu, &plan, w, b, tile, mi);
+                    res.io_in += filt_bytes(mi);
+                    for r in 0..plan.band_rows_of(bi) {
+                        run_row(cpu, &mut res, &mut analytic, &mut psum, &mut out, tile, mi, r, oh0 + r)?;
+                    }
+                }
+            }
+        }
+    } else {
+        // filters loaded once per (tile, slice); input re-streamed per tile
+        for tile in 0..plan.n_tiles {
+            for mi in 0..plan.m {
+                stage_filters(cpu, &plan, w, b, tile, mi);
+                res.io_in += filt_bytes(mi);
+                for bi in 0..plan.n_bands {
+                    let oh0 = bi * plan.band_rows;
+                    let band = stage::input_band(&plan, &xp, mi, oh0);
+                    stage::poke(&mut cpu.mem.dm, plan.dm.input, &band);
+                    res.io_in += band_in_bytes(mi, bi);
+                    for r in 0..plan.band_rows_of(bi) {
+                        run_row(cpu, &mut res, &mut analytic, &mut psum, &mut out, tile, mi, r, oh0 + r)?;
+                    }
+                }
+            }
+        }
+    }
+
+    // Precision-gated off-chip transfers are packed: at <=8 effective
+    // bits, tensors move at 1 byte/element (Table II footnote: values
+    // are reported "with optimized word width").
+    if opts.gate_bits <= 8 {
+        res.io_in /= 2;
+        res.io_out /= 2;
+    }
+    // DMA overlap: one double-buffered stream alongside compute.
+    let reqs = (plan.n_tiles * plan.m * plan.n_bands) as u64 + plan.n_tiles as u64;
+    res.dma_cycles = dma_cycles(res.io_in + res.io_out, reqs);
+    res.cycles = res.compute_cycles.max(res.dma_cycles);
+    if opts.mode == ExecMode::FullCycle {
+        res.out = out;
+    }
+    Ok(res)
+}
+
+fn flavor_of(mi: usize, m: usize) -> TaskFlavor {
+    TaskFlavor { first_slice: mi == 0, last_slice: mi + 1 == m }
+}
+
+fn stage_filters(cpu: &mut Cpu, plan: &ConvPlan, w: &[i16], b: &[i32], tile: usize, mi: usize) {
+    let bias = stage::bias_vector(plan, b, tile);
+    stage::poke(&mut cpu.mem.dm, plan.dm.bias, &bias);
+    let fs = stage::filter_stream(plan, w, tile, mi);
+    stage::poke(&mut cpu.mem.dm, plan.dm.filt, &fs);
+}
+
+/// Run a max-pool layer. Input `x`: (ic, ih, iw). Output (ic, oh, ow).
+pub fn run_pool_layer(
+    cpu: &mut Cpu,
+    layer: &PoolLayer,
+    x: &[i16],
+    opts: ExecOptions,
+) -> Result<LayerResult, ExecError> {
+    let one_row = PoolLayer { ih: layer.size, ..layer.clone() };
+    let plan = plan_pool(&one_row)?;
+    let pm = build_pool_task(&plan)?;
+    let (oh, ow) = (layer.oh(), layer.ow());
+    let mut res = LayerResult { name: layer.name.to_string(), ..Default::default() };
+    let mut out = vec![0i16; layer.ic * oh * ow];
+    let n_tiles = layer.ic.div_ceil(16);
+    let mut analytic: Option<(u64, CoreStats)> = None;
+
+    for tile in 0..n_tiles {
+        for oy in 0..oh {
+            if opts.mode == ExecMode::TileAnalytic {
+                if let Some((cyc, stats)) = &analytic {
+                    res.compute_cycles += cyc;
+                    res.stats = add_stats(&res.stats, stats);
+                    continue;
+                }
+            }
+            // stage `size` input rows as pixel-major 16-ch vectors
+            for r in 0..layer.size {
+                let y = oy * layer.stride + r;
+                for px in 0..layer.iw {
+                    let v: Vec<i16> = (0..16)
+                        .map(|cl| {
+                            let c = tile * 16 + cl;
+                            if c < layer.ic {
+                                x[(c * layer.ih + y) * layer.iw + px]
+                            } else {
+                                0
+                            }
+                        })
+                        .collect();
+                    cpu.mem
+                        .dm
+                        .poke_i16_slice(plan.dm_input + r * plan.in_row_bytes + px * 32, &v);
+                }
+            }
+            cpu.regs.set_r(SReg(2), plan.dm_input as i32);
+            cpu.regs.set_r(SReg(4), plan.dm_out as i32);
+            let stats = cpu.run(&pm)?;
+            res.compute_cycles += stats.cycles;
+            if opts.mode == ExecMode::TileAnalytic {
+                analytic = Some((stats.cycles, stats.clone()));
+            }
+            res.stats = add_stats(&res.stats, &stats);
+            if opts.mode == ExecMode::FullCycle {
+                for px in 0..ow {
+                    let v = cpu.mem.dm.peek_i16_slice(plan.dm_out + px * 32, 16);
+                    for cl in 0..16 {
+                        let c = tile * 16 + cl;
+                        if c < layer.ic {
+                            out[(c * oh + oy) * ow + px] = v[cl];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // I/O: rows in (with window overlap), rows out
+    res.io_in = (n_tiles * oh * layer.size * layer.iw * 32) as u64;
+    res.io_out = (n_tiles * oh * ow * 32) as u64;
+    res.dma_cycles = dma_cycles(res.io_in + res.io_out, (n_tiles * oh) as u64);
+    res.cycles = res.compute_cycles.max(res.dma_cycles);
+    if opts.mode == ExecMode::FullCycle {
+        res.out = out;
+    }
+    Ok(res)
+}
+
+/// A network layer for `run_network`.
+pub enum NetLayer {
+    Conv(ConvLayer),
+    Pool(PoolLayer),
+}
+
+/// Run a sequence of layers, threading activations; weights/biases are
+/// generated deterministically (xorshift) per layer. Returns per-layer
+/// results. In analytic mode activations are not threaded (zeros).
+pub fn run_network(
+    cpu: &mut Cpu,
+    name: &str,
+    layers: &[NetLayer],
+    input: &[i16],
+    opts: ExecOptions,
+    seed: u64,
+) -> Result<NetworkResult, ExecError> {
+    let mut rng = crate::util::XorShift::new(seed);
+    let mut act = input.to_vec();
+    let mut net = NetworkResult { name: name.into(), ..Default::default() };
+    for layer in layers {
+        match layer {
+            NetLayer::Conv(l) => {
+                let w = rng.i16_vec(l.oc * (l.ic / l.groups) * l.fh * l.fw, -128, 128);
+                let b = rng.i32_vec(l.oc, -1000, 1000);
+                let x = if act.len() == l.ic * l.ih * l.iw {
+                    act.clone()
+                } else {
+                    vec![0i16; l.ic * l.ih * l.iw]
+                };
+                let r = run_conv_layer(cpu, l, &x, &w, &b, opts)?;
+                if !r.out.is_empty() {
+                    act = r.out.clone();
+                }
+                net.layers.push(r);
+            }
+            NetLayer::Pool(l) => {
+                let x = if act.len() == l.ic * l.ih * l.iw {
+                    act.clone()
+                } else {
+                    vec![0i16; l.ic * l.ih * l.iw]
+                };
+                let r = run_pool_layer(cpu, l, &x, opts)?;
+                if !r.out.is_empty() {
+                    act = r.out.clone();
+                }
+                net.layers.push(r);
+            }
+        }
+    }
+    Ok(net)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::refconv;
+    use crate::fixed::RoundMode;
+    use crate::util::XorShift;
+
+    fn check_layer(l: &ConvLayer, seed: u64) {
+        let mut rng = XorShift::new(seed);
+        let x = rng.i16_vec(l.ic * l.ih * l.iw, -2000, 2000);
+        let w = rng.i16_vec(l.oc * (l.ic / l.groups) * l.fh * l.fw, -256, 256);
+        let b = rng.i32_vec(l.oc, -2000, 2000);
+        let mut cpu = Cpu::new(1 << 20);
+        let r = run_conv_layer(&mut cpu, l, &x, &w, &b, ExecOptions::default()).unwrap();
+        let expect = refconv::conv2d_grouped(&x, &w, &b, l, RoundMode::HalfUp, 16);
+        assert_eq!(r.out.len(), expect.len(), "{}", l.name);
+        for (i, (got, want)) in r.out.iter().zip(&expect).enumerate() {
+            assert_eq!(got, want, "{}: idx {i}", l.name);
+        }
+        assert!(r.utilization() > 0.1, "{}: util {}", l.name, r.utilization());
+    }
+
+    #[test]
+    fn small_conv_variant_a_matches_reference() {
+        // ow=24 -> G=2 full groups under variant A
+        let l = ConvLayer::new("va", 4, 24, 24, 16, 3, 3, 1, 1, 1);
+        let p = layout::plan(&l).unwrap();
+        assert_eq!(p.variant, Variant::A);
+        check_layer(&l, 1);
+    }
+
+    #[test]
+    fn small_conv_variant_b_matches_reference() {
+        // small ow + many oc -> variant B
+        let l = ConvLayer::new("vb", 8, 13, 13, 48, 3, 3, 1, 1, 1);
+        let p = layout::plan(&l).unwrap();
+        assert_eq!(p.variant, Variant::B);
+        check_layer(&l, 2);
+    }
+
+    #[test]
+    fn strided_conv_matches_reference() {
+        let l = ConvLayer::new("s2", 3, 23, 23, 16, 5, 5, 2, 2, 1);
+        check_layer(&l, 3);
+    }
+
+    #[test]
+    fn conv1_like_unfused_rows() {
+        // stride 4, 11x11: per-fy line loads
+        let l = ConvLayer::new("c1", 3, 43, 43, 16, 11, 11, 4, 0, 1);
+        let p = layout::plan(&l).unwrap();
+        assert!(!p.fused_rows);
+        check_layer(&l, 4);
+    }
+
+    #[test]
+    fn grouped_conv_matches_reference() {
+        let l = ConvLayer::new("grp", 8, 13, 13, 32, 3, 3, 1, 1, 2);
+        check_layer(&l, 5);
+    }
+
+    #[test]
+    fn multi_slice_psum_path_matches_reference() {
+        // force M > 1 by exceeding the DM filter budget: ic large
+        let l = ConvLayer::new("ms", 768, 6, 6, 16, 3, 3, 1, 1, 1);
+        let p = layout::plan(&l).unwrap();
+        assert!(p.m > 1, "expected multiple slices, got m={}", p.m);
+        check_layer(&l, 6);
+    }
+
+    #[test]
+    fn odd_ic_tail_matches_reference() {
+        let l = ConvLayer::new("odd", 5, 10, 10, 16, 3, 3, 1, 1, 1);
+        check_layer(&l, 7);
+    }
+
+    #[test]
+    fn non_multiple_oc_padding() {
+        let l = ConvLayer::new("ocp", 4, 10, 10, 24, 3, 3, 1, 0, 1);
+        check_layer(&l, 8);
+    }
+
+    #[test]
+    fn relu_off_layer() {
+        let mut l = ConvLayer::new("nr", 4, 8, 8, 16, 3, 3, 1, 1, 1);
+        l.relu = false;
+        check_layer(&l, 9);
+    }
+
+    #[test]
+    fn analytic_matches_full_cycle_time() {
+        let l = ConvLayer::new("an", 8, 16, 16, 32, 3, 3, 1, 1, 1);
+        let mut rng = XorShift::new(10);
+        let x = rng.i16_vec(l.ic * l.ih * l.iw, -500, 500);
+        let w = rng.i16_vec(l.oc * l.ic * 9, -100, 100);
+        let b = rng.i32_vec(l.oc, -100, 100);
+        let mut cpu = Cpu::new(1 << 20);
+        let full = run_conv_layer(&mut cpu, &l, &x, &w, &b, ExecOptions::default()).unwrap();
+        let mut cpu2 = Cpu::new(1 << 20);
+        let fast = run_conv_layer(
+            &mut cpu2,
+            &l,
+            &x,
+            &w,
+            &b,
+            ExecOptions { mode: ExecMode::TileAnalytic, gate_bits: 16 },
+        )
+        .unwrap();
+        let err = (full.cycles as f64 - fast.cycles as f64).abs() / full.cycles as f64;
+        assert!(err < 0.01, "analytic vs full: {} vs {}", fast.cycles, full.cycles);
+        assert_eq!(full.io_total(), fast.io_total());
+    }
+
+    #[test]
+    fn pool_layer_matches_reference() {
+        let l = PoolLayer { name: "p", ic: 24, ih: 13, iw: 13, size: 3, stride: 2 };
+        let mut rng = XorShift::new(11);
+        let x = rng.i16_vec(l.ic * l.ih * l.iw, -30000, 30000);
+        let mut cpu = Cpu::new(1 << 20);
+        let r = run_pool_layer(&mut cpu, &l, &x, ExecOptions::default()).unwrap();
+        let expect = refconv::maxpool2d(&x, l.ic, l.ih, l.iw, l.size, l.stride);
+        assert_eq!(r.out, expect);
+    }
+
+    #[test]
+    fn gated_precision_changes_output() {
+        let l = ConvLayer::new("g8", 4, 10, 10, 16, 3, 3, 1, 1, 1);
+        let mut rng = XorShift::new(12);
+        let x = rng.i16_vec(l.ic * 100, -2000, 2000);
+        let w = rng.i16_vec(16 * 4 * 9, -256, 256);
+        let b = rng.i32_vec(16, -100, 100);
+        let mut cpu = Cpu::new(1 << 20);
+        let opts8 = ExecOptions { mode: ExecMode::FullCycle, gate_bits: 8 };
+        let r8 = run_conv_layer(&mut cpu, &l, &x, &w, &b, opts8).unwrap();
+        let expect = refconv::conv2d_grouped(&x, &w, &b, &l, RoundMode::HalfUp, 8);
+        assert_eq!(r8.out, expect);
+        assert!(r8.stats.mac_ops_gated8 > 0);
+    }
+}

@@ -1,0 +1,169 @@
+//! Metric aggregation: the quantities of Table II.
+
+use crate::core::CoreStats;
+
+/// Result of executing one layer.
+#[derive(Debug, Clone, Default)]
+pub struct LayerResult {
+    pub name: String,
+    /// Total cycles including DMA-bound segments (max(compute, dma)).
+    pub cycles: u64,
+    /// Pure compute cycles on the core.
+    pub compute_cycles: u64,
+    /// Analytic DMA transfer cycles (overlapped with compute).
+    pub dma_cycles: u64,
+    /// Useful MACs (the layer's arithmetic, not garbage lanes).
+    pub macs: u64,
+    /// Off-chip bytes read (weights, IFMaps, PSums back in).
+    pub io_in: u64,
+    /// Off-chip bytes written (OFMaps, PSum spills).
+    pub io_out: u64,
+    /// Aggregated core activity (for the energy model).
+    pub stats: CoreStats,
+    /// Layer output (empty in analytic mode).
+    pub out: Vec<i16>,
+}
+
+impl LayerResult {
+    /// MAC utilization per the paper's definition (Table II fn. e):
+    /// ideal processing time over actual.
+    pub fn utilization(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        let ideal = self.macs as f64 / crate::PEAK_MACS_PER_CYCLE as f64;
+        ideal / self.cycles as f64
+    }
+
+    pub fn time_ms(&self) -> f64 {
+        self.cycles as f64 / crate::CLOCK_HZ as f64 * 1e3
+    }
+
+    pub fn gops(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        2.0 * self.macs as f64 / (self.cycles as f64 / crate::CLOCK_HZ as f64) / 1e9
+    }
+
+    pub fn io_total(&self) -> u64 {
+        self.io_in + self.io_out
+    }
+}
+
+/// Whole-network aggregate.
+#[derive(Debug, Clone, Default)]
+pub struct NetworkResult {
+    pub name: String,
+    pub layers: Vec<LayerResult>,
+}
+
+impl NetworkResult {
+    pub fn cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.cycles).sum()
+    }
+    pub fn macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+    pub fn io_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.io_total()).sum()
+    }
+    pub fn io_mbytes(&self) -> f64 {
+        self.io_bytes() as f64 / 1e6
+    }
+    pub fn time_ms(&self) -> f64 {
+        self.cycles() as f64 / crate::CLOCK_HZ as f64 * 1e3
+    }
+    /// Network MAC utilization (conv layers carry all MACs).
+    pub fn utilization(&self) -> f64 {
+        let ideal = self.macs() as f64 / crate::PEAK_MACS_PER_CYCLE as f64;
+        let actual: u64 = self
+            .layers
+            .iter()
+            .filter(|l| l.macs > 0)
+            .map(|l| l.cycles)
+            .sum();
+        if actual == 0 {
+            0.0
+        } else {
+            ideal / actual as f64
+        }
+    }
+    pub fn gops(&self) -> f64 {
+        2.0 * self.macs() as f64 / (self.cycles() as f64 / crate::CLOCK_HZ as f64) / 1e9
+    }
+    /// Aggregate core stats over all layers.
+    pub fn stats(&self) -> CoreStats {
+        let mut acc = CoreStats::default();
+        for l in &self.layers {
+            acc = add_stats(&acc, &l.stats);
+        }
+        acc
+    }
+}
+
+pub(crate) fn add_stats(a: &CoreStats, b: &CoreStats) -> CoreStats {
+    macro_rules! s {
+        ($($f:ident),* $(,)?) => { CoreStats { $($f: a.$f + b.$f),* } };
+    }
+    s!(
+        cycles, bundles, mac_ops, mac_bundles, vmacs, qmovs, veops, sfu_ops,
+        acc_setup, scalar_ops, ctrl_ops, branch_stalls, hazard_stalls,
+        lb_stalls, dma_wait_stalls, wide_ls_stalls, vloads, vstores, aloads,
+        astores, sloads, sstores, lb_fills, lb_pixel_reads, vr_reads,
+        vr_writes, vrl_writes, mac_ops_gated8,
+    )
+}
+
+pub(crate) fn div_stats(a: &CoreStats, den: u64) -> CoreStats {
+    macro_rules! s {
+        ($($f:ident),* $(,)?) => { CoreStats { $($f: a.$f / den),* } };
+    }
+    s!(
+        cycles, bundles, mac_ops, mac_bundles, vmacs, qmovs, veops, sfu_ops,
+        acc_setup, scalar_ops, ctrl_ops, branch_stalls, hazard_stalls,
+        lb_stalls, dma_wait_stalls, wide_ls_stalls, vloads, vstores, aloads,
+        astores, sloads, sstores, lb_fills, lb_pixel_reads, vr_reads,
+        vr_writes, vrl_writes, mac_ops_gated8,
+    )
+}
+
+pub(crate) fn scale_stats(a: &CoreStats, num: u64) -> CoreStats {
+    macro_rules! s {
+        ($($f:ident),* $(,)?) => { CoreStats { $($f: a.$f * num),* } };
+    }
+    s!(
+        cycles, bundles, mac_ops, mac_bundles, vmacs, qmovs, veops, sfu_ops,
+        acc_setup, scalar_ops, ctrl_ops, branch_stalls, hazard_stalls,
+        lb_stalls, dma_wait_stalls, wide_ls_stalls, vloads, vstores, aloads,
+        astores, sloads, sstores, lb_fills, lb_pixel_reads, vr_reads,
+        vr_writes, vrl_writes, mac_ops_gated8,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_formula() {
+        let r = LayerResult {
+            macs: 192 * 1000,
+            cycles: 2000,
+            ..Default::default()
+        };
+        assert!((r.utilization() - 0.5).abs() < 1e-9);
+        assert!((r.gops() - crate::PEAK_GOPS * 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn network_aggregates() {
+        let mut n = NetworkResult { name: "n".into(), ..Default::default() };
+        n.layers.push(LayerResult { cycles: 100, macs: 192 * 100, io_in: 10, ..Default::default() });
+        n.layers.push(LayerResult { cycles: 100, macs: 0, io_out: 5, ..Default::default() });
+        assert_eq!(n.cycles(), 200);
+        assert_eq!(n.io_bytes(), 15);
+        // utilization counts only mac-carrying layers' cycles
+        assert!((n.utilization() - 1.0).abs() < 1e-9);
+    }
+}

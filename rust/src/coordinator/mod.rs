@@ -1,0 +1,17 @@
+//! The coordinator: schedules whole CNN layers onto the core, per the
+//! Fig. 2 dataflow — output-channel tiles × input-depth slices × row
+//! bands, with PSum spilling and double-buffered DMA streaming.
+//!
+//! The coordinator is the paper's "software" half: on the silicon ASIP
+//! this logic is compiled C code running in slot 0 between kernels; here
+//! it is host rust that (a) stages tensors into DM (untimed pokes — the
+//! transfer *time* is charged through the analytic DMA overlap model,
+//! and the *bytes* through the off-chip I/O counters), (b) presets the
+//! task ABI registers, (c) runs the generated kernels on the
+//! cycle-accurate core, and (d) aggregates metrics.
+
+pub mod executor;
+pub mod metrics;
+
+pub use executor::{run_conv_layer, run_network, run_pool_layer, ExecMode, ExecOptions};
+pub use metrics::{LayerResult, NetworkResult};

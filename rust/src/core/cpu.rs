@@ -1,0 +1,1455 @@
+//! The bundle-accurate ConvAix core interpreter.
+
+use crate::fixed::{self, RoundMode};
+use crate::isa::*;
+use crate::mem::dma::DmaDir;
+use crate::mem::linebuf::LB_ROWS;
+use crate::mem::pm::ProgramMem;
+use crate::mem::MemInterface;
+
+use super::regfile::{can_access_vrl, can_read_vr, can_write_vr, own_acc_base, RegFiles, Who};
+use super::{BRANCH_BUBBLES, LOAD_USE_LATENCY, MAC_TO_QMOV_LATENCY, QMOV_TO_READ_LATENCY};
+
+#[derive(Debug, thiserror::Error)]
+pub enum SimError {
+    #[error("cycle {cycle}, bundle {pc}: access violation: {what}")]
+    Access { cycle: u64, pc: usize, what: String },
+    #[error("cycle {cycle}, bundle {pc}: {what}")]
+    Fault { cycle: u64, pc: usize, what: String },
+    #[error("program ran past the last bundle without halt (pc={pc})")]
+    RanOff { pc: usize },
+    #[error("watchdog: exceeded {0} cycles")]
+    Watchdog(u64),
+    #[error("program memory: {0}")]
+    Pm(#[from] crate::mem::pm::PmError),
+}
+
+/// Datapath configuration registers (written by `Csrwi`/`Csrw`).
+#[derive(Debug, Clone)]
+pub struct CsrFile {
+    pub frac_shift: u8,
+    pub round_mode: RoundMode,
+    pub gate_bits: u8,
+    pub lb_stride: u8,
+}
+
+impl Default for CsrFile {
+    fn default() -> Self {
+        Self { frac_shift: 0, round_mode: RoundMode::HalfUp, gate_bits: 16, lb_stride: 1 }
+    }
+}
+
+/// Cycle and activity statistics — the inputs to the utilization metric
+/// (Table II) and the activity-based power model (Fig. 3c).
+#[derive(Debug, Default, Clone)]
+pub struct CoreStats {
+    pub cycles: u64,
+    pub bundles: u64,
+    /// MAC lane-operations actually executed (64 per vmac/vmul op).
+    pub mac_ops: u64,
+    /// Bundles that issued at least one vector MAC.
+    pub mac_bundles: u64,
+    /// Vector MAC/MUL instructions.
+    pub vmacs: u64,
+    /// Requantize ops.
+    pub qmovs: u64,
+    /// Elementwise / move / broadcast vector ops.
+    pub veops: u64,
+    /// SFU ops (relu / poolmax) — slot 1.
+    pub sfu_ops: u64,
+    /// InitA / ClrA accumulator setup ops.
+    pub acc_setup: u64,
+    /// Scalar ALU ops (incl. Li).
+    pub scalar_ops: u64,
+    /// Branches / jumps / loop instructions executed.
+    pub ctrl_ops: u64,
+    /// Taken-branch bubbles.
+    pub branch_stalls: u64,
+    /// Scoreboard (RAW) stall cycles.
+    pub hazard_stalls: u64,
+    /// Stalls waiting for a line-buffer fill.
+    pub lb_stalls: u64,
+    /// Stalls in DmaWait.
+    pub dma_wait_stalls: u64,
+    /// Extra slot-0 occupancy for 512-bit LdA/StA.
+    pub wide_ls_stalls: u64,
+    /// Vector loads / stores (256-bit DM port-0 accesses).
+    pub vloads: u64,
+    pub vstores: u64,
+    /// Accumulator loads/stores (512-bit).
+    pub aloads: u64,
+    pub astores: u64,
+    /// Scalar loads/stores.
+    pub sloads: u64,
+    pub sstores: u64,
+    /// Line-buffer fills started.
+    pub lb_fills: u64,
+    /// Line-buffer pixels consumed by MAC operands.
+    pub lb_pixel_reads: u64,
+    /// VR reads/writes by vector ops (energy accounting).
+    pub vr_reads: u64,
+    pub vr_writes: u64,
+    /// VRl accumulate writes (4 entries per vmac).
+    pub vrl_writes: u64,
+    /// Effective gate bits histogram: ops executed at <=8 bits.
+    pub mac_ops_gated8: u64,
+}
+
+impl CoreStats {
+    /// MAC utilization rate as defined in Table II footnote e: ratio of
+    /// ideal processing time (100 % MAC usage per cycle) to actual.
+    pub fn utilization(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.mac_ops as f64 / (self.cycles as f64 * crate::PEAK_MACS_PER_CYCLE as f64)
+    }
+}
+
+struct LoopFrame {
+    start: usize,
+    last: usize,
+    remaining: u32,
+}
+
+/// The core simulator: owns register state, CSRs, the memory interface
+/// and the decoded program.
+pub struct Cpu {
+    pub regs: RegFiles,
+    pub csr: CsrFile,
+    pub mem: MemInterface,
+    pub stats: CoreStats,
+    pc: usize,
+    halted: bool,
+    loops: Vec<LoopFrame>,
+    /// Scoreboard: cycle at which each VR / VRl entry / scalar reg is
+    /// ready for a consumer.
+    vr_ready: [u64; 16],
+    vrl_ready: [u64; 12],
+    r_ready: [u64; 32],
+    /// Filter FIFO of the operand fetch & prepare stage: (vector, cycle
+    /// at which it is usable). Depth 8.
+    filt_fifo: std::collections::VecDeque<([i16; LANES], u64)>,
+    /// Watchdog limit.
+    pub max_cycles: u64,
+}
+
+/// Filter FIFO depth.
+pub const FIFO_DEPTH: usize = 8;
+
+impl Cpu {
+    pub fn new(ext_capacity: usize) -> Self {
+        Self {
+            regs: RegFiles::new(),
+            csr: CsrFile::default(),
+            mem: MemInterface::new(ext_capacity),
+            stats: CoreStats::default(),
+            pc: 0,
+            halted: false,
+            loops: Vec::with_capacity(4),
+            vr_ready: [0; 16],
+            vrl_ready: [0; 12],
+            r_ready: [0; 32],
+            filt_fifo: std::collections::VecDeque::with_capacity(FIFO_DEPTH),
+            max_cycles: 10_000_000_000,
+        }
+    }
+
+    fn err_access(&self, what: impl Into<String>) -> SimError {
+        SimError::Access { cycle: self.stats.cycles, pc: self.pc, what: what.into() }
+    }
+
+    fn err_fault(&self, what: impl Into<String>) -> SimError {
+        SimError::Fault { cycle: self.stats.cycles, pc: self.pc, what: what.into() }
+    }
+
+    /// Advance one cycle of wall-clock (memory system ticks too).
+    /// Fast path: when no LB fill / DMA is in flight, the only per-cycle
+    /// memory bookkeeping is clearing the port-0 bank reservation.
+    #[inline(always)]
+    fn advance_cycle(&mut self) {
+        self.stats.cycles += 1;
+        if self.mem.background_idle() {
+            self.mem.dm.end_cycle();
+        } else {
+            self.mem.tick();
+        }
+    }
+
+    /// Reset per-run state, keeping memory contents (the coordinator
+    /// stages tensors between runs).
+    pub fn reset_for_run(&mut self) {
+        self.pc = 0;
+        self.halted = false;
+        self.loops.clear();
+        self.vr_ready = [0; 16];
+        self.vrl_ready = [0; 12];
+        self.r_ready = [0; 32];
+        self.filt_fifo.clear();
+    }
+
+    /// Run `program` to completion (Halt) and return per-run stats.
+    /// Cumulative stats accumulate in `self.stats`.
+    pub fn run(&mut self, pm: &ProgramMem) -> Result<CoreStats, SimError> {
+        let before = self.stats.clone();
+        self.reset_for_run();
+        let prog = pm.program();
+        while !self.halted {
+            if self.stats.cycles > self.max_cycles {
+                return Err(SimError::Watchdog(self.max_cycles));
+            }
+            if self.pc >= prog.bundles.len() {
+                return Err(SimError::RanOff { pc: self.pc });
+            }
+            self.step(prog)?;
+        }
+        // drain background engines so end-of-task time is honest
+        let drain = self.mem.drain();
+        self.stats.cycles += drain;
+        Ok(diff_stats(&before, &self.stats))
+    }
+
+    /// Execute the bundle at pc (with stalls), advance pc.
+    fn step(&mut self, prog: &Program) -> Result<(), SimError> {
+        let bundle = prog.bundles[self.pc];
+
+        // ---- hazard scan: how long must issue wait? --------------------
+        let stall = self.issue_stall(&bundle)?;
+        for _ in 0..stall {
+            self.stats.hazard_stalls += 1;
+            self.advance_cycle();
+        }
+
+        // ---- line-buffer interlock ------------------------------------
+        self.wait_lb_operands(&bundle)?;
+
+        // ---- execute the three vector slots ----------------------------
+        let mut any_mac = false;
+        let mut fifo_used = false;
+        for s in 1..=VALU_SLOTS as u8 {
+            let op = bundle.v[(s - 1) as usize];
+            any_mac |= matches!(op, VecOp::Mac { .. } | VecOp::Mul { .. });
+            fifo_used |= matches!(
+                op,
+                VecOp::Mac { b: BSrc::Fifo | BSrc::FifoLaneQuad { .. }, .. }
+                    | VecOp::Mul { b: BSrc::Fifo | BSrc::FifoLaneQuad { .. }, .. }
+            );
+            self.exec_vec(s, op)?;
+        }
+        if any_mac {
+            self.stats.mac_bundles += 1;
+        }
+        if fifo_used {
+            // one pop per bundle — all slots consumed the same front entry
+            self.filt_fifo.pop_front();
+        }
+
+        // ---- execute slot 0 (may redirect pc / block) ------------------
+        let next_pc = self.exec_slot0(&bundle.slot0)?;
+
+        self.stats.bundles += 1;
+        self.advance_cycle();
+
+        // ---- control flow ----------------------------------------------
+        match next_pc {
+            PcUpdate::Seq => {
+                self.pc = self.loop_next(self.pc);
+            }
+            PcUpdate::Jump(t) => {
+                self.pc = t;
+                for _ in 0..BRANCH_BUBBLES {
+                    self.stats.branch_stalls += 1;
+                    self.advance_cycle();
+                }
+            }
+            PcUpdate::Halt => self.halted = true,
+        }
+        Ok(())
+    }
+
+    /// Hardware-loop-aware sequential successor of `pc`.
+    fn loop_next(&mut self, pc: usize) -> usize {
+        if let Some(frame) = self.loops.last_mut() {
+            if pc == frame.last {
+                if frame.remaining > 0 {
+                    frame.remaining -= 1;
+                    return frame.start;
+                }
+                self.loops.pop();
+            }
+        }
+        pc + 1
+    }
+
+    // ------------------------------------------------------------------
+    // hazard scan
+    // ------------------------------------------------------------------
+
+    /// Cycles to wait before this bundle may issue (RAW on scoreboard).
+    fn issue_stall(&self, b: &Bundle) -> Result<u64, SimError> {
+        let now = self.stats.cycles;
+        let mut ready = now;
+        let need_vr = |vr: VReg, ready: &mut u64| {
+            *ready = (*ready).max(self.vr_ready[vr.0 as usize]);
+        };
+        for (i, op) in b.v.iter().enumerate() {
+            let s = i as u8 + 1;
+            match *op {
+                VecOp::Mac { a, b } | VecOp::Mul { a, b } => {
+                    match a {
+                        ASrc::VrBcast { vr, .. } => need_vr(vr, &mut ready),
+                        ASrc::VrQuad { vr } => {
+                            for k in 0..4 {
+                                need_vr(VReg(vr.0 + k), &mut ready);
+                            }
+                        }
+                        ASrc::Lb { .. } | ASrc::LbVec { .. } => {}
+                    }
+                    match b {
+                        BSrc::Vr { vr }
+                        | BSrc::VrLane { vr, .. }
+                        | BSrc::VrLaneQuad { vr, .. } => need_vr(vr, &mut ready),
+                        BSrc::VrQuad { vr } => {
+                            for k in 0..4 {
+                                need_vr(VReg(vr.0 + k), &mut ready);
+                            }
+                        }
+                        BSrc::Fifo | BSrc::FifoLaneQuad { .. } => match self.filt_fifo.front() {
+                            Some((_, rdy)) => ready = ready.max(*rdy),
+                            None => {
+                                return Err(SimError::Fault {
+                                    cycle: now,
+                                    pc: self.pc,
+                                    what: "vector MAC with empty filter FIFO".into(),
+                                })
+                            }
+                        },
+                    }
+                }
+                VecOp::QMov { j, .. } => {
+                    let a = own_acc_base(s) + j;
+                    ready = ready.max(self.vrl_ready[a as usize]);
+                }
+                VecOp::EOp { va, vb, .. } => {
+                    need_vr(va, &mut ready);
+                    need_vr(vb, &mut ready);
+                }
+                VecOp::EOpI { va, .. } => need_vr(va, &mut ready),
+                VecOp::Mov { vs, .. } | VecOp::Relu { vs, .. } | VecOp::Bcst { vs, .. } => {
+                    need_vr(vs, &mut ready)
+                }
+                VecOp::PoolMax { va, vb, .. } => {
+                    need_vr(va, &mut ready);
+                    need_vr(vb, &mut ready);
+                }
+                VecOp::InitA { vr } | VecOp::InitALane { vr, .. } => need_vr(vr, &mut ready),
+                VecOp::ClrA { .. } | VecOp::Nop => {}
+            }
+        }
+        match b.slot0 {
+            SlotOp::StV { vs, addr } => {
+                ready = ready
+                    .max(self.vr_ready[vs.0 as usize])
+                    .max(self.r_ready[addr.base.0 as usize]);
+            }
+            SlotOp::StA { as_, addr } => {
+                ready = ready
+                    .max(self.vrl_ready[as_.0 as usize])
+                    .max(self.r_ready[addr.base.0 as usize]);
+            }
+            SlotOp::Alu { ra, rb, .. } => {
+                ready = ready
+                    .max(self.r_ready[ra.0 as usize])
+                    .max(self.r_ready[rb.0 as usize]);
+            }
+            SlotOp::AluI { ra, .. } => ready = ready.max(self.r_ready[ra.0 as usize]),
+            SlotOp::Br { ra, rb, .. } => {
+                ready = ready
+                    .max(self.r_ready[ra.0 as usize])
+                    .max(self.r_ready[rb.0 as usize]);
+            }
+            SlotOp::LdS { addr, .. }
+            | SlotOp::StS { addr, .. }
+            | SlotOp::LdV { addr, .. }
+            | SlotOp::LdVF { addr }
+            | SlotOp::LdA { addr, .. } => {
+                ready = ready.max(self.r_ready[addr.base.0 as usize]);
+            }
+            _ => {}
+        }
+        Ok(ready.saturating_sub(now))
+    }
+
+    /// Block until every LB operand of this bundle is readable.
+    fn wait_lb_operands(&mut self, b: &Bundle) -> Result<(), SimError> {
+        loop {
+            let mut blocked = false;
+            for op in b.v.iter() {
+                let lb_ref = match *op {
+                    VecOp::Mac { a: ASrc::Lb { row, off }, .. }
+                    | VecOp::Mul { a: ASrc::Lb { row, off }, .. } => {
+                        // variant A: slices read off + j*stride, j<=3
+                        Some((row, off as usize + 3 * self.csr.lb_stride as usize))
+                    }
+                    VecOp::Mac { a: ASrc::LbVec { row, off }, .. }
+                    | VecOp::Mul { a: ASrc::LbVec { row, off }, .. } => {
+                        // variant B: lanes read off + l*stride, l<=15
+                        Some((row, off as usize + 15 * self.csr.lb_stride as usize))
+                    }
+                    _ => None,
+                };
+                if let Some((row, max_idx)) = lb_ref {
+                    let row = row as usize;
+                    if row >= LB_ROWS {
+                        return Err(self.err_fault(format!("LB row {row} out of range")));
+                    }
+                    if !self.mem.lb.can_read(row, max_idx) {
+                        if self.mem.lb.filling() && self.mem.lb.fill_row() == Some(row) {
+                            blocked = true;
+                        } else {
+                            return Err(self.err_fault(format!(
+                                "LB read row {row} px<= {max_idx} but row not filled"
+                            )));
+                        }
+                    }
+                }
+            }
+            if !blocked {
+                return Ok(());
+            }
+            self.stats.lb_stalls += 1;
+            self.mem.lb.note_read_stall();
+            self.advance_cycle();
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // vector slots
+    // ------------------------------------------------------------------
+
+    /// Fetch the prepared A-operand for slice `j` of vALU `s`.
+    #[inline]
+    fn prep_a(&mut self, s: u8, a: ASrc, j: u8) -> Result<[i16; LANES], SimError> {
+        match a {
+            ASrc::Lb { row, off } => {
+                let px = off as usize + j as usize * self.csr.lb_stride as usize;
+                let v = self
+                    .mem
+                    .lb
+                    .read_pixel(row as usize, px)
+                    .map_err(|e| self.err_fault(e.to_string()))?;
+                self.stats.lb_pixel_reads += 1;
+                Ok([v; LANES])
+            }
+            ASrc::LbVec { row, off } => {
+                let stride = self.csr.lb_stride as usize;
+                let row = row as usize;
+                let mut out = [0i16; LANES];
+                for (l, o) in out.iter_mut().enumerate() {
+                    *o = self
+                        .mem
+                        .lb
+                        .read_pixel(row, off as usize + l * stride)
+                        .map_err(|e| self.err_fault(e.to_string()))?;
+                }
+                // hardware reads the 16 pixels once and broadcasts them to
+                // all 4 slices — count the energy-relevant reads once
+                if j == 0 {
+                    self.stats.lb_pixel_reads += LANES as u64;
+                } else {
+                    // correct the per-call accounting done by read_pixel
+                    self.mem.lb.stats.pixel_reads -= LANES as u64;
+                }
+                Ok(out)
+            }
+            ASrc::VrBcast { vr, base, step } => {
+                if !can_read_vr(Who::Valu(s), vr) {
+                    return Err(self.err_access(format!("vALU{s} read v{}", vr.0)));
+                }
+                let lane = base as usize + j as usize * step as usize;
+                if lane >= LANES {
+                    return Err(self.err_fault(format!("bcast lane {lane} out of range")));
+                }
+                self.stats.vr_reads += 1;
+                Ok([self.regs.vr[vr.0 as usize][lane]; LANES])
+            }
+            ASrc::VrQuad { vr } => {
+                let e = VReg(vr.0 + j);
+                if e.0 >= VReg::COUNT || !can_read_vr(Who::Valu(s), e) {
+                    return Err(self.err_access(format!("vALU{s} read v{}", e.0)));
+                }
+                self.stats.vr_reads += 1;
+                Ok(self.regs.vr[e.0 as usize])
+            }
+        }
+    }
+
+    #[inline]
+    fn prep_b(&mut self, s: u8, b: BSrc, j: u8) -> Result<[i16; LANES], SimError> {
+        match b {
+            BSrc::Vr { vr } => {
+                if !can_read_vr(Who::Valu(s), vr) {
+                    return Err(self.err_access(format!("vALU{s} read v{}", vr.0)));
+                }
+                self.stats.vr_reads += 1;
+                Ok(self.regs.vr[vr.0 as usize])
+            }
+            BSrc::VrLane { vr, lane } => {
+                if !can_read_vr(Who::Valu(s), vr) {
+                    return Err(self.err_access(format!("vALU{s} read v{}", vr.0)));
+                }
+                self.stats.vr_reads += 1;
+                Ok([self.regs.vr[vr.0 as usize][lane as usize % LANES]; LANES])
+            }
+            BSrc::VrLaneQuad { vr, base } => {
+                if !can_read_vr(Who::Valu(s), vr) {
+                    return Err(self.err_access(format!("vALU{s} read v{}", vr.0)));
+                }
+                self.stats.vr_reads += 1;
+                let lane = (base + j) as usize;
+                if lane >= LANES {
+                    return Err(self.err_fault(format!("lane-quad lane {lane} out of range")));
+                }
+                Ok([self.regs.vr[vr.0 as usize][lane]; LANES])
+            }
+            BSrc::Fifo => {
+                let (v, _) = self
+                    .filt_fifo
+                    .front()
+                    .ok_or_else(|| self.err_fault("filter FIFO empty".to_string()))?;
+                Ok(*v)
+            }
+            BSrc::FifoLaneQuad { base } => {
+                let (v, _) = self
+                    .filt_fifo
+                    .front()
+                    .ok_or_else(|| self.err_fault("filter FIFO empty".to_string()))?;
+                let lane = (base + j) as usize;
+                if lane >= LANES {
+                    return Err(self.err_fault(format!("fifo lane {lane} out of range")));
+                }
+                Ok([v[lane]; LANES])
+            }
+            BSrc::VrQuad { vr } => {
+                let e = VReg(vr.0 + j);
+                if e.0 >= VReg::COUNT || !can_read_vr(Who::Valu(s), e) {
+                    return Err(self.err_access(format!("vALU{s} read v{}", e.0)));
+                }
+                self.stats.vr_reads += 1;
+                Ok(self.regs.vr[e.0 as usize])
+            }
+        }
+    }
+
+    fn exec_vec(&mut self, s: u8, op: VecOp) -> Result<(), SimError> {
+        let now = self.stats.cycles;
+        match op {
+            VecOp::Nop => {}
+            VecOp::Mac { a, b } | VecOp::Mul { a, b } => {
+                let overwrite = matches!(op, VecOp::Mul { .. });
+                let gate_bits = self.csr.gate_bits;
+                let base = own_acc_base(s) as usize;
+                let stride = self.csr.lb_stride as usize;
+
+                // Hot-path dispatch on the two codegen-emitted operand
+                // patterns; everything else falls back to the generic
+                // (fully checked) path. The LB interlock in
+                // `wait_lb_operands` validated all pixel indices already.
+                match (a, b) {
+                    // variant A: per-slice LB pixel broadcast x filter
+                    // vector from the FIFO
+                    (ASrc::Lb { row, off }, BSrc::Fifo) => {
+                        let (fv, _) = self
+                            .filt_fifo
+                            .front()
+                            .ok_or_else(|| self.err_fault("filter FIFO empty".to_string()))?;
+                        let bv: [i16; LANES] = if gate_bits >= 16 {
+                            *fv
+                        } else {
+                            std::array::from_fn(|l| fixed::gate(fv[l], gate_bits))
+                        };
+                        let row = row as usize;
+                        let off = off as usize;
+                        for j in 0..SLICES {
+                            let x =
+                                fixed::gate(self.mem.lb.pixel(row, off + j * stride), gate_bits)
+                                    as i32;
+                            let acc = &mut self.regs.vrl[base + j];
+                            if overwrite {
+                                for lane in 0..LANES {
+                                    acc[lane] = x.wrapping_mul(bv[lane] as i32);
+                                }
+                            } else {
+                                for lane in 0..LANES {
+                                    acc[lane] =
+                                        acc[lane].wrapping_add(x.wrapping_mul(bv[lane] as i32));
+                                }
+                            }
+                        }
+                        self.mem.lb.note_pixel_reads(SLICES as u64);
+                        self.stats.lb_pixel_reads += SLICES as u64;
+                    }
+                    // variant B: LB pixel vector (slice-invariant) x
+                    // per-slice filter lane from the FIFO
+                    (ASrc::LbVec { row, off }, BSrc::FifoLaneQuad { base: lb }) => {
+                        let (fv, _) = self
+                            .filt_fifo
+                            .front()
+                            .ok_or_else(|| self.err_fault("filter FIFO empty".to_string()))?;
+                        let fv = *fv;
+                        if lb as usize + SLICES > LANES {
+                            return Err(self.err_fault("fifo lane out of range".to_string()));
+                        }
+                        let row = row as usize;
+                        let off = off as usize;
+                        let av: [i32; LANES] = std::array::from_fn(|l| {
+                            fixed::gate(self.mem.lb.pixel(row, off + l * stride), gate_bits)
+                                as i32
+                        });
+                        for j in 0..SLICES {
+                            let w = fixed::gate(fv[lb as usize + j], gate_bits) as i32;
+                            let acc = &mut self.regs.vrl[base + j];
+                            if overwrite {
+                                for lane in 0..LANES {
+                                    acc[lane] = av[lane].wrapping_mul(w);
+                                }
+                            } else {
+                                for lane in 0..LANES {
+                                    acc[lane] = acc[lane].wrapping_add(av[lane].wrapping_mul(w));
+                                }
+                            }
+                        }
+                        self.mem.lb.note_pixel_reads(LANES as u64);
+                        self.stats.lb_pixel_reads += LANES as u64;
+                    }
+                    // generic path (tests, hand-written kernels)
+                    _ => {
+                        for j in 0..SLICES as u8 {
+                            let av = self.prep_a(s, a, j)?;
+                            let bv = self.prep_b(s, b, j)?;
+                            let acc = &mut self.regs.vrl[base + j as usize];
+                            for lane in 0..LANES {
+                                let x = fixed::gate(av[lane], gate_bits);
+                                let w = fixed::gate(bv[lane], gate_bits);
+                                let prev = if overwrite { 0 } else { acc[lane] };
+                                acc[lane] = fixed::mac(prev, x, w);
+                            }
+                        }
+                    }
+                }
+                let ready = now + MAC_TO_QMOV_LATENCY;
+                for j in 0..SLICES {
+                    self.vrl_ready[base + j] = ready;
+                }
+                self.stats.vmacs += 1;
+                self.stats.mac_ops += (SLICES * LANES) as u64;
+                if gate_bits <= 8 {
+                    self.stats.mac_ops_gated8 += (SLICES * LANES) as u64;
+                }
+                self.stats.vrl_writes += SLICES as u64;
+            }
+            VecOp::ClrA { only } => {
+                let base = own_acc_base(s);
+                for j in 0..SLICES as u8 {
+                    if only.is_none() || only == Some(j) {
+                        self.regs.vrl[(base + j) as usize] = [0; LANES];
+                        self.vrl_ready[(base + j) as usize] = now;
+                    }
+                }
+                self.stats.acc_setup += 1;
+            }
+            VecOp::InitA { vr } => {
+                if !can_read_vr(Who::Valu(s), vr) {
+                    return Err(self.err_access(format!("vALU{s} read v{}", vr.0)));
+                }
+                let bias = self.regs.vr[vr.0 as usize];
+                let shift = self.csr.frac_shift;
+                let base = own_acc_base(s);
+                for j in 0..SLICES as u8 {
+                    let acc = &mut self.regs.vrl[(base + j) as usize];
+                    for lane in 0..LANES {
+                        acc[lane] = fixed::mac_init(bias[lane] as i32, shift);
+                    }
+                    self.vrl_ready[(base + j) as usize] = now;
+                }
+                self.stats.acc_setup += 1;
+                self.stats.vr_reads += 1;
+            }
+            VecOp::InitALane { vr, base: lane_base } => {
+                if !can_read_vr(Who::Valu(s), vr) {
+                    return Err(self.err_access(format!("vALU{s} read v{}", vr.0)));
+                }
+                let bias = self.regs.vr[vr.0 as usize];
+                let shift = self.csr.frac_shift;
+                let base = own_acc_base(s);
+                for j in 0..SLICES as u8 {
+                    let lane = (lane_base + j) as usize;
+                    if lane >= LANES {
+                        return Err(self.err_fault(format!("vinital lane {lane} out of range")));
+                    }
+                    let v = fixed::mac_init(bias[lane] as i32, shift);
+                    self.regs.vrl[(base + j) as usize] = [v; LANES];
+                    self.vrl_ready[(base + j) as usize] = now;
+                }
+                self.stats.acc_setup += 1;
+                self.stats.vr_reads += 1;
+            }
+            VecOp::QMov { vd, j, relu } => {
+                if !can_write_vr(Who::Valu(s), vd) {
+                    return Err(self.err_access(format!("vALU{s} write v{}", vd.0)));
+                }
+                let a = VAcc(own_acc_base(s) + j);
+                if !can_access_vrl(Who::Valu(s), a) {
+                    return Err(self.err_access(format!("vALU{s} acc a{}", a.0)));
+                }
+                let shift = self.csr.frac_shift;
+                let mode = self.csr.round_mode;
+                let acc = self.regs.vrl[a.0 as usize];
+                let out: [i16; LANES] =
+                    std::array::from_fn(|l| fixed::requantize(acc[l], shift, mode, relu));
+                self.regs.vr[vd.0 as usize] = out;
+                self.vr_ready[vd.0 as usize] = now + QMOV_TO_READ_LATENCY;
+                self.stats.qmovs += 1;
+                self.stats.vr_writes += 1;
+            }
+            VecOp::EOp { f, vd, va, vb } => {
+                if !can_read_vr(Who::Valu(s), va) || !can_read_vr(Who::Valu(s), vb) {
+                    return Err(self.err_access(format!("vALU{s} eop read")));
+                }
+                if !can_write_vr(Who::Valu(s), vd) {
+                    return Err(self.err_access(format!("vALU{s} write v{}", vd.0)));
+                }
+                let a = self.regs.vr[va.0 as usize];
+                let b = self.regs.vr[vb.0 as usize];
+                let out: [i16; LANES] = std::array::from_fn(|l| veop(f, a[l], b[l]));
+                self.regs.vr[vd.0 as usize] = out;
+                self.vr_ready[vd.0 as usize] = now + 1;
+                self.stats.veops += 1;
+                self.stats.vr_reads += 2;
+                self.stats.vr_writes += 1;
+            }
+            VecOp::EOpI { f, vd, va, imm } => {
+                if !can_read_vr(Who::Valu(s), va) || !can_write_vr(Who::Valu(s), vd) {
+                    return Err(self.err_access(format!("vALU{s} eopi")));
+                }
+                let a = self.regs.vr[va.0 as usize];
+                let out: [i16; LANES] = std::array::from_fn(|l| veop(f, a[l], imm));
+                self.regs.vr[vd.0 as usize] = out;
+                self.vr_ready[vd.0 as usize] = now + 1;
+                self.stats.veops += 1;
+                self.stats.vr_reads += 1;
+                self.stats.vr_writes += 1;
+            }
+            VecOp::Mov { vd, vs } => {
+                if !can_read_vr(Who::Valu(s), vs) || !can_write_vr(Who::Valu(s), vd) {
+                    return Err(self.err_access(format!("vALU{s} mov")));
+                }
+                self.regs.vr[vd.0 as usize] = self.regs.vr[vs.0 as usize];
+                self.vr_ready[vd.0 as usize] = now + 1;
+                self.stats.veops += 1;
+                self.stats.vr_reads += 1;
+                self.stats.vr_writes += 1;
+            }
+            VecOp::Bcst { vd, vs, lane } => {
+                if !can_read_vr(Who::Valu(s), vs) || !can_write_vr(Who::Valu(s), vd) {
+                    return Err(self.err_access(format!("vALU{s} bcst")));
+                }
+                let v = self.regs.vr[vs.0 as usize][lane as usize % LANES];
+                self.regs.vr[vd.0 as usize] = [v; LANES];
+                self.vr_ready[vd.0 as usize] = now + 1;
+                self.stats.veops += 1;
+                self.stats.vr_reads += 1;
+                self.stats.vr_writes += 1;
+            }
+            VecOp::Relu { .. } | VecOp::PoolMax { .. } if s != 1 => {
+                return Err(self.err_access(format!("SFU op in slot {s} (slot 1 only)")));
+            }
+            VecOp::Relu { vd, vs } => {
+                if !can_read_vr(Who::Valu(s), vs) || !can_write_vr(Who::Valu(s), vd) {
+                    return Err(self.err_access("SFU relu regs".to_string()));
+                }
+                let a = self.regs.vr[vs.0 as usize];
+                let out: [i16; LANES] = std::array::from_fn(|l| a[l].max(0));
+                self.regs.vr[vd.0 as usize] = out;
+                self.vr_ready[vd.0 as usize] = now + 1;
+                self.stats.sfu_ops += 1;
+                self.stats.vr_reads += 1;
+                self.stats.vr_writes += 1;
+            }
+            VecOp::PoolMax { vd, va, vb } => {
+                if !can_read_vr(Who::Valu(s), va)
+                    || !can_read_vr(Who::Valu(s), vb)
+                    || !can_write_vr(Who::Valu(s), vd)
+                {
+                    return Err(self.err_access("SFU poolmax regs".to_string()));
+                }
+                let a = self.regs.vr[va.0 as usize];
+                let b = self.regs.vr[vb.0 as usize];
+                let out: [i16; LANES] = std::array::from_fn(|l| a[l].max(b[l]));
+                self.regs.vr[vd.0 as usize] = out;
+                self.vr_ready[vd.0 as usize] = now + 1;
+                self.stats.sfu_ops += 1;
+                self.stats.vr_reads += 2;
+                self.stats.vr_writes += 1;
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // slot 0
+    // ------------------------------------------------------------------
+
+    fn addr_of(&mut self, a: &Addr) -> usize {
+        let base = self.regs.r(a.base);
+        let addr = base.wrapping_add(a.offset);
+        if a.post_inc != 0 {
+            self.regs.set_r(a.base, base.wrapping_add(a.post_inc));
+        }
+        addr as usize
+    }
+
+    fn exec_slot0(&mut self, op: &SlotOp) -> Result<PcUpdate, SimError> {
+        let now = self.stats.cycles;
+        Ok(match *op {
+            SlotOp::Nop => PcUpdate::Seq,
+            SlotOp::Halt => PcUpdate::Halt,
+            SlotOp::Li { rd, imm } => {
+                self.regs.set_r(rd, imm);
+                self.stats.scalar_ops += 1;
+                PcUpdate::Seq
+            }
+            SlotOp::Alu { f, w, rd, ra, rb } => {
+                let v = alu(f, w, self.regs.r(ra), self.regs.r(rb));
+                self.regs.set_r(rd, v);
+                self.stats.scalar_ops += 1;
+                PcUpdate::Seq
+            }
+            SlotOp::AluI { f, w, rd, ra, imm } => {
+                let v = alu(f, w, self.regs.r(ra), imm);
+                self.regs.set_r(rd, v);
+                self.stats.scalar_ops += 1;
+                PcUpdate::Seq
+            }
+            SlotOp::Br { c, ra, rb, target } => {
+                self.stats.ctrl_ops += 1;
+                let a = self.regs.r(ra);
+                let b = self.regs.r(rb);
+                let taken = match c {
+                    Cond::Eq => a == b,
+                    Cond::Ne => a != b,
+                    Cond::Lt => a < b,
+                    Cond::Ge => a >= b,
+                };
+                if taken {
+                    PcUpdate::Jump(target as usize)
+                } else {
+                    PcUpdate::Seq
+                }
+            }
+            SlotOp::Jmp { target } => {
+                self.stats.ctrl_ops += 1;
+                PcUpdate::Jump(target as usize)
+            }
+            SlotOp::Loop { n, body } => {
+                self.stats.ctrl_ops += 1;
+                let count = self.regs.r(n).max(0) as u32;
+                self.push_loop(count, body)?
+            }
+            SlotOp::LoopI { n, body } => {
+                self.stats.ctrl_ops += 1;
+                self.push_loop(n, body)?
+            }
+            SlotOp::Csrwi { csr, imm } => {
+                self.write_csr(csr, imm);
+                self.stats.scalar_ops += 1;
+                PcUpdate::Seq
+            }
+            SlotOp::Csrw { csr, rs } => {
+                let v = self.regs.r(rs) as u32;
+                self.write_csr(csr, v);
+                self.stats.scalar_ops += 1;
+                PcUpdate::Seq
+            }
+            SlotOp::LdS { rd, addr } => {
+                let a = self.addr_of(&addr);
+                let v = self
+                    .mem
+                    .dm
+                    .read_i16_p0(a)
+                    .map_err(|e| self.err_fault(e.to_string()))?;
+                self.regs.set_r(rd, v as i32);
+                self.r_ready[rd.0 as usize] = now + LOAD_USE_LATENCY;
+                self.stats.sloads += 1;
+                PcUpdate::Seq
+            }
+            SlotOp::StS { rs, addr } => {
+                let a = self.addr_of(&addr);
+                let v = self.regs.r(rs) as i16;
+                self.mem
+                    .dm
+                    .write_i16_p0(a, v)
+                    .map_err(|e| self.err_fault(e.to_string()))?;
+                self.stats.sstores += 1;
+                PcUpdate::Seq
+            }
+            SlotOp::LdV { vd, addr } => {
+                let a = self.addr_of(&addr);
+                let v = self
+                    .mem
+                    .dm
+                    .read_vec_p0(a)
+                    .map_err(|e| self.err_fault(e.to_string()))?;
+                self.regs.vr[vd.0 as usize] = v;
+                self.vr_ready[vd.0 as usize] = now + LOAD_USE_LATENCY;
+                self.stats.vloads += 1;
+                PcUpdate::Seq
+            }
+            SlotOp::StV { vs, addr } => {
+                let a = self.addr_of(&addr);
+                let v = self.regs.vr[vs.0 as usize];
+                self.mem
+                    .dm
+                    .write_vec_p0(a, &v)
+                    .map_err(|e| self.err_fault(e.to_string()))?;
+                self.stats.vstores += 1;
+                PcUpdate::Seq
+            }
+            SlotOp::LdVF { addr } => {
+                if self.filt_fifo.len() >= FIFO_DEPTH {
+                    return Err(self.err_fault("filter FIFO overflow".to_string()));
+                }
+                let a = self.addr_of(&addr);
+                let v = self
+                    .mem
+                    .dm
+                    .read_vec_p0(a)
+                    .map_err(|e| self.err_fault(e.to_string()))?;
+                self.filt_fifo.push_back((v, now + LOAD_USE_LATENCY));
+                self.stats.vloads += 1;
+                PcUpdate::Seq
+            }
+            SlotOp::LdA { ad, addr } => {
+                let a = self.addr_of(&addr);
+                // 512 bits = 2 port-0 accesses = 1 extra cycle
+                let lo = self
+                    .mem
+                    .dm
+                    .read_vec_p0(a)
+                    .map_err(|e| self.err_fault(e.to_string()))?;
+                self.advance_cycle();
+                self.stats.wide_ls_stalls += 1;
+                let hi = self
+                    .mem
+                    .dm
+                    .read_vec_p0(a + 32)
+                    .map_err(|e| self.err_fault(e.to_string()))?;
+                // interleave: lanes 0..16 i32 little-endian across the two
+                // 256-bit words (lo = low halves, hi = high halves)
+                let acc = &mut self.regs.vrl[ad.0 as usize];
+                for l in 0..LANES {
+                    acc[l] = (lo[l] as u16 as i32) | ((hi[l] as i32) << 16);
+                }
+                self.vrl_ready[ad.0 as usize] = now + LOAD_USE_LATENCY + 1;
+                self.stats.aloads += 1;
+                PcUpdate::Seq
+            }
+            SlotOp::StA { as_, addr } => {
+                let a = self.addr_of(&addr);
+                let acc = self.regs.vrl[as_.0 as usize];
+                let mut lo = [0i16; LANES];
+                let mut hi = [0i16; LANES];
+                for l in 0..LANES {
+                    lo[l] = acc[l] as i16;
+                    hi[l] = (acc[l] >> 16) as i16;
+                }
+                self.mem
+                    .dm
+                    .write_vec_p0(a, &lo)
+                    .map_err(|e| self.err_fault(e.to_string()))?;
+                self.advance_cycle();
+                self.stats.wide_ls_stalls += 1;
+                self.mem
+                    .dm
+                    .write_vec_p0(a + 32, &hi)
+                    .map_err(|e| self.err_fault(e.to_string()))?;
+                self.stats.astores += 1;
+                PcUpdate::Seq
+            }
+            SlotOp::DmaLoad { ch, ext, dm, len } => {
+                let e = self.regs.r(ext) as usize;
+                let d = self.regs.r(dm) as usize;
+                let l = self.regs.r(len) as usize;
+                self.mem
+                    .start_dma(ch as usize, DmaDir::ExtToDm, e, d, l)
+                    .map_err(|x| self.err_fault(x.to_string()))?;
+                self.stats.ctrl_ops += 1;
+                PcUpdate::Seq
+            }
+            SlotOp::DmaStore { ch, ext, dm, len } => {
+                let e = self.regs.r(ext) as usize;
+                let d = self.regs.r(dm) as usize;
+                let l = self.regs.r(len) as usize;
+                self.mem
+                    .start_dma(ch as usize, DmaDir::DmToExt, e, d, l)
+                    .map_err(|x| self.err_fault(x.to_string()))?;
+                self.stats.ctrl_ops += 1;
+                PcUpdate::Seq
+            }
+            SlotOp::DmaWait { ch } => {
+                self.stats.ctrl_ops += 1;
+                while self.mem.dma.busy(ch as usize) {
+                    self.stats.dma_wait_stalls += 1;
+                    self.advance_cycle();
+                }
+                PcUpdate::Seq
+            }
+            SlotOp::LbLoad { row, dm, off, win, nrows, rstride } => {
+                // a second LbLoad while one is in flight interlocks
+                while self.mem.lb.filling() {
+                    self.stats.lb_stalls += 1;
+                    self.advance_cycle();
+                }
+                let a = self.regs.r(dm) as usize + off as usize;
+                self.mem
+                    .start_lb_fill_2d(row as usize, a, win as usize, nrows as usize, rstride as usize)
+                    .map_err(|e| self.err_fault(e.to_string()))?;
+                self.stats.lb_fills += 1;
+                PcUpdate::Seq
+            }
+        })
+    }
+
+    fn push_loop(&mut self, n: u32, body: u16) -> Result<PcUpdate, SimError> {
+        if body == 0 {
+            return Err(self.err_fault("loop with empty body"));
+        }
+        if self.loops.len() >= 2 {
+            return Err(self.err_fault("hardware loop nesting > 2"));
+        }
+        if n == 0 {
+            // skip the body entirely
+            return Ok(PcUpdate::Jump(self.pc + 1 + body as usize));
+        }
+        self.loops.push(LoopFrame {
+            start: self.pc + 1,
+            last: self.pc + body as usize,
+            remaining: n - 1,
+        });
+        Ok(PcUpdate::Seq)
+    }
+
+    fn write_csr(&mut self, csr: Csr, v: u32) {
+        match csr {
+            Csr::FracShift => self.csr.frac_shift = (v & 31) as u8,
+            Csr::RoundMode => self.csr.round_mode = RoundMode::from_bits(v),
+            Csr::GateBits => self.csr.gate_bits = (v.clamp(1, 16)) as u8,
+            Csr::LbStride => self.csr.lb_stride = (v.max(1) & 0xF) as u8,
+        }
+    }
+}
+
+enum PcUpdate {
+    Seq,
+    Jump(usize),
+    Halt,
+}
+
+#[inline]
+fn alu(f: AluFn, w: Width, a: i32, b: i32) -> i32 {
+    let v = match f {
+        AluFn::Add => a.wrapping_add(b),
+        AluFn::Sub => a.wrapping_sub(b),
+        AluFn::Mul => a.wrapping_mul(b),
+        AluFn::And => a & b,
+        AluFn::Or => a | b,
+        AluFn::Xor => a ^ b,
+        AluFn::Shl => a.wrapping_shl(b as u32 & 31),
+        AluFn::Shr => a.wrapping_shr(b as u32 & 31),
+        AluFn::Min => a.min(b),
+        AluFn::Max => a.max(b),
+    };
+    match w {
+        Width::W32 => v,
+        Width::W16 => v as i16 as i32,
+    }
+}
+
+#[inline]
+fn veop(f: VFn, a: i16, b: i16) -> i16 {
+    match f {
+        VFn::Add => a.wrapping_add(b),
+        VFn::Sub => a.wrapping_sub(b),
+        VFn::Mul => a.wrapping_mul(b),
+        VFn::Max => a.max(b),
+        VFn::Min => a.min(b),
+        VFn::Shl => a.wrapping_shl(b as u32 & 15),
+        VFn::Shr => a.wrapping_shr(b as u32 & 15),
+    }
+}
+
+/// Per-run stats = after - before (component-wise).
+fn diff_stats(before: &CoreStats, after: &CoreStats) -> CoreStats {
+    macro_rules! d {
+        ($($f:ident),* $(,)?) => {
+            CoreStats { $($f: after.$f - before.$f),* }
+        };
+    }
+    d!(
+        cycles, bundles, mac_ops, mac_bundles, vmacs, qmovs, veops, sfu_ops,
+        acc_setup, scalar_ops, ctrl_ops, branch_stalls, hazard_stalls,
+        lb_stalls, dma_wait_stalls, wide_ls_stalls, vloads, vstores, aloads,
+        astores, sloads, sstores, lb_fills, lb_pixel_reads, vr_reads,
+        vr_writes, vrl_writes, mac_ops_gated8,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::asm::assemble;
+    use crate::mem::pm::ProgramMem;
+
+    fn run_asm(src: &str) -> (Cpu, CoreStats) {
+        let p = assemble(src).unwrap();
+        let pm = ProgramMem::load(&p).unwrap();
+        let mut cpu = Cpu::new(1 << 20);
+        let stats = cpu.run(&pm).unwrap();
+        (cpu, stats)
+    }
+
+    #[test]
+    fn scalar_arithmetic() {
+        let (cpu, _) = run_asm(
+            "li r1, 7\n\
+             li r2, 5\n\
+             add r3, r1, r2\n\
+             mul r4, r3, r2\n\
+             sub.16 r5, r1, r2\n\
+             halt",
+        );
+        assert_eq!(cpu.regs.r(SReg(3)), 12);
+        assert_eq!(cpu.regs.r(SReg(4)), 60);
+        assert_eq!(cpu.regs.r(SReg(5)), 2);
+    }
+
+    #[test]
+    fn width16_wraps() {
+        let (cpu, _) = run_asm(
+            "li r1, 30000\n\
+             li r2, 10000\n\
+             add.16 r3, r1, r2\n\
+             add r4, r1, r2\n\
+             halt",
+        );
+        assert_eq!(cpu.regs.r(SReg(3)), (40000i32 as i16) as i32); // wrapped
+        assert_eq!(cpu.regs.r(SReg(4)), 40000);
+    }
+
+    #[test]
+    fn branch_loop_counts() {
+        let (cpu, stats) = run_asm(
+            "li r1, 0\n\
+             li r2, 10\n\
+             li r3, 1\n\
+             loop: add r1, r1, r3\n\
+             bne r1, r2, loop\n\
+             halt",
+        );
+        assert_eq!(cpu.regs.r(SReg(1)), 10);
+        // 9 taken branches × 2 bubbles
+        assert_eq!(stats.branch_stalls, 18);
+    }
+
+    #[test]
+    fn hardware_loop_zero_overhead() {
+        let (cpu, stats) = run_asm(
+            "li r1, 0\n\
+             li r3, 1\n\
+             loopi 10, 1\n\
+             add r1, r1, r3\n\
+             halt",
+        );
+        assert_eq!(cpu.regs.r(SReg(1)), 10);
+        assert_eq!(stats.branch_stalls, 0);
+        // 3 setup + 10 body + halt = 14 bundles... cycles == bundles (+drain 0)
+        assert_eq!(stats.bundles, 14);
+        assert_eq!(stats.cycles, 14);
+    }
+
+    #[test]
+    fn loop_count_zero_skips_body() {
+        let (cpu, _) = run_asm(
+            "li r1, 5\n\
+             li r4, 0\n\
+             loop r4, 1\n\
+             li r1, 99\n\
+             halt",
+        );
+        assert_eq!(cpu.regs.r(SReg(1)), 5);
+    }
+
+    #[test]
+    fn nested_hw_loops() {
+        let (cpu, _) = run_asm(
+            "li r1, 0\n\
+             li r3, 1\n\
+             loopi 4, 3\n\
+             loopi 5, 1\n\
+             add r1, r1, r3\n\
+             nop\n\
+             halt",
+        );
+        assert_eq!(cpu.regs.r(SReg(1)), 20);
+    }
+
+    #[test]
+    fn dm_vector_roundtrip_and_load_use_stall() {
+        let (cpu, stats) = run_asm(
+            "li r1, 256\n\
+             li r2, 512\n\
+             ldv v4, [r1] | vnop | vnop | vnop\n\
+             stv v4, [r2]\n\
+             halt",
+        );
+        // store must wait LOAD_USE cycles after the load
+        assert!(stats.hazard_stalls >= 1, "stalls={}", stats.hazard_stalls);
+        let _ = cpu;
+    }
+
+    #[test]
+    fn vmac_from_vr_bcast_accumulates() {
+        // v0 = filter (from DM), A operand: broadcast lane of v1
+        let mut p = Program::default();
+        p.bundles.push(Bundle::s0(SlotOp::Li { rd: SReg(1), imm: 0 }));
+        p.bundles.push(Bundle::s0(SlotOp::LdV { vd: VReg(0), addr: Addr::base(SReg(1)) }));
+        p.bundles.push(Bundle::s0(SlotOp::LdV { vd: VReg(4), addr: Addr::offs(SReg(1), 32) }));
+        // clear accumulators, then 3 MACs: acc[j] += v4[0+j] * v0
+        p.bundles.push(Bundle {
+            slot0: SlotOp::Nop,
+            v: [VecOp::ClrA { only: None }, VecOp::Nop, VecOp::Nop],
+        });
+        let mac = VecOp::Mac {
+            a: ASrc::VrBcast { vr: VReg(4), base: 0, step: 1 },
+            b: BSrc::Vr { vr: VReg(0) },
+        };
+        for _ in 0..3 {
+            p.bundles.push(Bundle { slot0: SlotOp::Nop, v: [mac, VecOp::Nop, VecOp::Nop] });
+        }
+        p.bundles.push(Bundle::s0(SlotOp::Halt));
+        let pm = ProgramMem::load(&p).unwrap();
+        let mut cpu = Cpu::new(1 << 16);
+        // filter = 1..16, input pixels v4 = [2,3,4,...]
+        let filt: Vec<i16> = (1..=16).collect();
+        let pix: Vec<i16> = (2..18).collect();
+        cpu.mem.dm.poke_i16_slice(0, &filt);
+        cpu.mem.dm.poke_i16_slice(32, &pix);
+        let stats = cpu.run(&pm).unwrap();
+        // acc slice j, lane l = 3 * pix[j] * filt[l]
+        for j in 0..4 {
+            for l in 0..16 {
+                assert_eq!(
+                    cpu.regs.vrl[j][l],
+                    3 * (pix[j] as i32) * (filt[l] as i32),
+                    "j={j} l={l}"
+                );
+            }
+        }
+        assert_eq!(stats.mac_ops, 3 * 64);
+        assert_eq!(stats.vmacs, 3);
+    }
+
+    #[test]
+    fn qmov_requantizes_and_relu() {
+        let mut p = Program::default();
+        p.bundles.push(Bundle::s0(SlotOp::Csrwi { csr: Csr::FracShift, imm: 2 }));
+        p.bundles.push(Bundle::s0(SlotOp::Li { rd: SReg(1), imm: 0 }));
+        p.bundles.push(Bundle::s0(SlotOp::LdV { vd: VReg(0), addr: Addr::base(SReg(1)) }));
+        p.bundles.push(Bundle::s0(SlotOp::LdV { vd: VReg(4), addr: Addr::offs(SReg(1), 32) }));
+        // acc = a*b (Mul overwrites), then requant with relu into v5
+        p.bundles.push(Bundle {
+            slot0: SlotOp::Nop,
+            v: [
+                VecOp::Mul {
+                    a: ASrc::VrBcast { vr: VReg(4), base: 0, step: 0 },
+                    b: BSrc::Vr { vr: VReg(0) },
+                },
+                VecOp::Nop,
+                VecOp::Nop,
+            ],
+        });
+        p.bundles.push(Bundle {
+            slot0: SlotOp::Nop,
+            v: [VecOp::QMov { vd: VReg(5), j: 0, relu: true }, VecOp::Nop, VecOp::Nop],
+        });
+        p.bundles.push(Bundle::s0(SlotOp::Halt));
+        let pm = ProgramMem::load(&p).unwrap();
+        let mut cpu = Cpu::new(1 << 16);
+        let filt: Vec<i16> = (0..16).map(|i| (i as i16 - 8) * 3).collect();
+        cpu.mem.dm.poke_i16_slice(0, &filt);
+        cpu.mem.dm.poke_i16_slice(32, &[10; 16]);
+        let stats = cpu.run(&pm).unwrap();
+        for l in 0..16 {
+            let acc = 10 * filt[l] as i32;
+            let expect = fixed::requantize(acc, 2, RoundMode::HalfUp, true);
+            assert_eq!(cpu.regs.vr[5][l], expect, "lane {l}");
+        }
+        // QMov right after MAC: must stall ~MAC_TO_QMOV cycles
+        assert!(stats.hazard_stalls >= MAC_TO_QMOV_LATENCY - 1);
+    }
+
+    #[test]
+    fn region_violation_detected() {
+        // vALU 1 writing VR region 2 must fault
+        let mut p = Program::default();
+        p.bundles.push(Bundle {
+            slot0: SlotOp::Nop,
+            v: [VecOp::Mov { vd: VReg(8), vs: VReg(0) }, VecOp::Nop, VecOp::Nop],
+        });
+        p.bundles.push(Bundle::s0(SlotOp::Halt));
+        let pm = ProgramMem::load(&p).unwrap();
+        let mut cpu = Cpu::new(1 << 16);
+        assert!(matches!(cpu.run(&pm), Err(SimError::Access { .. })));
+    }
+
+    #[test]
+    fn sfu_only_in_slot1() {
+        let mut p = Program::default();
+        p.bundles.push(Bundle {
+            slot0: SlotOp::Nop,
+            v: [VecOp::Nop, VecOp::Relu { vd: VReg(8), vs: VReg(8) }, VecOp::Nop],
+        });
+        p.bundles.push(Bundle::s0(SlotOp::Halt));
+        let pm = ProgramMem::load(&p).unwrap();
+        let mut cpu = Cpu::new(1 << 16);
+        assert!(matches!(cpu.run(&pm), Err(SimError::Access { .. })));
+    }
+
+    #[test]
+    fn lb_fill_and_mac_interlock() {
+        let mut p = Program::default();
+        p.bundles.push(Bundle::s0(SlotOp::Csrwi { csr: Csr::LbStride, imm: 1 }));
+        p.bundles.push(Bundle::s0(SlotOp::Li { rd: SReg(1), imm: 0 }));
+        p.bundles.push(Bundle::s0(SlotOp::LdV { vd: VReg(0), addr: Addr::base(SReg(1)) }));
+        p.bundles.push(Bundle::s0(SlotOp::LbLoad { row: 0, dm: SReg(1), off: 0, win: 32, nrows: 1, rstride: 0 }));
+        p.bundles.push(Bundle {
+            slot0: SlotOp::Nop,
+            v: [
+                VecOp::Mul { a: ASrc::Lb { row: 0, off: 0 }, b: BSrc::Vr { vr: VReg(0) } },
+                VecOp::Nop,
+                VecOp::Nop,
+            ],
+        });
+        p.bundles.push(Bundle::s0(SlotOp::Halt));
+        let pm = ProgramMem::load(&p).unwrap();
+        let mut cpu = Cpu::new(1 << 16);
+        let data: Vec<i16> = (0..32).map(|i| i + 1).collect();
+        cpu.mem.dm.poke_i16_slice(0, &data);
+        let stats = cpu.run(&pm).unwrap();
+        // 32-pixel fill takes 2 port-1 cycles; the MAC issued right after
+        // must have stalled at least once
+        assert!(stats.lb_stalls >= 1, "lb_stalls={}", stats.lb_stalls);
+        // slice j reads pixel j (stride 1 from off 0), times filter lane l
+        for j in 0..4 {
+            for l in 0..16 {
+                assert_eq!(cpu.regs.vrl[j][l], (j as i32 + 1) * data[l] as i32);
+            }
+        }
+    }
+
+    #[test]
+    fn lda_sta_roundtrip_512bit() {
+        let mut p = Program::default();
+        p.bundles.push(Bundle::s0(SlotOp::Li { rd: SReg(1), imm: 0 }));
+        p.bundles.push(Bundle::s0(SlotOp::Li { rd: SReg(2), imm: 256 }));
+        p.bundles.push(Bundle::s0(SlotOp::LdA { ad: VAcc(0), addr: Addr::base(SReg(1)) }));
+        p.bundles.push(Bundle::s0(SlotOp::StA { as_: VAcc(0), addr: Addr::base(SReg(2)) }));
+        p.bundles.push(Bundle::s0(SlotOp::Halt));
+        let pm = ProgramMem::load(&p).unwrap();
+        let mut cpu = Cpu::new(1 << 16);
+        // stage an i32 accumulator image: lo halves then hi halves
+        let vals: Vec<i32> = (0..16).map(|i| (i - 8) * 100_000).collect();
+        for (l, v) in vals.iter().enumerate() {
+            cpu.mem.dm.poke_i16(2 * l, *v as i16);
+            cpu.mem.dm.poke_i16(32 + 2 * l, (*v >> 16) as i16);
+        }
+        let stats = cpu.run(&pm).unwrap();
+        assert_eq!(cpu.regs.vrl[0].to_vec(), vals);
+        // copied back out
+        for (l, v) in vals.iter().enumerate() {
+            let lo = cpu.mem.dm.peek_i16(256 + 2 * l) as u16 as i32;
+            let hi = cpu.mem.dm.peek_i16(256 + 32 + 2 * l) as i32;
+            assert_eq!(lo | (hi << 16), *v);
+        }
+        assert_eq!(stats.aloads, 1);
+        assert_eq!(stats.astores, 1);
+        assert_eq!(stats.wide_ls_stalls, 2);
+    }
+
+    #[test]
+    fn dma_wait_blocks() {
+        let (cpu, stats) = run_asm(
+            "li r1, 0\n\
+             li r2, 1024\n\
+             li r3, 512\n\
+             dmald 0, r1, r2, r3\n\
+             dmawait 0\n\
+             halt",
+        );
+        assert!(stats.dma_wait_stalls > 0);
+        assert_eq!(cpu.mem.ext.stats.bytes_read, 512);
+    }
+
+    #[test]
+    fn utilization_metric() {
+        // a pure vmac loop should approach utilization 1
+        let mut src = String::from(
+            "li r1, 0\nldv v0, [r1]\nlbld 0, r1, 16\ncsrwi lb_stride, 1\nnop\nnop\n",
+        );
+        for _ in 0..50 {
+            src.push_str("nop | vmac lb:0, v0 | vmac lb:0, v0 | vmac lb:0, v0\n");
+        }
+        src.push_str("halt\n");
+        let (_, stats) = run_asm(&src);
+        let u = stats.utilization();
+        assert!(u > 0.8, "utilization {u}");
+    }
+
+    #[test]
+    fn run_off_end_detected() {
+        let mut p = Program::default();
+        p.bundles.push(Bundle::NOP);
+        let pm = ProgramMem::load(&p).unwrap();
+        let mut cpu = Cpu::new(1 << 16);
+        assert!(matches!(cpu.run(&pm), Err(SimError::RanOff { .. })));
+    }
+
+    #[test]
+    fn gating_affects_mac_numerics_and_stats() {
+        let mut p = Program::default();
+        p.bundles.push(Bundle::s0(SlotOp::Csrwi { csr: Csr::GateBits, imm: 8 }));
+        p.bundles.push(Bundle::s0(SlotOp::Li { rd: SReg(1), imm: 0 }));
+        p.bundles.push(Bundle::s0(SlotOp::LdV { vd: VReg(0), addr: Addr::base(SReg(1)) }));
+        p.bundles.push(Bundle::s0(SlotOp::LdV { vd: VReg(4), addr: Addr::offs(SReg(1), 32) }));
+        p.bundles.push(Bundle {
+            slot0: SlotOp::Nop,
+            v: [
+                VecOp::Mul {
+                    a: ASrc::VrBcast { vr: VReg(4), base: 0, step: 0 },
+                    b: BSrc::Vr { vr: VReg(0) },
+                },
+                VecOp::Nop,
+                VecOp::Nop,
+            ],
+        });
+        p.bundles.push(Bundle::s0(SlotOp::Halt));
+        let pm = ProgramMem::load(&p).unwrap();
+        let mut cpu = Cpu::new(1 << 16);
+        cpu.mem.dm.poke_i16_slice(0, &[0x0123; 16]);
+        cpu.mem.dm.poke_i16_slice(32, &[0x0456; 16]);
+        let stats = cpu.run(&pm).unwrap();
+        let expect = (fixed::gate(0x0456, 8) as i32) * (fixed::gate(0x0123, 8) as i32);
+        assert_eq!(cpu.regs.vrl[0][0], expect);
+        assert_eq!(stats.mac_ops_gated8, 64);
+    }
+}

@@ -1,0 +1,41 @@
+//! The ConvAix core: an 8-stage (IF, ID, E1..E6) 4-slot VLIW pipeline.
+//!
+//! The simulator is *bundle-accurate with a hazard scoreboard*: one
+//! bundle issues per cycle; stalls are charged where the hardware would
+//! interlock —
+//!
+//! * vector-load → vALU use: 2 cycles (DM access completes in E4, the
+//!   vALU reads operands in E2),
+//! * MAC → requantize of the same accumulator: 4 cycles (the MAC result
+//!   retires in E6),
+//! * requantize → store of the same VR entry: 3 cycles,
+//! * taken branches: 2 bubbles (resolved in E1),
+//! * accumulator spills (`LdA`/`StA`, 512 b = two 256-b accesses):
+//!   one extra slot-0 occupancy cycle,
+//! * line-buffer reads of an in-flight fill and `DmaWait` block until
+//!   the background engine delivers.
+//!
+//! Back-to-back MACs to the same accumulator do **not** stall (dedicated
+//! accumulate forwarding path — the standard design for MAC datapaths,
+//! and the only way the paper's 192 MAC/cycle steady state is possible).
+//!
+//! Register-file **sub-region port constraints** (Section IV) are
+//! enforced: vALU in slot *s* may read VR regions {0, s}, write VR
+//! region s, and owns VRl region s-1 exclusively; slot 0 accesses
+//! everything. Violations are simulation errors — the code generator is
+//! tested never to produce them.
+
+pub mod cpu;
+pub mod regfile;
+
+pub use cpu::{CoreStats, Cpu, SimError};
+pub use regfile::RegFiles;
+
+/// Load-to-use latency for DM loads (cycles).
+pub const LOAD_USE_LATENCY: u64 = 2;
+/// MAC-to-requantize latency (cycles).
+pub const MAC_TO_QMOV_LATENCY: u64 = 4;
+/// Requantize-to-read latency (cycles).
+pub const QMOV_TO_READ_LATENCY: u64 = 3;
+/// Taken-branch bubbles.
+pub const BRANCH_BUBBLES: u64 = 2;

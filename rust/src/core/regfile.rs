@@ -1,0 +1,140 @@
+//! Register files R / VR / VRl with the paper's sub-region semantics.
+//!
+//! Storage is plain arrays; *permission* checking lives here so both the
+//! simulator and the codegen tests can query it. Sizes (Table I: 3648
+//! bytes of registers):
+//!
+//! * `R`   : 32 × 32 b scalar (the paper's 16-bit R file + the 32-bit
+//!           addressing registers, modeled as one 32-bit file) = 128 B
+//! * `VR`  : 16 × 256 b = 512 B
+//! * `VRl` : 12 × 512 b = 768 B
+//!
+//! (The remaining bytes of the paper's figure are pipeline registers,
+//! accounted in `energy::area`.)
+
+use crate::isa::{SReg, VAcc, VReg, LANES};
+
+/// Which issue slot is touching the register file (permission checks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Who {
+    /// Slot 0 (load/store + data movement): full access.
+    Slot0,
+    /// vALU in issue slot 1..=3.
+    Valu(u8),
+}
+
+/// vALU `s` may read VR sub-regions {0, s}.
+pub fn can_read_vr(who: Who, vr: VReg) -> bool {
+    match who {
+        Who::Slot0 => true,
+        Who::Valu(s) => {
+            let r = vr.region();
+            r == 0 || r == s
+        }
+    }
+}
+
+/// vALU `s` may write only VR sub-region s.
+pub fn can_write_vr(who: Who, vr: VReg) -> bool {
+    match who {
+        Who::Slot0 => true,
+        Who::Valu(s) => vr.region() == s,
+    }
+}
+
+/// vALU `s` owns VRl sub-region s-1.
+pub fn can_access_vrl(who: Who, a: VAcc) -> bool {
+    match who {
+        Who::Slot0 => true,
+        Who::Valu(s) => a.region() == s - 1,
+    }
+}
+
+/// The accumulator entries owned by vALU slot `s` (1..=3).
+pub fn own_acc_base(s: u8) -> u8 {
+    (s - 1) * 4
+}
+
+#[derive(Clone)]
+pub struct RegFiles {
+    pub r: [i32; 32],
+    pub vr: [[i16; LANES]; 16],
+    pub vrl: [[i32; LANES]; 12],
+}
+
+impl Default for RegFiles {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RegFiles {
+    pub fn new() -> Self {
+        Self { r: [0; 32], vr: [[0; LANES]; 16], vrl: [[0; LANES]; 12] }
+    }
+
+    #[inline]
+    pub fn r(&self, reg: SReg) -> i32 {
+        self.r[reg.0 as usize]
+    }
+
+    #[inline]
+    pub fn set_r(&mut self, reg: SReg, v: i32) {
+        self.r[reg.0 as usize] = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slot0_sees_everything() {
+        for i in 0..16 {
+            assert!(can_read_vr(Who::Slot0, VReg(i)));
+            assert!(can_write_vr(Who::Slot0, VReg(i)));
+        }
+        for i in 0..12 {
+            assert!(can_access_vrl(Who::Slot0, VAcc(i)));
+        }
+    }
+
+    #[test]
+    fn valu_reads_shared_and_private() {
+        // vALU 2: regions {0, 2} readable
+        assert!(can_read_vr(Who::Valu(2), VReg(0)));
+        assert!(can_read_vr(Who::Valu(2), VReg(3)));
+        assert!(can_read_vr(Who::Valu(2), VReg(8)));
+        assert!(can_read_vr(Who::Valu(2), VReg(11)));
+        assert!(!can_read_vr(Who::Valu(2), VReg(4))); // region 1
+        assert!(!can_read_vr(Who::Valu(2), VReg(12))); // region 3
+    }
+
+    #[test]
+    fn valu_writes_only_private() {
+        assert!(can_write_vr(Who::Valu(1), VReg(4)));
+        assert!(!can_write_vr(Who::Valu(1), VReg(0)));
+        assert!(!can_write_vr(Who::Valu(1), VReg(8)));
+    }
+
+    #[test]
+    fn vrl_ownership() {
+        assert!(can_access_vrl(Who::Valu(1), VAcc(0)));
+        assert!(can_access_vrl(Who::Valu(1), VAcc(3)));
+        assert!(!can_access_vrl(Who::Valu(1), VAcc(4)));
+        assert!(can_access_vrl(Who::Valu(3), VAcc(8)));
+        assert!(!can_access_vrl(Who::Valu(3), VAcc(7)));
+        assert_eq!(own_acc_base(1), 0);
+        assert_eq!(own_acc_base(2), 4);
+        assert_eq!(own_acc_base(3), 8);
+    }
+
+    #[test]
+    fn register_bytes_match_table1_storage() {
+        // VR 512 B + VRl 768 B + R 128 B = 1408 B of architectural
+        // registers; Table I's 3648 B adds pipeline registers (see
+        // energy::area for the split).
+        let arch = 16 * 32 + 12 * 64 + 32 * 4;
+        assert_eq!(arch, 1408);
+    }
+}

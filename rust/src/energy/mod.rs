@@ -1,0 +1,25 @@
+//! Area and power models (Table I, Fig. 3b, Fig. 3c, Table II columns).
+//!
+//! The paper's numbers come from a post-P&R TSMC 28 nm netlist with
+//! simulated switching activity — unavailable here. Substitution
+//! (DESIGN.md §2): calibrated analytical models driven by the cycle
+//! simulator's activity counters. Calibration anchors:
+//!
+//! * Table I: 1293 kGE logic, 144 KB SRAM, 3648 B registers;
+//! * Fig. 3b: vALUs = 56 % of logic area;
+//! * Fig. 3c: vALUs ≈ 44 %, DM+RF+LB ≈ 44.1 % of power (AlexNet conv3,
+//!   8-bit gated);
+//! * Table II: 228.8 mW (AlexNet) and 223.9 mW (VGG-16) total power.
+//!
+//! The fitted per-event energies (`power::consts`) reproduce all anchors
+//! simultaneously to <1 % (see `tests` and EXPERIMENTS.md) and sit in
+//! the literature range for 28 nm (MAC ≈ 1.6/3.3 pJ at 8/16 bit, SRAM
+//! ≈ 0.1 pJ/bit/access).
+
+pub mod area;
+pub mod power;
+pub mod scale;
+
+pub use area::{area_breakdown, AreaItem, LOGIC_KGE_TOTAL};
+pub use power::{network_power, PowerBreakdown};
+pub use scale::{scale_energy_eff, scale_power};

@@ -1,0 +1,140 @@
+//! Activity-based power model (Fig. 3c, Table II power rows).
+//!
+//! `E = Σᵢ activityᵢ · eᵢ`, activities from the cycle simulator's
+//! counters, per-event energies fitted to the paper's anchors (module
+//! docs in `energy`). Categories follow Fig. 3c:
+//!
+//! * **vALU** — MAC datapaths incl. pipeline registers & operand mux
+//!   (the paper notes these are included in its 44 %),
+//! * **memory** — DM SRAM + register files + line buffer (44.1 %),
+//! * **control** — instruction fetch/decode, scalar ALU, DMA engine.
+
+use crate::core::CoreStats;
+
+/// Fitted per-event energies (pJ), 28 nm @ 1 V. See module docs.
+pub mod consts {
+    /// One 16-bit MAC lane-op (multiplier + adder + pipe/mux share).
+    pub const E_MAC16: f64 = 3.3;
+    /// One precision-gated (≤8 bit effective) MAC lane-op — the gating
+    /// keeps multiplier LSB toggling quiet (Moons et al. [9]).
+    pub const E_MAC8: f64 = 1.585;
+    /// 512-bit VRl accumulator-entry write.
+    pub const E_VRL_WRITE: f64 = 20.4;
+    /// 256-bit VR register file access.
+    pub const E_VR_ACCESS: f64 = 4.0;
+    /// 256-bit DM SRAM bank access (port 0 or 1).
+    pub const E_DM_ACCESS: f64 = 25.0;
+    /// Line-buffer pixel read (16 bit, combinational port).
+    pub const E_LB_PIXEL: f64 = 0.505;
+    /// One LbLoad fill (≈4 port-1 accesses to the LB SRAM side).
+    pub const E_LB_FILL: f64 = 100.0;
+    /// One VLIW bundle: PM fetch (256 bit) + 4-slot decode + issue +
+    /// scalar ALU activity.
+    pub const E_BUNDLE: f64 = 68.0;
+    /// Requantize op (shift+round+saturate, 16 lanes).
+    pub const E_QMOV: f64 = 6.0;
+    /// SFU op (ReLU / pool-max, 16 lanes).
+    pub const E_SFU: f64 = 4.0;
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct PowerBreakdown {
+    pub valu_mw: f64,
+    pub mem_mw: f64,
+    pub ctrl_mw: f64,
+}
+
+impl PowerBreakdown {
+    pub fn total_mw(&self) -> f64 {
+        self.valu_mw + self.mem_mw + self.ctrl_mw
+    }
+    pub fn fractions(&self) -> (f64, f64, f64) {
+        let t = self.total_mw();
+        (self.valu_mw / t, self.mem_mw / t, self.ctrl_mw / t)
+    }
+}
+
+/// Power over an execution window of `seconds`, from activity counters.
+pub fn network_power(stats: &CoreStats, seconds: f64) -> PowerBreakdown {
+    use consts::*;
+    let mac16 = (stats.mac_ops - stats.mac_ops_gated8) as f64;
+    let mac8 = stats.mac_ops_gated8 as f64;
+    let e_valu = mac16 * E_MAC16 + mac8 * E_MAC8 + stats.qmovs as f64 * E_QMOV
+        + stats.sfu_ops as f64 * E_SFU;
+    let dm_accesses = (stats.vloads
+        + stats.vstores
+        + stats.sloads
+        + stats.sstores
+        + 2 * (stats.aloads + stats.astores)) as f64;
+    let e_mem = stats.vrl_writes as f64 * E_VRL_WRITE
+        + (stats.vr_reads + stats.vr_writes) as f64 * E_VR_ACCESS
+        + dm_accesses * E_DM_ACCESS
+        + stats.lb_pixel_reads as f64 * E_LB_PIXEL
+        + stats.lb_fills as f64 * E_LB_FILL;
+    let e_ctrl = stats.bundles as f64 * E_BUNDLE;
+    // pJ -> mW: 1e-12 J / s * 1e3
+    let to_mw = 1e-9 / seconds;
+    PowerBreakdown {
+        valu_mw: e_valu * to_mw,
+        mem_mw: e_mem * to_mw,
+        ctrl_mw: e_ctrl * to_mw,
+    }
+}
+
+/// Energy efficiency in GOP/s/W given useful MACs over `seconds`.
+pub fn energy_eff_gops_per_w(macs: u64, seconds: f64, power_mw: f64) -> f64 {
+    let gops = 2.0 * macs as f64 / seconds / 1e9;
+    gops / (power_mw / 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic_stats(macs: u64, gated: bool) -> CoreStats {
+        CoreStats {
+            mac_ops: macs,
+            mac_ops_gated8: if gated { macs } else { 0 },
+            vmacs: macs / 64,
+            vrl_writes: macs / 16,
+            vloads: macs / 192,
+            lb_pixel_reads: macs / 4,
+            lb_fills: macs / 2000,
+            bundles: macs / 150,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn gating_saves_mac_power() {
+        let s16 = synthetic_stats(1_000_000_000, false);
+        let s8 = synthetic_stats(1_000_000_000, true);
+        let p16 = network_power(&s16, 0.01);
+        let p8 = network_power(&s8, 0.01);
+        assert!(p8.valu_mw < p16.valu_mw * 0.6);
+        assert_eq!(p8.mem_mw, p16.mem_mw);
+    }
+
+    #[test]
+    fn power_scales_inverse_with_time() {
+        let s = synthetic_stats(1_000_000_000, true);
+        let fast = network_power(&s, 0.005);
+        let slow = network_power(&s, 0.010);
+        assert!((fast.total_mw() / slow.total_mw() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn energy_eff_formula() {
+        // 1 GMAC in 10 ms at 200 mW -> 200 GOP/s / 0.2 W = 1000 GOP/s/W
+        let eff = energy_eff_gops_per_w(1_000_000_000, 0.01, 200.0);
+        assert!((eff - 1000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let s = synthetic_stats(5_000_000, true);
+        let p = network_power(&s, 0.001);
+        let (a, b, c) = p.fractions();
+        assert!((a + b + c - 1.0).abs() < 1e-9);
+    }
+}

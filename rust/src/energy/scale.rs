@@ -1,0 +1,53 @@
+//! Technology scaling (Table II footnote f):
+//!
+//! `P_scaled = P_old · (L_new / L_old) · (V_DD,new / V_DD,old)²`
+//!
+//! used by the paper to compare designs fabricated in 65/40/28 nm at a
+//! uniform 28 nm / 1 V operating point.
+
+/// Scale a power figure from (l_old nm, v_old V) to (l_new, v_new).
+pub fn scale_power(p_old: f64, l_old: f64, v_old: f64, l_new: f64, v_new: f64) -> f64 {
+    p_old * (l_new / l_old) * (v_new / v_old).powi(2)
+}
+
+/// Scale an energy-efficiency figure (GOP/s/W) — inverse of power
+/// scaling at constant throughput.
+pub fn scale_energy_eff(eff_old: f64, l_old: f64, v_old: f64, l_new: f64, v_new: f64) -> f64 {
+    eff_old * (l_old / l_new) * (v_old / v_new).powi(2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eyeriss_scaling_matches_paper() {
+        // Eyeriss AlexNet: 187 GOP/s/W @ 65 nm / 1 V -> 434 @ 28 nm / 1 V
+        let scaled = scale_energy_eff(187.0, 65.0, 1.0, 28.0, 1.0);
+        assert!((scaled - 434.1).abs() < 1.0, "{scaled}");
+        // VGG: 104 -> 242
+        let vgg = scale_energy_eff(104.0, 65.0, 1.0, 28.0, 1.0);
+        assert!((vgg - 241.4).abs() < 1.0, "{vgg}");
+    }
+
+    #[test]
+    fn envision_scaling_matches_paper() {
+        // Envision: 815 GOP/s/W @ 40 nm, ~0.905 V -> ≈955 @ 28 nm / 1 V
+        let scaled = scale_energy_eff(815.0, 40.0, 0.905, 28.0, 1.0);
+        assert!((scaled - 955.0).abs() < 10.0, "{scaled}");
+    }
+
+    #[test]
+    fn identity_scaling() {
+        assert_eq!(scale_power(100.0, 28.0, 1.0, 28.0, 1.0), 100.0);
+        assert_eq!(scale_energy_eff(100.0, 28.0, 1.0, 28.0, 1.0), 100.0);
+    }
+
+    #[test]
+    fn power_and_eff_are_inverse() {
+        let p = scale_power(100.0, 65.0, 1.2, 28.0, 1.0);
+        let e = scale_energy_eff(50.0, 65.0, 1.2, 28.0, 1.0);
+        // P shrinks, eff grows by the same ratio
+        assert!(((100.0 / p) - (e / 50.0)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,204 @@
+//! Q-format 16-bit fixed-point arithmetic — the ConvAix datapath contract.
+//!
+//! These semantics are **bit-exact** with `python/compile/kernels/quant.py`
+//! (and therefore with the AOT HLO artifacts the golden tests compare
+//! against):
+//!
+//! * activations/weights: `i16`
+//! * MAC accumulation: **wrapping** `i32` (the VRl accumulator register is
+//!   32 bits per lane; hardware wraps, so does the model)
+//! * requantization: arithmetic shift right by the runtime-configured
+//!   fractional shift with a configurable rounding mode (the AOT artifacts
+//!   use `HalfUp`, the ASIP default), then saturation to `i16`
+//! * optional fused ReLU (the slot-1 SFU)
+//! * precision gating: zeroing of operand LSBs (energy technique of
+//!   Moons et al. [9]); numerics *and* the energy model respond to it.
+
+/// Rounding mode of the vALU requantization stage (runtime configurable
+/// on the ASIP via a control/status register).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoundMode {
+    /// Add 2^(s-1) then arithmetic shift (ties round towards +inf).
+    /// This is the mode baked into the AOT golden artifacts.
+    #[default]
+    HalfUp,
+    /// Plain arithmetic shift (truncate towards -inf).
+    Truncate,
+    /// Round half to even (unbiased; costs an extra adder stage on HW).
+    HalfEven,
+}
+
+impl RoundMode {
+    /// Parse a CSR encoding (see `isa::csr`).
+    pub fn from_bits(b: u32) -> RoundMode {
+        match b & 0b11 {
+            0 => RoundMode::HalfUp,
+            1 => RoundMode::Truncate,
+            _ => RoundMode::HalfEven,
+        }
+    }
+    pub fn to_bits(self) -> u32 {
+        match self {
+            RoundMode::HalfUp => 0,
+            RoundMode::Truncate => 1,
+            RoundMode::HalfEven => 2,
+        }
+    }
+}
+
+/// One 16×16→32-bit multiply-accumulate with wrapping i32 accumulation.
+#[inline(always)]
+pub fn mac(acc: i32, a: i16, w: i16) -> i32 {
+    acc.wrapping_add((a as i32).wrapping_mul(w as i32))
+}
+
+/// Shift-and-round an i32 accumulator right by `shift` bits.
+#[inline(always)]
+pub fn round_shift(acc: i32, shift: u8, mode: RoundMode) -> i32 {
+    if shift == 0 {
+        return acc;
+    }
+    let s = shift as u32;
+    match mode {
+        RoundMode::HalfUp => acc.wrapping_add(1 << (s - 1)) >> s,
+        RoundMode::Truncate => acc >> s,
+        RoundMode::HalfEven => {
+            let floor = acc >> s;
+            let rem = acc & ((1 << s) - 1);
+            let half = 1 << (s - 1);
+            if rem > half || (rem == half && (floor & 1) == 1) {
+                floor.wrapping_add(1)
+            } else {
+                floor
+            }
+        }
+    }
+}
+
+/// Saturate an i32 to the i16 range.
+#[inline(always)]
+pub fn sat16(v: i32) -> i16 {
+    v.clamp(i16::MIN as i32, i16::MAX as i32) as i16
+}
+
+/// Full requantization: shift+round, saturate, optional ReLU.
+/// Bit-exact with `quant.requantize` in python.
+#[inline(always)]
+pub fn requantize(acc: i32, shift: u8, mode: RoundMode, relu: bool) -> i16 {
+    let mut v = sat16(round_shift(acc, shift, mode));
+    if relu && v < 0 {
+        v = 0;
+    }
+    v
+}
+
+/// Accumulator initial value for a bias at output scale:
+/// after the final shift the bias lands at unit weight.
+#[inline(always)]
+pub fn mac_init(bias: i32, shift: u8) -> i32 {
+    if shift == 0 {
+        bias
+    } else {
+        bias.wrapping_shl(shift as u32)
+    }
+}
+
+/// Precision-gate an operand to `bits` effective bits by zeroing LSBs.
+/// `bits >= 16` is a no-op. Bit-exact with `quant.gate_precision`.
+#[inline(always)]
+pub fn gate(v: i16, bits: u8) -> i16 {
+    if bits >= 16 {
+        v
+    } else {
+        let mask = (-1i16) << (16 - bits as i32);
+        v & mask
+    }
+}
+
+/// Convert an f32 in [-1,1)·2^(15-frac) to Q-format i16 (test helper).
+pub fn to_q(v: f32, frac: u8) -> i16 {
+    let scaled = v * (1i32 << frac) as f32;
+    sat16(scaled.round() as i32)
+}
+
+/// Convert a Q-format i16 back to f32 (test helper).
+pub fn from_q(v: i16, frac: u8) -> f32 {
+    v as f32 / (1i32 << frac) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_wraps_like_hardware() {
+        // accumulate close to i32::MAX and beyond: must wrap, not saturate
+        let mut acc = i32::MAX - 10;
+        acc = mac(acc, 100, 100); // +10000 wraps
+        assert!(acc < 0, "expected wraparound, got {acc}");
+    }
+
+    #[test]
+    fn round_half_up_ties() {
+        assert_eq!(round_shift(3, 1, RoundMode::HalfUp), 2);
+        assert_eq!(round_shift(1, 1, RoundMode::HalfUp), 1);
+        assert_eq!(round_shift(-1, 1, RoundMode::HalfUp), 0);
+        assert_eq!(round_shift(-3, 1, RoundMode::HalfUp), -1);
+        assert_eq!(round_shift(2, 1, RoundMode::HalfUp), 1);
+    }
+
+    #[test]
+    fn round_truncate() {
+        assert_eq!(round_shift(3, 1, RoundMode::Truncate), 1);
+        assert_eq!(round_shift(-1, 1, RoundMode::Truncate), -1);
+        assert_eq!(round_shift(-4, 2, RoundMode::Truncate), -1);
+    }
+
+    #[test]
+    fn round_half_even() {
+        // 1.5 -> 2, 2.5 -> 2, -1.5 -> -2 (to even)
+        assert_eq!(round_shift(3, 1, RoundMode::HalfEven), 2);
+        assert_eq!(round_shift(5, 1, RoundMode::HalfEven), 2);
+        assert_eq!(round_shift(-3, 1, RoundMode::HalfEven), -2);
+        assert_eq!(round_shift(7, 1, RoundMode::HalfEven), 4);
+    }
+
+    #[test]
+    fn requantize_saturates() {
+        assert_eq!(requantize(40_000, 0, RoundMode::HalfUp, false), 32767);
+        assert_eq!(requantize(-40_000, 0, RoundMode::HalfUp, false), -32768);
+    }
+
+    #[test]
+    fn requantize_relu() {
+        assert_eq!(requantize(-5, 0, RoundMode::HalfUp, true), 0);
+        assert_eq!(requantize(5, 0, RoundMode::HalfUp, true), 5);
+    }
+
+    #[test]
+    fn requantize_wrapping_round_addend() {
+        // matches python test_requantize_wrapping_round_addend
+        assert_eq!(requantize(i32::MAX, 8, RoundMode::HalfUp, false), -32768);
+    }
+
+    #[test]
+    fn gating_masks_lsbs() {
+        assert_eq!(gate(0x1234, 8), 0x1200);
+        assert_eq!(gate(0x1234, 16), 0x1234);
+        assert_eq!(gate(0x1234, 4), 0x1000);
+        assert_eq!(gate(-1, 8), -256);
+    }
+
+    #[test]
+    fn q_roundtrip() {
+        let v = to_q(0.5, 8);
+        assert_eq!(v, 128);
+        assert!((from_q(v, 8) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mac_init_shifts_bias() {
+        assert_eq!(mac_init(3, 8), 3 << 8);
+        assert_eq!(mac_init(-3, 0), -3);
+    }
+}

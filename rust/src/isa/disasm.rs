@@ -1,0 +1,176 @@
+//! Disassembler: `Bundle` → the `.cvx` assembly syntax accepted by
+//! [`super::asm`]. `asm(disasm(p)) == p` is property-tested.
+
+use super::*;
+
+fn alu_name(f: AluFn) -> &'static str {
+    match f {
+        AluFn::Add => "add",
+        AluFn::Sub => "sub",
+        AluFn::Mul => "mul",
+        AluFn::And => "and",
+        AluFn::Or => "or",
+        AluFn::Xor => "xor",
+        AluFn::Shl => "shl",
+        AluFn::Shr => "shr",
+        AluFn::Min => "min",
+        AluFn::Max => "max",
+    }
+}
+
+fn cond_name(c: Cond) -> &'static str {
+    match c {
+        Cond::Eq => "beq",
+        Cond::Ne => "bne",
+        Cond::Lt => "blt",
+        Cond::Ge => "bge",
+    }
+}
+
+fn csr_name(c: Csr) -> &'static str {
+    match c {
+        Csr::FracShift => "frac_shift",
+        Csr::RoundMode => "round_mode",
+        Csr::GateBits => "gate_bits",
+        Csr::LbStride => "lb_stride",
+    }
+}
+
+fn vfn_name(f: VFn) -> &'static str {
+    match f {
+        VFn::Add => "vadd",
+        VFn::Sub => "vsub",
+        VFn::Mul => "vmul16",
+        VFn::Max => "vmax",
+        VFn::Min => "vmin",
+        VFn::Shl => "vshl",
+        VFn::Shr => "vshr",
+    }
+}
+
+fn addr_str(a: &Addr) -> String {
+    let mut s = format!("[r{}", a.base.0);
+    if a.offset != 0 {
+        s.push_str(&format!("+{}", a.offset));
+    }
+    s.push(']');
+    if a.post_inc != 0 {
+        s.push_str(&format!("!{}", a.post_inc));
+    }
+    s
+}
+
+pub fn slot0(op: &SlotOp) -> String {
+    match *op {
+        SlotOp::Nop => "nop".into(),
+        SlotOp::Li { rd, imm } => format!("li r{}, {}", rd.0, imm),
+        SlotOp::Alu { f, w, rd, ra, rb } => format!(
+            "{}{} r{}, r{}, r{}",
+            alu_name(f),
+            if w == Width::W16 { ".16" } else { "" },
+            rd.0,
+            ra.0,
+            rb.0
+        ),
+        SlotOp::AluI { f, w, rd, ra, imm } => format!(
+            "{}i{} r{}, r{}, {}",
+            alu_name(f),
+            if w == Width::W16 { ".16" } else { "" },
+            rd.0,
+            ra.0,
+            imm
+        ),
+        SlotOp::Br { c, ra, rb, target } => {
+            format!("{} r{}, r{}, @{}", cond_name(c), ra.0, rb.0, target)
+        }
+        SlotOp::Jmp { target } => format!("jmp @{target}"),
+        SlotOp::Loop { n, body } => format!("loop r{}, {}", n.0, body),
+        SlotOp::LoopI { n, body } => format!("loopi {n}, {body}"),
+        SlotOp::Halt => "halt".into(),
+        SlotOp::Csrwi { csr, imm } => format!("csrwi {}, {}", csr_name(csr), imm),
+        SlotOp::Csrw { csr, rs } => format!("csrw {}, r{}", csr_name(csr), rs.0),
+        SlotOp::LdS { rd, addr } => format!("lds r{}, {}", rd.0, addr_str(&addr)),
+        SlotOp::StS { rs, addr } => format!("sts r{}, {}", rs.0, addr_str(&addr)),
+        SlotOp::LdV { vd, addr } => format!("ldv v{}, {}", vd.0, addr_str(&addr)),
+        SlotOp::StV { vs, addr } => format!("stv v{}, {}", vs.0, addr_str(&addr)),
+        SlotOp::LdA { ad, addr } => format!("lda a{}, {}", ad.0, addr_str(&addr)),
+        SlotOp::StA { as_, addr } => format!("sta a{}, {}", as_.0, addr_str(&addr)),
+        SlotOp::DmaLoad { ch, ext, dm, len } => {
+            format!("dmald {}, r{}, r{}, r{}", ch, ext.0, dm.0, len.0)
+        }
+        SlotOp::DmaStore { ch, ext, dm, len } => {
+            format!("dmast {}, r{}, r{}, r{}", ch, ext.0, dm.0, len.0)
+        }
+        SlotOp::DmaWait { ch } => format!("dmawait {ch}"),
+        SlotOp::LbLoad { row, dm, off, win, nrows, rstride } => {
+            format!("lbld {}, r{}, {}, {}, {}, {}", row, dm.0, off, win, nrows, rstride)
+        }
+        SlotOp::LdVF { addr } => format!("ldvf {}", addr_str(&addr)),
+    }
+}
+
+fn asrc(a: &ASrc) -> String {
+    match *a {
+        ASrc::Lb { row, off } => format!("lb{row}:{off}"),
+        ASrc::LbVec { row, off } => format!("lbv{row}:{off}"),
+        ASrc::VrBcast { vr, base, step } => format!("v{}~{}+{}", vr.0, base, step),
+        ASrc::VrQuad { vr } => format!("q{}", vr.0),
+    }
+}
+
+fn bsrc(b: &BSrc) -> String {
+    match *b {
+        BSrc::Vr { vr } => format!("v{}", vr.0),
+        BSrc::VrLane { vr, lane } => format!("v{}.{}", vr.0, lane),
+        BSrc::VrQuad { vr } => format!("q{}", vr.0),
+        BSrc::VrLaneQuad { vr, base } => format!("v{}.{}+", vr.0, base),
+        BSrc::Fifo => "ff".into(),
+        BSrc::FifoLaneQuad { base } => format!("ff.{base}+"),
+    }
+}
+
+pub fn vec(op: &VecOp) -> String {
+    match *op {
+        VecOp::Nop => "vnop".into(),
+        VecOp::Mac { a, b } => format!("vmac {}, {}", asrc(&a), bsrc(&b)),
+        VecOp::Mul { a, b } => format!("vmul {}, {}", asrc(&a), bsrc(&b)),
+        VecOp::ClrA { only: None } => "vclra".into(),
+        VecOp::ClrA { only: Some(j) } => format!("vclra {j}"),
+        VecOp::InitA { vr } => format!("vinita v{}", vr.0),
+        VecOp::InitALane { vr, base } => format!("vinital v{}.{}+", vr.0, base),
+        VecOp::QMov { vd, j, relu } => {
+            format!("vqmov{} v{}, {}", if relu { ".relu" } else { "" }, vd.0, j)
+        }
+        VecOp::EOp { f, vd, va, vb } => {
+            format!("{} v{}, v{}, v{}", vfn_name(f), vd.0, va.0, vb.0)
+        }
+        VecOp::EOpI { f, vd, va, imm } => {
+            format!("{}i v{}, v{}, {}", vfn_name(f), vd.0, va.0, imm)
+        }
+        VecOp::Mov { vd, vs } => format!("vmov v{}, v{}", vd.0, vs.0),
+        VecOp::Bcst { vd, vs, lane } => format!("vbcst v{}, v{}.{}", vd.0, vs.0, lane),
+        VecOp::Relu { vd, vs } => format!("vrelu v{}, v{}", vd.0, vs.0),
+        VecOp::PoolMax { vd, va, vb } => format!("vpoolmax v{}, v{}, v{}", vd.0, va.0, vb.0),
+    }
+}
+
+/// Disassemble one bundle: four slots joined by ` | `.
+pub fn bundle(b: &Bundle) -> String {
+    format!(
+        "{} | {} | {} | {}",
+        slot0(&b.slot0),
+        vec(&b.v[0]),
+        vec(&b.v[1]),
+        vec(&b.v[2])
+    )
+}
+
+/// Disassemble a whole program with bundle indices as `@n` comments.
+pub fn program(p: &Program) -> String {
+    let mut out = String::new();
+    for b in &p.bundles {
+        out.push_str(&bundle(b));
+        out.push('\n');
+    }
+    out
+}

@@ -1,0 +1,661 @@
+//! Binary instruction encoding.
+//!
+//! Each slot op encodes to one 64-bit word; a bundle is 4 words = 32 bytes.
+//! The 16 KB program memory therefore holds 512 bundles — a real capacity
+//! limit the code generator must respect (`codegen` returns an error when
+//! a kernel does not fit, and the layout planner then shrinks tile sizes).
+//!
+//! The encoding is dense enough to be honest about PM pressure but favors
+//! decode simplicity over minimal width (the paper does not publish its
+//! encoding). Layout (LSB-first):
+//!
+//! ```text
+//! [7:0]   opcode
+//! [15:8]  field a
+//! [23:16] field b
+//! [31:24] field c
+//! [63:32] imm32
+//! ```
+
+use super::*;
+
+pub const WORD_BYTES: usize = 8;
+pub const BUNDLE_BYTES: usize = 4 * WORD_BYTES;
+
+// --- slot-0 opcodes -------------------------------------------------------
+const OP_NOP: u8 = 0x00;
+const OP_LI: u8 = 0x01;
+const OP_ALU: u8 = 0x02;
+const OP_ALUI: u8 = 0x03;
+const OP_BR: u8 = 0x04;
+const OP_JMP: u8 = 0x05;
+const OP_LOOP: u8 = 0x06;
+const OP_LOOPI: u8 = 0x07;
+const OP_HALT: u8 = 0x08;
+const OP_CSRWI: u8 = 0x09;
+const OP_CSRW: u8 = 0x0A;
+const OP_LDS: u8 = 0x0B;
+const OP_STS: u8 = 0x0C;
+const OP_LDV: u8 = 0x0D;
+const OP_STV: u8 = 0x0E;
+const OP_LDA: u8 = 0x0F;
+const OP_STA: u8 = 0x10;
+const OP_DMAL: u8 = 0x11;
+const OP_DMAS: u8 = 0x12;
+const OP_DMAW: u8 = 0x13;
+const OP_LBLD: u8 = 0x14;
+const OP_LDVF: u8 = 0x16;
+
+// --- vector opcodes -------------------------------------------------------
+const OP_VNOP: u8 = 0x80;
+const OP_VMAC: u8 = 0x81;
+const OP_VMUL: u8 = 0x82;
+const OP_VCLRA: u8 = 0x83;
+const OP_VINITA: u8 = 0x84;
+const OP_VQMOV: u8 = 0x85;
+const OP_VEOP: u8 = 0x86;
+const OP_VEOPI: u8 = 0x87;
+const OP_VMOV: u8 = 0x88;
+const OP_VBCST: u8 = 0x89;
+const OP_VRELU: u8 = 0x8A;
+const OP_VPOOLMAX: u8 = 0x8B;
+const OP_VINITAL: u8 = 0x8C;
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum EncodeError {
+    #[error("bad opcode {0:#x} at word {1}")]
+    BadOpcode(u8, usize),
+    #[error("field out of range: {0}")]
+    Range(&'static str),
+    #[error("truncated program: {0} bytes is not a multiple of {BUNDLE_BYTES}")]
+    Truncated(usize),
+}
+
+#[inline]
+fn pack(op: u8, a: u8, b: u8, c: u8, imm: u32) -> u64 {
+    op as u64 | (a as u64) << 8 | (b as u64) << 16 | (c as u64) << 24 | (imm as u64) << 32
+}
+
+#[inline]
+fn un(w: u64) -> (u8, u8, u8, u8, u32) {
+    (
+        w as u8,
+        (w >> 8) as u8,
+        (w >> 16) as u8,
+        (w >> 24) as u8,
+        (w >> 32) as u32,
+    )
+}
+
+fn alu_bits(f: AluFn) -> u8 {
+    match f {
+        AluFn::Add => 0,
+        AluFn::Sub => 1,
+        AluFn::Mul => 2,
+        AluFn::And => 3,
+        AluFn::Or => 4,
+        AluFn::Xor => 5,
+        AluFn::Shl => 6,
+        AluFn::Shr => 7,
+        AluFn::Min => 8,
+        AluFn::Max => 9,
+    }
+}
+
+fn alu_from(b: u8) -> Option<AluFn> {
+    Some(match b {
+        0 => AluFn::Add,
+        1 => AluFn::Sub,
+        2 => AluFn::Mul,
+        3 => AluFn::And,
+        4 => AluFn::Or,
+        5 => AluFn::Xor,
+        6 => AluFn::Shl,
+        7 => AluFn::Shr,
+        8 => AluFn::Min,
+        9 => AluFn::Max,
+        _ => return None,
+    })
+}
+
+fn cond_bits(c: Cond) -> u8 {
+    match c {
+        Cond::Eq => 0,
+        Cond::Ne => 1,
+        Cond::Lt => 2,
+        Cond::Ge => 3,
+    }
+}
+
+fn cond_from(b: u8) -> Option<Cond> {
+    Some(match b {
+        0 => Cond::Eq,
+        1 => Cond::Ne,
+        2 => Cond::Lt,
+        3 => Cond::Ge,
+        _ => return None,
+    })
+}
+
+fn csr_bits(c: Csr) -> u8 {
+    match c {
+        Csr::FracShift => 0,
+        Csr::RoundMode => 1,
+        Csr::GateBits => 2,
+        Csr::LbStride => 3,
+    }
+}
+
+fn csr_from(b: u8) -> Option<Csr> {
+    Some(match b {
+        0 => Csr::FracShift,
+        1 => Csr::RoundMode,
+        2 => Csr::GateBits,
+        3 => Csr::LbStride,
+        _ => return None,
+    })
+}
+
+/// Addr packs: a=base, imm = offset (low 24, sign-extended) | post_inc
+/// (high 8, as multiples of 2 bytes, signed). Offsets are byte values.
+fn addr_pack(a: Addr) -> Result<(u8, u32), EncodeError> {
+    let off = a.offset;
+    if !(-(1 << 23)..(1 << 23)).contains(&off) {
+        return Err(EncodeError::Range("addr offset"));
+    }
+    let pi = a.post_inc / 2;
+    if a.post_inc % 2 != 0 || !(-128..128).contains(&pi) {
+        return Err(EncodeError::Range("post-increment"));
+    }
+    let imm = (off as u32 & 0x00FF_FFFF) | ((pi as i8 as u8 as u32) << 24);
+    Ok((a.base.0, imm))
+}
+
+fn addr_unpack(base: u8, imm: u32) -> Addr {
+    let off = ((imm & 0x00FF_FFFF) as i32) << 8 >> 8; // sign-extend 24 bits
+    let pi = ((imm >> 24) as u8 as i8 as i32) * 2;
+    Addr { base: SReg(base), offset: off, post_inc: pi }
+}
+
+pub fn encode_slot0(op: &SlotOp) -> Result<u64, EncodeError> {
+    Ok(match *op {
+        SlotOp::Nop => pack(OP_NOP, 0, 0, 0, 0),
+        SlotOp::Li { rd, imm } => pack(OP_LI, rd.0, 0, 0, imm as u32),
+        SlotOp::Alu { f, w, rd, ra, rb } => pack(
+            OP_ALU,
+            rd.0,
+            ra.0,
+            rb.0,
+            alu_bits(f) as u32 | ((w == Width::W16) as u32) << 8,
+        ),
+        SlotOp::AluI { f, w, rd, ra, imm } => {
+            if !(-(1 << 15)..(1 << 15)).contains(&imm) {
+                return Err(EncodeError::Range("alui imm"));
+            }
+            pack(
+                OP_ALUI,
+                rd.0,
+                ra.0,
+                alu_bits(f) | ((w == Width::W16) as u8) << 7,
+                (imm as u16) as u32,
+            )
+        }
+        SlotOp::Br { c, ra, rb, target } => pack(OP_BR, cond_bits(c), ra.0, rb.0, target),
+        SlotOp::Jmp { target } => pack(OP_JMP, 0, 0, 0, target),
+        SlotOp::Loop { n, body } => pack(OP_LOOP, n.0, 0, 0, body as u32),
+        SlotOp::LoopI { n, body } => {
+            if n >= 1 << 16 {
+                return Err(EncodeError::Range("loopi count"));
+            }
+            pack(OP_LOOPI, 0, 0, 0, n << 16 | body as u32)
+        }
+        SlotOp::Halt => pack(OP_HALT, 0, 0, 0, 0),
+        SlotOp::Csrwi { csr, imm } => pack(OP_CSRWI, csr_bits(csr), 0, 0, imm),
+        SlotOp::Csrw { csr, rs } => pack(OP_CSRW, csr_bits(csr), rs.0, 0, 0),
+        SlotOp::LdS { rd, addr } => {
+            let (b, imm) = addr_pack(addr)?;
+            pack(OP_LDS, rd.0, b, 0, imm)
+        }
+        SlotOp::StS { rs, addr } => {
+            let (b, imm) = addr_pack(addr)?;
+            pack(OP_STS, rs.0, b, 0, imm)
+        }
+        SlotOp::LdV { vd, addr } => {
+            let (b, imm) = addr_pack(addr)?;
+            pack(OP_LDV, vd.0, b, 0, imm)
+        }
+        SlotOp::StV { vs, addr } => {
+            let (b, imm) = addr_pack(addr)?;
+            pack(OP_STV, vs.0, b, 0, imm)
+        }
+        SlotOp::LdA { ad, addr } => {
+            let (b, imm) = addr_pack(addr)?;
+            pack(OP_LDA, ad.0, b, 0, imm)
+        }
+        SlotOp::StA { as_, addr } => {
+            let (b, imm) = addr_pack(addr)?;
+            pack(OP_STA, as_.0, b, 0, imm)
+        }
+        SlotOp::DmaLoad { ch, ext, dm, len } => pack(OP_DMAL, ch, ext.0, dm.0, len.0 as u32),
+        SlotOp::DmaStore { ch, ext, dm, len } => pack(OP_DMAS, ch, ext.0, dm.0, len.0 as u32),
+        SlotOp::DmaWait { ch } => pack(OP_DMAW, ch, 0, 0, 0),
+        SlotOp::LbLoad { row, dm, off, win, nrows, rstride } => {
+            if row > 3 || nrows > 15 || win > 64 {
+                return Err(EncodeError::Range("lbld fields"));
+            }
+            // a = row(2) | nrows(4)<<2 ; c = win ; imm = off | rstride<<16
+            pack(
+                OP_LBLD,
+                row | nrows << 2,
+                dm.0,
+                win,
+                off as u32 | (rstride as u32) << 16,
+            )
+        }
+        SlotOp::LdVF { addr } => {
+            let (b, imm) = addr_pack(addr)?;
+            pack(OP_LDVF, 0, b, 0, imm)
+        }
+    })
+}
+
+fn asrc_pack(a: ASrc) -> (u8, u16) {
+    match a {
+        // off in [9:0], row in [11:10]
+        ASrc::Lb { row, off } => (0, (off & 0x3FF) | (row as u16 & 0x3) << 10),
+        ASrc::VrBcast { vr, base, step } => (1, vr.0 as u16 | (base as u16) << 4 | (step as u16) << 9),
+        ASrc::VrQuad { vr } => (2, vr.0 as u16),
+        ASrc::LbVec { row, off } => (3, (off & 0x3FF) | (row as u16 & 0x3) << 10),
+    }
+}
+
+fn asrc_unpack(tag: u8, v: u16) -> Option<ASrc> {
+    Some(match tag {
+        0 => ASrc::Lb { row: ((v >> 10) & 0x3) as u8, off: v & 0x3FF },
+        1 => ASrc::VrBcast {
+            vr: VReg((v & 0xF) as u8),
+            base: ((v >> 4) & 0x1F) as u8,
+            step: ((v >> 9) & 0x7F) as u8,
+        },
+        2 => ASrc::VrQuad { vr: VReg((v & 0xF) as u8) },
+        3 => ASrc::LbVec { row: ((v >> 10) & 0x3) as u8, off: v & 0x3FF },
+        _ => return None,
+    })
+}
+
+fn bsrc_pack(b: BSrc) -> (u8, u16) {
+    match b {
+        BSrc::Vr { vr } => (0, vr.0 as u16),
+        BSrc::VrLane { vr, lane } => (1, vr.0 as u16 | (lane as u16) << 4),
+        BSrc::VrQuad { vr } => (2, vr.0 as u16),
+        BSrc::VrLaneQuad { vr, base } => (3, vr.0 as u16 | (base as u16) << 4),
+        BSrc::Fifo => (4, 0),
+        BSrc::FifoLaneQuad { base } => (5, base as u16),
+    }
+}
+
+fn bsrc_unpack(tag: u8, v: u16) -> Option<BSrc> {
+    Some(match tag {
+        0 => BSrc::Vr { vr: VReg((v & 0xF) as u8) },
+        1 => BSrc::VrLane { vr: VReg((v & 0xF) as u8), lane: ((v >> 4) & 0xF) as u8 },
+        2 => BSrc::VrQuad { vr: VReg((v & 0xF) as u8) },
+        3 => BSrc::VrLaneQuad { vr: VReg((v & 0xF) as u8), base: ((v >> 4) & 0xF) as u8 },
+        4 => BSrc::Fifo,
+        5 => BSrc::FifoLaneQuad { base: (v & 0xF) as u8 },
+        _ => return None,
+    })
+}
+
+fn vfn_bits(f: VFn) -> u8 {
+    match f {
+        VFn::Add => 0,
+        VFn::Sub => 1,
+        VFn::Mul => 2,
+        VFn::Max => 3,
+        VFn::Min => 4,
+        VFn::Shl => 5,
+        VFn::Shr => 6,
+    }
+}
+
+fn vfn_from(b: u8) -> Option<VFn> {
+    Some(match b {
+        0 => VFn::Add,
+        1 => VFn::Sub,
+        2 => VFn::Mul,
+        3 => VFn::Max,
+        4 => VFn::Min,
+        5 => VFn::Shl,
+        6 => VFn::Shr,
+        _ => return None,
+    })
+}
+
+pub fn encode_vec(op: &VecOp) -> Result<u64, EncodeError> {
+    Ok(match *op {
+        VecOp::Nop => pack(OP_VNOP, 0, 0, 0, 0),
+        VecOp::Mac { a, b } => {
+            let (at, av) = asrc_pack(a);
+            let (bt, bv) = bsrc_pack(b);
+            pack(OP_VMAC, at, bt, 0, av as u32 | (bv as u32) << 16)
+        }
+        VecOp::Mul { a, b } => {
+            let (at, av) = asrc_pack(a);
+            let (bt, bv) = bsrc_pack(b);
+            pack(OP_VMUL, at, bt, 0, av as u32 | (bv as u32) << 16)
+        }
+        VecOp::ClrA { only } => pack(OP_VCLRA, only.map_or(0xFF, |j| j), 0, 0, 0),
+        VecOp::InitA { vr } => pack(OP_VINITA, vr.0, 0, 0, 0),
+        VecOp::InitALane { vr, base } => pack(OP_VINITAL, vr.0, base, 0, 0),
+        VecOp::QMov { vd, j, relu } => pack(OP_VQMOV, vd.0, j, relu as u8, 0),
+        VecOp::EOp { f, vd, va, vb } => pack(OP_VEOP, vd.0, va.0, vb.0, vfn_bits(f) as u32),
+        VecOp::EOpI { f, vd, va, imm } => {
+            pack(OP_VEOPI, vd.0, va.0, vfn_bits(f), (imm as u16) as u32)
+        }
+        VecOp::Mov { vd, vs } => pack(OP_VMOV, vd.0, vs.0, 0, 0),
+        VecOp::Bcst { vd, vs, lane } => pack(OP_VBCST, vd.0, vs.0, lane, 0),
+        VecOp::Relu { vd, vs } => pack(OP_VRELU, vd.0, vs.0, 0, 0),
+        VecOp::PoolMax { vd, va, vb } => pack(OP_VPOOLMAX, vd.0, va.0, vb.0, 0),
+    })
+}
+
+pub fn decode_slot0(w: u64, idx: usize) -> Result<SlotOp, EncodeError> {
+    let (op, a, b, c, imm) = un(w);
+    let bad = || EncodeError::BadOpcode(op, idx);
+    Ok(match op {
+        OP_NOP => SlotOp::Nop,
+        OP_LI => SlotOp::Li { rd: SReg(a), imm: imm as i32 },
+        OP_ALU => SlotOp::Alu {
+            f: alu_from((imm & 0xFF) as u8).ok_or_else(bad)?,
+            w: if imm >> 8 & 1 == 1 { Width::W16 } else { Width::W32 },
+            rd: SReg(a),
+            ra: SReg(b),
+            rb: SReg(c),
+        },
+        OP_ALUI => SlotOp::AluI {
+            f: alu_from(c & 0x7F).ok_or_else(bad)?,
+            w: if c >> 7 == 1 { Width::W16 } else { Width::W32 },
+            rd: SReg(a),
+            ra: SReg(b),
+            imm: imm as u16 as i16 as i32,
+        },
+        OP_BR => SlotOp::Br {
+            c: cond_from(a).ok_or_else(bad)?,
+            ra: SReg(b),
+            rb: SReg(c),
+            target: imm,
+        },
+        OP_JMP => SlotOp::Jmp { target: imm },
+        OP_LOOP => SlotOp::Loop { n: SReg(a), body: imm as u16 },
+        OP_LOOPI => SlotOp::LoopI { n: imm >> 16, body: (imm & 0xFFFF) as u16 },
+        OP_HALT => SlotOp::Halt,
+        OP_CSRWI => SlotOp::Csrwi { csr: csr_from(a).ok_or_else(bad)?, imm },
+        OP_CSRW => SlotOp::Csrw { csr: csr_from(a).ok_or_else(bad)?, rs: SReg(b) },
+        OP_LDS => SlotOp::LdS { rd: SReg(a), addr: addr_unpack(b, imm) },
+        OP_STS => SlotOp::StS { rs: SReg(a), addr: addr_unpack(b, imm) },
+        OP_LDV => SlotOp::LdV { vd: VReg(a), addr: addr_unpack(b, imm) },
+        OP_STV => SlotOp::StV { vs: VReg(a), addr: addr_unpack(b, imm) },
+        OP_LDA => SlotOp::LdA { ad: VAcc(a), addr: addr_unpack(b, imm) },
+        OP_STA => SlotOp::StA { as_: VAcc(a), addr: addr_unpack(b, imm) },
+        OP_DMAL => SlotOp::DmaLoad { ch: a, ext: SReg(b), dm: SReg(c), len: SReg(imm as u8) },
+        OP_DMAS => SlotOp::DmaStore { ch: a, ext: SReg(b), dm: SReg(c), len: SReg(imm as u8) },
+        OP_DMAW => SlotOp::DmaWait { ch: a },
+        OP_LBLD => SlotOp::LbLoad {
+            row: a & 0x3,
+            nrows: a >> 2,
+            dm: SReg(b),
+            win: c,
+            off: imm as u16,
+            rstride: (imm >> 16) as u16,
+        },
+        OP_LDVF => SlotOp::LdVF { addr: addr_unpack(b, imm) },
+        _ => return Err(bad()),
+    })
+}
+
+pub fn decode_vec(w: u64, idx: usize) -> Result<VecOp, EncodeError> {
+    let (op, a, b, c, imm) = un(w);
+    let bad = || EncodeError::BadOpcode(op, idx);
+    Ok(match op {
+        OP_VNOP => VecOp::Nop,
+        OP_VMAC | OP_VMUL => {
+            let asrc = asrc_unpack(a, (imm & 0xFFFF) as u16).ok_or_else(bad)?;
+            let bsrc = bsrc_unpack(b, (imm >> 16) as u16).ok_or_else(bad)?;
+            if op == OP_VMAC {
+                VecOp::Mac { a: asrc, b: bsrc }
+            } else {
+                VecOp::Mul { a: asrc, b: bsrc }
+            }
+        }
+        OP_VCLRA => VecOp::ClrA { only: if a == 0xFF { None } else { Some(a) } },
+        OP_VINITA => VecOp::InitA { vr: VReg(a) },
+        OP_VINITAL => VecOp::InitALane { vr: VReg(a), base: b },
+        OP_VQMOV => VecOp::QMov { vd: VReg(a), j: b, relu: c != 0 },
+        OP_VEOP => VecOp::EOp {
+            f: vfn_from(imm as u8).ok_or_else(bad)?,
+            vd: VReg(a),
+            va: VReg(b),
+            vb: VReg(c),
+        },
+        OP_VEOPI => VecOp::EOpI {
+            f: vfn_from(c).ok_or_else(bad)?,
+            vd: VReg(a),
+            va: VReg(b),
+            imm: imm as u16 as i16,
+        },
+        OP_VMOV => VecOp::Mov { vd: VReg(a), vs: VReg(b) },
+        OP_VBCST => VecOp::Bcst { vd: VReg(a), vs: VReg(b), lane: c },
+        OP_VRELU => VecOp::Relu { vd: VReg(a), vs: VReg(b) },
+        OP_VPOOLMAX => VecOp::PoolMax { vd: VReg(a), va: VReg(b), vb: VReg(c) },
+        _ => return Err(bad()),
+    })
+}
+
+/// Encode a whole program to bytes (little-endian words).
+pub fn encode_program(p: &Program) -> Result<Vec<u8>, EncodeError> {
+    let mut out = Vec::with_capacity(p.bundles.len() * BUNDLE_BYTES);
+    for b in &p.bundles {
+        out.extend_from_slice(&encode_slot0(&b.slot0)?.to_le_bytes());
+        for v in &b.v {
+            out.extend_from_slice(&encode_vec(v)?.to_le_bytes());
+        }
+    }
+    Ok(out)
+}
+
+/// Decode a program from bytes.
+pub fn decode_program(bytes: &[u8]) -> Result<Program, EncodeError> {
+    if bytes.len() % BUNDLE_BYTES != 0 {
+        return Err(EncodeError::Truncated(bytes.len()));
+    }
+    let mut bundles = Vec::with_capacity(bytes.len() / BUNDLE_BYTES);
+    for (i, chunk) in bytes.chunks_exact(BUNDLE_BYTES).enumerate() {
+        let w = |k: usize| u64::from_le_bytes(chunk[k * 8..(k + 1) * 8].try_into().unwrap());
+        bundles.push(Bundle {
+            slot0: decode_slot0(w(0), i)?,
+            v: [
+                decode_vec(w(1), i)?,
+                decode_vec(w(2), i)?,
+                decode_vec(w(3), i)?,
+            ],
+        });
+    }
+    Ok(Program { bundles })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{prop, Gen};
+
+    fn arb_slot0(g: &mut Gen) -> SlotOp {
+        match g.int(0, 13) {
+            0 => SlotOp::Nop,
+            1 => SlotOp::Li { rd: SReg(g.usize_in(0, 31) as u8), imm: g.int(i32::MIN as i64, i32::MAX as i64) as i32 },
+            2 => SlotOp::Alu {
+                f: *g.pick(&[AluFn::Add, AluFn::Sub, AluFn::Mul, AluFn::Shr, AluFn::Max]),
+                w: if g.bool() { Width::W16 } else { Width::W32 },
+                rd: SReg(g.usize_in(0, 31) as u8),
+                ra: SReg(g.usize_in(0, 31) as u8),
+                rb: SReg(g.usize_in(0, 31) as u8),
+            },
+            3 => SlotOp::AluI {
+                f: *g.pick(&[AluFn::Add, AluFn::And, AluFn::Shl]),
+                w: Width::W32,
+                rd: SReg(g.usize_in(0, 31) as u8),
+                ra: SReg(g.usize_in(0, 31) as u8),
+                imm: g.int(-32768, 32767) as i32,
+            },
+            4 => SlotOp::Br {
+                c: *g.pick(&[Cond::Eq, Cond::Ne, Cond::Lt, Cond::Ge]),
+                ra: SReg(g.usize_in(0, 31) as u8),
+                rb: SReg(g.usize_in(0, 31) as u8),
+                target: g.int(0, 511) as u32,
+            },
+            5 => SlotOp::LdV {
+                vd: VReg(g.usize_in(0, 15) as u8),
+                addr: Addr {
+                    base: SReg(g.usize_in(0, 31) as u8),
+                    offset: g.int(-100000, 100000) as i32,
+                    post_inc: g.int(-60, 60) as i32 * 2,
+                },
+            },
+            6 => SlotOp::StA {
+                as_: VAcc(g.usize_in(0, 11) as u8),
+                addr: Addr::offs(SReg(1), g.int(0, 4000) as i32),
+            },
+            7 => SlotOp::LoopI { n: g.int(1, 65535) as u32, body: g.int(1, 400) as u16 },
+            8 => SlotOp::Csrwi { csr: *g.pick(&[Csr::FracShift, Csr::RoundMode, Csr::GateBits, Csr::LbStride]), imm: g.int(0, 31) as u32 },
+            9 => SlotOp::DmaLoad { ch: g.int(0, 1) as u8, ext: SReg(1), dm: SReg(2), len: SReg(3) },
+            10 => SlotOp::LbLoad {
+                row: g.int(0, 3) as u8,
+                dm: SReg(g.usize_in(0, 31) as u8),
+                off: g.int(0, 60000) as u16,
+                win: g.int(1, 60) as u8,
+                nrows: g.int(1, 11) as u8,
+                rstride: g.int(2, 1000) as u16,
+            },
+            13 => SlotOp::LdVF {
+                addr: Addr {
+                    base: SReg(g.usize_in(0, 31) as u8),
+                    offset: g.int(-4096, 4096) as i32,
+                    post_inc: g.int(-16, 16) as i32 * 2,
+                },
+            },
+            11 => SlotOp::Halt,
+            _ => SlotOp::DmaWait { ch: g.int(0, 1) as u8 },
+        }
+    }
+
+    fn arb_vec(g: &mut Gen) -> VecOp {
+        match g.int(0, 8) {
+            0 => VecOp::Nop,
+            1 => VecOp::Mac {
+                a: ASrc::Lb { row: g.int(0, 3) as u8, off: g.int(0, 1023) as u16 },
+                b: BSrc::Vr { vr: VReg(g.usize_in(0, 15) as u8) },
+            },
+            2 => VecOp::Mac {
+                a: match g.int(0, 2) {
+                    0 => ASrc::VrBcast { vr: VReg(g.usize_in(0, 15) as u8), base: g.int(0, 15) as u8, step: g.int(0, 7) as u8 },
+                    1 => ASrc::LbVec { row: g.int(0, 3) as u8, off: g.int(0, 1023) as u16 },
+                    _ => ASrc::Lb { row: g.int(0, 3) as u8, off: g.int(0, 1023) as u16 },
+                },
+                b: match g.int(0, 3) {
+                    0 => BSrc::VrLane { vr: VReg(g.usize_in(0, 15) as u8), lane: g.int(0, 15) as u8 },
+                    1 => BSrc::Fifo,
+                    2 => BSrc::FifoLaneQuad { base: g.int(0, 12) as u8 },
+                    _ => BSrc::VrLaneQuad { vr: VReg(g.usize_in(0, 15) as u8), base: g.int(0, 12) as u8 },
+                },
+            },
+            3 => VecOp::QMov { vd: VReg(g.usize_in(0, 15) as u8), j: g.int(0, 3) as u8, relu: g.bool() },
+            4 => VecOp::EOp {
+                f: *g.pick(&[VFn::Add, VFn::Sub, VFn::Max, VFn::Shr]),
+                vd: VReg(g.usize_in(0, 15) as u8),
+                va: VReg(g.usize_in(0, 15) as u8),
+                vb: VReg(g.usize_in(0, 15) as u8),
+            },
+            5 => VecOp::InitA { vr: VReg(g.usize_in(0, 15) as u8) },
+            6 => VecOp::ClrA { only: if g.bool() { None } else { Some(g.int(0, 3) as u8) } },
+            7 => VecOp::Mul {
+                a: ASrc::VrQuad { vr: VReg(g.usize_in(0, 12) as u8) },
+                b: BSrc::VrQuad { vr: VReg(g.usize_in(0, 12) as u8) },
+            },
+            _ => VecOp::PoolMax {
+                vd: VReg(g.usize_in(0, 15) as u8),
+                va: VReg(g.usize_in(0, 15) as u8),
+                vb: VReg(g.usize_in(0, 15) as u8),
+            },
+        }
+    }
+
+    #[test]
+    fn roundtrip_slot0_property() {
+        prop("slot0 encode/decode roundtrip", 300, |g| {
+            let op = arb_slot0(g);
+            let w = encode_slot0(&op).unwrap();
+            let back = decode_slot0(w, 0).unwrap();
+            assert_eq!(op, back, "word {w:#018x}");
+        });
+    }
+
+    #[test]
+    fn roundtrip_vec_property() {
+        prop("vec encode/decode roundtrip", 300, |g| {
+            let op = arb_vec(g);
+            let w = encode_vec(&op).unwrap();
+            let back = decode_vec(w, 0).unwrap();
+            assert_eq!(op, back, "word {w:#018x}");
+        });
+    }
+
+    #[test]
+    fn roundtrip_program() {
+        prop("program roundtrip", 30, |g| {
+            let n = g.usize_in(1, 40);
+            let mut p = Program::default();
+            for _ in 0..n {
+                p.bundles.push(Bundle {
+                    slot0: arb_slot0(g),
+                    v: [arb_vec(g), arb_vec(g), arb_vec(g)],
+                });
+            }
+            let bytes = encode_program(&p).unwrap();
+            assert_eq!(bytes.len(), p.encoded_size());
+            let back = decode_program(&bytes).unwrap();
+            assert_eq!(p.bundles, back.bundles);
+        });
+    }
+
+    #[test]
+    fn rejects_bad_opcode() {
+        assert!(decode_slot0(0xFFu64, 0).is_err());
+        assert!(decode_vec(0x70u64, 0).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        assert_eq!(
+            decode_program(&[0u8; 7]),
+            Err(EncodeError::Truncated(7))
+        );
+    }
+
+    #[test]
+    fn addr_negative_offset_roundtrip() {
+        let a = Addr { base: SReg(3), offset: -4096, post_inc: -32 };
+        let op = SlotOp::LdV { vd: VReg(2), addr: a };
+        let back = decode_slot0(encode_slot0(&op).unwrap(), 0).unwrap();
+        assert_eq!(op, back);
+    }
+
+    #[test]
+    fn odd_post_inc_rejected() {
+        let op = SlotOp::LdV { vd: VReg(0), addr: Addr { base: SReg(0), offset: 0, post_inc: 3 } };
+        assert!(encode_slot0(&op).is_err());
+    }
+
+    #[test]
+    fn pm_capacity_is_512_bundles() {
+        assert_eq!(16 * 1024 / BUNDLE_BYTES, 512);
+    }
+}

@@ -1,0 +1,389 @@
+//! The ConvAix instruction set (Section IV of the paper).
+//!
+//! A VLIW bundle has **4 heterogeneous issue slots**:
+//!
+//! * **slot 0** — control flow, scalar ALU (16-bit, with a 32-bit
+//!   addressing datapath), loads/stores between DM and the register
+//!   files, DMA and line-buffer control, CSR writes.
+//! * **slots 1–3** — one vector ALU each: 4 slices × 16 lanes of 16-bit
+//!   MACs accumulating into the slot's private VRl sub-region. Slot 1
+//!   additionally hosts the SFU (activation / max-pooling) operating on
+//!   single 16-lane vectors.
+//!
+//! Register files (with the paper's sub-region port constraints):
+//!
+//! * `R`   — 32 scalar registers (32-bit storage; 16-bit ops wrap).
+//! * `VR`  — 16 × 256 b (16 lanes × i16), sliced into VR0..VR3 of 4
+//!   entries each. **VR0 is readable by every vALU** (shared operands,
+//!   e.g. filter vectors); VR`s` is private to vALU `s`; slot 0 accesses
+//!   everything (data movement, load/store).
+//! * `VRl` — 12 × 512 b (16 lanes × i32), sliced into VRl0..VRl2; vALU
+//!   `s` owns VRl`s-1` (its 4 slice accumulators); slot 0 may spill/fill
+//!   any entry.
+//!
+//! The *line buffer* is an architecturally visible row register: vector
+//! MAC operands can be sourced directly from it with a per-instruction
+//! pixel offset; the LB applies the configured stride per slice. This is
+//! how "possibly strided inputs" reach the vALUs with zero slot-0 cost
+//! (the paper's Section IV).
+
+pub mod asm;
+pub mod disasm;
+pub mod encode;
+
+use std::fmt;
+
+/// Scalar register index (R0..R31). R0 is *not* hardwired to zero.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SReg(pub u8);
+
+/// Vector register index (VR 0..15). Sub-region = index / 4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct VReg(pub u8);
+
+/// Wide accumulator register index (VRl 0..11). Sub-region = index / 4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct VAcc(pub u8);
+
+impl SReg {
+    pub const COUNT: u8 = 32;
+}
+impl VReg {
+    pub const COUNT: u8 = 16;
+    /// Sub-region VR0..VR3 this entry belongs to.
+    pub fn region(self) -> u8 {
+        self.0 / 4
+    }
+}
+impl VAcc {
+    pub const COUNT: u8 = 12;
+    pub fn region(self) -> u8 {
+        self.0 / 4
+    }
+}
+
+/// Vector lane count per slice (and per VR entry).
+pub const LANES: usize = 16;
+/// Slices per vector ALU.
+pub const SLICES: usize = 4;
+/// Number of vector ALU issue slots (slots 1..=3).
+pub const VALU_SLOTS: usize = 3;
+
+/// Control/status registers (runtime-configurable datapath settings,
+/// Section IV: "the rounding-scheme as well as the fractional-shift of
+/// the vector-ALUs can be configured at runtime").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Csr {
+    /// Fractional shift applied by `VQMov` requantization (0..=31).
+    FracShift,
+    /// Rounding mode (see `fixed::RoundMode::from_bits`).
+    RoundMode,
+    /// Precision gating: effective operand bits (1..=16).
+    GateBits,
+    /// Line-buffer stride (input pixels per output-pixel step).
+    LbStride,
+}
+
+/// Scalar ALU operation width: the paper's slot-0 ALU is 16-bit with an
+/// additional 32-bit datapath for large-memory addressing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Width {
+    #[default]
+    W32,
+    W16,
+}
+
+/// Scalar binary ALU function.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AluFn {
+    Add,
+    Sub,
+    Mul,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Shr, // arithmetic
+    Min,
+    Max,
+}
+
+/// Branch condition (compares two scalar registers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cond {
+    Eq,
+    Ne,
+    Lt,
+    Ge,
+}
+
+/// DM addressing for vector/scalar load-store: byte address
+/// `R[base] + offset`, with optional post-increment of `R[base]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Addr {
+    pub base: SReg,
+    pub offset: i32,
+    /// Post-increment added to R[base] after the access (0 = none).
+    pub post_inc: i32,
+}
+
+impl Addr {
+    pub fn base(base: SReg) -> Self {
+        Self { base, offset: 0, post_inc: 0 }
+    }
+    pub fn offs(base: SReg, offset: i32) -> Self {
+        Self { base, offset, post_inc: 0 }
+    }
+    pub fn post(base: SReg, post_inc: i32) -> Self {
+        Self { base, offset: 0, post_inc }
+    }
+}
+
+/// Slot-0 operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotOp {
+    Nop,
+    /// rd <- imm (the assembler splits large immediates if ever needed;
+    /// the simulator models it as a 1-slot op).
+    Li { rd: SReg, imm: i32 },
+    /// rd <- alu(ra, rb)
+    Alu { f: AluFn, w: Width, rd: SReg, ra: SReg, rb: SReg },
+    /// rd <- alu(ra, imm)
+    AluI { f: AluFn, w: Width, rd: SReg, ra: SReg, imm: i32 },
+    /// Conditional branch to absolute bundle index.
+    Br { c: Cond, ra: SReg, rb: SReg, target: u32 },
+    /// Unconditional jump.
+    Jmp { target: u32 },
+    /// Zero-overhead hardware loop: repeat the following `body` bundles
+    /// `n` times (n from register). One level of nesting is allowed.
+    Loop { n: SReg, body: u16 },
+    /// Immediate-count hardware loop.
+    LoopI { n: u32, body: u16 },
+    Halt,
+    /// CSR write from immediate.
+    Csrwi { csr: Csr, imm: u32 },
+    /// CSR write from register.
+    Csrw { csr: Csr, rs: SReg },
+    /// Scalar load/store (16-bit element, sign-extended).
+    LdS { rd: SReg, addr: Addr },
+    StS { rs: SReg, addr: Addr },
+    /// Vector load/store: one 256-bit DM access (port 0).
+    LdV { vd: VReg, addr: Addr },
+    StV { vs: VReg, addr: Addr },
+    /// Vector load into the **filter FIFO** (depth 8) of the operand
+    /// fetch & prepare stage. Vector MACs with a `BSrc::Fifo*` operand
+    /// consume entries in order (one pop per bundle, shared by all three
+    /// vALU slots — they all see the same filter vector, which is what
+    /// both lane mappings need). Decouples filter prefetch from loop
+    /// structure so hardware-loop bodies stay static.
+    LdVF { addr: Addr },
+    /// Accumulator spill/fill: 512 bits = 2 port-0 accesses (occupies
+    /// slot 0 for 2 cycles — used when PSums spill per Fig. 2).
+    LdA { ad: VAcc, addr: Addr },
+    StA { as_: VAcc, addr: Addr },
+    /// DMA: start a background transfer on channel `ch` (0/1).
+    /// Direction Ext->DM (`DmaLoad`) or DM->Ext (`DmaStore`).
+    /// Addresses/length in bytes from scalar registers.
+    DmaLoad { ch: u8, ext: SReg, dm: SReg, len: SReg },
+    DmaStore { ch: u8, ext: SReg, dm: SReg, len: SReg },
+    /// Block until DMA channel `ch` is idle.
+    DmaWait { ch: u8 },
+    /// Line buffer 2-D window fill: load `nrows` row windows of `win`
+    /// pixels each into slot `row` (concatenated), reading row r from DM
+    /// byte address `R[dm] + off + r*rstride`. Runs in the background on
+    /// DM port 1; a vector op reading that slot before completion
+    /// interlocks. `nrows > 1` is the application-specific trick that
+    /// lets one slot-0 instruction stage a full FH×window input patch
+    /// per input channel — Section IV's "simultaneous loads of new IFMap
+    /// row-chunks while providing (possibly strided) inputs".
+    LbLoad { row: u8, dm: SReg, off: u16, win: u8, nrows: u8, rstride: u16 },
+}
+
+/// Source A of a vector MAC/MUL — what the operand fetch & prepare stage
+/// feeds each of the 4 slices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ASrc {
+    /// Line buffer row slot `row`, strided select: slice `j` receives
+    /// pixel `off + j*CSR.LbStride` of that row, broadcast to its 16
+    /// lanes. (`off` bakes in `fx + slot_pixel_base*stride` — static.)
+    /// Lane-mapping **variant A**: lanes = output channels.
+    Lb { row: u8, off: u16 },
+    /// Line buffer vector read: every slice receives the same 16-lane
+    /// vector of pixels `off + l*CSR.LbStride` (l = lane index).
+    /// Lane-mapping **variant B**: lanes = output pixels.
+    LbVec { row: u8, off: u16 },
+    /// One VR entry; slice `j` receives lane `base + j*step` broadcast
+    /// to its 16 lanes (the runtime-pattern permute of the paper).
+    VrBcast { vr: VReg, base: u8, step: u8 },
+    /// Four consecutive VR entries `vr..vr+4`, one per slice, elementwise
+    /// (lane-mapping variant B).
+    VrQuad { vr: VReg },
+}
+
+/// Source B of a vector MAC/MUL.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BSrc {
+    /// One VR entry broadcast (as a whole 16-lane vector) to all slices —
+    /// the filter vector of lane-mapping variant A.
+    Vr { vr: VReg },
+    /// Single lane of a VR entry broadcast to all lanes of all slices
+    /// (a shared weight scalar).
+    VrLane { vr: VReg, lane: u8 },
+    /// Slice `j` receives lane `base + j` of one VR entry, broadcast to
+    /// its 16 lanes (per-slice weight scalars of lane-mapping variant B:
+    /// 4 output channels from one filter vector).
+    VrLaneQuad { vr: VReg, base: u8 },
+    /// Four consecutive VR entries, one per slice, elementwise.
+    VrQuad { vr: VReg },
+    /// Front of the filter FIFO as a whole 16-lane vector, broadcast to
+    /// all slices (variant A: the 16-OCh filter vector).
+    Fifo,
+    /// Slice `j` receives lane `base + j` of the filter FIFO front
+    /// (variant B: 4 output-channel weights from one filter vector).
+    FifoLaneQuad { base: u8 },
+}
+
+/// Elementwise vector ALU function (single VR entry, 16 lanes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VFn {
+    Add,
+    Sub,
+    Mul, // low 16 bits
+    Max,
+    Min,
+    Shl,
+    Shr,
+}
+
+/// Vector-slot operation (slots 1..=3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VecOp {
+    Nop,
+    /// 4-slice MAC: `VRl[own region][j] += prepare_A(j) * prepare_B(j)`
+    /// for j in 0..4 — 64 MACs. Precision gating per CSR.GateBits.
+    Mac { a: ASrc, b: BSrc },
+    /// Like `Mac` but overwrites the accumulators (acc = a*b).
+    Mul { a: ASrc, b: BSrc },
+    /// Clear the slot's 4 accumulator entries (j-th if `only`=Some(j)).
+    ClrA { only: Option<u8> },
+    /// Initialize the slot's 4 accumulators with bias vector `vr`
+    /// (each lane sign-extended and shifted left by CSR.FracShift —
+    /// `fixed::mac_init`).
+    InitA { vr: VReg },
+    /// Variant-B bias init: accumulator `j` gets lane `base + j` of `vr`
+    /// broadcast to all its lanes, shifted left by CSR.FracShift (one
+    /// bias value per output channel; lanes are pixels).
+    InitALane { vr: VReg, base: u8 },
+    /// Requantize one own-region accumulator entry to a VR entry:
+    /// `vd = requant(VRl[own][j])` per CSR (shift, rounding), optional
+    /// fused ReLU (SFU path).
+    QMov { vd: VReg, j: u8, relu: bool },
+    /// Elementwise vector op on 16 lanes: `vd = f(va, vb)`.
+    EOp { f: VFn, vd: VReg, va: VReg, vb: VReg },
+    /// Elementwise with scalar immediate: `vd = f(va, imm)`.
+    EOpI { f: VFn, vd: VReg, va: VReg, imm: i16 },
+    /// Move vd <- vs.
+    Mov { vd: VReg, vs: VReg },
+    /// Broadcast lane `lane` of vs to all lanes of vd.
+    Bcst { vd: VReg, vs: VReg, lane: u8 },
+    /// SFU (slot 1 only): ReLU on a single vector.
+    Relu { vd: VReg, vs: VReg },
+    /// SFU (slot 1 only): lane-wise max of two vectors (max-pool step).
+    PoolMax { vd: VReg, va: VReg, vb: VReg },
+}
+
+/// One VLIW instruction bundle: slot 0 + three vector slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bundle {
+    pub slot0: SlotOp,
+    pub v: [VecOp; VALU_SLOTS],
+}
+
+impl Bundle {
+    pub const NOP: Bundle = Bundle {
+        slot0: SlotOp::Nop,
+        v: [VecOp::Nop, VecOp::Nop, VecOp::Nop],
+    };
+
+    pub fn s0(op: SlotOp) -> Bundle {
+        Bundle { slot0: op, ..Bundle::NOP }
+    }
+
+    pub fn is_nop(&self) -> bool {
+        *self == Bundle::NOP
+    }
+
+    /// Number of MAC operations this bundle performs at full precision.
+    pub fn mac_count(&self) -> u64 {
+        self.v
+            .iter()
+            .map(|op| match op {
+                VecOp::Mac { .. } | VecOp::Mul { .. } => (SLICES * LANES) as u64,
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+/// A complete program: decoded bundles (what the simulator executes) —
+/// the encoded form (see [`encode`]) is what must fit the 16 KB PM.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Program {
+    pub bundles: Vec<Bundle>,
+}
+
+impl Program {
+    pub fn len(&self) -> usize {
+        self.bundles.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.bundles.is_empty()
+    }
+    /// Encoded size in bytes (for the PM capacity check).
+    pub fn encoded_size(&self) -> usize {
+        self.bundles.len() * encode::BUNDLE_BYTES
+    }
+}
+
+impl fmt::Display for Program {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, b) in self.bundles.iter().enumerate() {
+            writeln!(f, "{i:5}: {}", disasm::bundle(b))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regions() {
+        assert_eq!(VReg(0).region(), 0);
+        assert_eq!(VReg(5).region(), 1);
+        assert_eq!(VReg(15).region(), 3);
+        assert_eq!(VAcc(11).region(), 2);
+    }
+
+    #[test]
+    fn bundle_mac_count() {
+        let b = Bundle {
+            slot0: SlotOp::Nop,
+            v: [
+                VecOp::Mac { a: ASrc::Lb { row: 0, off: 0 }, b: BSrc::Vr { vr: VReg(0) } },
+                VecOp::Mac { a: ASrc::Lb { row: 0, off: 4 }, b: BSrc::Vr { vr: VReg(0) } },
+                VecOp::Nop,
+            ],
+        };
+        assert_eq!(b.mac_count(), 128);
+        assert_eq!(Bundle::NOP.mac_count(), 0);
+    }
+
+    #[test]
+    fn peak_bundle_is_192_macs() {
+        let m = VecOp::Mac { a: ASrc::Lb { row: 0, off: 0 }, b: BSrc::Vr { vr: VReg(0) } };
+        let b = Bundle { slot0: SlotOp::Nop, v: [m, m, m] };
+        assert_eq!(b.mac_count(), crate::PEAK_MACS_PER_CYCLE);
+    }
+}

@@ -1,0 +1,53 @@
+//! # ConvAix-rs
+//!
+//! A cycle-level reproduction of **“An Application-Specific VLIW Processor
+//! with Vector Instruction Set for CNN Acceleration”** (Bytyn, Leupers,
+//! Ascheid — ISCAS 2019): the *ConvAix* ASIP.
+//!
+//! The crate contains everything needed to regenerate the paper's
+//! evaluation without python at runtime:
+//!
+//! * [`isa`] — the ConvAix VLIW instruction set (4 issue slots, vector
+//!   MAC ops, line-buffer/DMA control), an assembler and a disassembler.
+//! * [`core`] — the 8-stage pipeline cycle simulator: scalar ALU, three
+//!   4-slice × 16-lane vector ALUs, SFU, register files with sub-region
+//!   port constraints, hazard interlocks.
+//! * [`mem`] — 16-bank dual-ported data memory, program memory, DMA
+//!   engine, IFMap line buffer, external DRAM model.
+//! * [`fixed`] — the Q-format 16-bit arithmetic contract shared (bit
+//!   exactly) with the JAX/Pallas golden model.
+//! * [`codegen`] — the "compiler": generates VLIW kernels for conv /
+//!   pooling / FC layers using the Fig. 2 dataflow (depth slicing,
+//!   row-wise processing, DMA double buffering).
+//! * [`model`] — AlexNet / VGG-16 workload tables.
+//! * [`coordinator`] — layer scheduler + executor + metrics (utilization,
+//!   GOP/s, off-chip I/O) — the numbers of Table II.
+//! * [`energy`] — calibrated area (Table I, Fig. 3b) and activity-based
+//!   power (Fig. 3c, Table II) models, technology scaling.
+//! * [`baselines`] — analytical Eyeriss / Envision models for the
+//!   comparison columns of Table II.
+//! * [`runtime`] — PJRT loader for the AOT-compiled JAX/Pallas artifacts
+//!   (HLO text) used as the bit-exact golden model.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod baselines;
+pub mod cli;
+pub mod codegen;
+pub mod coordinator;
+pub mod core;
+pub mod energy;
+pub mod fixed;
+pub mod isa;
+pub mod mem;
+pub mod model;
+pub mod runtime;
+pub mod util;
+
+/// Peak MACs per cycle: 3 vector slots × 4 slices × 16 lanes (Table I).
+pub const PEAK_MACS_PER_CYCLE: u64 = 192;
+/// Target clock frequency in Hz (Table I).
+pub const CLOCK_HZ: u64 = 400_000_000;
+/// Peak throughput in GOP/s (1 MAC = 2 OP), Table I: 153.6 GOP/s.
+pub const PEAK_GOPS: f64 = (2 * PEAK_MACS_PER_CYCLE * CLOCK_HZ) as f64 / 1e9;

@@ -1,0 +1,12 @@
+//! `convaix` — CLI entrypoint. See `convaix help`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    match convaix::cli::main_with(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

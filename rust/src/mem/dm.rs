@@ -1,0 +1,243 @@
+//! On-chip data memory: 128 KB in 16 dual-ported 8 KB banks.
+//!
+//! Storage is passive; *timing* is modeled by the access-recording layer:
+//! every physical access notes its cycle, port and bank so the memory
+//! interface can detect port-1 collisions (DMA / line-buffer fill hitting
+//! the bank the pipeline is using in the same cycle) and charge stalls.
+//! Counters feed the activity-based energy model (Fig. 3c).
+
+use super::{DM_BANKS, DM_BANK_BYTES, DM_BYTES, DM_PORT_BYTES};
+
+#[derive(Debug, thiserror::Error)]
+pub enum DmError {
+    #[error("DM access out of range: addr {addr:#x} len {len} (DM is {DM_BYTES} bytes)")]
+    OutOfRange { addr: usize, len: usize },
+    #[error("DM access misaligned: addr {addr:#x} requires {align}-byte alignment")]
+    Misaligned { addr: usize, align: usize },
+}
+
+/// Activity counters (inputs to `energy::power`).
+#[derive(Debug, Default, Clone)]
+pub struct DmStats {
+    /// 256-bit accesses on port 0 (pipeline loads).
+    pub p0_reads: u64,
+    /// 256-bit accesses on port 0 (pipeline stores).
+    pub p0_writes: u64,
+    /// 256-bit accesses on port 1 (DMA + line-buffer fill).
+    pub p1_reads: u64,
+    pub p1_writes: u64,
+    /// Port-1 retries due to same-bank collision with port 0.
+    pub bank_conflicts: u64,
+}
+
+pub struct DataMem {
+    bytes: Vec<u8>,
+    pub stats: DmStats,
+    /// Bank touched by port 0 in the current cycle (set by the pipeline,
+    /// cleared by `end_cycle`); port 1 must avoid it.
+    p0_bank: Option<usize>,
+}
+
+impl Default for DataMem {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DataMem {
+    pub fn new() -> Self {
+        Self { bytes: vec![0; DM_BYTES], stats: DmStats::default(), p0_bank: None }
+    }
+
+    #[inline]
+    pub fn bank_of(addr: usize) -> usize {
+        (addr / DM_BANK_BYTES) % DM_BANKS
+    }
+
+    fn check(&self, addr: usize, len: usize, align: usize) -> Result<(), DmError> {
+        if addr % align != 0 {
+            return Err(DmError::Misaligned { addr, align });
+        }
+        if addr + len > DM_BYTES {
+            return Err(DmError::OutOfRange { addr, len });
+        }
+        Ok(())
+    }
+
+    // --- port 0 (pipeline) ------------------------------------------------
+
+    /// 16-bit scalar load (port 0).
+    pub fn read_i16_p0(&mut self, addr: usize) -> Result<i16, DmError> {
+        self.check(addr, 2, 2)?;
+        self.stats.p0_reads += 1;
+        self.p0_bank = Some(Self::bank_of(addr));
+        Ok(i16::from_le_bytes([self.bytes[addr], self.bytes[addr + 1]]))
+    }
+
+    pub fn write_i16_p0(&mut self, addr: usize, v: i16) -> Result<(), DmError> {
+        self.check(addr, 2, 2)?;
+        self.stats.p0_writes += 1;
+        self.p0_bank = Some(Self::bank_of(addr));
+        self.bytes[addr..addr + 2].copy_from_slice(&v.to_le_bytes());
+        Ok(())
+    }
+
+    /// 256-bit vector load (port 0): 16 lanes of i16.
+    pub fn read_vec_p0(&mut self, addr: usize) -> Result<[i16; 16], DmError> {
+        self.check(addr, DM_PORT_BYTES, 2)?;
+        self.stats.p0_reads += 1;
+        self.p0_bank = Some(Self::bank_of(addr));
+        Ok(self.peek_vec(addr))
+    }
+
+    pub fn write_vec_p0(&mut self, addr: usize, v: &[i16; 16]) -> Result<(), DmError> {
+        self.check(addr, DM_PORT_BYTES, 2)?;
+        self.stats.p0_writes += 1;
+        self.p0_bank = Some(Self::bank_of(addr));
+        for (i, x) in v.iter().enumerate() {
+            self.bytes[addr + 2 * i..addr + 2 * i + 2].copy_from_slice(&x.to_le_bytes());
+        }
+        Ok(())
+    }
+
+    // --- port 1 (DMA / line buffer) ----------------------------------------
+
+    /// Try a 32-byte port-1 read this cycle. Returns None (and counts a
+    /// conflict) if port 0 already touched the same bank.
+    pub fn try_read_block_p1(&mut self, addr: usize, len: usize) -> Result<Option<Vec<u8>>, DmError> {
+        let len = len.min(DM_PORT_BYTES);
+        self.check(addr, len, 1)?;
+        if self.p0_bank == Some(Self::bank_of(addr)) {
+            self.stats.bank_conflicts += 1;
+            return Ok(None);
+        }
+        self.stats.p1_reads += 1;
+        Ok(Some(self.bytes[addr..addr + len].to_vec()))
+    }
+
+    pub fn try_write_block_p1(&mut self, addr: usize, data: &[u8]) -> Result<bool, DmError> {
+        let len = data.len().min(DM_PORT_BYTES);
+        self.check(addr, len, 1)?;
+        if self.p0_bank == Some(Self::bank_of(addr)) {
+            self.stats.bank_conflicts += 1;
+            return Ok(false);
+        }
+        self.stats.p1_writes += 1;
+        self.bytes[addr..addr + len].copy_from_slice(&data[..len]);
+        Ok(true)
+    }
+
+    /// End-of-cycle: clear the port-0 bank reservation.
+    pub fn end_cycle(&mut self) {
+        self.p0_bank = None;
+    }
+
+    // --- untimed debug/setup access (no stats, used by the loader) ---------
+
+    pub fn peek_vec(&self, addr: usize) -> [i16; 16] {
+        let mut out = [0i16; 16];
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = i16::from_le_bytes([self.bytes[addr + 2 * i], self.bytes[addr + 2 * i + 1]]);
+        }
+        out
+    }
+
+    pub fn peek_i16(&self, addr: usize) -> i16 {
+        i16::from_le_bytes([self.bytes[addr], self.bytes[addr + 1]])
+    }
+
+    pub fn poke_i16(&mut self, addr: usize, v: i16) {
+        self.bytes[addr..addr + 2].copy_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn poke_i16_slice(&mut self, addr: usize, vs: &[i16]) {
+        for (i, v) in vs.iter().enumerate() {
+            self.poke_i16(addr + 2 * i, *v);
+        }
+    }
+
+    pub fn peek_i16_slice(&self, addr: usize, n: usize) -> Vec<i16> {
+        (0..n).map(|i| self.peek_i16(addr + 2 * i)).collect()
+    }
+
+    pub fn peek_i32(&self, addr: usize) -> i32 {
+        i32::from_le_bytes([
+            self.bytes[addr],
+            self.bytes[addr + 1],
+            self.bytes[addr + 2],
+            self.bytes[addr + 3],
+        ])
+    }
+
+    pub fn poke_i32(&mut self, addr: usize, v: i32) {
+        self.bytes[addr..addr + 4].copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bank_mapping() {
+        assert_eq!(DataMem::bank_of(0), 0);
+        assert_eq!(DataMem::bank_of(8191), 0);
+        assert_eq!(DataMem::bank_of(8192), 1);
+        assert_eq!(DataMem::bank_of(DM_BYTES - 1), 15);
+    }
+
+    #[test]
+    fn rw_roundtrip() {
+        let mut dm = DataMem::new();
+        dm.write_i16_p0(100, -1234).unwrap();
+        assert_eq!(dm.read_i16_p0(100).unwrap(), -1234);
+        let v: [i16; 16] = std::array::from_fn(|i| i as i16 * 3 - 7);
+        dm.write_vec_p0(256, &v).unwrap();
+        assert_eq!(dm.read_vec_p0(256).unwrap(), v);
+    }
+
+    #[test]
+    fn oob_rejected() {
+        let mut dm = DataMem::new();
+        assert!(dm.read_i16_p0(DM_BYTES).is_err());
+        assert!(dm.read_vec_p0(DM_BYTES - 8).is_err());
+        assert!(dm.write_i16_p0(1, 0).is_err()); // misaligned
+    }
+
+    #[test]
+    fn port1_conflict_detected() {
+        let mut dm = DataMem::new();
+        // port 0 touches bank 0 this cycle
+        dm.read_i16_p0(0).unwrap();
+        // port 1 same bank -> rejected
+        assert!(dm.try_read_block_p1(100, 32).unwrap().is_none());
+        assert_eq!(dm.stats.bank_conflicts, 1);
+        // port 1 other bank -> ok
+        assert!(dm.try_read_block_p1(8192, 32).unwrap().is_some());
+        // next cycle: free again
+        dm.end_cycle();
+        assert!(dm.try_read_block_p1(64, 32).unwrap().is_some());
+    }
+
+    #[test]
+    fn stats_counted() {
+        let mut dm = DataMem::new();
+        dm.read_vec_p0(0).unwrap();
+        dm.write_vec_p0(32, &[0; 16]).unwrap();
+        dm.end_cycle();
+        dm.try_write_block_p1(64, &[1u8; 32]).unwrap();
+        assert_eq!(dm.stats.p0_reads, 1);
+        assert_eq!(dm.stats.p0_writes, 1);
+        assert_eq!(dm.stats.p1_writes, 1);
+    }
+
+    #[test]
+    fn peek_poke_no_stats() {
+        let mut dm = DataMem::new();
+        dm.poke_i16_slice(10, &[1, 2, 3]);
+        assert_eq!(dm.peek_i16_slice(10, 3), vec![1, 2, 3]);
+        assert_eq!(dm.stats.p0_reads + dm.stats.p0_writes, 0);
+        dm.poke_i32(100, -77777);
+        assert_eq!(dm.peek_i32(100), -77777);
+    }
+}

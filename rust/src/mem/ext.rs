@@ -1,0 +1,117 @@
+//! External DRAM model.
+//!
+//! Passive byte storage plus the cost model the DMA engine consults:
+//! a fixed per-request latency and a sustained bandwidth in bytes per
+//! core cycle. Total bytes moved are counted here — this is exactly the
+//! "Off-Chip I/O [MByte]" row of Table II (counted at the DMA boundary,
+//! uncompressed, as footnote *d* of the paper states for ConvAix).
+
+use super::{EXT_BYTES_PER_CYCLE, EXT_LATENCY_CYCLES};
+
+#[derive(Debug, Default, Clone)]
+pub struct ExtStats {
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    pub requests: u64,
+}
+
+impl ExtStats {
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_read + self.bytes_written
+    }
+    pub fn total_mbytes(&self) -> f64 {
+        self.total_bytes() as f64 / 1e6
+    }
+}
+
+pub struct ExtMem {
+    bytes: Vec<u8>,
+    pub stats: ExtStats,
+    pub bytes_per_cycle: usize,
+    pub latency_cycles: u64,
+}
+
+impl ExtMem {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            bytes: vec![0; capacity],
+            stats: ExtStats::default(),
+            bytes_per_cycle: EXT_BYTES_PER_CYCLE,
+            latency_cycles: EXT_LATENCY_CYCLES,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// Timed read of up to `len` bytes (counted). The DMA engine calls
+    /// this in bandwidth-sized chunks.
+    pub fn read(&mut self, addr: usize, len: usize) -> &[u8] {
+        assert!(addr + len <= self.bytes.len(), "ext read OOB {addr:#x}+{len}");
+        self.stats.bytes_read += len as u64;
+        &self.bytes[addr..addr + len]
+    }
+
+    pub fn write(&mut self, addr: usize, data: &[u8]) {
+        assert!(addr + data.len() <= self.bytes.len(), "ext write OOB");
+        self.stats.bytes_written += data.len() as u64;
+        self.bytes[addr..addr + data.len()].copy_from_slice(data);
+    }
+
+    pub fn note_request(&mut self) {
+        self.stats.requests += 1;
+    }
+
+    // untimed setup/inspection (tensor staging by the coordinator)
+    pub fn poke(&mut self, addr: usize, data: &[u8]) {
+        self.bytes[addr..addr + data.len()].copy_from_slice(data);
+    }
+
+    pub fn poke_i16_slice(&mut self, addr: usize, vs: &[i16]) {
+        for (i, v) in vs.iter().enumerate() {
+            self.bytes[addr + 2 * i..addr + 2 * i + 2].copy_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn peek(&self, addr: usize, len: usize) -> &[u8] {
+        &self.bytes[addr..addr + len]
+    }
+
+    pub fn peek_i16_slice(&self, addr: usize, n: usize) -> Vec<i16> {
+        (0..n)
+            .map(|i| i16::from_le_bytes([self.bytes[addr + 2 * i], self.bytes[addr + 2 * i + 1]]))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_io_bytes() {
+        let mut e = ExtMem::new(1 << 16);
+        e.poke(0, &[1, 2, 3, 4]);
+        let _ = e.read(0, 4).to_vec();
+        e.write(100, &[9; 10]);
+        assert_eq!(e.stats.bytes_read, 4);
+        assert_eq!(e.stats.bytes_written, 10);
+        assert_eq!(e.stats.total_bytes(), 14);
+    }
+
+    #[test]
+    fn poke_peek_untimed() {
+        let mut e = ExtMem::new(1024);
+        e.poke_i16_slice(10, &[-5, 6, 7]);
+        assert_eq!(e.peek_i16_slice(10, 3), vec![-5, 6, 7]);
+        assert_eq!(e.stats.total_bytes(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn oob_panics() {
+        let mut e = ExtMem::new(16);
+        e.write(10, &[0; 10]);
+    }
+}

@@ -1,0 +1,137 @@
+//! The custom memory interface (Section IV): owns DM, external memory,
+//! the DMA engine and the line buffer, and arbitrates **DM port 1**
+//! between the line-buffer fill path and the DMA each cycle (the
+//! pipeline owns port 0 unconditionally).
+//!
+//! Arbitration policy: the line buffer wins (it feeds the vALUs on the
+//! critical path; the DMA tolerates latency by design), DMA otherwise.
+
+use super::dma::{DmaDir, DmaEngine, DmaError};
+use super::dm::DataMem;
+use super::ext::ExtMem;
+use super::linebuf::{LbError, LineBuffer};
+
+pub struct MemInterface {
+    pub dm: DataMem,
+    pub ext: ExtMem,
+    pub dma: DmaEngine,
+    pub lb: LineBuffer,
+}
+
+impl MemInterface {
+    pub fn new(ext_capacity: usize) -> Self {
+        Self {
+            dm: DataMem::new(),
+            ext: ExtMem::new(ext_capacity),
+            dma: DmaEngine::new(),
+            lb: LineBuffer::new(),
+        }
+    }
+
+    /// True when no background engine needs `tick` work this cycle —
+    /// the simulator's fast path (the vast majority of cycles).
+    #[inline(always)]
+    pub fn background_idle(&self) -> bool {
+        !self.lb.filling() && !self.dma.any_busy()
+    }
+
+    /// One core cycle of background activity (call once per cycle, after
+    /// the pipeline's port-0 access has been performed).
+    pub fn tick(&mut self) {
+        // line-buffer fill has priority on port 1
+        let mut port1_used = false;
+        if let Some((addr, len)) = self.lb.fill_request() {
+            match self.dm.try_read_block_p1(addr, len) {
+                Ok(Some(bytes)) => {
+                    self.lb.accept_fill_data(&bytes);
+                    port1_used = true;
+                }
+                Ok(None) => {
+                    // bank conflict with port 0: retry next cycle
+                    port1_used = true; // the attempt occupied the port
+                }
+                Err(e) => panic!("LB fill DM error: {e}"),
+            }
+        }
+        self.dma.tick(&mut self.dm, &mut self.ext, !port1_used);
+        self.dm.end_cycle();
+    }
+
+    pub fn start_dma(
+        &mut self,
+        ch: usize,
+        dir: DmaDir,
+        ext_addr: usize,
+        dm_addr: usize,
+        len: usize,
+    ) -> Result<(), DmaError> {
+        self.ext.note_request();
+        let latency = self.ext.latency_cycles;
+        self.dma.start(ch, dir, ext_addr, dm_addr, len, latency)
+    }
+
+    pub fn start_lb_fill(&mut self, row: usize, dm_addr: usize, len_px: usize) -> Result<(), LbError> {
+        self.lb.start_fill(row, dm_addr, len_px)
+    }
+
+    pub fn start_lb_fill_2d(
+        &mut self,
+        row: usize,
+        dm_addr: usize,
+        win_px: usize,
+        nrows: usize,
+        rstride: usize,
+    ) -> Result<(), LbError> {
+        self.lb.start_fill_2d(row, dm_addr, win_px, nrows, rstride)
+    }
+
+    /// Drain all background engines (test helper / end-of-task barrier).
+    /// Returns the number of cycles it took.
+    pub fn drain(&mut self) -> u64 {
+        let mut cycles = 0;
+        while self.dma.any_busy() || self.lb.filling() {
+            self.tick();
+            cycles += 1;
+            assert!(cycles < 100_000_000, "memory system hang");
+        }
+        cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lb_beats_dma_on_port1() {
+        let mut m = MemInterface::new(1 << 16);
+        m.dm.poke_i16_slice(0, &[1; 64]);
+        m.start_lb_fill(0, 0, 64).unwrap();
+        m.start_dma(0, DmaDir::DmToExt, 0x100, 0x800, 256).unwrap();
+        // while the LB fill is in flight, DMA should record port stalls
+        // only when it actually had credit+data ready; just check both
+        // finish and the LB is valid.
+        let cycles = m.drain();
+        assert!(cycles > 0);
+        assert!(m.lb.can_read(0, 63));
+        assert_eq!(m.ext.stats.bytes_written, 256);
+    }
+
+    #[test]
+    fn dma_roundtrip_through_interface() {
+        let mut m = MemInterface::new(1 << 16);
+        let data: Vec<i16> = (0..128).map(|i| (i * 13 % 777) as i16).collect();
+        m.ext.poke_i16_slice(0x1000, &data);
+        m.start_dma(0, DmaDir::ExtToDm, 0x1000, 0x200, 256).unwrap();
+        m.drain();
+        assert_eq!(m.dm.peek_i16_slice(0x200, 128), data);
+        // off-chip read I/O counted
+        assert_eq!(m.ext.stats.bytes_read, 256);
+    }
+
+    #[test]
+    fn drain_idle_is_zero_cycles() {
+        let mut m = MemInterface::new(1024);
+        assert_eq!(m.drain(), 0);
+    }
+}

@@ -1,0 +1,253 @@
+//! The application-specific line buffer (Section IV).
+//!
+//! Holds 4 row slots of up to 64 pixels each. A `LbLoad` fills one slot
+//! from DM in the background over port 1 (16 pixels = 32 bytes per
+//! access); vector MAC operands read *completed* slots combinationally
+//! with a per-instruction pixel offset and the CSR-configured stride —
+//! this is how strided convolutions execute "with minimal cycle
+//! overhead" and why filter loads get slot 0 to themselves.
+//!
+//! Reading a slot whose fill is still in flight interlocks the pipeline
+//! (counted in `LbStats::read_stalls`).
+
+/// Row slots (double buffering needs 2; 4 allows deeper prefetch).
+pub const LB_ROWS: usize = 4;
+/// Pixels per row slot. 64 covers the widest window the codegen emits:
+/// 11 slices·stride-4 + FW-11 = 55 pixels (AlexNet conv1).
+pub const LB_ROW_PIXELS: usize = 64;
+
+#[derive(Debug, Default, Clone)]
+pub struct LbStats {
+    /// Completed row fills.
+    pub fills: u64,
+    /// Port-1 accesses used for fills.
+    pub fill_accesses: u64,
+    /// Pipeline stall cycles waiting on an in-flight fill.
+    pub read_stalls: u64,
+    /// Pixel reads served to the vector ALUs.
+    pub pixel_reads: u64,
+}
+
+#[derive(Debug, Clone)]
+struct Fill {
+    row: usize,
+    dm_addr: usize,
+    /// pixels per source row window
+    win_px: usize,
+    /// source rows (windows are concatenated in the slot)
+    nrows: usize,
+    /// source row stride in bytes
+    rstride: usize,
+    done_px: usize,
+}
+
+pub struct LineBuffer {
+    rows: [[i16; LB_ROW_PIXELS]; LB_ROWS],
+    valid: [usize; LB_ROWS], // pixels valid per row
+    fill: Option<Fill>,
+    pub stats: LbStats,
+}
+
+impl Default for LineBuffer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum LbError {
+    #[error("line-buffer fill of {len} pixels exceeds row capacity {LB_ROW_PIXELS}")]
+    TooLong { len: usize },
+    #[error("line-buffer row {row} out of range")]
+    BadRow { row: usize },
+    #[error("line-buffer read past valid data: row {row} pixel {px} (valid {valid})")]
+    ReadPastEnd { row: usize, px: usize, valid: usize },
+    #[error("line-buffer fill started while a fill is in flight")]
+    Busy,
+}
+
+impl LineBuffer {
+    pub fn new() -> Self {
+        Self {
+            rows: [[0; LB_ROW_PIXELS]; LB_ROWS],
+            valid: [0; LB_ROWS],
+            fill: None,
+            stats: LbStats::default(),
+        }
+    }
+
+    /// Begin filling `row` with `len` pixels from DM byte address `dm_addr`
+    /// (1-D convenience wrapper over `start_fill_2d`).
+    pub fn start_fill(&mut self, row: usize, dm_addr: usize, len: usize) -> Result<(), LbError> {
+        self.start_fill_2d(row, dm_addr, len, 1, 0)
+    }
+
+    /// Begin a 2-D window fill: `nrows` windows of `win_px` pixels, read
+    /// from `dm_addr + r*rstride`, concatenated in the slot. The previous
+    /// contents of the row slot become invalid immediately.
+    pub fn start_fill_2d(
+        &mut self,
+        row: usize,
+        dm_addr: usize,
+        win_px: usize,
+        nrows: usize,
+        rstride: usize,
+    ) -> Result<(), LbError> {
+        if row >= LB_ROWS {
+            return Err(LbError::BadRow { row });
+        }
+        let len = win_px * nrows;
+        if len > LB_ROW_PIXELS || win_px == 0 || nrows == 0 {
+            return Err(LbError::TooLong { len });
+        }
+        if self.fill.is_some() {
+            // hardware has a single fill engine; the assembler/codegen must
+            // space LbLoads — modeled as an error surfaced to the program.
+            return Err(LbError::Busy);
+        }
+        self.valid[row] = 0;
+        self.fill = Some(Fill { row, dm_addr, win_px, nrows, rstride, done_px: 0 });
+        Ok(())
+    }
+
+    /// True if a fill is in flight (the interface calls `tick_fill`).
+    pub fn filling(&self) -> bool {
+        self.fill.is_some()
+    }
+
+    /// Row targeted by the in-flight fill, if any.
+    pub fn fill_row(&self) -> Option<usize> {
+        self.fill.as_ref().map(|f| f.row)
+    }
+
+    /// Advance the fill by one port-1 access (up to 16 pixels, never
+    /// crossing a source-row boundary). The caller (memory interface)
+    /// has already won arbitration for port 1. Returns the DM address +
+    /// length to read; the caller passes the bytes back via
+    /// `accept_fill_data`.
+    pub fn fill_request(&self) -> Option<(usize, usize)> {
+        self.fill.as_ref().map(|f| {
+            let src_row = f.done_px / f.win_px;
+            let within = f.done_px % f.win_px;
+            let px = (f.win_px - within).min(16);
+            (f.dm_addr + src_row * f.rstride + 2 * within, 2 * px)
+        })
+    }
+
+    pub fn accept_fill_data(&mut self, bytes: &[u8]) {
+        let f = self.fill.as_mut().expect("no fill in flight");
+        let px = bytes.len() / 2;
+        for i in 0..px {
+            self.rows[f.row][f.done_px + i] =
+                i16::from_le_bytes([bytes[2 * i], bytes[2 * i + 1]]);
+        }
+        f.done_px += px;
+        self.stats.fill_accesses += 1;
+        if f.done_px >= f.win_px * f.nrows {
+            self.valid[f.row] = f.done_px;
+            self.stats.fills += 1;
+            self.fill = None;
+        }
+    }
+
+    /// Whether a vector op may read `px` pixels starting at `off` from
+    /// `row` this cycle (fill complete and in range).
+    pub fn can_read(&self, row: usize, max_px_index: usize) -> bool {
+        row < LB_ROWS && max_px_index < self.valid[row]
+    }
+
+    /// Unchecked-fast pixel read for the simulator's hot path. Callers
+    /// must have validated availability via `can_read` (the pipeline's
+    /// LB interlock does); debug builds still bound-check.
+    #[inline(always)]
+    pub fn pixel(&self, row: usize, px: usize) -> i16 {
+        debug_assert!(self.can_read(row, px), "LB fast read of invalid pixel");
+        self.rows[row][px]
+    }
+
+    /// Bulk stats update for fast-path reads.
+    #[inline(always)]
+    pub fn note_pixel_reads(&mut self, n: u64) {
+        self.stats.pixel_reads += n;
+    }
+
+    /// Read one pixel (combinational path to the vALU operand-prepare).
+    pub fn read_pixel(&mut self, row: usize, px: usize) -> Result<i16, LbError> {
+        if row >= LB_ROWS {
+            return Err(LbError::BadRow { row });
+        }
+        if px >= self.valid[row] {
+            return Err(LbError::ReadPastEnd { row, px, valid: self.valid[row] });
+        }
+        self.stats.pixel_reads += 1;
+        Ok(self.rows[row][px])
+    }
+
+    pub fn note_read_stall(&mut self) {
+        self.stats.read_stalls += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill_row(lb: &mut LineBuffer, row: usize, data: &[i16]) {
+        lb.start_fill(row, 0, data.len()).unwrap();
+        let mut fed = 0;
+        while let Some((_addr, len)) = lb.fill_request() {
+            let px = len / 2;
+            let mut bytes = Vec::new();
+            for v in &data[fed..fed + px] {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            lb.accept_fill_data(&bytes);
+            fed += px;
+        }
+    }
+
+    #[test]
+    fn fill_and_read() {
+        let mut lb = LineBuffer::new();
+        let data: Vec<i16> = (0..40).map(|i| i * 3 - 20).collect();
+        fill_row(&mut lb, 1, &data);
+        assert!(lb.can_read(1, 39));
+        assert!(!lb.can_read(1, 40));
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(lb.read_pixel(1, i).unwrap(), *v);
+        }
+        assert_eq!(lb.stats.fills, 1);
+        assert_eq!(lb.stats.fill_accesses, 3); // 16+16+8 pixels
+    }
+
+    #[test]
+    fn read_during_fill_rejected() {
+        let mut lb = LineBuffer::new();
+        lb.start_fill(0, 0, 32).unwrap();
+        assert!(!lb.can_read(0, 0));
+        assert!(lb.read_pixel(0, 0).is_err());
+    }
+
+    #[test]
+    fn double_fill_rejected() {
+        let mut lb = LineBuffer::new();
+        lb.start_fill(0, 0, 16).unwrap();
+        assert!(matches!(lb.start_fill(1, 0, 16), Err(LbError::Busy)));
+    }
+
+    #[test]
+    fn other_rows_stay_valid_during_fill() {
+        let mut lb = LineBuffer::new();
+        fill_row(&mut lb, 0, &[7; 20]);
+        lb.start_fill(1, 0, 20).unwrap();
+        assert!(lb.can_read(0, 19)); // row 0 untouched
+        assert_eq!(lb.read_pixel(0, 5).unwrap(), 7);
+    }
+
+    #[test]
+    fn capacity_checked() {
+        let mut lb = LineBuffer::new();
+        assert!(lb.start_fill(0, 0, LB_ROW_PIXELS + 1).is_err());
+        assert!(lb.start_fill(4, 0, 8).is_err());
+    }
+}

@@ -1,0 +1,48 @@
+//! The ConvAix memory system (Section IV):
+//!
+//! * [`dm`] — 128 KB on-chip data memory, 16 dual-ported banks of 8 KB.
+//!   Port 0 serves the pipeline's load/store unit (slot 0), port 1 is
+//!   shared by the DMA engine and the line-buffer fill path (arbitrated
+//!   in [`interface`]); same-bank collisions between the ports stall the
+//!   background requester.
+//! * [`pm`] — 16 KB program memory (512 encoded bundles).
+//! * [`ext`] — external DRAM model: passive storage plus a bandwidth /
+//!   latency cost model; counts the off-chip I/O bytes of Table II.
+//! * [`dma`] — 2-channel descriptor DMA engine overlapping compute.
+//! * [`linebuf`] — the application-specific IFMap row cache feeding the
+//!   vector ALUs with (possibly strided) pixels at zero slot-0 cost.
+//! * [`interface`] — the custom memory interface arbitrating port 1.
+
+pub mod dma;
+pub mod dm;
+pub mod ext;
+pub mod interface;
+pub mod linebuf;
+pub mod pm;
+
+pub use dm::DataMem;
+pub use dma::{DmaDir, DmaEngine};
+pub use ext::ExtMem;
+pub use interface::MemInterface;
+pub use linebuf::LineBuffer;
+pub use pm::ProgramMem;
+
+/// Data-memory capacity: 128 KByte (Table I).
+pub const DM_BYTES: usize = 128 * 1024;
+/// Number of DM banks (Section IV: 16 banks of 8 KByte).
+pub const DM_BANKS: usize = 16;
+/// Bytes per DM bank.
+pub const DM_BANK_BYTES: usize = DM_BYTES / DM_BANKS;
+/// DM port width: one 256-bit vector per access.
+pub const DM_PORT_BYTES: usize = 32;
+/// Program-memory capacity: 16 KByte (Table I).
+pub const PM_BYTES: usize = 16 * 1024;
+/// External-memory bandwidth available to the DMA, bytes per core cycle.
+/// 8 B/cy @ 400 MHz = 3.2 GB/s — a single-channel LPDDR3/4 class
+/// interface, consistent with the paper's embedded target.
+pub const EXT_BYTES_PER_CYCLE: usize = 8;
+/// Fixed DRAM request latency in cycles (row activation + controller).
+pub const EXT_LATENCY_CYCLES: u64 = 40;
+/// Line-buffer capacity in pixels (i16). 2 KB — enough for a full
+/// VGG/AlexNet row chunk including filter overlap.
+pub const LB_PIXELS: usize = 1024;

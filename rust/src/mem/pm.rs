@@ -1,0 +1,81 @@
+//! Program memory: 16 KB (Table I), i.e. 512 encoded 32-byte bundles.
+//!
+//! The simulator executes decoded bundles for speed, but every program is
+//! loaded through its encoded image so the capacity limit is real: the
+//! code generator must tile kernels to fit (and is tested for it).
+
+use crate::isa::{encode, Program};
+use super::PM_BYTES;
+
+#[derive(Debug, thiserror::Error)]
+pub enum PmError {
+    #[error("program of {size} bytes exceeds the {PM_BYTES}-byte program memory")]
+    TooLarge { size: usize },
+    #[error("encode: {0}")]
+    Encode(#[from] encode::EncodeError),
+}
+
+pub struct ProgramMem {
+    image: Vec<u8>,
+    program: Program,
+}
+
+impl ProgramMem {
+    /// Load a program: encodes it (checking field ranges), verifies it
+    /// fits, and keeps both the image and the decoded form.
+    pub fn load(program: &Program) -> Result<Self, PmError> {
+        let image = encode::encode_program(program)?;
+        if image.len() > PM_BYTES {
+            return Err(PmError::TooLarge { size: image.len() });
+        }
+        // round-trip through the image: what executes is what fits in PM
+        let decoded = encode::decode_program(&image)?;
+        Ok(Self { image, program: decoded })
+    }
+
+    pub fn program(&self) -> &Program {
+        &self.program
+    }
+
+    pub fn image_bytes(&self) -> usize {
+        self.image.len()
+    }
+
+    pub fn bundle_count(&self) -> usize {
+        self.program.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Bundle, SlotOp};
+
+    #[test]
+    fn loads_and_roundtrips() {
+        let mut p = Program::default();
+        p.bundles.push(Bundle::s0(SlotOp::Halt));
+        let pm = ProgramMem::load(&p).unwrap();
+        assert_eq!(pm.bundle_count(), 1);
+        assert_eq!(pm.image_bytes(), 32);
+        assert_eq!(pm.program().bundles[0].slot0, SlotOp::Halt);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut p = Program::default();
+        for _ in 0..513 {
+            p.bundles.push(Bundle::NOP);
+        }
+        assert!(matches!(ProgramMem::load(&p), Err(PmError::TooLarge { .. })));
+    }
+
+    #[test]
+    fn exactly_512_fits() {
+        let mut p = Program::default();
+        for _ in 0..512 {
+            p.bundles.push(Bundle::NOP);
+        }
+        assert!(ProgramMem::load(&p).is_ok());
+    }
+}

@@ -1,0 +1,132 @@
+//! Layer descriptors (batch-1, NCHW without N — the paper targets
+//! latency-sensitive single-frame inference, Section III).
+
+/// A 2-D convolutional layer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConvLayer {
+    pub name: &'static str,
+    pub ic: usize,
+    pub ih: usize,
+    pub iw: usize,
+    pub oc: usize,
+    pub fh: usize,
+    pub fw: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// Grouped convolution (AlexNet conv2/4/5 use 2 groups).
+    pub groups: usize,
+    /// Fractional shift of the requantization stage for this layer.
+    pub frac_shift: u8,
+    /// Fused ReLU.
+    pub relu: bool,
+}
+
+impl ConvLayer {
+    pub const fn new(
+        name: &'static str,
+        ic: usize,
+        ih: usize,
+        iw: usize,
+        oc: usize,
+        fh: usize,
+        fw: usize,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+    ) -> Self {
+        Self { name, ic, ih, iw, oc, fh, fw, stride, pad, groups, frac_shift: 8, relu: true }
+    }
+
+    pub fn oh(&self) -> usize {
+        (self.ih + 2 * self.pad - self.fh) / self.stride + 1
+    }
+
+    pub fn ow(&self) -> usize {
+        (self.iw + 2 * self.pad - self.fw) / self.stride + 1
+    }
+
+    /// Padded input height/width (inputs are staged pre-padded).
+    pub fn ihp(&self) -> usize {
+        self.ih + 2 * self.pad
+    }
+
+    pub fn iwp(&self) -> usize {
+        self.iw + 2 * self.pad
+    }
+
+    /// MAC count, grouped-convolution aware.
+    pub fn macs(&self) -> u64 {
+        (self.oc * (self.ic / self.groups) * self.fh * self.fw * self.oh() * self.ow()) as u64
+    }
+
+    /// 2·MACs, the paper's OP counting convention.
+    pub fn ops(&self) -> u64 {
+        2 * self.macs()
+    }
+
+    /// Weight parameter count.
+    pub fn weights(&self) -> u64 {
+        (self.oc * (self.ic / self.groups) * self.fh * self.fw) as u64
+    }
+
+    /// A single group viewed as a standalone dense conv (the executor
+    /// runs grouped layers one group at a time).
+    pub fn per_group(&self) -> ConvLayer {
+        ConvLayer {
+            ic: self.ic / self.groups,
+            oc: self.oc / self.groups,
+            groups: 1,
+            ..self.clone()
+        }
+    }
+}
+
+/// A max-pooling layer (executed on the slot-1 SFU).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolLayer {
+    pub name: &'static str,
+    pub ic: usize,
+    pub ih: usize,
+    pub iw: usize,
+    pub size: usize,
+    pub stride: usize,
+}
+
+impl PoolLayer {
+    pub fn oh(&self) -> usize {
+        (self.ih - self.size) / self.stride + 1
+    }
+    pub fn ow(&self) -> usize {
+        (self.iw - self.size) / self.stride + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_geometry() {
+        let l = ConvLayer::new("t", 3, 227, 227, 96, 11, 11, 4, 0, 1);
+        assert_eq!(l.oh(), 55);
+        assert_eq!(l.ow(), 55);
+        assert_eq!(l.macs(), 105_415_200);
+    }
+
+    #[test]
+    fn grouped_macs() {
+        let l = ConvLayer::new("t", 96, 27, 27, 256, 5, 5, 1, 2, 2);
+        assert_eq!(l.macs(), 223_948_800);
+        let g = l.per_group();
+        assert_eq!(g.ic, 48);
+        assert_eq!(g.oc, 128);
+        assert_eq!(g.macs() * 2, l.macs());
+    }
+
+    #[test]
+    fn pool_geometry() {
+        let p = PoolLayer { name: "p", ic: 96, ih: 55, iw: 55, size: 3, stride: 2 };
+        assert_eq!(p.oh(), 27);
+        assert_eq!(p.ow(), 27);
+    }
+}

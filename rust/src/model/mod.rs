@@ -1,0 +1,8 @@
+//! CNN workload descriptions: AlexNet and VGG-16 (the paper's benchmarks),
+//! mirrored bit-for-bit against `python/compile/model.py`.
+
+pub mod layer;
+pub mod nets;
+
+pub use layer::{ConvLayer, PoolLayer};
+pub use nets::{alexnet_conv, alexnet_pools, vgg16_conv, vgg16_pools};

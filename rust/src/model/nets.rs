@@ -1,0 +1,97 @@
+//! AlexNet [1] and VGG-16 [14] convolutional stacks — the benchmark
+//! workloads of Table II. Shapes mirror `python/compile/model.py` and the
+//! original papers; MAC totals are pinned by tests to the literature
+//! values (0.666 GMAC AlexNet conv, 15.35 GMAC VGG-16 conv).
+
+use super::layer::{ConvLayer, PoolLayer};
+
+pub fn alexnet_conv() -> Vec<ConvLayer> {
+    vec![
+        ConvLayer::new("conv1", 3, 227, 227, 96, 11, 11, 4, 0, 1),
+        ConvLayer::new("conv2", 96, 27, 27, 256, 5, 5, 1, 2, 2),
+        ConvLayer::new("conv3", 256, 13, 13, 384, 3, 3, 1, 1, 1),
+        ConvLayer::new("conv4", 384, 13, 13, 384, 3, 3, 1, 1, 2),
+        ConvLayer::new("conv5", 384, 13, 13, 256, 3, 3, 1, 1, 2),
+    ]
+}
+
+pub fn alexnet_pools() -> Vec<PoolLayer> {
+    vec![
+        PoolLayer { name: "pool1", ic: 96, ih: 55, iw: 55, size: 3, stride: 2 },
+        PoolLayer { name: "pool2", ic: 256, ih: 27, iw: 27, size: 3, stride: 2 },
+        PoolLayer { name: "pool5", ic: 256, ih: 13, iw: 13, size: 3, stride: 2 },
+    ]
+}
+
+pub fn vgg16_conv() -> Vec<ConvLayer> {
+    vec![
+        ConvLayer::new("conv1_1", 3, 224, 224, 64, 3, 3, 1, 1, 1),
+        ConvLayer::new("conv1_2", 64, 224, 224, 64, 3, 3, 1, 1, 1),
+        ConvLayer::new("conv2_1", 64, 112, 112, 128, 3, 3, 1, 1, 1),
+        ConvLayer::new("conv2_2", 128, 112, 112, 128, 3, 3, 1, 1, 1),
+        ConvLayer::new("conv3_1", 128, 56, 56, 256, 3, 3, 1, 1, 1),
+        ConvLayer::new("conv3_2", 256, 56, 56, 256, 3, 3, 1, 1, 1),
+        ConvLayer::new("conv3_3", 256, 56, 56, 256, 3, 3, 1, 1, 1),
+        ConvLayer::new("conv4_1", 256, 28, 28, 512, 3, 3, 1, 1, 1),
+        ConvLayer::new("conv4_2", 512, 28, 28, 512, 3, 3, 1, 1, 1),
+        ConvLayer::new("conv4_3", 512, 28, 28, 512, 3, 3, 1, 1, 1),
+        ConvLayer::new("conv5_1", 512, 14, 14, 512, 3, 3, 1, 1, 1),
+        ConvLayer::new("conv5_2", 512, 14, 14, 512, 3, 3, 1, 1, 1),
+        ConvLayer::new("conv5_3", 512, 14, 14, 512, 3, 3, 1, 1, 1),
+    ]
+}
+
+pub fn vgg16_pools() -> Vec<PoolLayer> {
+    vec![
+        PoolLayer { name: "pool1", ic: 64, ih: 224, iw: 224, size: 2, stride: 2 },
+        PoolLayer { name: "pool2", ic: 128, ih: 112, iw: 112, size: 2, stride: 2 },
+        PoolLayer { name: "pool3", ic: 256, ih: 56, iw: 56, size: 2, stride: 2 },
+        PoolLayer { name: "pool4", ic: 512, ih: 28, iw: 28, size: 2, stride: 2 },
+        PoolLayer { name: "pool5", ic: 512, ih: 14, iw: 14, size: 2, stride: 2 },
+    ]
+}
+
+/// Conv-stack MACs for AlexNet (matches the literature; pinned by test).
+pub const ALEXNET_CONV_MACS: u64 = 665_784_864;
+/// Conv-stack MACs for VGG-16.
+pub const VGG16_CONV_MACS: u64 = 15_346_630_656;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alexnet_totals() {
+        let total: u64 = alexnet_conv().iter().map(|l| l.macs()).sum();
+        assert_eq!(total, ALEXNET_CONV_MACS);
+    }
+
+    #[test]
+    fn vgg_totals() {
+        let total: u64 = vgg16_conv().iter().map(|l| l.macs()).sum();
+        assert_eq!(total, VGG16_CONV_MACS);
+    }
+
+    #[test]
+    fn chains_consistent() {
+        let a = alexnet_conv();
+        assert_eq!(a[0].oh(), 55);
+        // pool1 55->27 feeds conv2
+        assert_eq!((55 - 3) / 2 + 1, a[1].ih);
+        for w in vgg16_conv().windows(2) {
+            assert_eq!(w[1].ic, w[0].oc);
+            assert!(w[1].ih == w[0].oh() || w[1].ih == w[0].oh() / 2);
+        }
+    }
+
+    #[test]
+    fn ideal_time_matches_paper_arithmetic() {
+        // MACs / 192 per cycle / 400 MHz = ideal time; paper: AlexNet
+        // 12.60 ms at util 0.69 -> ideal 8.69 ms; VGG 263 ms at 0.76 ->
+        // ideal 200 ms.
+        let ideal_alex = ALEXNET_CONV_MACS as f64 / 192.0 / 400e6 * 1e3;
+        assert!((ideal_alex - 8.67).abs() < 0.1, "{ideal_alex}");
+        let ideal_vgg = VGG16_CONV_MACS as f64 / 192.0 / 400e6 * 1e3;
+        assert!((ideal_vgg - 199.8).abs() < 1.0, "{ideal_vgg}");
+    }
+}

@@ -1,0 +1,115 @@
+//! Golden verification: cycle simulator ⇄ JAX/Pallas (via PJRT),
+//! **bit-exact**, three-way (simulator / PJRT artifact / host reference).
+
+use anyhow::Result;
+
+use crate::coordinator::executor::{run_conv_layer, run_pool_layer, ExecOptions};
+use crate::codegen::refconv;
+use crate::core::Cpu;
+use crate::fixed::RoundMode;
+use crate::model::{ConvLayer, PoolLayer};
+use crate::util::XorShift;
+
+use super::pjrt::{ArtifactConv, ArtifactPool, Manifest, PjrtRunner};
+
+#[derive(Debug)]
+pub struct GoldenReport {
+    pub name: String,
+    pub elements: usize,
+    pub sim_vs_pjrt_mismatches: usize,
+    pub sim_vs_host_mismatches: usize,
+    pub sim_cycles: u64,
+    pub sim_util: f64,
+}
+
+impl GoldenReport {
+    pub fn ok(&self) -> bool {
+        self.sim_vs_pjrt_mismatches == 0 && self.sim_vs_host_mismatches == 0
+    }
+}
+
+fn conv_layer_of(art: &ArtifactConv) -> ConvLayer {
+    ConvLayer {
+        name: "golden",
+        ic: art.ic,
+        ih: art.ih,
+        iw: art.iw,
+        oc: art.oc,
+        fh: art.fh,
+        fw: art.fw,
+        stride: art.stride,
+        pad: art.pad,
+        groups: 1,
+        frac_shift: art.frac_shift,
+        relu: art.relu,
+    }
+}
+
+/// Run one conv artifact through (a) the PJRT golden model, (b) the
+/// cycle simulator, (c) the host reference, on identical synthetic
+/// tensors, and compare bit-exactly.
+pub fn golden_conv_check(
+    runner: &PjrtRunner,
+    manifest: &Manifest,
+    art: &ArtifactConv,
+    seed: u64,
+) -> Result<GoldenReport> {
+    let layer = conv_layer_of(art);
+    let mut rng = XorShift::new(seed);
+    let x = rng.i16_vec(art.ic * art.ih * art.iw, -2000, 2000);
+    let w = rng.i16_vec(art.oc * art.ic * art.fh * art.fw, -256, 256);
+    let b = rng.i32_vec(art.oc, -2000, 2000);
+
+    let golden = runner.run_conv(manifest, art, &x, &w, &b)?;
+    let host = refconv::conv2d(&x, &w, &b, &layer, RoundMode::HalfUp, 16);
+
+    let mut cpu = Cpu::new(1 << 24);
+    let sim = run_conv_layer(&mut cpu, &layer, &x, &w, &b, ExecOptions::default())
+        .map_err(|e| anyhow::anyhow!("sim: {e}"))?;
+
+    let mism = |a: &[i16], b: &[i16]| a.iter().zip(b).filter(|(x, y)| x != y).count();
+    Ok(GoldenReport {
+        name: art.name.clone(),
+        elements: golden.len(),
+        sim_vs_pjrt_mismatches: mism(&sim.out, &golden),
+        sim_vs_host_mismatches: mism(&sim.out, &host),
+        sim_cycles: sim.cycles,
+        sim_util: sim.utilization(),
+    })
+}
+
+/// Same for a pool artifact (SFU path).
+pub fn golden_pool_check(
+    runner: &PjrtRunner,
+    manifest: &Manifest,
+    art: &ArtifactPool,
+    seed: u64,
+) -> Result<GoldenReport> {
+    let layer = PoolLayer {
+        name: "golden",
+        ic: art.ic,
+        ih: art.ih,
+        iw: art.iw,
+        size: art.size,
+        stride: art.stride,
+    };
+    let mut rng = XorShift::new(seed);
+    let x = rng.i16_vec(art.ic * art.ih * art.iw, -30000, 30000);
+
+    let golden = runner.run_pool(manifest, art, &x)?;
+    let host = refconv::maxpool2d(&x, art.ic, art.ih, art.iw, art.size, art.stride);
+
+    let mut cpu = Cpu::new(1 << 22);
+    let sim = run_pool_layer(&mut cpu, &layer, &x, ExecOptions::default())
+        .map_err(|e| anyhow::anyhow!("sim: {e}"))?;
+
+    let mism = |a: &[i16], b: &[i16]| a.iter().zip(b).filter(|(x, y)| x != y).count();
+    Ok(GoldenReport {
+        name: art.name.clone(),
+        elements: golden.len(),
+        sim_vs_pjrt_mismatches: mism(&sim.out, &golden),
+        sim_vs_host_mismatches: mism(&sim.out, &host),
+        sim_cycles: sim.cycles,
+        sim_util: sim.utilization(),
+    })
+}

@@ -1,0 +1,19 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! This is the bridge to the L1/L2 python layers (build-time only):
+//! `make artifacts` lowers the Pallas conv/pool kernels to **HLO text**
+//! (`artifacts/*.hlo.txt` + `manifest.json`); this module compiles them
+//! on the PJRT CPU client (`xla` crate) and runs them as the **golden
+//! model** — the cycle simulator's outputs must match **bit-exactly**
+//! (both sides implement the same Q-format contract, `fixed` /
+//! `kernels/quant.py`).
+//!
+//! HLO *text* is the interchange format: jax ≥ 0.5 emits HloModuleProto
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod golden;
+pub mod pjrt;
+
+pub use golden::{golden_conv_check, golden_pool_check, GoldenReport};
+pub use pjrt::{ArtifactConv, ArtifactPool, Manifest, PjrtRunner};

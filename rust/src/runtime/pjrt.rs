@@ -1,0 +1,162 @@
+//! PJRT CPU client wrapper + artifact manifest parsing.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// A conv artifact entry from `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactConv {
+    pub name: String,
+    pub ic: usize,
+    pub ih: usize,
+    pub iw: usize,
+    pub oc: usize,
+    pub fh: usize,
+    pub fw: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub frac_shift: u8,
+    pub relu: bool,
+    pub oh: usize,
+    pub ow: usize,
+}
+
+/// A pool artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactPool {
+    pub name: String,
+    pub ic: usize,
+    pub ih: usize,
+    pub iw: usize,
+    pub size: usize,
+    pub stride: usize,
+    pub oh: usize,
+    pub ow: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub convs: Vec<ArtifactConv>,
+    pub pools: Vec<ArtifactPool>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.json` (written by `python -m compile.aot`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("{}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let mut m = Manifest { dir, ..Default::default() };
+        for c in j.get("convs").and_then(Json::as_arr).unwrap_or(&[]) {
+            m.convs.push(ArtifactConv {
+                name: c.s("name").to_string(),
+                ic: c.u("ic"),
+                ih: c.u("ih"),
+                iw: c.u("iw"),
+                oc: c.u("oc"),
+                fh: c.u("fh"),
+                fw: c.u("fw"),
+                stride: c.u("stride"),
+                pad: c.u("pad"),
+                frac_shift: c.u("frac_shift") as u8,
+                relu: c.u("relu") != 0,
+                oh: c.u("oh"),
+                ow: c.u("ow"),
+            });
+        }
+        for p in j.get("pools").and_then(Json::as_arr).unwrap_or(&[]) {
+            m.pools.push(ArtifactPool {
+                name: p.s("name").to_string(),
+                ic: p.u("ic"),
+                ih: p.u("ih"),
+                iw: p.u("iw"),
+                size: p.u("size"),
+                stride: p.u("stride"),
+                oh: p.u("oh"),
+                ow: p.u("ow"),
+            });
+        }
+        Ok(m)
+    }
+
+    pub fn conv(&self, name: &str) -> Option<&ArtifactConv> {
+        self.convs.iter().find(|c| c.name == name)
+    }
+
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+}
+
+/// PJRT CPU client + compiled-executable cache.
+pub struct PjrtRunner {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRunner {
+    pub fn new() -> Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu()? })
+    }
+
+    /// i16 literal (the crate's `vec1` covers only 32/64-bit natives;
+    /// 16-bit tensors go through the untyped-bytes constructor).
+    fn literal_i16(data: &[i16], dims: &[usize]) -> Result<xla::Literal> {
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S16,
+            dims,
+            &bytes,
+        )?)
+    }
+
+    fn compile(&self, hlo_path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("non-utf8 path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    /// Execute a conv artifact: x (ic·ih·iw i16), w (oc·ic·fh·fw i16),
+    /// b (oc i32) -> (oc·oh·ow i16).
+    pub fn run_conv(
+        &self,
+        manifest: &Manifest,
+        art: &ArtifactConv,
+        x: &[i16],
+        w: &[i16],
+        b: &[i32],
+    ) -> Result<Vec<i16>> {
+        assert_eq!(x.len(), art.ic * art.ih * art.iw);
+        assert_eq!(w.len(), art.oc * art.ic * art.fh * art.fw);
+        assert_eq!(b.len(), art.oc);
+        let exe = self.compile(&manifest.hlo_path(&art.name))?;
+        let xl = Self::literal_i16(x, &[art.ic, art.ih, art.iw])?;
+        let wl = Self::literal_i16(w, &[art.oc, art.ic, art.fh, art.fw])?;
+        let bl = xla::Literal::vec1(b);
+        let result = exe.execute::<xla::Literal>(&[xl, wl, bl])?[0][0].to_literal_sync()?;
+        // lowered with return_tuple=True -> 1-tuple
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<i16>()?)
+    }
+
+    /// Execute a pool artifact: x (ic·ih·iw i16) -> (ic·oh·ow i16).
+    pub fn run_pool(
+        &self,
+        manifest: &Manifest,
+        art: &ArtifactPool,
+        x: &[i16],
+    ) -> Result<Vec<i16>> {
+        assert_eq!(x.len(), art.ic * art.ih * art.iw);
+        let exe = self.compile(&manifest.hlo_path(&art.name))?;
+        let xl = Self::literal_i16(x, &[art.ic, art.ih, art.iw])?;
+        let result = exe.execute::<xla::Literal>(&[xl])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<i16>()?)
+    }
+}

@@ -1,0 +1,108 @@
+//! Micro-benchmark measurer (criterion is not in the offline vendor set).
+//!
+//! `cargo bench` targets use `harness = false` and call [`Bench::run`] /
+//! the table regenerators directly. Reports min/median/mean over N
+//! timed iterations after warmup, criterion-style.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min_ns: u128,
+    pub median_ns: u128,
+    pub mean_ns: u128,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<40} iters={:<4} min={:>12} median={:>12} mean={:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.min_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns)
+        );
+    }
+}
+
+pub fn fmt_ns(ns: u128) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.3} s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.3} ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.3} µs", ns as f64 / 1e3)
+    } else {
+        format!("{ns} ns")
+    }
+}
+
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup: 2, iters: 10 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self { warmup: 1, iters: 5 }
+    }
+
+    /// Time `f`, which must return something observable to prevent DCE.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples: Vec<u128> = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos());
+        }
+        samples.sort_unstable();
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            min_ns: samples[0],
+            median_ns: samples[samples.len() / 2],
+            mean_ns: samples.iter().sum::<u128>() / samples.len() as u128,
+        };
+        res.report();
+        res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench { warmup: 1, iters: 3 };
+        let r = b.run("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(r.min_ns > 0);
+        assert!(r.min_ns <= r.median_ns);
+        assert!(r.median_ns <= r.mean_ns * 2);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500).contains("ns"));
+        assert!(fmt_ns(5_000).contains("µs"));
+        assert!(fmt_ns(5_000_000).contains("ms"));
+        assert!(fmt_ns(5_000_000_000).contains(" s"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Small self-contained utilities (the offline vendor set has no serde /
+//! criterion / proptest — these are the hand-rolled substitutes).
+
+pub mod bench;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod table;
+
+pub use rng::XorShift;

@@ -1,0 +1,162 @@
+//! Miniature property-testing harness (the offline vendor set has no
+//! `proptest`/`quickcheck`). Deterministic seeds, fixed case counts, and
+//! a shrink-on-failure pass that retries with "smaller" integer inputs.
+//!
+//! Usage (`no_run`: doctest executables miss the xla rpath in this image):
+//! ```no_run
+//! use convaix::util::proptest::prop;
+//! prop("addition commutes", 100, |g| {
+//!     let a = g.int(-1000, 1000);
+//!     let b = g.int(-1000, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::XorShift;
+
+/// Value generator handed to property closures. Records the draws so a
+/// failing case can be reported and (coarsely) shrunk.
+pub struct Gen {
+    rng: XorShift,
+    pub draws: Vec<i64>,
+    /// When replaying a shrink candidate this holds the forced values.
+    forced: Option<Vec<i64>>,
+    cursor: usize,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Self { rng: XorShift::new(seed), draws: Vec::new(), forced: None, cursor: 0 }
+    }
+
+    fn replay(values: Vec<i64>) -> Self {
+        Self {
+            rng: XorShift::new(0),
+            draws: Vec::new(),
+            forced: Some(values),
+            cursor: 0,
+        }
+    }
+
+    /// Draw an integer in [lo, hi] (inclusive).
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(hi >= lo);
+        let v = if let Some(forced) = &self.forced {
+            let raw = forced.get(self.cursor).copied().unwrap_or(lo);
+            self.cursor += 1;
+            raw.clamp(lo, hi)
+        } else {
+            lo + (self.rng.next_u64() % (hi - lo + 1) as u64) as i64
+        };
+        self.draws.push(v);
+        v
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.int(lo as i64, hi as i64) as usize
+    }
+
+    pub fn i16_in(&mut self, lo: i16, hi: i16) -> i16 {
+        self.int(lo as i64, hi as i64) as i16
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.int(0, 1) == 1
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize_in(0, items.len() - 1)]
+    }
+
+    pub fn vec_i16(&mut self, n: usize, lo: i16, hi: i16) -> Vec<i16> {
+        (0..n).map(|_| self.i16_in(lo, hi)).collect()
+    }
+}
+
+/// Run `cases` random cases of `f`; on panic, attempt a simple shrink
+/// (halving each recorded draw towards zero) and re-panic with the
+/// minimal found counterexample draws.
+pub fn prop<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: u64, f: F) {
+    for case in 0..cases {
+        let seed = 0xC0DE_0000 + case;
+        let mut g = Gen::new(seed);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut g)));
+        if let Err(err) = r {
+            // shrink: repeatedly halve draws while still failing
+            let mut best = g.draws.clone();
+            let mut improved = true;
+            while improved {
+                improved = false;
+                for i in 0..best.len() {
+                    if best[i] == 0 {
+                        continue;
+                    }
+                    let mut cand = best.clone();
+                    cand[i] /= 2;
+                    let mut rg = Gen::replay(cand.clone());
+                    let failed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        f(&mut rg)
+                    }))
+                    .is_err();
+                    if failed {
+                        best = cand;
+                        improved = true;
+                    }
+                }
+            }
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "panic".into());
+            panic!(
+                "property `{name}` failed (case {case}, seed {seed:#x}): {msg}\n  shrunk draws: {best:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        prop("add commutes", 50, |g| {
+            let a = g.int(-100, 100);
+            let b = g.int(-100, 100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_is_reported_and_shrunk() {
+        let r = std::panic::catch_unwind(|| {
+            prop("always small", 50, |g| {
+                let v = g.int(0, 1000);
+                assert!(v < 500, "v too big: {v}");
+            });
+        });
+        let msg = format!("{:?}", r.unwrap_err().downcast_ref::<String>());
+        assert!(msg.contains("always small"));
+    }
+
+    #[test]
+    fn gen_bounds_inclusive() {
+        let mut g = Gen::new(1);
+        for _ in 0..1000 {
+            let v = g.int(-3, 3);
+            assert!((-3..=3).contains(&v));
+        }
+    }
+
+    #[test]
+    fn pick_and_bool() {
+        let mut g = Gen::new(2);
+        let items = [1, 2, 3];
+        for _ in 0..50 {
+            assert!(items.contains(g.pick(&items)));
+            let _ = g.bool();
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Deterministic xorshift64* PRNG for synthetic workload data.
+//!
+//! The paper's metrics are data-independent (dense fixed-point datapath),
+//! but golden comparisons need *identical* tensors on the rust and PJRT
+//! sides — a tiny, fully specified generator guarantees that.
+
+/// xorshift64* — 64-bit state, passes BigCrush for our purposes.
+#[derive(Debug, Clone)]
+pub struct XorShift {
+    state: u64,
+}
+
+impl XorShift {
+    pub fn new(seed: u64) -> Self {
+        // avoid the all-zero fixed point
+        Self { state: seed.wrapping_mul(0x9E3779B97F4A7C15) | 1 }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [lo, hi) (hi > lo).
+    #[inline]
+    pub fn range_i32(&mut self, lo: i32, hi: i32) -> i32 {
+        debug_assert!(hi > lo);
+        let span = (hi - lo) as u64;
+        lo + (self.next_u64() % span) as i32
+    }
+
+    /// Random i16 in [lo, hi).
+    #[inline]
+    pub fn i16_in(&mut self, lo: i16, hi: i16) -> i16 {
+        self.range_i32(lo as i32, hi as i32) as i16
+    }
+
+    /// Vector of random i16 in [lo, hi).
+    pub fn i16_vec(&mut self, n: usize, lo: i16, hi: i16) -> Vec<i16> {
+        (0..n).map(|_| self.i16_in(lo, hi)).collect()
+    }
+
+    /// Vector of random i32 in [lo, hi).
+    pub fn i32_vec(&mut self, n: usize, lo: i32, hi: i32) -> Vec<i32> {
+        (0..n).map(|_| self.range_i32(lo, hi)).collect()
+    }
+
+    /// Uniform f64 in [0,1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = XorShift::new(42);
+        let mut b = XorShift::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = XorShift::new(1);
+        let mut b = XorShift::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = XorShift::new(7);
+        for _ in 0..1000 {
+            let v = r.range_i32(-100, 100);
+            assert!((-100..100).contains(&v));
+        }
+    }
+
+    #[test]
+    fn i16_vec_len_and_bounds() {
+        let mut r = XorShift::new(3);
+        let v = r.i16_vec(257, -50, 50);
+        assert_eq!(v.len(), 257);
+        assert!(v.iter().all(|&x| (-50..50).contains(&x)));
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = XorShift::new(9);
+        for _ in 0..1000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+}

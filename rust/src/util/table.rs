@@ -1,0 +1,119 @@
+//! ASCII table renderer for regenerating the paper's tables/figures on
+//! stdout (Table I, Table II, Fig. 3b/3c breakdowns).
+
+/// A simple column-aligned table with a header row.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn rowv(&mut self, cells: Vec<String>) -> &mut Self {
+        self.row(&cells)
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = w[i].max(h.chars().count());
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let line = |w: &[usize]| {
+            let mut s = String::from("+");
+            for x in w {
+                s.push_str(&"-".repeat(x + 2));
+                s.push('+');
+            }
+            s.push('\n');
+            s
+        };
+        let fmt_row = |cells: &[String], w: &[usize]| {
+            let mut s = String::from("|");
+            for (c, x) in cells.iter().zip(w) {
+                s.push_str(&format!(" {:<width$} |", c, width = x));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&w));
+        out.push_str(&fmt_row(&self.header, &w));
+        out.push_str(&line(&w));
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &w));
+        }
+        out.push_str(&line(&w));
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Horizontal ASCII bar chart (for the Fig. 3b / 3c pie-chart breakdowns).
+pub fn bar_chart(title: &str, items: &[(String, f64)], width: usize) -> String {
+    let total: f64 = items.iter().map(|(_, v)| v).sum();
+    let name_w = items.iter().map(|(n, _)| n.chars().count()).max().unwrap_or(0);
+    let mut out = format!("== {title} ==\n");
+    for (name, v) in items {
+        let frac = if total > 0.0 { v / total } else { 0.0 };
+        let n = (frac * width as f64).round() as usize;
+        out.push_str(&format!(
+            "{:<name_w$} | {:<width$} {:5.1}%\n",
+            name,
+            "#".repeat(n),
+            frac * 100.0,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row(&["xxx".into(), "1".into()]);
+        let s = t.render();
+        assert!(s.contains("== T =="));
+        assert!(s.contains("| xxx | 1  |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn bars_sum_to_100() {
+        let s = bar_chart("B", &[("x".into(), 1.0), ("y".into(), 3.0)], 20);
+        assert!(s.contains("25.0%"));
+        assert!(s.contains("75.0%"));
+    }
+}

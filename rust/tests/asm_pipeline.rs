@@ -1,0 +1,97 @@
+//! Integration: assembler → encoder → PM image → decoder → simulator.
+
+use convaix::core::Cpu;
+use convaix::isa::{asm::assemble, disasm, encode, SReg};
+use convaix::mem::pm::ProgramMem;
+use convaix::util::proptest::prop;
+
+#[test]
+fn fibonacci_via_branches() {
+    let p = assemble(
+        "li r1, 0\n\
+         li r2, 1\n\
+         li r3, 10\n\
+         li r4, 0\n\
+         li r6, 1\n\
+         loop:\n\
+         add r5, r1, r2\n\
+         add r1, r2, r0\n\
+         add r2, r5, r0\n\
+         add r4, r4, r6\n\
+         bne r4, r3, loop\n\
+         halt",
+    )
+    .unwrap();
+    let pm = ProgramMem::load(&p).unwrap();
+    let mut cpu = Cpu::new(1 << 16);
+    cpu.run(&pm).unwrap();
+    // fib: after 10 iterations starting (0,1): r1 = fib(10) = 55
+    assert_eq!(cpu.regs.r(SReg(1)), 55);
+}
+
+#[test]
+fn encoded_image_executes_identically() {
+    let src = "li r1, 256\n\
+               li r2, 512\n\
+               lds r3, [r1]\n\
+               addi r3, r3, 5\n\
+               sts r3, [r2]\n\
+               halt";
+    let p = assemble(src).unwrap();
+    // round-trip through the binary image
+    let bytes = encode::encode_program(&p).unwrap();
+    let p2 = encode::decode_program(&bytes).unwrap();
+    assert_eq!(p.bundles, p2.bundles);
+
+    let pm = ProgramMem::load(&p2).unwrap();
+    let mut cpu = Cpu::new(1 << 16);
+    cpu.mem.dm.poke_i16(256, -77);
+    cpu.run(&pm).unwrap();
+    assert_eq!(cpu.mem.dm.peek_i16(512), -72);
+}
+
+#[test]
+fn disasm_asm_fixpoint_on_generated_kernels() {
+    // conv kernels survive a disassemble/re-assemble cycle
+    use convaix::codegen::conv::{build_conv_task, TaskFlavor};
+    use convaix::codegen::layout::plan;
+    use convaix::model::ConvLayer;
+    let l = ConvLayer::new("t", 8, 16, 16, 16, 3, 3, 1, 1, 1);
+    let pl = plan(&l).unwrap();
+    let pm = build_conv_task(&pl, 8, TaskFlavor::single()).unwrap();
+    let text = disasm::program(pm.program());
+    let back = assemble(&text).unwrap_or_else(|e| panic!("{e}\n{text}"));
+    assert_eq!(pm.program().bundles, back.bundles);
+}
+
+#[test]
+fn scalar_alu_properties() {
+    prop("simulated scalar ALU == host arithmetic", 40, |g| {
+        let a = g.int(-100_000, 100_000) as i32;
+        let b = g.int(-1000, 1000) as i32;
+        let src = format!(
+            "li r1, {a}\nli r2, {b}\nadd r3, r1, r2\nsub r4, r1, r2\n\
+             mul r5, r1, r2\nmax r6, r1, r2\nmin r7, r1, r2\nhalt"
+        );
+        let p = assemble(&src).unwrap();
+        let pm = ProgramMem::load(&p).unwrap();
+        let mut cpu = Cpu::new(1 << 14);
+        cpu.run(&pm).unwrap();
+        assert_eq!(cpu.regs.r(SReg(3)), a.wrapping_add(b));
+        assert_eq!(cpu.regs.r(SReg(4)), a.wrapping_sub(b));
+        assert_eq!(cpu.regs.r(SReg(5)), a.wrapping_mul(b));
+        assert_eq!(cpu.regs.r(SReg(6)), a.max(b));
+        assert_eq!(cpu.regs.r(SReg(7)), a.min(b));
+    });
+}
+
+#[test]
+fn pm_capacity_rejected_at_load() {
+    let mut src = String::new();
+    for _ in 0..513 {
+        src.push_str("nop\n");
+    }
+    src.push_str("halt\n");
+    let p = assemble(&src).unwrap();
+    assert!(ProgramMem::load(&p).is_err());
+}

@@ -1,0 +1,55 @@
+//! Integration: the full three-layer golden chain — cycle simulator vs
+//! AOT JAX/Pallas artifacts through PJRT vs host reference, bit-exact,
+//! for every artifact in the manifest.
+//!
+//! Requires `make artifacts`; skips (with a loud message) if absent so
+//! plain `cargo test` works in a fresh checkout.
+
+use convaix::runtime::{golden_conv_check, golden_pool_check, Manifest, PjrtRunner};
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIPPING golden integration tests: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn all_conv_artifacts_bit_exact() {
+    let Some(m) = manifest() else { return };
+    let runner = PjrtRunner::new().expect("pjrt client");
+    assert!(!m.convs.is_empty(), "manifest has no conv artifacts");
+    for (i, art) in m.convs.iter().enumerate() {
+        // the large AlexNet-L1 artifact is covered by the e2e example
+        if art.ih > 64 {
+            continue;
+        }
+        let r = golden_conv_check(&runner, &m, art, 1000 + i as u64).expect("golden run");
+        assert_eq!(r.sim_vs_pjrt_mismatches, 0, "{}: sim != pjrt", art.name);
+        assert_eq!(r.sim_vs_host_mismatches, 0, "{}: sim != host", art.name);
+    }
+}
+
+#[test]
+fn all_pool_artifacts_bit_exact() {
+    let Some(m) = manifest() else { return };
+    let runner = PjrtRunner::new().expect("pjrt client");
+    for (i, art) in m.pools.iter().enumerate() {
+        let r = golden_pool_check(&runner, &m, art, 2000 + i as u64).expect("golden run");
+        assert!(r.ok(), "{}: mismatches", art.name);
+    }
+}
+
+#[test]
+fn golden_repeatable_across_seeds() {
+    let Some(m) = manifest() else { return };
+    let runner = PjrtRunner::new().expect("pjrt client");
+    let art = m.conv("conv_small").expect("conv_small artifact");
+    for seed in [1u64, 42, 31337] {
+        let r = golden_conv_check(&runner, &m, art, seed).expect("golden run");
+        assert!(r.ok(), "seed {seed}");
+    }
+}

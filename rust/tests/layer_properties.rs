@@ -1,0 +1,114 @@
+//! Property tests over the whole codegen → simulator stack: arbitrary
+//! small conv shapes must match the host reference bit-exactly and obey
+//! the simulator's structural invariants.
+
+use convaix::codegen::refconv;
+use convaix::coordinator::executor::{run_conv_layer, ExecMode, ExecOptions};
+use convaix::core::Cpu;
+use convaix::fixed::RoundMode;
+use convaix::model::ConvLayer;
+use convaix::util::proptest::prop;
+use convaix::util::XorShift;
+
+#[test]
+fn random_conv_layers_match_reference() {
+    prop("conv == host reference", 25, |g| {
+        let fh = g.usize_in(1, 5);
+        let fw = g.usize_in(1, 5);
+        let stride = g.usize_in(1, 2);
+        let pad = g.usize_in(0, fh.min(fw) - usize::from(fh.min(fw) > 1));
+        let ih = g.usize_in(fh.max(4), 14);
+        let iw = g.usize_in(fw.max(4), 14);
+        let ic = g.usize_in(1, 6);
+        let oc = 16 * g.usize_in(1, 2);
+        let mut l = ConvLayer::new("prop", ic, ih, iw, oc, fh, fw, stride, pad, 1);
+        l.relu = g.bool();
+        l.frac_shift = g.usize_in(0, 12) as u8;
+        if l.ihp() < fh || l.iwp() < fw {
+            return;
+        }
+        let mut rng = XorShift::new(g.int(0, i64::MAX / 2) as u64);
+        let x = rng.i16_vec(ic * ih * iw, -3000, 3000);
+        let w = rng.i16_vec(oc * ic * fh * fw, -300, 300);
+        let b = rng.i32_vec(oc, -2000, 2000);
+        let mut cpu = Cpu::new(1 << 22);
+        let r = run_conv_layer(&mut cpu, &l, &x, &w, &b, ExecOptions::default())
+            .unwrap_or_else(|e| panic!("{}: {e}", shape_str(&l)));
+        let expect = refconv::conv2d(&x, &w, &b, &l, RoundMode::HalfUp, 16);
+        assert_eq!(r.out, expect, "{}", shape_str(&l));
+        // structural invariants
+        assert_eq!(r.macs, l.macs());
+        assert!(r.cycles >= l.macs() / convaix::PEAK_MACS_PER_CYCLE);
+    });
+}
+
+#[test]
+fn utilization_never_exceeds_one() {
+    prop("util <= 1", 15, |g| {
+        let l = ConvLayer::new(
+            "u",
+            g.usize_in(1, 8),
+            g.usize_in(6, 16),
+            g.usize_in(6, 16),
+            16,
+            3,
+            3,
+            1,
+            1,
+            1,
+        );
+        let mut rng = XorShift::new(1);
+        let x = rng.i16_vec(l.ic * l.ih * l.iw, -100, 100);
+        let w = rng.i16_vec(l.oc * l.ic * 9, -100, 100);
+        let b = rng.i32_vec(l.oc, -10, 10);
+        let mut cpu = Cpu::new(1 << 22);
+        let r = run_conv_layer(&mut cpu, &l, &x, &w, &b, ExecOptions::default()).unwrap();
+        let u = r.utilization();
+        assert!(u > 0.0 && u <= 1.0, "util {u}");
+    });
+}
+
+#[test]
+fn analytic_mode_tracks_full_cycle() {
+    prop("analytic within 2%", 8, |g| {
+        let l = ConvLayer::new(
+            "a",
+            2 * g.usize_in(1, 6),
+            g.usize_in(10, 20),
+            g.usize_in(10, 20),
+            16 * g.usize_in(1, 2),
+            3,
+            3,
+            1,
+            1,
+            1,
+        );
+        let mut rng = XorShift::new(7);
+        let x = rng.i16_vec(l.ic * l.ih * l.iw, -100, 100);
+        let w = rng.i16_vec(l.oc * l.ic * 9, -100, 100);
+        let b = rng.i32_vec(l.oc, -10, 10);
+        let mut c1 = Cpu::new(1 << 22);
+        let full = run_conv_layer(&mut c1, &l, &x, &w, &b, ExecOptions::default()).unwrap();
+        let mut c2 = Cpu::new(1 << 22);
+        let fast = run_conv_layer(
+            &mut c2,
+            &l,
+            &x,
+            &w,
+            &b,
+            ExecOptions { mode: ExecMode::TileAnalytic, gate_bits: 16 },
+        )
+        .unwrap();
+        let err = (full.compute_cycles as f64 - fast.compute_cycles as f64).abs()
+            / full.compute_cycles as f64;
+        assert!(err < 0.02, "drift {err} on {}", shape_str(&l));
+        assert_eq!(full.io_total(), fast.io_total());
+    });
+}
+
+fn shape_str(l: &ConvLayer) -> String {
+    format!(
+        "ic{} {}x{} oc{} f{}x{} s{} p{} shift{} relu{}",
+        l.ic, l.ih, l.iw, l.oc, l.fh, l.fw, l.stride, l.pad, l.frac_shift, l.relu
+    )
+}
