@@ -1,0 +1,57 @@
+//! Batched throughput demo: serve a stream of frames on a multi-core
+//! ConvAix pool — the production-serving scenario the paper's batch-1,
+//! single-core setup cannot express.
+//!
+//! AlexNet and VGG-16 conv stacks, 8 frames, 1 → 4 cores, tile-analytic
+//! mode at the paper's 8-bit gated operating point.
+//!
+//!     cargo run --release --example batched_throughput
+
+use convaix::coordinator::executor::{ExecMode, ExecOptions, NetLayer};
+use convaix::coordinator::scheduler::{run_batched, CorePool};
+use convaix::model::{alexnet_conv, vgg16_conv};
+use convaix::util::table::Table;
+use convaix::util::XorShift;
+
+fn main() -> anyhow::Result<()> {
+    const BATCH: usize = 8;
+    for (name, conv) in [("AlexNet", alexnet_conv()), ("VGG-16", vgg16_conv())] {
+        let (ic, ih, iw) = (conv[0].ic, conv[0].ih, conv[0].iw);
+        let layers: Vec<NetLayer> = conv.into_iter().map(NetLayer::Conv).collect();
+        let mut rng = XorShift::new(0xF00D);
+        let inputs: Vec<Vec<i16>> =
+            (0..BATCH).map(|_| rng.i16_vec(ic * ih * iw, -2000, 2000)).collect();
+
+        let mut t = Table::new(
+            &format!("{name}: {BATCH} frames fanned out over the core pool"),
+            &["Cores", "Batch latency [ms]", "Throughput [f/s]", "Speedup", "Core busy frac"],
+        );
+        for cores in [1usize, 2, 4] {
+            let opts = ExecOptions {
+                mode: ExecMode::TileAnalytic,
+                gate_bits: 8,
+                cores,
+                batch: BATCH,
+            };
+            let mut pool = CorePool::new(cores, 1 << 24);
+            let br = run_batched(&mut pool, name, &layers, &inputs, opts, 0xC0FFEE)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let busy = br
+                .core_utilization()
+                .iter()
+                .map(|u| format!("{u:.2}"))
+                .collect::<Vec<_>>()
+                .join(" ");
+            t.row(&[
+                cores.to_string(),
+                format!("{:.2}", br.makespan_cycles() as f64 / convaix::CLOCK_HZ as f64 * 1e3),
+                format!("{:.1}", br.throughput_fps()),
+                format!("{:.2}x", br.speedup()),
+                busy,
+            ]);
+        }
+        t.print();
+        println!();
+    }
+    Ok(())
+}

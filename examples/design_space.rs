@@ -29,7 +29,7 @@ fn run_one(l: &ConvLayer, gate: u8) -> anyhow::Result<convaix::coordinator::Laye
         &x,
         &w,
         &b,
-        ExecOptions { mode: ExecMode::TileAnalytic, gate_bits: gate },
+        ExecOptions { mode: ExecMode::TileAnalytic, gate_bits: gate, ..Default::default() },
     )
     .map_err(|e| anyhow::anyhow!("{e}"))
 }

@@ -15,6 +15,7 @@ fn main() -> anyhow::Result<()> {
     let opts = ExecOptions {
         mode: if full { ExecMode::FullCycle } else { ExecMode::TileAnalytic },
         gate_bits: 8,
+        ..Default::default()
     };
     let t0 = std::time::Instant::now();
     let net = report::bench_network("VGG-16", &vgg16_conv(), opts)?;

@@ -19,7 +19,7 @@ fn run(l: &ConvLayer, mode: ExecMode) -> convaix::coordinator::LayerResult {
     let x = vec![0i16; l.ic * l.ih * l.iw];
     let w = rng.i16_vec(l.oc * (l.ic / l.groups) * l.fh * l.fw, -128, 128);
     let b = rng.i32_vec(l.oc, -500, 500);
-    run_conv_layer(&mut cpu, l, &x, &w, &b, ExecOptions { mode, gate_bits: 16 }).unwrap()
+    run_conv_layer(&mut cpu, l, &x, &w, &b, ExecOptions { mode, ..Default::default() }).unwrap()
 }
 
 fn main() {

@@ -1,0 +1,100 @@
+//! Bench target: multi-core scaling sweep — VGG-16 conv stack in
+//! tile-analytic mode, layers sharded across 1 / 2 / 4 ConvAix cores
+//! (cycle-level makespan) with the simulation itself on host threads
+//! (wall-clock). Also sweeps the batched frame fan-out mode.
+//!
+//!     cargo bench --bench multicore
+
+use std::time::Instant;
+
+use convaix::cli::report;
+use convaix::coordinator::executor::{ExecMode, ExecOptions, NetLayer};
+use convaix::coordinator::scheduler::{run_batched, CorePool};
+use convaix::model::vgg16_conv;
+use convaix::util::table::Table;
+
+fn main() {
+    let host_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("host threads available: {host_threads}\n");
+
+    // --- layer-sharded sweep -------------------------------------------------
+    let mut t = Table::new(
+        "VGG-16 conv stack, tile-analytic, layer-sharded across N cores",
+        &["Cores", "Model cycles", "Cycle speedup", "Wall [s]", "Wall speedup"],
+    );
+    let mut wall1 = 0.0f64;
+    let mut cycles1 = 0u64;
+    let mut wall_speedup_at_4 = 0.0f64;
+    for cores in [1usize, 2, 4] {
+        let opts = ExecOptions {
+            mode: ExecMode::TileAnalytic,
+            gate_bits: 8,
+            cores,
+            batch: 1,
+        };
+        let t0 = Instant::now();
+        let net = report::bench_network_mc("VGG-16", &vgg16_conv(), opts).expect("vgg16 mc");
+        let wall = t0.elapsed().as_secs_f64();
+        if cores == 1 {
+            wall1 = wall;
+            cycles1 = net.cycles();
+        }
+        let wall_speedup = wall1 / wall.max(1e-9);
+        if cores == 4 {
+            wall_speedup_at_4 = wall_speedup;
+        }
+        t.row(&[
+            cores.to_string(),
+            net.cycles().to_string(),
+            format!("{:.2}x", cycles1 as f64 / net.cycles().max(1) as f64),
+            format!("{wall:.2}"),
+            format!("{wall_speedup:.2}x"),
+        ]);
+    }
+    t.print();
+
+    // --- batched frame fan-out sweep ----------------------------------------
+    let conv: Vec<NetLayer> = vgg16_conv().into_iter().map(NetLayer::Conv).collect();
+    let frame = vec![0i16; 3 * 224 * 224];
+    let inputs: Vec<Vec<i16>> = (0..4).map(|_| frame.clone()).collect();
+    let mut t = Table::new(
+        "VGG-16, batch 4, frame fan-out over N cores",
+        &["Cores", "Makespan cycles", "Throughput [f/s]", "Cycle speedup"],
+    );
+    for cores in [1usize, 2, 4] {
+        let opts = ExecOptions {
+            mode: ExecMode::TileAnalytic,
+            gate_bits: 8,
+            cores,
+            batch: inputs.len(),
+        };
+        let mut pool = CorePool::new(cores, 1 << 24);
+        let br = run_batched(&mut pool, "VGG-16", &conv, &inputs, opts, 0xC0FFEE).expect("batch");
+        t.row(&[
+            cores.to_string(),
+            br.makespan_cycles().to_string(),
+            format!("{:.1}", br.throughput_fps()),
+            format!("{:.2}x", br.speedup()),
+        ]);
+    }
+    t.print();
+
+    // Wall-clock scaling depends on real host parallelism; skip the hard
+    // target on undersized hosts, and allow MULTICORE_NO_ASSERT=1 as an
+    // escape hatch for loaded / SMT-limited machines.
+    let no_assert = std::env::var_os("MULTICORE_NO_ASSERT").is_some();
+    if host_threads >= 4 && !no_assert {
+        println!("wall-clock speedup at 4 cores: {wall_speedup_at_4:.2}x (target >= 1.7x)");
+        assert!(
+            wall_speedup_at_4 >= 1.7,
+            "4-core wall-clock speedup {wall_speedup_at_4:.2}x below the 1.7x target \
+             (set MULTICORE_NO_ASSERT=1 to report without asserting)"
+        );
+    } else {
+        println!(
+            "wall-clock speedup at 4 cores: {wall_speedup_at_4:.2}x \
+             (1.7x target not enforced: host threads = {host_threads}, \
+             MULTICORE_NO_ASSERT = {no_assert})"
+        );
+    }
+}

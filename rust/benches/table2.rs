@@ -8,7 +8,7 @@ use convaix::coordinator::executor::{ExecMode, ExecOptions};
 use convaix::util::bench::Bench;
 
 fn main() {
-    let opts = ExecOptions { mode: ExecMode::TileAnalytic, gate_bits: 8 };
+    let opts = ExecOptions { mode: ExecMode::TileAnalytic, gate_bits: 8, ..Default::default() };
     print!("{}", report::table2(opts).expect("table2"));
     let b = Bench::quick();
     b.run("table2 (AlexNet+VGG16, tile-analytic)", || {

@@ -6,6 +6,6 @@ use convaix::cli::report;
 use convaix::coordinator::executor::{ExecMode, ExecOptions};
 
 fn main() {
-    let opts = ExecOptions { mode: ExecMode::TileAnalytic, gate_bits: 16 };
+    let opts = ExecOptions { mode: ExecMode::TileAnalytic, ..Default::default() };
     print!("{}", report::util_table(opts).expect("util"));
 }

@@ -24,6 +24,10 @@ OPTIONS:
   --full             full cycle simulation (default: tile-analytic)
   --gate <bits>      precision gating (default 8, i.e. the paper's setup)
   --artifacts <dir>  artifact directory (default: artifacts)
+  --cores <n>        shard layers across n ConvAix cores (default 1);
+                     `run` reports per-core utilization and speedup
+  --batch <n>        batched throughput mode: fan n frames out over the
+                     core pool (default 1 = latency mode)
 ";
 
 /// Tiny argv parser (clap is not in the offline vendor set).
@@ -33,6 +37,8 @@ pub struct Args {
     pub full: bool,
     pub gate_bits: u8,
     pub artifacts: String,
+    pub cores: usize,
+    pub batch: usize,
 }
 
 impl Args {
@@ -43,6 +49,8 @@ impl Args {
             full: false,
             gate_bits: 8,
             artifacts: "artifacts".into(),
+            cores: 1,
+            batch: 1,
         };
         let mut it = argv.iter().skip(1).peekable();
         while let Some(arg) = it.next() {
@@ -59,6 +67,24 @@ impl Args {
                         .next()
                         .ok_or_else(|| anyhow::anyhow!("--artifacts needs a value"))?
                         .clone();
+                }
+                "--cores" => {
+                    a.cores = it
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("--cores needs a value"))?
+                        .parse()?;
+                    if a.cores == 0 {
+                        anyhow::bail!("--cores must be >= 1");
+                    }
+                }
+                "--batch" => {
+                    a.batch = it
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("--batch needs a value"))?
+                        .parse()?;
+                    if a.batch == 0 {
+                        anyhow::bail!("--batch must be >= 1");
+                    }
                 }
                 "-h" | "--help" => {
                     a.command = "help".into();
@@ -82,7 +108,12 @@ pub fn main_with(argv: &[String]) -> Result<i32> {
     } else {
         crate::coordinator::ExecMode::TileAnalytic
     };
-    let opts = crate::coordinator::executor::ExecOptions { mode, gate_bits: args.gate_bits };
+    let opts = crate::coordinator::executor::ExecOptions {
+        mode,
+        gate_bits: args.gate_bits,
+        cores: args.cores,
+        batch: args.batch,
+    };
     match args.command.as_str() {
         "help" => {
             print!("{USAGE}");
@@ -114,7 +145,13 @@ pub fn main_with(argv: &[String]) -> Result<i32> {
                 .first()
                 .map(String::as_str)
                 .unwrap_or("alexnet");
-            print!("{}", report::run_net(net, opts)?);
+            if args.batch > 1 {
+                print!("{}", report::throughput(net, opts)?);
+            } else if args.cores > 1 {
+                print!("{}", report::run_net_mc(net, opts)?);
+            } else {
+                print!("{}", report::run_net(net, opts)?);
+            }
             Ok(0)
         }
         "golden" => {

@@ -4,8 +4,9 @@
 use anyhow::Result;
 
 use crate::baselines::published;
-use crate::coordinator::executor::{run_conv_layer, ExecOptions};
+use crate::coordinator::executor::{run_conv_layer, ExecOptions, NetLayer};
 use crate::coordinator::metrics::NetworkResult;
+use crate::coordinator::scheduler::{run_batched, run_conv_layer_mc, BatchedResult, CorePool};
 use crate::core::Cpu;
 use crate::energy::{area, power};
 use crate::model::{alexnet_conv, vgg16_conv, ConvLayer};
@@ -25,6 +26,124 @@ pub fn bench_network(name: &str, layers: &[ConvLayer], opts: ExecOptions) -> Res
             .push(run_conv_layer(&mut cpu, l, &x, &w, &b, opts).map_err(|e| anyhow::anyhow!("{e}"))?);
     }
     Ok(net)
+}
+
+/// [`bench_network`] sharded across a core pool (same xorshift weight
+/// stream, so per-layer MAC totals are identical to the 1-core run).
+pub fn bench_network_mc(
+    name: &str,
+    layers: &[ConvLayer],
+    opts: ExecOptions,
+) -> Result<NetworkResult> {
+    let mut pool = CorePool::new(opts.cores, 1 << 24);
+    let mut rng = XorShift::new(0xC0FFEE);
+    let mut net = NetworkResult { name: name.into(), ..Default::default() };
+    for l in layers {
+        let x = vec![0i16; l.ic * l.ih * l.iw];
+        let w = rng.i16_vec(l.oc * (l.ic / l.groups) * l.fh * l.fw, -128, 128);
+        let b = rng.i32_vec(l.oc, -1000, 1000);
+        net.layers.push(
+            run_conv_layer_mc(&mut pool, l, &x, &w, &b, opts)
+                .map_err(|e| anyhow::anyhow!("{e}"))?,
+        );
+    }
+    Ok(net)
+}
+
+/// `convaix run <net> --cores N` — per-layer multi-core breakdown with
+/// per-core utilization and speedup columns.
+pub fn run_net_mc(net: &str, opts: ExecOptions) -> Result<String> {
+    let layers = net_layers(net)?;
+    let serial = bench_network(net, &layers, ExecOptions { cores: 1, batch: 1, ..opts })?;
+    let sharded = bench_network_mc(net, &layers, opts)?;
+
+    let mut t = Table::new(
+        &format!("{net} sharded across {} ConvAix cores", opts.cores),
+        &["Layer", "1-core cyc", "Makespan cyc", "Speedup", "Par eff", "Util/core"],
+    );
+    for (l1, lm) in serial.layers.iter().zip(&sharded.layers) {
+        let speedup = l1.cycles as f64 / lm.cycles.max(1) as f64;
+        let per_core_util = lm.macs as f64
+            / crate::PEAK_MACS_PER_CYCLE as f64
+            / (lm.parallel_cores() as f64 * lm.cycles.max(1) as f64);
+        t.row(&[
+            lm.name.clone(),
+            l1.cycles.to_string(),
+            lm.cycles.to_string(),
+            format!("{:.2}x", speedup),
+            format!("{:.2}", lm.parallel_efficiency()),
+            format!("{:.3}", per_core_util),
+        ]);
+    }
+    let total_speedup = serial.cycles() as f64 / sharded.cycles().max(1) as f64;
+    let mut s = t.render();
+    s.push_str(&format!(
+        "{net}: {:.2} ms on {} cores vs {:.2} ms on 1 core — {:.2}x cycle-level speedup\n",
+        sharded.time_ms(),
+        opts.cores,
+        serial.time_ms(),
+        total_speedup,
+    ));
+    Ok(s)
+}
+
+/// `convaix run <net> --batch B [--cores N]` — batched throughput mode:
+/// B frames fanned out over the core pool.
+pub fn throughput(net: &str, opts: ExecOptions) -> Result<String> {
+    let conv = net_layers(net)?;
+    let (ic, ih, iw) = (conv[0].ic, conv[0].ih, conv[0].iw);
+    let layers: Vec<NetLayer> = conv.into_iter().map(NetLayer::Conv).collect();
+    let mut rng = XorShift::new(0xBA7C4);
+    let inputs: Vec<Vec<i16>> =
+        (0..opts.batch).map(|_| rng.i16_vec(ic * ih * iw, -2000, 2000)).collect();
+    let mut pool = CorePool::new(opts.cores, 1 << 24);
+    let br = run_batched(&mut pool, net, &layers, &inputs, opts, 0xC0FFEE)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    Ok(throughput_report(&br, opts))
+}
+
+/// Render a [`BatchedResult`] as the throughput table + summary lines.
+pub fn throughput_report(br: &BatchedResult, opts: ExecOptions) -> String {
+    let mut t = Table::new(
+        &format!(
+            "{}: batch {} over {} core(s) — frame fan-out",
+            br.name,
+            br.frames.len(),
+            opts.cores
+        ),
+        &["Core", "Busy cycles", "Busy frac", "Frames"],
+    );
+    let util = br.core_utilization();
+    let mut frames_per_core = vec![0usize; br.core_cycles.len()];
+    for &c in &br.frame_core {
+        frames_per_core[c] += 1;
+    }
+    for (c, &busy) in br.core_cycles.iter().enumerate() {
+        t.row(&[
+            c.to_string(),
+            busy.to_string(),
+            format!("{:.3}", util[c]),
+            frames_per_core[c].to_string(),
+        ]);
+    }
+    let mut s = t.render();
+    s.push_str(&format!(
+        "batch latency {:.2} ms, throughput {:.1} frames/s, speedup {:.2}x over 1 core \
+         (serial {:.2} ms)\n",
+        br.makespan_cycles() as f64 / crate::CLOCK_HZ as f64 * 1e3,
+        br.throughput_fps(),
+        br.speedup(),
+        br.serial_cycles() as f64 / crate::CLOCK_HZ as f64 * 1e3,
+    ));
+    s
+}
+
+fn net_layers(net: &str) -> Result<Vec<ConvLayer>> {
+    match net {
+        "alexnet" => Ok(alexnet_conv()),
+        "vgg16" | "vgg" => Ok(vgg16_conv()),
+        other => anyhow::bail!("unknown network `{other}` (alexnet | vgg16)"),
+    }
 }
 
 /// Table I — processor specification.
@@ -76,6 +195,7 @@ pub fn fig3c() -> Result<String> {
     let opts = ExecOptions {
         mode: crate::coordinator::ExecMode::TileAnalytic,
         gate_bits: 8,
+        ..Default::default()
     };
     let r = run_conv_layer(&mut cpu, &l, &x, &w, &b, opts).map_err(|e| anyhow::anyhow!("{e}"))?;
     let p = power::network_power(&r.stats, r.cycles as f64 / crate::CLOCK_HZ as f64);
@@ -256,11 +376,7 @@ pub fn util_table(opts: ExecOptions) -> Result<String> {
 
 /// `convaix run <net>` — metrics summary.
 pub fn run_net(net: &str, opts: ExecOptions) -> Result<String> {
-    let layers = match net {
-        "alexnet" => alexnet_conv(),
-        "vgg16" | "vgg" => vgg16_conv(),
-        other => anyhow::bail!("unknown network `{other}` (alexnet | vgg16)"),
-    };
+    let layers = net_layers(net)?;
     let r = bench_network(net, &layers, opts)?;
     let secs = r.time_ms() / 1e3;
     let p = power::network_power(&r.stats(), secs);

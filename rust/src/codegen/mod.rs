@@ -24,12 +24,36 @@ pub mod stage;
 pub use conv::{build_conv_task, TaskFlavor};
 pub use layout::{ConvPlan, Variant};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CodegenError {
-    #[error("layer {0}: no feasible layout (DM/PM/LB constraints)")]
     Infeasible(String),
-    #[error("program does not fit PM: {0}")]
-    Pm(#[from] crate::mem::pm::PmError),
-    #[error("internal: {0}")]
+    Pm(crate::mem::pm::PmError),
     Internal(String),
+}
+
+impl std::fmt::Display for CodegenError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodegenError::Infeasible(l) => {
+                write!(f, "layer {l}: no feasible layout (DM/PM/LB constraints)")
+            }
+            CodegenError::Pm(e) => write!(f, "program does not fit PM: {e}"),
+            CodegenError::Internal(what) => write!(f, "internal: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for CodegenError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CodegenError::Pm(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<crate::mem::pm::PmError> for CodegenError {
+    fn from(e: crate::mem::pm::PmError) -> Self {
+        CodegenError::Pm(e)
+    }
 }

@@ -30,25 +30,67 @@ pub struct ExecOptions {
     pub mode: ExecMode,
     /// Precision gating (16 = off, 8 = the paper's gated AlexNet run).
     pub gate_bits: u8,
+    /// Number of ConvAix cores the multi-core scheduler may shard a
+    /// layer across (1 = the paper's single-core latency setup). The
+    /// single-layer executors in this module ignore it; it is consumed
+    /// by [`crate::coordinator::scheduler`].
+    pub cores: usize,
+    /// Frames per batched `run_batched` call (1 = latency mode).
+    /// Ignored by the single-layer executors.
+    pub batch: usize,
 }
 
 impl Default for ExecOptions {
     fn default() -> Self {
-        Self { mode: ExecMode::FullCycle, gate_bits: 16 }
+        Self { mode: ExecMode::FullCycle, gate_bits: 16, cores: 1, batch: 1 }
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ExecError {
-    #[error("codegen: {0}")]
-    Codegen(#[from] crate::codegen::CodegenError),
-    #[error("sim: {0}")]
-    Sim(#[from] SimError),
+    Codegen(crate::codegen::CodegenError),
+    Sim(SimError),
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::Codegen(e) => write!(f, "codegen: {e}"),
+            ExecError::Sim(e) => write!(f, "sim: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ExecError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ExecError::Codegen(e) => Some(e),
+            ExecError::Sim(e) => Some(e),
+        }
+    }
+}
+
+impl From<crate::codegen::CodegenError> for ExecError {
+    fn from(e: crate::codegen::CodegenError) -> Self {
+        ExecError::Codegen(e)
+    }
+}
+
+impl From<SimError> for ExecError {
+    fn from(e: SimError) -> Self {
+        ExecError::Sim(e)
+    }
 }
 
 /// Analytic DMA time for moving `bytes` with `requests` descriptors.
-fn dma_cycles(bytes: u64, requests: u64) -> u64 {
-    bytes / EXT_BYTES_PER_CYCLE as u64 + requests * EXT_LATENCY_CYCLES
+///
+/// The transfer term rounds **up**: a trailing partial bus beat still
+/// occupies a full cycle on the `EXT_BYTES_PER_CYCLE`-wide external bus.
+/// (Truncating here undercounted every DMA-bound segment whose size is
+/// not a multiple of the bus width, inflating reported GOP/s and
+/// utilization.)
+pub(crate) fn dma_cycles(bytes: u64, requests: u64) -> u64 {
+    bytes.div_ceil(EXT_BYTES_PER_CYCLE as u64) + requests * EXT_LATENCY_CYCLES
 }
 
 /// Run a (possibly grouped) conv layer. `x`: (ic, ih, iw), `w`:
@@ -528,7 +570,7 @@ mod tests {
             &x,
             &w,
             &b,
-            ExecOptions { mode: ExecMode::TileAnalytic, gate_bits: 16 },
+            ExecOptions { mode: ExecMode::TileAnalytic, ..Default::default() },
         )
         .unwrap();
         let err = (full.cycles as f64 - fast.cycles as f64).abs() / full.cycles as f64;
@@ -548,6 +590,70 @@ mod tests {
     }
 
     #[test]
+    fn dma_cycles_rounds_partial_beats_up() {
+        let bus = EXT_BYTES_PER_CYCLE as u64;
+        let lat = EXT_LATENCY_CYCLES;
+        // no payload: only the per-request DRAM latency
+        assert_eq!(dma_cycles(0, 1), lat);
+        // a single byte still occupies one full bus beat
+        assert_eq!(dma_cycles(1, 1), 1 + lat);
+        // one beat minus a byte, exactly one beat, one beat plus a byte
+        assert_eq!(dma_cycles(bus - 1, 1), 1 + lat);
+        assert_eq!(dma_cycles(bus, 1), 1 + lat);
+        assert_eq!(dma_cycles(bus + 1, 1), 2 + lat);
+        // exact multiples gain nothing from the ceiling
+        assert_eq!(dma_cycles(7 * bus, 3), 7 + 3 * lat);
+        // the old truncating formula lost a cycle here
+        assert_eq!(dma_cycles(7 * bus + 5, 3), 8 + 3 * lat);
+        // requests scale the latency term linearly
+        assert_eq!(dma_cycles(bus, 10), 1 + 10 * lat);
+    }
+
+    #[test]
+    fn grouped_conv_slice_bookkeeping() {
+        // Grouped layers run one group at a time through `run_dense`;
+        // the per-group metrics must tile the full layer exactly: MACs,
+        // I/O and compute cycles add up, and each group's output block
+        // is bit-identical to running that group as a standalone dense
+        // layer on the same slices.
+        let l = ConvLayer::new("gbk", 8, 13, 13, 32, 3, 3, 1, 1, 2);
+        let mut rng = XorShift::new(21);
+        let x = rng.i16_vec(l.ic * l.ih * l.iw, -1500, 1500);
+        let w = rng.i16_vec(l.oc * (l.ic / l.groups) * l.fh * l.fw, -200, 200);
+        let b = rng.i32_vec(l.oc, -500, 500);
+
+        let mut cpu = Cpu::new(1 << 22);
+        let total = run_conv_layer(&mut cpu, &l, &x, &w, &b, ExecOptions::default()).unwrap();
+        assert_eq!(total.macs, l.macs(), "grouped MACs must cover the whole layer");
+        assert_eq!(total.out.len(), l.oc * l.oh() * l.ow());
+
+        let lg = l.per_group();
+        let (icg, ocg) = (lg.ic, lg.oc);
+        let ohw = l.oh() * l.ow();
+        let mut sum = LayerResult::default();
+        for gi in 0..l.groups {
+            let xg = &x[gi * icg * l.ih * l.iw..(gi + 1) * icg * l.ih * l.iw];
+            let wg = &w[gi * ocg * icg * l.fh * l.fw..(gi + 1) * ocg * icg * l.fh * l.fw];
+            let bg = &b[gi * ocg..(gi + 1) * ocg];
+            let mut c = Cpu::new(1 << 22);
+            let r = run_conv_layer(&mut c, &lg, xg, wg, bg, ExecOptions::default()).unwrap();
+            assert_eq!(
+                r.out,
+                total.out[gi * ocg * ohw..(gi + 1) * ocg * ohw],
+                "group {gi} output block"
+            );
+            sum.macs += r.macs;
+            sum.compute_cycles += r.compute_cycles;
+            sum.io_in += r.io_in;
+            sum.io_out += r.io_out;
+        }
+        assert_eq!(sum.macs, total.macs);
+        assert_eq!(sum.compute_cycles, total.compute_cycles);
+        assert_eq!(sum.io_in, total.io_in);
+        assert_eq!(sum.io_out, total.io_out);
+    }
+
+    #[test]
     fn gated_precision_changes_output() {
         let l = ConvLayer::new("g8", 4, 10, 10, 16, 3, 3, 1, 1, 1);
         let mut rng = XorShift::new(12);
@@ -555,7 +661,7 @@ mod tests {
         let w = rng.i16_vec(16 * 4 * 9, -256, 256);
         let b = rng.i32_vec(16, -100, 100);
         let mut cpu = Cpu::new(1 << 20);
-        let opts8 = ExecOptions { mode: ExecMode::FullCycle, gate_bits: 8 };
+        let opts8 = ExecOptions { mode: ExecMode::FullCycle, gate_bits: 8, ..Default::default() };
         let r8 = run_conv_layer(&mut cpu, &l, &x, &w, &b, opts8).unwrap();
         let expect = refconv::conv2d_grouped(&x, &w, &b, &l, RoundMode::HalfUp, 8);
         assert_eq!(r8.out, expect);

@@ -22,6 +22,10 @@ pub struct LayerResult {
     pub stats: CoreStats,
     /// Layer output (empty in analytic mode).
     pub out: Vec<i16>,
+    /// Busy cycles per core when the layer was sharded by the
+    /// multi-core scheduler (empty for single-core runs). `cycles` is
+    /// then the makespan — the maximum entry of this vector.
+    pub core_cycles: Vec<u64>,
 }
 
 impl LayerResult {
@@ -48,6 +52,28 @@ impl LayerResult {
 
     pub fn io_total(&self) -> u64 {
         self.io_in + self.io_out
+    }
+
+    /// Number of cores this layer ran on (1 when not sharded).
+    pub fn parallel_cores(&self) -> usize {
+        self.core_cycles.len().max(1)
+    }
+
+    /// Cycle-level speedup of the sharded run over executing the same
+    /// shards serially on one core: `sum(core busy) / makespan`.
+    /// 1.0 for single-core runs.
+    pub fn parallel_speedup(&self) -> f64 {
+        let max = *self.core_cycles.iter().max().unwrap_or(&0);
+        if max == 0 {
+            return 1.0;
+        }
+        self.core_cycles.iter().sum::<u64>() as f64 / max as f64
+    }
+
+    /// Fraction of the `cores × makespan` cycle budget spent busy.
+    /// 1.0 for single-core runs.
+    pub fn parallel_efficiency(&self) -> f64 {
+        self.parallel_speedup() / self.parallel_cores() as f64
     }
 }
 

@@ -10,8 +10,17 @@
 //! task ABI registers, (c) runs the generated kernels on the
 //! cycle-accurate core, and (d) aggregates metrics.
 
+//! The multi-core extension lives in [`scheduler`]: a [`CorePool`] of
+//! cycle simulators, output-channel tile sharding within a layer, and
+//! frame-level batching — the throughput-serving mode the paper's
+//! batch-1 setup cannot express.
+
 pub mod executor;
 pub mod metrics;
+pub mod scheduler;
 
-pub use executor::{run_conv_layer, run_network, run_pool_layer, ExecMode, ExecOptions};
+pub use executor::{run_conv_layer, run_network, run_pool_layer, ExecMode, ExecOptions, NetLayer};
 pub use metrics::{LayerResult, NetworkResult};
+pub use scheduler::{
+    run_batched, run_conv_layer_mc, run_network_mc, run_pool_layer_mc, BatchedResult, CorePool,
+};

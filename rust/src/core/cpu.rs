@@ -10,18 +10,44 @@ use crate::mem::MemInterface;
 use super::regfile::{can_access_vrl, can_read_vr, can_write_vr, own_acc_base, RegFiles, Who};
 use super::{BRANCH_BUBBLES, LOAD_USE_LATENCY, MAC_TO_QMOV_LATENCY, QMOV_TO_READ_LATENCY};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SimError {
-    #[error("cycle {cycle}, bundle {pc}: access violation: {what}")]
     Access { cycle: u64, pc: usize, what: String },
-    #[error("cycle {cycle}, bundle {pc}: {what}")]
     Fault { cycle: u64, pc: usize, what: String },
-    #[error("program ran past the last bundle without halt (pc={pc})")]
     RanOff { pc: usize },
-    #[error("watchdog: exceeded {0} cycles")]
     Watchdog(u64),
-    #[error("program memory: {0}")]
-    Pm(#[from] crate::mem::pm::PmError),
+    Pm(crate::mem::pm::PmError),
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::Access { cycle, pc, what } => {
+                write!(f, "cycle {cycle}, bundle {pc}: access violation: {what}")
+            }
+            SimError::Fault { cycle, pc, what } => write!(f, "cycle {cycle}, bundle {pc}: {what}"),
+            SimError::RanOff { pc } => {
+                write!(f, "program ran past the last bundle without halt (pc={pc})")
+            }
+            SimError::Watchdog(n) => write!(f, "watchdog: exceeded {n} cycles"),
+            SimError::Pm(e) => write!(f, "program memory: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SimError::Pm(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<crate::mem::pm::PmError> for SimError {
+    fn from(e: crate::mem::pm::PmError) -> Self {
+        SimError::Pm(e)
+    }
 }
 
 /// Datapath configuration registers (written by `Csrwi`/`Csrw`).

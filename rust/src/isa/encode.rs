@@ -61,15 +61,26 @@ const OP_VRELU: u8 = 0x8A;
 const OP_VPOOLMAX: u8 = 0x8B;
 const OP_VINITAL: u8 = 0x8C;
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum EncodeError {
-    #[error("bad opcode {0:#x} at word {1}")]
     BadOpcode(u8, usize),
-    #[error("field out of range: {0}")]
     Range(&'static str),
-    #[error("truncated program: {0} bytes is not a multiple of {BUNDLE_BYTES}")]
     Truncated(usize),
 }
+
+impl std::fmt::Display for EncodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EncodeError::BadOpcode(op, word) => write!(f, "bad opcode {op:#x} at word {word}"),
+            EncodeError::Range(field) => write!(f, "field out of range: {field}"),
+            EncodeError::Truncated(bytes) => {
+                write!(f, "truncated program: {bytes} bytes is not a multiple of {BUNDLE_BYTES}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EncodeError {}
 
 #[inline]
 fn pack(op: u8, a: u8, b: u8, c: u8, imm: u32) -> u64 {

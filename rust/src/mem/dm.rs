@@ -8,13 +8,26 @@
 
 use super::{DM_BANKS, DM_BANK_BYTES, DM_BYTES, DM_PORT_BYTES};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum DmError {
-    #[error("DM access out of range: addr {addr:#x} len {len} (DM is {DM_BYTES} bytes)")]
     OutOfRange { addr: usize, len: usize },
-    #[error("DM access misaligned: addr {addr:#x} requires {align}-byte alignment")]
     Misaligned { addr: usize, align: usize },
 }
+
+impl std::fmt::Display for DmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DmError::OutOfRange { addr, len } => {
+                write!(f, "DM access out of range: addr {addr:#x} len {len} (DM is {DM_BYTES} bytes)")
+            }
+            DmError::Misaligned { addr, align } => {
+                write!(f, "DM access misaligned: addr {addr:#x} requires {align}-byte alignment")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DmError {}
 
 /// Activity counters (inputs to `energy::power`).
 #[derive(Debug, Default, Clone)]

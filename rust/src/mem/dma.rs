@@ -40,13 +40,22 @@ pub struct DmaStats {
     pub latency_cycles: u64,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum DmaError {
-    #[error("DMA start on busy channel {0}")]
     Busy(usize),
-    #[error("DMA bad channel {0}")]
     BadChannel(usize),
 }
+
+impl std::fmt::Display for DmaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DmaError::Busy(ch) => write!(f, "DMA start on busy channel {ch}"),
+            DmaError::BadChannel(ch) => write!(f, "DMA bad channel {ch}"),
+        }
+    }
+}
+
+impl std::error::Error for DmaError {}
 
 pub struct DmaEngine {
     ch: [Option<Xfer>; DMA_CHANNELS],

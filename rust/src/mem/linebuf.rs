@@ -54,17 +54,30 @@ impl Default for LineBuffer {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum LbError {
-    #[error("line-buffer fill of {len} pixels exceeds row capacity {LB_ROW_PIXELS}")]
     TooLong { len: usize },
-    #[error("line-buffer row {row} out of range")]
     BadRow { row: usize },
-    #[error("line-buffer read past valid data: row {row} pixel {px} (valid {valid})")]
     ReadPastEnd { row: usize, px: usize, valid: usize },
-    #[error("line-buffer fill started while a fill is in flight")]
     Busy,
 }
+
+impl std::fmt::Display for LbError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LbError::TooLong { len } => {
+                write!(f, "line-buffer fill of {len} pixels exceeds row capacity {LB_ROW_PIXELS}")
+            }
+            LbError::BadRow { row } => write!(f, "line-buffer row {row} out of range"),
+            LbError::ReadPastEnd { row, px, valid } => {
+                write!(f, "line-buffer read past valid data: row {row} pixel {px} (valid {valid})")
+            }
+            LbError::Busy => write!(f, "line-buffer fill started while a fill is in flight"),
+        }
+    }
+}
+
+impl std::error::Error for LbError {}
 
 impl LineBuffer {
     pub fn new() -> Self {

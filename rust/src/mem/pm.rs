@@ -7,12 +7,36 @@
 use crate::isa::{encode, Program};
 use super::PM_BYTES;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum PmError {
-    #[error("program of {size} bytes exceeds the {PM_BYTES}-byte program memory")]
     TooLarge { size: usize },
-    #[error("encode: {0}")]
-    Encode(#[from] encode::EncodeError),
+    Encode(encode::EncodeError),
+}
+
+impl std::fmt::Display for PmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PmError::TooLarge { size } => {
+                write!(f, "program of {size} bytes exceeds the {PM_BYTES}-byte program memory")
+            }
+            PmError::Encode(e) => write!(f, "encode: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for PmError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            PmError::Encode(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<encode::EncodeError> for PmError {
+    fn from(e: encode::EncodeError) -> Self {
+        PmError::Encode(e)
+    }
 }
 
 pub struct ProgramMem {

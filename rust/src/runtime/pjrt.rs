@@ -94,10 +94,49 @@ impl Manifest {
 }
 
 /// PJRT CPU client + compiled-executable cache.
+///
+/// The real backend needs the external `xla` crate, which is not part of
+/// the offline vendor set; it is kept behind the `xla-backend` feature.
+/// The default build compiles a stub whose constructor returns a
+/// descriptive error, so the golden CLI/tests degrade gracefully
+/// (`tests/golden_integration.rs` already skips when `artifacts/` is
+/// absent).
+#[cfg(feature = "xla-backend")]
 pub struct PjrtRunner {
     client: xla::PjRtClient,
 }
 
+#[cfg(not(feature = "xla-backend"))]
+pub struct PjrtRunner {
+    _private: (),
+}
+
+#[cfg(not(feature = "xla-backend"))]
+impl PjrtRunner {
+    pub fn new() -> Result<Self> {
+        anyhow::bail!(
+            "PJRT golden backend unavailable: convaix was built without the \
+             `xla-backend` feature (the `xla` crate is not in the offline vendor set)"
+        )
+    }
+
+    pub fn run_conv(
+        &self,
+        _manifest: &Manifest,
+        _art: &ArtifactConv,
+        _x: &[i16],
+        _w: &[i16],
+        _b: &[i32],
+    ) -> Result<Vec<i16>> {
+        anyhow::bail!("PJRT golden backend unavailable (built without `xla-backend`)")
+    }
+
+    pub fn run_pool(&self, _manifest: &Manifest, _art: &ArtifactPool, _x: &[i16]) -> Result<Vec<i16>> {
+        anyhow::bail!("PJRT golden backend unavailable (built without `xla-backend`)")
+    }
+}
+
+#[cfg(feature = "xla-backend")]
 impl PjrtRunner {
     pub fn new() -> Result<Self> {
         Ok(Self { client: xla::PjRtClient::cpu()? })

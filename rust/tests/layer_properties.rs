@@ -96,7 +96,7 @@ fn analytic_mode_tracks_full_cycle() {
             &x,
             &w,
             &b,
-            ExecOptions { mode: ExecMode::TileAnalytic, gate_bits: 16 },
+            ExecOptions { mode: ExecMode::TileAnalytic, ..Default::default() },
         )
         .unwrap();
         let err = (full.compute_cycles as f64 - fast.compute_cycles as f64).abs()

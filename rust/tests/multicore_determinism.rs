@@ -1,0 +1,95 @@
+//! Integration: the multi-core scheduler is a pure reshuffling of the
+//! single-core schedule — for N ∈ {1, 2, 4} cores, FullCycle output
+//! tensors and total MAC counts are bit-identical to the single-core
+//! path, layer by layer, through a conv/pool network.
+
+use convaix::coordinator::executor::{run_network, ExecOptions, NetLayer};
+use convaix::coordinator::scheduler::{run_conv_layer_mc, run_network_mc, CorePool};
+use convaix::core::Cpu;
+use convaix::model::{ConvLayer, PoolLayer};
+use convaix::util::XorShift;
+
+fn mini_net() -> Vec<NetLayer> {
+    vec![
+        NetLayer::Conv(ConvLayer::new("c1", 3, 16, 16, 32, 3, 3, 1, 1, 1)),
+        NetLayer::Pool(PoolLayer { name: "p1", ic: 32, ih: 16, iw: 16, size: 2, stride: 2 }),
+        NetLayer::Conv(ConvLayer::new("c2", 32, 8, 8, 48, 3, 3, 1, 1, 1)),
+        NetLayer::Conv(ConvLayer::new("c3g", 48, 8, 8, 32, 3, 3, 1, 1, 2)),
+    ]
+}
+
+#[test]
+fn network_outputs_bit_identical_across_core_counts() {
+    let layers = mini_net();
+    let mut rng = XorShift::new(1234);
+    let input = rng.i16_vec(3 * 16 * 16, -2000, 2000);
+
+    let mut solo = Cpu::new(1 << 23);
+    let base =
+        run_network(&mut solo, "mini", &layers, &input, ExecOptions::default(), 99).unwrap();
+
+    for cores in [1usize, 2, 4] {
+        let mut pool = CorePool::new(cores, 1 << 23);
+        let opts = ExecOptions { cores, ..Default::default() };
+        let mc = run_network_mc(&mut pool, "mini", &layers, &input, opts, 99).unwrap();
+        assert_eq!(mc.layers.len(), base.layers.len());
+        for (lb, lm) in base.layers.iter().zip(&mc.layers) {
+            assert_eq!(lm.out, lb.out, "{cores}-core layer {} output", lb.name);
+            assert_eq!(lm.macs, lb.macs, "{cores}-core layer {} macs", lb.name);
+        }
+        assert_eq!(mc.macs(), base.macs(), "{cores}-core total macs");
+    }
+}
+
+#[test]
+fn single_layer_bit_identical_and_io_conserved() {
+    let l = ConvLayer::new("det", 8, 20, 20, 64, 3, 3, 1, 1, 1);
+    let mut rng = XorShift::new(7);
+    let x = rng.i16_vec(l.ic * l.ih * l.iw, -2000, 2000);
+    let w = rng.i16_vec(l.oc * l.ic * 9, -256, 256);
+    let b = rng.i32_vec(l.oc, -1000, 1000);
+
+    let mut solo = Cpu::new(1 << 22);
+    let base = convaix::coordinator::executor::run_conv_layer(
+        &mut solo,
+        &l,
+        &x,
+        &w,
+        &b,
+        ExecOptions::default(),
+    )
+    .unwrap();
+
+    for cores in [2usize, 4] {
+        let mut pool = CorePool::new(cores, 1 << 22);
+        let opts = ExecOptions { cores, ..Default::default() };
+        let r = run_conv_layer_mc(&mut pool, &l, &x, &w, &b, opts).unwrap();
+        assert_eq!(r.out, base.out, "{cores}-core output");
+        assert_eq!(r.macs, base.macs);
+        // the makespan is the slowest core, and every core did real work
+        assert_eq!(r.core_cycles.iter().copied().max().unwrap(), r.cycles);
+        assert!(r.compute_cycles > 0);
+        // sharding re-tiles the schedule but must not change the modeled
+        // compute work by more than the per-shard ramp overhead
+        let drift = (r.compute_cycles as f64 - base.compute_cycles as f64).abs()
+            / base.compute_cycles as f64;
+        assert!(drift < 0.25, "{cores}-core compute drift {drift}");
+    }
+}
+
+#[test]
+fn scheduler_is_deterministic_across_repeats() {
+    let l = ConvLayer::new("rep", 8, 16, 16, 48, 3, 3, 1, 1, 1);
+    let mut rng = XorShift::new(3);
+    let x = rng.i16_vec(l.ic * l.ih * l.iw, -500, 500);
+    let w = rng.i16_vec(l.oc * l.ic * 9, -100, 100);
+    let b = rng.i32_vec(l.oc, -100, 100);
+
+    let mut pool = CorePool::new(4, 1 << 22);
+    let opts = ExecOptions { cores: 4, ..Default::default() };
+    let r1 = run_conv_layer_mc(&mut pool, &l, &x, &w, &b, opts).unwrap();
+    let r2 = run_conv_layer_mc(&mut pool, &l, &x, &w, &b, opts).unwrap();
+    assert_eq!(r1.out, r2.out);
+    assert_eq!(r1.cycles, r2.cycles);
+    assert_eq!(r1.core_cycles, r2.core_cycles);
+}
