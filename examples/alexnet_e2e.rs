@@ -6,9 +6,8 @@
 //!
 //!     make artifacts && cargo run --release --example alexnet_e2e
 
-use convaix::coordinator::executor::{run_conv_layer, run_pool_layer, ExecOptions};
 use convaix::coordinator::metrics::NetworkResult;
-use convaix::core::Cpu;
+use convaix::coordinator::EngineConfig;
 use convaix::energy::power;
 use convaix::model::{alexnet_conv, alexnet_pools};
 use convaix::runtime::{Manifest, PjrtRunner};
@@ -34,15 +33,15 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
 
-    let opts = ExecOptions::default(); // FullCycle
-    let mut cpu = Cpu::new(1 << 26);
+    // FullCycle is the EngineConfig default
+    let mut engine = EngineConfig::new().ext_capacity(1 << 26).build();
     let mut net = NetworkResult { name: "AlexNet".into(), ..Default::default() };
 
     println!("running full-cycle simulation of AlexNet (conv+pool)...");
     for (i, l) in convs.iter().enumerate() {
         let (w, b) = &weights[i];
         let t0 = std::time::Instant::now();
-        let r = run_conv_layer(&mut cpu, l, &act, w, b, opts).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let r = engine.run_conv_layer(l, &act, w, b).map_err(|e| anyhow::anyhow!("{e}"))?;
         println!(
             "  {:6}: {:9} cycles, util {:.3}, host {:?}",
             l.name, r.cycles, r.utilization(), t0.elapsed()
@@ -57,7 +56,7 @@ fn main() -> anyhow::Result<()> {
             _ => None,
         };
         if let Some(p) = pool {
-            let r = run_pool_layer(&mut cpu, p, &act, opts).map_err(|e| anyhow::anyhow!("{e}"))?;
+            let r = engine.run_pool_layer(p, &act).map_err(|e| anyhow::anyhow!("{e}"))?;
             println!("  {:6}: {:9} cycles (SFU)", p.name, r.cycles);
             act = r.out.clone();
             net.layers.push(r);
@@ -77,8 +76,9 @@ fn main() -> anyhow::Result<()> {
     println!("golden-checking conv1 against JAX/Pallas via PJRT...");
     let golden = runner.run_conv(&manifest, art, &x0, w0, b0)?;
     let sim_out = {
-        let mut cpu2 = Cpu::new(1 << 26);
-        run_conv_layer(&mut cpu2, &convs[0], &x0, w0, b0, opts)
+        let mut engine2 = EngineConfig::new().ext_capacity(1 << 26).build();
+        engine2
+            .run_conv_layer(&convs[0], &x0, w0, b0)
             .map_err(|e| anyhow::anyhow!("{e}"))?
             .out
     };

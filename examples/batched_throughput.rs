@@ -3,12 +3,12 @@
 //! single-core setup cannot express.
 //!
 //! AlexNet and VGG-16 conv stacks, 8 frames, 1 → 4 cores, tile-analytic
-//! mode at the paper's 8-bit gated operating point.
+//! mode at the paper's 8-bit gated operating point; each core count is
+//! priced under both the partitioned and the shared external bus.
 //!
 //!     cargo run --release --example batched_throughput
 
-use convaix::coordinator::executor::{ExecMode, ExecOptions, NetLayer};
-use convaix::coordinator::scheduler::{run_batched, CorePool};
+use convaix::coordinator::{BusModel, EngineConfig, ExecMode, NetLayer};
 use convaix::model::{alexnet_conv, vgg16_conv};
 use convaix::util::table::Table;
 use convaix::util::XorShift;
@@ -24,31 +24,38 @@ fn main() -> anyhow::Result<()> {
 
         let mut t = Table::new(
             &format!("{name}: {BATCH} frames fanned out over the core pool"),
-            &["Cores", "Batch latency [ms]", "Throughput [f/s]", "Speedup", "Core busy frac"],
+            &["Cores", "Bus", "Batch latency [ms]", "Throughput [f/s]", "Speedup", "Useful frac"],
         );
         for cores in [1usize, 2, 4] {
-            let opts = ExecOptions {
-                mode: ExecMode::TileAnalytic,
-                gate_bits: 8,
-                cores,
-                batch: BATCH,
-            };
-            let mut pool = CorePool::new(cores, 1 << 24);
-            let br = run_batched(&mut pool, name, &layers, &inputs, opts, 0xC0FFEE)
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
-            let busy = br
-                .core_utilization()
-                .iter()
-                .map(|u| format!("{u:.2}"))
-                .collect::<Vec<_>>()
-                .join(" ");
-            t.row(&[
-                cores.to_string(),
-                format!("{:.2}", br.makespan_cycles() as f64 / convaix::CLOCK_HZ as f64 * 1e3),
-                format!("{:.1}", br.throughput_fps()),
-                format!("{:.2}x", br.speedup()),
-                busy,
-            ]);
+            for bus in [BusModel::Partitioned, BusModel::Shared] {
+                let mut engine = EngineConfig::new()
+                    .mode(ExecMode::TileAnalytic)
+                    .gate_bits(8)
+                    .cores(cores)
+                    .batch(BATCH)
+                    .bus(bus)
+                    .build();
+                let br = engine
+                    .run_batched(name, &layers, &inputs)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                let busy = br
+                    .core_utilization()
+                    .iter()
+                    .map(|u| format!("{u:.2}"))
+                    .collect::<Vec<_>>()
+                    .join(" ");
+                t.row(&[
+                    cores.to_string(),
+                    format!("{bus:?}"),
+                    format!(
+                        "{:.2}",
+                        br.makespan_cycles() as f64 / convaix::CLOCK_HZ as f64 * 1e3
+                    ),
+                    format!("{:.1}", br.throughput_fps()),
+                    format!("{:.2}x", br.speedup()),
+                    busy,
+                ]);
+            }
         }
         t.print();
         println!();

@@ -10,28 +10,22 @@
 //!     cargo run --release --example design_space
 
 use convaix::codegen::layout::{self, Variant};
-use convaix::coordinator::executor::{run_conv_layer, ExecMode, ExecOptions};
-use convaix::core::Cpu;
+use convaix::coordinator::{EngineConfig, ExecMode};
 use convaix::energy::{area, power};
 use convaix::model::{alexnet_conv, vgg16_conv, ConvLayer};
 use convaix::util::table::Table;
 use convaix::util::XorShift;
 
 fn run_one(l: &ConvLayer, gate: u8) -> anyhow::Result<convaix::coordinator::LayerResult> {
-    let mut cpu = Cpu::new(1 << 24);
+    let mut engine = EngineConfig::new()
+        .mode(ExecMode::TileAnalytic)
+        .gate_bits(gate)
+        .build();
     let mut rng = XorShift::new(9);
     let x = vec![0i16; l.ic * l.ih * l.iw];
     let w = rng.i16_vec(l.oc * (l.ic / l.groups) * l.fh * l.fw, -128, 128);
     let b = rng.i32_vec(l.oc, -500, 500);
-    run_conv_layer(
-        &mut cpu,
-        l,
-        &x,
-        &w,
-        &b,
-        ExecOptions { mode: ExecMode::TileAnalytic, gate_bits: gate, ..Default::default() },
-    )
-    .map_err(|e| anyhow::anyhow!("{e}"))
+    engine.run_conv_layer(l, &x, &w, &b).map_err(|e| anyhow::anyhow!("{e}"))
 }
 
 fn main() -> anyhow::Result<()> {

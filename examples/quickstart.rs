@@ -6,8 +6,7 @@
 //!     cargo run --release --example quickstart
 
 use convaix::codegen::{layout, refconv};
-use convaix::coordinator::executor::{run_conv_layer, ExecOptions};
-use convaix::core::Cpu;
+use convaix::coordinator::EngineConfig;
 use convaix::fixed::RoundMode;
 use convaix::model::ConvLayer;
 use convaix::runtime::{golden_conv_check, Manifest, PjrtRunner};
@@ -36,9 +35,10 @@ fn main() -> anyhow::Result<()> {
     let w = rng.i16_vec(layer.oc * layer.ic * 9, -256, 256);
     let b = rng.i32_vec(layer.oc, -1000, 1000);
 
-    // run on the cycle simulator
-    let mut cpu = Cpu::new(1 << 22);
-    let r = run_conv_layer(&mut cpu, &layer, &x, &w, &b, ExecOptions::default())
+    // run on the cycle simulator through the engine front door
+    let mut engine = EngineConfig::new().ext_capacity(1 << 22).build();
+    let r = engine
+        .run_conv_layer(&layer, &x, &w, &b)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
 
     // verify against the host reference (same Q-format contract)

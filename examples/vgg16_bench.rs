@@ -5,20 +5,18 @@
 //!     cargo run --release --example vgg16_bench [-- --full]
 
 use convaix::cli::report;
-use convaix::coordinator::executor::{ExecMode, ExecOptions};
+use convaix::coordinator::{EngineConfig, ExecMode};
 use convaix::energy::power;
 use convaix::model::vgg16_conv;
 use convaix::util::table::Table;
 
 fn main() -> anyhow::Result<()> {
     let full = std::env::args().any(|a| a == "--full");
-    let opts = ExecOptions {
-        mode: if full { ExecMode::FullCycle } else { ExecMode::TileAnalytic },
-        gate_bits: 8,
-        ..Default::default()
-    };
+    let cfg = EngineConfig::new()
+        .mode(if full { ExecMode::FullCycle } else { ExecMode::TileAnalytic })
+        .gate_bits(8);
     let t0 = std::time::Instant::now();
-    let net = report::bench_network("VGG-16", &vgg16_conv(), opts)?;
+    let net = report::bench_network("VGG-16", &vgg16_conv(), &cfg)?;
 
     let mut t = Table::new(
         "VGG-16 conv layers on ConvAix",

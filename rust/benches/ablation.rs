@@ -7,19 +7,18 @@
 
 use convaix::baselines::{envision_model, eyeriss_model, published};
 use convaix::codegen::layout::{self, Variant};
-use convaix::coordinator::executor::{run_conv_layer, ExecMode, ExecOptions};
-use convaix::core::Cpu;
+use convaix::coordinator::{EngineConfig, ExecMode};
 use convaix::model::{alexnet_conv, vgg16_conv, ConvLayer};
 use convaix::util::table::Table;
 use convaix::util::XorShift;
 
 fn run(l: &ConvLayer, mode: ExecMode) -> convaix::coordinator::LayerResult {
-    let mut cpu = Cpu::new(1 << 24);
+    let mut engine = EngineConfig::new().mode(mode).build();
     let mut rng = XorShift::new(4);
     let x = vec![0i16; l.ic * l.ih * l.iw];
     let w = rng.i16_vec(l.oc * (l.ic / l.groups) * l.fh * l.fw, -128, 128);
     let b = rng.i32_vec(l.oc, -500, 500);
-    run_conv_layer(&mut cpu, l, &x, &w, &b, ExecOptions { mode, ..Default::default() }).unwrap()
+    engine.run_conv_layer(l, &x, &w, &b).unwrap()
 }
 
 fn main() {

@@ -1,39 +1,40 @@
 //! Bench target: multi-core scaling sweep — VGG-16 conv stack in
 //! tile-analytic mode, layers sharded across 1 / 2 / 4 ConvAix cores
 //! (cycle-level makespan) with the simulation itself on host threads
-//! (wall-clock). Also sweeps the batched frame fan-out mode.
+//! (wall-clock). Also duels the shard policies on the early VGG layers
+//! and sweeps the batched frame fan-out mode under both bus models.
 //!
 //!     cargo bench --bench multicore
 
 use std::time::Instant;
 
 use convaix::cli::report;
-use convaix::coordinator::executor::{ExecMode, ExecOptions, NetLayer};
-use convaix::coordinator::scheduler::{run_batched, CorePool};
+use convaix::coordinator::{BusModel, EngineConfig, ExecMode, NetLayer, ShardPolicy};
 use convaix::model::vgg16_conv;
 use convaix::util::table::Table;
+use convaix::util::XorShift;
+
+fn cfg_base() -> EngineConfig {
+    EngineConfig::new().mode(ExecMode::TileAnalytic).gate_bits(8)
+}
 
 fn main() {
     let host_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let no_assert = std::env::var_os("MULTICORE_NO_ASSERT").is_some();
     println!("host threads available: {host_threads}\n");
 
     // --- layer-sharded sweep -------------------------------------------------
     let mut t = Table::new(
-        "VGG-16 conv stack, tile-analytic, layer-sharded across N cores",
+        "VGG-16 conv stack, tile-analytic, layer-sharded across N cores (oc-tile)",
         &["Cores", "Model cycles", "Cycle speedup", "Wall [s]", "Wall speedup"],
     );
     let mut wall1 = 0.0f64;
     let mut cycles1 = 0u64;
     let mut wall_speedup_at_4 = 0.0f64;
     for cores in [1usize, 2, 4] {
-        let opts = ExecOptions {
-            mode: ExecMode::TileAnalytic,
-            gate_bits: 8,
-            cores,
-            batch: 1,
-        };
+        let cfg = cfg_base().cores(cores);
         let t0 = Instant::now();
-        let net = report::bench_network_mc("VGG-16", &vgg16_conv(), opts).expect("vgg16 mc");
+        let net = report::bench_network("VGG-16", &vgg16_conv(), &cfg).expect("vgg16 mc");
         let wall = t0.elapsed().as_secs_f64();
         if cores == 1 {
             wall1 = wall;
@@ -53,28 +54,88 @@ fn main() {
     }
     t.print();
 
-    // --- batched frame fan-out sweep ----------------------------------------
+    // --- shard-policy duel on the early VGG layers ---------------------------
+    // Early layers have few output channels and huge inputs: oc-tile
+    // replicates the full IFMap per core and goes DMA-bound, row bands
+    // divide it. Run at full 16-bit I/O (no gating) — the DMA-bound
+    // regime the second shard axis exists for. The acceptance target:
+    // row-band beats oc-tile makespan on conv1_1 at 4 cores.
+    let mut t = Table::new(
+        "Early VGG-16 layers at 4 cores, 16b I/O: shard-policy makespan duel",
+        &["Layer", "oc-tile cyc", "row-band cyc", "auto cyc", "rb gain"],
+    );
+    let mut conv11_oc = 0u64;
+    let mut conv11_rb = 0u64;
+    for l in &vgg16_conv()[..2] {
+        let mut rng = XorShift::new(0xD0E1);
+        let x = vec![0i16; l.ic * l.ih * l.iw];
+        let w = rng.i16_vec(l.oc * (l.ic / l.groups) * l.fh * l.fw, -128, 128);
+        let b = rng.i32_vec(l.oc, -1000, 1000);
+        let run = |policy: ShardPolicy| {
+            let mut engine = cfg_base().gate_bits(16).cores(4).shard(policy).build();
+            engine.run_conv_layer(l, &x, &w, &b).expect("sharded layer").cycles
+        };
+        let (oc, rb, auto) =
+            (run(ShardPolicy::OcTile), run(ShardPolicy::RowBand), run(ShardPolicy::Auto));
+        if l.name == "conv1_1" {
+            conv11_oc = oc;
+            conv11_rb = rb;
+        }
+        t.row(&[
+            l.name.into(),
+            oc.to_string(),
+            rb.to_string(),
+            auto.to_string(),
+            format!("{:.2}x", oc as f64 / rb.max(1) as f64),
+        ]);
+    }
+    t.print();
+    if !no_assert {
+        assert!(
+            conv11_rb < conv11_oc,
+            "row-band ({conv11_rb}) must beat oc-tile ({conv11_oc}) on conv1_1 at 4 cores \
+             (set MULTICORE_NO_ASSERT=1 to report without asserting)"
+        );
+    }
+    println!(
+        "conv1_1 @ 4 cores: row-band {conv11_rb} vs oc-tile {conv11_oc} cycles \
+         ({:.2}x)\n",
+        conv11_oc as f64 / conv11_rb.max(1) as f64
+    );
+
+    // --- batched frame fan-out sweep, shared vs partitioned bus --------------
     let conv: Vec<NetLayer> = vgg16_conv().into_iter().map(NetLayer::Conv).collect();
     let frame = vec![0i16; 3 * 224 * 224];
     let inputs: Vec<Vec<i16>> = (0..4).map(|_| frame.clone()).collect();
     let mut t = Table::new(
         "VGG-16, batch 4, frame fan-out over N cores",
-        &["Cores", "Makespan cycles", "Throughput [f/s]", "Cycle speedup"],
+        &[
+            "Cores",
+            "Part. makespan",
+            "Shared makespan",
+            "Part. speedup",
+            "Shared speedup",
+            "Shared f/s",
+        ],
     );
     for cores in [1usize, 2, 4] {
-        let opts = ExecOptions {
-            mode: ExecMode::TileAnalytic,
-            gate_bits: 8,
-            cores,
-            batch: inputs.len(),
+        let run = |bus: BusModel| {
+            let mut engine = cfg_base().cores(cores).batch(inputs.len()).bus(bus).build();
+            engine.run_batched("VGG-16", &conv, &inputs).expect("batch")
         };
-        let mut pool = CorePool::new(cores, 1 << 24);
-        let br = run_batched(&mut pool, "VGG-16", &conv, &inputs, opts, 0xC0FFEE).expect("batch");
+        let part = run(BusModel::Partitioned);
+        let shared = run(BusModel::Shared);
+        assert!(
+            shared.makespan_cycles() >= part.makespan_cycles(),
+            "shared bus cannot beat partitioned"
+        );
         t.row(&[
             cores.to_string(),
-            br.makespan_cycles().to_string(),
-            format!("{:.1}", br.throughput_fps()),
-            format!("{:.2}x", br.speedup()),
+            part.makespan_cycles().to_string(),
+            shared.makespan_cycles().to_string(),
+            format!("{:.2}x", part.speedup()),
+            format!("{:.2}x", shared.speedup()),
+            format!("{:.1}", shared.throughput_fps()),
         ]);
     }
     t.print();
@@ -82,7 +143,6 @@ fn main() {
     // Wall-clock scaling depends on real host parallelism; skip the hard
     // target on undersized hosts, and allow MULTICORE_NO_ASSERT=1 as an
     // escape hatch for loaded / SMT-limited machines.
-    let no_assert = std::env::var_os("MULTICORE_NO_ASSERT").is_some();
     if host_threads >= 4 && !no_assert {
         println!("wall-clock speedup at 4 cores: {wall_speedup_at_4:.2}x (target >= 1.7x)");
         assert!(

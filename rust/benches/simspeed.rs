@@ -2,7 +2,7 @@
 //! pass, EXPERIMENTS.md §Perf). Reports bundles/second on the MAC-dense
 //! steady state and on a full conv layer.
 
-use convaix::coordinator::executor::{run_conv_layer, ExecOptions};
+use convaix::coordinator::EngineConfig;
 use convaix::core::Cpu;
 use convaix::isa::asm::assemble;
 use convaix::mem::pm::ProgramMem;
@@ -36,10 +36,10 @@ fn main() {
     let x = rng.i16_vec(l.ic * l.ih * l.iw, -500, 500);
     let w = rng.i16_vec(l.oc * l.ic * 9, -100, 100);
     let bias = rng.i32_vec(l.oc, -100, 100);
-    let mut cpu = Cpu::new(1 << 24);
+    let mut engine = EngineConfig::new().build();
     let mut cycles = 0;
     let r = b.run("conv 32x28x28 -> 64 full-cycle", || {
-        let res = run_conv_layer(&mut cpu, &l, &x, &w, &bias, ExecOptions::default()).unwrap();
+        let res = engine.run_conv_layer(&l, &x, &w, &bias).unwrap();
         cycles = res.compute_cycles;
         cycles
     });

@@ -4,14 +4,14 @@
 //! with the paper's values side by side.
 
 use convaix::cli::report;
-use convaix::coordinator::executor::{ExecMode, ExecOptions};
+use convaix::coordinator::{EngineConfig, ExecMode};
 use convaix::util::bench::Bench;
 
 fn main() {
-    let opts = ExecOptions { mode: ExecMode::TileAnalytic, gate_bits: 8, ..Default::default() };
-    print!("{}", report::table2(opts).expect("table2"));
+    let cfg = EngineConfig::new().mode(ExecMode::TileAnalytic).gate_bits(8);
+    print!("{}", report::table2(&cfg).expect("table2"));
     let b = Bench::quick();
     b.run("table2 (AlexNet+VGG16, tile-analytic)", || {
-        report::table2(opts).unwrap().len()
+        report::table2(&cfg).unwrap().len()
     });
 }

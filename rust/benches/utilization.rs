@@ -3,9 +3,9 @@
 //! layers, 16-bit vector instructions).
 
 use convaix::cli::report;
-use convaix::coordinator::executor::{ExecMode, ExecOptions};
+use convaix::coordinator::{EngineConfig, ExecMode};
 
 fn main() {
-    let opts = ExecOptions { mode: ExecMode::TileAnalytic, ..Default::default() };
-    print!("{}", report::util_table(opts).expect("util"));
+    let cfg = EngineConfig::new().mode(ExecMode::TileAnalytic);
+    print!("{}", report::util_table(&cfg).expect("util"));
 }

@@ -5,6 +5,8 @@ pub mod report;
 
 use anyhow::Result;
 
+use crate::coordinator::{BusModel, EngineConfig, ShardPolicy};
+
 const USAGE: &str = "\
 convaix — ConvAix ASIP reproduction (ISCAS'19)
 
@@ -28,6 +30,10 @@ OPTIONS:
                      `run` reports per-core utilization and speedup
   --batch <n>        batched throughput mode: fan n frames out over the
                      core pool (default 1 = latency mode)
+  --shard <policy>   intra-layer shard axis for --cores > 1:
+                     oc-tile (default) | row-band | auto
+  --bus <model>      external bandwidth model for --cores > 1:
+                     partitioned (default) | shared
 ";
 
 /// Tiny argv parser (clap is not in the offline vendor set).
@@ -39,6 +45,8 @@ pub struct Args {
     pub artifacts: String,
     pub cores: usize,
     pub batch: usize,
+    pub shard: ShardPolicy,
+    pub bus: BusModel,
 }
 
 impl Args {
@@ -51,6 +59,8 @@ impl Args {
             artifacts: "artifacts".into(),
             cores: 1,
             batch: 1,
+            shard: ShardPolicy::OcTile,
+            bus: BusModel::Partitioned,
         };
         let mut it = argv.iter().skip(1).peekable();
         while let Some(arg) = it.next() {
@@ -86,6 +96,20 @@ impl Args {
                         anyhow::bail!("--batch must be >= 1");
                     }
                 }
+                "--shard" => {
+                    a.shard = it
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("--shard needs a value"))?
+                        .parse()
+                        .map_err(|e: String| anyhow::anyhow!("{e}"))?;
+                }
+                "--bus" => {
+                    a.bus = it
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("--bus needs a value"))?
+                        .parse()
+                        .map_err(|e: String| anyhow::anyhow!("{e}"))?;
+                }
                 "-h" | "--help" => {
                     a.command = "help".into();
                     return Ok(a);
@@ -99,21 +123,27 @@ impl Args {
         }
         Ok(a)
     }
+
+    /// Map parsed flags onto an engine configuration.
+    pub fn engine_config(&self) -> EngineConfig {
+        let mode = if self.full {
+            crate::coordinator::ExecMode::FullCycle
+        } else {
+            crate::coordinator::ExecMode::TileAnalytic
+        };
+        EngineConfig::new()
+            .mode(mode)
+            .gate_bits(self.gate_bits)
+            .cores(self.cores)
+            .batch(self.batch)
+            .shard(self.shard)
+            .bus(self.bus)
+    }
 }
 
 pub fn main_with(argv: &[String]) -> Result<i32> {
     let args = Args::parse(argv)?;
-    let mode = if args.full {
-        crate::coordinator::ExecMode::FullCycle
-    } else {
-        crate::coordinator::ExecMode::TileAnalytic
-    };
-    let opts = crate::coordinator::executor::ExecOptions {
-        mode,
-        gate_bits: args.gate_bits,
-        cores: args.cores,
-        batch: args.batch,
-    };
+    let cfg = args.engine_config();
     match args.command.as_str() {
         "help" => {
             print!("{USAGE}");
@@ -132,11 +162,11 @@ pub fn main_with(argv: &[String]) -> Result<i32> {
             Ok(0)
         }
         "table2" => {
-            print!("{}", report::table2(opts)?);
+            print!("{}", report::table2(&cfg)?);
             Ok(0)
         }
         "util" => {
-            print!("{}", report::util_table(opts)?);
+            print!("{}", report::util_table(&cfg)?);
             Ok(0)
         }
         "run" => {
@@ -146,11 +176,11 @@ pub fn main_with(argv: &[String]) -> Result<i32> {
                 .map(String::as_str)
                 .unwrap_or("alexnet");
             if args.batch > 1 {
-                print!("{}", report::throughput(net, opts)?);
+                print!("{}", report::throughput(net, &cfg)?);
             } else if args.cores > 1 {
-                print!("{}", report::run_net_mc(net, opts)?);
+                print!("{}", report::run_net_mc(net, &cfg)?);
             } else {
-                print!("{}", report::run_net(net, opts)?);
+                print!("{}", report::run_net(net, &cfg)?);
             }
             Ok(0)
         }

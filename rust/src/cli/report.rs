@@ -1,78 +1,66 @@
 //! Table/figure regenerators (Table I, Table II, Fig. 3b, Fig. 3c,
 //! per-layer utilization) — used by the CLI and the bench targets.
+//! Everything executes through [`Engine`]; the run shape (cores, batch,
+//! shard policy, bus model, mode) comes in as an [`EngineConfig`].
 
 use anyhow::Result;
 
 use crate::baselines::published;
-use crate::coordinator::executor::{run_conv_layer, ExecOptions, NetLayer};
-use crate::coordinator::metrics::NetworkResult;
-use crate::coordinator::scheduler::{run_batched, run_conv_layer_mc, BatchedResult, CorePool};
-use crate::core::Cpu;
+use crate::coordinator::{BatchedResult, Engine, EngineConfig, NetLayer, NetworkResult};
 use crate::energy::{area, power};
 use crate::model::{alexnet_conv, vgg16_conv, ConvLayer};
 use crate::util::table::{bar_chart, Table};
 use crate::util::XorShift;
 
-/// Run a conv stack with synthetic weights; returns per-layer results.
-pub fn bench_network(name: &str, layers: &[ConvLayer], opts: ExecOptions) -> Result<NetworkResult> {
-    let mut cpu = Cpu::new(1 << 24);
-    let mut rng = XorShift::new(0xC0FFEE);
-    let mut net = NetworkResult { name: name.into(), ..Default::default() };
-    for l in layers {
-        let x = vec![0i16; l.ic * l.ih * l.iw];
-        let w = rng.i16_vec(l.oc * (l.ic / l.groups) * l.fh * l.fw, -128, 128);
-        let b = rng.i32_vec(l.oc, -1000, 1000);
-        net.layers
-            .push(run_conv_layer(&mut cpu, l, &x, &w, &b, opts).map_err(|e| anyhow::anyhow!("{e}"))?);
-    }
-    Ok(net)
+/// Build an engine for `cfg` (one per report run: the pool is fresh,
+/// the weight stream is the config's seed).
+fn engine_for(cfg: &EngineConfig) -> Engine {
+    cfg.clone().build()
 }
 
-/// [`bench_network`] sharded across a core pool (same xorshift weight
-/// stream, so per-layer MAC totals are identical to the 1-core run).
-pub fn bench_network_mc(
+/// Run a conv stack with synthetic weights; returns per-layer results.
+/// The engine's deterministic per-layer xorshift draws make MAC totals
+/// identical across core counts and shard policies.
+pub fn bench_network(
     name: &str,
     layers: &[ConvLayer],
-    opts: ExecOptions,
+    cfg: &EngineConfig,
 ) -> Result<NetworkResult> {
-    let mut pool = CorePool::new(opts.cores, 1 << 24);
-    let mut rng = XorShift::new(0xC0FFEE);
-    let mut net = NetworkResult { name: name.into(), ..Default::default() };
-    for l in layers {
-        let x = vec![0i16; l.ic * l.ih * l.iw];
-        let w = rng.i16_vec(l.oc * (l.ic / l.groups) * l.fh * l.fw, -128, 128);
-        let b = rng.i32_vec(l.oc, -1000, 1000);
-        net.layers.push(
-            run_conv_layer_mc(&mut pool, l, &x, &w, &b, opts)
-                .map_err(|e| anyhow::anyhow!("{e}"))?,
-        );
-    }
-    Ok(net)
+    let Some(first) = layers.first() else {
+        return Ok(NetworkResult { name: name.into(), ..Default::default() });
+    };
+    let net: Vec<NetLayer> = layers.iter().cloned().map(NetLayer::Conv).collect();
+    let input = vec![0i16; first.ic * first.ih * first.iw];
+    engine_for(cfg)
+        .run_network(name, &net, &input)
+        .map_err(|e| anyhow::anyhow!("{e}"))
 }
 
 /// `convaix run <net> --cores N` — per-layer multi-core breakdown with
 /// per-core utilization and speedup columns.
-pub fn run_net_mc(net: &str, opts: ExecOptions) -> Result<String> {
+pub fn run_net_mc(net: &str, cfg: &EngineConfig) -> Result<String> {
     let layers = net_layers(net)?;
-    let serial = bench_network(net, &layers, ExecOptions { cores: 1, batch: 1, ..opts })?;
-    let sharded = bench_network_mc(net, &layers, opts)?;
+    let serial = bench_network(net, &layers, &cfg.clone().cores(1).batch(1))?;
+    let sharded = bench_network(net, &layers, cfg)?;
 
     let mut t = Table::new(
-        &format!("{net} sharded across {} ConvAix cores", opts.cores),
+        &format!(
+            "{net} sharded across {} ConvAix cores ({:?} shards, {:?} bus)",
+            cfg.cores, cfg.shard, cfg.bus
+        ),
         &["Layer", "1-core cyc", "Makespan cyc", "Speedup", "Par eff", "Util/core"],
     );
     for (l1, lm) in serial.layers.iter().zip(&sharded.layers) {
         let speedup = l1.cycles as f64 / lm.cycles.max(1) as f64;
-        let per_core_util = lm.macs as f64
-            / crate::PEAK_MACS_PER_CYCLE as f64
-            / (lm.parallel_cores() as f64 * lm.cycles.max(1) as f64);
         t.row(&[
             lm.name.clone(),
             l1.cycles.to_string(),
             lm.cycles.to_string(),
             format!("{:.2}x", speedup),
             format!("{:.2}", lm.parallel_efficiency()),
-            format!("{:.3}", per_core_util),
+            // LayerResult::utilization is per core (divides by the
+            // shard's core count), so this column stays <= 1.0
+            format!("{:.3}", lm.utilization()),
         ]);
     }
     let total_speedup = serial.cycles() as f64 / sharded.cycles().max(1) as f64;
@@ -80,7 +68,7 @@ pub fn run_net_mc(net: &str, opts: ExecOptions) -> Result<String> {
     s.push_str(&format!(
         "{net}: {:.2} ms on {} cores vs {:.2} ms on 1 core — {:.2}x cycle-level speedup\n",
         sharded.time_ms(),
-        opts.cores,
+        cfg.cores,
         serial.time_ms(),
         total_speedup,
     ));
@@ -89,29 +77,33 @@ pub fn run_net_mc(net: &str, opts: ExecOptions) -> Result<String> {
 
 /// `convaix run <net> --batch B [--cores N]` — batched throughput mode:
 /// B frames fanned out over the core pool.
-pub fn throughput(net: &str, opts: ExecOptions) -> Result<String> {
+pub fn throughput(net: &str, cfg: &EngineConfig) -> Result<String> {
     let conv = net_layers(net)?;
     let (ic, ih, iw) = (conv[0].ic, conv[0].ih, conv[0].iw);
     let layers: Vec<NetLayer> = conv.into_iter().map(NetLayer::Conv).collect();
     let mut rng = XorShift::new(0xBA7C4);
     let inputs: Vec<Vec<i16>> =
-        (0..opts.batch).map(|_| rng.i16_vec(ic * ih * iw, -2000, 2000)).collect();
-    let mut pool = CorePool::new(opts.cores, 1 << 24);
-    let br = run_batched(&mut pool, net, &layers, &inputs, opts, 0xC0FFEE)
+        (0..cfg.batch).map(|_| rng.i16_vec(ic * ih * iw, -2000, 2000)).collect();
+    let br = engine_for(cfg)
+        .run_batched(net, &layers, &inputs)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
-    Ok(throughput_report(&br, opts))
+    Ok(throughput_report(&br, cfg))
 }
 
 /// Render a [`BatchedResult`] as the throughput table + summary lines.
-pub fn throughput_report(br: &BatchedResult, opts: ExecOptions) -> String {
+/// `Useful frac` is private-bandwidth busy work over the makespan, so a
+/// shared-bus run reports how much of the window was *work* rather than
+/// bus wait (never above 1.0).
+pub fn throughput_report(br: &BatchedResult, cfg: &EngineConfig) -> String {
     let mut t = Table::new(
         &format!(
-            "{}: batch {} over {} core(s) — frame fan-out",
+            "{}: batch {} over {} core(s), {:?} bus — frame fan-out",
             br.name,
             br.frames.len(),
-            opts.cores
+            cfg.cores,
+            br.bus,
         ),
-        &["Core", "Busy cycles", "Busy frac", "Frames"],
+        &["Core", "Occupied cycles", "Useful frac", "Frames"],
     );
     let util = br.core_utilization();
     let mut frames_per_core = vec![0usize; br.core_cycles.len()];
@@ -187,17 +179,16 @@ pub fn fig3b() -> String {
 /// Fig. 3c — power distribution for AlexNet conv3 at 8-bit gating.
 pub fn fig3c() -> Result<String> {
     let l = alexnet_conv().into_iter().nth(2).expect("conv3");
-    let mut cpu = Cpu::new(1 << 24);
     let mut rng = XorShift::new(3);
     let x = vec![0i16; l.ic * l.ih * l.iw];
     let w = rng.i16_vec(l.oc * (l.ic / l.groups) * l.fh * l.fw, -128, 128);
     let b = rng.i32_vec(l.oc, -1000, 1000);
-    let opts = ExecOptions {
-        mode: crate::coordinator::ExecMode::TileAnalytic,
-        gate_bits: 8,
-        ..Default::default()
-    };
-    let r = run_conv_layer(&mut cpu, &l, &x, &w, &b, opts).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let cfg = EngineConfig::new()
+        .mode(crate::coordinator::ExecMode::TileAnalytic)
+        .gate_bits(8);
+    let r = engine_for(&cfg)
+        .run_conv_layer(&l, &x, &w, &b)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
     let p = power::network_power(&r.stats, r.cycles as f64 / crate::CLOCK_HZ as f64);
     let (va, me, ct) = p.fractions();
     let items = vec![
@@ -231,8 +222,8 @@ pub struct ConvAixRow {
     pub energy_eff: f64,
 }
 
-pub fn convaix_row(name: &str, layers: &[ConvLayer], opts: ExecOptions) -> Result<ConvAixRow> {
-    let net = bench_network(name, layers, opts)?;
+pub fn convaix_row(name: &str, layers: &[ConvLayer], cfg: &EngineConfig) -> Result<ConvAixRow> {
+    let net = bench_network(name, layers, cfg)?;
     let secs = net.time_ms() / 1e3;
     let p = power::network_power(&net.stats(), secs);
     let gops = net.gops();
@@ -247,10 +238,14 @@ pub fn convaix_row(name: &str, layers: &[ConvLayer], opts: ExecOptions) -> Resul
     })
 }
 
-/// Table II — comparison with state-of-the-art accelerators.
-pub fn table2(opts: ExecOptions) -> Result<String> {
-    let alex = convaix_row("AlexNet", &alexnet_conv(), opts)?;
-    let vgg = convaix_row("VGG-16", &vgg16_conv(), opts)?;
+/// Table II — comparison with state-of-the-art accelerators. Always a
+/// **single-core** run regardless of `--cores`: the paper's baselines
+/// and the power model are calibrated for one ConvAix core, so sharding
+/// here would compare a 4-core makespan against single-core silicon.
+pub fn table2(cfg: &EngineConfig) -> Result<String> {
+    let cfg = &cfg.clone().cores(1).batch(1);
+    let alex = convaix_row("AlexNet", &alexnet_conv(), cfg)?;
+    let vgg = convaix_row("VGG-16", &vgg16_conv(), cfg)?;
     let (espec, enets) = published::envision();
     let (yspec, ynets) = published::eyeriss();
 
@@ -337,14 +332,17 @@ pub fn table2(opts: ExecOptions) -> Result<String> {
 }
 
 /// Per-layer utilization table (the abstract's 72.5 % average claim).
-pub fn util_table(opts: ExecOptions) -> Result<String> {
+/// Always single-core — the claim it reproduces is a single-core one;
+/// use `run <net> --cores N` for the multi-core per-layer breakdown.
+pub fn util_table(cfg: &EngineConfig) -> Result<String> {
+    let cfg = &cfg.clone().cores(1).batch(1);
     let mut t = Table::new(
         "Per-layer MAC utilization (paper: 72.5 % average across AlexNet+VGG-16 conv layers)",
         &["Net", "Layer", "Util", "Time [ms]", "GOP/s", "I/O [MB]"],
     );
     let mut utils = Vec::new();
     for (net, layers) in [("AlexNet", alexnet_conv()), ("VGG-16", vgg16_conv())] {
-        let r = bench_network(net, &layers, opts)?;
+        let r = bench_network(net, &layers, cfg)?;
         for l in &r.layers {
             utils.push(l.utilization());
             t.row(&[
@@ -375,9 +373,9 @@ pub fn util_table(opts: ExecOptions) -> Result<String> {
 }
 
 /// `convaix run <net>` — metrics summary.
-pub fn run_net(net: &str, opts: ExecOptions) -> Result<String> {
+pub fn run_net(net: &str, cfg: &EngineConfig) -> Result<String> {
     let layers = net_layers(net)?;
-    let r = bench_network(net, &layers, opts)?;
+    let r = bench_network(net, &layers, cfg)?;
     let secs = r.time_ms() / 1e3;
     let p = power::network_power(&r.stats(), secs);
     Ok(format!(

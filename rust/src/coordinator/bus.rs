@@ -1,0 +1,259 @@
+//! External-bus contention model for the multi-core pool.
+//!
+//! The seed scheduler assumed fully **partitioned** external bandwidth:
+//! every core owns a private `EXT_BYTES_PER_CYCLE`-wide port, so its DMA
+//! time never depends on what the other cores do. Real multi-array
+//! deployments usually hang all cores off one DRAM channel — the exact
+//! resource-partitioning trade-off of Shen et al. (FPGA'17): dividing
+//! the array *helps* compute but the memory system stays shared.
+//!
+//! [`BusModel::Shared`] models that channel analytically: the bus
+//! bandwidth is divided evenly across the cores that are *concurrently
+//! DMA-bound* (cores whose aggregate DMA time exceeds their aggregate
+//! compute time — compute-bound cores hide their transfers in compute
+//! slack and do not occupy the channel steadily). The divisor is the
+//! fixed point of "how many cores are DMA-bound once the bandwidth is
+//! divided that many ways": slowing the bus down can tip previously
+//! compute-bound cores over, so the count is grown until it stabilizes
+//! (it is monotone, so at most `cores` iterations).
+//!
+//! Only the **transfer** term of the DMA model scales — per-request DRAM
+//! latency is pipelined per bank and stays constant. With a divisor of 1
+//! (one DMA-bound core, or a partitioned bus) the accounting is
+//! bit-identical to the seed model.
+
+use crate::mem::EXT_BYTES_PER_CYCLE;
+
+use super::metrics::LayerResult;
+
+/// How the pool's cores reach external memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BusModel {
+    /// Every core has a private full-width external port (the seed
+    /// model; upper bound on scaling).
+    #[default]
+    Partitioned,
+    /// All cores share one `EXT_BYTES_PER_CYCLE`-wide DRAM channel;
+    /// bandwidth is divided across concurrently DMA-bound cores.
+    Shared,
+}
+
+impl std::str::FromStr for BusModel {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "partitioned" | "private" => Ok(Self::Partitioned),
+            "shared" => Ok(Self::Shared),
+            other => Err(format!("unknown bus model `{other}` (partitioned | shared)")),
+        }
+    }
+}
+
+/// One schedulable unit of a core's timeline (a shard or a layer):
+/// its compute time and the decomposed DMA terms needed to re-price the
+/// transfer under contention.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Segment {
+    /// Pure compute cycles of the unit.
+    pub compute: u64,
+    /// Off-chip payload bytes moved by the unit.
+    pub bytes: u64,
+    /// Per-request DRAM latency cycles (the bandwidth-independent term).
+    pub lat: u64,
+    /// Cycles of the unit at full private bandwidth: the executor's
+    /// `max(compute, dma)` overlap result, including per-group rounding
+    /// the aggregate terms cannot reconstruct.
+    pub part: u64,
+}
+
+impl Segment {
+    /// Decompose an executed layer/shard result into bus-model terms.
+    pub fn of_layer(r: &LayerResult) -> Self {
+        let bytes = r.io_in + r.io_out;
+        Self {
+            compute: r.compute_cycles,
+            bytes,
+            lat: r.dma_cycles.saturating_sub(bytes.div_ceil(EXT_BYTES_PER_CYCLE as u64)),
+            part: r.cycles,
+        }
+    }
+
+    /// Transfer-plus-latency DMA cycles when `d` cores contend.
+    fn dma(&self, d: u64) -> u64 {
+        self.lat + (self.bytes * d).div_ceil(EXT_BYTES_PER_CYCLE as u64)
+    }
+
+    /// Occupied cycles when `d` cores contend for the bus: the private
+    /// result, extended only if the contended transfer outgrows it.
+    fn busy(&self, d: u64) -> u64 {
+        self.part.max(self.dma(d))
+    }
+}
+
+/// Per-core cycle accounting under a bus model.
+pub(crate) struct BusAccount {
+    /// Occupied cycles per core (includes shared-bus wait).
+    pub busy: Vec<u64>,
+    /// Busy cycles per core at full private bandwidth — the useful-work
+    /// view. Equals `busy` for [`BusModel::Partitioned`].
+    pub useful: Vec<u64>,
+    /// Cores counted as concurrently DMA-bound (the bandwidth divisor);
+    /// 0 when the bus is partitioned or nobody is DMA-bound.
+    pub contenders: usize,
+}
+
+/// Is this core's timeline dominated by DMA when `d` cores contend?
+fn dma_bound(segs: &[Segment], d: u64) -> bool {
+    if segs.is_empty() {
+        return false;
+    }
+    let compute: u64 = segs.iter().map(|s| s.compute).sum();
+    let dma: u64 = segs.iter().map(|s| s.dma(d)).sum();
+    dma > compute
+}
+
+/// Price each core's segment list under `bus`. Deterministic; the
+/// shared-bus divisor is the grown-until-stable count of DMA-bound
+/// cores.
+pub(crate) fn core_busy(per_core: &[Vec<Segment>], bus: BusModel) -> BusAccount {
+    let useful: Vec<u64> = per_core
+        .iter()
+        .map(|segs| segs.iter().map(|s| s.part).sum())
+        .collect();
+    match bus {
+        BusModel::Partitioned => BusAccount { busy: useful.clone(), useful, contenders: 0 },
+        BusModel::Shared => {
+            let count = |d: u64| per_core.iter().filter(|segs| dma_bound(segs, d)).count();
+            let mut d = 1u64;
+            loop {
+                let bound = count(d) as u64;
+                if bound.max(1) <= d {
+                    break;
+                }
+                d = bound;
+            }
+            let busy = per_core
+                .iter()
+                .map(|segs| segs.iter().map(|s| s.busy(d)).sum())
+                .collect();
+            BusAccount { busy, useful, contenders: count(d) }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const E: u64 = EXT_BYTES_PER_CYCLE as u64;
+
+    /// A latency-free segment: `part` is the executor's overlap max.
+    fn seg(compute: u64, bytes: u64) -> Segment {
+        Segment { compute, bytes, lat: 0, part: compute.max(bytes.div_ceil(E)) }
+    }
+
+    #[test]
+    fn partitioned_is_the_private_sum() {
+        let cores = vec![vec![seg(100, 80 * E), seg(500, 8)], vec![seg(900, 8)]];
+        let acct = core_busy(&cores, BusModel::Partitioned);
+        assert_eq!(acct.busy, vec![80 + 500, 900]);
+        assert_eq!(acct.useful, acct.busy);
+        assert_eq!(acct.contenders, 0);
+    }
+
+    #[test]
+    fn one_dma_bound_core_keeps_the_full_bus() {
+        // one DMA-bound core among compute-bound peers: divisor 1, the
+        // shared channel prices exactly like the partitioned one
+        let cores = vec![
+            vec![seg(100, 1000 * E)], // dma 1000 > compute 100
+            vec![seg(5000, 10 * E)],  // compute-bound
+            vec![seg(5000, 10 * E)],
+        ];
+        let part = core_busy(&cores, BusModel::Partitioned);
+        let shared = core_busy(&cores, BusModel::Shared);
+        assert_eq!(shared.busy, part.busy);
+        assert_eq!(shared.contenders, 1);
+    }
+
+    #[test]
+    fn two_dma_bound_cores_halve_the_bandwidth() {
+        let cores = vec![
+            vec![seg(100, 1000 * E)],
+            vec![seg(100, 1000 * E)],
+            vec![seg(5000, 10 * E)], // stays compute-bound even at d=2
+        ];
+        let acct = core_busy(&cores, BusModel::Shared);
+        // transfer term doubles for the two contenders
+        assert_eq!(acct.busy[0], 2000);
+        assert_eq!(acct.busy[1], 2000);
+        // the compute-bound core absorbs its (doubled) transfer in slack
+        assert_eq!(acct.busy[2], 5000);
+        assert_eq!(acct.useful, vec![1000, 1000, 5000]);
+        assert_eq!(acct.contenders, 2);
+    }
+
+    #[test]
+    fn n_dma_bound_cores_divide_by_n() {
+        for n in [2usize, 3, 4, 8] {
+            let cores: Vec<Vec<Segment>> =
+                (0..n).map(|_| vec![seg(100, 1000 * E)]).collect();
+            let acct = core_busy(&cores, BusModel::Shared);
+            assert_eq!(acct.contenders, n);
+            for c in 0..n {
+                assert_eq!(acct.busy[c], 1000 * n as u64, "{n} cores");
+                assert_eq!(acct.useful[c], 1000);
+            }
+        }
+    }
+
+    #[test]
+    fn contention_cascade_tips_borderline_cores() {
+        // C is compute-bound at full bandwidth (1500 > 1000) but flips
+        // once A and B halve the bus (2000 > 1500): divisor grows 2 -> 3.
+        let cores = vec![
+            vec![seg(100, 1000 * E)],
+            vec![seg(100, 1000 * E)],
+            vec![seg(1500, 1000 * E)],
+        ];
+        let acct = core_busy(&cores, BusModel::Shared);
+        assert_eq!(acct.contenders, 3);
+        assert_eq!(acct.busy, vec![3000, 3000, 3000]);
+    }
+
+    #[test]
+    fn latency_term_does_not_scale() {
+        let s = Segment { compute: 0, bytes: 10 * E, lat: 400, part: 410 };
+        let cores = vec![vec![s], vec![s]];
+        let acct = core_busy(&cores, BusModel::Shared);
+        // transfer doubles (10 -> 20); the 400-cycle latency term doesn't
+        assert_eq!(acct.busy, vec![420, 420]);
+    }
+
+    #[test]
+    fn idle_cores_never_contend() {
+        let cores = vec![vec![seg(10, 1000 * E)], vec![]];
+        let acct = core_busy(&cores, BusModel::Shared);
+        assert_eq!(acct.contenders, 1);
+        assert_eq!(acct.busy[1], 0);
+    }
+
+    #[test]
+    fn segment_of_layer_roundtrips_the_dma_model() {
+        // dma_cycles = ceil(bytes / E) + reqs * lat, as the executor
+        // computes it; of_layer must recover the latency term exactly
+        let r = LayerResult {
+            compute_cycles: 50,
+            dma_cycles: (1000 * E).div_ceil(E) + 3 * 40,
+            io_in: 600 * E,
+            io_out: 400 * E,
+            cycles: 1120,
+            ..Default::default()
+        };
+        let s = Segment::of_layer(&r);
+        assert_eq!(s.bytes, 1000 * E);
+        assert_eq!(s.lat, 120);
+        assert_eq!(s.busy(1), 1120);
+        assert_eq!(s.busy(2), 2120);
+    }
+}

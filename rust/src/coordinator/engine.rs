@@ -1,0 +1,1214 @@
+//! The `Engine`: the one front door for running layers, networks and
+//! batches on one or many ConvAix cores.
+//!
+//! The paper separates *what* a layer computes from *how* it is
+//! scheduled onto the vector lanes (Fig. 2); this module gives the
+//! coordinator the same separation at the chip level. An [`Engine`] is
+//! built from an [`EngineConfig`] (cores, batch, shard policy, bus
+//! model, execution mode, seed) and exposes three entry points —
+//! [`Engine::run_layer`], [`Engine::run_network`],
+//! [`Engine::run_batched`] — that replace the 0.2 free-function pairs
+//! (`executor::run_network` / `scheduler::run_network_mc`, …), which
+//! survive only as `#[deprecated]` shims.
+//!
+//! Internally there is exactly **one** network walk
+//! (`walk_network`), parameterized by a `LayerRunner`: the
+//! single-core runner and the sharded pool runner are two
+//! implementations of the same trait, so the deterministic xorshift
+//! weight draws stay bit-identical across core counts by construction
+//! (the multicore determinism tests lock that contract).
+//!
+//! Two intra-layer shard axes are offered ([`ShardPolicy`]):
+//!
+//! * **`OcTile`** — output channels split into tile-aligned contiguous
+//!   ranges (the seed policy). Every core re-reads the full input but
+//!   only its filter slice; best when `oc` is deep.
+//! * **`RowBand`** — contiguous output-row bands, each core running the
+//!   *full* `oc` over a slice of rows (with the halo rows its windows
+//!   need). Divides the input traffic instead of the filter traffic;
+//!   best for early layers where `oc < cores × ocs` or the input
+//!   dominates DMA. Outputs are still bit-identical: each output
+//!   element is produced by exactly the arithmetic the single-core
+//!   schedule would run.
+//! * **`Auto`** — per layer, picks whichever policy predicts the lower
+//!   makespan under a first-order cost model (MACs for compute, tensor
+//!   footprints over the bus width for DMA).
+//!
+//! External bandwidth is priced by a [`BusModel`]: `Partitioned` keeps
+//! the seed assumption of a private full-width port per core; `Shared`
+//! divides `EXT_BYTES_PER_CYCLE` across concurrently DMA-bound cores
+//! (see [`super::bus`]).
+
+use std::thread;
+
+use crate::codegen::{layout, stage};
+use crate::core::Cpu;
+use crate::model::{ConvLayer, PoolLayer};
+
+use super::bus::{core_busy, BusModel, Segment};
+use super::executor::{conv_layer, pool_layer, ExecError, ExecMode, ExecOptions, NetLayer};
+use super::metrics::{add_stats, LayerResult, NetworkResult};
+
+/// How a layer is split across the pool's cores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShardPolicy {
+    /// Shard output channels into tile-aligned contiguous ranges
+    /// (pool layers: 16-channel slabs).
+    #[default]
+    OcTile,
+    /// Shard contiguous output-row bands at full output depth.
+    RowBand,
+    /// Pick per layer by predicted makespan.
+    Auto,
+}
+
+impl std::str::FromStr for ShardPolicy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "oc-tile" | "oc" => Ok(Self::OcTile),
+            "row-band" | "row" => Ok(Self::RowBand),
+            "auto" => Ok(Self::Auto),
+            other => Err(format!("unknown shard policy `{other}` (oc-tile | row-band | auto)")),
+        }
+    }
+}
+
+/// Builder for an [`Engine`]. Every knob has the seed-compatible
+/// default, so `EngineConfig::new().build()` is the paper's single-core
+/// full-cycle setup.
+///
+/// ```no_run
+/// use convaix::coordinator::{BusModel, EngineConfig, NetLayer, ShardPolicy};
+/// use convaix::model::ConvLayer;
+///
+/// let mut engine = EngineConfig::new()
+///     .cores(4)
+///     .shard(ShardPolicy::Auto)
+///     .bus(BusModel::Shared)
+///     .build();
+/// let layers = vec![NetLayer::Conv(ConvLayer::new("c1", 4, 8, 8, 16, 3, 3, 1, 1, 1))];
+/// let input = vec![0i16; 4 * 8 * 8];
+/// let net = engine.run_network("demo", &layers, &input).unwrap();
+/// assert_eq!(net.layers.len(), 1);
+/// ```
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// ConvAix cores in the pool (1 = the paper's setup).
+    pub cores: usize,
+    /// Nominal frames per [`Engine::run_batched`] call. Advisory: the
+    /// CLI/report tooling uses it to size synthetic input batches; the
+    /// engine itself batches exactly the `inputs` it is handed.
+    pub batch: usize,
+    /// Intra-layer shard axis for multi-core single-frame runs.
+    pub shard: ShardPolicy,
+    /// External-bandwidth model for multi-core runs.
+    pub bus: BusModel,
+    /// Cycle simulation fidelity.
+    pub mode: ExecMode,
+    /// Precision gating (16 = off, 8 = the paper's gated operating point).
+    pub gate_bits: u8,
+    /// Seed of the deterministic per-layer xorshift weight draws.
+    pub seed: u64,
+    /// External DRAM model capacity per core, bytes.
+    pub ext_capacity: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            cores: 1,
+            batch: 1,
+            shard: ShardPolicy::OcTile,
+            bus: BusModel::Partitioned,
+            mode: ExecMode::FullCycle,
+            gate_bits: 16,
+            seed: 0xC0FFEE,
+            ext_capacity: 1 << 24,
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn cores(mut self, n: usize) -> Self {
+        self.cores = n.max(1);
+        self
+    }
+
+    pub fn batch(mut self, n: usize) -> Self {
+        self.batch = n.max(1);
+        self
+    }
+
+    pub fn shard(mut self, p: ShardPolicy) -> Self {
+        self.shard = p;
+        self
+    }
+
+    pub fn bus(mut self, b: BusModel) -> Self {
+        self.bus = b;
+        self
+    }
+
+    pub fn mode(mut self, m: ExecMode) -> Self {
+        self.mode = m;
+        self
+    }
+
+    pub fn gate_bits(mut self, bits: u8) -> Self {
+        self.gate_bits = bits;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    pub fn ext_capacity(mut self, bytes: usize) -> Self {
+        self.ext_capacity = bytes;
+        self
+    }
+
+    /// Finish the builder: allocate the core pool and return the engine.
+    pub fn build(self) -> Engine {
+        Engine::new(self)
+    }
+
+    pub(crate) fn run_spec(&self) -> RunSpec {
+        RunSpec {
+            opts: ExecOptions {
+                mode: self.mode,
+                gate_bits: self.gate_bits,
+                cores: self.cores,
+                batch: self.batch,
+            },
+            shard: self.shard,
+            bus: self.bus,
+            seed: self.seed,
+        }
+    }
+}
+
+/// Everything a single run needs besides the pool — bundles the legacy
+/// [`ExecOptions`] with the engine-level policies.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct RunSpec {
+    pub opts: ExecOptions,
+    pub shard: ShardPolicy,
+    pub bus: BusModel,
+    pub seed: u64,
+}
+
+/// The execution engine: an [`EngineConfig`] plus its pool of
+/// cycle-accurate cores. All public entry points run on this.
+pub struct Engine {
+    cfg: EngineConfig,
+    pool: CorePool,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig) -> Self {
+        let pool = CorePool::new(cfg.cores, cfg.ext_capacity);
+        Self { cfg, pool }
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    pub fn cores(&self) -> usize {
+        self.pool.cores()
+    }
+
+    /// Run one network layer (conv or pool) with caller-provided
+    /// tensors, sharded per the config. `w`/`b` are ignored for pool
+    /// layers.
+    pub fn run_layer(
+        &mut self,
+        layer: &NetLayer,
+        x: &[i16],
+        w: &[i16],
+        b: &[i32],
+    ) -> Result<LayerResult, ExecError> {
+        match layer {
+            NetLayer::Conv(l) => self.run_conv_layer(l, x, w, b),
+            NetLayer::Pool(l) => self.run_pool_layer(l, x),
+        }
+    }
+
+    /// Run a (possibly grouped) conv layer. `x`: (ic, ih, iw), `w`:
+    /// (oc, ic/groups, fh, fw), `b`: (oc,). Outputs and MAC counts are
+    /// bit-identical across core counts and shard policies.
+    pub fn run_conv_layer(
+        &mut self,
+        layer: &ConvLayer,
+        x: &[i16],
+        w: &[i16],
+        b: &[i32],
+    ) -> Result<LayerResult, ExecError> {
+        let spec = self.cfg.run_spec();
+        run_conv_sharded(&mut self.pool, layer, x, w, b, spec)
+    }
+
+    /// Run a max-pool layer. `x`: (ic, ih, iw).
+    pub fn run_pool_layer(
+        &mut self,
+        layer: &PoolLayer,
+        x: &[i16],
+    ) -> Result<LayerResult, ExecError> {
+        let spec = self.cfg.run_spec();
+        run_pool_sharded(&mut self.pool, layer, x, spec)
+    }
+
+    /// Run a layer sequence, threading activations; weights/biases are
+    /// drawn deterministically (xorshift, `cfg.seed`) per layer. In
+    /// analytic mode activations are not threaded (zeros).
+    pub fn run_network(
+        &mut self,
+        name: &str,
+        layers: &[NetLayer],
+        input: &[i16],
+    ) -> Result<NetworkResult, ExecError> {
+        let spec = self.cfg.run_spec();
+        run_network_on(&mut self.pool, name, layers, input, spec)
+    }
+
+    /// Batched inference: fan `inputs` (one tensor per frame)
+    /// round-robin over the cores, each core running whole networks
+    /// back to back — no intra-layer synchronization. A single-frame
+    /// batch is bit-identical to [`Engine::run_network`].
+    pub fn run_batched(
+        &mut self,
+        name: &str,
+        layers: &[NetLayer],
+        inputs: &[Vec<i16>],
+    ) -> Result<BatchedResult, ExecError> {
+        let spec = self.cfg.run_spec();
+        run_batched_on(&mut self.pool, name, layers, inputs, spec)
+    }
+}
+
+/// A pool of independent ConvAix cores (one cycle simulator each).
+pub struct CorePool {
+    cpus: Vec<Cpu>,
+}
+
+impl CorePool {
+    /// Build a pool of `cores` cores (min 1), each with its own
+    /// external-memory model of `ext_capacity` bytes.
+    pub fn new(cores: usize, ext_capacity: usize) -> Self {
+        let cores = cores.max(1);
+        Self { cpus: (0..cores).map(|_| Cpu::new(ext_capacity)).collect() }
+    }
+
+    pub fn cores(&self) -> usize {
+        self.cpus.len()
+    }
+
+    /// Core 0 — the single-core fallback path.
+    pub fn cpu0(&mut self) -> &mut Cpu {
+        &mut self.cpus[0]
+    }
+}
+
+/// The layer-granular half of the ONE network walk: how a single layer
+/// is executed. Implemented by the single-core runner and the sharded
+/// pool runner; [`walk_network`] is generic over it so the RNG stream
+/// and activation threading cannot diverge between the two worlds.
+pub(crate) trait LayerRunner {
+    fn conv(
+        &mut self,
+        layer: &ConvLayer,
+        x: &[i16],
+        w: &[i16],
+        b: &[i32],
+    ) -> Result<LayerResult, ExecError>;
+
+    fn pool(&mut self, layer: &PoolLayer, x: &[i16]) -> Result<LayerResult, ExecError>;
+}
+
+/// Runs every layer on one core.
+pub(crate) struct SoloRunner<'a> {
+    pub cpu: &'a mut Cpu,
+    pub opts: ExecOptions,
+}
+
+impl LayerRunner for SoloRunner<'_> {
+    fn conv(
+        &mut self,
+        layer: &ConvLayer,
+        x: &[i16],
+        w: &[i16],
+        b: &[i32],
+    ) -> Result<LayerResult, ExecError> {
+        conv_layer(self.cpu, layer, x, w, b, self.opts)
+    }
+
+    fn pool(&mut self, layer: &PoolLayer, x: &[i16]) -> Result<LayerResult, ExecError> {
+        pool_layer(self.cpu, layer, x, self.opts)
+    }
+}
+
+/// Shards every layer across the pool per the spec's policy/bus.
+pub(crate) struct ShardedRunner<'a> {
+    pub pool: &'a mut CorePool,
+    pub spec: RunSpec,
+}
+
+impl LayerRunner for ShardedRunner<'_> {
+    fn conv(
+        &mut self,
+        layer: &ConvLayer,
+        x: &[i16],
+        w: &[i16],
+        b: &[i32],
+    ) -> Result<LayerResult, ExecError> {
+        run_conv_sharded(self.pool, layer, x, w, b, self.spec)
+    }
+
+    fn pool(&mut self, layer: &PoolLayer, x: &[i16]) -> Result<LayerResult, ExecError> {
+        run_pool_sharded(self.pool, layer, x, self.spec)
+    }
+}
+
+/// THE network walk: threads activations through the layer list and
+/// draws per-layer weights/biases from one xorshift stream. Every
+/// public path (single core, sharded, each batched frame, the
+/// deprecated 0.2 shims) funnels through this function, so the draws
+/// are bit-identical everywhere by construction.
+pub(crate) fn walk_network<R: LayerRunner>(
+    runner: &mut R,
+    name: &str,
+    layers: &[NetLayer],
+    input: &[i16],
+    seed: u64,
+) -> Result<NetworkResult, ExecError> {
+    let mut rng = crate::util::XorShift::new(seed);
+    let mut act = input.to_vec();
+    let mut net = NetworkResult { name: name.into(), ..Default::default() };
+    for layer in layers {
+        match layer {
+            NetLayer::Conv(l) => {
+                let w = rng.i16_vec(l.oc * (l.ic / l.groups) * l.fh * l.fw, -128, 128);
+                let b = rng.i32_vec(l.oc, -1000, 1000);
+                let x = if act.len() == l.ic * l.ih * l.iw {
+                    act.clone()
+                } else {
+                    vec![0i16; l.ic * l.ih * l.iw]
+                };
+                let r = runner.conv(l, &x, &w, &b)?;
+                if !r.out.is_empty() {
+                    act = r.out.clone();
+                }
+                net.layers.push(r);
+            }
+            NetLayer::Pool(l) => {
+                let x = if act.len() == l.ic * l.ih * l.iw {
+                    act.clone()
+                } else {
+                    vec![0i16; l.ic * l.ih * l.iw]
+                };
+                let r = runner.pool(l, &x)?;
+                if !r.out.is_empty() {
+                    act = r.out.clone();
+                }
+                net.layers.push(r);
+            }
+        }
+    }
+    Ok(net)
+}
+
+/// Single-frame network run on `pool`, single-core or sharded per the
+/// spec. Shared by [`Engine::run_network`] and the deprecated shims.
+pub(crate) fn run_network_on(
+    pool: &mut CorePool,
+    name: &str,
+    layers: &[NetLayer],
+    input: &[i16],
+    spec: RunSpec,
+) -> Result<NetworkResult, ExecError> {
+    if spec.opts.cores.min(pool.cores()) <= 1 {
+        let mut runner = SoloRunner { cpu: pool.cpu0(), opts: spec.opts };
+        walk_network(&mut runner, name, layers, input, spec.seed)
+    } else {
+        let mut runner = ShardedRunner { pool, spec };
+        walk_network(&mut runner, name, layers, input, spec.seed)
+    }
+}
+
+/// A shard's view of the layer input.
+enum ShardInput {
+    /// Borrow `[lo, hi)` of the caller's tensor (contiguous slices —
+    /// oc-tile group slices and pool slabs — stay zero-copy).
+    Range(usize, usize),
+    /// Shard-private gathered tensor (row bands are strided in the full
+    /// tensor, so they are materialized per shard).
+    Owned(Vec<i16>),
+}
+
+impl ShardInput {
+    fn resolve<'a>(&'a self, x: &'a [i16]) -> &'a [i16] {
+        match self {
+            ShardInput::Range(lo, hi) => &x[*lo..*hi],
+            ShardInput::Owned(v) => v,
+        }
+    }
+}
+
+/// One unit of sharded conv work: a dense (or row-sliced) sub-layer
+/// plus the tensor ranges it reads and the output runs it produces.
+struct ConvShard {
+    sub: ConvLayer,
+    input: ShardInput,
+    w0: usize,
+    w1: usize,
+    b0: usize,
+    b1: usize,
+    /// `(dst offset, len)` runs in the full output tensor; the shard's
+    /// output is consumed sequentially across the runs.
+    placement: Vec<(usize, usize)>,
+}
+
+/// One unit of sharded pool work.
+struct PoolShard {
+    sub: PoolLayer,
+    input: ShardInput,
+    placement: Vec<(usize, usize)>,
+}
+
+/// SFU pool tile: 16 channels per vector.
+const POOL_GRAIN: usize = 16;
+
+/// Split `units` units into at most `want` balanced contiguous chunks,
+/// front-loading the remainder: half-open `(u0, u1)` unit ranges. The
+/// single partitioner behind every shard axis (oc tiles, row bands,
+/// pool slabs) — deterministic in its inputs.
+fn balanced_chunks(units: usize, want: usize) -> Vec<(usize, usize)> {
+    let k = want.max(1).min(units.max(1));
+    let (base, extra) = (units / k, units % k);
+    let mut chunks = Vec::with_capacity(k);
+    let mut u0 = 0usize;
+    for ci in 0..k {
+        let n = base + usize::from(ci < extra);
+        if n > 0 {
+            chunks.push((u0, u0 + n));
+            u0 += n;
+        }
+    }
+    chunks
+}
+
+/// Tile-aligned contiguous oc ranges within each group:
+/// `(group, oc0, oc1)`. Deterministic in (layer, want).
+fn octile_specs(layer: &ConvLayer, want: usize) -> Vec<(usize, usize, usize)> {
+    let g = layer.groups;
+    let lg = layer.per_group();
+    let ocg = lg.oc;
+    // Tile-align chunks to the planner's oc grain so shards don't add
+    // padding lanes the single-core schedule wouldn't have.
+    let grain = layout::plan(&lg).map(|p| p.variant.ocs()).unwrap_or(16);
+    let units = ocg.div_ceil(grain).max(1);
+    let mut specs = Vec::new();
+    for gi in 0..g {
+        for (u0, u1) in balanced_chunks(units, want.div_ceil(g)) {
+            let oc0 = (u0 * grain).min(ocg);
+            let oc1 = (u1 * grain).min(ocg);
+            if oc0 < oc1 {
+                specs.push((gi, oc0, oc1));
+            }
+        }
+    }
+    specs
+}
+
+/// Balanced contiguous output-row bands `(r0, r1)` over `rows` rows.
+fn rowband_specs(rows: usize, want: usize) -> Vec<(usize, usize)> {
+    balanced_chunks(rows, want)
+}
+
+fn conv_shards_octile(layer: &ConvLayer, want: usize) -> Vec<ConvShard> {
+    let lg = layer.per_group();
+    let (icg, ocg) = (lg.ic, lg.oc);
+    let ohw = layer.oh() * layer.ow();
+    octile_specs(layer, want)
+        .into_iter()
+        .map(|(gi, oc0, oc1)| {
+            let oc_abs = gi * ocg + oc0;
+            ConvShard {
+                sub: ConvLayer { ic: icg, oc: oc1 - oc0, groups: 1, ..layer.clone() },
+                input: ShardInput::Range(
+                    gi * icg * layer.ih * layer.iw,
+                    (gi + 1) * icg * layer.ih * layer.iw,
+                ),
+                w0: oc_abs * icg * layer.fh * layer.fw,
+                w1: (oc_abs + (oc1 - oc0)) * icg * layer.fh * layer.fw,
+                b0: oc_abs,
+                b1: oc_abs + (oc1 - oc0),
+                placement: vec![(oc_abs * ohw, (oc1 - oc0) * ohw)],
+            }
+        })
+        .collect()
+}
+
+/// Row-band conv shards: the sub-layer convolves a pre-padded row slice
+/// (its own halo included) with `pad = 0`, which is arithmetically
+/// identical to the full layer restricted to those output rows — so
+/// outputs stay bit-exact and per-shard MACs tile the layer exactly.
+fn conv_shards_rowband(layer: &ConvLayer, x: &[i16], want: usize) -> Vec<ConvShard> {
+    let (oh, ow) = (layer.oh(), layer.ow());
+    let (ihp, iwp) = (layer.ihp(), layer.iwp());
+    let xp = stage::pad_input(layer, x);
+    let w_all = layer.oc * (layer.ic / layer.groups) * layer.fh * layer.fw;
+    rowband_specs(oh, want)
+        .into_iter()
+        .map(|(oh0, oh1)| {
+            let rows = oh1 - oh0;
+            let in_r0 = oh0 * layer.stride;
+            let in_rows = (rows - 1) * layer.stride + layer.fh;
+            let mut xin = vec![0i16; layer.ic * in_rows * iwp];
+            for (c, dst) in xin.chunks_exact_mut(in_rows * iwp).enumerate() {
+                let src = (c * ihp + in_r0) * iwp;
+                dst.copy_from_slice(&xp[src..src + in_rows * iwp]);
+            }
+            ConvShard {
+                sub: ConvLayer { ih: in_rows, iw: iwp, pad: 0, ..layer.clone() },
+                input: ShardInput::Owned(xin),
+                w0: 0,
+                w1: w_all,
+                b0: 0,
+                b1: layer.oc,
+                placement: (0..layer.oc).map(|o| ((o * oh + oh0) * ow, rows * ow)).collect(),
+            }
+        })
+        .collect()
+}
+
+fn pool_shards_slab(layer: &PoolLayer, want: usize) -> Vec<PoolShard> {
+    let (ih, iw) = (layer.ih, layer.iw);
+    let (oh, ow) = (layer.oh(), layer.ow());
+    let units = layer.ic.div_ceil(POOL_GRAIN).max(1);
+    let mut shards = Vec::new();
+    for (u0, u1) in balanced_chunks(units, want) {
+        let c0 = (u0 * POOL_GRAIN).min(layer.ic);
+        let c1 = (u1 * POOL_GRAIN).min(layer.ic);
+        if c0 < c1 {
+            shards.push(PoolShard {
+                sub: PoolLayer { ic: c1 - c0, ..layer.clone() },
+                input: ShardInput::Range(c0 * ih * iw, c1 * ih * iw),
+                placement: vec![(c0 * oh * ow, (c1 - c0) * oh * ow)],
+            });
+        }
+    }
+    shards
+}
+
+fn pool_shards_rowband(layer: &PoolLayer, x: &[i16], want: usize) -> Vec<PoolShard> {
+    let (oh, ow) = (layer.oh(), layer.ow());
+    rowband_specs(oh, want)
+        .into_iter()
+        .map(|(oy0, oy1)| {
+            let rows = oy1 - oy0;
+            let in_r0 = oy0 * layer.stride;
+            let in_rows = (rows - 1) * layer.stride + layer.size;
+            let mut xin = vec![0i16; layer.ic * in_rows * layer.iw];
+            for (c, dst) in xin.chunks_exact_mut(in_rows * layer.iw).enumerate() {
+                let src = (c * layer.ih + in_r0) * layer.iw;
+                dst.copy_from_slice(&x[src..src + in_rows * layer.iw]);
+            }
+            PoolShard {
+                sub: PoolLayer { ih: in_rows, ..layer.clone() },
+                input: ShardInput::Owned(xin),
+                placement: (0..layer.ic).map(|c| ((c * oh + oy0) * ow, rows * ow)).collect(),
+            }
+        })
+        .collect()
+}
+
+/// First-order shard cost for the `Auto` policy: compute from MACs at a
+/// calibrated ~2/3 utilization, DMA from tensor footprints over the bus
+/// width, combined with the executor's overlap `max`. Only the relative
+/// ranking between policies matters.
+fn conv_cost(macs: u64, in_elems: usize, w_elems: usize, out_elems: usize) -> u64 {
+    let comp = macs * 3 / (2 * crate::PEAK_MACS_PER_CYCLE);
+    let bytes = 2 * (in_elems + w_elems + out_elems) as u64;
+    comp.max(bytes / crate::mem::EXT_BYTES_PER_CYCLE as u64)
+}
+
+/// Makespan of round-robining `costs` over `cores` (the real shard
+/// assignment order).
+fn predicted_makespan(costs: &[u64], cores: usize) -> u64 {
+    let n = cores.max(1);
+    let mut load = vec![0u64; n];
+    for (i, c) in costs.iter().enumerate() {
+        load[i % n] += c;
+    }
+    load.into_iter().max().unwrap_or(0)
+}
+
+fn resolve_conv_policy(policy: ShardPolicy, layer: &ConvLayer, cores: usize) -> ShardPolicy {
+    if policy != ShardPolicy::Auto {
+        return policy;
+    }
+    let lg = layer.per_group();
+    let (oh, ow) = (layer.oh(), layer.ow());
+    let w_per_oc = lg.ic * layer.fh * layer.fw;
+    let oc_costs: Vec<u64> = octile_specs(layer, cores)
+        .iter()
+        .map(|&(_, oc0, oc1)| {
+            let oc = oc1 - oc0;
+            conv_cost(
+                (oc * w_per_oc * oh * ow) as u64,
+                lg.ic * layer.ihp() * layer.iwp(),
+                oc * w_per_oc,
+                oc * oh * ow,
+            )
+        })
+        .collect();
+    let rb_costs: Vec<u64> = rowband_specs(oh, cores)
+        .iter()
+        .map(|&(oh0, oh1)| {
+            let rows = oh1 - oh0;
+            let in_rows = (rows - 1) * layer.stride + layer.fh;
+            conv_cost(
+                (layer.oc * w_per_oc * rows * ow) as u64,
+                layer.ic * in_rows * layer.iwp(),
+                layer.oc * w_per_oc,
+                layer.oc * rows * ow,
+            )
+        })
+        .collect();
+    if predicted_makespan(&rb_costs, cores) < predicted_makespan(&oc_costs, cores) {
+        ShardPolicy::RowBand
+    } else {
+        ShardPolicy::OcTile
+    }
+}
+
+fn resolve_pool_policy(policy: ShardPolicy, layer: &PoolLayer, cores: usize) -> ShardPolicy {
+    match policy {
+        // slabs cannot fill the pool when there are fewer 16-channel
+        // units than cores; row bands always can in practice
+        ShardPolicy::Auto => {
+            if layer.ic.div_ceil(POOL_GRAIN) < cores {
+                ShardPolicy::RowBand
+            } else {
+                ShardPolicy::OcTile
+            }
+        }
+        p => p,
+    }
+}
+
+/// Run per-core worklists on the pool's cores (one host thread per
+/// busy core) and return the shard results in shard-index order.
+fn run_on_pool<W, R>(
+    pool: &mut CorePool,
+    assignments: Vec<Vec<(usize, W)>>,
+    n_shards: usize,
+    work: impl Fn(&mut Cpu, &W) -> Result<R, ExecError> + Sync,
+) -> Result<Vec<R>, ExecError>
+where
+    W: Send,
+    R: Send,
+{
+    let work = &work;
+    let mut slots: Vec<Option<R>> = (0..n_shards).map(|_| None).collect();
+    thread::scope(|s| -> Result<(), ExecError> {
+        let mut handles = Vec::new();
+        for (cpu, list) in pool.cpus.iter_mut().zip(assignments) {
+            if list.is_empty() {
+                continue;
+            }
+            handles.push(s.spawn(move || -> Result<Vec<(usize, R)>, ExecError> {
+                let mut done = Vec::with_capacity(list.len());
+                for (idx, w) in &list {
+                    done.push((*idx, work(cpu, w)?));
+                }
+                Ok(done)
+            }));
+        }
+        for h in handles {
+            for (idx, r) in h.join().expect("core thread panicked")? {
+                slots[idx] = Some(r);
+            }
+        }
+        Ok(())
+    })?;
+    Ok(slots.into_iter().map(|r| r.expect("shard not executed")).collect())
+}
+
+/// Round-robin shard indices over `cores` cores. Returns per-core lists
+/// of (shard index, shard).
+fn round_robin<W>(shards: Vec<W>, cores: usize) -> Vec<Vec<(usize, W)>> {
+    let mut lists: Vec<Vec<(usize, W)>> = (0..cores).map(|_| Vec::new()).collect();
+    for (i, s) in shards.into_iter().enumerate() {
+        lists[i % cores].push((i, s));
+    }
+    lists
+}
+
+/// The ONE shard-merge helper, shared by the conv and pool paths:
+/// accumulates metrics, scatters shard outputs through their placement
+/// runs, and prices per-core busy time under the bus model. The layer's
+/// latency is the makespan of the slowest core.
+fn merge_shards(
+    name: &str,
+    out_len: usize,
+    results: Vec<LayerResult>,
+    placements: &[Vec<(usize, usize)>],
+    core_of: &[usize],
+    cores: usize,
+    spec: RunSpec,
+) -> LayerResult {
+    let mode = spec.opts.mode;
+    let mut res = LayerResult { name: name.to_string(), ..Default::default() };
+    // only FullCycle produces shard outputs worth merging
+    let mut out = if mode == ExecMode::FullCycle { vec![0i16; out_len] } else { Vec::new() };
+    let mut segs: Vec<Vec<Segment>> = (0..cores).map(|_| Vec::new()).collect();
+    for (idx, r) in results.into_iter().enumerate() {
+        res.compute_cycles += r.compute_cycles;
+        res.dma_cycles += r.dma_cycles;
+        res.macs += r.macs;
+        res.io_in += r.io_in;
+        res.io_out += r.io_out;
+        res.stats = add_stats(&res.stats, &r.stats);
+        segs[core_of[idx]].push(Segment::of_layer(&r));
+        if !r.out.is_empty() {
+            let mut src = 0usize;
+            for &(dst, len) in &placements[idx] {
+                out[dst..dst + len].copy_from_slice(&r.out[src..src + len]);
+                src += len;
+            }
+        }
+    }
+    let acct = core_busy(&segs, spec.bus);
+    res.cycles = acct.busy.iter().copied().max().unwrap_or(0);
+    res.core_cycles = acct.busy;
+    if mode == ExecMode::FullCycle {
+        res.out = out;
+    }
+    res
+}
+
+/// Run a conv layer sharded across the pool. With one core this is
+/// exactly the single-core executor.
+pub(crate) fn run_conv_sharded(
+    pool: &mut CorePool,
+    layer: &ConvLayer,
+    x: &[i16],
+    w: &[i16],
+    b: &[i32],
+    spec: RunSpec,
+) -> Result<LayerResult, ExecError> {
+    let n = spec.opts.cores.min(pool.cores()).max(1);
+    if n == 1 {
+        return conv_layer(pool.cpu0(), layer, x, w, b, spec.opts);
+    }
+    let inner = ExecOptions { cores: 1, batch: 1, ..spec.opts };
+    let shards = match resolve_conv_policy(spec.shard, layer, n) {
+        ShardPolicy::RowBand => conv_shards_rowband(layer, x, n),
+        _ => conv_shards_octile(layer, n),
+    };
+    let n_shards = shards.len();
+    let placements: Vec<Vec<(usize, usize)>> =
+        shards.iter().map(|s| s.placement.clone()).collect();
+    let core_of: Vec<usize> = (0..n_shards).map(|i| i % n).collect();
+    let assignments = round_robin(shards, n);
+    let results = run_on_pool(pool, assignments, n_shards, |cpu, sh: &ConvShard| {
+        conv_layer(cpu, &sh.sub, sh.input.resolve(x), &w[sh.w0..sh.w1], &b[sh.b0..sh.b1], inner)
+    })?;
+    Ok(merge_shards(
+        layer.name,
+        layer.oc * layer.oh() * layer.ow(),
+        results,
+        &placements,
+        &core_of,
+        n,
+        spec,
+    ))
+}
+
+/// Run a pool layer sharded across the pool.
+pub(crate) fn run_pool_sharded(
+    pool: &mut CorePool,
+    layer: &PoolLayer,
+    x: &[i16],
+    spec: RunSpec,
+) -> Result<LayerResult, ExecError> {
+    let n = spec.opts.cores.min(pool.cores()).max(1);
+    if n == 1 {
+        return pool_layer(pool.cpu0(), layer, x, spec.opts);
+    }
+    let inner = ExecOptions { cores: 1, batch: 1, ..spec.opts };
+    let shards = match resolve_pool_policy(spec.shard, layer, n) {
+        ShardPolicy::RowBand => pool_shards_rowband(layer, x, n),
+        _ => pool_shards_slab(layer, n),
+    };
+    let n_shards = shards.len();
+    let placements: Vec<Vec<(usize, usize)>> =
+        shards.iter().map(|s| s.placement.clone()).collect();
+    let core_of: Vec<usize> = (0..n_shards).map(|i| i % n).collect();
+    let assignments = round_robin(shards, n);
+    let results = run_on_pool(pool, assignments, n_shards, |cpu, sh: &PoolShard| {
+        pool_layer(cpu, &sh.sub, sh.input.resolve(x), inner)
+    })?;
+    Ok(merge_shards(
+        layer.name,
+        layer.ic * layer.oh() * layer.ow(),
+        results,
+        &placements,
+        &core_of,
+        n,
+        spec,
+    ))
+}
+
+/// Result of a batched multi-core run.
+#[derive(Debug, Clone, Default)]
+pub struct BatchedResult {
+    pub name: String,
+    /// Per-frame network results, in input order.
+    pub frames: Vec<NetworkResult>,
+    /// Final activation per frame (empty vectors in analytic mode).
+    pub outputs: Vec<Vec<i16>>,
+    /// Occupied cycles per core under the run's bus model (includes
+    /// shared-bus wait cycles).
+    pub core_cycles: Vec<u64>,
+    /// Busy cycles per core at full private bandwidth — the useful-work
+    /// view. Equals `core_cycles` under a partitioned bus.
+    pub core_useful_cycles: Vec<u64>,
+    /// Which core ran each frame (parallel to `frames`).
+    pub frame_core: Vec<usize>,
+    /// External-bus model the batch was priced under.
+    pub bus: BusModel,
+}
+
+impl BatchedResult {
+    /// Batch latency: the slowest core's occupied cycles.
+    pub fn makespan_cycles(&self) -> u64 {
+        self.core_cycles.iter().copied().max().unwrap_or(0)
+    }
+
+    /// What the batch would cost on one core (which owns the full bus,
+    /// so this is the same under either bus model).
+    pub fn serial_cycles(&self) -> u64 {
+        self.frames.iter().map(|f| f.cycles()).sum()
+    }
+
+    /// Cycle-level speedup of the fan-out over a single core. Under a
+    /// shared bus the makespan includes contention wait, so this
+    /// degrades honestly instead of assuming partitioned bandwidth.
+    pub fn speedup(&self) -> f64 {
+        let mk = self.makespan_cycles();
+        if mk == 0 {
+            return 1.0;
+        }
+        self.serial_cycles() as f64 / mk as f64
+    }
+
+    /// Frames per second at the modeled clock.
+    pub fn throughput_fps(&self) -> f64 {
+        let mk = self.makespan_cycles();
+        if mk == 0 {
+            return 0.0;
+        }
+        self.frames.len() as f64 / (mk as f64 / crate::CLOCK_HZ as f64)
+    }
+
+    /// Per-core *useful* fraction of the makespan: private-bandwidth
+    /// busy cycles over the batch makespan. Shared-bus wait cycles are
+    /// not useful work, so DMA-bound shared runs report < 1.0 — never
+    /// above it.
+    pub fn core_utilization(&self) -> Vec<f64> {
+        let mk = self.makespan_cycles().max(1) as f64;
+        self.core_useful_cycles.iter().map(|&c| (c as f64 / mk).min(1.0)).collect()
+    }
+
+    /// Aggregate core activity over all frames (for the energy model).
+    pub fn stats(&self) -> crate::core::CoreStats {
+        let mut acc = crate::core::CoreStats::default();
+        for f in &self.frames {
+            acc = add_stats(&acc, &f.stats());
+        }
+        acc
+    }
+}
+
+/// Batched fan-out on `pool`. Shared by [`Engine::run_batched`] and the
+/// deprecated shim.
+pub(crate) fn run_batched_on(
+    pool: &mut CorePool,
+    name: &str,
+    layers: &[NetLayer],
+    inputs: &[Vec<i16>],
+    spec: RunSpec,
+) -> Result<BatchedResult, ExecError> {
+    let n = spec.opts.cores.min(pool.cores()).max(1);
+    let inner = ExecOptions { cores: 1, batch: 1, ..spec.opts };
+    let frames: Vec<&Vec<i16>> = inputs.iter().collect();
+    let n_frames = frames.len();
+    let core_of: Vec<usize> = (0..n_frames).map(|i| i % n).collect();
+    let assignments = round_robin(frames, n);
+    let results = run_on_pool(pool, assignments, n_frames, |cpu, x: &&Vec<i16>| {
+        let mut runner = SoloRunner { cpu, opts: inner };
+        walk_network(&mut runner, name, layers, x.as_slice(), spec.seed)
+    })?;
+
+    let mut segs: Vec<Vec<Segment>> = (0..n).map(|_| Vec::new()).collect();
+    let mut br = BatchedResult {
+        name: name.into(),
+        frame_core: core_of,
+        bus: spec.bus,
+        ..Default::default()
+    };
+    for (idx, f) in results.into_iter().enumerate() {
+        for l in &f.layers {
+            segs[br.frame_core[idx]].push(Segment::of_layer(l));
+        }
+        br.outputs.push(f.layers.last().map(|l| l.out.clone()).unwrap_or_default());
+        br.frames.push(f);
+    }
+    let acct = core_busy(&segs, spec.bus);
+    br.core_cycles = acct.busy;
+    br.core_useful_cycles = acct.useful;
+    Ok(br)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    fn tensors(l: &ConvLayer, seed: u64) -> (Vec<i16>, Vec<i16>, Vec<i32>) {
+        let mut rng = XorShift::new(seed);
+        (
+            rng.i16_vec(l.ic * l.ih * l.iw, -2000, 2000),
+            rng.i16_vec(l.oc * (l.ic / l.groups) * l.fh * l.fw, -256, 256),
+            rng.i32_vec(l.oc, -1000, 1000),
+        )
+    }
+
+    fn check_partition(l: &ConvLayer, shards: &[ConvShard]) {
+        let oc_rows: u64 = shards.iter().map(|s| s.sub.macs()).sum();
+        assert_eq!(oc_rows, l.macs(), "{}: shard MACs must tile the layer", l.name);
+        let mut marks = vec![false; l.oc * l.oh() * l.ow()];
+        for s in shards {
+            for &(dst, len) in &s.placement {
+                for m in &mut marks[dst..dst + len] {
+                    assert!(!*m, "overlapping shard output");
+                    *m = true;
+                }
+            }
+        }
+        assert!(marks.iter().all(|&m| m), "{}: uncovered outputs", l.name);
+    }
+
+    #[test]
+    fn octile_shards_partition_the_layer() {
+        for (l, want) in [
+            (ConvLayer::new("d", 8, 16, 16, 64, 3, 3, 1, 1, 1), 4),
+            (ConvLayer::new("g", 8, 13, 13, 32, 3, 3, 1, 1, 2), 4),
+            (ConvLayer::new("tiny", 4, 10, 10, 16, 3, 3, 1, 1, 1), 8),
+        ] {
+            check_partition(&l, &conv_shards_octile(&l, want));
+        }
+    }
+
+    #[test]
+    fn rowband_shards_partition_the_layer() {
+        for (l, want) in [
+            (ConvLayer::new("d", 8, 16, 16, 64, 3, 3, 1, 1, 1), 4),
+            (ConvLayer::new("g", 8, 13, 13, 32, 3, 3, 1, 1, 2), 4),
+            (ConvLayer::new("s2", 3, 23, 23, 16, 5, 5, 2, 2, 1), 3),
+            (ConvLayer::new("thin", 4, 6, 10, 16, 3, 3, 1, 1, 1), 8),
+        ] {
+            let x = vec![0i16; l.ic * l.ih * l.iw];
+            let shards = conv_shards_rowband(&l, &x, want);
+            check_partition(&l, &shards);
+            // every shard sees the full filter set and a row halo that
+            // fits the padded input
+            for s in &shards {
+                assert_eq!(s.w1 - s.w0, l.oc * (l.ic / l.groups) * l.fh * l.fw);
+                assert!(s.sub.ih <= l.ihp());
+                assert_eq!(s.sub.ow(), l.ow());
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_conv_matches_single_core_bitexact() {
+        let l = ConvLayer::new("mc", 8, 16, 16, 64, 3, 3, 1, 1, 1);
+        let (x, w, b) = tensors(&l, 3);
+        let mut solo = Cpu::new(1 << 22);
+        let base = conv_layer(&mut solo, &l, &x, &w, &b, ExecOptions::default()).unwrap();
+        for policy in [ShardPolicy::OcTile, ShardPolicy::RowBand, ShardPolicy::Auto] {
+            for cores in [2usize, 4] {
+                let mut engine =
+                    EngineConfig::new().cores(cores).shard(policy).ext_capacity(1 << 22).build();
+                let r = engine.run_conv_layer(&l, &x, &w, &b).unwrap();
+                assert_eq!(r.out, base.out, "{policy:?} {cores}-core output");
+                assert_eq!(r.macs, base.macs, "{policy:?} {cores}-core macs");
+                assert_eq!(r.core_cycles.len(), cores);
+                assert!(r.cycles > 0);
+                assert!(
+                    r.parallel_speedup() > 1.5,
+                    "{policy:?} {cores}-core speedup {}",
+                    r.parallel_speedup()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_grouped_conv_matches() {
+        let l = ConvLayer::new("mcg", 8, 13, 13, 32, 3, 3, 1, 1, 2);
+        let (x, w, b) = tensors(&l, 5);
+        let mut solo = Cpu::new(1 << 22);
+        let base = conv_layer(&mut solo, &l, &x, &w, &b, ExecOptions::default()).unwrap();
+        for policy in [ShardPolicy::OcTile, ShardPolicy::RowBand] {
+            let mut engine =
+                EngineConfig::new().cores(4).shard(policy).ext_capacity(1 << 22).build();
+            let r = engine.run_conv_layer(&l, &x, &w, &b).unwrap();
+            assert_eq!(r.out, base.out, "{policy:?}");
+            assert_eq!(r.macs, base.macs, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn sharded_pool_layer_matches() {
+        let l = PoolLayer { name: "mcp", ic: 48, ih: 13, iw: 13, size: 3, stride: 2 };
+        let mut rng = XorShift::new(9);
+        let x = rng.i16_vec(l.ic * l.ih * l.iw, -30000, 30000);
+        let mut solo = Cpu::new(1 << 22);
+        let base = pool_layer(&mut solo, &l, &x, ExecOptions::default()).unwrap();
+        for policy in [ShardPolicy::OcTile, ShardPolicy::RowBand, ShardPolicy::Auto] {
+            let mut engine =
+                EngineConfig::new().cores(3).shard(policy).ext_capacity(1 << 22).build();
+            let r = engine.run_pool_layer(&l, &x).unwrap();
+            assert_eq!(r.out, base.out, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn auto_policy_picks_rowband_for_shallow_input_layers() {
+        // VGG conv1_1-like: 3 input channels, huge spatial extent — the
+        // oc-tile policy replicates the whole input per core and goes
+        // DMA-bound; row bands divide it
+        let early = ConvLayer::new("c11", 3, 224, 224, 64, 3, 3, 1, 1, 1);
+        assert_eq!(resolve_conv_policy(ShardPolicy::Auto, &early, 4), ShardPolicy::RowBand);
+        // deep, spatially small layers keep the oc-tile policy
+        let deep = ConvLayer::new("c53", 512, 14, 14, 512, 3, 3, 1, 1, 1);
+        assert_eq!(resolve_conv_policy(ShardPolicy::Auto, &deep, 4), ShardPolicy::OcTile);
+        // explicit policies pass through untouched
+        assert_eq!(resolve_conv_policy(ShardPolicy::RowBand, &deep, 4), ShardPolicy::RowBand);
+    }
+
+    #[test]
+    fn shared_bus_never_beats_partitioned() {
+        // a DMA-heavy layer: tiny ic, large spatial output
+        let l = ConvLayer::new("dma", 2, 48, 48, 32, 3, 3, 1, 1, 1);
+        let (x, w, b) = tensors(&l, 7);
+        let run = |bus: BusModel| {
+            let mut engine = EngineConfig::new()
+                .cores(4)
+                .bus(bus)
+                .mode(ExecMode::TileAnalytic)
+                .ext_capacity(1 << 22)
+                .build();
+            engine.run_conv_layer(&l, &x, &w, &b).unwrap()
+        };
+        let part = run(BusModel::Partitioned);
+        let shared = run(BusModel::Shared);
+        assert!(
+            shared.cycles >= part.cycles,
+            "shared {} < partitioned {}",
+            shared.cycles,
+            part.cycles
+        );
+        // contention never changes what was computed
+        assert_eq!(shared.macs, part.macs);
+        assert_eq!(shared.io_in, part.io_in);
+        assert_eq!(shared.io_out, part.io_out);
+    }
+
+    #[test]
+    fn batched_frames_match_serial_runs() {
+        let layers = vec![
+            NetLayer::Conv(ConvLayer::new("c1", 4, 12, 12, 16, 3, 3, 1, 1, 1)),
+            NetLayer::Pool(PoolLayer { name: "p1", ic: 16, ih: 12, iw: 12, size: 2, stride: 2 }),
+            NetLayer::Conv(ConvLayer::new("c2", 16, 6, 6, 16, 3, 3, 1, 1, 1)),
+        ];
+        let mut rng = XorShift::new(11);
+        let inputs: Vec<Vec<i16>> =
+            (0..3).map(|_| rng.i16_vec(4 * 12 * 12, -1000, 1000)).collect();
+        let mut engine =
+            EngineConfig::new().cores(2).batch(3).seed(42).ext_capacity(1 << 22).build();
+        let br = engine.run_batched("mini", &layers, &inputs).unwrap();
+        assert_eq!(br.frames.len(), 3);
+        assert_eq!(br.outputs.len(), 3);
+        assert_eq!(br.frame_core, vec![0, 1, 0], "round-robin frame placement");
+        // every frame must equal its standalone single-core run
+        for (i, input) in inputs.iter().enumerate() {
+            let mut solo = EngineConfig::new().seed(42).ext_capacity(1 << 22).build();
+            let f = solo.run_network("mini", &layers, input).unwrap();
+            assert_eq!(br.outputs[i], f.layers.last().unwrap().out, "frame {i}");
+            assert_eq!(br.frames[i].macs(), f.macs(), "frame {i} macs");
+        }
+        assert!(br.speedup() > 1.0, "two cores must beat one on 3 frames");
+        // partitioned bus: occupied == useful
+        assert_eq!(br.core_cycles, br.core_useful_cycles);
+        for u in br.core_utilization() {
+            assert!(u <= 1.0, "util {u}");
+        }
+    }
+
+    #[test]
+    fn shared_bus_batched_reports_sane_utilization() {
+        let layers = vec![
+            NetLayer::Conv(ConvLayer::new("c1", 2, 24, 24, 16, 3, 3, 1, 1, 1)),
+            NetLayer::Conv(ConvLayer::new("c2", 16, 24, 24, 16, 3, 3, 1, 1, 1)),
+        ];
+        let inputs: Vec<Vec<i16>> = (0..4).map(|_| vec![0i16; 2 * 24 * 24]).collect();
+        let run = |bus: BusModel| {
+            let mut engine = EngineConfig::new()
+                .cores(4)
+                .batch(4)
+                .bus(bus)
+                .mode(ExecMode::TileAnalytic)
+                .ext_capacity(1 << 22)
+                .build();
+            engine.run_batched("duo", &layers, &inputs).unwrap()
+        };
+        let part = run(BusModel::Partitioned);
+        let shared = run(BusModel::Shared);
+        assert!(shared.makespan_cycles() >= part.makespan_cycles());
+        assert!(shared.speedup() <= part.speedup() + 1e-9);
+        for u in shared.core_utilization() {
+            assert!(u <= 1.0, "shared-bus per-core utilization {u} > 1");
+        }
+        // useful work is bus-independent
+        assert_eq!(shared.core_useful_cycles, part.core_useful_cycles);
+    }
+
+    #[test]
+    fn engine_network_is_deterministic_across_repeats() {
+        let layers = vec![
+            NetLayer::Conv(ConvLayer::new("c1", 8, 16, 16, 48, 3, 3, 1, 1, 1)),
+        ];
+        let mut rng = XorShift::new(3);
+        let input = rng.i16_vec(8 * 16 * 16, -500, 500);
+        let mut engine =
+            EngineConfig::new().cores(4).shard(ShardPolicy::RowBand).ext_capacity(1 << 22).build();
+        let r1 = engine.run_network("rep", &layers, &input).unwrap();
+        let r2 = engine.run_network("rep", &layers, &input).unwrap();
+        assert_eq!(r1.layers[0].out, r2.layers[0].out);
+        assert_eq!(r1.cycles(), r2.cycles());
+        assert_eq!(r1.layers[0].core_cycles, r2.layers[0].core_cycles);
+    }
+}

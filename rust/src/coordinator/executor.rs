@@ -1,4 +1,7 @@
-//! Layer executor: Fig. 2 scheduling of conv/pool layers onto the core.
+//! Layer executor: Fig. 2 scheduling of conv/pool layers onto **one**
+//! core. The crate-internal `conv_layer` / `pool_layer` are the
+//! primitives everything funnels into; the public free functions here
+//! are deprecated 0.2 shims — use [`crate::coordinator::Engine`].
 
 use std::collections::HashMap;
 
@@ -30,13 +33,13 @@ pub struct ExecOptions {
     pub mode: ExecMode,
     /// Precision gating (16 = off, 8 = the paper's gated AlexNet run).
     pub gate_bits: u8,
-    /// Number of ConvAix cores the multi-core scheduler may shard a
-    /// layer across (1 = the paper's single-core latency setup). The
-    /// single-layer executors in this module ignore it; it is consumed
-    /// by [`crate::coordinator::scheduler`].
+    /// Number of ConvAix cores a layer may be sharded across (1 = the
+    /// paper's single-core latency setup). The single-layer executors
+    /// in this module ignore it; it is consumed by
+    /// [`crate::coordinator::engine`].
     pub cores: usize,
-    /// Frames per batched `run_batched` call (1 = latency mode).
-    /// Ignored by the single-layer executors.
+    /// Frames per batched run (1 = latency mode). Ignored by the
+    /// single-layer executors.
     pub batch: usize,
 }
 
@@ -96,7 +99,7 @@ pub(crate) fn dma_cycles(bytes: u64, requests: u64) -> u64 {
 /// Run a (possibly grouped) conv layer. `x`: (ic, ih, iw), `w`:
 /// (oc, ic/groups, fh, fw), `b`: (oc,). Returns metrics and (in
 /// FullCycle mode) the output tensor (oc, oh, ow).
-pub fn run_conv_layer(
+pub(crate) fn conv_layer(
     cpu: &mut Cpu,
     layer: &ConvLayer,
     x: &[i16],
@@ -337,7 +340,7 @@ fn stage_filters(cpu: &mut Cpu, plan: &ConvPlan, w: &[i16], b: &[i32], tile: usi
 }
 
 /// Run a max-pool layer. Input `x`: (ic, ih, iw). Output (ic, oh, ow).
-pub fn run_pool_layer(
+pub(crate) fn pool_layer(
     cpu: &mut Cpu,
     layer: &PoolLayer,
     x: &[i16],
@@ -418,9 +421,44 @@ pub enum NetLayer {
     Pool(PoolLayer),
 }
 
-/// Run a sequence of layers, threading activations; weights/biases are
-/// generated deterministically (xorshift) per layer. Returns per-layer
-/// results. In analytic mode activations are not threaded (zeros).
+/// Deprecated 0.2 shim: run one conv layer on one core.
+#[deprecated(
+    since = "0.3.0",
+    note = "build an engine: `EngineConfig::new().build()`, then `engine.run_conv_layer(...)`"
+)]
+pub fn run_conv_layer(
+    cpu: &mut Cpu,
+    layer: &ConvLayer,
+    x: &[i16],
+    w: &[i16],
+    b: &[i32],
+    opts: ExecOptions,
+) -> Result<LayerResult, ExecError> {
+    conv_layer(cpu, layer, x, w, b, opts)
+}
+
+/// Deprecated 0.2 shim: run one max-pool layer on one core.
+#[deprecated(
+    since = "0.3.0",
+    note = "build an engine: `EngineConfig::new().build()`, then `engine.run_pool_layer(...)`"
+)]
+pub fn run_pool_layer(
+    cpu: &mut Cpu,
+    layer: &PoolLayer,
+    x: &[i16],
+    opts: ExecOptions,
+) -> Result<LayerResult, ExecError> {
+    pool_layer(cpu, layer, x, opts)
+}
+
+/// Deprecated 0.2 shim: run a layer sequence on one core, threading
+/// activations, weights drawn per layer from one xorshift stream. The
+/// implementation is the engine's single network walk — this wrapper
+/// only binds it to a caller-owned [`Cpu`].
+#[deprecated(
+    since = "0.3.0",
+    note = "build an engine: `EngineConfig::new().seed(seed).build()`, then `engine.run_network(...)`"
+)]
 pub fn run_network(
     cpu: &mut Cpu,
     name: &str,
@@ -429,40 +467,8 @@ pub fn run_network(
     opts: ExecOptions,
     seed: u64,
 ) -> Result<NetworkResult, ExecError> {
-    let mut rng = crate::util::XorShift::new(seed);
-    let mut act = input.to_vec();
-    let mut net = NetworkResult { name: name.into(), ..Default::default() };
-    for layer in layers {
-        match layer {
-            NetLayer::Conv(l) => {
-                let w = rng.i16_vec(l.oc * (l.ic / l.groups) * l.fh * l.fw, -128, 128);
-                let b = rng.i32_vec(l.oc, -1000, 1000);
-                let x = if act.len() == l.ic * l.ih * l.iw {
-                    act.clone()
-                } else {
-                    vec![0i16; l.ic * l.ih * l.iw]
-                };
-                let r = run_conv_layer(cpu, l, &x, &w, &b, opts)?;
-                if !r.out.is_empty() {
-                    act = r.out.clone();
-                }
-                net.layers.push(r);
-            }
-            NetLayer::Pool(l) => {
-                let x = if act.len() == l.ic * l.ih * l.iw {
-                    act.clone()
-                } else {
-                    vec![0i16; l.ic * l.ih * l.iw]
-                };
-                let r = run_pool_layer(cpu, l, &x, opts)?;
-                if !r.out.is_empty() {
-                    act = r.out.clone();
-                }
-                net.layers.push(r);
-            }
-        }
-    }
-    Ok(net)
+    let mut runner = super::engine::SoloRunner { cpu, opts };
+    super::engine::walk_network(&mut runner, name, layers, input, seed)
 }
 
 #[cfg(test)]
@@ -478,7 +484,7 @@ mod tests {
         let w = rng.i16_vec(l.oc * (l.ic / l.groups) * l.fh * l.fw, -256, 256);
         let b = rng.i32_vec(l.oc, -2000, 2000);
         let mut cpu = Cpu::new(1 << 20);
-        let r = run_conv_layer(&mut cpu, l, &x, &w, &b, ExecOptions::default()).unwrap();
+        let r = conv_layer(&mut cpu, l, &x, &w, &b, ExecOptions::default()).unwrap();
         let expect = refconv::conv2d_grouped(&x, &w, &b, l, RoundMode::HalfUp, 16);
         assert_eq!(r.out.len(), expect.len(), "{}", l.name);
         for (i, (got, want)) in r.out.iter().zip(&expect).enumerate() {
@@ -562,9 +568,9 @@ mod tests {
         let w = rng.i16_vec(l.oc * l.ic * 9, -100, 100);
         let b = rng.i32_vec(l.oc, -100, 100);
         let mut cpu = Cpu::new(1 << 20);
-        let full = run_conv_layer(&mut cpu, &l, &x, &w, &b, ExecOptions::default()).unwrap();
+        let full = conv_layer(&mut cpu, &l, &x, &w, &b, ExecOptions::default()).unwrap();
         let mut cpu2 = Cpu::new(1 << 20);
-        let fast = run_conv_layer(
+        let fast = conv_layer(
             &mut cpu2,
             &l,
             &x,
@@ -584,7 +590,7 @@ mod tests {
         let mut rng = XorShift::new(11);
         let x = rng.i16_vec(l.ic * l.ih * l.iw, -30000, 30000);
         let mut cpu = Cpu::new(1 << 20);
-        let r = run_pool_layer(&mut cpu, &l, &x, ExecOptions::default()).unwrap();
+        let r = pool_layer(&mut cpu, &l, &x, ExecOptions::default()).unwrap();
         let expect = refconv::maxpool2d(&x, l.ic, l.ih, l.iw, l.size, l.stride);
         assert_eq!(r.out, expect);
     }
@@ -623,7 +629,7 @@ mod tests {
         let b = rng.i32_vec(l.oc, -500, 500);
 
         let mut cpu = Cpu::new(1 << 22);
-        let total = run_conv_layer(&mut cpu, &l, &x, &w, &b, ExecOptions::default()).unwrap();
+        let total = conv_layer(&mut cpu, &l, &x, &w, &b, ExecOptions::default()).unwrap();
         assert_eq!(total.macs, l.macs(), "grouped MACs must cover the whole layer");
         assert_eq!(total.out.len(), l.oc * l.oh() * l.ow());
 
@@ -636,7 +642,7 @@ mod tests {
             let wg = &w[gi * ocg * icg * l.fh * l.fw..(gi + 1) * ocg * icg * l.fh * l.fw];
             let bg = &b[gi * ocg..(gi + 1) * ocg];
             let mut c = Cpu::new(1 << 22);
-            let r = run_conv_layer(&mut c, &lg, xg, wg, bg, ExecOptions::default()).unwrap();
+            let r = conv_layer(&mut c, &lg, xg, wg, bg, ExecOptions::default()).unwrap();
             assert_eq!(
                 r.out,
                 total.out[gi * ocg * ohw..(gi + 1) * ocg * ohw],
@@ -662,7 +668,7 @@ mod tests {
         let b = rng.i32_vec(16, -100, 100);
         let mut cpu = Cpu::new(1 << 20);
         let opts8 = ExecOptions { mode: ExecMode::FullCycle, gate_bits: 8, ..Default::default() };
-        let r8 = run_conv_layer(&mut cpu, &l, &x, &w, &b, opts8).unwrap();
+        let r8 = conv_layer(&mut cpu, &l, &x, &w, &b, opts8).unwrap();
         let expect = refconv::conv2d_grouped(&x, &w, &b, &l, RoundMode::HalfUp, 8);
         assert_eq!(r8.out, expect);
         assert!(r8.stats.mac_ops_gated8 > 0);

@@ -30,13 +30,16 @@ pub struct LayerResult {
 
 impl LayerResult {
     /// MAC utilization per the paper's definition (Table II fn. e):
-    /// ideal processing time over actual.
+    /// ideal processing time over actual, **per core**. Sharded layers
+    /// spend `cores × makespan` core-cycles, so the denominator scales
+    /// with [`LayerResult::parallel_cores`] — a 4-core makespan can
+    /// never report above-peak utilization.
     pub fn utilization(&self) -> f64 {
         if self.cycles == 0 {
             return 0.0;
         }
         let ideal = self.macs as f64 / crate::PEAK_MACS_PER_CYCLE as f64;
-        ideal / self.cycles as f64
+        ideal / (self.cycles as f64 * self.parallel_cores() as f64)
     }
 
     pub fn time_ms(&self) -> f64 {
@@ -100,14 +103,15 @@ impl NetworkResult {
     pub fn time_ms(&self) -> f64 {
         self.cycles() as f64 / crate::CLOCK_HZ as f64 * 1e3
     }
-    /// Network MAC utilization (conv layers carry all MACs).
+    /// Network MAC utilization (conv layers carry all MACs), per core:
+    /// sharded layers charge `cores × makespan` core-cycles.
     pub fn utilization(&self) -> f64 {
         let ideal = self.macs() as f64 / crate::PEAK_MACS_PER_CYCLE as f64;
         let actual: u64 = self
             .layers
             .iter()
             .filter(|l| l.macs > 0)
-            .map(|l| l.cycles)
+            .map(|l| l.cycles * l.parallel_cores() as u64)
             .sum();
         if actual == 0 {
             0.0
@@ -180,6 +184,22 @@ mod tests {
         };
         assert!((r.utilization() - 0.5).abs() < 1e-9);
         assert!((r.gops() - crate::PEAK_GOPS * 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sharded_utilization_divides_by_cores() {
+        // 4 cores × 1000-cycle makespan moving 4000 ideal single-core
+        // cycles of MACs → exactly 1.0 per-core utilization, not 4.0
+        let r = LayerResult {
+            macs: 192 * 4000,
+            cycles: 1000,
+            core_cycles: vec![1000, 980, 990, 1000],
+            ..Default::default()
+        };
+        assert!((r.utilization() - 1.0).abs() < 1e-9);
+        let mut n = NetworkResult { name: "n".into(), ..Default::default() };
+        n.layers.push(r);
+        assert!((n.utilization() - 1.0).abs() < 1e-9);
     }
 
     #[test]

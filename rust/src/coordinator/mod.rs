@@ -9,18 +9,28 @@
 //! and the *bytes* through the off-chip I/O counters), (b) presets the
 //! task ABI registers, (c) runs the generated kernels on the
 //! cycle-accurate core, and (d) aggregates metrics.
+//!
+//! The public entry point is the [`engine`] module: build an [`Engine`]
+//! from an [`EngineConfig`] (cores, batch, [`ShardPolicy`],
+//! [`BusModel`], mode, seed) and call `run_layer` / `run_network` /
+//! `run_batched`. One network walk serves every mode; the multi-core
+//! pool shards layers by output-channel tiles or output-row bands and
+//! prices external bandwidth per the [`bus`] contention model. The 0.2
+//! free functions in [`executor`] / [`scheduler`] are deprecated shims.
 
-//! The multi-core extension lives in [`scheduler`]: a [`CorePool`] of
-//! cycle simulators, output-channel tile sharding within a layer, and
-//! frame-level batching — the throughput-serving mode the paper's
-//! batch-1 setup cannot express.
-
+pub mod bus;
+pub mod engine;
 pub mod executor;
 pub mod metrics;
 pub mod scheduler;
 
-pub use executor::{run_conv_layer, run_network, run_pool_layer, ExecMode, ExecOptions, NetLayer};
+pub use bus::BusModel;
+pub use engine::{BatchedResult, CorePool, Engine, EngineConfig, ShardPolicy};
+pub use executor::{ExecMode, ExecOptions, NetLayer};
 pub use metrics::{LayerResult, NetworkResult};
-pub use scheduler::{
-    run_batched, run_conv_layer_mc, run_network_mc, run_pool_layer_mc, BatchedResult, CorePool,
-};
+
+// 0.2 compatibility re-exports (deprecated shims, kept one release).
+#[allow(deprecated)]
+pub use executor::{run_conv_layer, run_network, run_pool_layer};
+#[allow(deprecated)]
+pub use scheduler::{run_batched, run_conv_layer_mc, run_network_mc, run_pool_layer_mc};

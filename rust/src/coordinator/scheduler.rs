@@ -1,204 +1,35 @@
-//! Multi-core, batched inference coordinator.
+//! Deprecated 0.2 multi-core free-function API.
 //!
-//! The paper targets batch-1, single-core latency (Sec. III); serving
-//! heavy traffic instead wants **throughput**: several ConvAix cores in
-//! one chip, each with its private DM/PM/line buffer and external-bus
-//! port (the partitioned-multi-array organization of Shen et al.,
-//! FPGA'17 — resource partitioning beats one monolithic array).
-//!
-//! Two parallelism axes are offered, both deterministic:
-//!
-//! * **Layer sharding** ([`run_conv_layer_mc`] / [`run_pool_layer_mc`] /
-//!   [`run_network_mc`]): one frame, each layer's output channels split
-//!   into tile-aligned contiguous shards, one sub-layer per shard,
-//!   round-robin over the core pool. Outputs and MAC counts are
-//!   bit-identical to the single-core path — every output channel is
-//!   produced by exactly one core running exactly the kernel the
-//!   single-core executor would run for that tile range. Layer latency
-//!   is the **makespan** (max per-core busy cycles).
-//! * **Frame batching** ([`run_batched`]): independent frames fanned out
-//!   over the cores, each core running whole networks back to back —
-//!   the highest-throughput mode since it needs no intra-layer
-//!   synchronization at all.
-//!
-//! Simulation itself runs on real host threads (`std::thread::scope`),
-//! so wall-clock speeds up alongside the modeled cycles
-//! (`benches/multicore.rs` sweeps it).
-//!
-//! Modeling assumption: cores are fully partitioned — no shared
-//! external-bus contention between them (each shard still pays the full
-//! analytic DMA model for its own traffic, see `executor::dma_cycles`).
+//! The multi-core machinery lives in [`super::engine`] now: one network
+//! walk, one shard-merge helper, pluggable [`ShardPolicy`] /
+//! [`BusModel`](super::bus::BusModel). These shims keep the 0.2
+//! signatures alive for one release with the seed semantics (oc-tile
+//! sharding, partitioned bus) so downstream code and the multicore
+//! determinism contract tests keep compiling unchanged. New code must
+//! construct an [`Engine`](super::engine::Engine); the CI deny-list
+//! (`tools/check-deprecated.sh`) enforces that outside this module.
 
-use std::thread;
-
-use crate::codegen::layout;
-use crate::core::Cpu;
 use crate::model::{ConvLayer, PoolLayer};
 
-use super::executor::{
-    run_conv_layer, run_network, run_pool_layer, ExecError, ExecMode, ExecOptions, NetLayer,
-};
-use super::metrics::{add_stats, LayerResult, NetworkResult};
+use super::bus::BusModel;
+use super::engine::{self, RunSpec, ShardPolicy};
+use super::executor::{ExecError, ExecOptions, NetLayer};
+use super::metrics::{LayerResult, NetworkResult};
 
-/// A pool of independent ConvAix cores (one cycle simulator each).
-pub struct CorePool {
-    cpus: Vec<Cpu>,
+pub use super::engine::{BatchedResult, CorePool};
+
+/// The seed scheduler's fixed policies: oc-tile shards on a fully
+/// partitioned bus.
+fn seed_spec(opts: ExecOptions, seed: u64) -> RunSpec {
+    RunSpec { opts, shard: ShardPolicy::OcTile, bus: BusModel::Partitioned, seed }
 }
 
-impl CorePool {
-    /// Build a pool of `cores` cores (min 1), each with its own
-    /// external-memory model of `ext_capacity` bytes.
-    pub fn new(cores: usize, ext_capacity: usize) -> Self {
-        let cores = cores.max(1);
-        Self { cpus: (0..cores).map(|_| Cpu::new(ext_capacity)).collect() }
-    }
-
-    pub fn cores(&self) -> usize {
-        self.cpus.len()
-    }
-
-    /// Core 0 — the single-core fallback path.
-    pub fn cpu0(&mut self) -> &mut Cpu {
-        &mut self.cpus[0]
-    }
-}
-
-/// One unit of sharded conv work: a dense sub-layer covering a
-/// contiguous output-channel range (of one group, for grouped layers),
-/// plus the element ranges it reads/writes in the full tensors.
-struct ConvShard {
-    sub: ConvLayer,
-    x0: usize,
-    x1: usize,
-    w0: usize,
-    w1: usize,
-    b0: usize,
-    b1: usize,
-    out0: usize,
-    out_len: usize,
-}
-
-/// Split `layer` into at most `want`-ish shards at output-channel tile
-/// granularity. Grouped layers shard within each group (groups never
-/// mix input slices). Deterministic: depends only on (layer, want).
-fn conv_shards(layer: &ConvLayer, want: usize) -> Vec<ConvShard> {
-    let g = layer.groups;
-    let lg = layer.per_group();
-    let (icg, ocg) = (lg.ic, lg.oc);
-    let ohw = layer.oh() * layer.ow();
-    // Tile-align chunks to the planner's oc grain so shards don't add
-    // padding lanes the single-core schedule wouldn't have.
-    let grain = layout::plan(&lg).map(|p| p.variant.ocs()).unwrap_or(16);
-    let units = ocg.div_ceil(grain).max(1);
-    let k = want.div_ceil(g).max(1).min(units);
-    let (base, extra) = (units / k, units % k);
-
-    let mut shards = Vec::with_capacity(g * k);
-    for gi in 0..g {
-        let mut u0 = 0usize;
-        for ci in 0..k {
-            let len_u = base + usize::from(ci < extra);
-            let oc0 = (u0 * grain).min(ocg);
-            let oc1 = ((u0 + len_u) * grain).min(ocg);
-            u0 += len_u;
-            if oc0 >= oc1 {
-                continue;
-            }
-            let oc_abs = gi * ocg + oc0;
-            let sub = ConvLayer { ic: icg, oc: oc1 - oc0, groups: 1, ..layer.clone() };
-            shards.push(ConvShard {
-                sub,
-                x0: gi * icg * layer.ih * layer.iw,
-                x1: (gi + 1) * icg * layer.ih * layer.iw,
-                w0: oc_abs * icg * layer.fh * layer.fw,
-                w1: (oc_abs + (oc1 - oc0)) * icg * layer.fh * layer.fw,
-                b0: oc_abs,
-                b1: oc_abs + (oc1 - oc0),
-                out0: oc_abs * ohw,
-                out_len: (oc1 - oc0) * ohw,
-            });
-        }
-    }
-    shards
-}
-
-/// One unit of sharded pool work: a contiguous 16-channel-aligned slab.
-struct PoolShard {
-    sub: PoolLayer,
-    c0: usize,
-    c1: usize,
-}
-
-fn pool_shards(layer: &PoolLayer, want: usize) -> Vec<PoolShard> {
-    const GRAIN: usize = 16; // SFU pool tile: 16 channels per vector
-    let units = layer.ic.div_ceil(GRAIN).max(1);
-    let k = want.max(1).min(units);
-    let (base, extra) = (units / k, units % k);
-    let mut shards = Vec::with_capacity(k);
-    let mut u0 = 0usize;
-    for ci in 0..k {
-        let len_u = base + usize::from(ci < extra);
-        let c0 = (u0 * GRAIN).min(layer.ic);
-        let c1 = ((u0 + len_u) * GRAIN).min(layer.ic);
-        u0 += len_u;
-        if c0 >= c1 {
-            continue;
-        }
-        shards.push(PoolShard { sub: PoolLayer { ic: c1 - c0, ..layer.clone() }, c0, c1 });
-    }
-    shards
-}
-
-/// Run per-core worklists on the pool's cores (one host thread per
-/// busy core) and return the shard results in shard-index order.
-fn run_on_pool<W, R>(
-    pool: &mut CorePool,
-    assignments: Vec<Vec<(usize, W)>>,
-    n_shards: usize,
-    work: impl Fn(&mut Cpu, &W) -> Result<R, ExecError> + Sync,
-) -> Result<Vec<R>, ExecError>
-where
-    W: Send,
-    R: Send,
-{
-    let work = &work;
-    let mut slots: Vec<Option<R>> = (0..n_shards).map(|_| None).collect();
-    thread::scope(|s| -> Result<(), ExecError> {
-        let mut handles = Vec::new();
-        for (cpu, list) in pool.cpus.iter_mut().zip(assignments) {
-            if list.is_empty() {
-                continue;
-            }
-            handles.push(s.spawn(move || -> Result<Vec<(usize, R)>, ExecError> {
-                let mut done = Vec::with_capacity(list.len());
-                for (idx, w) in &list {
-                    done.push((*idx, work(cpu, w)?));
-                }
-                Ok(done)
-            }));
-        }
-        for h in handles {
-            for (idx, r) in h.join().expect("core thread panicked")? {
-                slots[idx] = Some(r);
-            }
-        }
-        Ok(())
-    })?;
-    Ok(slots.into_iter().map(|r| r.expect("shard not executed")).collect())
-}
-
-/// Round-robin shard indices over `cores` cores. Returns per-core lists
-/// of (shard index, shard).
-fn round_robin<W>(shards: Vec<W>, cores: usize) -> Vec<Vec<(usize, W)>> {
-    let mut lists: Vec<Vec<(usize, W)>> = (0..cores).map(|_| Vec::new()).collect();
-    for (i, s) in shards.into_iter().enumerate() {
-        lists[i % cores].push((i, s));
-    }
-    lists
-}
-
-/// Run a conv layer sharded across the pool. With `opts.cores <= 1`
-/// (or a single-core pool) this is exactly [`run_conv_layer`].
+/// Deprecated 0.2 shim: conv layer sharded across the pool (oc-tile,
+/// partitioned bus).
+#[deprecated(
+    since = "0.3.0",
+    note = "build an engine: `EngineConfig::new().cores(n).build()`, then `engine.run_conv_layer(...)`"
+)]
 pub fn run_conv_layer_mc(
     pool: &mut CorePool,
     layer: &ConvLayer,
@@ -207,104 +38,31 @@ pub fn run_conv_layer_mc(
     b: &[i32],
     opts: ExecOptions,
 ) -> Result<LayerResult, ExecError> {
-    let n = opts.cores.min(pool.cores()).max(1);
-    if n == 1 {
-        return run_conv_layer(pool.cpu0(), layer, x, w, b, opts);
-    }
-    let inner = ExecOptions { cores: 1, batch: 1, ..opts };
-    let shards = conv_shards(layer, n);
-    let n_shards = shards.len();
-    // shard descriptors for the merge, in shard-index order
-    let descs: Vec<(usize, usize)> = shards.iter().map(|s| (s.out0, s.out_len)).collect();
-    let core_of: Vec<usize> = (0..n_shards).map(|i| i % n).collect();
-    let assignments = round_robin(shards, n);
-    let results = run_on_pool(pool, assignments, n_shards, |cpu, sh: &ConvShard| {
-        run_conv_layer(cpu, &sh.sub, &x[sh.x0..sh.x1], &w[sh.w0..sh.w1], &b[sh.b0..sh.b1], inner)
-    })?;
-
-    let ohw = layer.oh() * layer.ow();
-    let mut res = LayerResult { name: layer.name.to_string(), ..Default::default() };
-    // only FullCycle produces shard outputs worth merging
-    let mut out = if opts.mode == ExecMode::FullCycle {
-        vec![0i16; layer.oc * ohw]
-    } else {
-        Vec::new()
-    };
-    let mut core_cycles = vec![0u64; n];
-    for (idx, r) in results.into_iter().enumerate() {
-        let (out0, out_len) = descs[idx];
-        res.compute_cycles += r.compute_cycles;
-        res.dma_cycles += r.dma_cycles;
-        res.macs += r.macs;
-        res.io_in += r.io_in;
-        res.io_out += r.io_out;
-        res.stats = add_stats(&res.stats, &r.stats);
-        core_cycles[core_of[idx]] += r.cycles;
-        if !r.out.is_empty() {
-            out[out0..out0 + out_len].copy_from_slice(&r.out);
-        }
-    }
-    res.cycles = core_cycles.iter().copied().max().unwrap_or(0);
-    res.core_cycles = core_cycles;
-    if opts.mode == ExecMode::FullCycle {
-        res.out = out;
-    }
-    Ok(res)
+    engine::run_conv_sharded(pool, layer, x, w, b, seed_spec(opts, 0))
 }
 
-/// Run a pool layer sharded across the pool (16-channel slabs).
+/// Deprecated 0.2 shim: pool layer sharded across the pool (16-channel
+/// slabs, partitioned bus).
+#[deprecated(
+    since = "0.3.0",
+    note = "build an engine: `EngineConfig::new().cores(n).build()`, then `engine.run_pool_layer(...)`"
+)]
 pub fn run_pool_layer_mc(
     pool: &mut CorePool,
     layer: &PoolLayer,
     x: &[i16],
     opts: ExecOptions,
 ) -> Result<LayerResult, ExecError> {
-    let n = opts.cores.min(pool.cores()).max(1);
-    if n == 1 {
-        return run_pool_layer(pool.cpu0(), layer, x, opts);
-    }
-    let inner = ExecOptions { cores: 1, batch: 1, ..opts };
-    let (ih, iw) = (layer.ih, layer.iw);
-    let (oh, ow) = (layer.oh(), layer.ow());
-    let shards = pool_shards(layer, n);
-    let n_shards = shards.len();
-    let descs: Vec<(usize, usize)> = shards.iter().map(|s| (s.c0, s.c1)).collect();
-    let core_of: Vec<usize> = (0..n_shards).map(|i| i % n).collect();
-    let assignments = round_robin(shards, n);
-    let results = run_on_pool(pool, assignments, n_shards, |cpu, sh: &PoolShard| {
-        run_pool_layer(cpu, &sh.sub, &x[sh.c0 * ih * iw..sh.c1 * ih * iw], inner)
-    })?;
-
-    let mut res = LayerResult { name: layer.name.to_string(), ..Default::default() };
-    let mut out = if opts.mode == ExecMode::FullCycle {
-        vec![0i16; layer.ic * oh * ow]
-    } else {
-        Vec::new()
-    };
-    let mut core_cycles = vec![0u64; n];
-    for (idx, r) in results.into_iter().enumerate() {
-        let (c0, c1) = descs[idx];
-        res.compute_cycles += r.compute_cycles;
-        res.dma_cycles += r.dma_cycles;
-        res.io_in += r.io_in;
-        res.io_out += r.io_out;
-        res.stats = add_stats(&res.stats, &r.stats);
-        core_cycles[core_of[idx]] += r.cycles;
-        if !r.out.is_empty() {
-            out[c0 * oh * ow..c1 * oh * ow].copy_from_slice(&r.out);
-        }
-    }
-    res.cycles = core_cycles.iter().copied().max().unwrap_or(0);
-    res.core_cycles = core_cycles;
-    if opts.mode == ExecMode::FullCycle {
-        res.out = out;
-    }
-    Ok(res)
+    engine::run_pool_sharded(pool, layer, x, seed_spec(opts, 0))
 }
 
-/// Multi-core [`run_network`]: one frame, every layer sharded across
-/// the pool, activations threaded exactly like the single-core path
-/// (identical xorshift weight draws, so outputs are bit-identical).
+/// Deprecated 0.2 shim: multi-core network run (oc-tile, partitioned
+/// bus). Delegates to the engine's single network walk, so xorshift
+/// draws stay bit-identical to every other path.
+#[deprecated(
+    since = "0.3.0",
+    note = "build an engine: `EngineConfig::new().cores(n).seed(seed).build()`, then `engine.run_network(...)`"
+)]
 pub fn run_network_mc(
     pool: &mut CorePool,
     name: &str,
@@ -313,106 +71,15 @@ pub fn run_network_mc(
     opts: ExecOptions,
     seed: u64,
 ) -> Result<NetworkResult, ExecError> {
-    let mut rng = crate::util::XorShift::new(seed);
-    let mut act = input.to_vec();
-    let mut net = NetworkResult { name: name.into(), ..Default::default() };
-    for layer in layers {
-        match layer {
-            NetLayer::Conv(l) => {
-                let w = rng.i16_vec(l.oc * (l.ic / l.groups) * l.fh * l.fw, -128, 128);
-                let b = rng.i32_vec(l.oc, -1000, 1000);
-                let x = if act.len() == l.ic * l.ih * l.iw {
-                    act.clone()
-                } else {
-                    vec![0i16; l.ic * l.ih * l.iw]
-                };
-                let r = run_conv_layer_mc(pool, l, &x, &w, &b, opts)?;
-                if !r.out.is_empty() {
-                    act = r.out.clone();
-                }
-                net.layers.push(r);
-            }
-            NetLayer::Pool(l) => {
-                let x = if act.len() == l.ic * l.ih * l.iw {
-                    act.clone()
-                } else {
-                    vec![0i16; l.ic * l.ih * l.iw]
-                };
-                let r = run_pool_layer_mc(pool, l, &x, opts)?;
-                if !r.out.is_empty() {
-                    act = r.out.clone();
-                }
-                net.layers.push(r);
-            }
-        }
-    }
-    Ok(net)
+    engine::run_network_on(pool, name, layers, input, seed_spec(opts, seed))
 }
 
-/// Result of a batched multi-core run.
-#[derive(Debug, Clone, Default)]
-pub struct BatchedResult {
-    pub name: String,
-    /// Per-frame network results, in input order.
-    pub frames: Vec<NetworkResult>,
-    /// Final activation per frame (empty vectors in analytic mode).
-    pub outputs: Vec<Vec<i16>>,
-    /// Busy cycles per core.
-    pub core_cycles: Vec<u64>,
-    /// Which core ran each frame (parallel to `frames`).
-    pub frame_core: Vec<usize>,
-}
-
-impl BatchedResult {
-    /// Batch latency: the slowest core's busy cycles.
-    pub fn makespan_cycles(&self) -> u64 {
-        self.core_cycles.iter().copied().max().unwrap_or(0)
-    }
-
-    /// What the batch would cost on one core.
-    pub fn serial_cycles(&self) -> u64 {
-        self.frames.iter().map(|f| f.cycles()).sum()
-    }
-
-    /// Cycle-level speedup of the fan-out over a single core.
-    pub fn speedup(&self) -> f64 {
-        let mk = self.makespan_cycles();
-        if mk == 0 {
-            return 1.0;
-        }
-        self.serial_cycles() as f64 / mk as f64
-    }
-
-    /// Frames per second at the modeled clock.
-    pub fn throughput_fps(&self) -> f64 {
-        let mk = self.makespan_cycles();
-        if mk == 0 {
-            return 0.0;
-        }
-        self.frames.len() as f64 / (mk as f64 / crate::CLOCK_HZ as f64)
-    }
-
-    /// Per-core busy fraction of the makespan.
-    pub fn core_utilization(&self) -> Vec<f64> {
-        let mk = self.makespan_cycles().max(1) as f64;
-        self.core_cycles.iter().map(|&c| c as f64 / mk).collect()
-    }
-
-    /// Aggregate core activity over all frames (for the energy model).
-    pub fn stats(&self) -> crate::core::CoreStats {
-        let mut acc = crate::core::CoreStats::default();
-        for f in &self.frames {
-            acc = add_stats(&acc, &f.stats());
-        }
-        acc
-    }
-}
-
-/// Batched inference: distribute `inputs` (one tensor per frame)
-/// round-robin over the pool's cores; each core runs whole networks
-/// back to back. Weights are the same deterministic per-layer xorshift
-/// draws as [`run_network`], so every frame sees the same network and a
-/// single-frame batch is bit-identical to `run_network`.
+/// Deprecated 0.2 shim: batched frame fan-out over the pool
+/// (partitioned bus).
+#[deprecated(
+    since = "0.3.0",
+    note = "build an engine: `EngineConfig::new().cores(n).batch(b).seed(seed).build()`, then `engine.run_batched(...)`"
+)]
 pub fn run_batched(
     pool: &mut CorePool,
     name: &str,
@@ -421,140 +88,5 @@ pub fn run_batched(
     opts: ExecOptions,
     seed: u64,
 ) -> Result<BatchedResult, ExecError> {
-    let n = opts.cores.min(pool.cores()).max(1);
-    let inner = ExecOptions { cores: 1, batch: 1, ..opts };
-    let frames: Vec<&Vec<i16>> = inputs.iter().collect();
-    let n_frames = frames.len();
-    let core_of: Vec<usize> = (0..n_frames).map(|i| i % n).collect();
-    let assignments = round_robin(frames, n);
-    let results = run_on_pool(pool, assignments, n_frames, |cpu, x: &&Vec<i16>| {
-        run_network(cpu, name, layers, x.as_slice(), inner, seed)
-    })?;
-
-    let mut br = BatchedResult {
-        name: name.into(),
-        core_cycles: vec![0u64; n],
-        frame_core: core_of,
-        ..Default::default()
-    };
-    for (idx, f) in results.into_iter().enumerate() {
-        br.core_cycles[br.frame_core[idx]] += f.cycles();
-        br.outputs.push(f.layers.last().map(|l| l.out.clone()).unwrap_or_default());
-        br.frames.push(f);
-    }
-    Ok(br)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::util::XorShift;
-
-    fn tensors(l: &ConvLayer, seed: u64) -> (Vec<i16>, Vec<i16>, Vec<i32>) {
-        let mut rng = XorShift::new(seed);
-        (
-            rng.i16_vec(l.ic * l.ih * l.iw, -2000, 2000),
-            rng.i16_vec(l.oc * (l.ic / l.groups) * l.fh * l.fw, -256, 256),
-            rng.i32_vec(l.oc, -1000, 1000),
-        )
-    }
-
-    #[test]
-    fn conv_shards_partition_the_layer() {
-        for (l, want) in [
-            (ConvLayer::new("d", 8, 16, 16, 64, 3, 3, 1, 1, 1), 4),
-            (ConvLayer::new("g", 8, 13, 13, 32, 3, 3, 1, 1, 2), 4),
-            (ConvLayer::new("tiny", 4, 10, 10, 16, 3, 3, 1, 1, 1), 8),
-        ] {
-            let shards = conv_shards(&l, want);
-            let oc_sum: usize = shards.iter().map(|s| s.sub.oc).sum();
-            assert_eq!(oc_sum, l.oc, "{}", l.name);
-            let mac_sum: u64 = shards.iter().map(|s| s.sub.macs()).sum();
-            assert_eq!(mac_sum, l.macs(), "{}", l.name);
-            // output ranges tile [0, oc*ohw) without overlap
-            let mut marks = vec![false; l.oc * l.oh() * l.ow()];
-            for s in &shards {
-                for m in &mut marks[s.out0..s.out0 + s.out_len] {
-                    assert!(!*m, "overlapping shard output");
-                    *m = true;
-                }
-            }
-            assert!(marks.iter().all(|&m| m), "{}: uncovered outputs", l.name);
-        }
-    }
-
-    #[test]
-    fn sharded_conv_matches_single_core_bitexact() {
-        let l = ConvLayer::new("mc", 8, 16, 16, 64, 3, 3, 1, 1, 1);
-        let (x, w, b) = tensors(&l, 3);
-        let mut solo = Cpu::new(1 << 22);
-        let base = run_conv_layer(&mut solo, &l, &x, &w, &b, ExecOptions::default()).unwrap();
-        for cores in [2usize, 4] {
-            let mut pool = CorePool::new(cores, 1 << 22);
-            let opts = ExecOptions { cores, ..Default::default() };
-            let r = run_conv_layer_mc(&mut pool, &l, &x, &w, &b, opts).unwrap();
-            assert_eq!(r.out, base.out, "{cores}-core output");
-            assert_eq!(r.macs, base.macs, "{cores}-core macs");
-            assert_eq!(r.core_cycles.len(), cores);
-            assert!(r.cycles > 0);
-            assert!(
-                r.parallel_speedup() > 1.5,
-                "{cores}-core speedup {}",
-                r.parallel_speedup()
-            );
-        }
-    }
-
-    #[test]
-    fn sharded_grouped_conv_matches() {
-        let l = ConvLayer::new("mcg", 8, 13, 13, 32, 3, 3, 1, 1, 2);
-        let (x, w, b) = tensors(&l, 5);
-        let mut solo = Cpu::new(1 << 22);
-        let base = run_conv_layer(&mut solo, &l, &x, &w, &b, ExecOptions::default()).unwrap();
-        let mut pool = CorePool::new(4, 1 << 22);
-        let opts = ExecOptions { cores: 4, ..Default::default() };
-        let r = run_conv_layer_mc(&mut pool, &l, &x, &w, &b, opts).unwrap();
-        assert_eq!(r.out, base.out);
-        assert_eq!(r.macs, base.macs);
-    }
-
-    #[test]
-    fn sharded_pool_layer_matches() {
-        let l = PoolLayer { name: "mcp", ic: 48, ih: 13, iw: 13, size: 3, stride: 2 };
-        let mut rng = XorShift::new(9);
-        let x = rng.i16_vec(l.ic * l.ih * l.iw, -30000, 30000);
-        let mut solo = Cpu::new(1 << 22);
-        let base = run_pool_layer(&mut solo, &l, &x, ExecOptions::default()).unwrap();
-        let mut pool = CorePool::new(3, 1 << 22);
-        let opts = ExecOptions { cores: 3, ..Default::default() };
-        let r = run_pool_layer_mc(&mut pool, &l, &x, opts).unwrap();
-        assert_eq!(r.out, base.out);
-    }
-
-    #[test]
-    fn batched_frames_match_serial_runs() {
-        let layers = vec![
-            NetLayer::Conv(ConvLayer::new("c1", 4, 12, 12, 16, 3, 3, 1, 1, 1)),
-            NetLayer::Pool(PoolLayer { name: "p1", ic: 16, ih: 12, iw: 12, size: 2, stride: 2 }),
-            NetLayer::Conv(ConvLayer::new("c2", 16, 6, 6, 16, 3, 3, 1, 1, 1)),
-        ];
-        let mut rng = XorShift::new(11);
-        let inputs: Vec<Vec<i16>> =
-            (0..3).map(|_| rng.i16_vec(4 * 12 * 12, -1000, 1000)).collect();
-        let opts = ExecOptions { cores: 2, batch: 3, ..Default::default() };
-        let mut pool = CorePool::new(2, 1 << 22);
-        let br = run_batched(&mut pool, "mini", &layers, &inputs, opts, 42).unwrap();
-        assert_eq!(br.frames.len(), 3);
-        assert_eq!(br.outputs.len(), 3);
-        assert_eq!(br.frame_core, vec![0, 1, 0], "round-robin frame placement");
-        // every frame must equal its standalone single-core run
-        for (i, input) in inputs.iter().enumerate() {
-            let mut solo = Cpu::new(1 << 22);
-            let f =
-                run_network(&mut solo, "mini", &layers, input, ExecOptions::default(), 42).unwrap();
-            assert_eq!(br.outputs[i], f.layers.last().unwrap().out, "frame {i}");
-            assert_eq!(br.frames[i].macs(), f.macs(), "frame {i} macs");
-        }
-        assert!(br.speedup() > 1.0, "two cores must beat one on 3 frames");
-    }
+    engine::run_batched_on(pool, name, layers, inputs, seed_spec(opts, seed))
 }

@@ -20,8 +20,11 @@
 //!   pooling / FC layers using the Fig. 2 dataflow (depth slicing,
 //!   row-wise processing, DMA double buffering).
 //! * [`model`] — AlexNet / VGG-16 workload tables.
-//! * [`coordinator`] — layer scheduler + executor + metrics (utilization,
-//!   GOP/s, off-chip I/O) — the numbers of Table II.
+//! * [`coordinator`] — the execution [`Engine`](coordinator::Engine):
+//!   single- and multi-core layer scheduling (oc-tile / row-band shard
+//!   policies, partitioned / shared external bus), batched frame
+//!   fan-out, and metrics (utilization, GOP/s, off-chip I/O) — the
+//!   numbers of Table II.
 //! * [`energy`] — calibrated area (Table I, Fig. 3b) and activity-based
 //!   power (Fig. 3c, Table II) models, technology scaling.
 //! * [`baselines`] — analytical Eyeriss / Envision models for the

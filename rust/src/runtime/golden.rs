@@ -3,9 +3,8 @@
 
 use anyhow::Result;
 
-use crate::coordinator::executor::{run_conv_layer, run_pool_layer, ExecOptions};
 use crate::codegen::refconv;
-use crate::core::Cpu;
+use crate::coordinator::EngineConfig;
 use crate::fixed::RoundMode;
 use crate::model::{ConvLayer, PoolLayer};
 use crate::util::XorShift;
@@ -63,8 +62,9 @@ pub fn golden_conv_check(
     let golden = runner.run_conv(manifest, art, &x, &w, &b)?;
     let host = refconv::conv2d(&x, &w, &b, &layer, RoundMode::HalfUp, 16);
 
-    let mut cpu = Cpu::new(1 << 24);
-    let sim = run_conv_layer(&mut cpu, &layer, &x, &w, &b, ExecOptions::default())
+    let mut engine = EngineConfig::new().build();
+    let sim = engine
+        .run_conv_layer(&layer, &x, &w, &b)
         .map_err(|e| anyhow::anyhow!("sim: {e}"))?;
 
     let mism = |a: &[i16], b: &[i16]| a.iter().zip(b).filter(|(x, y)| x != y).count();
@@ -99,8 +99,9 @@ pub fn golden_pool_check(
     let golden = runner.run_pool(manifest, art, &x)?;
     let host = refconv::maxpool2d(&x, art.ic, art.ih, art.iw, art.size, art.stride);
 
-    let mut cpu = Cpu::new(1 << 22);
-    let sim = run_pool_layer(&mut cpu, &layer, &x, ExecOptions::default())
+    let mut engine = EngineConfig::new().ext_capacity(1 << 22).build();
+    let sim = engine
+        .run_pool_layer(&layer, &x)
         .map_err(|e| anyhow::anyhow!("sim: {e}"))?;
 
     let mism = |a: &[i16], b: &[i16]| a.iter().zip(b).filter(|(x, y)| x != y).count();

@@ -1,0 +1,166 @@
+//! Engine shard-policy properties: `OcTile`, `RowBand` and `Auto`
+//! sharding are pure reshufflings of the single-core schedule — outputs
+//! and MAC counts stay bit-identical across conv, pool and grouped-conv
+//! layers — and the shared-bus model only ever *adds* wait cycles.
+
+use convaix::coordinator::{BusModel, EngineConfig, NetLayer, ShardPolicy};
+use convaix::model::{ConvLayer, PoolLayer};
+use convaix::util::proptest::prop;
+use convaix::util::XorShift;
+
+const POLICIES: [ShardPolicy; 3] = [ShardPolicy::OcTile, ShardPolicy::RowBand, ShardPolicy::Auto];
+
+fn mini_net() -> Vec<NetLayer> {
+    vec![
+        NetLayer::Conv(ConvLayer::new("c1", 3, 16, 16, 32, 3, 3, 1, 1, 1)),
+        NetLayer::Pool(PoolLayer { name: "p1", ic: 32, ih: 16, iw: 16, size: 2, stride: 2 }),
+        NetLayer::Conv(ConvLayer::new("c2", 32, 8, 8, 48, 3, 3, 1, 1, 1)),
+        NetLayer::Conv(ConvLayer::new("c3g", 48, 8, 8, 32, 3, 3, 1, 1, 2)),
+    ]
+}
+
+/// Every policy, at 1/2/4 cores, must reproduce the single-core network
+/// bit-exactly, layer by layer, through conv, pool and grouped conv.
+#[test]
+fn network_outputs_bit_identical_across_policies_and_core_counts() {
+    let layers = mini_net();
+    let mut rng = XorShift::new(1234);
+    let input = rng.i16_vec(3 * 16 * 16, -2000, 2000);
+
+    let mut solo = EngineConfig::new().seed(99).ext_capacity(1 << 23).build();
+    let base = solo.run_network("mini", &layers, &input).unwrap();
+
+    for policy in POLICIES {
+        for cores in [1usize, 2, 4] {
+            let mut engine = EngineConfig::new()
+                .cores(cores)
+                .shard(policy)
+                .seed(99)
+                .ext_capacity(1 << 23)
+                .build();
+            let mc = engine.run_network("mini", &layers, &input).unwrap();
+            assert_eq!(mc.layers.len(), base.layers.len());
+            for (lb, lm) in base.layers.iter().zip(&mc.layers) {
+                assert_eq!(lm.out, lb.out, "{policy:?} {cores}-core layer {} output", lb.name);
+                assert_eq!(lm.macs, lb.macs, "{policy:?} {cores}-core layer {} macs", lb.name);
+            }
+            assert_eq!(mc.macs(), base.macs(), "{policy:?} {cores}-core total macs");
+        }
+    }
+}
+
+/// Property: random small conv shapes (strided, padded, grouped) match
+/// the single-core path bit-exactly under every shard policy.
+#[test]
+fn random_conv_layers_policy_equivalence() {
+    prop("sharded conv == single core", 10, |g| {
+        let fh = g.usize_in(1, 4);
+        let stride = g.usize_in(1, 2);
+        let pad = g.usize_in(0, fh - usize::from(fh > 1));
+        let ih = g.usize_in(fh.max(6), 14);
+        let iw = g.usize_in(fh.max(6), 14);
+        let groups = if g.bool() { 2 } else { 1 };
+        let ic = 2 * groups * g.usize_in(1, 3);
+        let oc = 16 * groups * g.usize_in(1, 2);
+        let l = ConvLayer::new("prop", ic, ih, iw, oc, fh, fh, stride, pad, groups);
+        if l.ihp() < fh || l.iwp() < fh {
+            return;
+        }
+        let mut rng = XorShift::new(g.int(0, i64::MAX / 2) as u64);
+        let x = rng.i16_vec(ic * ih * iw, -3000, 3000);
+        let w = rng.i16_vec(oc * (ic / groups) * fh * fh, -300, 300);
+        let b = rng.i32_vec(oc, -2000, 2000);
+
+        let mut solo = EngineConfig::new().ext_capacity(1 << 22).build();
+        let base = solo.run_conv_layer(&l, &x, &w, &b).unwrap();
+
+        let cores = g.usize_in(2, 4);
+        for policy in POLICIES {
+            let mut engine = EngineConfig::new()
+                .cores(cores)
+                .shard(policy)
+                .ext_capacity(1 << 22)
+                .build();
+            let r = engine.run_conv_layer(&l, &x, &w, &b).unwrap();
+            assert_eq!(
+                r.out, base.out,
+                "{policy:?} {cores}-core, ic{ic} {ih}x{iw} oc{oc} f{fh} s{stride} p{pad} g{groups}"
+            );
+            assert_eq!(r.macs, base.macs, "{policy:?} macs");
+            assert_eq!(r.macs, l.macs(), "{policy:?} layer macs");
+        }
+    });
+}
+
+/// Property: random pool shapes match under both shard axes.
+#[test]
+fn random_pool_layers_policy_equivalence() {
+    prop("sharded pool == single core", 10, |g| {
+        let size = g.usize_in(2, 3);
+        let stride = g.usize_in(1, 3).min(size);
+        let ih = g.usize_in(size + 2, 15);
+        let iw = g.usize_in(size + 2, 15);
+        let ic = g.usize_in(1, 4) * 16;
+        let l = PoolLayer { name: "pp", ic, ih, iw, size, stride };
+        let mut rng = XorShift::new(g.int(0, i64::MAX / 2) as u64);
+        let x = rng.i16_vec(ic * ih * iw, -30000, 30000);
+
+        let mut solo = EngineConfig::new().ext_capacity(1 << 22).build();
+        let base = solo.run_pool_layer(&l, &x).unwrap();
+
+        let cores = g.usize_in(2, 4);
+        for policy in POLICIES {
+            let mut engine = EngineConfig::new()
+                .cores(cores)
+                .shard(policy)
+                .ext_capacity(1 << 22)
+                .build();
+            let r = engine.run_pool_layer(&l, &x).unwrap();
+            assert_eq!(
+                r.out, base.out,
+                "{policy:?} {cores}-core pool {ic} {ih}x{iw} k{size} s{stride}"
+            );
+        }
+    });
+}
+
+/// The shared bus can only slow a run down, never change its results,
+/// and reported per-core utilization stays within [0, 1].
+#[test]
+fn shared_bus_is_conservative_and_sane() {
+    let layers = mini_net();
+    let mut rng = XorShift::new(77);
+    let input = rng.i16_vec(3 * 16 * 16, -2000, 2000);
+    let run = |bus: BusModel| {
+        let mut engine = EngineConfig::new()
+            .cores(4)
+            .bus(bus)
+            .seed(5)
+            .ext_capacity(1 << 23)
+            .build();
+        engine.run_network("mini", &layers, &input).unwrap()
+    };
+    let part = run(BusModel::Partitioned);
+    let shared = run(BusModel::Shared);
+    for (lp, ls) in part.layers.iter().zip(&shared.layers) {
+        assert_eq!(ls.out, lp.out, "bus model changed layer {} output", lp.name);
+        assert!(ls.cycles >= lp.cycles, "shared bus sped up layer {}", lp.name);
+        assert_eq!(ls.io_in, lp.io_in);
+        assert_eq!(ls.io_out, lp.io_out);
+    }
+
+    // batched: utilization must never exceed 1.0 under contention
+    let inputs: Vec<Vec<i16>> = (0..4).map(|_| input.clone()).collect();
+    let mut engine = EngineConfig::new()
+        .cores(2)
+        .batch(4)
+        .bus(BusModel::Shared)
+        .seed(5)
+        .ext_capacity(1 << 23)
+        .build();
+    let br = engine.run_batched("mini", &layers, &inputs).unwrap();
+    for u in br.core_utilization() {
+        assert!((0.0..=1.0).contains(&u), "shared-bus per-core utilization {u}");
+    }
+    assert!(br.makespan_cycles() >= br.core_useful_cycles.iter().copied().max().unwrap_or(0));
+}

@@ -3,8 +3,7 @@
 //! the simulator's structural invariants.
 
 use convaix::codegen::refconv;
-use convaix::coordinator::executor::{run_conv_layer, ExecMode, ExecOptions};
-use convaix::core::Cpu;
+use convaix::coordinator::{EngineConfig, ExecMode};
 use convaix::fixed::RoundMode;
 use convaix::model::ConvLayer;
 use convaix::util::proptest::prop;
@@ -31,8 +30,9 @@ fn random_conv_layers_match_reference() {
         let x = rng.i16_vec(ic * ih * iw, -3000, 3000);
         let w = rng.i16_vec(oc * ic * fh * fw, -300, 300);
         let b = rng.i32_vec(oc, -2000, 2000);
-        let mut cpu = Cpu::new(1 << 22);
-        let r = run_conv_layer(&mut cpu, &l, &x, &w, &b, ExecOptions::default())
+        let mut engine = EngineConfig::new().ext_capacity(1 << 22).build();
+        let r = engine
+            .run_conv_layer(&l, &x, &w, &b)
             .unwrap_or_else(|e| panic!("{}: {e}", shape_str(&l)));
         let expect = refconv::conv2d(&x, &w, &b, &l, RoundMode::HalfUp, 16);
         assert_eq!(r.out, expect, "{}", shape_str(&l));
@@ -61,8 +61,8 @@ fn utilization_never_exceeds_one() {
         let x = rng.i16_vec(l.ic * l.ih * l.iw, -100, 100);
         let w = rng.i16_vec(l.oc * l.ic * 9, -100, 100);
         let b = rng.i32_vec(l.oc, -10, 10);
-        let mut cpu = Cpu::new(1 << 22);
-        let r = run_conv_layer(&mut cpu, &l, &x, &w, &b, ExecOptions::default()).unwrap();
+        let mut engine = EngineConfig::new().ext_capacity(1 << 22).build();
+        let r = engine.run_conv_layer(&l, &x, &w, &b).unwrap();
         let u = r.utilization();
         assert!(u > 0.0 && u <= 1.0, "util {u}");
     });
@@ -87,18 +87,13 @@ fn analytic_mode_tracks_full_cycle() {
         let x = rng.i16_vec(l.ic * l.ih * l.iw, -100, 100);
         let w = rng.i16_vec(l.oc * l.ic * 9, -100, 100);
         let b = rng.i32_vec(l.oc, -10, 10);
-        let mut c1 = Cpu::new(1 << 22);
-        let full = run_conv_layer(&mut c1, &l, &x, &w, &b, ExecOptions::default()).unwrap();
-        let mut c2 = Cpu::new(1 << 22);
-        let fast = run_conv_layer(
-            &mut c2,
-            &l,
-            &x,
-            &w,
-            &b,
-            ExecOptions { mode: ExecMode::TileAnalytic, ..Default::default() },
-        )
-        .unwrap();
+        let mut e1 = EngineConfig::new().ext_capacity(1 << 22).build();
+        let full = e1.run_conv_layer(&l, &x, &w, &b).unwrap();
+        let mut e2 = EngineConfig::new()
+            .mode(ExecMode::TileAnalytic)
+            .ext_capacity(1 << 22)
+            .build();
+        let fast = e2.run_conv_layer(&l, &x, &w, &b).unwrap();
         let err = (full.compute_cycles as f64 - fast.compute_cycles as f64).abs()
             / full.compute_cycles as f64;
         assert!(err < 0.02, "drift {err} on {}", shape_str(&l));

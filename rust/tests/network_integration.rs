@@ -2,8 +2,7 @@
 //! conv and pool layers, against a host-reference chain.
 
 use convaix::codegen::refconv;
-use convaix::coordinator::executor::{run_conv_layer, run_pool_layer, ExecOptions};
-use convaix::core::Cpu;
+use convaix::coordinator::EngineConfig;
 use convaix::fixed::RoundMode;
 use convaix::model::{ConvLayer, PoolLayer};
 use convaix::util::XorShift;
@@ -22,11 +21,11 @@ fn conv_pool_conv_chain_matches_reference() {
     let w2 = rng.i16_vec(32 * 16 * 9, -200, 200);
     let b2 = rng.i32_vec(32, -500, 500);
 
-    // simulator chain
-    let mut cpu = Cpu::new(1 << 24);
-    let o1 = run_conv_layer(&mut cpu, &c1, &x0, &w1, &b1, ExecOptions::default()).unwrap();
-    let o2 = run_pool_layer(&mut cpu, &p1, &o1.out, ExecOptions::default()).unwrap();
-    let o3 = run_conv_layer(&mut cpu, &c2, &o2.out, &w2, &b2, ExecOptions::default()).unwrap();
+    // simulator chain through the engine
+    let mut engine = EngineConfig::new().build();
+    let o1 = engine.run_conv_layer(&c1, &x0, &w1, &b1).unwrap();
+    let o2 = engine.run_pool_layer(&p1, &o1.out).unwrap();
+    let o3 = engine.run_conv_layer(&c2, &o2.out, &w2, &b2).unwrap();
 
     // host chain
     let h1 = refconv::conv2d(&x0, &w1, &b1, &c1, RoundMode::HalfUp, 16);
@@ -49,10 +48,10 @@ fn alexnet_front_small_matches_reference() {
     let w = rng.i16_vec(96 * 3 * 121, -150, 150);
     let b = rng.i32_vec(96, -500, 500);
 
-    let mut cpu = Cpu::new(1 << 24);
-    let o1 = run_conv_layer(&mut cpu, &c1, &x, &w, &b, ExecOptions::default()).unwrap();
+    let mut engine = EngineConfig::new().build();
+    let o1 = engine.run_conv_layer(&c1, &x, &w, &b).unwrap();
     assert_eq!(o1.out.len(), 96 * 13 * 13);
-    let o2 = run_pool_layer(&mut cpu, &p, &o1.out, ExecOptions::default()).unwrap();
+    let o2 = engine.run_pool_layer(&p, &o1.out).unwrap();
 
     let h1 = refconv::conv2d(&x, &w, &b, &c1, RoundMode::HalfUp, 16);
     let h2 = refconv::maxpool2d(&h1, 96, 13, 13, 3, 2);
@@ -75,9 +74,9 @@ fn grouped_to_dense_chain() {
     let w3 = rng.i16_vec(48 * 32 * 9, -150, 150);
     let b3 = rng.i32_vec(48, -200, 200);
 
-    let mut cpu = Cpu::new(1 << 24);
-    let o2 = run_conv_layer(&mut cpu, &c2, &x, &w2, &b2, ExecOptions::default()).unwrap();
-    let o3 = run_conv_layer(&mut cpu, &c3, &o2.out, &w3, &b3, ExecOptions::default()).unwrap();
+    let mut engine = EngineConfig::new().build();
+    let o2 = engine.run_conv_layer(&c2, &x, &w2, &b2).unwrap();
+    let o3 = engine.run_conv_layer(&c3, &o2.out, &w3, &b3).unwrap();
 
     let h2 = refconv::conv2d_grouped(&x, &w2, &b2, &c2, RoundMode::HalfUp, 16);
     let h3 = refconv::conv2d(&h2, &w3, &b3, &c3, RoundMode::HalfUp, 16);
@@ -94,9 +93,9 @@ fn repeatable_runs() {
     let x = rng.i16_vec(8 * 144, -500, 500);
     let w = rng.i16_vec(16 * 8 * 9, -100, 100);
     let b = rng.i32_vec(16, -50, 50);
-    let mut cpu = Cpu::new(1 << 22);
-    let r1 = run_conv_layer(&mut cpu, &l, &x, &w, &b, ExecOptions::default()).unwrap();
-    let r2 = run_conv_layer(&mut cpu, &l, &x, &w, &b, ExecOptions::default()).unwrap();
+    let mut engine = EngineConfig::new().ext_capacity(1 << 22).build();
+    let r1 = engine.run_conv_layer(&l, &x, &w, &b).unwrap();
+    let r2 = engine.run_conv_layer(&l, &x, &w, &b).unwrap();
     assert_eq!(r1.out, r2.out);
     assert_eq!(r1.compute_cycles, r2.compute_cycles);
 }

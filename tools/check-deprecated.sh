@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Deny-list guard for the deprecated 0.2 free-function coordinator API.
+#
+# New code must execute through `coordinator::Engine`. Only the modules
+# that *define* the deprecated shims, the coordinator facade that
+# re-exports them, and the grandfathered 0.2 contract-lock test
+# (`multicore_determinism.rs`, kept byte-identical on purpose) may name
+# the free functions. Method calls (`engine.run_network(...)`) are fine —
+# the pattern only matches call sites not preceded by `.`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+ALLOW='rust/src/coordinator/executor\.rs|rust/src/coordinator/scheduler\.rs|rust/src/coordinator/mod\.rs|rust/tests/multicore_determinism\.rs'
+# `(?<![.\w])` skips method calls (`engine.run_network(`); `(?<!fn )`
+# skips the Engine method definitions themselves.
+PATTERN='(?<!fn )(?<![.\w])(run_conv_layer|run_pool_layer|run_network|run_batched)(_mc)?\s*\('
+
+hits=$(grep -rnP --include='*.rs' "$PATTERN" rust/src rust/tests rust/benches examples \
+  | grep -vE "^($ALLOW):" || true)
+
+if [ -n "$hits" ]; then
+  echo "ERROR: deprecated free-function coordinator API used outside the shim modules."
+  echo "Use coordinator::EngineConfig::new()...build() and the Engine methods instead:"
+  echo
+  echo "$hits"
+  exit 1
+fi
+echo "OK: no new callers of the deprecated free-function API."
