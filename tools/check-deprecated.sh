@@ -10,7 +10,29 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-ALLOW='rust/src/coordinator/executor\.rs|rust/src/coordinator/scheduler\.rs|rust/src/coordinator/mod\.rs|rust/tests/multicore_determinism\.rs'
+ALLOW_FILES=(
+  rust/src/coordinator/executor.rs
+  rust/src/coordinator/scheduler.rs
+  rust/src/coordinator/mod.rs
+  rust/tests/multicore_determinism.rs
+)
+# The grandfathered allowlist must track reality: a stale entry for a
+# deleted/renamed shim file would let this guard pass silently while
+# checking nothing. Fail loudly instead, so the list shrinks in the
+# same change that retires the 0.2 surface.
+for f in "${ALLOW_FILES[@]}"; do
+  if [ ! -f "$f" ]; then
+    echo "ERROR: grandfathered shim file missing: $f"
+    echo "The deprecated 0.2 surface moved or was removed — update ALLOW_FILES"
+    echo "in tools/check-deprecated.sh in the same change."
+    exit 1
+  fi
+done
+
+# Derive the exclusion regex from the same list, so there is exactly one
+# place to edit when the 0.2 surface shrinks.
+ALLOW=$(printf '%s|' "${ALLOW_FILES[@]//./\\.}")
+ALLOW=${ALLOW%|}
 # `(?<![.\w])` skips method calls (`engine.run_network(`); `(?<!fn )`
 # skips the Engine method definitions themselves.
 PATTERN='(?<!fn )(?<![.\w])(run_conv_layer|run_pool_layer|run_network|run_batched)(_mc)?\s*\('
