@@ -1,0 +1,85 @@
+//! Layer-pipelined streaming demo: cut a conv stack into contiguous
+//! stages (one ConvAix core per stage, balanced by the predicted-
+//! makespan cost model) and stream frames through them — frame t on
+//! stage i while frame t−1 occupies stage i+1. The steady-state
+//! regime of Shen et al.'s resource partitioning (arXiv:1607.00064),
+//! next to the frame fan-out mode the same pool offers.
+//!
+//! AlexNet and VGG-16 conv stacks, a 5-frame stream (deliberately not
+//! a multiple of the core count), 1 → 4 cores, tile-analytic mode at
+//! the paper's 8-bit gated operating point, shared external bus.
+//!
+//!     cargo run --release --example streaming_pipeline
+
+use convaix::cli::report;
+use convaix::coordinator::{BusModel, EngineConfig, ExecMode, NetLayer, PoolMode};
+use convaix::model::{alexnet_conv, vgg16_conv};
+use convaix::util::table::Table;
+use convaix::util::XorShift;
+
+fn main() -> anyhow::Result<()> {
+    const STREAM: usize = 5;
+    for (name, conv) in [("AlexNet", alexnet_conv()), ("VGG-16", vgg16_conv())] {
+        let (ic, ih, iw) = (conv[0].ic, conv[0].ih, conv[0].iw);
+        let layers: Vec<NetLayer> = conv.into_iter().map(NetLayer::Conv).collect();
+        let mut rng = XorShift::new(0x57AE);
+        let inputs: Vec<Vec<i16>> =
+            (0..STREAM).map(|_| rng.i16_vec(ic * ih * iw, -2000, 2000)).collect();
+
+        let mut t = Table::new(
+            &format!("{name}: {STREAM}-frame stream, pipeline vs frame fan-out"),
+            &[
+                "Cores",
+                "Pipe steady [f/s]",
+                "Pipe fill [ms]",
+                "Pipe stream [f/s]",
+                "Fan-out [f/s]",
+            ],
+        );
+        for cores in [1usize, 2, 4] {
+            let cfg = EngineConfig::new()
+                .mode(ExecMode::TileAnalytic)
+                .gate_bits(8)
+                .cores(cores)
+                .batch(STREAM)
+                .bus(BusModel::Shared);
+
+            let pr = cfg
+                .clone()
+                .pool_mode(PoolMode::Pipelined)
+                .build()
+                .run_streaming(name, &layers, &inputs)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let fo = cfg
+                .build()
+                .run_batched(name, &layers, &inputs)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+            t.row(&[
+                cores.to_string(),
+                format!("{:.1}", pr.steady_state_fps()),
+                format!("{:.2}", pr.fill_cycles as f64 / convaix::CLOCK_HZ as f64 * 1e3),
+                format!("{:.1}", pr.throughput_fps()),
+                format!("{:.1}", fo.throughput_fps()),
+            ]);
+        }
+        t.print();
+
+        // the per-stage breakdown at 4 cores, through the CLI renderer
+        let cfg4 = EngineConfig::new()
+            .mode(ExecMode::TileAnalytic)
+            .gate_bits(8)
+            .cores(4)
+            .batch(STREAM)
+            .pool_mode(PoolMode::Pipelined)
+            .bus(BusModel::Shared);
+        let pr = cfg4
+            .clone()
+            .build()
+            .run_streaming(name, &layers, &inputs)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        print!("{}", report::streaming_report(&pr, &layers, &cfg4));
+        println!();
+    }
+    Ok(())
+}

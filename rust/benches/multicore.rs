@@ -1,16 +1,18 @@
 //! Bench target: multi-core scaling sweep — VGG-16 conv stack in
 //! tile-analytic mode, layers sharded across 1 / 2 / 4 ConvAix cores
 //! (cycle-level makespan) with the simulation itself on host threads
-//! (wall-clock). Also duels the shard policies on the early VGG layers
-//! and sweeps the batched frame fan-out mode under both bus models.
+//! (wall-clock). Also duels the shard policies on the early VGG layers,
+//! sweeps the batched frame fan-out mode under both bus models, and
+//! duels layer-pipelined streaming against frame fan-out on a 5-frame
+//! stream (the batch-misaligned serving case).
 //!
 //!     cargo bench --bench multicore
 
 use std::time::Instant;
 
 use convaix::cli::report;
-use convaix::coordinator::{BusModel, EngineConfig, ExecMode, NetLayer, ShardPolicy};
-use convaix::model::vgg16_conv;
+use convaix::coordinator::{BusModel, EngineConfig, ExecMode, NetLayer, PoolMode, ShardPolicy};
+use convaix::model::{alexnet_conv, vgg16_conv};
 use convaix::util::table::Table;
 use convaix::util::XorShift;
 
@@ -139,6 +141,73 @@ fn main() {
         ]);
     }
     t.print();
+
+    // --- pipeline vs frame fan-out duel ---------------------------------
+    // Streaming serving: 5 frames (deliberately NOT a multiple of the
+    // core count — the steady-state streaming case) on 4 cores, shared
+    // bus, 8-bit gating. Frame fan-out quantizes the stream into
+    // core-count waves (ceil(5/4) = 2 serial frames on core 0), while
+    // the pipeline keeps emitting one frame per bottleneck-stage
+    // interval once full. Acceptance target: pipelined steady-state
+    // throughput >= the fan-out batch throughput on the VGG-16 conv
+    // stack at 4 cores.
+    const STREAM: usize = 5;
+    let mut t = Table::new(
+        "Streaming duel: 5 frames on 4 cores, shared bus — fan-out vs pipeline",
+        &["Net", "Fan-out f/s", "Pipe steady f/s", "Pipe stream f/s", "Fill [ms]", "Drain [ms]"],
+    );
+    let mut vgg_fanout_fps = 0.0f64;
+    let mut vgg_steady_fps = 0.0f64;
+    for (name, conv) in [("AlexNet", alexnet_conv()), ("VGG-16", vgg16_conv())] {
+        let (ic, ih, iw) = (conv[0].ic, conv[0].ih, conv[0].iw);
+        let layers: Vec<NetLayer> = conv.into_iter().map(NetLayer::Conv).collect();
+        let frame = vec![0i16; ic * ih * iw];
+        let inputs: Vec<Vec<i16>> = (0..STREAM).map(|_| frame.clone()).collect();
+
+        let mut fan = cfg_base().cores(4).batch(STREAM).bus(BusModel::Shared).build();
+        let fo = fan.run_batched(name, &layers, &inputs).expect("fan-out");
+
+        let mut pipe = cfg_base()
+            .cores(4)
+            .batch(STREAM)
+            .pool_mode(PoolMode::Pipelined)
+            .bus(BusModel::Shared)
+            .build();
+        let pr = pipe.run_streaming(name, &layers, &inputs).expect("pipeline");
+
+        // the pipeline must not change what is computed
+        assert_eq!(
+            pr.frames.iter().map(|f| f.macs()).sum::<u64>(),
+            fo.frames.iter().map(|f| f.macs()).sum::<u64>(),
+            "{name}: pipelining changed the modeled work"
+        );
+        if name == "VGG-16" {
+            vgg_fanout_fps = fo.throughput_fps();
+            vgg_steady_fps = pr.steady_state_fps();
+        }
+        t.row(&[
+            name.into(),
+            format!("{:.1}", fo.throughput_fps()),
+            format!("{:.1}", pr.steady_state_fps()),
+            format!("{:.1}", pr.throughput_fps()),
+            format!("{:.2}", pr.fill_cycles as f64 / convaix::CLOCK_HZ as f64 * 1e3),
+            format!("{:.2}", pr.drain_cycles as f64 / convaix::CLOCK_HZ as f64 * 1e3),
+        ]);
+    }
+    t.print();
+    if !no_assert {
+        assert!(
+            vgg_steady_fps >= vgg_fanout_fps,
+            "pipelined steady state ({vgg_steady_fps:.1} f/s) must match or beat frame \
+             fan-out ({vgg_fanout_fps:.1} f/s) on the VGG-16 stream of {STREAM} at 4 cores \
+             (set MULTICORE_NO_ASSERT=1 to report without asserting)"
+        );
+    }
+    println!(
+        "VGG-16 stream of {STREAM} @ 4 cores: pipeline steady {vgg_steady_fps:.1} f/s vs \
+         fan-out {vgg_fanout_fps:.1} f/s ({:.2}x)\n",
+        vgg_steady_fps / vgg_fanout_fps.max(1e-9)
+    );
 
     // Wall-clock scaling depends on real host parallelism; skip the hard
     // target on undersized hosts, and allow MULTICORE_NO_ASSERT=1 as an

@@ -5,7 +5,7 @@ pub mod report;
 
 use anyhow::Result;
 
-use crate::coordinator::{BusModel, EngineConfig, ShardPolicy};
+use crate::coordinator::{BusModel, EngineConfig, PoolMode, ShardPolicy};
 
 const USAGE: &str = "\
 convaix — ConvAix ASIP reproduction (ISCAS'19)
@@ -30,6 +30,12 @@ OPTIONS:
                      `run` reports per-core utilization and speedup
   --batch <n>        batched throughput mode: fan n frames out over the
                      core pool (default 1 = latency mode)
+  --pipeline         layer-pipelined streaming instead of frame fan-out:
+                     cut the network into --cores contiguous stages and
+                     stream the --batch frames through them (reports
+                     steady-state f/s and fill/drain latency)
+  --pool-mode <m>    long form of the same switch:
+                     fan-out (default) | pipelined
   --shard <policy>   intra-layer shard axis for --cores > 1:
                      oc-tile (default) | row-band | auto
   --bus <model>      external bandwidth model for --cores > 1:
@@ -45,6 +51,7 @@ pub struct Args {
     pub artifacts: String,
     pub cores: usize,
     pub batch: usize,
+    pub pipeline: bool,
     pub shard: ShardPolicy,
     pub bus: BusModel,
 }
@@ -59,6 +66,7 @@ impl Args {
             artifacts: "artifacts".into(),
             cores: 1,
             batch: 1,
+            pipeline: false,
             shard: ShardPolicy::OcTile,
             bus: BusModel::Partitioned,
         };
@@ -95,6 +103,15 @@ impl Args {
                     if a.batch == 0 {
                         anyhow::bail!("--batch must be >= 1");
                     }
+                }
+                "--pipeline" => a.pipeline = true,
+                "--pool-mode" => {
+                    let m: PoolMode = it
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("--pool-mode needs a value"))?
+                        .parse()
+                        .map_err(|e: String| anyhow::anyhow!("{e}"))?;
+                    a.pipeline = m == PoolMode::Pipelined;
                 }
                 "--shard" => {
                     a.shard = it
@@ -136,6 +153,7 @@ impl Args {
             .gate_bits(self.gate_bits)
             .cores(self.cores)
             .batch(self.batch)
+            .pool_mode(if self.pipeline { PoolMode::Pipelined } else { PoolMode::FanOut })
             .shard(self.shard)
             .bus(self.bus)
     }
@@ -175,7 +193,9 @@ pub fn main_with(argv: &[String]) -> Result<i32> {
                 .first()
                 .map(String::as_str)
                 .unwrap_or("alexnet");
-            if args.batch > 1 {
+            if args.pipeline {
+                print!("{}", report::streaming(net, &cfg)?);
+            } else if args.batch > 1 {
                 print!("{}", report::throughput(net, &cfg)?);
             } else if args.cores > 1 {
                 print!("{}", report::run_net_mc(net, &cfg)?);

@@ -6,7 +6,9 @@
 use anyhow::Result;
 
 use crate::baselines::published;
-use crate::coordinator::{BatchedResult, Engine, EngineConfig, NetLayer, NetworkResult};
+use crate::coordinator::{
+    BatchedResult, Engine, EngineConfig, NetLayer, NetworkResult, PipelineResult,
+};
 use crate::energy::{area, power};
 use crate::model::{alexnet_conv, vgg16_conv, ConvLayer};
 use crate::util::table::{bar_chart, Table};
@@ -126,6 +128,69 @@ pub fn throughput_report(br: &BatchedResult, cfg: &EngineConfig) -> String {
         br.throughput_fps(),
         br.speedup(),
         br.serial_cycles() as f64 / crate::CLOCK_HZ as f64 * 1e3,
+    ));
+    s
+}
+
+/// `convaix run <net> --pipeline [--cores N --batch B]` — layer-
+/// pipelined streaming: the conv stack cut into N contiguous stages, B
+/// frames streamed through them.
+pub fn streaming(net: &str, cfg: &EngineConfig) -> Result<String> {
+    let conv = net_layers(net)?;
+    let (ic, ih, iw) = (conv[0].ic, conv[0].ih, conv[0].iw);
+    let layers: Vec<NetLayer> = conv.into_iter().map(NetLayer::Conv).collect();
+    let mut rng = XorShift::new(0xBA7C4);
+    let inputs: Vec<Vec<i16>> =
+        (0..cfg.batch).map(|_| rng.i16_vec(ic * ih * iw, -2000, 2000)).collect();
+    let pr = engine_for(cfg)
+        .run_streaming(net, &layers, &inputs)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    Ok(streaming_report(&pr, &layers, cfg))
+}
+
+/// Render a [`PipelineResult`] as the per-stage table + summary lines.
+/// `Useful frac` is private-bandwidth stage time over the stream
+/// makespan — the occupied-vs-useful split, never above 1.0.
+pub fn streaming_report(pr: &PipelineResult, layers: &[NetLayer], cfg: &EngineConfig) -> String {
+    let mut t = Table::new(
+        &format!(
+            "{}: {} frame(s) streamed through {} pipeline stage(s), {:?} bus",
+            pr.name,
+            pr.frames.len(),
+            pr.stages.len(),
+            pr.bus,
+        ),
+        &["Stage", "Layers", "Occupied cycles", "Useful frac"],
+    );
+    let util = pr.stage_utilization();
+    for (s, &(l0, l1)) in pr.stages.iter().enumerate() {
+        let span = if l1 - l0 == 1 {
+            layers[l0].name().to_string()
+        } else {
+            format!("{}..{}", layers[l0].name(), layers[l1 - 1].name())
+        };
+        t.row(&[
+            s.to_string(),
+            span,
+            pr.stage_cycles[s].to_string(),
+            format!("{:.3}", util[s]),
+        ]);
+    }
+    let mut s = t.render();
+    s.push_str(&format!(
+        "steady state {:.1} frames/s (one frame per {} cycles once full); \
+         fill {:.2} ms, drain {:.2} ms\n\
+         stream of {}: {:.2} ms end to end, {:.1} frames/s, {:.2}x over 1 core \
+         ({} core(s) configured)\n",
+        pr.steady_state_fps(),
+        pr.steady_interval_cycles,
+        pr.fill_cycles as f64 / crate::CLOCK_HZ as f64 * 1e3,
+        pr.drain_cycles as f64 / crate::CLOCK_HZ as f64 * 1e3,
+        pr.frames.len(),
+        pr.makespan_cycles as f64 / crate::CLOCK_HZ as f64 * 1e3,
+        pr.throughput_fps(),
+        pr.speedup(),
+        cfg.cores,
     ));
     s
 }

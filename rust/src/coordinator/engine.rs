@@ -4,12 +4,13 @@
 //! The paper separates *what* a layer computes from *how* it is
 //! scheduled onto the vector lanes (Fig. 2); this module gives the
 //! coordinator the same separation at the chip level. An [`Engine`] is
-//! built from an [`EngineConfig`] (cores, batch, shard policy, bus
-//! model, execution mode, seed) and exposes three entry points —
-//! [`Engine::run_layer`], [`Engine::run_network`],
-//! [`Engine::run_batched`] — that replace the 0.2 free-function pairs
-//! (`executor::run_network` / `scheduler::run_network_mc`, …), which
-//! survive only as `#[deprecated]` shims.
+//! built from an [`EngineConfig`] (cores, batch, shard policy, pool
+//! mode, bus model, execution mode, seed) and exposes the entry points
+//! — [`Engine::run_layer`], [`Engine::run_network`],
+//! [`Engine::run_batched`], [`Engine::run_streaming`] — that replace
+//! the 0.2 free-function pairs (`executor::run_network` /
+//! `scheduler::run_network_mc`, …), which survive only as
+//! `#[deprecated]` shims.
 //!
 //! Internally there is exactly **one** network walk
 //! (`walk_network`), parameterized by a `LayerRunner`: the
@@ -38,6 +39,23 @@
 //! the seed assumption of a private full-width port per core; `Shared`
 //! divides `EXT_BYTES_PER_CYCLE` across concurrently DMA-bound cores
 //! (see [`super::bus`]).
+//!
+//! Multi-frame streams have two pool layouts ([`PoolMode`]):
+//!
+//! * **`FanOut`** ([`Engine::run_batched`]) — whole frames round-robin
+//!   over the cores, every core running the full network. Best bulk
+//!   throughput when the batch divides evenly by the core count.
+//! * **`Pipelined`** ([`Engine::run_streaming`]) — the network is cut
+//!   into contiguous layer *stages* balanced by the predicted-makespan
+//!   cost model, one core per stage; frame `t` runs on stage `i` while
+//!   frame `t−1` occupies stage `i+1` (the resource-partitioning
+//!   regime of Shen et al., arXiv:1607.00064). Stage-boundary
+//!   activations cross the external bus inside the existing per-layer
+//!   DMA accounting (the producer's OFMap write, the consumer's IFMap
+//!   read), so [`BusModel::Shared`] contention applies across
+//!   concurrently streaming stages. Layer outputs stay bit-identical
+//!   to single-core runs: both walks share one layer-step helper and
+//!   one weight-draw stream.
 
 use std::thread;
 
@@ -45,9 +63,9 @@ use crate::codegen::{layout, stage};
 use crate::core::Cpu;
 use crate::model::{ConvLayer, PoolLayer};
 
-use super::bus::{core_busy, BusModel, Segment};
+use super::bus::{core_busy, shared_divisor, stage_first_pass, stage_interval, BusModel, Segment};
 use super::executor::{conv_layer, pool_layer, ExecError, ExecMode, ExecOptions, NetLayer};
-use super::metrics::{add_stats, LayerResult, NetworkResult};
+use super::metrics::{add_stats, LayerResult, NetworkResult, PipelineResult};
 
 /// How a layer is split across the pool's cores.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -70,6 +88,30 @@ impl std::str::FromStr for ShardPolicy {
             "row-band" | "row" => Ok(Self::RowBand),
             "auto" => Ok(Self::Auto),
             other => Err(format!("unknown shard policy `{other}` (oc-tile | row-band | auto)")),
+        }
+    }
+}
+
+/// How a multi-frame stream is laid onto the pool's cores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PoolMode {
+    /// Fan whole frames out across the cores: every core runs the full
+    /// network on its share of the frames ([`Engine::run_batched`]).
+    #[default]
+    FanOut,
+    /// Partition the network into contiguous layer stages, one core per
+    /// stage, and stream frames through them
+    /// ([`Engine::run_streaming`]).
+    Pipelined,
+}
+
+impl std::str::FromStr for PoolMode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "fan-out" | "batch" => Ok(Self::FanOut),
+            "pipelined" | "pipeline" => Ok(Self::Pipelined),
+            other => Err(format!("unknown pool mode `{other}` (fan-out | pipelined)")),
         }
     }
 }
@@ -102,6 +144,10 @@ pub struct EngineConfig {
     pub batch: usize,
     /// Intra-layer shard axis for multi-core single-frame runs.
     pub shard: ShardPolicy,
+    /// Pool layout for multi-frame streams: frame fan-out or layer
+    /// pipelining. Advisory for the `run_*` entry points (each has a
+    /// fixed layout); the CLI and report tooling dispatch on it.
+    pub pool_mode: PoolMode,
     /// External-bandwidth model for multi-core runs.
     pub bus: BusModel,
     /// Cycle simulation fidelity.
@@ -120,6 +166,7 @@ impl Default for EngineConfig {
             cores: 1,
             batch: 1,
             shard: ShardPolicy::OcTile,
+            pool_mode: PoolMode::FanOut,
             bus: BusModel::Partitioned,
             mode: ExecMode::FullCycle,
             gate_bits: 16,
@@ -146,6 +193,11 @@ impl EngineConfig {
 
     pub fn shard(mut self, p: ShardPolicy) -> Self {
         self.shard = p;
+        self
+    }
+
+    pub fn pool_mode(mut self, m: PoolMode) -> Self {
+        self.pool_mode = m;
         self
     }
 
@@ -291,6 +343,24 @@ impl Engine {
         let spec = self.cfg.run_spec();
         run_batched_on(&mut self.pool, name, layers, inputs, spec)
     }
+
+    /// Layer-pipelined streaming ([`PoolMode::Pipelined`]): cut the
+    /// network into `min(cores, layers)` contiguous stages balanced by
+    /// the predicted-makespan cost model, one core per stage, and
+    /// stream `inputs` through them — frame `t` on stage `i` while
+    /// frame `t−1` occupies stage `i+1`. Layer outputs are
+    /// bit-identical to [`Engine::run_network`] per frame; the result
+    /// reports steady-state throughput, fill/drain latency and the
+    /// per-stage occupied-vs-useful cycle split.
+    pub fn run_streaming(
+        &mut self,
+        name: &str,
+        layers: &[NetLayer],
+        inputs: &[Vec<i16>],
+    ) -> Result<PipelineResult, ExecError> {
+        let spec = self.cfg.run_spec();
+        run_streaming_on(&mut self.pool, name, layers, inputs, spec)
+    }
 }
 
 /// A pool of independent ConvAix cores (one cycle simulator each).
@@ -376,11 +446,74 @@ impl LayerRunner for ShardedRunner<'_> {
     }
 }
 
+/// One layer's synthetic weight/bias draw (conv layers draw weights
+/// then biases; pool layers draw nothing). THE single definition of
+/// the draw order: the lazy per-layer walk and the up-front
+/// [`draw_tensors`] both consume the stream through this function, so
+/// tensors are bit-identical across execution modes by construction.
+fn draw_layer(rng: &mut crate::util::XorShift, layer: &NetLayer) -> Option<(Vec<i16>, Vec<i32>)> {
+    match layer {
+        NetLayer::Conv(l) => {
+            let w = rng.i16_vec(l.oc * (l.ic / l.groups) * l.fh * l.fw, -128, 128);
+            let b = rng.i32_vec(l.oc, -1000, 1000);
+            Some((w, b))
+        }
+        NetLayer::Pool(_) => None,
+    }
+}
+
+/// All layers' draws at once, for walks that revisit tensors (the
+/// pipelined stream reuses each layer's weights every frame).
+/// Single-pass walks draw lazily instead ([`walk_network`]) to keep
+/// peak memory at one layer's tensors.
+pub(crate) fn draw_tensors(layers: &[NetLayer], seed: u64) -> Vec<Option<(Vec<i16>, Vec<i32>)>> {
+    let mut rng = crate::util::XorShift::new(seed);
+    layers.iter().map(|layer| draw_layer(&mut rng, layer)).collect()
+}
+
+/// One step of THE network walk: run `layer` on `runner` against the
+/// threaded activation, which is advanced in place when the layer
+/// produces an output (FullCycle mode; analytic runs leave it alone).
+/// A shape mismatch (analytic mode, or a caller-staged input of the
+/// wrong size) substitutes zeros, exactly as the 0.2 walker did.
+pub(crate) fn step_layer<R: LayerRunner>(
+    runner: &mut R,
+    layer: &NetLayer,
+    tensors: &Option<(Vec<i16>, Vec<i32>)>,
+    act: &mut Vec<i16>,
+) -> Result<LayerResult, ExecError> {
+    let r = match layer {
+        NetLayer::Conv(l) => {
+            let x = if act.len() == l.ic * l.ih * l.iw {
+                act.clone()
+            } else {
+                vec![0i16; l.ic * l.ih * l.iw]
+            };
+            let (w, b) = tensors.as_ref().expect("conv layer without drawn tensors");
+            runner.conv(l, &x, w, b)?
+        }
+        NetLayer::Pool(l) => {
+            let x = if act.len() == l.ic * l.ih * l.iw {
+                act.clone()
+            } else {
+                vec![0i16; l.ic * l.ih * l.iw]
+            };
+            runner.pool(l, &x)?
+        }
+    };
+    if !r.out.is_empty() {
+        *act = r.out.clone();
+    }
+    Ok(r)
+}
+
 /// THE network walk: threads activations through the layer list and
-/// draws per-layer weights/biases from one xorshift stream. Every
-/// public path (single core, sharded, each batched frame, the
-/// deprecated 0.2 shims) funnels through this function, so the draws
-/// are bit-identical everywhere by construction.
+/// draws per-layer weights/biases lazily from one xorshift stream
+/// (`draw_layer` + [`step_layer`] — one layer's tensors resident at a
+/// time). Every public path (single core, sharded, each batched
+/// frame, the pipelined stage walk, the deprecated 0.2 shims) funnels
+/// through these helpers, so the draws are bit-identical everywhere
+/// by construction.
 pub(crate) fn walk_network<R: LayerRunner>(
     runner: &mut R,
     name: &str,
@@ -392,34 +525,8 @@ pub(crate) fn walk_network<R: LayerRunner>(
     let mut act = input.to_vec();
     let mut net = NetworkResult { name: name.into(), ..Default::default() };
     for layer in layers {
-        match layer {
-            NetLayer::Conv(l) => {
-                let w = rng.i16_vec(l.oc * (l.ic / l.groups) * l.fh * l.fw, -128, 128);
-                let b = rng.i32_vec(l.oc, -1000, 1000);
-                let x = if act.len() == l.ic * l.ih * l.iw {
-                    act.clone()
-                } else {
-                    vec![0i16; l.ic * l.ih * l.iw]
-                };
-                let r = runner.conv(l, &x, &w, &b)?;
-                if !r.out.is_empty() {
-                    act = r.out.clone();
-                }
-                net.layers.push(r);
-            }
-            NetLayer::Pool(l) => {
-                let x = if act.len() == l.ic * l.ih * l.iw {
-                    act.clone()
-                } else {
-                    vec![0i16; l.ic * l.ih * l.iw]
-                };
-                let r = runner.pool(l, &x)?;
-                if !r.out.is_empty() {
-                    act = r.out.clone();
-                }
-                net.layers.push(r);
-            }
-        }
+        let t = draw_layer(&mut rng, layer);
+        net.layers.push(step_layer(runner, layer, &t, &mut act)?);
     }
     Ok(net)
 }
@@ -980,6 +1087,206 @@ pub(crate) fn run_batched_on(
     Ok(br)
 }
 
+/// Predicted single-core cost of one layer, for pipeline-stage
+/// balancing — the same first-order model the `Auto` shard policy uses
+/// (MACs at ~2/3 utilization vs tensor footprints over the bus width).
+/// Only the relative ranking between candidate partitions matters.
+fn layer_cost(layer: &NetLayer) -> u64 {
+    match layer {
+        NetLayer::Conv(l) => {
+            let lg = l.per_group();
+            conv_cost(
+                l.macs(),
+                l.ic * l.ihp() * l.iwp(),
+                l.oc * lg.ic * l.fh * l.fw,
+                l.oc * l.oh() * l.ow(),
+            )
+        }
+        // pool layers carry no MACs; their cost is the SFU-hidden
+        // streaming of the tensor through the bus
+        NetLayer::Pool(l) => {
+            conv_cost(0, l.ic * l.ih * l.iw, 0, l.ic * l.oh() * l.ow())
+        }
+    }
+    .max(1)
+}
+
+/// Cut `layers` into at most `want` contiguous stages minimizing the
+/// bottleneck stage's predicted cost (the makespan analogue of
+/// `balanced_chunks` for non-uniform unit costs): half-open `(l0, l1)`
+/// layer ranges. Deterministic in its inputs; O(n·len²) on the
+/// handful of layers a CNN has.
+fn pipeline_stages(layers: &[NetLayer], want: usize) -> Vec<(usize, usize)> {
+    let len = layers.len();
+    if len == 0 {
+        return Vec::new();
+    }
+    let n = want.max(1).min(len);
+    let costs: Vec<u64> = layers.iter().map(layer_cost).collect();
+    let mut pre = vec![0u64; len + 1];
+    for (i, c) in costs.iter().enumerate() {
+        pre[i + 1] = pre[i] + c;
+    }
+    // best[k][i]: minimal bottleneck splitting layers[i..] into exactly
+    // k non-empty contiguous stages; cut[k][i]: where stage 1 of that
+    // optimum ends. Ties break toward the earliest cut, keeping the
+    // partition deterministic.
+    let mut best = vec![vec![u64::MAX; len + 1]; n + 1];
+    let mut cut = vec![vec![0usize; len + 1]; n + 1];
+    for i in 0..=len {
+        best[1][i] = pre[len] - pre[i];
+        cut[1][i] = len;
+    }
+    for k in 2..=n {
+        // stage 1 must leave at least k-1 layers for the remaining stages
+        for i in 0..=(len - k) {
+            for j in (i + 1)..=(len - (k - 1)) {
+                let v = (pre[j] - pre[i]).max(best[k - 1][j]);
+                if v < best[k][i] {
+                    best[k][i] = v;
+                    cut[k][i] = j;
+                }
+            }
+        }
+    }
+    let mut stages = Vec::with_capacity(n);
+    let (mut i, mut k) = (0usize, n);
+    while k > 0 {
+        let j = cut[k][i];
+        stages.push((i, j));
+        i = j;
+        k -= 1;
+    }
+    stages
+}
+
+/// Layer-pipelined streaming on `pool`. Shared by
+/// [`Engine::run_streaming`]; see [`PipelineResult`] for what comes
+/// back.
+///
+/// Functionally each frame is the single network walk split at the
+/// stage boundaries — same weight draws, same activation threading —
+/// so outputs are bit-identical to [`Engine::run_network`]. Timing
+/// composes per-(stage, frame) steady-state intervals (the stage's
+/// repeating schedule overlaps its DMA stream with compute across
+/// layer boundaries, see `bus::stage_interval`) through the classic
+/// flow-shop recurrence: a stage starts a frame when both the frame
+/// has left the previous stage and the stage has finished the previous
+/// frame. Stage-boundary activations cross the external bus inside
+/// the per-layer DMA accounting (producer OFMap write + consumer IFMap
+/// read), and the shared-bus divisor is the fixed point over the
+/// concurrently streaming stages' aggregate timelines.
+pub(crate) fn run_streaming_on(
+    pool: &mut CorePool,
+    name: &str,
+    layers: &[NetLayer],
+    inputs: &[Vec<i16>],
+    spec: RunSpec,
+) -> Result<PipelineResult, ExecError> {
+    let stages = pipeline_stages(layers, spec.opts.cores.min(pool.cores()).max(1));
+    let n_stages = stages.len();
+    let inner = ExecOptions { cores: 1, batch: 1, ..spec.opts };
+    let tensors = draw_tensors(layers, spec.seed);
+
+    let mut res = PipelineResult {
+        name: name.into(),
+        stages: stages.clone(),
+        bus: spec.bus,
+        ..Default::default()
+    };
+    if n_stages == 0 || inputs.is_empty() {
+        res.stage_cycles = vec![0; n_stages];
+        res.stage_useful_cycles = vec![0; n_stages];
+        return Ok(res);
+    }
+
+    // Functional walk: frame by frame through the stages, on each
+    // stage's own core, recording one Segment per layer execution.
+    // Host execution is deliberately serial: each stage's layers must
+    // run on that stage's Cpu (core affinity), and the modeled cycles
+    // are identical either way — wavefront host-threading would only
+    // speed up the simulation wall-clock, at the cost of determinism
+    // plumbing across the frame×stage dependency front.
+    let mut frame_segs: Vec<Vec<Vec<Segment>>> =
+        (0..n_stages).map(|_| Vec::with_capacity(inputs.len())).collect();
+    for input in inputs {
+        let mut act = input.clone();
+        let mut net = NetworkResult { name: name.into(), ..Default::default() };
+        for (s, &(l0, l1)) in stages.iter().enumerate() {
+            let mut segs = Vec::with_capacity(l1 - l0);
+            for li in l0..l1 {
+                let mut runner = SoloRunner { cpu: &mut pool.cpus[s], opts: inner };
+                let r = step_layer(&mut runner, &layers[li], &tensors[li], &mut act)?;
+                segs.push(Segment::of_layer(&r));
+                net.layers.push(r);
+            }
+            frame_segs[s].push(segs);
+        }
+        res.outputs.push(net.layers.last().map(|l| l.out.clone()).unwrap_or_default());
+        res.frames.push(net);
+    }
+
+    // bus pricing: the shared divisor is the fixed point over the
+    // stages' aggregate timelines (all stages stream concurrently in
+    // steady state)
+    let d = match spec.bus {
+        BusModel::Partitioned => 1,
+        BusModel::Shared => {
+            let per_stage: Vec<Vec<Segment>> =
+                frame_segs.iter().map(|fs| fs.iter().flatten().copied().collect()).collect();
+            shared_divisor(&per_stage)
+        }
+    };
+
+    // Per-(stage, frame) times: a stage's FIRST frame has no repeating
+    // schedule to prefetch against, so its layers chain at their
+    // individual max(compute, dma) times (`stage_first_pass` — this
+    // prices the fill phase honestly); from the second frame on the
+    // schedule repeats and the whole-stage overlap applies
+    // (`stage_interval`). The steady-state metric is always the
+    // interval view — it is what a long stream converges to.
+    let n_frames = inputs.len();
+    let priced = |segs: &[Segment], f: usize, div: u64| {
+        if f == 0 {
+            stage_first_pass(segs, div)
+        } else {
+            stage_interval(segs, div)
+        }
+    };
+    let t: Vec<Vec<u64>> = frame_segs
+        .iter()
+        .map(|fs| fs.iter().enumerate().map(|(f, segs)| priced(segs, f, d)).collect())
+        .collect();
+    res.stage_cycles = t.iter().map(|row| row.iter().sum()).collect();
+    res.stage_useful_cycles = frame_segs
+        .iter()
+        .map(|fs| fs.iter().enumerate().map(|(f, segs)| priced(segs, f, 1)).sum())
+        .collect();
+    res.steady_interval_cycles = frame_segs
+        .iter()
+        .flat_map(|fs| fs.iter().map(|segs| stage_interval(segs, d)))
+        .max()
+        .unwrap_or(0);
+
+    let mut finish = vec![vec![0u64; n_frames]; n_stages];
+    let mut last_frame_entry = 0u64;
+    for f in 0..n_frames {
+        for s in 0..n_stages {
+            let prev_stage = if s == 0 { 0 } else { finish[s - 1][f] };
+            let prev_frame = if f == 0 { 0 } else { finish[s][f - 1] };
+            let start = prev_stage.max(prev_frame);
+            if s == 0 && f + 1 == n_frames {
+                last_frame_entry = start;
+            }
+            finish[s][f] = start + t[s][f];
+        }
+    }
+    res.fill_cycles = finish[n_stages - 1][0];
+    res.makespan_cycles = finish[n_stages - 1][n_frames - 1];
+    res.drain_cycles = res.makespan_cycles - last_frame_entry;
+    Ok(res)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1102,6 +1409,10 @@ mod tests {
         // DMA-bound; row bands divide it
         let early = ConvLayer::new("c11", 3, 224, 224, 64, 3, 3, 1, 1, 1);
         assert_eq!(resolve_conv_policy(ShardPolicy::Auto, &early, 4), ShardPolicy::RowBand);
+        // AlexNet conv1-like (3 channels in, 11x11 stride-4): the other
+        // canonical few-output-channel input layer must also go row-band
+        let alex1 = ConvLayer::new("aconv1", 3, 227, 227, 96, 11, 11, 4, 0, 1);
+        assert_eq!(resolve_conv_policy(ShardPolicy::Auto, &alex1, 4), ShardPolicy::RowBand);
         // deep, spatially small layers keep the oc-tile policy
         let deep = ConvLayer::new("c53", 512, 14, 14, 512, 3, 3, 1, 1, 1);
         assert_eq!(resolve_conv_policy(ShardPolicy::Auto, &deep, 4), ShardPolicy::OcTile);
@@ -1194,6 +1505,128 @@ mod tests {
         }
         // useful work is bus-independent
         assert_eq!(shared.core_useful_cycles, part.core_useful_cycles);
+    }
+
+    #[test]
+    fn pipeline_stages_partition_and_balance() {
+        let layers = vec![
+            NetLayer::Conv(ConvLayer::new("c1", 4, 24, 24, 16, 3, 3, 1, 1, 1)),
+            NetLayer::Pool(PoolLayer { name: "p1", ic: 16, ih: 24, iw: 24, size: 2, stride: 2 }),
+            NetLayer::Conv(ConvLayer::new("c2", 16, 12, 12, 32, 3, 3, 1, 1, 1)),
+            NetLayer::Conv(ConvLayer::new("c3", 32, 12, 12, 32, 3, 3, 1, 1, 1)),
+            NetLayer::Conv(ConvLayer::new("c4", 32, 12, 12, 48, 3, 3, 1, 1, 1)),
+        ];
+        for want in 1..=6usize {
+            let stages = pipeline_stages(&layers, want);
+            assert_eq!(stages.len(), want.min(layers.len()), "want {want}");
+            // contiguous, non-empty, covering every layer exactly once
+            let mut next = 0usize;
+            for &(l0, l1) in &stages {
+                assert_eq!(l0, next, "want {want}: stages must be contiguous");
+                assert!(l1 > l0, "want {want}: empty stage");
+                next = l1;
+            }
+            assert_eq!(next, layers.len(), "want {want}: uncovered tail");
+        }
+        // the DP must beat (or match) the naive equal-count split on a
+        // skewed cost profile: one heavy layer, several light ones
+        let costs: Vec<u64> = layers.iter().map(layer_cost).collect();
+        let stages = pipeline_stages(&layers, 2);
+        let bottleneck = |cuts: &[(usize, usize)]| {
+            cuts.iter().map(|&(a, b)| costs[a..b].iter().sum::<u64>()).max().unwrap()
+        };
+        assert!(bottleneck(&stages) <= bottleneck(&[(0, 3), (3, 5)]));
+        assert!(bottleneck(&stages) <= bottleneck(&[(0, 2), (2, 5)]));
+        // degenerate inputs
+        assert!(pipeline_stages(&[], 4).is_empty());
+    }
+
+    #[test]
+    fn streaming_matches_single_core_frames_bitexact() {
+        let layers = vec![
+            NetLayer::Conv(ConvLayer::new("c1", 4, 12, 12, 16, 3, 3, 1, 1, 1)),
+            NetLayer::Pool(PoolLayer { name: "p1", ic: 16, ih: 12, iw: 12, size: 2, stride: 2 }),
+            NetLayer::Conv(ConvLayer::new("c2", 16, 6, 6, 16, 3, 3, 1, 1, 1)),
+        ];
+        let mut rng = XorShift::new(31);
+        let inputs: Vec<Vec<i16>> =
+            (0..3).map(|_| rng.i16_vec(4 * 12 * 12, -1000, 1000)).collect();
+        let mut engine = EngineConfig::new()
+            .cores(2)
+            .pool_mode(PoolMode::Pipelined)
+            .seed(42)
+            .ext_capacity(1 << 22)
+            .build();
+        let pr = engine.run_streaming("mini", &layers, &inputs).unwrap();
+        assert_eq!(pr.stages.len(), 2);
+        assert_eq!(pr.frames.len(), 3);
+        for (i, input) in inputs.iter().enumerate() {
+            let mut solo = EngineConfig::new().seed(42).ext_capacity(1 << 22).build();
+            let f = solo.run_network("mini", &layers, input).unwrap();
+            assert_eq!(pr.outputs[i], f.layers.last().unwrap().out, "frame {i}");
+            for (lp, ls) in pr.frames[i].layers.iter().zip(&f.layers) {
+                assert_eq!(lp.out, ls.out, "frame {i} layer {} output", ls.name);
+                assert_eq!(lp.macs, ls.macs, "frame {i} layer {} macs", ls.name);
+            }
+            if i == 0 {
+                // the first frame has no pipeline overlap to exploit:
+                // on a partitioned bus its fill latency is exactly the
+                // single-core frame latency, split across the stages
+                assert_eq!(pr.fill_cycles, f.cycles(), "fill != single-core frame latency");
+            }
+        }
+        // schedule sanity: the pipe fills, streams at the bottleneck
+        // interval, and drains
+        assert!(pr.steady_interval_cycles > 0);
+        assert!(pr.fill_cycles >= pr.steady_interval_cycles);
+        assert!(pr.makespan_cycles >= pr.fill_cycles);
+        assert!(pr.drain_cycles <= pr.makespan_cycles);
+        // every stage runs its frames serially, so no stage can be busy
+        // for longer than the whole stream
+        let busiest = pr.stage_cycles.iter().copied().max().unwrap();
+        assert!(pr.makespan_cycles >= busiest, "makespan below the busiest stage");
+        // partitioned bus: occupied == useful; the occupied-vs-useful
+        // split is checked in raw cycles (stage_utilization clamps, so
+        // a ratio assert could never fail)
+        assert_eq!(pr.stage_cycles, pr.stage_useful_cycles);
+        for &u in &pr.stage_useful_cycles {
+            assert!(u <= pr.makespan_cycles, "useful {u} exceeds makespan");
+        }
+    }
+
+    #[test]
+    fn streaming_shared_bus_only_adds_wait() {
+        let layers = vec![
+            NetLayer::Conv(ConvLayer::new("c1", 2, 24, 24, 16, 3, 3, 1, 1, 1)),
+            NetLayer::Conv(ConvLayer::new("c2", 16, 24, 24, 16, 3, 3, 1, 1, 1)),
+        ];
+        let inputs: Vec<Vec<i16>> = (0..4).map(|_| vec![0i16; 2 * 24 * 24]).collect();
+        let run = |bus: BusModel| {
+            let mut engine = EngineConfig::new()
+                .cores(2)
+                .pool_mode(PoolMode::Pipelined)
+                .bus(bus)
+                .mode(ExecMode::TileAnalytic)
+                .ext_capacity(1 << 22)
+                .build();
+            engine.run_streaming("duo", &layers, &inputs).unwrap()
+        };
+        let part = run(BusModel::Partitioned);
+        let shared = run(BusModel::Shared);
+        assert!(shared.makespan_cycles >= part.makespan_cycles);
+        assert!(shared.steady_interval_cycles >= part.steady_interval_cycles);
+        // useful work is bus-independent; contention never changes MACs
+        assert_eq!(shared.stage_useful_cycles, part.stage_useful_cycles);
+        for (fs, fp) in shared.frames.iter().zip(&part.frames) {
+            assert_eq!(fs.macs(), fp.macs());
+        }
+        // raw-cycle check (stage_utilization clamps to 1.0, so a ratio
+        // assert would be vacuous): useful work fits inside both the
+        // occupied view and the makespan
+        for (s, &u) in shared.stage_useful_cycles.iter().enumerate() {
+            assert!(u <= shared.stage_cycles[s], "stage {s}: useful above occupied");
+            assert!(u <= shared.makespan_cycles, "stage {s}: useful above makespan");
+        }
     }
 
     #[test]

@@ -421,6 +421,17 @@ pub enum NetLayer {
     Pool(PoolLayer),
 }
 
+impl NetLayer {
+    /// The wrapped layer's name (conv and pool descriptors both carry
+    /// static names from the model tables).
+    pub fn name(&self) -> &'static str {
+        match self {
+            NetLayer::Conv(l) => l.name,
+            NetLayer::Pool(l) => l.name,
+        }
+    }
+}
+
 /// Deprecated 0.2 shim: run one conv layer on one core.
 #[deprecated(
     since = "0.3.0",

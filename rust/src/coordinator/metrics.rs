@@ -1,6 +1,9 @@
-//! Metric aggregation: the quantities of Table II.
+//! Metric aggregation: the quantities of Table II, plus the multi-core
+//! serving views (batched fan-out, layer-pipelined streaming).
 
 use crate::core::CoreStats;
+
+use super::bus::BusModel;
 
 /// Result of executing one layer.
 #[derive(Debug, Clone, Default)]
@@ -132,6 +135,96 @@ impl NetworkResult {
     }
 }
 
+/// Result of a layer-pipelined streaming run
+/// ([`Engine::run_streaming`](super::engine::Engine::run_streaming)):
+/// the network is cut into contiguous layer *stages*, one core per
+/// stage, and frames stream through them — frame `t` on stage `i`
+/// while frame `t−1` occupies stage `i+1`.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineResult {
+    pub name: String,
+    /// Per-frame network results, in input order — layer outputs are
+    /// bit-identical to single-core [`NetworkResult`] runs.
+    pub frames: Vec<NetworkResult>,
+    /// Final activation per frame (empty vectors in analytic mode).
+    pub outputs: Vec<Vec<i16>>,
+    /// Half-open layer ranges: stage `s` runs `layers[stages[s].0 ..
+    /// stages[s].1]` on core `s`. Balanced by the predicted-makespan
+    /// cost model.
+    pub stages: Vec<(usize, usize)>,
+    /// Occupied cycles per stage core over the whole stream, priced
+    /// under the run's bus model (includes shared-bus wait).
+    pub stage_cycles: Vec<u64>,
+    /// Stage cycles at full private bandwidth — the useful-work view.
+    /// Equals `stage_cycles` under a partitioned bus.
+    pub stage_useful_cycles: Vec<u64>,
+    /// Steady-state initiation interval: the bottleneck stage's
+    /// per-frame cycles. One frame leaves the pipe every interval once
+    /// it is full.
+    pub steady_interval_cycles: u64,
+    /// Fill latency: cycles until the first frame leaves the last stage.
+    pub fill_cycles: u64,
+    /// Drain latency: cycles the *last* frame spends in the pipe (from
+    /// entering stage 0 to leaving the last stage).
+    pub drain_cycles: u64,
+    /// End-to-end cycles for the whole stream (flow-shop makespan).
+    pub makespan_cycles: u64,
+    /// External-bus model the stream was priced under.
+    pub bus: BusModel,
+}
+
+impl PipelineResult {
+    /// Steady-state throughput at the modeled clock: one frame per
+    /// initiation interval once the pipe is full. Excludes fill/drain —
+    /// the number a long-running stream converges to.
+    pub fn steady_state_fps(&self) -> f64 {
+        if self.steady_interval_cycles == 0 {
+            return 0.0;
+        }
+        crate::CLOCK_HZ as f64 / self.steady_interval_cycles as f64
+    }
+
+    /// Whole-stream throughput including fill and drain: frames over
+    /// the flow-shop makespan.
+    pub fn throughput_fps(&self) -> f64 {
+        if self.makespan_cycles == 0 {
+            return 0.0;
+        }
+        self.frames.len() as f64 / (self.makespan_cycles as f64 / crate::CLOCK_HZ as f64)
+    }
+
+    /// What the stream would cost serially on one core (the sum of the
+    /// per-frame single-core cycle counts).
+    pub fn serial_cycles(&self) -> u64 {
+        self.frames.iter().map(|f| f.cycles()).sum()
+    }
+
+    /// Cycle-level speedup of the pipelined stream over one core.
+    pub fn speedup(&self) -> f64 {
+        if self.makespan_cycles == 0 {
+            return 1.0;
+        }
+        self.serial_cycles() as f64 / self.makespan_cycles as f64
+    }
+
+    /// Per-stage useful fraction of the makespan: private-bandwidth
+    /// stage cycles over the stream makespan. Shared-bus wait is not
+    /// useful work, so contended stages report < 1.0 — never above.
+    pub fn stage_utilization(&self) -> Vec<f64> {
+        let mk = self.makespan_cycles.max(1) as f64;
+        self.stage_useful_cycles.iter().map(|&c| (c as f64 / mk).min(1.0)).collect()
+    }
+
+    /// Aggregate core activity over all frames (for the energy model).
+    pub fn stats(&self) -> CoreStats {
+        let mut acc = CoreStats::default();
+        for f in &self.frames {
+            acc = add_stats(&acc, &f.stats());
+        }
+        acc
+    }
+}
+
 pub(crate) fn add_stats(a: &CoreStats, b: &CoreStats) -> CoreStats {
     macro_rules! s {
         ($($f:ident),* $(,)?) => { CoreStats { $($f: a.$f + b.$f),* } };
@@ -200,6 +293,28 @@ mod tests {
         let mut n = NetworkResult { name: "n".into(), ..Default::default() };
         n.layers.push(r);
         assert!((n.utilization() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pipeline_result_metrics() {
+        let pr = PipelineResult {
+            frames: vec![NetworkResult::default(); 8],
+            stage_cycles: vec![40_000_000, 20_000_000],
+            stage_useful_cycles: vec![40_000_000, 10_000_000],
+            steady_interval_cycles: 4_000_000, // 100 f/s at 400 MHz
+            makespan_cycles: 40_000_000,       // 8 frames in 0.1 s
+            ..Default::default()
+        };
+        assert!((pr.steady_state_fps() - 100.0).abs() < 1e-9);
+        assert!((pr.throughput_fps() - 80.0).abs() < 1e-9);
+        let u = pr.stage_utilization();
+        assert!((u[0] - 1.0).abs() < 1e-9);
+        assert!((u[1] - 0.25).abs() < 1e-9);
+        // empty pipelines report zeros, not NaNs
+        let empty = PipelineResult::default();
+        assert_eq!(empty.steady_state_fps(), 0.0);
+        assert_eq!(empty.throughput_fps(), 0.0);
+        assert_eq!(empty.speedup(), 1.0);
     }
 
     #[test]

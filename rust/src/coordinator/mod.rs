@@ -12,11 +12,13 @@
 //!
 //! The public entry point is the [`engine`] module: build an [`Engine`]
 //! from an [`EngineConfig`] (cores, batch, [`ShardPolicy`],
-//! [`BusModel`], mode, seed) and call `run_layer` / `run_network` /
-//! `run_batched`. One network walk serves every mode; the multi-core
-//! pool shards layers by output-channel tiles or output-row bands and
-//! prices external bandwidth per the [`bus`] contention model. The 0.2
-//! free functions in [`executor`] / [`scheduler`] are deprecated shims.
+//! [`PoolMode`], [`BusModel`], mode, seed) and call `run_layer` /
+//! `run_network` / `run_batched` / `run_streaming`. One network walk
+//! serves every mode; the multi-core pool shards layers by
+//! output-channel tiles or output-row bands, fans batched frames out,
+//! or pipelines contiguous layer stages across the cores, and prices
+//! external bandwidth per the [`bus`] contention model. The 0.2 free
+//! functions in [`executor`] / [`scheduler`] are deprecated shims.
 
 pub mod bus;
 pub mod engine;
@@ -25,9 +27,9 @@ pub mod metrics;
 pub mod scheduler;
 
 pub use bus::BusModel;
-pub use engine::{BatchedResult, CorePool, Engine, EngineConfig, ShardPolicy};
+pub use engine::{BatchedResult, CorePool, Engine, EngineConfig, PoolMode, ShardPolicy};
 pub use executor::{ExecMode, ExecOptions, NetLayer};
-pub use metrics::{LayerResult, NetworkResult};
+pub use metrics::{LayerResult, NetworkResult, PipelineResult};
 
 // 0.2 compatibility re-exports (deprecated shims, kept one release).
 #[allow(deprecated)]

@@ -2,8 +2,10 @@
 //! sharding are pure reshufflings of the single-core schedule — outputs
 //! and MAC counts stay bit-identical across conv, pool and grouped-conv
 //! layers — and the shared-bus model only ever *adds* wait cycles.
+//! Layer-pipelined streaming obeys the same contract: every frame of a
+//! pipelined stream reproduces the single-core network walk bit-exactly.
 
-use convaix::coordinator::{BusModel, EngineConfig, NetLayer, ShardPolicy};
+use convaix::coordinator::{BusModel, EngineConfig, NetLayer, PoolMode, ShardPolicy};
 use convaix::model::{ConvLayer, PoolLayer};
 use convaix::util::proptest::prop;
 use convaix::util::XorShift;
@@ -122,6 +124,97 @@ fn random_pool_layers_policy_equivalence() {
             );
         }
     });
+}
+
+/// Pipelined streaming is a pure re-timing of the single-core walk:
+/// every frame's layer outputs and MACs are bit-identical to
+/// `run_network` on one core, at every pipe depth, under either bus.
+#[test]
+fn pipelined_stream_bit_identical_to_single_core() {
+    let layers = mini_net();
+    let mut rng = XorShift::new(4321);
+    let inputs: Vec<Vec<i16>> =
+        (0..3).map(|_| rng.i16_vec(3 * 16 * 16, -2000, 2000)).collect();
+
+    // single-core reference, one walk per frame
+    let mut solo = EngineConfig::new().seed(7).ext_capacity(1 << 23).build();
+    let base: Vec<_> = inputs
+        .iter()
+        .map(|x| solo.run_network("mini", &layers, x).unwrap())
+        .collect();
+
+    for cores in [2usize, 3, 4] {
+        for bus in [BusModel::Partitioned, BusModel::Shared] {
+            let mut engine = EngineConfig::new()
+                .cores(cores)
+                .pool_mode(PoolMode::Pipelined)
+                .bus(bus)
+                .seed(7)
+                .ext_capacity(1 << 23)
+                .build();
+            let pr = engine.run_streaming("mini", &layers, &inputs).unwrap();
+            assert_eq!(pr.stages.len(), cores.min(layers.len()), "{cores}-stage cut");
+            assert_eq!(pr.frames.len(), inputs.len());
+            for (f, b) in pr.frames.iter().zip(&base) {
+                assert_eq!(f.layers.len(), b.layers.len());
+                for (lp, lb) in f.layers.iter().zip(&b.layers) {
+                    assert_eq!(
+                        lp.out, lb.out,
+                        "{cores}-core {bus:?} layer {} output",
+                        lb.name
+                    );
+                    assert_eq!(lp.macs, lb.macs, "{cores}-core layer {} macs", lb.name);
+                }
+            }
+            // timing sanity: fill covers one full traversal, the stream
+            // makespan covers the busiest stage, utilization is a fraction
+            assert!(pr.fill_cycles >= pr.steady_interval_cycles);
+            assert!(pr.makespan_cycles >= pr.fill_cycles);
+            assert!(
+                pr.makespan_cycles >= pr.stage_cycles.iter().copied().max().unwrap()
+            );
+            // occupied-vs-useful split in raw cycles (stage_utilization
+            // clamps to 1.0, so asserting the ratio would be vacuous)
+            for (s, &u) in pr.stage_useful_cycles.iter().enumerate() {
+                assert!(u <= pr.stage_cycles[s], "stage {s}: useful above occupied");
+                assert!(u <= pr.makespan_cycles, "stage {s}: useful above makespan");
+            }
+            if bus == BusModel::Partitioned {
+                assert_eq!(pr.stage_cycles, pr.stage_useful_cycles);
+            }
+        }
+    }
+}
+
+/// The shared bus can only slow a pipelined stream down, never change
+/// what it computes.
+#[test]
+fn pipelined_shared_bus_is_conservative() {
+    let layers = mini_net();
+    let mut rng = XorShift::new(88);
+    let inputs: Vec<Vec<i16>> =
+        (0..2).map(|_| rng.i16_vec(3 * 16 * 16, -2000, 2000)).collect();
+    let run = |bus: BusModel| {
+        let mut engine = EngineConfig::new()
+            .cores(4)
+            .pool_mode(PoolMode::Pipelined)
+            .bus(bus)
+            .seed(5)
+            .ext_capacity(1 << 23)
+            .build();
+        engine.run_streaming("mini", &layers, &inputs).unwrap()
+    };
+    let part = run(BusModel::Partitioned);
+    let shared = run(BusModel::Shared);
+    assert!(shared.makespan_cycles >= part.makespan_cycles);
+    assert!(shared.steady_interval_cycles >= part.steady_interval_cycles);
+    assert!(shared.fill_cycles >= part.fill_cycles);
+    assert_eq!(shared.stage_useful_cycles, part.stage_useful_cycles);
+    for (fs, fp) in shared.frames.iter().zip(&part.frames) {
+        for (ls, lp) in fs.layers.iter().zip(&fp.layers) {
+            assert_eq!(ls.out, lp.out, "bus model changed layer {} output", lp.name);
+        }
+    }
 }
 
 /// The shared bus can only slow a run down, never change its results,
