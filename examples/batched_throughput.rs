@@ -9,7 +9,7 @@
 //!     cargo run --release --example batched_throughput
 
 use convaix::coordinator::{BusModel, EngineConfig, ExecMode, NetLayer};
-use convaix::model::{alexnet_conv, vgg16_conv};
+use convaix::model::{alexnet_conv, conv_stack, vgg16_conv};
 use convaix::util::table::Table;
 use convaix::util::XorShift;
 
@@ -17,7 +17,7 @@ fn main() -> anyhow::Result<()> {
     const BATCH: usize = 8;
     for (name, conv) in [("AlexNet", alexnet_conv()), ("VGG-16", vgg16_conv())] {
         let (ic, ih, iw) = (conv[0].ic, conv[0].ih, conv[0].iw);
-        let layers: Vec<NetLayer> = conv.into_iter().map(NetLayer::Conv).collect();
+        let layers: Vec<NetLayer> = conv_stack(conv);
         let mut rng = XorShift::new(0xF00D);
         let inputs: Vec<Vec<i16>> =
             (0..BATCH).map(|_| rng.i16_vec(ic * ih * iw, -2000, 2000)).collect();

@@ -5,26 +5,34 @@
 //! regime of Shen et al.'s resource partitioning (arXiv:1607.00064),
 //! next to the frame fan-out mode the same pool offers.
 //!
-//! AlexNet and VGG-16 conv stacks, a 5-frame stream (deliberately not
-//! a multiple of the core count), 1 → 4 cores, tile-analytic mode at
-//! the paper's 8-bit gated operating point, shared external bus.
+//! AlexNet and VGG-16 — both the conv stacks and the full end-to-end
+//! nets with their fc6/fc7/fc8 tails (the weight-DMA-bound FC tail
+//! lands in its own stage; watch the per-stage table) — a 5-frame
+//! stream (deliberately not a multiple of the core count), 1 → 4
+//! cores, tile-analytic mode at the paper's 8-bit gated operating
+//! point, shared external bus.
 //!
 //!     cargo run --release --example streaming_pipeline
 
 use convaix::cli::report;
 use convaix::coordinator::{BusModel, EngineConfig, ExecMode, NetLayer, PoolMode};
-use convaix::model::{alexnet_conv, vgg16_conv};
+use convaix::model::{alexnet_conv, alexnet_full, conv_stack, vgg16_conv, vgg16_full};
 use convaix::util::table::Table;
 use convaix::util::XorShift;
 
 fn main() -> anyhow::Result<()> {
     const STREAM: usize = 5;
-    for (name, conv) in [("AlexNet", alexnet_conv()), ("VGG-16", vgg16_conv())] {
-        let (ic, ih, iw) = (conv[0].ic, conv[0].ih, conv[0].iw);
-        let layers: Vec<NetLayer> = conv.into_iter().map(NetLayer::Conv).collect();
+    let nets: [(&str, Vec<NetLayer>); 4] = [
+        ("AlexNet", conv_stack(alexnet_conv())),
+        ("VGG-16", conv_stack(vgg16_conv())),
+        ("AlexNet-full", alexnet_full()),
+        ("VGG-16-full", vgg16_full()),
+    ];
+    for (name, layers) in nets {
+        let in_elems = layers[0].op().in_elems();
         let mut rng = XorShift::new(0x57AE);
         let inputs: Vec<Vec<i16>> =
-            (0..STREAM).map(|_| rng.i16_vec(ic * ih * iw, -2000, 2000)).collect();
+            (0..STREAM).map(|_| rng.i16_vec(in_elems, -2000, 2000)).collect();
 
         let mut t = Table::new(
             &format!("{name}: {STREAM}-frame stream, pipeline vs frame fan-out"),

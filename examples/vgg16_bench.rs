@@ -7,7 +7,7 @@
 use convaix::cli::report;
 use convaix::coordinator::{EngineConfig, ExecMode};
 use convaix::energy::power;
-use convaix::model::vgg16_conv;
+use convaix::model::{conv_stack, vgg16_conv};
 use convaix::util::table::Table;
 
 fn main() -> anyhow::Result<()> {
@@ -16,7 +16,7 @@ fn main() -> anyhow::Result<()> {
         .mode(if full { ExecMode::FullCycle } else { ExecMode::TileAnalytic })
         .gate_bits(8);
     let t0 = std::time::Instant::now();
-    let net = report::bench_network("VGG-16", &vgg16_conv(), &cfg)?;
+    let net = report::bench_network("VGG-16", &conv_stack(vgg16_conv()), &cfg)?;
 
     let mut t = Table::new(
         "VGG-16 conv layers on ConvAix",

@@ -4,15 +4,23 @@
 //! (wall-clock). Also duels the shard policies on the early VGG layers,
 //! sweeps the batched frame fan-out mode under both bus models, and
 //! duels layer-pipelined streaming against frame fan-out on a 5-frame
-//! stream (the batch-misaligned serving case).
+//! stream (the batch-misaligned serving case) — on the conv stacks and
+//! on the full nets with their DMA-bound FC tails.
+//!
+//! Emits `BENCH_multicore.json` (steady f/s, makespans, per-stage
+//! utilization per config) so the performance trajectory is tracked
+//! machine-readably across PRs. `MULTICORE_NO_ASSERT=1` skips the hard
+//! targets without skipping the report.
 //!
 //!     cargo bench --bench multicore
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use convaix::cli::report;
 use convaix::coordinator::{BusModel, EngineConfig, ExecMode, NetLayer, PoolMode, ShardPolicy};
-use convaix::model::{alexnet_conv, vgg16_conv};
+use convaix::model::{alexnet_conv, alexnet_full, conv_stack, vgg16_conv, vgg16_full};
+use convaix::util::json::Json;
 use convaix::util::table::Table;
 use convaix::util::XorShift;
 
@@ -20,23 +28,35 @@ fn cfg_base() -> EngineConfig {
     EngineConfig::new().mode(ExecMode::TileAnalytic).gate_bits(8)
 }
 
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
 fn main() {
     let host_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let no_assert = std::env::var_os("MULTICORE_NO_ASSERT").is_some();
     println!("host threads available: {host_threads}\n");
+    let mut dump: BTreeMap<String, Json> = BTreeMap::new();
+    dump.insert("host_threads".into(), num(host_threads as f64));
 
     // --- layer-sharded sweep -------------------------------------------------
     let mut t = Table::new(
         "VGG-16 conv stack, tile-analytic, layer-sharded across N cores (oc-tile)",
         &["Cores", "Model cycles", "Cycle speedup", "Wall [s]", "Wall speedup"],
     );
+    let vgg_conv_stack: Vec<NetLayer> = conv_stack(vgg16_conv());
     let mut wall1 = 0.0f64;
     let mut cycles1 = 0u64;
     let mut wall_speedup_at_4 = 0.0f64;
+    let mut sharded_rows = Vec::new();
     for cores in [1usize, 2, 4] {
         let cfg = cfg_base().cores(cores);
         let t0 = Instant::now();
-        let net = report::bench_network("VGG-16", &vgg16_conv(), &cfg).expect("vgg16 mc");
+        let net = report::bench_network("VGG-16", &vgg_conv_stack, &cfg).expect("vgg16 mc");
         let wall = t0.elapsed().as_secs_f64();
         if cores == 1 {
             wall1 = wall;
@@ -46,15 +66,24 @@ fn main() {
         if cores == 4 {
             wall_speedup_at_4 = wall_speedup;
         }
+        let cycle_speedup = cycles1 as f64 / net.cycles().max(1) as f64;
         t.row(&[
             cores.to_string(),
             net.cycles().to_string(),
-            format!("{:.2}x", cycles1 as f64 / net.cycles().max(1) as f64),
+            format!("{cycle_speedup:.2}x"),
             format!("{wall:.2}"),
             format!("{wall_speedup:.2}x"),
         ]);
+        sharded_rows.push(obj(vec![
+            ("cores", num(cores as f64)),
+            ("model_cycles", num(net.cycles() as f64)),
+            ("cycle_speedup", num(cycle_speedup)),
+            ("wall_s", num(wall)),
+            ("wall_speedup", num(wall_speedup)),
+        ]));
     }
     t.print();
+    dump.insert("sharded_vgg_conv".into(), Json::Arr(sharded_rows));
 
     // --- shard-policy duel on the early VGG layers ---------------------------
     // Early layers have few output channels and huge inputs: oc-tile
@@ -68,6 +97,7 @@ fn main() {
     );
     let mut conv11_oc = 0u64;
     let mut conv11_rb = 0u64;
+    let mut duel_rows = Vec::new();
     for l in &vgg16_conv()[..2] {
         let mut rng = XorShift::new(0xD0E1);
         let x = vec![0i16; l.ic * l.ih * l.iw];
@@ -90,15 +120,15 @@ fn main() {
             auto.to_string(),
             format!("{:.2}x", oc as f64 / rb.max(1) as f64),
         ]);
+        duel_rows.push(obj(vec![
+            ("layer", Json::Str(l.name.into())),
+            ("oc_tile_cycles", num(oc as f64)),
+            ("row_band_cycles", num(rb as f64)),
+            ("auto_cycles", num(auto as f64)),
+        ]));
     }
     t.print();
-    if !no_assert {
-        assert!(
-            conv11_rb < conv11_oc,
-            "row-band ({conv11_rb}) must beat oc-tile ({conv11_oc}) on conv1_1 at 4 cores \
-             (set MULTICORE_NO_ASSERT=1 to report without asserting)"
-        );
-    }
+    dump.insert("policy_duel_4c".into(), Json::Arr(duel_rows));
     println!(
         "conv1_1 @ 4 cores: row-band {conv11_rb} vs oc-tile {conv11_oc} cycles \
          ({:.2}x)\n",
@@ -106,7 +136,6 @@ fn main() {
     );
 
     // --- batched frame fan-out sweep, shared vs partitioned bus --------------
-    let conv: Vec<NetLayer> = vgg16_conv().into_iter().map(NetLayer::Conv).collect();
     let frame = vec![0i16; 3 * 224 * 224];
     let inputs: Vec<Vec<i16>> = (0..4).map(|_| frame.clone()).collect();
     let mut t = Table::new(
@@ -120,10 +149,11 @@ fn main() {
             "Shared f/s",
         ],
     );
+    let mut batched_rows = Vec::new();
     for cores in [1usize, 2, 4] {
         let run = |bus: BusModel| {
             let mut engine = cfg_base().cores(cores).batch(inputs.len()).bus(bus).build();
-            engine.run_batched("VGG-16", &conv, &inputs).expect("batch")
+            engine.run_batched("VGG-16", &vgg_conv_stack, &inputs).expect("batch")
         };
         let part = run(BusModel::Partitioned);
         let shared = run(BusModel::Shared);
@@ -139,8 +169,21 @@ fn main() {
             format!("{:.2}x", shared.speedup()),
             format!("{:.1}", shared.throughput_fps()),
         ]);
+        batched_rows.push(obj(vec![
+            ("cores", num(cores as f64)),
+            ("partitioned_makespan", num(part.makespan_cycles() as f64)),
+            ("shared_makespan", num(shared.makespan_cycles() as f64)),
+            ("partitioned_speedup", num(part.speedup())),
+            ("shared_speedup", num(shared.speedup())),
+            ("shared_fps", num(shared.throughput_fps())),
+            (
+                "shared_core_util",
+                Json::Arr(shared.core_utilization().into_iter().map(num).collect()),
+            ),
+        ]));
     }
     t.print();
+    dump.insert("batched_vgg_conv".into(), Json::Arr(batched_rows));
 
     // --- pipeline vs frame fan-out duel ---------------------------------
     // Streaming serving: 5 frames (deliberately NOT a multiple of the
@@ -150,7 +193,8 @@ fn main() {
     // the pipeline keeps emitting one frame per bottleneck-stage
     // interval once full. Acceptance target: pipelined steady-state
     // throughput >= the fan-out batch throughput on the VGG-16 conv
-    // stack at 4 cores.
+    // stack at 4 cores. The full nets (…-full) ride along so the
+    // trajectory of the DMA-bound FC tails is tracked too.
     const STREAM: usize = 5;
     let mut t = Table::new(
         "Streaming duel: 5 frames on 4 cores, shared bus — fan-out vs pipeline",
@@ -158,10 +202,15 @@ fn main() {
     );
     let mut vgg_fanout_fps = 0.0f64;
     let mut vgg_steady_fps = 0.0f64;
-    for (name, conv) in [("AlexNet", alexnet_conv()), ("VGG-16", vgg16_conv())] {
-        let (ic, ih, iw) = (conv[0].ic, conv[0].ih, conv[0].iw);
-        let layers: Vec<NetLayer> = conv.into_iter().map(NetLayer::Conv).collect();
-        let frame = vec![0i16; ic * ih * iw];
+    let mut stream_rows = Vec::new();
+    let nets: [(&str, Vec<NetLayer>); 4] = [
+        ("AlexNet", conv_stack(alexnet_conv())),
+        ("VGG-16", vgg_conv_stack.clone()),
+        ("AlexNet-full", alexnet_full()),
+        ("VGG-16-full", vgg16_full()),
+    ];
+    for (name, layers) in nets {
+        let frame = vec![0i16; layers[0].op().in_elems()];
         let inputs: Vec<Vec<i16>> = (0..STREAM).map(|_| frame.clone()).collect();
 
         let mut fan = cfg_base().cores(4).batch(STREAM).bus(BusModel::Shared).build();
@@ -193,9 +242,54 @@ fn main() {
             format!("{:.2}", pr.fill_cycles as f64 / convaix::CLOCK_HZ as f64 * 1e3),
             format!("{:.2}", pr.drain_cycles as f64 / convaix::CLOCK_HZ as f64 * 1e3),
         ]);
+        stream_rows.push(obj(vec![
+            ("net", Json::Str(name.into())),
+            ("fanout_fps", num(fo.throughput_fps())),
+            ("steady_fps", num(pr.steady_state_fps())),
+            ("stream_fps", num(pr.throughput_fps())),
+            ("fill_cycles", num(pr.fill_cycles as f64)),
+            ("drain_cycles", num(pr.drain_cycles as f64)),
+            ("makespan_cycles", num(pr.makespan_cycles as f64)),
+            ("stage_util", Json::Arr(pr.stage_utilization().into_iter().map(num).collect())),
+            (
+                "stages",
+                Json::Arr(
+                    pr.stages
+                        .iter()
+                        .map(|&(l0, l1)| {
+                            Json::Str(format!(
+                                "{}..{}",
+                                layers[l0].name(),
+                                layers[l1 - 1].name()
+                            ))
+                        })
+                        .collect(),
+                ),
+            ),
+        ]));
     }
     t.print();
+    dump.insert("streaming_duel_4c".into(), Json::Arr(stream_rows));
+    println!(
+        "VGG-16 stream of {STREAM} @ 4 cores: pipeline steady {vgg_steady_fps:.1} f/s vs \
+         fan-out {vgg_fanout_fps:.1} f/s ({:.2}x)\n",
+        vgg_steady_fps / vgg_fanout_fps.max(1e-9)
+    );
+
+    // Machine-readable trajectory dump for cross-PR tracking. Written
+    // BEFORE the hard perf asserts below: a regression run is exactly
+    // the one whose numbers must not be lost (nor masked by a stale
+    // file from a previous green run).
+    let json = Json::Obj(dump).to_string();
+    std::fs::write("BENCH_multicore.json", &json).expect("write BENCH_multicore.json");
+    println!("wrote BENCH_multicore.json ({} bytes)", json.len());
+
     if !no_assert {
+        assert!(
+            conv11_rb < conv11_oc,
+            "row-band ({conv11_rb}) must beat oc-tile ({conv11_oc}) on conv1_1 at 4 cores \
+             (set MULTICORE_NO_ASSERT=1 to report without asserting)"
+        );
         assert!(
             vgg_steady_fps >= vgg_fanout_fps,
             "pipelined steady state ({vgg_steady_fps:.1} f/s) must match or beat frame \
@@ -203,11 +297,6 @@ fn main() {
              (set MULTICORE_NO_ASSERT=1 to report without asserting)"
         );
     }
-    println!(
-        "VGG-16 stream of {STREAM} @ 4 cores: pipeline steady {vgg_steady_fps:.1} f/s vs \
-         fan-out {vgg_fanout_fps:.1} f/s ({:.2}x)\n",
-        vgg_steady_fps / vgg_fanout_fps.max(1e-9)
-    );
 
     // Wall-clock scaling depends on real host parallelism; skip the hard
     // target on undersized hosts, and allow MULTICORE_NO_ASSERT=1 as an

@@ -18,7 +18,10 @@ COMMANDS:
   fig3c              Fig. 3c   — power breakdown (AlexNet conv3, 8-bit gated)
   table2             Table II  — comparison vs Envision / Eyeriss
   util               per-layer MAC utilization (the 72.5 % claim)
-  run <net>          run a network (alexnet | vgg16) and report metrics
+  run <net>          run a network and report metrics:
+                       alexnet | vgg16           conv stacks (Table II)
+                       alexnet-full | vgg16-full end-to-end nets with the
+                       pools and fc6/fc7/fc8 tails (per-kind report rows)
   golden             bit-exact check: simulator vs JAX/Pallas PJRT artifacts
   asm <file.cvx>     assemble a .cvx file, report size, disassemble back
 

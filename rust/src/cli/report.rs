@@ -10,7 +10,7 @@ use crate::coordinator::{
     BatchedResult, Engine, EngineConfig, NetLayer, NetworkResult, PipelineResult,
 };
 use crate::energy::{area, power};
-use crate::model::{alexnet_conv, vgg16_conv, ConvLayer};
+use crate::model::{alexnet_conv, alexnet_full, conv_stack, vgg16_conv, vgg16_full};
 use crate::util::table::{bar_chart, Table};
 use crate::util::XorShift;
 
@@ -20,26 +20,26 @@ fn engine_for(cfg: &EngineConfig) -> Engine {
     cfg.clone().build()
 }
 
-/// Run a conv stack with synthetic weights; returns per-layer results.
-/// The engine's deterministic per-layer xorshift draws make MAC totals
-/// identical across core counts and shard policies.
+/// Run a layer list (conv stack or full net) with synthetic weights;
+/// returns per-layer results. The engine's deterministic per-layer
+/// xorshift draws make MAC totals identical across core counts and
+/// shard policies.
 pub fn bench_network(
     name: &str,
-    layers: &[ConvLayer],
+    layers: &[NetLayer],
     cfg: &EngineConfig,
 ) -> Result<NetworkResult> {
     let Some(first) = layers.first() else {
         return Ok(NetworkResult { name: name.into(), ..Default::default() });
     };
-    let net: Vec<NetLayer> = layers.iter().cloned().map(NetLayer::Conv).collect();
-    let input = vec![0i16; first.ic * first.ih * first.iw];
+    let input = vec![0i16; first.op().in_elems()];
     engine_for(cfg)
-        .run_network(name, &net, &input)
+        .run_network(name, layers, &input)
         .map_err(|e| anyhow::anyhow!("{e}"))
 }
 
 /// `convaix run <net> --cores N` — per-layer multi-core breakdown with
-/// per-core utilization and speedup columns.
+/// kind labels and per-core utilization and speedup columns.
 pub fn run_net_mc(net: &str, cfg: &EngineConfig) -> Result<String> {
     let layers = net_layers(net)?;
     let serial = bench_network(net, &layers, &cfg.clone().cores(1).batch(1))?;
@@ -50,12 +50,13 @@ pub fn run_net_mc(net: &str, cfg: &EngineConfig) -> Result<String> {
             "{net} sharded across {} ConvAix cores ({:?} shards, {:?} bus)",
             cfg.cores, cfg.shard, cfg.bus
         ),
-        &["Layer", "1-core cyc", "Makespan cyc", "Speedup", "Par eff", "Util/core"],
+        &["Layer", "Kind", "1-core cyc", "Makespan cyc", "Speedup", "Par eff", "Util/core"],
     );
-    for (l1, lm) in serial.layers.iter().zip(&sharded.layers) {
+    for ((d, l1), lm) in layers.iter().zip(&serial.layers).zip(&sharded.layers) {
         let speedup = l1.cycles as f64 / lm.cycles.max(1) as f64;
         t.row(&[
             lm.name.clone(),
+            d.kind().into(),
             l1.cycles.to_string(),
             lm.cycles.to_string(),
             format!("{:.2}x", speedup),
@@ -80,12 +81,11 @@ pub fn run_net_mc(net: &str, cfg: &EngineConfig) -> Result<String> {
 /// `convaix run <net> --batch B [--cores N]` — batched throughput mode:
 /// B frames fanned out over the core pool.
 pub fn throughput(net: &str, cfg: &EngineConfig) -> Result<String> {
-    let conv = net_layers(net)?;
-    let (ic, ih, iw) = (conv[0].ic, conv[0].ih, conv[0].iw);
-    let layers: Vec<NetLayer> = conv.into_iter().map(NetLayer::Conv).collect();
+    let layers = net_layers(net)?;
+    let in_elems = layers[0].op().in_elems();
     let mut rng = XorShift::new(0xBA7C4);
     let inputs: Vec<Vec<i16>> =
-        (0..cfg.batch).map(|_| rng.i16_vec(ic * ih * iw, -2000, 2000)).collect();
+        (0..cfg.batch).map(|_| rng.i16_vec(in_elems, -2000, 2000)).collect();
     let br = engine_for(cfg)
         .run_batched(net, &layers, &inputs)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -133,15 +133,15 @@ pub fn throughput_report(br: &BatchedResult, cfg: &EngineConfig) -> String {
 }
 
 /// `convaix run <net> --pipeline [--cores N --batch B]` — layer-
-/// pipelined streaming: the conv stack cut into N contiguous stages, B
-/// frames streamed through them.
+/// pipelined streaming: the network cut into N contiguous stages, B
+/// frames streamed through them. On the full nets the DMA-bound FC
+/// tail lands in its own stage(s) — see the stage table.
 pub fn streaming(net: &str, cfg: &EngineConfig) -> Result<String> {
-    let conv = net_layers(net)?;
-    let (ic, ih, iw) = (conv[0].ic, conv[0].ih, conv[0].iw);
-    let layers: Vec<NetLayer> = conv.into_iter().map(NetLayer::Conv).collect();
+    let layers = net_layers(net)?;
+    let in_elems = layers[0].op().in_elems();
     let mut rng = XorShift::new(0xBA7C4);
     let inputs: Vec<Vec<i16>> =
-        (0..cfg.batch).map(|_| rng.i16_vec(ic * ih * iw, -2000, 2000)).collect();
+        (0..cfg.batch).map(|_| rng.i16_vec(in_elems, -2000, 2000)).collect();
     let pr = engine_for(cfg)
         .run_streaming(net, &layers, &inputs)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -195,11 +195,15 @@ pub fn streaming_report(pr: &PipelineResult, layers: &[NetLayer], cfg: &EngineCo
     s
 }
 
-fn net_layers(net: &str) -> Result<Vec<ConvLayer>> {
+fn net_layers(net: &str) -> Result<Vec<NetLayer>> {
     match net {
-        "alexnet" => Ok(alexnet_conv()),
-        "vgg16" | "vgg" => Ok(vgg16_conv()),
-        other => anyhow::bail!("unknown network `{other}` (alexnet | vgg16)"),
+        "alexnet" => Ok(conv_stack(alexnet_conv())),
+        "vgg16" | "vgg" => Ok(conv_stack(vgg16_conv())),
+        "alexnet-full" => Ok(alexnet_full()),
+        "vgg16-full" | "vgg-full" => Ok(vgg16_full()),
+        other => anyhow::bail!(
+            "unknown network `{other}` (alexnet | vgg16 | alexnet-full | vgg16-full)"
+        ),
     }
 }
 
@@ -287,7 +291,7 @@ pub struct ConvAixRow {
     pub energy_eff: f64,
 }
 
-pub fn convaix_row(name: &str, layers: &[ConvLayer], cfg: &EngineConfig) -> Result<ConvAixRow> {
+pub fn convaix_row(name: &str, layers: &[NetLayer], cfg: &EngineConfig) -> Result<ConvAixRow> {
     let net = bench_network(name, layers, cfg)?;
     let secs = net.time_ms() / 1e3;
     let p = power::network_power(&net.stats(), secs);
@@ -309,8 +313,8 @@ pub fn convaix_row(name: &str, layers: &[ConvLayer], cfg: &EngineConfig) -> Resu
 /// here would compare a 4-core makespan against single-core silicon.
 pub fn table2(cfg: &EngineConfig) -> Result<String> {
     let cfg = &cfg.clone().cores(1).batch(1);
-    let alex = convaix_row("AlexNet", &alexnet_conv(), cfg)?;
-    let vgg = convaix_row("VGG-16", &vgg16_conv(), cfg)?;
+    let alex = convaix_row("AlexNet", &conv_stack(alexnet_conv()), cfg)?;
+    let vgg = convaix_row("VGG-16", &conv_stack(vgg16_conv()), cfg)?;
     let (espec, enets) = published::envision();
     let (yspec, ynets) = published::eyeriss();
 
@@ -406,7 +410,9 @@ pub fn util_table(cfg: &EngineConfig) -> Result<String> {
         &["Net", "Layer", "Util", "Time [ms]", "GOP/s", "I/O [MB]"],
     );
     let mut utils = Vec::new();
-    for (net, layers) in [("AlexNet", alexnet_conv()), ("VGG-16", vgg16_conv())] {
+    for (net, layers) in
+        [("AlexNet", conv_stack(alexnet_conv())), ("VGG-16", conv_stack(vgg16_conv()))]
+    {
         let r = bench_network(net, &layers, cfg)?;
         for l in &r.layers {
             utils.push(l.utilization());
@@ -437,13 +443,48 @@ pub fn util_table(cfg: &EngineConfig) -> Result<String> {
     Ok(s)
 }
 
-/// `convaix run <net>` — metrics summary.
+/// `convaix run <net>` — per-layer breakdown with kind labels,
+/// per-kind rollup rows (conv vs pool vs fc — on the full nets the fc
+/// rows show the weight-DMA-bound tail), and the metrics summary.
 pub fn run_net(net: &str, cfg: &EngineConfig) -> Result<String> {
     let layers = net_layers(net)?;
     let r = bench_network(net, &layers, cfg)?;
+
+    let mut t = Table::new(
+        &format!("{net}: per-layer breakdown"),
+        &["Layer", "Kind", "Time [ms]", "Util", "GOP/s", "I/O [MB]"],
+    );
+    for (d, l) in layers.iter().zip(&r.layers) {
+        t.row(&[
+            l.name.clone(),
+            d.kind().into(),
+            format!("{:.3}", l.time_ms()),
+            format!("{:.3}", l.utilization()),
+            format!("{:.1}", l.gops()),
+            format!("{:.2}", l.io_total() as f64 / 1e6),
+        ]);
+    }
+    // per-kind rollups: one row per layer kind present in the net
+    for kt in r.kind_totals(&layers) {
+        let gops = if kt.cycles == 0 {
+            0.0
+        } else {
+            2.0 * kt.macs as f64 / (kt.cycles as f64 / crate::CLOCK_HZ as f64) / 1e9
+        };
+        t.row(&[
+            format!("== {} x{} ==", kt.kind, kt.layers),
+            kt.kind.into(),
+            format!("{:.3}", kt.time_ms()),
+            "-".into(),
+            format!("{gops:.1}"),
+            format!("{:.2}", kt.io_bytes as f64 / 1e6),
+        ]);
+    }
+
     let secs = r.time_ms() / 1e3;
     let p = power::network_power(&r.stats(), secs);
-    Ok(format!(
+    let mut s = t.render();
+    s.push_str(&format!(
         "{net}: {:.2} ms, util {:.3}, {:.1} GOP/s, {:.2} MB off-chip I/O, {:.1} mW, {:.0} GOP/s/W\n",
         r.time_ms(),
         r.utilization(),
@@ -451,7 +492,8 @@ pub fn run_net(net: &str, cfg: &EngineConfig) -> Result<String> {
         r.io_mbytes(),
         p.total_mw(),
         power::energy_eff_gops_per_w(r.macs(), secs, p.total_mw()),
-    ))
+    ));
+    Ok(s)
 }
 
 /// `convaix golden` — bit-exact verification against the AOT artifacts.

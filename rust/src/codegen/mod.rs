@@ -19,6 +19,7 @@ pub mod conv;
 pub mod layout;
 pub mod pool;
 pub mod refconv;
+pub mod reffc;
 pub mod stage;
 
 pub use conv::{build_conv_task, TaskFlavor};

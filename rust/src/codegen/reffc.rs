@@ -1,0 +1,86 @@
+//! Host-side reference fully-connected layer with the exact ConvAix
+//! fixed-point semantics (`crate::fixed`) — the FC analogue of
+//! [`refconv`](super::refconv). Used by executor/engine tests as the
+//! bit-exact oracle for the 1×1-conv lowering ([`FcLayer::as_conv`]):
+//! the weight layout `(out, in)` coincides with the conv's
+//! `(oc, ic, 1, 1)`, so `fc_forward` and `refconv::conv2d` on the
+//! lowered layer must agree bit-for-bit (locked by a test here).
+
+use crate::fixed::{gate, mac, mac_init, requantize, RoundMode};
+use crate::model::FcLayer;
+
+/// Fixed-point fully connected forward pass.
+/// `x`: (in_features,) i16; `w`: (out_features, in_features) i16,
+/// row-major; `b`: (out_features,) i32. Returns (out_features,) i16.
+pub fn fc_forward(
+    x: &[i16],
+    w: &[i16],
+    b: &[i32],
+    l: &FcLayer,
+    mode: RoundMode,
+    gate_bits: u8,
+) -> Vec<i16> {
+    assert_eq!(x.len(), l.in_features);
+    assert_eq!(w.len(), l.in_features * l.out_features);
+    assert_eq!(b.len(), l.out_features);
+    let mut out = vec![0i16; l.out_features];
+    for (o, y) in out.iter_mut().enumerate() {
+        let mut acc = mac_init(b[o], l.frac_shift);
+        for (i, &px) in x.iter().enumerate() {
+            let wt = w[o * l.in_features + i];
+            acc = mac(acc, gate(px, gate_bits), gate(wt, gate_bits));
+        }
+        *y = requantize(acc, l.frac_shift, mode, l.relu);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::refconv;
+    use super::*;
+    use crate::util::XorShift;
+
+    #[test]
+    fn identity_row_passthrough() {
+        // a one-hot row of 1<<shift copies that input feature (relu off)
+        let mut l = FcLayer::new("id", 4, 4);
+        l.relu = false;
+        let x: Vec<i16> = vec![-7, 3, 0, 12];
+        let mut w = vec![0i16; 16];
+        for o in 0..4 {
+            w[o * 4 + o] = 1i16 << l.frac_shift;
+        }
+        let b = vec![0i32; 4];
+        assert_eq!(fc_forward(&x, &w, &b, &l, RoundMode::HalfUp, 16), x);
+    }
+
+    #[test]
+    fn bias_and_relu() {
+        let l = FcLayer::new("br", 3, 4); // relu on
+        let x = vec![0i16; 3];
+        let w = vec![0i16; 12];
+        let b = vec![-3, 0, 7, 100];
+        let out = fc_forward(&x, &w, &b, &l, RoundMode::HalfUp, 16);
+        assert_eq!(out, vec![0, 0, 7, 100]);
+    }
+
+    #[test]
+    fn matches_refconv_on_the_1x1_lowering() {
+        // the FC oracle and the conv oracle must coincide on the
+        // lowering the executor uses — weight layouts are identical
+        let mut rng = XorShift::new(42);
+        for (inf, outf, relu) in [(24usize, 16usize, true), (33, 10, false)] {
+            let mut l = FcLayer::new("low", inf, outf);
+            l.relu = relu;
+            let x = rng.i16_vec(inf, -2000, 2000);
+            let w = rng.i16_vec(inf * outf, -256, 256);
+            let b = rng.i32_vec(outf, -1000, 1000);
+            for gate_bits in [16u8, 8] {
+                let fc = fc_forward(&x, &w, &b, &l, RoundMode::HalfUp, gate_bits);
+                let cv = refconv::conv2d(&x, &w, &b, &l.as_conv(), RoundMode::HalfUp, gate_bits);
+                assert_eq!(fc, cv, "in {inf} out {outf} gate {gate_bits}");
+            }
+        }
+    }
+}

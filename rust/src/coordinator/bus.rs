@@ -327,6 +327,31 @@ mod tests {
     }
 
     #[test]
+    fn fc_shaped_stages_price_as_weight_dma() {
+        // An FC tail segment: tiny compute, a huge weight stream (every
+        // weight crosses the bus once per frame). The steady-state
+        // interval of a stage holding it is pinned by the DMA sum, and
+        // an upstream compute-bound conv segment in the same stage
+        // hides its own transfer under the FC stream — the overlap the
+        // pipeline DP exploits when it isolates the FC tail.
+        let fc = seg(500, 20_000 * E); // dma 20000 >> compute 500
+        let conv = seg(8_000, 100 * E); // compute-bound
+        assert_eq!(stage_interval(&[fc], 1), 20_000);
+        assert_eq!(stage_interval(&[conv, fc], 1), 20_100.max(8_500));
+        // fill pricing chains the layers instead
+        assert_eq!(stage_first_pass(&[conv, fc], 1), 8_000 + 20_000);
+        // under contention only the transfer terms scale
+        assert_eq!(stage_interval(&[fc], 3), 60_000);
+        // an FC stage next to a conv stage: the FC stage is the lone
+        // DMA-bound contender, so it keeps the full bus (divisor 1)
+        let cores = vec![vec![fc], vec![conv]];
+        assert_eq!(shared_divisor(&cores), 1);
+        let acct = core_busy(&cores, BusModel::Shared);
+        assert_eq!(acct.busy, vec![20_000, 8_000]);
+        assert_eq!(acct.contenders, 1);
+    }
+
+    #[test]
     fn idle_cores_never_contend() {
         let cores = vec![vec![seg(10, 1000 * E)], vec![]];
         let acct = core_busy(&cores, BusModel::Shared);

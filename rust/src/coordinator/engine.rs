@@ -6,20 +6,24 @@
 //! coordinator the same separation at the chip level. An [`Engine`] is
 //! built from an [`EngineConfig`] (cores, batch, shard policy, pool
 //! mode, bus model, execution mode, seed) and exposes the entry points
-//! — [`Engine::run_layer`], [`Engine::run_network`],
-//! [`Engine::run_batched`], [`Engine::run_streaming`] — that replace
-//! the 0.2 free-function pairs (`executor::run_network` /
-//! `scheduler::run_network_mc`, …), which survive only as
-//! `#[deprecated]` shims.
+//! [`Engine::run_layer`], [`Engine::run_network`],
+//! [`Engine::run_batched`] and [`Engine::run_streaming`]. (The 0.2
+//! free-function API and its `#[deprecated]` 0.3 shims are gone;
+//! `tools/check-deprecated.sh` keeps them from coming back.)
 //!
 //! Internally there is exactly **one** network walk
 //! (`walk_network`), parameterized by a `LayerRunner`: the
 //! single-core runner and the sharded pool runner are two
 //! implementations of the same trait, so the deterministic xorshift
 //! weight draws stay bit-identical across core counts by construction
-//! (the multicore determinism tests lock that contract).
+//! (the multicore determinism tests lock that contract). Everything
+//! layer-kind-specific — shapes, draws, execution, shard building,
+//! merging, the first-order cost model — lives behind the
+//! [`LayerOp`](super::ops::LayerOp) trait (conv, pool and FC layers);
+//! the engine never matches on the layer kind.
 //!
-//! Two intra-layer shard axes are offered ([`ShardPolicy`]):
+//! Two intra-layer shard axes are offered ([`ShardPolicy`]); FC layers
+//! always shard as *neuron tiles* (oc tiles of their 1×1 lowering):
 //!
 //! * **`OcTile`** — output channels split into tile-aligned contiguous
 //!   ranges (the seed policy). Every core re-reads the full input but
@@ -59,13 +63,13 @@
 
 use std::thread;
 
-use crate::codegen::{layout, stage};
 use crate::core::Cpu;
-use crate::model::{ConvLayer, PoolLayer};
+use crate::model::{ConvLayer, FcLayer, NetLayer, PoolLayer};
 
 use super::bus::{core_busy, shared_divisor, stage_first_pass, stage_interval, BusModel, Segment};
-use super::executor::{conv_layer, pool_layer, ExecError, ExecMode, ExecOptions, NetLayer};
+use super::executor::{ExecError, ExecMode, ExecOptions};
 use super::metrics::{add_stats, LayerResult, NetworkResult, PipelineResult};
+use super::ops::Shard;
 
 /// How a layer is split across the pool's cores.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -277,9 +281,9 @@ impl Engine {
         self.pool.cores()
     }
 
-    /// Run one network layer (conv or pool) with caller-provided
-    /// tensors, sharded per the config. `w`/`b` are ignored for pool
-    /// layers.
+    /// Run one network layer (any [`LayerOp`](super::ops::LayerOp)
+    /// kind) with caller-provided tensors, sharded per the config.
+    /// `w`/`b` are empty for weightless layers (pools).
     pub fn run_layer(
         &mut self,
         layer: &NetLayer,
@@ -287,10 +291,8 @@ impl Engine {
         w: &[i16],
         b: &[i32],
     ) -> Result<LayerResult, ExecError> {
-        match layer {
-            NetLayer::Conv(l) => self.run_conv_layer(l, x, w, b),
-            NetLayer::Pool(l) => self.run_pool_layer(l, x),
-        }
+        let spec = self.cfg.run_spec();
+        run_layer_sharded(&mut self.pool, layer, x, w, b, spec)
     }
 
     /// Run a (possibly grouped) conv layer. `x`: (ic, ih, iw), `w`:
@@ -303,8 +305,7 @@ impl Engine {
         w: &[i16],
         b: &[i32],
     ) -> Result<LayerResult, ExecError> {
-        let spec = self.cfg.run_spec();
-        run_conv_sharded(&mut self.pool, layer, x, w, b, spec)
+        self.run_layer(&NetLayer::Conv(layer.clone()), x, w, b)
     }
 
     /// Run a max-pool layer. `x`: (ic, ih, iw).
@@ -313,8 +314,20 @@ impl Engine {
         layer: &PoolLayer,
         x: &[i16],
     ) -> Result<LayerResult, ExecError> {
-        let spec = self.cfg.run_spec();
-        run_pool_sharded(&mut self.pool, layer, x, spec)
+        self.run_layer(&NetLayer::Pool(layer.clone()), x, &[], &[])
+    }
+
+    /// Run a fully connected layer. `x`: (in_features,), `w`:
+    /// (out_features, in_features), `b`: (out_features,). Sharded as
+    /// neuron tiles; outputs are bit-identical across core counts.
+    pub fn run_fc_layer(
+        &mut self,
+        layer: &FcLayer,
+        x: &[i16],
+        w: &[i16],
+        b: &[i32],
+    ) -> Result<LayerResult, ExecError> {
+        self.run_layer(&NetLayer::Fc(layer.clone()), x, w, b)
     }
 
     /// Run a layer sequence, threading activations; weights/biases are
@@ -390,16 +403,16 @@ impl CorePool {
 /// is executed. Implemented by the single-core runner and the sharded
 /// pool runner; [`walk_network`] is generic over it so the RNG stream
 /// and activation threading cannot diverge between the two worlds.
+/// Layer-kind dispatch happens behind [`NetLayer::op`] — the runners
+/// are kind-agnostic.
 pub(crate) trait LayerRunner {
-    fn conv(
+    fn run(
         &mut self,
-        layer: &ConvLayer,
+        layer: &NetLayer,
         x: &[i16],
         w: &[i16],
         b: &[i32],
     ) -> Result<LayerResult, ExecError>;
-
-    fn pool(&mut self, layer: &PoolLayer, x: &[i16]) -> Result<LayerResult, ExecError>;
 }
 
 /// Runs every layer on one core.
@@ -409,18 +422,14 @@ pub(crate) struct SoloRunner<'a> {
 }
 
 impl LayerRunner for SoloRunner<'_> {
-    fn conv(
+    fn run(
         &mut self,
-        layer: &ConvLayer,
+        layer: &NetLayer,
         x: &[i16],
         w: &[i16],
         b: &[i32],
     ) -> Result<LayerResult, ExecError> {
-        conv_layer(self.cpu, layer, x, w, b, self.opts)
-    }
-
-    fn pool(&mut self, layer: &PoolLayer, x: &[i16]) -> Result<LayerResult, ExecError> {
-        pool_layer(self.cpu, layer, x, self.opts)
+        layer.op().run_solo(self.cpu, x, w, b, self.opts)
     }
 }
 
@@ -431,76 +440,44 @@ pub(crate) struct ShardedRunner<'a> {
 }
 
 impl LayerRunner for ShardedRunner<'_> {
-    fn conv(
+    fn run(
         &mut self,
-        layer: &ConvLayer,
+        layer: &NetLayer,
         x: &[i16],
         w: &[i16],
         b: &[i32],
     ) -> Result<LayerResult, ExecError> {
-        run_conv_sharded(self.pool, layer, x, w, b, self.spec)
+        run_layer_sharded(self.pool, layer, x, w, b, self.spec)
     }
-
-    fn pool(&mut self, layer: &PoolLayer, x: &[i16]) -> Result<LayerResult, ExecError> {
-        run_pool_sharded(self.pool, layer, x, self.spec)
-    }
-}
-
-/// One layer's synthetic weight/bias draw (conv layers draw weights
-/// then biases; pool layers draw nothing). THE single definition of
-/// the draw order: the lazy per-layer walk and the up-front
-/// [`draw_tensors`] both consume the stream through this function, so
-/// tensors are bit-identical across execution modes by construction.
-fn draw_layer(rng: &mut crate::util::XorShift, layer: &NetLayer) -> Option<(Vec<i16>, Vec<i32>)> {
-    match layer {
-        NetLayer::Conv(l) => {
-            let w = rng.i16_vec(l.oc * (l.ic / l.groups) * l.fh * l.fw, -128, 128);
-            let b = rng.i32_vec(l.oc, -1000, 1000);
-            Some((w, b))
-        }
-        NetLayer::Pool(_) => None,
-    }
-}
-
-/// All layers' draws at once, for walks that revisit tensors (the
-/// pipelined stream reuses each layer's weights every frame).
-/// Single-pass walks draw lazily instead ([`walk_network`]) to keep
-/// peak memory at one layer's tensors.
-pub(crate) fn draw_tensors(layers: &[NetLayer], seed: u64) -> Vec<Option<(Vec<i16>, Vec<i32>)>> {
-    let mut rng = crate::util::XorShift::new(seed);
-    layers.iter().map(|layer| draw_layer(&mut rng, layer)).collect()
 }
 
 /// One step of THE network walk: run `layer` on `runner` against the
 /// threaded activation, which is advanced in place when the layer
 /// produces an output (FullCycle mode; analytic runs leave it alone).
 /// A shape mismatch (analytic mode, or a caller-staged input of the
-/// wrong size) substitutes zeros, exactly as the 0.2 walker did.
+/// wrong size) substitutes zeros, exactly as the 0.2 walker did. The
+/// conv→FC boundary is the implicit flatten: NCHW-contiguous
+/// activations already are the feature vector, so the element-count
+/// check is the whole boundary.
 pub(crate) fn step_layer<R: LayerRunner>(
     runner: &mut R,
     layer: &NetLayer,
     tensors: &Option<(Vec<i16>, Vec<i32>)>,
     act: &mut Vec<i16>,
 ) -> Result<LayerResult, ExecError> {
-    let r = match layer {
-        NetLayer::Conv(l) => {
-            let x = if act.len() == l.ic * l.ih * l.iw {
-                act.clone()
-            } else {
-                vec![0i16; l.ic * l.ih * l.iw]
-            };
-            let (w, b) = tensors.as_ref().expect("conv layer without drawn tensors");
-            runner.conv(l, &x, w, b)?
-        }
-        NetLayer::Pool(l) => {
-            let x = if act.len() == l.ic * l.ih * l.iw {
-                act.clone()
-            } else {
-                vec![0i16; l.ic * l.ih * l.iw]
-            };
-            runner.pool(l, &x)?
-        }
+    let n_in = layer.op().in_elems();
+    let x = if act.len() == n_in { act.clone() } else { vec![0i16; n_in] };
+    debug_assert_eq!(
+        tensors.is_some(),
+        layer.op().param_elems().0 > 0,
+        "layer {}: drawn tensors must match its parameter surface",
+        layer.name()
+    );
+    let (w, b): (&[i16], &[i32]) = match tensors {
+        Some((w, b)) => (w.as_slice(), b.as_slice()),
+        None => (&[], &[]),
     };
+    let r = runner.run(layer, &x, w, b)?;
     if !r.out.is_empty() {
         *act = r.out.clone();
     }
@@ -509,11 +486,11 @@ pub(crate) fn step_layer<R: LayerRunner>(
 
 /// THE network walk: threads activations through the layer list and
 /// draws per-layer weights/biases lazily from one xorshift stream
-/// (`draw_layer` + [`step_layer`] — one layer's tensors resident at a
-/// time). Every public path (single core, sharded, each batched
-/// frame, the pipelined stage walk, the deprecated 0.2 shims) funnels
-/// through these helpers, so the draws are bit-identical everywhere
-/// by construction.
+/// ([`LayerOp::draw`](super::ops::LayerOp::draw) + [`step_layer`] —
+/// one layer's tensors resident at a time). Every public path (single
+/// core, sharded, each batched frame, the pipelined stage walk)
+/// funnels through these helpers, so the draws are bit-identical
+/// everywhere by construction.
 pub(crate) fn walk_network<R: LayerRunner>(
     runner: &mut R,
     name: &str,
@@ -525,14 +502,14 @@ pub(crate) fn walk_network<R: LayerRunner>(
     let mut act = input.to_vec();
     let mut net = NetworkResult { name: name.into(), ..Default::default() };
     for layer in layers {
-        let t = draw_layer(&mut rng, layer);
+        let t = layer.op().draw(&mut rng);
         net.layers.push(step_layer(runner, layer, &t, &mut act)?);
     }
     Ok(net)
 }
 
 /// Single-frame network run on `pool`, single-core or sharded per the
-/// spec. Shared by [`Engine::run_network`] and the deprecated shims.
+/// spec. The implementation behind [`Engine::run_network`].
 pub(crate) fn run_network_on(
     pool: &mut CorePool,
     name: &str,
@@ -546,269 +523,6 @@ pub(crate) fn run_network_on(
     } else {
         let mut runner = ShardedRunner { pool, spec };
         walk_network(&mut runner, name, layers, input, spec.seed)
-    }
-}
-
-/// A shard's view of the layer input.
-enum ShardInput {
-    /// Borrow `[lo, hi)` of the caller's tensor (contiguous slices —
-    /// oc-tile group slices and pool slabs — stay zero-copy).
-    Range(usize, usize),
-    /// Shard-private gathered tensor (row bands are strided in the full
-    /// tensor, so they are materialized per shard).
-    Owned(Vec<i16>),
-}
-
-impl ShardInput {
-    fn resolve<'a>(&'a self, x: &'a [i16]) -> &'a [i16] {
-        match self {
-            ShardInput::Range(lo, hi) => &x[*lo..*hi],
-            ShardInput::Owned(v) => v,
-        }
-    }
-}
-
-/// One unit of sharded conv work: a dense (or row-sliced) sub-layer
-/// plus the tensor ranges it reads and the output runs it produces.
-struct ConvShard {
-    sub: ConvLayer,
-    input: ShardInput,
-    w0: usize,
-    w1: usize,
-    b0: usize,
-    b1: usize,
-    /// `(dst offset, len)` runs in the full output tensor; the shard's
-    /// output is consumed sequentially across the runs.
-    placement: Vec<(usize, usize)>,
-}
-
-/// One unit of sharded pool work.
-struct PoolShard {
-    sub: PoolLayer,
-    input: ShardInput,
-    placement: Vec<(usize, usize)>,
-}
-
-/// SFU pool tile: 16 channels per vector.
-const POOL_GRAIN: usize = 16;
-
-/// Split `units` units into at most `want` balanced contiguous chunks,
-/// front-loading the remainder: half-open `(u0, u1)` unit ranges. The
-/// single partitioner behind every shard axis (oc tiles, row bands,
-/// pool slabs) — deterministic in its inputs.
-fn balanced_chunks(units: usize, want: usize) -> Vec<(usize, usize)> {
-    let k = want.max(1).min(units.max(1));
-    let (base, extra) = (units / k, units % k);
-    let mut chunks = Vec::with_capacity(k);
-    let mut u0 = 0usize;
-    for ci in 0..k {
-        let n = base + usize::from(ci < extra);
-        if n > 0 {
-            chunks.push((u0, u0 + n));
-            u0 += n;
-        }
-    }
-    chunks
-}
-
-/// Tile-aligned contiguous oc ranges within each group:
-/// `(group, oc0, oc1)`. Deterministic in (layer, want).
-fn octile_specs(layer: &ConvLayer, want: usize) -> Vec<(usize, usize, usize)> {
-    let g = layer.groups;
-    let lg = layer.per_group();
-    let ocg = lg.oc;
-    // Tile-align chunks to the planner's oc grain so shards don't add
-    // padding lanes the single-core schedule wouldn't have.
-    let grain = layout::plan(&lg).map(|p| p.variant.ocs()).unwrap_or(16);
-    let units = ocg.div_ceil(grain).max(1);
-    let mut specs = Vec::new();
-    for gi in 0..g {
-        for (u0, u1) in balanced_chunks(units, want.div_ceil(g)) {
-            let oc0 = (u0 * grain).min(ocg);
-            let oc1 = (u1 * grain).min(ocg);
-            if oc0 < oc1 {
-                specs.push((gi, oc0, oc1));
-            }
-        }
-    }
-    specs
-}
-
-/// Balanced contiguous output-row bands `(r0, r1)` over `rows` rows.
-fn rowband_specs(rows: usize, want: usize) -> Vec<(usize, usize)> {
-    balanced_chunks(rows, want)
-}
-
-fn conv_shards_octile(layer: &ConvLayer, want: usize) -> Vec<ConvShard> {
-    let lg = layer.per_group();
-    let (icg, ocg) = (lg.ic, lg.oc);
-    let ohw = layer.oh() * layer.ow();
-    octile_specs(layer, want)
-        .into_iter()
-        .map(|(gi, oc0, oc1)| {
-            let oc_abs = gi * ocg + oc0;
-            ConvShard {
-                sub: ConvLayer { ic: icg, oc: oc1 - oc0, groups: 1, ..layer.clone() },
-                input: ShardInput::Range(
-                    gi * icg * layer.ih * layer.iw,
-                    (gi + 1) * icg * layer.ih * layer.iw,
-                ),
-                w0: oc_abs * icg * layer.fh * layer.fw,
-                w1: (oc_abs + (oc1 - oc0)) * icg * layer.fh * layer.fw,
-                b0: oc_abs,
-                b1: oc_abs + (oc1 - oc0),
-                placement: vec![(oc_abs * ohw, (oc1 - oc0) * ohw)],
-            }
-        })
-        .collect()
-}
-
-/// Row-band conv shards: the sub-layer convolves a pre-padded row slice
-/// (its own halo included) with `pad = 0`, which is arithmetically
-/// identical to the full layer restricted to those output rows — so
-/// outputs stay bit-exact and per-shard MACs tile the layer exactly.
-fn conv_shards_rowband(layer: &ConvLayer, x: &[i16], want: usize) -> Vec<ConvShard> {
-    let (oh, ow) = (layer.oh(), layer.ow());
-    let (ihp, iwp) = (layer.ihp(), layer.iwp());
-    let xp = stage::pad_input(layer, x);
-    let w_all = layer.oc * (layer.ic / layer.groups) * layer.fh * layer.fw;
-    rowband_specs(oh, want)
-        .into_iter()
-        .map(|(oh0, oh1)| {
-            let rows = oh1 - oh0;
-            let in_r0 = oh0 * layer.stride;
-            let in_rows = (rows - 1) * layer.stride + layer.fh;
-            let mut xin = vec![0i16; layer.ic * in_rows * iwp];
-            for (c, dst) in xin.chunks_exact_mut(in_rows * iwp).enumerate() {
-                let src = (c * ihp + in_r0) * iwp;
-                dst.copy_from_slice(&xp[src..src + in_rows * iwp]);
-            }
-            ConvShard {
-                sub: ConvLayer { ih: in_rows, iw: iwp, pad: 0, ..layer.clone() },
-                input: ShardInput::Owned(xin),
-                w0: 0,
-                w1: w_all,
-                b0: 0,
-                b1: layer.oc,
-                placement: (0..layer.oc).map(|o| ((o * oh + oh0) * ow, rows * ow)).collect(),
-            }
-        })
-        .collect()
-}
-
-fn pool_shards_slab(layer: &PoolLayer, want: usize) -> Vec<PoolShard> {
-    let (ih, iw) = (layer.ih, layer.iw);
-    let (oh, ow) = (layer.oh(), layer.ow());
-    let units = layer.ic.div_ceil(POOL_GRAIN).max(1);
-    let mut shards = Vec::new();
-    for (u0, u1) in balanced_chunks(units, want) {
-        let c0 = (u0 * POOL_GRAIN).min(layer.ic);
-        let c1 = (u1 * POOL_GRAIN).min(layer.ic);
-        if c0 < c1 {
-            shards.push(PoolShard {
-                sub: PoolLayer { ic: c1 - c0, ..layer.clone() },
-                input: ShardInput::Range(c0 * ih * iw, c1 * ih * iw),
-                placement: vec![(c0 * oh * ow, (c1 - c0) * oh * ow)],
-            });
-        }
-    }
-    shards
-}
-
-fn pool_shards_rowband(layer: &PoolLayer, x: &[i16], want: usize) -> Vec<PoolShard> {
-    let (oh, ow) = (layer.oh(), layer.ow());
-    rowband_specs(oh, want)
-        .into_iter()
-        .map(|(oy0, oy1)| {
-            let rows = oy1 - oy0;
-            let in_r0 = oy0 * layer.stride;
-            let in_rows = (rows - 1) * layer.stride + layer.size;
-            let mut xin = vec![0i16; layer.ic * in_rows * layer.iw];
-            for (c, dst) in xin.chunks_exact_mut(in_rows * layer.iw).enumerate() {
-                let src = (c * layer.ih + in_r0) * layer.iw;
-                dst.copy_from_slice(&x[src..src + in_rows * layer.iw]);
-            }
-            PoolShard {
-                sub: PoolLayer { ih: in_rows, ..layer.clone() },
-                input: ShardInput::Owned(xin),
-                placement: (0..layer.ic).map(|c| ((c * oh + oy0) * ow, rows * ow)).collect(),
-            }
-        })
-        .collect()
-}
-
-/// First-order shard cost for the `Auto` policy: compute from MACs at a
-/// calibrated ~2/3 utilization, DMA from tensor footprints over the bus
-/// width, combined with the executor's overlap `max`. Only the relative
-/// ranking between policies matters.
-fn conv_cost(macs: u64, in_elems: usize, w_elems: usize, out_elems: usize) -> u64 {
-    let comp = macs * 3 / (2 * crate::PEAK_MACS_PER_CYCLE);
-    let bytes = 2 * (in_elems + w_elems + out_elems) as u64;
-    comp.max(bytes / crate::mem::EXT_BYTES_PER_CYCLE as u64)
-}
-
-/// Makespan of round-robining `costs` over `cores` (the real shard
-/// assignment order).
-fn predicted_makespan(costs: &[u64], cores: usize) -> u64 {
-    let n = cores.max(1);
-    let mut load = vec![0u64; n];
-    for (i, c) in costs.iter().enumerate() {
-        load[i % n] += c;
-    }
-    load.into_iter().max().unwrap_or(0)
-}
-
-fn resolve_conv_policy(policy: ShardPolicy, layer: &ConvLayer, cores: usize) -> ShardPolicy {
-    if policy != ShardPolicy::Auto {
-        return policy;
-    }
-    let lg = layer.per_group();
-    let (oh, ow) = (layer.oh(), layer.ow());
-    let w_per_oc = lg.ic * layer.fh * layer.fw;
-    let oc_costs: Vec<u64> = octile_specs(layer, cores)
-        .iter()
-        .map(|&(_, oc0, oc1)| {
-            let oc = oc1 - oc0;
-            conv_cost(
-                (oc * w_per_oc * oh * ow) as u64,
-                lg.ic * layer.ihp() * layer.iwp(),
-                oc * w_per_oc,
-                oc * oh * ow,
-            )
-        })
-        .collect();
-    let rb_costs: Vec<u64> = rowband_specs(oh, cores)
-        .iter()
-        .map(|&(oh0, oh1)| {
-            let rows = oh1 - oh0;
-            let in_rows = (rows - 1) * layer.stride + layer.fh;
-            conv_cost(
-                (layer.oc * w_per_oc * rows * ow) as u64,
-                layer.ic * in_rows * layer.iwp(),
-                layer.oc * w_per_oc,
-                layer.oc * rows * ow,
-            )
-        })
-        .collect();
-    if predicted_makespan(&rb_costs, cores) < predicted_makespan(&oc_costs, cores) {
-        ShardPolicy::RowBand
-    } else {
-        ShardPolicy::OcTile
-    }
-}
-
-fn resolve_pool_policy(policy: ShardPolicy, layer: &PoolLayer, cores: usize) -> ShardPolicy {
-    match policy {
-        // slabs cannot fill the pool when there are fewer 16-channel
-        // units than cores; row bands always can in practice
-        ShardPolicy::Auto => {
-            if layer.ic.div_ceil(POOL_GRAIN) < cores {
-                ShardPolicy::RowBand
-            } else {
-                ShardPolicy::OcTile
-            }
-        }
-        p => p,
     }
 }
 
@@ -860,120 +574,41 @@ fn round_robin<W>(shards: Vec<W>, cores: usize) -> Vec<Vec<(usize, W)>> {
     lists
 }
 
-/// The ONE shard-merge helper, shared by the conv and pool paths:
-/// accumulates metrics, scatters shard outputs through their placement
-/// runs, and prices per-core busy time under the bus model. The layer's
-/// latency is the makespan of the slowest core.
-fn merge_shards(
-    name: &str,
-    out_len: usize,
-    results: Vec<LayerResult>,
-    placements: &[Vec<(usize, usize)>],
-    core_of: &[usize],
-    cores: usize,
-    spec: RunSpec,
-) -> LayerResult {
-    let mode = spec.opts.mode;
-    let mut res = LayerResult { name: name.to_string(), ..Default::default() };
-    // only FullCycle produces shard outputs worth merging
-    let mut out = if mode == ExecMode::FullCycle { vec![0i16; out_len] } else { Vec::new() };
-    let mut segs: Vec<Vec<Segment>> = (0..cores).map(|_| Vec::new()).collect();
-    for (idx, r) in results.into_iter().enumerate() {
-        res.compute_cycles += r.compute_cycles;
-        res.dma_cycles += r.dma_cycles;
-        res.macs += r.macs;
-        res.io_in += r.io_in;
-        res.io_out += r.io_out;
-        res.stats = add_stats(&res.stats, &r.stats);
-        segs[core_of[idx]].push(Segment::of_layer(&r));
-        if !r.out.is_empty() {
-            let mut src = 0usize;
-            for &(dst, len) in &placements[idx] {
-                out[dst..dst + len].copy_from_slice(&r.out[src..src + len]);
-                src += len;
-            }
-        }
-    }
-    let acct = core_busy(&segs, spec.bus);
-    res.cycles = acct.busy.iter().copied().max().unwrap_or(0);
-    res.core_cycles = acct.busy;
-    if mode == ExecMode::FullCycle {
-        res.out = out;
-    }
-    res
-}
-
-/// Run a conv layer sharded across the pool. With one core this is
+/// Run any layer sharded across the pool, kind-agnostic: the layer's
+/// [`LayerOp`](super::ops::LayerOp) builds the shards, each shard's
+/// sub-layer re-enters `run_solo` on its core, and the op's `merge`
+/// scatters the outputs and prices the makespan. With one core this is
 /// exactly the single-core executor.
-pub(crate) fn run_conv_sharded(
+pub(crate) fn run_layer_sharded(
     pool: &mut CorePool,
-    layer: &ConvLayer,
+    layer: &NetLayer,
     x: &[i16],
     w: &[i16],
     b: &[i32],
     spec: RunSpec,
 ) -> Result<LayerResult, ExecError> {
+    let op = layer.op();
     let n = spec.opts.cores.min(pool.cores()).max(1);
     if n == 1 {
-        return conv_layer(pool.cpu0(), layer, x, w, b, spec.opts);
+        return op.run_solo(pool.cpu0(), x, w, b, spec.opts);
     }
     let inner = ExecOptions { cores: 1, batch: 1, ..spec.opts };
-    let shards = match resolve_conv_policy(spec.shard, layer, n) {
-        ShardPolicy::RowBand => conv_shards_rowband(layer, x, n),
-        _ => conv_shards_octile(layer, n),
-    };
+    let shards = op.shard(x, spec.shard, n);
     let n_shards = shards.len();
     let placements: Vec<Vec<(usize, usize)>> =
         shards.iter().map(|s| s.placement.clone()).collect();
     let core_of: Vec<usize> = (0..n_shards).map(|i| i % n).collect();
     let assignments = round_robin(shards, n);
-    let results = run_on_pool(pool, assignments, n_shards, |cpu, sh: &ConvShard| {
-        conv_layer(cpu, &sh.sub, sh.input.resolve(x), &w[sh.w0..sh.w1], &b[sh.b0..sh.b1], inner)
+    let results = run_on_pool(pool, assignments, n_shards, |cpu, sh: &Shard| {
+        sh.sub.op().run_solo(
+            cpu,
+            sh.input.resolve(x),
+            &w[sh.w.0..sh.w.1],
+            &b[sh.b.0..sh.b.1],
+            inner,
+        )
     })?;
-    Ok(merge_shards(
-        layer.name,
-        layer.oc * layer.oh() * layer.ow(),
-        results,
-        &placements,
-        &core_of,
-        n,
-        spec,
-    ))
-}
-
-/// Run a pool layer sharded across the pool.
-pub(crate) fn run_pool_sharded(
-    pool: &mut CorePool,
-    layer: &PoolLayer,
-    x: &[i16],
-    spec: RunSpec,
-) -> Result<LayerResult, ExecError> {
-    let n = spec.opts.cores.min(pool.cores()).max(1);
-    if n == 1 {
-        return pool_layer(pool.cpu0(), layer, x, spec.opts);
-    }
-    let inner = ExecOptions { cores: 1, batch: 1, ..spec.opts };
-    let shards = match resolve_pool_policy(spec.shard, layer, n) {
-        ShardPolicy::RowBand => pool_shards_rowband(layer, x, n),
-        _ => pool_shards_slab(layer, n),
-    };
-    let n_shards = shards.len();
-    let placements: Vec<Vec<(usize, usize)>> =
-        shards.iter().map(|s| s.placement.clone()).collect();
-    let core_of: Vec<usize> = (0..n_shards).map(|i| i % n).collect();
-    let assignments = round_robin(shards, n);
-    let results = run_on_pool(pool, assignments, n_shards, |cpu, sh: &PoolShard| {
-        pool_layer(cpu, &sh.sub, sh.input.resolve(x), inner)
-    })?;
-    Ok(merge_shards(
-        layer.name,
-        layer.ic * layer.oh() * layer.ow(),
-        results,
-        &placements,
-        &core_of,
-        n,
-        spec,
-    ))
+    Ok(op.merge(results, &placements, &core_of, n, spec.opts.mode, spec.bus))
 }
 
 /// Result of a batched multi-core run.
@@ -1047,8 +682,8 @@ impl BatchedResult {
     }
 }
 
-/// Batched fan-out on `pool`. Shared by [`Engine::run_batched`] and the
-/// deprecated shim.
+/// Batched fan-out on `pool`. The implementation behind
+/// [`Engine::run_batched`].
 pub(crate) fn run_batched_on(
     pool: &mut CorePool,
     name: &str,
@@ -1087,42 +722,22 @@ pub(crate) fn run_batched_on(
     Ok(br)
 }
 
-/// Predicted single-core cost of one layer, for pipeline-stage
-/// balancing — the same first-order model the `Auto` shard policy uses
-/// (MACs at ~2/3 utilization vs tensor footprints over the bus width).
-/// Only the relative ranking between candidate partitions matters.
-fn layer_cost(layer: &NetLayer) -> u64 {
-    match layer {
-        NetLayer::Conv(l) => {
-            let lg = l.per_group();
-            conv_cost(
-                l.macs(),
-                l.ic * l.ihp() * l.iwp(),
-                l.oc * lg.ic * l.fh * l.fw,
-                l.oc * l.oh() * l.ow(),
-            )
-        }
-        // pool layers carry no MACs; their cost is the SFU-hidden
-        // streaming of the tensor through the bus
-        NetLayer::Pool(l) => {
-            conv_cost(0, l.ic * l.ih * l.iw, 0, l.ic * l.oh() * l.ow())
-        }
-    }
-    .max(1)
-}
-
 /// Cut `layers` into at most `want` contiguous stages minimizing the
-/// bottleneck stage's predicted cost (the makespan analogue of
-/// `balanced_chunks` for non-uniform unit costs): half-open `(l0, l1)`
-/// layer ranges. Deterministic in its inputs; O(n·len²) on the
-/// handful of layers a CNN has.
+/// bottleneck stage's predicted cost
+/// ([`LayerOp::layer_cost`](super::ops::LayerOp::layer_cost) — the
+/// same first-order model the `Auto` shard policy uses): half-open
+/// `(l0, l1)` layer ranges. Deterministic in its inputs; O(n·len²) on
+/// the handful of layers a CNN has. FC layers are heavily DMA-bound
+/// (weights dominate), so the DP isolates an FC tail onto its own
+/// stage(s) instead of serializing it behind the conv stack's
+/// bottleneck core.
 fn pipeline_stages(layers: &[NetLayer], want: usize) -> Vec<(usize, usize)> {
     let len = layers.len();
     if len == 0 {
         return Vec::new();
     }
     let n = want.max(1).min(len);
-    let costs: Vec<u64> = layers.iter().map(layer_cost).collect();
+    let costs: Vec<u64> = layers.iter().map(|l| l.op().layer_cost()).collect();
     let mut pre = vec![0u64; len + 1];
     for (i, c) in costs.iter().enumerate() {
         pre[i + 1] = pre[i] + c;
@@ -1186,7 +801,6 @@ pub(crate) fn run_streaming_on(
     let stages = pipeline_stages(layers, spec.opts.cores.min(pool.cores()).max(1));
     let n_stages = stages.len();
     let inner = ExecOptions { cores: 1, batch: 1, ..spec.opts };
-    let tensors = draw_tensors(layers, spec.seed);
 
     let mut res = PipelineResult {
         name: name.into(),
@@ -1200,28 +814,42 @@ pub(crate) fn run_streaming_on(
         return Ok(res);
     }
 
-    // Functional walk: frame by frame through the stages, on each
-    // stage's own core, recording one Segment per layer execution.
+    // Functional walk, stage-major: each stage draws only ITS layers'
+    // tensors (stages are contiguous layer ranges, so the lazy draws
+    // consume the one xorshift stream in exactly the global layer
+    // order) and runs every frame through them before the next stage
+    // starts — peak weight memory is one stage's tensors, not the
+    // whole net's (the FC tails alone would be ~250 MB on vgg16-full).
+    // Per core the execution sequence is identical to the frame-major
+    // walk (core `s` runs its (stage, frame) cells in frame order
+    // either way), so outputs, stats and Segments are bit-identical.
     // Host execution is deliberately serial: each stage's layers must
     // run on that stage's Cpu (core affinity), and the modeled cycles
     // are identical either way — wavefront host-threading would only
     // speed up the simulation wall-clock, at the cost of determinism
     // plumbing across the frame×stage dependency front.
+    let mut rng = crate::util::XorShift::new(spec.seed);
+    let mut acts: Vec<Vec<i16>> = inputs.to_vec();
+    let mut nets: Vec<NetworkResult> = (0..inputs.len())
+        .map(|_| NetworkResult { name: name.into(), ..Default::default() })
+        .collect();
     let mut frame_segs: Vec<Vec<Vec<Segment>>> =
         (0..n_stages).map(|_| Vec::with_capacity(inputs.len())).collect();
-    for input in inputs {
-        let mut act = input.clone();
-        let mut net = NetworkResult { name: name.into(), ..Default::default() };
-        for (s, &(l0, l1)) in stages.iter().enumerate() {
+    for (s, &(l0, l1)) in stages.iter().enumerate() {
+        let tensors: Vec<Option<(Vec<i16>, Vec<i32>)>> =
+            layers[l0..l1].iter().map(|l| l.op().draw(&mut rng)).collect();
+        for (f, act) in acts.iter_mut().enumerate() {
             let mut segs = Vec::with_capacity(l1 - l0);
-            for li in l0..l1 {
+            for (k, li) in (l0..l1).enumerate() {
                 let mut runner = SoloRunner { cpu: &mut pool.cpus[s], opts: inner };
-                let r = step_layer(&mut runner, &layers[li], &tensors[li], &mut act)?;
+                let r = step_layer(&mut runner, &layers[li], &tensors[k], act)?;
                 segs.push(Segment::of_layer(&r));
-                net.layers.push(r);
+                nets[f].layers.push(r);
             }
             frame_segs[s].push(segs);
         }
+    }
+    for net in nets {
         res.outputs.push(net.layers.last().map(|l| l.out.clone()).unwrap_or_default());
         res.frames.push(net);
     }
@@ -1290,6 +918,7 @@ pub(crate) fn run_streaming_on(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::executor::{conv_layer, pool_layer};
     use crate::util::XorShift;
 
     fn tensors(l: &ConvLayer, seed: u64) -> (Vec<i16>, Vec<i16>, Vec<i32>) {
@@ -1299,53 +928,6 @@ mod tests {
             rng.i16_vec(l.oc * (l.ic / l.groups) * l.fh * l.fw, -256, 256),
             rng.i32_vec(l.oc, -1000, 1000),
         )
-    }
-
-    fn check_partition(l: &ConvLayer, shards: &[ConvShard]) {
-        let oc_rows: u64 = shards.iter().map(|s| s.sub.macs()).sum();
-        assert_eq!(oc_rows, l.macs(), "{}: shard MACs must tile the layer", l.name);
-        let mut marks = vec![false; l.oc * l.oh() * l.ow()];
-        for s in shards {
-            for &(dst, len) in &s.placement {
-                for m in &mut marks[dst..dst + len] {
-                    assert!(!*m, "overlapping shard output");
-                    *m = true;
-                }
-            }
-        }
-        assert!(marks.iter().all(|&m| m), "{}: uncovered outputs", l.name);
-    }
-
-    #[test]
-    fn octile_shards_partition_the_layer() {
-        for (l, want) in [
-            (ConvLayer::new("d", 8, 16, 16, 64, 3, 3, 1, 1, 1), 4),
-            (ConvLayer::new("g", 8, 13, 13, 32, 3, 3, 1, 1, 2), 4),
-            (ConvLayer::new("tiny", 4, 10, 10, 16, 3, 3, 1, 1, 1), 8),
-        ] {
-            check_partition(&l, &conv_shards_octile(&l, want));
-        }
-    }
-
-    #[test]
-    fn rowband_shards_partition_the_layer() {
-        for (l, want) in [
-            (ConvLayer::new("d", 8, 16, 16, 64, 3, 3, 1, 1, 1), 4),
-            (ConvLayer::new("g", 8, 13, 13, 32, 3, 3, 1, 1, 2), 4),
-            (ConvLayer::new("s2", 3, 23, 23, 16, 5, 5, 2, 2, 1), 3),
-            (ConvLayer::new("thin", 4, 6, 10, 16, 3, 3, 1, 1, 1), 8),
-        ] {
-            let x = vec![0i16; l.ic * l.ih * l.iw];
-            let shards = conv_shards_rowband(&l, &x, want);
-            check_partition(&l, &shards);
-            // every shard sees the full filter set and a row halo that
-            // fits the padded input
-            for s in &shards {
-                assert_eq!(s.w1 - s.w0, l.oc * (l.ic / l.groups) * l.fh * l.fw);
-                assert!(s.sub.ih <= l.ihp());
-                assert_eq!(s.sub.ow(), l.ow());
-            }
-        }
     }
 
     #[test]
@@ -1403,21 +985,36 @@ mod tests {
     }
 
     #[test]
-    fn auto_policy_picks_rowband_for_shallow_input_layers() {
-        // VGG conv1_1-like: 3 input channels, huge spatial extent — the
-        // oc-tile policy replicates the whole input per core and goes
-        // DMA-bound; row bands divide it
-        let early = ConvLayer::new("c11", 3, 224, 224, 64, 3, 3, 1, 1, 1);
-        assert_eq!(resolve_conv_policy(ShardPolicy::Auto, &early, 4), ShardPolicy::RowBand);
-        // AlexNet conv1-like (3 channels in, 11x11 stride-4): the other
-        // canonical few-output-channel input layer must also go row-band
-        let alex1 = ConvLayer::new("aconv1", 3, 227, 227, 96, 11, 11, 4, 0, 1);
-        assert_eq!(resolve_conv_policy(ShardPolicy::Auto, &alex1, 4), ShardPolicy::RowBand);
-        // deep, spatially small layers keep the oc-tile policy
-        let deep = ConvLayer::new("c53", 512, 14, 14, 512, 3, 3, 1, 1, 1);
-        assert_eq!(resolve_conv_policy(ShardPolicy::Auto, &deep, 4), ShardPolicy::OcTile);
-        // explicit policies pass through untouched
-        assert_eq!(resolve_conv_policy(ShardPolicy::RowBand, &deep, 4), ShardPolicy::RowBand);
+    fn sharded_fc_matches_single_core_bitexact() {
+        // neuron-tiled FC shards are a pure reshuffling of the solo
+        // matvec — outputs, MACs and the host reference all agree
+        let fc = FcLayer::new("fcx", 128, 96);
+        let mut rng = XorShift::new(17);
+        let x = rng.i16_vec(fc.in_features, -2000, 2000);
+        let w = rng.i16_vec(fc.in_features * fc.out_features, -256, 256);
+        let b = rng.i32_vec(fc.out_features, -1000, 1000);
+        let mut solo = EngineConfig::new().ext_capacity(1 << 22).build();
+        let base = solo.run_fc_layer(&fc, &x, &w, &b).unwrap();
+        assert_eq!(base.macs, fc.macs());
+        let expect = crate::codegen::reffc::fc_forward(
+            &x,
+            &w,
+            &b,
+            &fc,
+            crate::fixed::RoundMode::HalfUp,
+            16,
+        );
+        assert_eq!(base.out, expect, "solo FC vs host reference");
+        for policy in [ShardPolicy::OcTile, ShardPolicy::RowBand, ShardPolicy::Auto] {
+            for cores in [2usize, 4] {
+                let mut engine =
+                    EngineConfig::new().cores(cores).shard(policy).ext_capacity(1 << 22).build();
+                let r = engine.run_fc_layer(&fc, &x, &w, &b).unwrap();
+                assert_eq!(r.out, base.out, "{policy:?} {cores}-core FC output");
+                assert_eq!(r.macs, base.macs, "{policy:?} {cores}-core FC macs");
+                assert_eq!(r.core_cycles.len(), cores);
+            }
+        }
     }
 
     #[test]
@@ -1530,7 +1127,7 @@ mod tests {
         }
         // the DP must beat (or match) the naive equal-count split on a
         // skewed cost profile: one heavy layer, several light ones
-        let costs: Vec<u64> = layers.iter().map(layer_cost).collect();
+        let costs: Vec<u64> = layers.iter().map(|l| l.op().layer_cost()).collect();
         let stages = pipeline_stages(&layers, 2);
         let bottleneck = |cuts: &[(usize, usize)]| {
             cuts.iter().map(|&(a, b)| costs[a..b].iter().sum::<u64>()).max().unwrap()
@@ -1539,6 +1136,23 @@ mod tests {
         assert!(bottleneck(&stages) <= bottleneck(&[(0, 2), (2, 5)]));
         // degenerate inputs
         assert!(pipeline_stages(&[], 4).is_empty());
+    }
+
+    #[test]
+    fn stage_dp_isolates_a_dma_bound_fc_tail() {
+        // a weight-heavy FC dwarfs the tiny convs in predicted cost
+        // (its weights stream once per frame), so the 2-stage cut must
+        // put the FC tail alone on its own core rather than serialize
+        // it behind a conv stage
+        let layers = vec![
+            NetLayer::Conv(ConvLayer::new("c1", 4, 8, 8, 8, 3, 3, 1, 1, 1)),
+            NetLayer::Conv(ConvLayer::new("c2", 8, 8, 8, 8, 3, 3, 1, 1, 1)),
+            NetLayer::Fc(FcLayer::new("fc", 4096, 4096)),
+        ];
+        let fc_cost = layers[2].op().layer_cost();
+        let conv_cost: u64 = layers[..2].iter().map(|l| l.op().layer_cost()).sum();
+        assert!(fc_cost > 10 * conv_cost, "fc must dominate: {fc_cost} vs {conv_cost}");
+        assert_eq!(pipeline_stages(&layers, 2), vec![(0, 2), (2, 3)]);
     }
 
     #[test]

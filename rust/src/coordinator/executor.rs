@@ -1,7 +1,9 @@
-//! Layer executor: Fig. 2 scheduling of conv/pool layers onto **one**
-//! core. The crate-internal `conv_layer` / `pool_layer` are the
-//! primitives everything funnels into; the public free functions here
-//! are deprecated 0.2 shims — use [`crate::coordinator::Engine`].
+//! Layer executor: Fig. 2 scheduling of conv / pool / FC layers onto
+//! **one** core. The crate-internal `conv_layer` / `pool_layer` /
+//! `fc_layer` are the primitives everything funnels into, behind the
+//! [`LayerOp`](super::ops::LayerOp) trait — use
+//! [`crate::coordinator::Engine`] to run them. (The 0.2 free-function
+//! shims were removed in 0.4.0.)
 
 use std::collections::HashMap;
 
@@ -12,9 +14,13 @@ use crate::codegen::stage;
 use crate::core::{CoreStats, Cpu, SimError};
 use crate::isa::SReg;
 use crate::mem::{EXT_BYTES_PER_CYCLE, EXT_LATENCY_CYCLES};
-use crate::model::{ConvLayer, PoolLayer};
+use crate::model::{ConvLayer, FcLayer, PoolLayer};
 
-use super::metrics::{add_stats, div_stats, scale_stats, LayerResult, NetworkResult};
+// The layer-descriptor enum moved to the model in 0.4.0; re-exported
+// here so `coordinator::NetLayer` keeps working.
+pub use crate::model::NetLayer;
+
+use super::metrics::{add_stats, div_stats, scale_stats, LayerResult};
 
 /// Execution mode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -415,71 +421,22 @@ pub(crate) fn pool_layer(
     Ok(res)
 }
 
-/// A network layer for `run_network`.
-pub enum NetLayer {
-    Conv(ConvLayer),
-    Pool(PoolLayer),
-}
-
-impl NetLayer {
-    /// The wrapped layer's name (conv and pool descriptors both carry
-    /// static names from the model tables).
-    pub fn name(&self) -> &'static str {
-        match self {
-            NetLayer::Conv(l) => l.name,
-            NetLayer::Pool(l) => l.name,
-        }
-    }
-}
-
-/// Deprecated 0.2 shim: run one conv layer on one core.
-#[deprecated(
-    since = "0.3.0",
-    note = "build an engine: `EngineConfig::new().build()`, then `engine.run_conv_layer(...)`"
-)]
-pub fn run_conv_layer(
+/// Run a fully connected layer: `y = act(W·x + b)` lowered onto the
+/// conv dataflow as a 1×1 convolution over a 1×1 map
+/// ([`FcLayer::as_conv`]) — input features stream through the filter
+/// FIFO as depth slices, output neurons ride the oc-tile machinery.
+/// `x`: (in_features,), `w`: (out_features, in_features), `b`:
+/// (out_features,). The lowering is bit-exact against the host
+/// reference (`codegen::reffc`) because the weight layouts coincide.
+pub(crate) fn fc_layer(
     cpu: &mut Cpu,
-    layer: &ConvLayer,
+    layer: &FcLayer,
     x: &[i16],
     w: &[i16],
     b: &[i32],
     opts: ExecOptions,
 ) -> Result<LayerResult, ExecError> {
-    conv_layer(cpu, layer, x, w, b, opts)
-}
-
-/// Deprecated 0.2 shim: run one max-pool layer on one core.
-#[deprecated(
-    since = "0.3.0",
-    note = "build an engine: `EngineConfig::new().build()`, then `engine.run_pool_layer(...)`"
-)]
-pub fn run_pool_layer(
-    cpu: &mut Cpu,
-    layer: &PoolLayer,
-    x: &[i16],
-    opts: ExecOptions,
-) -> Result<LayerResult, ExecError> {
-    pool_layer(cpu, layer, x, opts)
-}
-
-/// Deprecated 0.2 shim: run a layer sequence on one core, threading
-/// activations, weights drawn per layer from one xorshift stream. The
-/// implementation is the engine's single network walk — this wrapper
-/// only binds it to a caller-owned [`Cpu`].
-#[deprecated(
-    since = "0.3.0",
-    note = "build an engine: `EngineConfig::new().seed(seed).build()`, then `engine.run_network(...)`"
-)]
-pub fn run_network(
-    cpu: &mut Cpu,
-    name: &str,
-    layers: &[NetLayer],
-    input: &[i16],
-    opts: ExecOptions,
-    seed: u64,
-) -> Result<NetworkResult, ExecError> {
-    let mut runner = super::engine::SoloRunner { cpu, opts };
-    super::engine::walk_network(&mut runner, name, layers, input, seed)
+    conv_layer(cpu, &layer.as_conv(), x, w, b, opts)
 }
 
 #[cfg(test)]
@@ -668,6 +625,48 @@ mod tests {
         assert_eq!(sum.compute_cycles, total.compute_cycles);
         assert_eq!(sum.io_in, total.io_in);
         assert_eq!(sum.io_out, total.io_out);
+    }
+
+    #[test]
+    fn fc_layer_matches_reference() {
+        use crate::codegen::reffc;
+        // even / odd feature counts, relu on / off
+        for (inf, outf, relu, seed) in
+            [(64usize, 48usize, true, 31u64), (37, 20, false, 32), (128, 10, true, 33)]
+        {
+            let mut fc = crate::model::FcLayer::new("fct", inf, outf);
+            fc.relu = relu;
+            let mut rng = XorShift::new(seed);
+            let x = rng.i16_vec(inf, -2000, 2000);
+            let w = rng.i16_vec(inf * outf, -256, 256);
+            let b = rng.i32_vec(outf, -1000, 1000);
+            let mut cpu = Cpu::new(1 << 20);
+            let r = fc_layer(&mut cpu, &fc, &x, &w, &b, ExecOptions::default()).unwrap();
+            let expect = reffc::fc_forward(&x, &w, &b, &fc, RoundMode::HalfUp, 16);
+            assert_eq!(r.out, expect, "in {inf} out {outf} relu {relu}");
+            assert_eq!(r.macs, fc.macs());
+            // weights dominate the off-chip traffic
+            assert!(r.io_in as usize >= 2 * inf * outf, "weight stream must be counted");
+        }
+    }
+
+    #[test]
+    fn fc_multi_slice_psum_path_matches_reference() {
+        use crate::codegen::reffc;
+        // in_features large enough that the planner slices the input
+        // depth (M > 1): exercises the PSum spill/reload path on the
+        // 1×1 lowering
+        let fc = crate::model::FcLayer::new("fcm", 2560, 16);
+        let p = layout::plan(&fc.as_conv()).unwrap();
+        assert!(p.m > 1, "expected multiple slices, got m={}", p.m);
+        let mut rng = XorShift::new(34);
+        let x = rng.i16_vec(fc.in_features, -2000, 2000);
+        let w = rng.i16_vec(fc.in_features * fc.out_features, -128, 128);
+        let b = rng.i32_vec(fc.out_features, -1000, 1000);
+        let mut cpu = Cpu::new(1 << 22);
+        let r = fc_layer(&mut cpu, &fc, &x, &w, &b, ExecOptions::default()).unwrap();
+        let expect = reffc::fc_forward(&x, &w, &b, &fc, RoundMode::HalfUp, 16);
+        assert_eq!(r.out, expect);
     }
 
     #[test]

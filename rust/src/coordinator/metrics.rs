@@ -1,7 +1,9 @@
 //! Metric aggregation: the quantities of Table II, plus the multi-core
-//! serving views (batched fan-out, layer-pipelined streaming).
+//! serving views (batched fan-out, layer-pipelined streaming) and the
+//! per-layer-kind rollups the end-to-end-network reports print.
 
 use crate::core::CoreStats;
+use crate::model::NetLayer;
 
 use super::bus::BusModel;
 
@@ -133,6 +135,54 @@ impl NetworkResult {
         }
         acc
     }
+
+    /// Roll the per-layer results up by layer *kind* (conv / pool / fc
+    /// — whatever kinds `layers` carries, in first-appearance order).
+    /// `layers` must be the descriptor list this result was produced
+    /// from; kind labels come from the `LayerOp` surface, so new layer
+    /// kinds show up in reports without report changes.
+    pub fn kind_totals(&self, layers: &[NetLayer]) -> Vec<KindTotal> {
+        assert_eq!(layers.len(), self.layers.len(), "descriptor/result mismatch");
+        let mut out: Vec<KindTotal> = Vec::new();
+        for (d, r) in layers.iter().zip(&self.layers) {
+            let kind = d.kind();
+            let idx = match out.iter().position(|t| t.kind == kind) {
+                Some(i) => i,
+                None => {
+                    out.push(KindTotal { kind, ..Default::default() });
+                    out.len() - 1
+                }
+            };
+            let t = &mut out[idx];
+            t.layers += 1;
+            t.cycles += r.cycles;
+            t.macs += r.macs;
+            t.io_bytes += r.io_total();
+        }
+        out
+    }
+}
+
+/// One layer kind's rollup within a network run (see
+/// [`NetworkResult::kind_totals`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct KindTotal {
+    /// Kind label (`"conv"`, `"pool"`, `"fc"`, …).
+    pub kind: &'static str,
+    /// Number of layers of this kind.
+    pub layers: usize,
+    /// Summed layer cycles (makespans for sharded layers).
+    pub cycles: u64,
+    /// Summed useful MACs.
+    pub macs: u64,
+    /// Summed off-chip bytes.
+    pub io_bytes: u64,
+}
+
+impl KindTotal {
+    pub fn time_ms(&self) -> f64 {
+        self.cycles as f64 / crate::CLOCK_HZ as f64 * 1e3
+    }
 }
 
 /// Result of a layer-pipelined streaming run
@@ -225,7 +275,11 @@ impl PipelineResult {
     }
 }
 
-pub(crate) fn add_stats(a: &CoreStats, b: &CoreStats) -> CoreStats {
+/// Field-wise sum of two activity-counter sets — how per-layer,
+/// per-frame and per-core stats compose into pool aggregates (and how
+/// the energy model's multi-core GOP/s/W is derived; see
+/// `tests/energy_validation.rs`).
+pub fn add_stats(a: &CoreStats, b: &CoreStats) -> CoreStats {
     macro_rules! s {
         ($($f:ident),* $(,)?) => { CoreStats { $($f: a.$f + b.$f),* } };
     }
@@ -315,6 +369,36 @@ mod tests {
         assert_eq!(empty.steady_state_fps(), 0.0);
         assert_eq!(empty.throughput_fps(), 0.0);
         assert_eq!(empty.speedup(), 1.0);
+    }
+
+    #[test]
+    fn kind_totals_roll_up_by_layer_kind() {
+        use crate::model::{ConvLayer, FcLayer, PoolLayer};
+        let layers = vec![
+            NetLayer::Conv(ConvLayer::new("c1", 4, 8, 8, 16, 3, 3, 1, 1, 1)),
+            NetLayer::Pool(PoolLayer { name: "p1", ic: 16, ih: 8, iw: 8, size: 2, stride: 2 }),
+            NetLayer::Conv(ConvLayer::new("c2", 16, 4, 4, 16, 3, 3, 1, 1, 1)),
+            NetLayer::Fc(FcLayer::new("fc", 256, 10)),
+        ];
+        let mut n = NetworkResult { name: "k".into(), ..Default::default() };
+        for (i, l) in layers.iter().enumerate() {
+            n.layers.push(LayerResult {
+                name: l.name().into(),
+                cycles: 100 * (i as u64 + 1),
+                macs: 10 * (i as u64 + 1),
+                io_in: i as u64,
+                ..Default::default()
+            });
+        }
+        let kt = n.kind_totals(&layers);
+        assert_eq!(kt.len(), 3);
+        assert_eq!((kt[0].kind, kt[0].layers, kt[0].cycles, kt[0].macs), ("conv", 2, 400, 40));
+        assert_eq!((kt[1].kind, kt[1].layers, kt[1].cycles), ("pool", 1, 200));
+        assert_eq!((kt[2].kind, kt[2].layers, kt[2].cycles, kt[2].io_bytes), ("fc", 1, 400, 3));
+        // totals tile the network aggregates exactly
+        assert_eq!(kt.iter().map(|t| t.cycles).sum::<u64>(), n.cycles());
+        assert_eq!(kt.iter().map(|t| t.macs).sum::<u64>(), n.macs());
+        assert_eq!(kt.iter().map(|t| t.io_bytes).sum::<u64>(), n.io_bytes());
     }
 
     #[test]

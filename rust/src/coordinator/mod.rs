@@ -14,25 +14,21 @@
 //! from an [`EngineConfig`] (cores, batch, [`ShardPolicy`],
 //! [`PoolMode`], [`BusModel`], mode, seed) and call `run_layer` /
 //! `run_network` / `run_batched` / `run_streaming`. One network walk
-//! serves every mode; the multi-core pool shards layers by
-//! output-channel tiles or output-row bands, fans batched frames out,
-//! or pipelines contiguous layer stages across the cores, and prices
-//! external bandwidth per the [`bus`] contention model. The 0.2 free
-//! functions in [`executor`] / [`scheduler`] are deprecated shims.
+//! serves every mode; everything layer-kind-specific (conv, pool, FC)
+//! lives behind the [`ops::LayerOp`] trait, so the walk, the shard
+//! pool, the batched fan-out, the layer pipeline and the [`bus`]
+//! contention model are all kind-agnostic. The 0.2 free-function API
+//! (and its 0.3 `#[deprecated]` shims) is gone; `tools/
+//! check-deprecated.sh` keeps it from coming back.
 
 pub mod bus;
 pub mod engine;
 pub mod executor;
 pub mod metrics;
-pub mod scheduler;
+pub mod ops;
 
 pub use bus::BusModel;
 pub use engine::{BatchedResult, CorePool, Engine, EngineConfig, PoolMode, ShardPolicy};
 pub use executor::{ExecMode, ExecOptions, NetLayer};
 pub use metrics::{LayerResult, NetworkResult, PipelineResult};
-
-// 0.2 compatibility re-exports (deprecated shims, kept one release).
-#[allow(deprecated)]
-pub use executor::{run_conv_layer, run_network, run_pool_layer};
-#[allow(deprecated)]
-pub use scheduler::{run_batched, run_conv_layer_mc, run_network_mc, run_pool_layer_mc};
+pub use ops::LayerOp;

@@ -1,0 +1,752 @@
+//! The [`LayerOp`] trait: ONE surface for everything the coordinator
+//! needs to know about a layer kind — shapes, MACs, cost-model
+//! footprints, synthetic tensor draws, single-core execution, intra-
+//! layer sharding, and shard merging. [`ConvLayer`], [`PoolLayer`] and
+//! [`FcLayer`] implement it; [`NetLayer::op`] is the single dispatch
+//! point. No other code matches on the layer kind, so adding a layer
+//! kind (depthwise, residual add, normalization, …) means one new impl
+//! here — engine, bus, metrics and report code pick it up unchanged.
+//!
+//! The Multi-Mode Inference Engine of Ardakani et al. (arXiv:1712.03994)
+//! treats conv and FC as two modes of one datapath; this module is the
+//! coordinator-level analogue. The FC mode rides the Fig. 2 conv
+//! dataflow via [`FcLayer::as_conv`] (input features = depth slices,
+//! output neurons = oc tiles), so its shards are *neuron tiles* and its
+//! cost is dominated by the weight stream (every weight is used exactly
+//! once per frame — heavily DMA-bound).
+
+use crate::codegen::layout;
+use crate::codegen::stage;
+use crate::core::Cpu;
+use crate::model::{ConvLayer, FcLayer, NetLayer, PoolLayer};
+use crate::util::XorShift;
+
+use super::bus::BusModel;
+use super::engine::ShardPolicy;
+use super::executor::{conv_layer, fc_layer, pool_layer, ExecError, ExecMode, ExecOptions};
+use super::metrics::LayerResult;
+
+/// SFU pool tile: 16 channels per vector.
+pub(crate) const POOL_GRAIN: usize = 16;
+
+/// One layer kind's behavior behind the coordinator's generic walks.
+///
+/// `run_solo` executes the whole layer on one core; `shard` splits it
+/// into [`Shard`]s for a pool of cores (each shard re-runs `run_solo`
+/// on its sub-layer); `merge` scatters shard outputs back and prices
+/// the makespan. `draw` defines the layer's slot in the deterministic
+/// synthetic-weight stream; `tensor_footprints` and `layer_cost` feed
+/// the first-order cost model behind `ShardPolicy::Auto` and the
+/// pipeline-stage DP.
+pub trait LayerOp {
+    /// Layer name (model tables carry static names).
+    fn name(&self) -> &'static str;
+
+    /// Kind label for reports: `"conv"`, `"pool"`, `"fc"`, …
+    fn kind(&self) -> &'static str;
+
+    /// Input tensor elements (unpadded, as the network walk stages it).
+    fn in_elems(&self) -> usize;
+
+    /// Output tensor elements — the layer's contribution to the
+    /// activation chain (`out_shape` flattened).
+    fn out_elems(&self) -> usize;
+
+    /// Useful MACs of the layer's arithmetic.
+    fn macs(&self) -> u64;
+
+    /// `(input, weight, output)` element counts for the first-order
+    /// cost model (input counted *padded* where the dataflow stages it
+    /// padded). Only relative magnitudes matter.
+    fn tensor_footprints(&self) -> (usize, usize, usize);
+
+    /// `(weight, bias)` element counts of the drawable parameter
+    /// tensors; `(0, 0)` for weightless layers.
+    fn param_elems(&self) -> (usize, usize);
+
+    /// This layer's draw from the synthetic weight stream: weights then
+    /// biases, in the crate-wide ranges. THE single definition of the
+    /// draw order — every walk consumes the stream through this method,
+    /// so tensors are bit-identical across execution modes by
+    /// construction. `None` for weightless layers (no stream advance).
+    fn draw(&self, rng: &mut XorShift) -> Option<(Vec<i16>, Vec<i32>)> {
+        let (w, b) = self.param_elems();
+        if w == 0 {
+            return None;
+        }
+        Some((rng.i16_vec(w, -128, 128), rng.i32_vec(b, -1000, 1000)))
+    }
+
+    /// Execute the whole layer on one core. `w`/`b` are empty slices
+    /// for weightless layers.
+    fn run_solo(
+        &self,
+        cpu: &mut Cpu,
+        x: &[i16],
+        w: &[i16],
+        b: &[i32],
+        opts: ExecOptions,
+    ) -> Result<LayerResult, ExecError>;
+
+    /// Split the layer into shards for (at most) `want` cores under
+    /// `policy`. Shard outputs must tile the output tensor exactly and
+    /// reproduce the single-core arithmetic bit-for-bit.
+    fn shard(&self, x: &[i16], policy: ShardPolicy, want: usize) -> Vec<Shard>;
+
+    /// Predicted single-core cost for the pipeline-stage DP and the
+    /// `Auto` policy (MACs at ~2/3 utilization vs tensor footprints
+    /// over the bus width). Only the relative ranking matters.
+    fn layer_cost(&self) -> u64 {
+        let (i, w, o) = self.tensor_footprints();
+        conv_cost(self.macs(), i, w, o).max(1)
+    }
+
+    /// Merge executed shard results into the layer's [`LayerResult`]:
+    /// accumulate metrics, scatter outputs through the placement runs,
+    /// price per-core busy time under the bus model. The shared default
+    /// serves every kind.
+    fn merge(
+        &self,
+        results: Vec<LayerResult>,
+        placements: &[Vec<(usize, usize)>],
+        core_of: &[usize],
+        cores: usize,
+        mode: ExecMode,
+        bus: BusModel,
+    ) -> LayerResult {
+        merge_shards(self.name(), self.out_elems(), results, placements, core_of, cores, mode, bus)
+    }
+}
+
+impl NetLayer {
+    /// THE layer-kind dispatch point. All per-kind behavior hangs off
+    /// the returned [`LayerOp`]; nothing outside this method and the
+    /// trait impls matches on the variant.
+    pub fn op(&self) -> &dyn LayerOp {
+        match self {
+            NetLayer::Conv(l) => l,
+            NetLayer::Pool(l) => l,
+            NetLayer::Fc(l) => l,
+        }
+    }
+
+    /// The wrapped layer's name.
+    pub fn name(&self) -> &'static str {
+        self.op().name()
+    }
+
+    /// Kind label for reports (`conv` / `pool` / `fc`).
+    pub fn kind(&self) -> &'static str {
+        self.op().kind()
+    }
+}
+
+/// A shard's view of the layer input.
+pub enum ShardInput {
+    /// Borrow `[lo, hi)` of the caller's tensor (contiguous slices —
+    /// oc-tile group slices and pool slabs — stay zero-copy).
+    Range(usize, usize),
+    /// Shard-private gathered tensor (row bands are strided in the full
+    /// tensor, so they are materialized per shard).
+    Owned(Vec<i16>),
+}
+
+impl ShardInput {
+    pub fn resolve<'a>(&'a self, x: &'a [i16]) -> &'a [i16] {
+        match self {
+            ShardInput::Range(lo, hi) => &x[*lo..*hi],
+            ShardInput::Owned(v) => v,
+        }
+    }
+}
+
+/// One unit of sharded work: a sub-layer plus the tensor ranges it
+/// reads and the output runs it produces. Kind-agnostic — the engine
+/// runs `sub.op().run_solo(...)` on the resolved slices.
+pub struct Shard {
+    /// The sub-layer this shard executes (same kind machinery as the
+    /// full layer, or a lowered kind — FC shards are 1×1 conv tiles).
+    pub sub: NetLayer,
+    /// The shard's input view.
+    pub input: ShardInput,
+    /// Half-open weight element range in the full weight tensor.
+    pub w: (usize, usize),
+    /// Half-open bias element range in the full bias tensor.
+    pub b: (usize, usize),
+    /// `(dst offset, len)` runs in the full output tensor; the shard's
+    /// output is consumed sequentially across the runs.
+    pub placement: Vec<(usize, usize)>,
+}
+
+// ---------------------------------------------------------------------------
+// shared shard/cost machinery
+// ---------------------------------------------------------------------------
+
+/// Split `units` units into at most `want` balanced contiguous chunks,
+/// front-loading the remainder: half-open `(u0, u1)` unit ranges. The
+/// single partitioner behind every shard axis (oc tiles, row bands,
+/// pool slabs, neuron tiles) — deterministic in its inputs.
+fn balanced_chunks(units: usize, want: usize) -> Vec<(usize, usize)> {
+    let k = want.max(1).min(units.max(1));
+    let (base, extra) = (units / k, units % k);
+    let mut chunks = Vec::with_capacity(k);
+    let mut u0 = 0usize;
+    for ci in 0..k {
+        let n = base + usize::from(ci < extra);
+        if n > 0 {
+            chunks.push((u0, u0 + n));
+            u0 += n;
+        }
+    }
+    chunks
+}
+
+/// Tile-aligned contiguous oc ranges within each group:
+/// `(group, oc0, oc1)`. Deterministic in (layer, want).
+fn octile_specs(layer: &ConvLayer, want: usize) -> Vec<(usize, usize, usize)> {
+    let g = layer.groups;
+    let lg = layer.per_group();
+    let ocg = lg.oc;
+    // Tile-align chunks to the planner's oc grain so shards don't add
+    // padding lanes the single-core schedule wouldn't have.
+    let grain = layout::plan(&lg).map(|p| p.variant.ocs()).unwrap_or(16);
+    let units = ocg.div_ceil(grain).max(1);
+    let mut specs = Vec::new();
+    for gi in 0..g {
+        for (u0, u1) in balanced_chunks(units, want.div_ceil(g)) {
+            let oc0 = (u0 * grain).min(ocg);
+            let oc1 = (u1 * grain).min(ocg);
+            if oc0 < oc1 {
+                specs.push((gi, oc0, oc1));
+            }
+        }
+    }
+    specs
+}
+
+/// Balanced contiguous output-row bands `(r0, r1)` over `rows` rows.
+fn rowband_specs(rows: usize, want: usize) -> Vec<(usize, usize)> {
+    balanced_chunks(rows, want)
+}
+
+fn conv_shards_octile(layer: &ConvLayer, want: usize) -> Vec<Shard> {
+    let lg = layer.per_group();
+    let (icg, ocg) = (lg.ic, lg.oc);
+    let ohw = layer.oh() * layer.ow();
+    octile_specs(layer, want)
+        .into_iter()
+        .map(|(gi, oc0, oc1)| {
+            let oc_abs = gi * ocg + oc0;
+            Shard {
+                sub: NetLayer::Conv(ConvLayer {
+                    ic: icg,
+                    oc: oc1 - oc0,
+                    groups: 1,
+                    ..layer.clone()
+                }),
+                input: ShardInput::Range(
+                    gi * icg * layer.ih * layer.iw,
+                    (gi + 1) * icg * layer.ih * layer.iw,
+                ),
+                w: (
+                    oc_abs * icg * layer.fh * layer.fw,
+                    (oc_abs + (oc1 - oc0)) * icg * layer.fh * layer.fw,
+                ),
+                b: (oc_abs, oc_abs + (oc1 - oc0)),
+                placement: vec![(oc_abs * ohw, (oc1 - oc0) * ohw)],
+            }
+        })
+        .collect()
+}
+
+/// Row-band conv shards: the sub-layer convolves a pre-padded row slice
+/// (its own halo included) with `pad = 0`, which is arithmetically
+/// identical to the full layer restricted to those output rows — so
+/// outputs stay bit-exact and per-shard MACs tile the layer exactly.
+fn conv_shards_rowband(layer: &ConvLayer, x: &[i16], want: usize) -> Vec<Shard> {
+    let (oh, ow) = (layer.oh(), layer.ow());
+    let (ihp, iwp) = (layer.ihp(), layer.iwp());
+    let xp = stage::pad_input(layer, x);
+    let w_all = layer.oc * (layer.ic / layer.groups) * layer.fh * layer.fw;
+    rowband_specs(oh, want)
+        .into_iter()
+        .map(|(oh0, oh1)| {
+            let rows = oh1 - oh0;
+            let in_r0 = oh0 * layer.stride;
+            let in_rows = (rows - 1) * layer.stride + layer.fh;
+            let mut xin = vec![0i16; layer.ic * in_rows * iwp];
+            for (c, dst) in xin.chunks_exact_mut(in_rows * iwp).enumerate() {
+                let src = (c * ihp + in_r0) * iwp;
+                dst.copy_from_slice(&xp[src..src + in_rows * iwp]);
+            }
+            Shard {
+                sub: NetLayer::Conv(ConvLayer { ih: in_rows, iw: iwp, pad: 0, ..layer.clone() }),
+                input: ShardInput::Owned(xin),
+                w: (0, w_all),
+                b: (0, layer.oc),
+                placement: (0..layer.oc).map(|o| ((o * oh + oh0) * ow, rows * ow)).collect(),
+            }
+        })
+        .collect()
+}
+
+fn pool_shards_slab(layer: &PoolLayer, want: usize) -> Vec<Shard> {
+    let (ih, iw) = (layer.ih, layer.iw);
+    let (oh, ow) = (layer.oh(), layer.ow());
+    let units = layer.ic.div_ceil(POOL_GRAIN).max(1);
+    let mut shards = Vec::new();
+    for (u0, u1) in balanced_chunks(units, want) {
+        let c0 = (u0 * POOL_GRAIN).min(layer.ic);
+        let c1 = (u1 * POOL_GRAIN).min(layer.ic);
+        if c0 < c1 {
+            shards.push(Shard {
+                sub: NetLayer::Pool(PoolLayer { ic: c1 - c0, ..layer.clone() }),
+                input: ShardInput::Range(c0 * ih * iw, c1 * ih * iw),
+                w: (0, 0),
+                b: (0, 0),
+                placement: vec![(c0 * oh * ow, (c1 - c0) * oh * ow)],
+            });
+        }
+    }
+    shards
+}
+
+fn pool_shards_rowband(layer: &PoolLayer, x: &[i16], want: usize) -> Vec<Shard> {
+    let (oh, ow) = (layer.oh(), layer.ow());
+    rowband_specs(oh, want)
+        .into_iter()
+        .map(|(oy0, oy1)| {
+            let rows = oy1 - oy0;
+            let in_r0 = oy0 * layer.stride;
+            let in_rows = (rows - 1) * layer.stride + layer.size;
+            let mut xin = vec![0i16; layer.ic * in_rows * layer.iw];
+            for (c, dst) in xin.chunks_exact_mut(in_rows * layer.iw).enumerate() {
+                let src = (c * layer.ih + in_r0) * layer.iw;
+                dst.copy_from_slice(&x[src..src + in_rows * layer.iw]);
+            }
+            Shard {
+                sub: NetLayer::Pool(PoolLayer { ih: in_rows, ..layer.clone() }),
+                input: ShardInput::Owned(xin),
+                w: (0, 0),
+                b: (0, 0),
+                placement: (0..layer.ic).map(|c| ((c * oh + oy0) * ow, rows * ow)).collect(),
+            }
+        })
+        .collect()
+}
+
+/// First-order shard cost for the `Auto` policy and the default
+/// [`LayerOp::layer_cost`]: compute from MACs at a calibrated ~2/3
+/// utilization, DMA from tensor footprints over the bus width,
+/// combined with the executor's overlap `max`. Only the relative
+/// ranking matters.
+pub(crate) fn conv_cost(macs: u64, in_elems: usize, w_elems: usize, out_elems: usize) -> u64 {
+    let comp = macs * 3 / (2 * crate::PEAK_MACS_PER_CYCLE);
+    let bytes = 2 * (in_elems + w_elems + out_elems) as u64;
+    comp.max(bytes / crate::mem::EXT_BYTES_PER_CYCLE as u64)
+}
+
+/// Makespan of round-robining `costs` over `cores` (the real shard
+/// assignment order).
+fn predicted_makespan(costs: &[u64], cores: usize) -> u64 {
+    let n = cores.max(1);
+    let mut load = vec![0u64; n];
+    for (i, c) in costs.iter().enumerate() {
+        load[i % n] += c;
+    }
+    load.into_iter().max().unwrap_or(0)
+}
+
+pub(crate) fn resolve_conv_policy(
+    policy: ShardPolicy,
+    layer: &ConvLayer,
+    cores: usize,
+) -> ShardPolicy {
+    if policy != ShardPolicy::Auto {
+        return policy;
+    }
+    let lg = layer.per_group();
+    let (oh, ow) = (layer.oh(), layer.ow());
+    let w_per_oc = lg.ic * layer.fh * layer.fw;
+    let oc_costs: Vec<u64> = octile_specs(layer, cores)
+        .iter()
+        .map(|&(_, oc0, oc1)| {
+            let oc = oc1 - oc0;
+            conv_cost(
+                (oc * w_per_oc * oh * ow) as u64,
+                lg.ic * layer.ihp() * layer.iwp(),
+                oc * w_per_oc,
+                oc * oh * ow,
+            )
+        })
+        .collect();
+    let rb_costs: Vec<u64> = rowband_specs(oh, cores)
+        .iter()
+        .map(|&(oh0, oh1)| {
+            let rows = oh1 - oh0;
+            let in_rows = (rows - 1) * layer.stride + layer.fh;
+            conv_cost(
+                (layer.oc * w_per_oc * rows * ow) as u64,
+                layer.ic * in_rows * layer.iwp(),
+                layer.oc * w_per_oc,
+                layer.oc * rows * ow,
+            )
+        })
+        .collect();
+    if predicted_makespan(&rb_costs, cores) < predicted_makespan(&oc_costs, cores) {
+        ShardPolicy::RowBand
+    } else {
+        ShardPolicy::OcTile
+    }
+}
+
+fn resolve_pool_policy(policy: ShardPolicy, layer: &PoolLayer, cores: usize) -> ShardPolicy {
+    match policy {
+        // slabs cannot fill the pool when there are fewer 16-channel
+        // units than cores; row bands always can in practice
+        ShardPolicy::Auto => {
+            if layer.ic.div_ceil(POOL_GRAIN) < cores {
+                ShardPolicy::RowBand
+            } else {
+                ShardPolicy::OcTile
+            }
+        }
+        p => p,
+    }
+}
+
+/// The ONE shard-merge helper behind [`LayerOp::merge`]: accumulates
+/// metrics, scatters shard outputs through their placement runs, and
+/// prices per-core busy time under the bus model. The layer's latency
+/// is the makespan of the slowest core.
+#[allow(clippy::too_many_arguments)]
+fn merge_shards(
+    name: &str,
+    out_len: usize,
+    results: Vec<LayerResult>,
+    placements: &[Vec<(usize, usize)>],
+    core_of: &[usize],
+    cores: usize,
+    mode: ExecMode,
+    bus: BusModel,
+) -> LayerResult {
+    use super::bus::{core_busy, Segment};
+    use super::metrics::add_stats;
+
+    let mut res = LayerResult { name: name.to_string(), ..Default::default() };
+    // only FullCycle produces shard outputs worth merging
+    let mut out = if mode == ExecMode::FullCycle { vec![0i16; out_len] } else { Vec::new() };
+    let mut segs: Vec<Vec<Segment>> = (0..cores).map(|_| Vec::new()).collect();
+    for (idx, r) in results.into_iter().enumerate() {
+        res.compute_cycles += r.compute_cycles;
+        res.dma_cycles += r.dma_cycles;
+        res.macs += r.macs;
+        res.io_in += r.io_in;
+        res.io_out += r.io_out;
+        res.stats = add_stats(&res.stats, &r.stats);
+        segs[core_of[idx]].push(Segment::of_layer(&r));
+        if !r.out.is_empty() {
+            let mut src = 0usize;
+            for &(dst, len) in &placements[idx] {
+                out[dst..dst + len].copy_from_slice(&r.out[src..src + len]);
+                src += len;
+            }
+        }
+    }
+    let acct = core_busy(&segs, bus);
+    res.cycles = acct.busy.iter().copied().max().unwrap_or(0);
+    res.core_cycles = acct.busy;
+    if mode == ExecMode::FullCycle {
+        res.out = out;
+    }
+    res
+}
+
+// ---------------------------------------------------------------------------
+// the three layer kinds
+// ---------------------------------------------------------------------------
+
+impl LayerOp for ConvLayer {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn kind(&self) -> &'static str {
+        "conv"
+    }
+
+    fn in_elems(&self) -> usize {
+        self.ic * self.ih * self.iw
+    }
+
+    fn out_elems(&self) -> usize {
+        self.oc * self.oh() * self.ow()
+    }
+
+    fn macs(&self) -> u64 {
+        ConvLayer::macs(self)
+    }
+
+    fn tensor_footprints(&self) -> (usize, usize, usize) {
+        let lg = self.per_group();
+        (
+            self.ic * self.ihp() * self.iwp(),
+            self.oc * lg.ic * self.fh * self.fw,
+            self.oc * self.oh() * self.ow(),
+        )
+    }
+
+    fn param_elems(&self) -> (usize, usize) {
+        (self.oc * (self.ic / self.groups) * self.fh * self.fw, self.oc)
+    }
+
+    fn run_solo(
+        &self,
+        cpu: &mut Cpu,
+        x: &[i16],
+        w: &[i16],
+        b: &[i32],
+        opts: ExecOptions,
+    ) -> Result<LayerResult, ExecError> {
+        conv_layer(cpu, self, x, w, b, opts)
+    }
+
+    fn shard(&self, x: &[i16], policy: ShardPolicy, want: usize) -> Vec<Shard> {
+        match resolve_conv_policy(policy, self, want) {
+            ShardPolicy::RowBand => conv_shards_rowband(self, x, want),
+            _ => conv_shards_octile(self, want),
+        }
+    }
+}
+
+impl LayerOp for PoolLayer {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn kind(&self) -> &'static str {
+        "pool"
+    }
+
+    fn in_elems(&self) -> usize {
+        self.ic * self.ih * self.iw
+    }
+
+    fn out_elems(&self) -> usize {
+        self.ic * self.oh() * self.ow()
+    }
+
+    // pool layers carry no MACs; their cost is the SFU-hidden streaming
+    // of the tensor through the bus
+    fn macs(&self) -> u64 {
+        0
+    }
+
+    fn tensor_footprints(&self) -> (usize, usize, usize) {
+        (self.ic * self.ih * self.iw, 0, self.ic * self.oh() * self.ow())
+    }
+
+    fn param_elems(&self) -> (usize, usize) {
+        (0, 0)
+    }
+
+    fn run_solo(
+        &self,
+        cpu: &mut Cpu,
+        x: &[i16],
+        _w: &[i16],
+        _b: &[i32],
+        opts: ExecOptions,
+    ) -> Result<LayerResult, ExecError> {
+        pool_layer(cpu, self, x, opts)
+    }
+
+    fn shard(&self, x: &[i16], policy: ShardPolicy, want: usize) -> Vec<Shard> {
+        match resolve_pool_policy(policy, self, want) {
+            ShardPolicy::RowBand => pool_shards_rowband(self, x, want),
+            _ => pool_shards_slab(self, want),
+        }
+    }
+}
+
+impl LayerOp for FcLayer {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn kind(&self) -> &'static str {
+        "fc"
+    }
+
+    fn in_elems(&self) -> usize {
+        self.in_features
+    }
+
+    fn out_elems(&self) -> usize {
+        self.out_features
+    }
+
+    fn macs(&self) -> u64 {
+        FcLayer::macs(self)
+    }
+
+    /// Weights dominate: each of the `in·out` weights streams in once
+    /// per frame, so FC layers are heavily DMA-bound and the pipeline
+    /// stage DP isolates the FC tail onto its own core(s).
+    fn tensor_footprints(&self) -> (usize, usize, usize) {
+        (self.in_features, self.in_features * self.out_features, self.out_features)
+    }
+
+    fn param_elems(&self) -> (usize, usize) {
+        (self.in_features * self.out_features, self.out_features)
+    }
+
+    fn run_solo(
+        &self,
+        cpu: &mut Cpu,
+        x: &[i16],
+        w: &[i16],
+        b: &[i32],
+        opts: ExecOptions,
+    ) -> Result<LayerResult, ExecError> {
+        fc_layer(cpu, self, x, w, b, opts)
+    }
+
+    /// Neuron tiles — the oc-tile machinery on the 1×1 lowering. Every
+    /// policy resolves to neuron tiling: row bands are degenerate on a
+    /// 1×1 output map (a single band = no parallelism), so `Auto` and
+    /// an explicit `RowBand` both fall back to tiling the output
+    /// neurons.
+    fn shard(&self, _x: &[i16], _policy: ShardPolicy, want: usize) -> Vec<Shard> {
+        conv_shards_octile(&self.as_conv(), want)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_partition(macs: u64, out_elems: usize, shards: &[Shard], what: &str) {
+        let shard_macs: u64 = shards.iter().map(|s| s.sub.op().macs()).sum();
+        assert_eq!(shard_macs, macs, "{what}: shard MACs must tile the layer");
+        let mut marks = vec![false; out_elems];
+        for s in shards {
+            for &(dst, len) in &s.placement {
+                for m in &mut marks[dst..dst + len] {
+                    assert!(!*m, "{what}: overlapping shard output");
+                    *m = true;
+                }
+            }
+        }
+        assert!(marks.iter().all(|&m| m), "{what}: uncovered outputs");
+    }
+
+    #[test]
+    fn octile_shards_partition_the_layer() {
+        for (l, want) in [
+            (ConvLayer::new("d", 8, 16, 16, 64, 3, 3, 1, 1, 1), 4),
+            (ConvLayer::new("g", 8, 13, 13, 32, 3, 3, 1, 1, 2), 4),
+            (ConvLayer::new("tiny", 4, 10, 10, 16, 3, 3, 1, 1, 1), 8),
+        ] {
+            let shards = conv_shards_octile(&l, want);
+            check_partition(l.macs(), LayerOp::out_elems(&l), &shards, l.name);
+        }
+    }
+
+    #[test]
+    fn rowband_shards_partition_the_layer() {
+        for (l, want) in [
+            (ConvLayer::new("d", 8, 16, 16, 64, 3, 3, 1, 1, 1), 4),
+            (ConvLayer::new("g", 8, 13, 13, 32, 3, 3, 1, 1, 2), 4),
+            (ConvLayer::new("s2", 3, 23, 23, 16, 5, 5, 2, 2, 1), 3),
+            (ConvLayer::new("thin", 4, 6, 10, 16, 3, 3, 1, 1, 1), 8),
+        ] {
+            let x = vec![0i16; l.ic * l.ih * l.iw];
+            let shards = conv_shards_rowband(&l, &x, want);
+            check_partition(l.macs(), LayerOp::out_elems(&l), &shards, l.name);
+            // every shard sees the full filter set and a row halo that
+            // fits the padded input
+            for s in &shards {
+                assert_eq!(s.w.1 - s.w.0, l.oc * (l.ic / l.groups) * l.fh * l.fw);
+                let NetLayer::Conv(sub) = &s.sub else { panic!("row-band sub must be conv") };
+                assert!(sub.ih <= l.ihp());
+                assert_eq!(sub.ow(), l.ow());
+            }
+        }
+    }
+
+    #[test]
+    fn fc_shards_are_neuron_tiles_under_every_policy() {
+        let fc = FcLayer::new("fct", 96, 72);
+        let x = vec![0i16; 96];
+        for policy in [ShardPolicy::OcTile, ShardPolicy::RowBand, ShardPolicy::Auto] {
+            let shards = LayerOp::shard(&fc, &x, policy, 3);
+            assert!(shards.len() > 1, "{policy:?}: FC must actually parallelize");
+            check_partition(fc.macs(), fc.out_features, &shards, fc.name);
+            // every shard is a contiguous neuron tile reading the full
+            // input and its own weight rows
+            let mut covered = 0usize;
+            for s in &shards {
+                let NetLayer::Conv(sub) = &s.sub else { panic!("FC sub must be the 1×1 conv") };
+                assert_eq!((sub.ic, sub.fh, sub.fw, sub.ih, sub.iw), (96, 1, 1, 1, 1));
+                assert_eq!(s.w.1 - s.w.0, sub.oc * 96, "weight rows match the neuron tile");
+                covered += sub.oc;
+            }
+            assert_eq!(covered, fc.out_features);
+        }
+    }
+
+    #[test]
+    fn auto_policy_picks_rowband_for_shallow_input_layers() {
+        // VGG conv1_1-like: 3 input channels, huge spatial extent — the
+        // oc-tile policy replicates the whole input per core and goes
+        // DMA-bound; row bands divide it
+        let early = ConvLayer::new("c11", 3, 224, 224, 64, 3, 3, 1, 1, 1);
+        assert_eq!(resolve_conv_policy(ShardPolicy::Auto, &early, 4), ShardPolicy::RowBand);
+        // AlexNet conv1-like (3 channels in, 11x11 stride-4): the other
+        // canonical few-output-channel input layer must also go row-band
+        let alex1 = ConvLayer::new("aconv1", 3, 227, 227, 96, 11, 11, 4, 0, 1);
+        assert_eq!(resolve_conv_policy(ShardPolicy::Auto, &alex1, 4), ShardPolicy::RowBand);
+        // deep, spatially small layers keep the oc-tile policy
+        let deep = ConvLayer::new("c53", 512, 14, 14, 512, 3, 3, 1, 1, 1);
+        assert_eq!(resolve_conv_policy(ShardPolicy::Auto, &deep, 4), ShardPolicy::OcTile);
+        // explicit policies pass through untouched
+        assert_eq!(resolve_conv_policy(ShardPolicy::RowBand, &deep, 4), ShardPolicy::RowBand);
+    }
+
+    #[test]
+    fn dispatch_and_kind_labels() {
+        let layers = [
+            NetLayer::Conv(ConvLayer::new("c", 4, 8, 8, 16, 3, 3, 1, 1, 1)),
+            NetLayer::Pool(PoolLayer { name: "p", ic: 16, ih: 8, iw: 8, size: 2, stride: 2 }),
+            NetLayer::Fc(FcLayer::new("f", 256, 10)),
+        ];
+        assert_eq!(layers.iter().map(|l| l.kind()).collect::<Vec<_>>(), ["conv", "pool", "fc"]);
+        assert_eq!(layers.iter().map(|l| l.name()).collect::<Vec<_>>(), ["c", "p", "f"]);
+        // shapes chain through the pool→fc flatten
+        assert_eq!(layers[1].op().out_elems(), 16 * 4 * 4);
+        assert_eq!(layers[2].op().in_elems(), 256);
+        // weightless layers draw nothing; weighted layers draw w then b
+        let mut rng = XorShift::new(1);
+        assert!(layers[1].op().draw(&mut rng).is_none());
+        let (w, b) = layers[2].op().draw(&mut rng).unwrap();
+        assert_eq!((w.len(), b.len()), (2560, 10));
+    }
+
+    #[test]
+    fn fc_layer_cost_is_weight_dma_bound() {
+        // fc6-scale: 9216·4096 weights stream once per frame — the DMA
+        // term (2 B/elem over the bus width) must dominate the MACs-at-
+        // 2/3-utilization compute term by a wide margin
+        let fc = FcLayer::new("fc6", 9216, 4096);
+        let (i, w, o) = LayerOp::tensor_footprints(&fc);
+        let dma = 2 * (i + w + o) as u64 / crate::mem::EXT_BYTES_PER_CYCLE as u64;
+        let comp = fc.macs() * 3 / (2 * crate::PEAK_MACS_PER_CYCLE);
+        assert!(dma > 2 * comp, "fc6 must be DMA-bound: dma {dma} vs comp {comp}");
+        assert_eq!(LayerOp::layer_cost(&fc), dma.max(comp).max(1));
+        // and a same-MACs conv is NOT dominated by its weight stream
+        let conv = ConvLayer::new("c", 64, 56, 56, 64, 3, 3, 1, 1, 1);
+        let (ci, cw, co) = LayerOp::tensor_footprints(&conv);
+        assert!(cw < ci + co, "conv weights must not dominate its footprints");
+    }
+}

@@ -66,8 +66,10 @@ impl Default for CsrFile {
 }
 
 /// Cycle and activity statistics — the inputs to the utilization metric
-/// (Table II) and the activity-based power model (Fig. 3c).
-#[derive(Debug, Default, Clone)]
+/// (Table II) and the activity-based power model (Fig. 3c). Equality
+/// is field-wise: the energy-composition tests compare aggregated
+/// counter sets directly.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct CoreStats {
     pub cycles: u64,
     pub bundles: u64,

@@ -19,12 +19,16 @@
 //! * [`codegen`] — the "compiler": generates VLIW kernels for conv /
 //!   pooling / FC layers using the Fig. 2 dataflow (depth slicing,
 //!   row-wise processing, DMA double buffering).
-//! * [`model`] — AlexNet / VGG-16 workload tables.
+//! * [`model`] — AlexNet / VGG-16 workload tables: the paper's conv
+//!   stacks and the full end-to-end nets (pools interleaved, fc6/fc7/
+//!   fc8 tails with the implicit conv→FC flatten).
 //! * [`coordinator`] — the execution [`Engine`](coordinator::Engine):
 //!   single- and multi-core layer scheduling (oc-tile / row-band shard
-//!   policies, partitioned / shared external bus), batched frame
-//!   fan-out, and metrics (utilization, GOP/s, off-chip I/O) — the
-//!   numbers of Table II.
+//!   policies, FC neuron tiles, partitioned / shared external bus),
+//!   batched frame fan-out, layer-pipelined streaming, and metrics
+//!   (utilization, GOP/s, off-chip I/O) — the numbers of Table II.
+//!   Layer kinds plug in through the
+//!   [`LayerOp`](coordinator::ops::LayerOp) trait.
 //! * [`energy`] — calibrated area (Table I, Fig. 3b) and activity-based
 //!   power (Fig. 3c, Table II) models, technology scaling.
 //! * [`baselines`] — analytical Eyeriss / Envision models for the

@@ -101,6 +101,80 @@ impl PoolLayer {
     }
 }
 
+/// A fully connected layer: `y = act(W·x + b)`, matrix–vector over the
+/// vector lanes. Executed through the Fig. 2 dataflow as a 1×1
+/// convolution over a 1×1 map ([`FcLayer::as_conv`]): input features
+/// become input channels (streamed as depth slices through the filter
+/// FIFO), output neurons become output-channel tiles, so the oc-tile
+/// machinery shards FC layers as *neuron tiles*. The conv→FC boundary
+/// is an implicit flatten: NCHW-contiguous activations reinterpret as
+/// the feature vector with no data movement.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FcLayer {
+    pub name: &'static str,
+    pub in_features: usize,
+    pub out_features: usize,
+    /// Fractional shift of the requantization stage for this layer.
+    pub frac_shift: u8,
+    /// Fused ReLU (off for logits layers like fc8).
+    pub relu: bool,
+}
+
+impl FcLayer {
+    pub const fn new(name: &'static str, in_features: usize, out_features: usize) -> Self {
+        Self { name, in_features, out_features, frac_shift: 8, relu: true }
+    }
+
+    /// MAC count: one multiply per weight.
+    pub fn macs(&self) -> u64 {
+        (self.in_features * self.out_features) as u64
+    }
+
+    /// 2·MACs, the paper's OP counting convention.
+    pub fn ops(&self) -> u64 {
+        2 * self.macs()
+    }
+
+    /// Weight parameter count — FC cost is dominated by streaming these
+    /// (each weight is used exactly once per frame).
+    pub fn weights(&self) -> u64 {
+        self.macs()
+    }
+
+    /// The layer lowered onto the conv dataflow: a 1×1 convolution over
+    /// a 1×1 input map with `ic = in_features`, `oc = out_features`.
+    /// Weight layout `(out, in)` equals the conv's `(oc, ic, 1, 1)`, so
+    /// the lowering is bit-exact by construction.
+    pub fn as_conv(&self) -> ConvLayer {
+        ConvLayer {
+            name: self.name,
+            ic: self.in_features,
+            ih: 1,
+            iw: 1,
+            oc: self.out_features,
+            fh: 1,
+            fw: 1,
+            stride: 1,
+            pad: 0,
+            groups: 1,
+            frac_shift: self.frac_shift,
+            relu: self.relu,
+        }
+    }
+}
+
+/// A network layer: the unit of the coordinator's network walks. The
+/// per-kind behavior (shapes, weight draws, execution, sharding, cost)
+/// lives behind the [`LayerOp`](crate::coordinator::ops::LayerOp)
+/// trait — `NetLayer::op()` is the single dispatch point; code outside
+/// the trait impls must not match on the layer kind.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NetLayer {
+    Conv(ConvLayer),
+    Pool(PoolLayer),
+    Fc(FcLayer),
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,5 +202,22 @@ mod tests {
         let p = PoolLayer { name: "p", ic: 96, ih: 55, iw: 55, size: 3, stride: 2 };
         assert_eq!(p.oh(), 27);
         assert_eq!(p.ow(), 27);
+    }
+
+    #[test]
+    fn fc_as_conv_is_the_exact_lowering() {
+        let fc = FcLayer::new("fc6", 9216, 4096);
+        assert_eq!(fc.macs(), 37_748_736);
+        assert_eq!(fc.weights(), fc.macs());
+        let c = fc.as_conv();
+        assert_eq!((c.ic, c.oc), (9216, 4096));
+        assert_eq!((c.ih, c.iw, c.fh, c.fw, c.stride, c.pad, c.groups), (1, 1, 1, 1, 1, 0, 1));
+        assert_eq!((c.oh(), c.ow()), (1, 1));
+        assert_eq!(c.macs(), fc.macs());
+        assert_eq!(c.weights(), fc.weights());
+        // logits layers carry relu=false through the lowering
+        let mut fc8 = FcLayer::new("fc8", 4096, 1000);
+        fc8.relu = false;
+        assert!(!fc8.as_conv().relu);
     }
 }

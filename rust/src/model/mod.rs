@@ -1,8 +1,12 @@
 //! CNN workload descriptions: AlexNet and VGG-16 (the paper's benchmarks),
-//! mirrored bit-for-bit against `python/compile/model.py`.
+//! mirrored bit-for-bit against `python/compile/model.py`, plus the FC
+//! tails that turn the conv stacks into end-to-end networks.
 
 pub mod layer;
 pub mod nets;
 
-pub use layer::{ConvLayer, PoolLayer};
-pub use nets::{alexnet_conv, alexnet_pools, vgg16_conv, vgg16_pools};
+pub use layer::{ConvLayer, FcLayer, NetLayer, PoolLayer};
+pub use nets::{
+    alexnet_conv, alexnet_fc, alexnet_full, alexnet_pools, conv_stack, vgg16_conv, vgg16_fc,
+    vgg16_full, vgg16_pools,
+};

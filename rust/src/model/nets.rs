@@ -1,9 +1,16 @@
-//! AlexNet [1] and VGG-16 [14] convolutional stacks — the benchmark
-//! workloads of Table II. Shapes mirror `python/compile/model.py` and the
-//! original papers; MAC totals are pinned by tests to the literature
-//! values (0.666 GMAC AlexNet conv, 15.35 GMAC VGG-16 conv).
+//! AlexNet [1] and VGG-16 [14] workloads — the benchmark networks of
+//! Table II. Shapes mirror `python/compile/model.py` and the original
+//! papers; MAC totals are pinned by tests to the literature values
+//! (0.666 GMAC AlexNet conv, 15.35 GMAC VGG-16 conv).
+//!
+//! The paper evaluates the conv stacks only ([`alexnet_conv`] /
+//! [`vgg16_conv`]); serving wants whole nets, so [`alexnet_full`] /
+//! [`vgg16_full`] interleave the pools and append the fc6/fc7/fc8
+//! tails (fc8 is the logits layer — no ReLU). The conv→FC boundary is
+//! an implicit flatten: the NCHW activation reinterprets as the
+//! feature vector in place.
 
-use super::layer::{ConvLayer, PoolLayer};
+use super::layer::{ConvLayer, FcLayer, NetLayer, PoolLayer};
 
 pub fn alexnet_conv() -> Vec<ConvLayer> {
     vec![
@@ -51,10 +58,75 @@ pub fn vgg16_pools() -> Vec<PoolLayer> {
     ]
 }
 
+/// A conv stack as a layer list (the paper's conv-only evaluation
+/// shape). The one place the `ConvLayer`→`NetLayer` mapping lives —
+/// reports, benches and examples all go through here.
+pub fn conv_stack(layers: Vec<ConvLayer>) -> Vec<NetLayer> {
+    layers.into_iter().map(NetLayer::Conv).collect()
+}
+
+/// AlexNet FC tail: fc6/fc7/fc8. fc6 consumes pool5's 256·6·6 map
+/// flattened to 9216 features; fc8 emits the 1000 logits without ReLU.
+pub fn alexnet_fc() -> Vec<FcLayer> {
+    let mut fc8 = FcLayer::new("fc8", 4096, 1000);
+    fc8.relu = false;
+    vec![FcLayer::new("fc6", 256 * 6 * 6, 4096), FcLayer::new("fc7", 4096, 4096), fc8]
+}
+
+/// VGG-16 FC tail: fc6 consumes pool5's 512·7·7 map (25088 features).
+pub fn vgg16_fc() -> Vec<FcLayer> {
+    let mut fc8 = FcLayer::new("fc8", 4096, 1000);
+    fc8.relu = false;
+    vec![FcLayer::new("fc6", 512 * 7 * 7, 4096), FcLayer::new("fc7", 4096, 4096), fc8]
+}
+
+/// Full AlexNet: convs and pools interleaved in execution order, FC
+/// tail appended. Activation shapes chain end to end (pinned by test).
+pub fn alexnet_full() -> Vec<NetLayer> {
+    let c = alexnet_conv();
+    let p = alexnet_pools();
+    let mut net: Vec<NetLayer> = vec![
+        NetLayer::Conv(c[0].clone()),
+        NetLayer::Pool(p[0].clone()),
+        NetLayer::Conv(c[1].clone()),
+        NetLayer::Pool(p[1].clone()),
+        NetLayer::Conv(c[2].clone()),
+        NetLayer::Conv(c[3].clone()),
+        NetLayer::Conv(c[4].clone()),
+        NetLayer::Pool(p[2].clone()),
+    ];
+    net.extend(alexnet_fc().into_iter().map(NetLayer::Fc));
+    net
+}
+
+/// Full VGG-16: the 13-conv stack with its 5 pools interleaved, FC
+/// tail appended.
+pub fn vgg16_full() -> Vec<NetLayer> {
+    let c = vgg16_conv();
+    let p = vgg16_pools();
+    // pool after conv indices 1, 3, 6, 9, 12 (the 2/2/3/3/3 blocks)
+    let block_ends = [1usize, 3, 6, 9, 12];
+    let mut net = Vec::new();
+    let mut pi = 0usize;
+    for (i, l) in c.into_iter().enumerate() {
+        net.push(NetLayer::Conv(l));
+        if pi < block_ends.len() && i == block_ends[pi] {
+            net.push(NetLayer::Pool(p[pi].clone()));
+            pi += 1;
+        }
+    }
+    net.extend(vgg16_fc().into_iter().map(NetLayer::Fc));
+    net
+}
+
 /// Conv-stack MACs for AlexNet (matches the literature; pinned by test).
 pub const ALEXNET_CONV_MACS: u64 = 665_784_864;
 /// Conv-stack MACs for VGG-16.
 pub const VGG16_CONV_MACS: u64 = 15_346_630_656;
+/// FC-tail MACs for AlexNet (9216·4096 + 4096·4096 + 4096·1000).
+pub const ALEXNET_FC_MACS: u64 = 58_621_952;
+/// FC-tail MACs for VGG-16 (25088·4096 + 4096·4096 + 4096·1000).
+pub const VGG16_FC_MACS: u64 = 123_633_664;
 
 #[cfg(test)]
 mod tests {
@@ -82,6 +154,46 @@ mod tests {
             assert_eq!(w[1].ic, w[0].oc);
             assert!(w[1].ih == w[0].oh() || w[1].ih == w[0].oh() / 2);
         }
+    }
+
+    #[test]
+    fn fc_totals() {
+        let a: u64 = alexnet_fc().iter().map(|l| l.macs()).sum();
+        assert_eq!(a, ALEXNET_FC_MACS);
+        let v: u64 = vgg16_fc().iter().map(|l| l.macs()).sum();
+        assert_eq!(v, VGG16_FC_MACS);
+        // logits layers carry no ReLU
+        assert!(!alexnet_fc().last().unwrap().relu);
+        assert!(!vgg16_fc().last().unwrap().relu);
+    }
+
+    #[test]
+    fn full_nets_chain_end_to_end() {
+        // activation element counts must chain through every boundary,
+        // including the implicit conv→FC flatten (checked through the
+        // same LayerOp surface the network walk uses)
+        for (net, layers, conv_macs, fc_macs) in [
+            ("alexnet", alexnet_full(), ALEXNET_CONV_MACS, ALEXNET_FC_MACS),
+            ("vgg16", vgg16_full(), VGG16_CONV_MACS, VGG16_FC_MACS),
+        ] {
+            for w in layers.windows(2) {
+                assert_eq!(
+                    w[1].op().in_elems(),
+                    w[0].op().out_elems(),
+                    "{net}: {} -> {} boundary",
+                    w[0].name(),
+                    w[1].name()
+                );
+            }
+            let total: u64 = layers.iter().map(|l| l.op().macs()).sum();
+            assert_eq!(total, conv_macs + fc_macs, "{net} total MACs");
+            assert_eq!(layers.last().unwrap().op().out_elems(), 1000, "{net} logits");
+        }
+        // the flatten boundaries consume exactly the pool5 maps
+        assert_eq!(alexnet_fc()[0].in_features, 256 * 6 * 6);
+        assert_eq!(vgg16_fc()[0].in_features, 512 * 7 * 7);
+        assert_eq!(alexnet_full().len(), 11);
+        assert_eq!(vgg16_full().len(), 21);
     }
 
     #[test]

@@ -1,0 +1,98 @@
+//! Pool-level energy validation against the paper (Table II):
+//!
+//! * the single-core VGG-16 operating point (tile-analytic, 8-bit
+//!   gated — the paper's setup) must land within tolerance of the
+//!   published 497 GOP/s/W, and
+//! * multi-core GOP/s/W must *compose* from `CoreStats` aggregation:
+//!   a partitioned-bus fan-out of identical frames doubles the energy
+//!   and the delivered GOP/s in lockstep, leaving efficiency invariant.
+
+use convaix::coordinator::{BusModel, EngineConfig, ExecMode, NetLayer};
+use convaix::energy::power;
+use convaix::model::{conv_stack, vgg16_conv, ConvLayer, FcLayer, PoolLayer};
+
+fn gops_per_w(macs: u64, cycles: u64, stats: &convaix::core::CoreStats) -> f64 {
+    let secs = cycles as f64 / convaix::CLOCK_HZ as f64;
+    let p = power::network_power(stats, secs);
+    power::energy_eff_gops_per_w(macs, secs, p.total_mw())
+}
+
+/// The paper's VGG-16 energy-efficiency operating point: 497 GOP/s/W
+/// at 28 nm / 1 V, conv stack, optimized (8-bit gated) word width.
+#[test]
+fn single_core_vgg_operating_point_matches_paper() {
+    let layers: Vec<NetLayer> = conv_stack(vgg16_conv());
+    let input = vec![0i16; 3 * 224 * 224];
+    let mut engine = EngineConfig::new()
+        .mode(ExecMode::TileAnalytic)
+        .gate_bits(8)
+        .ext_capacity(1 << 24)
+        .build();
+    let r = engine.run_network("VGG-16", &layers, &input).unwrap();
+    let eff = gops_per_w(r.macs(), r.cycles(), &r.stats());
+    let rel = (eff - 497.0).abs() / 497.0;
+    assert!(
+        rel < 0.15,
+        "single-core VGG-16 energy efficiency {eff:.0} GOP/s/W drifted {:.1}% from the \
+         paper's 497 GOP/s/W anchor",
+        rel * 100.0
+    );
+    // and the power level itself stays near the published 223.9 mW
+    let secs = r.cycles() as f64 / convaix::CLOCK_HZ as f64;
+    let p = power::network_power(&r.stats(), secs);
+    let prel = (p.total_mw() - 223.9).abs() / 223.9;
+    assert!(prel < 0.15, "VGG-16 power {:.1} mW drifted {:.1}%", p.total_mw(), prel * 100.0);
+}
+
+/// Multi-core efficiency composes from per-frame `CoreStats`: the
+/// batched result's aggregate stats equal the sum of the standalone
+/// frame runs, and with identical frames on a partitioned bus the
+/// pool's GOP/s/W equals the single-core figure (energy and delivered
+/// work scale together).
+#[test]
+fn multicore_efficiency_composes_from_corestats() {
+    let mut fc2 = FcLayer::new("fc2", 48, 10);
+    fc2.relu = false;
+    let layers = vec![
+        NetLayer::Conv(ConvLayer::new("c1", 4, 12, 12, 16, 3, 3, 1, 1, 1)),
+        NetLayer::Pool(PoolLayer { name: "p1", ic: 16, ih: 12, iw: 12, size: 2, stride: 2 }),
+        NetLayer::Fc(FcLayer::new("fc1", 16 * 6 * 6, 48)),
+        NetLayer::Fc(fc2),
+    ];
+    let input = vec![7i16; 4 * 12 * 12];
+
+    // single-frame reference on one core
+    let mut solo = EngineConfig::new().seed(21).ext_capacity(1 << 22).build();
+    let f = solo.run_network("mini", &layers, &input).unwrap();
+
+    // two identical frames fanned out over two cores, partitioned bus
+    let inputs = vec![input.clone(), input.clone()];
+    let mut pool = EngineConfig::new()
+        .cores(2)
+        .batch(2)
+        .bus(BusModel::Partitioned)
+        .seed(21)
+        .ext_capacity(1 << 22)
+        .build();
+    let br = pool.run_batched("mini", &layers, &inputs).unwrap();
+
+    // CoreStats aggregation: the batch's stats are exactly the sum of
+    // the standalone frame stats (field-wise)
+    let mut expect = convaix::core::CoreStats::default();
+    for frame in &br.frames {
+        assert_eq!(frame.stats(), f.stats(), "identical frames must produce identical stats");
+        expect = convaix::coordinator::metrics::add_stats(&expect, &frame.stats());
+    }
+    assert_eq!(br.stats(), expect, "batched stats must compose by addition");
+
+    // identical frames on a partitioned bus: makespan == one frame's
+    // cycles, so GOP/s doubles and power doubles — efficiency invariant
+    assert_eq!(br.makespan_cycles(), f.cycles());
+    let solo_eff = gops_per_w(f.macs(), f.cycles(), &f.stats());
+    let batch_macs: u64 = br.frames.iter().map(|fr| fr.macs()).sum();
+    let pool_eff = gops_per_w(batch_macs, br.makespan_cycles(), &br.stats());
+    assert!(
+        (pool_eff - solo_eff).abs() / solo_eff < 1e-9,
+        "pool GOP/s/W {pool_eff:.1} must equal single-core {solo_eff:.1}"
+    );
+}

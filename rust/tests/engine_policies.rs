@@ -1,12 +1,13 @@
 //! Engine shard-policy properties: `OcTile`, `RowBand` and `Auto`
 //! sharding are pure reshufflings of the single-core schedule — outputs
-//! and MAC counts stay bit-identical across conv, pool and grouped-conv
-//! layers — and the shared-bus model only ever *adds* wait cycles.
-//! Layer-pipelined streaming obeys the same contract: every frame of a
-//! pipelined stream reproduces the single-core network walk bit-exactly.
+//! and MAC counts stay bit-identical across conv, pool, grouped-conv
+//! and FC layers — and the shared-bus model only ever *adds* wait
+//! cycles. Layer-pipelined streaming obeys the same contract: every
+//! frame of a pipelined stream reproduces the single-core network walk
+//! bit-exactly, including through the implicit conv→FC flatten.
 
 use convaix::coordinator::{BusModel, EngineConfig, NetLayer, PoolMode, ShardPolicy};
-use convaix::model::{ConvLayer, PoolLayer};
+use convaix::model::{ConvLayer, FcLayer, PoolLayer};
 use convaix::util::proptest::prop;
 use convaix::util::XorShift;
 
@@ -18,6 +19,21 @@ fn mini_net() -> Vec<NetLayer> {
         NetLayer::Pool(PoolLayer { name: "p1", ic: 32, ih: 16, iw: 16, size: 2, stride: 2 }),
         NetLayer::Conv(ConvLayer::new("c2", 32, 8, 8, 48, 3, 3, 1, 1, 1)),
         NetLayer::Conv(ConvLayer::new("c3g", 48, 8, 8, 32, 3, 3, 1, 1, 2)),
+    ]
+}
+
+/// A grouped-conv → pool → FC net: exercises the implicit flatten at
+/// the conv→FC boundary (the pool's NCHW map reinterprets as fc1's
+/// feature vector in place) and an FC→FC chain with a no-ReLU logits
+/// tail.
+fn fc_net() -> Vec<NetLayer> {
+    let mut fc2 = FcLayer::new("fc2", 64, 10);
+    fc2.relu = false;
+    vec![
+        NetLayer::Conv(ConvLayer::new("cg", 4, 12, 12, 32, 3, 3, 1, 1, 2)),
+        NetLayer::Pool(PoolLayer { name: "p", ic: 32, ih: 12, iw: 12, size: 2, stride: 2 }),
+        NetLayer::Fc(FcLayer::new("fc1", 32 * 6 * 6, 64)),
+        NetLayer::Fc(fc2),
     ]
 }
 
@@ -124,6 +140,98 @@ fn random_pool_layers_policy_equivalence() {
             );
         }
     });
+}
+
+/// FC bit-identity across the execution modes (the acceptance property
+/// of the end-to-end-network refactor): on a grouped-conv→FC net with
+/// the flatten boundary, solo, neuron-tiled sharding and pipelined
+/// stages at 2/3/4 cores under both bus models all produce the same
+/// bytes, layer by layer.
+#[test]
+fn fc_net_bit_identical_solo_sharded_pipelined() {
+    let layers = fc_net();
+    let mut rng = XorShift::new(2024);
+    let inputs: Vec<Vec<i16>> =
+        (0..3).map(|_| rng.i16_vec(4 * 12 * 12, -2000, 2000)).collect();
+
+    // single-core reference, one walk per frame
+    let mut solo = EngineConfig::new().seed(13).ext_capacity(1 << 23).build();
+    let base: Vec<_> = inputs
+        .iter()
+        .map(|x| solo.run_network("fcnet", &layers, x).unwrap())
+        .collect();
+    // sanity: the FC layers actually computed (non-degenerate net)
+    assert_eq!(base[0].layers.last().unwrap().out.len(), 10);
+    assert_eq!(
+        base[0].layers.iter().map(|l| l.macs).sum::<u64>(),
+        layers.iter().map(|l| l.op().macs()).sum::<u64>(),
+    );
+
+    for cores in [2usize, 3, 4] {
+        for bus in [BusModel::Partitioned, BusModel::Shared] {
+            // intra-layer sharding (FC layers shard as neuron tiles)
+            for policy in POLICIES {
+                let mut engine = EngineConfig::new()
+                    .cores(cores)
+                    .shard(policy)
+                    .bus(bus)
+                    .seed(13)
+                    .ext_capacity(1 << 23)
+                    .build();
+                let mc = engine.run_network("fcnet", &layers, &inputs[0]).unwrap();
+                for (lb, lm) in base[0].layers.iter().zip(&mc.layers) {
+                    assert_eq!(
+                        lm.out, lb.out,
+                        "{policy:?} {cores}-core {bus:?} layer {} output",
+                        lb.name
+                    );
+                    assert_eq!(lm.macs, lb.macs, "{policy:?} layer {} macs", lb.name);
+                }
+            }
+
+            // pipelined stages
+            let mut pipe = EngineConfig::new()
+                .cores(cores)
+                .pool_mode(PoolMode::Pipelined)
+                .bus(bus)
+                .seed(13)
+                .ext_capacity(1 << 23)
+                .build();
+            let pr = pipe.run_streaming("fcnet", &layers, &inputs).unwrap();
+            assert_eq!(pr.stages.len(), cores.min(layers.len()));
+            for (f, b) in pr.frames.iter().zip(&base) {
+                for (lp, lb) in f.layers.iter().zip(&b.layers) {
+                    assert_eq!(
+                        lp.out, lb.out,
+                        "pipeline {cores}-core {bus:?} layer {} output",
+                        lb.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Sharded FC layers report DMA-dominated timing: the weight stream
+/// crosses the bus once per frame, so fc1's dma cycles dwarf its
+/// compute cycles in the modeled accounting.
+#[test]
+fn fc_layers_are_dma_bound_in_the_accounting() {
+    let layers = fc_net();
+    let mut rng = XorShift::new(55);
+    let input = rng.i16_vec(4 * 12 * 12, -2000, 2000);
+    let mut engine = EngineConfig::new().seed(13).ext_capacity(1 << 23).build();
+    let r = engine.run_network("fcnet", &layers, &input).unwrap();
+    let fc1 = &r.layers[2];
+    assert_eq!(fc1.name, "fc1");
+    assert!(
+        fc1.dma_cycles > fc1.compute_cycles,
+        "fc1 must be DMA-bound: dma {} vs compute {}",
+        fc1.dma_cycles,
+        fc1.compute_cycles
+    );
+    // the weight bytes alone exceed the activation traffic
+    assert!(fc1.io_in as usize > 2 * 32 * 6 * 6);
 }
 
 /// Pipelined streaming is a pure re-timing of the single-core walk:

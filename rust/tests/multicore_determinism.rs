@@ -1,11 +1,11 @@
-//! Integration: the multi-core scheduler is a pure reshuffling of the
+//! Integration: the multi-core engine is a pure reshuffling of the
 //! single-core schedule — for N ∈ {1, 2, 4} cores, FullCycle output
 //! tensors and total MAC counts are bit-identical to the single-core
-//! path, layer by layer, through a conv/pool network.
+//! path, layer by layer, through a conv/pool network. (Ported from the
+//! 0.2 free-function surface to the Engine API when the deprecated
+//! shims were removed in 0.4.0; the contract is unchanged.)
 
-use convaix::coordinator::executor::{run_network, ExecOptions, NetLayer};
-use convaix::coordinator::scheduler::{run_conv_layer_mc, run_network_mc, CorePool};
-use convaix::core::Cpu;
+use convaix::coordinator::{EngineConfig, NetLayer};
 use convaix::model::{ConvLayer, PoolLayer};
 use convaix::util::XorShift;
 
@@ -24,14 +24,12 @@ fn network_outputs_bit_identical_across_core_counts() {
     let mut rng = XorShift::new(1234);
     let input = rng.i16_vec(3 * 16 * 16, -2000, 2000);
 
-    let mut solo = Cpu::new(1 << 23);
-    let base =
-        run_network(&mut solo, "mini", &layers, &input, ExecOptions::default(), 99).unwrap();
+    let mut solo = EngineConfig::new().seed(99).ext_capacity(1 << 23).build();
+    let base = solo.run_network("mini", &layers, &input).unwrap();
 
     for cores in [1usize, 2, 4] {
-        let mut pool = CorePool::new(cores, 1 << 23);
-        let opts = ExecOptions { cores, ..Default::default() };
-        let mc = run_network_mc(&mut pool, "mini", &layers, &input, opts, 99).unwrap();
+        let mut engine = EngineConfig::new().cores(cores).seed(99).ext_capacity(1 << 23).build();
+        let mc = engine.run_network("mini", &layers, &input).unwrap();
         assert_eq!(mc.layers.len(), base.layers.len());
         for (lb, lm) in base.layers.iter().zip(&mc.layers) {
             assert_eq!(lm.out, lb.out, "{cores}-core layer {} output", lb.name);
@@ -49,21 +47,12 @@ fn single_layer_bit_identical_and_io_conserved() {
     let w = rng.i16_vec(l.oc * l.ic * 9, -256, 256);
     let b = rng.i32_vec(l.oc, -1000, 1000);
 
-    let mut solo = Cpu::new(1 << 22);
-    let base = convaix::coordinator::executor::run_conv_layer(
-        &mut solo,
-        &l,
-        &x,
-        &w,
-        &b,
-        ExecOptions::default(),
-    )
-    .unwrap();
+    let mut solo = EngineConfig::new().ext_capacity(1 << 22).build();
+    let base = solo.run_conv_layer(&l, &x, &w, &b).unwrap();
 
     for cores in [2usize, 4] {
-        let mut pool = CorePool::new(cores, 1 << 22);
-        let opts = ExecOptions { cores, ..Default::default() };
-        let r = run_conv_layer_mc(&mut pool, &l, &x, &w, &b, opts).unwrap();
+        let mut engine = EngineConfig::new().cores(cores).ext_capacity(1 << 22).build();
+        let r = engine.run_conv_layer(&l, &x, &w, &b).unwrap();
         assert_eq!(r.out, base.out, "{cores}-core output");
         assert_eq!(r.macs, base.macs);
         // the makespan is the slowest core, and every core did real work
@@ -85,10 +74,9 @@ fn scheduler_is_deterministic_across_repeats() {
     let w = rng.i16_vec(l.oc * l.ic * 9, -100, 100);
     let b = rng.i32_vec(l.oc, -100, 100);
 
-    let mut pool = CorePool::new(4, 1 << 22);
-    let opts = ExecOptions { cores: 4, ..Default::default() };
-    let r1 = run_conv_layer_mc(&mut pool, &l, &x, &w, &b, opts).unwrap();
-    let r2 = run_conv_layer_mc(&mut pool, &l, &x, &w, &b, opts).unwrap();
+    let mut engine = EngineConfig::new().cores(4).ext_capacity(1 << 22).build();
+    let r1 = engine.run_conv_layer(&l, &x, &w, &b).unwrap();
+    let r2 = engine.run_conv_layer(&l, &x, &w, &b).unwrap();
     assert_eq!(r1.out, r2.out);
     assert_eq!(r1.cycles, r2.cycles);
     assert_eq!(r1.core_cycles, r2.core_cycles);

@@ -1,10 +1,10 @@
 //! Integration: multi-layer networks with activations threaded through
-//! conv and pool layers, against a host-reference chain.
+//! conv, pool and FC layers, against a host-reference chain.
 
-use convaix::codegen::refconv;
+use convaix::codegen::{refconv, reffc};
 use convaix::coordinator::EngineConfig;
 use convaix::fixed::RoundMode;
-use convaix::model::{ConvLayer, PoolLayer};
+use convaix::model::{ConvLayer, FcLayer, PoolLayer};
 use convaix::util::XorShift;
 
 /// conv -> pool -> conv mini-net, bit-exact end to end.
@@ -82,6 +82,50 @@ fn grouped_to_dense_chain() {
     let h3 = refconv::conv2d(&h2, &w3, &b3, &c3, RoundMode::HalfUp, 16);
     assert_eq!(o2.out, h2);
     assert_eq!(o3.out, h3);
+}
+
+/// End-to-end classifier tail: conv -> pool -> flatten -> fc -> fc
+/// (the AlexNet/VGG tail structure, scaled down), bit-exact against
+/// the host-reference chain through the implicit flatten boundary.
+#[test]
+fn conv_pool_fc_chain_matches_reference() {
+    let c1 = ConvLayer::new("c1", 3, 12, 12, 16, 3, 3, 1, 1, 1);
+    let p1 = PoolLayer { name: "p1", ic: 16, ih: 12, iw: 12, size: 2, stride: 2 };
+    let f1 = FcLayer::new("fc1", 16 * 6 * 6, 48);
+    let mut f2 = FcLayer::new("fc2", 48, 10);
+    f2.relu = false; // logits
+
+    let mut rng = XorShift::new(123);
+    let x0 = rng.i16_vec(3 * 144, -2000, 2000);
+    let w1 = rng.i16_vec(16 * 3 * 9, -200, 200);
+    let b1 = rng.i32_vec(16, -500, 500);
+    let wf1 = rng.i16_vec(f1.in_features * f1.out_features, -200, 200);
+    let bf1 = rng.i32_vec(f1.out_features, -500, 500);
+    let wf2 = rng.i16_vec(f2.in_features * f2.out_features, -200, 200);
+    let bf2 = rng.i32_vec(f2.out_features, -500, 500);
+
+    // simulator chain through the engine
+    let mut engine = EngineConfig::new().build();
+    let o1 = engine.run_conv_layer(&c1, &x0, &w1, &b1).unwrap();
+    let o2 = engine.run_pool_layer(&p1, &o1.out).unwrap();
+    // implicit flatten: the pool's NCHW map IS fc1's feature vector
+    let o3 = engine.run_fc_layer(&f1, &o2.out, &wf1, &bf1).unwrap();
+    let o4 = engine.run_fc_layer(&f2, &o3.out, &wf2, &bf2).unwrap();
+
+    // host chain
+    let h1 = refconv::conv2d(&x0, &w1, &b1, &c1, RoundMode::HalfUp, 16);
+    let h2 = refconv::maxpool2d(&h1, 16, 12, 12, 2, 2);
+    let h3 = reffc::fc_forward(&h2, &wf1, &bf1, &f1, RoundMode::HalfUp, 16);
+    let h4 = reffc::fc_forward(&h3, &wf2, &bf2, &f2, RoundMode::HalfUp, 16);
+
+    assert_eq!(o1.out, h1);
+    assert_eq!(o2.out, h2);
+    assert_eq!(o3.out, h3);
+    assert_eq!(o4.out, h4);
+    assert_eq!(o4.out.len(), 10);
+    // the relu'd fc1 clamps at zero; macs cover the whole matvec
+    assert!(h3.iter().all(|&v| v >= 0));
+    assert_eq!(o3.macs, f1.macs());
 }
 
 /// The DM-staged data path is stateless across layers: running the same

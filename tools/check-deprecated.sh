@@ -1,50 +1,50 @@
 #!/usr/bin/env bash
-# Deny-list guard for the deprecated 0.2 free-function coordinator API.
+# Deny-list guard for the retired 0.2 free-function coordinator API.
 #
-# New code must execute through `coordinator::Engine`. Only the modules
-# that *define* the deprecated shims, the coordinator facade that
-# re-exports them, and the grandfathered 0.2 contract-lock test
-# (`multicore_determinism.rs`, kept byte-identical on purpose) may name
-# the free functions. Method calls (`engine.run_network(...)`) are fine —
-# the pattern only matches call sites not preceded by `.`.
+# The free functions (`run_conv_layer`, `run_pool_layer`, `run_network`,
+# `run_batched`, their `_mc` variants) and the `coordinator::scheduler`
+# shim module were deprecated in 0.3.0 and REMOVED in 0.4.0. All
+# execution goes through `coordinator::Engine` (and, for new layer
+# kinds, the `coordinator::ops::LayerOp` trait). This guard keeps the
+# retired surface from quietly coming back:
+#
+#  * no file may reintroduce the scheduler shim module,
+#  * no code may grow new `#[deprecated]` wrappers in rust/src,
+#  * no code may call the free functions by their old names — method
+#    calls (`engine.run_network(...)`) are fine; the pattern only
+#    matches call sites not preceded by `.`, and `fn ` definitions
+#    (the Engine methods themselves) are excluded.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-ALLOW_FILES=(
-  rust/src/coordinator/executor.rs
-  rust/src/coordinator/scheduler.rs
-  rust/src/coordinator/mod.rs
-  rust/tests/multicore_determinism.rs
-)
-# The grandfathered allowlist must track reality: a stale entry for a
-# deleted/renamed shim file would let this guard pass silently while
-# checking nothing. Fail loudly instead, so the list shrinks in the
-# same change that retires the 0.2 surface.
-for f in "${ALLOW_FILES[@]}"; do
-  if [ ! -f "$f" ]; then
-    echo "ERROR: grandfathered shim file missing: $f"
-    echo "The deprecated 0.2 surface moved or was removed — update ALLOW_FILES"
-    echo "in tools/check-deprecated.sh in the same change."
-    exit 1
-  fi
-done
+if [ -e rust/src/coordinator/scheduler.rs ]; then
+  echo "ERROR: rust/src/coordinator/scheduler.rs reappeared."
+  echo "The 0.2 scheduler shim was removed in 0.4.0 — new multi-core code"
+  echo "belongs in coordinator/engine.rs behind the Engine API."
+  exit 1
+fi
 
-# Derive the exclusion regex from the same list, so there is exactly one
-# place to edit when the 0.2 surface shrinks.
-ALLOW=$(printf '%s|' "${ALLOW_FILES[@]//./\\.}")
-ALLOW=${ALLOW%|}
+# attribute lines only (doc comments may mention the attribute's name)
+DEP_ATTR='^\s*#\[deprecated'
+if grep -rnE --include='*.rs' "$DEP_ATTR" rust/src >/dev/null; then
+  echo "ERROR: #[deprecated] markers found in rust/src."
+  echo "The shim era is over: remove old surfaces outright instead of"
+  echo "reintroducing deprecated wrappers (see ROADMAP.md)."
+  grep -rnE --include='*.rs' "$DEP_ATTR" rust/src
+  exit 1
+fi
+
 # `(?<![.\w])` skips method calls (`engine.run_network(`); `(?<!fn )`
 # skips the Engine method definitions themselves.
-PATTERN='(?<!fn )(?<![.\w])(run_conv_layer|run_pool_layer|run_network|run_batched)(_mc)?\s*\('
+PATTERN='(?<!fn )(?<![.\w])(run_conv_layer|run_pool_layer|run_fc_layer|run_network|run_batched|run_streaming)(_mc)?\s*\('
 
-hits=$(grep -rnP --include='*.rs' "$PATTERN" rust/src rust/tests rust/benches examples \
-  | grep -vE "^($ALLOW):" || true)
+hits=$(grep -rnP --include='*.rs' "$PATTERN" rust/src rust/tests rust/benches examples || true)
 
 if [ -n "$hits" ]; then
-  echo "ERROR: deprecated free-function coordinator API used outside the shim modules."
+  echo "ERROR: free-function coordinator API call sites found."
   echo "Use coordinator::EngineConfig::new()...build() and the Engine methods instead:"
   echo
   echo "$hits"
   exit 1
 fi
-echo "OK: no new callers of the deprecated free-function API."
+echo "OK: the retired 0.2 free-function API has not come back."
