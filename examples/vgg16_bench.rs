@@ -24,7 +24,7 @@ fn main() -> anyhow::Result<()> {
     );
     for l in &net.layers {
         t.row(&[
-            l.name.clone(),
+            l.name.to_string(),
             format!("{:.1}", l.macs as f64 / 1e6),
             l.cycles.to_string(),
             format!("{:.3}", l.utilization()),

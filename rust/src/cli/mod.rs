@@ -43,6 +43,10 @@ OPTIONS:
                      oc-tile (default) | row-band | auto
   --bus <model>      external bandwidth model for --cores > 1:
                      partitioned (default) | shared
+  --no-cache         disable the compile-once layer cache (plans, task
+                     programs and analytic profiles are then re-derived
+                     on every call — the pre-0.5 behavior; results are
+                     bit-identical, only the host wall-clock changes)
 ";
 
 /// Tiny argv parser (clap is not in the offline vendor set).
@@ -57,6 +61,7 @@ pub struct Args {
     pub pipeline: bool,
     pub shard: ShardPolicy,
     pub bus: BusModel,
+    pub no_cache: bool,
 }
 
 impl Args {
@@ -72,6 +77,7 @@ impl Args {
             pipeline: false,
             shard: ShardPolicy::OcTile,
             bus: BusModel::Partitioned,
+            no_cache: false,
         };
         let mut it = argv.iter().skip(1).peekable();
         while let Some(arg) = it.next() {
@@ -108,6 +114,7 @@ impl Args {
                     }
                 }
                 "--pipeline" => a.pipeline = true,
+                "--no-cache" => a.no_cache = true,
                 "--pool-mode" => {
                     let m: PoolMode = it
                         .next()
@@ -159,6 +166,7 @@ impl Args {
             .pool_mode(if self.pipeline { PoolMode::Pipelined } else { PoolMode::FanOut })
             .shard(self.shard)
             .bus(self.bus)
+            .plan_cache(!self.no_cache)
     }
 }
 

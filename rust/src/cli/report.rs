@@ -55,7 +55,7 @@ pub fn run_net_mc(net: &str, cfg: &EngineConfig) -> Result<String> {
     for ((d, l1), lm) in layers.iter().zip(&serial.layers).zip(&sharded.layers) {
         let speedup = l1.cycles as f64 / lm.cycles.max(1) as f64;
         t.row(&[
-            lm.name.clone(),
+            lm.name.to_string(),
             d.kind().into(),
             l1.cycles.to_string(),
             lm.cycles.to_string(),
@@ -86,10 +86,27 @@ pub fn throughput(net: &str, cfg: &EngineConfig) -> Result<String> {
     let mut rng = XorShift::new(0xBA7C4);
     let inputs: Vec<Vec<i16>> =
         (0..cfg.batch).map(|_| rng.i16_vec(in_elems, -2000, 2000)).collect();
-    let br = engine_for(cfg)
+    let mut engine = engine_for(cfg);
+    let br = engine
         .run_batched(net, &layers, &inputs)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
-    Ok(throughput_report(&br, cfg))
+    let mut s = throughput_report(&br, cfg);
+    s.push_str(&cache_line(&engine));
+    Ok(s)
+}
+
+/// One-line plan-cache summary for the serving reports: how much of
+/// the run's layer setup was compile-once reuse.
+fn cache_line(engine: &Engine) -> String {
+    let cs = engine.cache_stats();
+    format!(
+        "plan cache: {} hits / {} misses ({} conv + {} pool entries{})\n",
+        cs.hits,
+        cs.misses,
+        cs.conv_entries,
+        cs.pool_entries,
+        if engine.plan_cache().is_enabled() { "" } else { "; cache disabled" },
+    )
 }
 
 /// Render a [`BatchedResult`] as the throughput table + summary lines.
@@ -142,10 +159,13 @@ pub fn streaming(net: &str, cfg: &EngineConfig) -> Result<String> {
     let mut rng = XorShift::new(0xBA7C4);
     let inputs: Vec<Vec<i16>> =
         (0..cfg.batch).map(|_| rng.i16_vec(in_elems, -2000, 2000)).collect();
-    let pr = engine_for(cfg)
+    let mut engine = engine_for(cfg);
+    let pr = engine
         .run_streaming(net, &layers, &inputs)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
-    Ok(streaming_report(&pr, &layers, cfg))
+    let mut s = streaming_report(&pr, &layers, cfg);
+    s.push_str(&cache_line(&engine));
+    Ok(s)
 }
 
 /// Render a [`PipelineResult`] as the per-stage table + summary lines.
@@ -418,7 +438,7 @@ pub fn util_table(cfg: &EngineConfig) -> Result<String> {
             utils.push(l.utilization());
             t.row(&[
                 net.into(),
-                l.name.clone(),
+                l.name.to_string(),
                 format!("{:.3}", l.utilization()),
                 format!("{:.2}", l.time_ms()),
                 format!("{:.1}", l.gops()),
@@ -456,7 +476,7 @@ pub fn run_net(net: &str, cfg: &EngineConfig) -> Result<String> {
     );
     for (d, l) in layers.iter().zip(&r.layers) {
         t.row(&[
-            l.name.clone(),
+            l.name.to_string(),
             d.kind().into(),
             format!("{:.3}", l.time_ms()),
             format!("{:.3}", l.utilization()),

@@ -1,0 +1,366 @@
+//! Compile-once layer cache: memoized plans + task programs + analytic
+//! profiles, plus the per-core staging arenas.
+//!
+//! Everything `run_dense`/`pool_layer` derive from a layer *shape* —
+//! the [`ConvPlan`], the assembled task [`ProgramMem`]s, and (in
+//! tile-analytic mode) the sampled row timings — depends only on
+//! (shape, gate bits), never on frame data. Re-deriving it per call is
+//! exactly the per-layer control-setup redundancy the paper's ASIP
+//! avoids by specializing control per layer, and that Shen et al.
+//! (ISCA'17) amortize by compiling per-layer configurations once. The
+//! [`PlanCache`] makes the simulator do the same: the first execution
+//! of a shape compiles a [`CompiledConv`]/[`CompiledPool`]; every later
+//! frame, shard and pipeline stage reuses it, so the steady-state loop
+//! of `run_batched`/`run_streaming` performs zero codegen.
+//!
+//! Cache keys are **shape + gate bits, never names**: two layers with
+//! identical geometry share one entry (VGG's conv3_2/conv3_3, every
+//! group of a grouped conv, every frame of a batch), while the same
+//! shape at a different gating must miss — the analytic profile's
+//! `mac_ops_gated8` counter depends on the CSR gate setting.
+//!
+//! Why replaying a cached analytic profile is bit-exact: a task
+//! program's cycle count and activity counters are functions of the
+//! program structure, the DM/LB *addresses* it touches and the CSR
+//! state — never of the tensor *values* (gating changes values and the
+//! `mac_ops_gated8` counter, but that counter switches on the CSR gate
+//! bits, which are part of the cache key). The sampled rows are the
+//! same rows, at the same staged addresses, in the same deterministic
+//! schedule order on every run of the shape, so storing the raw per-row
+//! samples of one cold pass and replaying them reproduces the cold
+//! pass's `LayerResult` to the last counter. The bit-identity is locked
+//! by `tests/plan_cache.rs`.
+//!
+//! The [`Scratch`] arena is the allocation half of the same argument:
+//! padded-input, staged-band, filter-stream and row-readback buffers
+//! are per-core and shape-bounded, so each core reuses one set across
+//! layers and frames instead of reallocating per call.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::core::CoreStats;
+use crate::mem::pm::ProgramMem;
+use crate::model::{ConvLayer, PoolLayer};
+
+use super::conv::{build_conv_task, TaskFlavor};
+use super::layout::{self, ConvPlan};
+use super::pool::{build_pool_task, plan_pool, PoolPlan};
+use super::CodegenError;
+
+/// Program selector within one conv plan: (slice input channels,
+/// first-slice?, last-slice?) — the same key `run_dense` dispatched on
+/// since the seed.
+pub(crate) type TaskKey = (usize, bool, bool);
+
+/// Which slice of the Fig. 2 depth slicing task `mi` of `m` executes.
+pub(crate) fn flavor_of(mi: usize, m: usize) -> TaskFlavor {
+    TaskFlavor { first_slice: mi == 0, last_slice: mi + 1 == m }
+}
+
+/// Conv cache key: the dense (per-group) layer's geometry and datapath
+/// knobs plus the run's gate bits. Deliberately excludes the name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct ConvKey {
+    ic: usize,
+    ih: usize,
+    iw: usize,
+    oc: usize,
+    fh: usize,
+    fw: usize,
+    stride: usize,
+    pad: usize,
+    frac_shift: u8,
+    relu: bool,
+    gate_bits: u8,
+}
+
+impl ConvKey {
+    fn of(l: &ConvLayer, gate_bits: u8) -> Self {
+        debug_assert_eq!(l.groups, 1, "conv cache keys are per-group dense views");
+        Self {
+            ic: l.ic,
+            ih: l.ih,
+            iw: l.iw,
+            oc: l.oc,
+            fh: l.fh,
+            fw: l.fw,
+            stride: l.stride,
+            pad: l.pad,
+            frac_shift: l.frac_shift,
+            relu: l.relu,
+            gate_bits,
+        }
+    }
+}
+
+/// Pool cache key: everything the one-row pool plan and its task
+/// program depend on. `ic`/`ih` are executor-side loop bounds, not
+/// plan inputs, so they stay out of the key (the cached plan's
+/// `n_tiles` is NOT meaningful across layers — the executor recomputes
+/// it from the layer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct PoolKey {
+    iw: usize,
+    size: usize,
+    stride: usize,
+}
+
+/// One raw sampled row of a cold tile-analytic pass: the per-run
+/// `(cycles, stats)` the cycle simulator returned.
+pub(crate) struct SampleSet {
+    /// Raw per-row samples, in the schedule order the cold pass ran
+    /// them (at most `ANALYTIC_SAMPLES`; fewer when the layer has fewer
+    /// rows of this task).
+    pub rows: Vec<(u64, CoreStats)>,
+    /// Sum of the sampled cycles (the cold pass's accumulator value).
+    pub total_cycles: u64,
+    /// Field-wise sum of the sampled stats.
+    pub total_stats: CoreStats,
+}
+
+impl SampleSet {
+    pub fn n(&self) -> u64 {
+        self.rows.len() as u64
+    }
+}
+
+/// The sampled-row record of one cold tile-analytic pass over a shape —
+/// enough to replay every later pass without touching the core.
+pub(crate) struct AnalyticProfile {
+    pub samples: HashMap<TaskKey, SampleSet>,
+}
+
+/// A conv layer shape, compiled once: the layout plan plus the
+/// assembled task program per distinct [`TaskKey`], plus the lazily
+/// published tile-analytic profile.
+pub struct CompiledConv {
+    pub(crate) plan: ConvPlan,
+    programs: HashMap<TaskKey, ProgramMem>,
+    /// Published by the first successful tile-analytic pass; replayed
+    /// bit-exactly by every later one (see the module docs for why
+    /// that is sound). Racing first passes compute identical profiles,
+    /// so whichever `set` wins is canonical.
+    pub(crate) analytic: OnceLock<AnalyticProfile>,
+}
+
+impl CompiledConv {
+    pub(crate) fn compile(layer: &ConvLayer) -> Result<Self, CodegenError> {
+        let plan = layout::plan(layer)?;
+        let mut programs = HashMap::new();
+        for mi in 0..plan.m {
+            let f = flavor_of(mi, plan.m);
+            let key = (plan.slice_ics(mi), f.first_slice, f.last_slice);
+            if !programs.contains_key(&key) {
+                programs.insert(key, build_conv_task(&plan, key.0, f)?);
+            }
+        }
+        Ok(Self { plan, programs, analytic: OnceLock::new() })
+    }
+
+    pub(crate) fn task_key(&self, mi: usize) -> TaskKey {
+        let f = flavor_of(mi, self.plan.m);
+        (self.plan.slice_ics(mi), f.first_slice, f.last_slice)
+    }
+
+    pub(crate) fn program(&self, key: &TaskKey) -> &ProgramMem {
+        &self.programs[key]
+    }
+}
+
+/// A pool layer shape, compiled once: the one-row plan, its task
+/// program, and the single sampled-row analytic record (pool rows are
+/// cycle-identical, so the seed executor already reused one sample per
+/// call — the cache extends that across calls).
+pub struct CompiledPool {
+    pub(crate) plan: PoolPlan,
+    pub(crate) pm: ProgramMem,
+    pub(crate) analytic: OnceLock<(u64, CoreStats)>,
+}
+
+impl CompiledPool {
+    pub(crate) fn compile(layer: &PoolLayer) -> Result<Self, CodegenError> {
+        let one_row = PoolLayer { ih: layer.size, ..layer.clone() };
+        let plan = plan_pool(&one_row)?;
+        let pm = build_pool_task(&plan)?;
+        Ok(Self { plan, pm, analytic: OnceLock::new() })
+    }
+}
+
+/// Hit/miss counters and entry counts of a [`PlanCache`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub conv_entries: usize,
+    pub pool_entries: usize,
+}
+
+/// The compile-once cache: shape-keyed compiled layers, shared (behind
+/// an `Arc` on the engine) by every core thread, frame, shard and
+/// pipeline stage. Disabled it still compiles — fresh on every call —
+/// which is exactly the pre-cache behavior the `simspeed` bench uses
+/// as its uncached baseline.
+pub struct PlanCache {
+    enabled: bool,
+    conv: Mutex<HashMap<ConvKey, Arc<CompiledConv>>>,
+    pool: Mutex<HashMap<PoolKey, Arc<CompiledPool>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        Self {
+            enabled: true,
+            conv: Mutex::new(HashMap::new()),
+            pool: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// A cache that never retains anything: every lookup compiles
+    /// fresh (and counts as a miss). The analytic profile is likewise
+    /// per-call, so execution behaves exactly like the pre-cache code.
+    pub fn disabled() -> Self {
+        Self { enabled: false, ..Self::new() }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Compiled artifact for a dense (per-group) conv layer shape.
+    pub(crate) fn conv(
+        &self,
+        layer: &ConvLayer,
+        gate_bits: u8,
+    ) -> Result<Arc<CompiledConv>, CodegenError> {
+        if !self.enabled {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return CompiledConv::compile(layer).map(Arc::new);
+        }
+        let key = ConvKey::of(layer, gate_bits);
+        // Compiling under the lock serializes racing first compiles of
+        // one shape — cheaper than letting every core compile it.
+        let mut map = self.conv.lock().expect("plan cache poisoned");
+        if let Some(cc) = map.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(cc.clone());
+        }
+        let cc = Arc::new(CompiledConv::compile(layer)?);
+        map.insert(key, cc.clone());
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Ok(cc)
+    }
+
+    /// Compiled artifact for a pool layer shape.
+    pub(crate) fn pool(&self, layer: &PoolLayer) -> Result<Arc<CompiledPool>, CodegenError> {
+        if !self.enabled {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return CompiledPool::compile(layer).map(Arc::new);
+        }
+        let key = PoolKey { iw: layer.iw, size: layer.size, stride: layer.stride };
+        let mut map = self.pool.lock().expect("plan cache poisoned");
+        if let Some(cp) = map.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(cp.clone());
+        }
+        let cp = Arc::new(CompiledPool::compile(layer)?);
+        map.insert(key, cp.clone());
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Ok(cp)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            conv_entries: self.conv.lock().expect("plan cache poisoned").len(),
+            pool_entries: self.pool.lock().expect("plan cache poisoned").len(),
+        }
+    }
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Per-core staging arena: the host-side buffers a layer run stages
+/// tensors through, reused across layers and frames. Every buffer is
+/// reset (zero-filled to the exact length) before use, so a reused
+/// arena is indistinguishable from fresh allocations — only the
+/// allocator traffic disappears.
+#[derive(Default)]
+pub struct Scratch {
+    /// Zero-padded input tensor (`stage::pad_input_into`).
+    pub(crate) xp: Vec<i16>,
+    /// Staged input band for one (slice, band) (`stage::input_band_into`).
+    pub(crate) band: Vec<i16>,
+    /// Filter stream for one (tile, slice) (`stage::filter_stream_into`).
+    pub(crate) filt: Vec<i16>,
+    /// One output row read back from the row buffer.
+    pub(crate) row: Vec<i16>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> ConvLayer {
+        ConvLayer::new("s", 4, 8, 8, 16, 3, 3, 1, 1, 1)
+    }
+
+    #[test]
+    fn conv_keys_ignore_names_but_not_gate_bits() {
+        let cache = PlanCache::new();
+        let a = ConvLayer { name: "a", ..small() };
+        let b = ConvLayer { name: "b", ..small() };
+        let c1 = cache.conv(&a, 16).unwrap();
+        let c2 = cache.conv(&b, 16).unwrap();
+        assert!(Arc::ptr_eq(&c1, &c2), "same shape, different name must hit");
+        let c3 = cache.conv(&a, 8).unwrap();
+        assert!(!Arc::ptr_eq(&c1, &c3), "same shape, different gate bits must miss");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.conv_entries), (1, 2, 2));
+    }
+
+    #[test]
+    fn disabled_cache_compiles_fresh_every_call() {
+        let cache = PlanCache::disabled();
+        let l = small();
+        let c1 = cache.conv(&l, 16).unwrap();
+        let c2 = cache.conv(&l, 16).unwrap();
+        assert!(!Arc::ptr_eq(&c1, &c2));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.conv_entries), (0, 2, 0));
+    }
+
+    #[test]
+    fn compiled_conv_carries_every_task_program() {
+        // a multi-slice shape needs first/middle/last flavors
+        let l = ConvLayer::new("ms", 768, 6, 6, 16, 3, 3, 1, 1, 1);
+        let cc = CompiledConv::compile(&l).unwrap();
+        assert!(cc.plan.m > 1);
+        for mi in 0..cc.plan.m {
+            let key = cc.task_key(mi);
+            assert!(cc.program(&key).bundle_count() > 0, "missing program for {key:?}");
+        }
+    }
+
+    #[test]
+    fn pool_keys_ignore_channel_count() {
+        let cache = PlanCache::new();
+        let p1 = PoolLayer { name: "p1", ic: 16, ih: 8, iw: 8, size: 2, stride: 2 };
+        let p2 = PoolLayer { name: "p2", ic: 48, ih: 12, iw: 8, size: 2, stride: 2 };
+        let c1 = cache.pool(&p1).unwrap();
+        let c2 = cache.pool(&p2).unwrap();
+        assert!(Arc::ptr_eq(&c1, &c2), "pool plans depend on (iw, size, stride) only");
+        let p3 = PoolLayer { name: "p3", ic: 16, ih: 8, iw: 13, size: 2, stride: 2 };
+        assert!(!Arc::ptr_eq(&c1, &cache.pool(&p3).unwrap()));
+    }
+}

@@ -70,6 +70,11 @@ const RGPS: SReg = SReg(10); // group psum ptr
 
 /// Build the task program for `plan` with `slice_ics` input channels
 /// (the last slice may be smaller than `plan.ics`).
+///
+/// Pure function of `(plan, slice_ics, flavor)` — `codegen::compiled`
+/// memoizes the result per layer shape, so any new input (a CSR knob,
+/// a mode flag) must flow through the plan or the cache key rather
+/// than ambient state.
 pub fn build_conv_task(
     plan: &ConvPlan,
     slice_ics: usize,

@@ -126,6 +126,15 @@ impl ConvPlan {
         slice_ics * self.layer.fh * self.layer.fw * 32
     }
 
+    /// Off-chip bytes the executor charges for one (tile, slice)
+    /// filter+bias stream: the filter vectors, the 2 FIFO over-read
+    /// slack vectors, and the 32 B bias. THE single definition — the
+    /// executor's I/O accounting and the FC weight-residency model
+    /// must subtract exactly what was charged.
+    pub fn filter_stream_bytes(&self, mi: usize) -> u64 {
+        ((self.slice_ics(mi) * self.layer.fh * self.layer.fw + 2) * 32 + 32) as u64
+    }
+
     /// Output row-buffer bytes (identical for both variants: G·384).
     pub fn out_row_bytes(&self) -> usize {
         self.g * self.variant.pix() * self.variant.ocs() * 2
@@ -158,6 +167,13 @@ impl ConvPlan {
 }
 
 /// Plan a dense (per-group) conv layer. `layer.groups` must be 1.
+///
+/// Deterministic in the layer's *shape*: two layers differing only in
+/// `name` plan identically. `codegen::compiled` relies on this — its
+/// cache key ([`crate::codegen::compiled`]) mirrors every
+/// plan-relevant `ConvLayer` field except the name, so a new field
+/// that influences planning or codegen MUST also be added to the
+/// cache key, or same-key layers would share a stale plan.
 pub fn plan(layer: &ConvLayer) -> Result<ConvPlan, CodegenError> {
     assert_eq!(layer.groups, 1, "plan() takes per-group dense views");
     let a = plan_variant(layer, Variant::A);

@@ -15,6 +15,7 @@
 //!   **variant A** — 16 lanes = output channels, 12 slices = pixels;
 //!   **variant B** — 16 lanes = pixels, 12 slices = output channels.
 
+pub mod compiled;
 pub mod conv;
 pub mod layout;
 pub mod pool;
@@ -22,6 +23,7 @@ pub mod refconv;
 pub mod reffc;
 pub mod stage;
 
+pub use compiled::{CacheStats, PlanCache, Scratch};
 pub use conv::{build_conv_task, TaskFlavor};
 pub use layout::{ConvPlan, Variant};
 

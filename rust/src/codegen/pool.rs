@@ -31,6 +31,14 @@ pub struct PoolPlan {
     pub dm_out: usize,
 }
 
+/// Plan a pooling layer (callers pass a one-row view, `ih == size`).
+///
+/// The plan's DM map and the task program depend only on
+/// `(iw, size, stride)` — exactly the `codegen::compiled` pool cache
+/// key. `n_tiles` is derived from `ic` and is NOT part of that key:
+/// the executor recomputes it per layer, so a cached plan's `n_tiles`
+/// must never be read across layers. A new `ic`/`ih`-dependent plan
+/// field would have to widen the cache key.
 pub fn plan_pool(layer: &PoolLayer) -> Result<PoolPlan, CodegenError> {
     let in_row_bytes = layer.iw * 32;
     let input_bytes = layer.size * in_row_bytes;

@@ -21,11 +21,20 @@ use crate::model::ConvLayer;
 
 use super::layout::{ConvPlan, Variant};
 
-/// Zero-pad a dense input tensor (ic, ih, iw) -> (ic, ihp, iwp).
-pub fn pad_input(l: &ConvLayer, x: &[i16]) -> Vec<i16> {
+/// Reset a reusable staging buffer to exactly `n` zeroed elements.
+/// `clear` + `resize` reuses the allocation while writing every element
+/// — a reused buffer is bit-identical to a fresh `vec![0; n]`.
+fn reset(buf: &mut Vec<i16>, n: usize) {
+    buf.clear();
+    buf.resize(n, 0);
+}
+
+/// Zero-pad a dense input tensor (ic, ih, iw) -> (ic, ihp, iwp) into a
+/// reusable buffer (see [`crate::codegen::Scratch`]).
+pub fn pad_input_into(l: &ConvLayer, x: &[i16], xp: &mut Vec<i16>) {
     assert_eq!(x.len(), l.ic * l.ih * l.iw);
     let (ihp, iwp) = (l.ihp(), l.iwp());
-    let mut xp = vec![0i16; l.ic * ihp * iwp];
+    reset(xp, l.ic * ihp * iwp);
     for c in 0..l.ic {
         for y in 0..l.ih {
             let src = (c * l.ih + y) * l.iw;
@@ -33,17 +42,24 @@ pub fn pad_input(l: &ConvLayer, x: &[i16]) -> Vec<i16> {
             xp[dst..dst + l.iw].copy_from_slice(&x[src..src + l.iw]);
         }
     }
+}
+
+/// Zero-pad a dense input tensor (ic, ih, iw) -> (ic, ihp, iwp).
+pub fn pad_input(l: &ConvLayer, x: &[i16]) -> Vec<i16> {
+    let mut xp = Vec::new();
+    pad_input_into(l, x, &mut xp);
     xp
 }
 
-/// Build the filter stream for (tile, slice mi): returns lane-major i16
-/// words, `(slice_ics*fh*fw + 2) * 16` of them.
-pub fn filter_stream(plan: &ConvPlan, w: &[i16], tile: usize, mi: usize) -> Vec<i16> {
+/// Build the filter stream for (tile, slice mi) into a reusable buffer:
+/// lane-major i16 words, `(slice_ics*fh*fw + 2) * 16` of them.
+pub fn filter_stream_into(plan: &ConvPlan, w: &[i16], tile: usize, mi: usize, out: &mut Vec<i16>) {
     let l = &plan.layer;
     let ocs = plan.variant.ocs();
     let slice_ics = plan.slice_ics(mi);
     let ic0 = mi * plan.ics;
-    let mut out = Vec::with_capacity((slice_ics * l.fh * l.fw + 2) * LANES);
+    out.clear();
+    out.reserve((slice_ics * l.fh * l.fw + 2) * LANES);
     for icl in 0..slice_ics {
         let ic = ic0 + icl;
         for fy in 0..l.fh {
@@ -62,6 +78,13 @@ pub fn filter_stream(plan: &ConvPlan, w: &[i16], tile: usize, mi: usize) -> Vec<
     }
     // FIFO over-read slack
     out.extend(std::iter::repeat(0).take(2 * LANES));
+}
+
+/// Build the filter stream for (tile, slice mi): returns lane-major i16
+/// words, `(slice_ics*fh*fw + 2) * 16` of them.
+pub fn filter_stream(plan: &ConvPlan, w: &[i16], tile: usize, mi: usize) -> Vec<i16> {
+    let mut out = Vec::new();
+    filter_stream_into(plan, w, tile, mi, &mut out);
     out
 }
 
@@ -86,15 +109,16 @@ pub fn bias_vector(plan: &ConvPlan, b: &[i32], tile: usize) -> [i16; LANES] {
 }
 
 /// Stage the input band for slice `mi`, band starting at output row
-/// `oh0`. Returns `[ic_local][row_local][iwp_stage]` pixels, using the
-/// plan's fixed `ic_stride` (zero-filled outside the padded map).
-pub fn input_band(plan: &ConvPlan, xp: &[i16], mi: usize, oh0: usize) -> Vec<i16> {
+/// `oh0`, into a reusable buffer: `[ic_local][row_local][iwp_stage]`
+/// pixels, using the plan's fixed `ic_stride` (zero-filled outside the
+/// padded map).
+pub fn input_band_into(plan: &ConvPlan, xp: &[i16], mi: usize, oh0: usize, out: &mut Vec<i16>) {
     let l = &plan.layer;
     let (ihp, iwp) = (l.ihp(), l.iwp());
     let slice_ics = plan.slice_ics(mi);
     let ic0 = mi * plan.ics;
     let y0 = oh0 * l.stride;
-    let mut out = vec![0i16; slice_ics * plan.in_rows_band * plan.iwp_stage];
+    reset(out, slice_ics * plan.in_rows_band * plan.iwp_stage);
     for icl in 0..slice_ics {
         for r in 0..plan.in_rows_band {
             let y = y0 + r;
@@ -107,6 +131,13 @@ pub fn input_band(plan: &ConvPlan, xp: &[i16], mi: usize, oh0: usize) -> Vec<i16
             out[dst..dst + n].copy_from_slice(&xp[src..src + n]);
         }
     }
+}
+
+/// Stage the input band for slice `mi`, band starting at output row
+/// `oh0`. Returns `[ic_local][row_local][iwp_stage]` pixels.
+pub fn input_band(plan: &ConvPlan, xp: &[i16], mi: usize, oh0: usize) -> Vec<i16> {
+    let mut out = Vec::new();
+    input_band_into(plan, xp, mi, oh0, &mut out);
     out
 }
 
@@ -116,11 +147,12 @@ pub fn poke(dm: &mut DataMem, base: usize, words: &[i16]) {
     dm.poke_i16_slice(base, words);
 }
 
-/// Read one output row back from the row buffer: logical `[oc_local][ow]`.
-pub fn read_out_row(plan: &ConvPlan, dm: &DataMem, ow: usize) -> Vec<i16> {
+/// Read one output row back from the row buffer into a reusable
+/// buffer: logical `[oc_local][ow]`.
+pub fn read_out_row_into(plan: &ConvPlan, dm: &DataMem, ow: usize, out: &mut Vec<i16>) {
     let ocs = plan.variant.ocs();
     let base = plan.dm.out;
-    let mut out = vec![0i16; ocs * ow];
+    reset(out, ocs * ow);
     match plan.variant {
         Variant::A => {
             // pixel-major vectors of 16 OCh
@@ -139,6 +171,12 @@ pub fn read_out_row(plan: &ConvPlan, dm: &DataMem, ow: usize) -> Vec<i16> {
             }
         }
     }
+}
+
+/// Read one output row back from the row buffer: logical `[oc_local][ow]`.
+pub fn read_out_row(plan: &ConvPlan, dm: &DataMem, ow: usize) -> Vec<i16> {
+    let mut out = Vec::new();
+    read_out_row_into(plan, dm, ow, &mut out);
     out
 }
 

@@ -352,6 +352,23 @@ mod tests {
     }
 
     #[test]
+    fn weight_residency_drops_steady_bytes_but_not_fill() {
+        // The engine models FC weight residency by shrinking a steady
+        // segment's payload while pricing the fill pass on the
+        // original segment: the interval falls with the bytes, the
+        // first pass doesn't, and a DMA-bound segment stays strictly
+        // ordered (fill > steady) as long as anything was resident.
+        let fc_full = seg(500, 20_000 * E); // fill view: full weight stream
+        let fc_resident = seg(500, 2_000 * E); // steady view: weights stay in DM
+        assert_eq!(stage_first_pass(&[fc_full], 1), 20_000);
+        assert_eq!(stage_interval(&[fc_resident], 1), 2_000);
+        assert!(stage_interval(&[fc_resident], 1) < stage_first_pass(&[fc_full], 1));
+        // residency never lifts a segment below its compute floor
+        let all_resident = seg(500, 0);
+        assert_eq!(stage_interval(&[all_resident], 1), 500);
+    }
+
+    #[test]
     fn idle_cores_never_contend() {
         let cores = vec![vec![seg(10, 1000 * E)], vec![]];
         let acct = core_busy(&cores, BusModel::Shared);

@@ -61,13 +61,15 @@
 //!   to single-core runs: both walks share one layer-step helper and
 //!   one weight-draw stream.
 
+use std::sync::Arc;
 use std::thread;
 
+use crate::codegen::compiled::{CacheStats, PlanCache, Scratch};
 use crate::core::Cpu;
 use crate::model::{ConvLayer, FcLayer, NetLayer, PoolLayer};
 
 use super::bus::{core_busy, shared_divisor, stage_first_pass, stage_interval, BusModel, Segment};
-use super::executor::{ExecError, ExecMode, ExecOptions};
+use super::executor::{ExecCtx, ExecError, ExecMode, ExecOptions};
 use super::metrics::{add_stats, LayerResult, NetworkResult, PipelineResult};
 use super::ops::Shard;
 
@@ -162,6 +164,14 @@ pub struct EngineConfig {
     pub seed: u64,
     /// External DRAM model capacity per core, bytes.
     pub ext_capacity: usize,
+    /// Compile-once layer cache (default on): memoize layout plans,
+    /// task programs and tile-analytic profiles per layer shape across
+    /// frames, shards and pipeline stages. `false` compiles fresh on
+    /// every call — the pre-0.5 behavior, kept as the honest baseline
+    /// for `benches/simspeed` (CLI: `--no-cache`). Outputs, cycle
+    /// counts and stats are bit-identical either way (locked by
+    /// `tests/plan_cache.rs`).
+    pub plan_cache: bool,
 }
 
 impl Default for EngineConfig {
@@ -176,6 +186,7 @@ impl Default for EngineConfig {
             gate_bits: 16,
             seed: 0xC0FFEE,
             ext_capacity: 1 << 24,
+            plan_cache: true,
         }
     }
 }
@@ -230,6 +241,12 @@ impl EngineConfig {
         self
     }
 
+    /// Enable/disable the compile-once layer cache (see the field doc).
+    pub fn plan_cache(mut self, on: bool) -> Self {
+        self.plan_cache = on;
+        self
+    }
+
     /// Finish the builder: allocate the core pool and return the engine.
     pub fn build(self) -> Engine {
         Engine::new(self)
@@ -261,16 +278,32 @@ pub(crate) struct RunSpec {
 }
 
 /// The execution engine: an [`EngineConfig`] plus its pool of
-/// cycle-accurate cores. All public entry points run on this.
+/// cycle-accurate cores and the shared compile-once [`PlanCache`].
+/// All public entry points run on this.
 pub struct Engine {
     cfg: EngineConfig,
     pool: CorePool,
+    /// Compile-once layer cache, shared by every core thread (and, via
+    /// [`Engine::new_with_cache`], across engines). Compiled layers
+    /// persist across `run_*` calls, so the steady-state loop of
+    /// batched / streaming serving performs zero codegen after the
+    /// first frame of each shape.
+    cache: Arc<PlanCache>,
 }
 
 impl Engine {
     pub fn new(cfg: EngineConfig) -> Self {
+        let cache =
+            Arc::new(if cfg.plan_cache { PlanCache::new() } else { PlanCache::disabled() });
+        Self::new_with_cache(cfg, cache)
+    }
+
+    /// Build an engine over an existing (possibly shared) plan cache —
+    /// several engines serving the same model zoo can reuse one
+    /// compiled-layer set.
+    pub fn new_with_cache(cfg: EngineConfig, cache: Arc<PlanCache>) -> Self {
         let pool = CorePool::new(cfg.cores, cfg.ext_capacity);
-        Self { cfg, pool }
+        Self { cfg, pool, cache }
     }
 
     pub fn config(&self) -> &EngineConfig {
@@ -279,6 +312,16 @@ impl Engine {
 
     pub fn cores(&self) -> usize {
         self.pool.cores()
+    }
+
+    /// The engine's compile-once layer cache.
+    pub fn plan_cache(&self) -> &Arc<PlanCache> {
+        &self.cache
+    }
+
+    /// Hit/miss counters and entry counts of the plan cache.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
     }
 
     /// Run one network layer (any [`LayerOp`](super::ops::LayerOp)
@@ -292,7 +335,7 @@ impl Engine {
         b: &[i32],
     ) -> Result<LayerResult, ExecError> {
         let spec = self.cfg.run_spec();
-        run_layer_sharded(&mut self.pool, layer, x, w, b, spec)
+        run_layer_sharded(&mut self.pool, &self.cache, layer, x, w, b, spec)
     }
 
     /// Run a (possibly grouped) conv layer. `x`: (ic, ih, iw), `w`:
@@ -340,7 +383,7 @@ impl Engine {
         input: &[i16],
     ) -> Result<NetworkResult, ExecError> {
         let spec = self.cfg.run_spec();
-        run_network_on(&mut self.pool, name, layers, input, spec)
+        run_network_on(&mut self.pool, &self.cache, name, layers, input, spec)
     }
 
     /// Batched inference: fan `inputs` (one tensor per frame)
@@ -354,7 +397,7 @@ impl Engine {
         inputs: &[Vec<i16>],
     ) -> Result<BatchedResult, ExecError> {
         let spec = self.cfg.run_spec();
-        run_batched_on(&mut self.pool, name, layers, inputs, spec)
+        run_batched_on(&mut self.pool, &self.cache, name, layers, inputs, spec)
     }
 
     /// Layer-pipelined streaming ([`PoolMode::Pipelined`]): cut the
@@ -372,13 +415,16 @@ impl Engine {
         inputs: &[Vec<i16>],
     ) -> Result<PipelineResult, ExecError> {
         let spec = self.cfg.run_spec();
-        run_streaming_on(&mut self.pool, name, layers, inputs, spec)
+        run_streaming_on(&mut self.pool, &self.cache, name, layers, inputs, spec)
     }
 }
 
-/// A pool of independent ConvAix cores (one cycle simulator each).
+/// A pool of independent ConvAix cores (one cycle simulator each),
+/// each paired with its own [`Scratch`] staging arena so core threads
+/// reuse buffers without sharing them.
 pub struct CorePool {
     cpus: Vec<Cpu>,
+    scratch: Vec<Scratch>,
 }
 
 impl CorePool {
@@ -386,7 +432,10 @@ impl CorePool {
     /// external-memory model of `ext_capacity` bytes.
     pub fn new(cores: usize, ext_capacity: usize) -> Self {
         let cores = cores.max(1);
-        Self { cpus: (0..cores).map(|_| Cpu::new(ext_capacity)).collect() }
+        Self {
+            cpus: (0..cores).map(|_| Cpu::new(ext_capacity)).collect(),
+            scratch: (0..cores).map(|_| Scratch::default()).collect(),
+        }
     }
 
     pub fn cores(&self) -> usize {
@@ -396,6 +445,16 @@ impl CorePool {
     /// Core 0 — the single-core fallback path.
     pub fn cpu0(&mut self) -> &mut Cpu {
         &mut self.cpus[0]
+    }
+
+    /// Core 0 with its scratch arena (split borrow for the solo paths).
+    pub(crate) fn core0(&mut self) -> (&mut Cpu, &mut Scratch) {
+        (&mut self.cpus[0], &mut self.scratch[0])
+    }
+
+    /// Core `i` with its scratch arena.
+    pub(crate) fn core(&mut self, i: usize) -> (&mut Cpu, &mut Scratch) {
+        (&mut self.cpus[i], &mut self.scratch[i])
     }
 }
 
@@ -415,9 +474,12 @@ pub(crate) trait LayerRunner {
     ) -> Result<LayerResult, ExecError>;
 }
 
-/// Runs every layer on one core.
+/// Runs every layer on one core, through that core's scratch arena and
+/// the engine's shared plan cache.
 pub(crate) struct SoloRunner<'a> {
     pub cpu: &'a mut Cpu,
+    pub scratch: &'a mut Scratch,
+    pub cache: &'a PlanCache,
     pub opts: ExecOptions,
 }
 
@@ -429,13 +491,15 @@ impl LayerRunner for SoloRunner<'_> {
         w: &[i16],
         b: &[i32],
     ) -> Result<LayerResult, ExecError> {
-        layer.op().run_solo(self.cpu, x, w, b, self.opts)
+        let mut ctx = ExecCtx::new(self.cache, self.scratch);
+        layer.op().run_solo(self.cpu, x, w, b, self.opts, &mut ctx)
     }
 }
 
 /// Shards every layer across the pool per the spec's policy/bus.
 pub(crate) struct ShardedRunner<'a> {
     pub pool: &'a mut CorePool,
+    pub cache: &'a PlanCache,
     pub spec: RunSpec,
 }
 
@@ -447,7 +511,7 @@ impl LayerRunner for ShardedRunner<'_> {
         w: &[i16],
         b: &[i32],
     ) -> Result<LayerResult, ExecError> {
-        run_layer_sharded(self.pool, layer, x, w, b, self.spec)
+        run_layer_sharded(self.pool, self.cache, layer, x, w, b, self.spec)
     }
 }
 
@@ -512,27 +576,31 @@ pub(crate) fn walk_network<R: LayerRunner>(
 /// spec. The implementation behind [`Engine::run_network`].
 pub(crate) fn run_network_on(
     pool: &mut CorePool,
+    cache: &PlanCache,
     name: &str,
     layers: &[NetLayer],
     input: &[i16],
     spec: RunSpec,
 ) -> Result<NetworkResult, ExecError> {
     if spec.opts.cores.min(pool.cores()) <= 1 {
-        let mut runner = SoloRunner { cpu: pool.cpu0(), opts: spec.opts };
+        let (cpu, scratch) = pool.core0();
+        let mut runner = SoloRunner { cpu, scratch, cache, opts: spec.opts };
         walk_network(&mut runner, name, layers, input, spec.seed)
     } else {
-        let mut runner = ShardedRunner { pool, spec };
+        let mut runner = ShardedRunner { pool, cache, spec };
         walk_network(&mut runner, name, layers, input, spec.seed)
     }
 }
 
 /// Run per-core worklists on the pool's cores (one host thread per
-/// busy core) and return the shard results in shard-index order.
+/// busy core) and return the shard results in shard-index order. Each
+/// thread gets its core's scratch arena; the plan cache is shared by
+/// reference inside `work`.
 fn run_on_pool<W, R>(
     pool: &mut CorePool,
     assignments: Vec<Vec<(usize, W)>>,
     n_shards: usize,
-    work: impl Fn(&mut Cpu, &W) -> Result<R, ExecError> + Sync,
+    work: impl Fn(&mut Cpu, &mut Scratch, &W) -> Result<R, ExecError> + Sync,
 ) -> Result<Vec<R>, ExecError>
 where
     W: Send,
@@ -542,14 +610,16 @@ where
     let mut slots: Vec<Option<R>> = (0..n_shards).map(|_| None).collect();
     thread::scope(|s| -> Result<(), ExecError> {
         let mut handles = Vec::new();
-        for (cpu, list) in pool.cpus.iter_mut().zip(assignments) {
+        for ((cpu, scratch), list) in
+            pool.cpus.iter_mut().zip(pool.scratch.iter_mut()).zip(assignments)
+        {
             if list.is_empty() {
                 continue;
             }
             handles.push(s.spawn(move || -> Result<Vec<(usize, R)>, ExecError> {
                 let mut done = Vec::with_capacity(list.len());
                 for (idx, w) in &list {
-                    done.push((*idx, work(cpu, w)?));
+                    done.push((*idx, work(cpu, scratch, w)?));
                 }
                 Ok(done)
             }));
@@ -581,6 +651,7 @@ fn round_robin<W>(shards: Vec<W>, cores: usize) -> Vec<Vec<(usize, W)>> {
 /// exactly the single-core executor.
 pub(crate) fn run_layer_sharded(
     pool: &mut CorePool,
+    cache: &PlanCache,
     layer: &NetLayer,
     x: &[i16],
     w: &[i16],
@@ -590,7 +661,8 @@ pub(crate) fn run_layer_sharded(
     let op = layer.op();
     let n = spec.opts.cores.min(pool.cores()).max(1);
     if n == 1 {
-        return op.run_solo(pool.cpu0(), x, w, b, spec.opts);
+        let (cpu, scratch) = pool.core0();
+        return op.run_solo(cpu, x, w, b, spec.opts, &mut ExecCtx::new(cache, scratch));
     }
     let inner = ExecOptions { cores: 1, batch: 1, ..spec.opts };
     let shards = op.shard(x, spec.shard, n);
@@ -599,13 +671,14 @@ pub(crate) fn run_layer_sharded(
         shards.iter().map(|s| s.placement.clone()).collect();
     let core_of: Vec<usize> = (0..n_shards).map(|i| i % n).collect();
     let assignments = round_robin(shards, n);
-    let results = run_on_pool(pool, assignments, n_shards, |cpu, sh: &Shard| {
+    let results = run_on_pool(pool, assignments, n_shards, |cpu, scratch, sh: &Shard| {
         sh.sub.op().run_solo(
             cpu,
             sh.input.resolve(x),
             &w[sh.w.0..sh.w.1],
             &b[sh.b.0..sh.b.1],
             inner,
+            &mut ExecCtx::new(cache, scratch),
         )
     })?;
     Ok(op.merge(results, &placements, &core_of, n, spec.opts.mode, spec.bus))
@@ -686,6 +759,7 @@ impl BatchedResult {
 /// [`Engine::run_batched`].
 pub(crate) fn run_batched_on(
     pool: &mut CorePool,
+    cache: &PlanCache,
     name: &str,
     layers: &[NetLayer],
     inputs: &[Vec<i16>],
@@ -697,8 +771,8 @@ pub(crate) fn run_batched_on(
     let n_frames = frames.len();
     let core_of: Vec<usize> = (0..n_frames).map(|i| i % n).collect();
     let assignments = round_robin(frames, n);
-    let results = run_on_pool(pool, assignments, n_frames, |cpu, x: &&Vec<i16>| {
-        let mut runner = SoloRunner { cpu, opts: inner };
+    let results = run_on_pool(pool, assignments, n_frames, |cpu, scratch, x: &&Vec<i16>| {
+        let mut runner = SoloRunner { cpu, scratch, cache, opts: inner };
         walk_network(&mut runner, name, layers, x.as_slice(), spec.seed)
     })?;
 
@@ -793,6 +867,7 @@ fn pipeline_stages(layers: &[NetLayer], want: usize) -> Vec<(usize, usize)> {
 /// concurrently streaming stages' aggregate timelines.
 pub(crate) fn run_streaming_on(
     pool: &mut CorePool,
+    cache: &PlanCache,
     name: &str,
     layers: &[NetLayer],
     inputs: &[Vec<i16>],
@@ -841,7 +916,8 @@ pub(crate) fn run_streaming_on(
         for (f, act) in acts.iter_mut().enumerate() {
             let mut segs = Vec::with_capacity(l1 - l0);
             for (k, li) in (l0..l1).enumerate() {
-                let mut runner = SoloRunner { cpu: &mut pool.cpus[s], opts: inner };
+                let (cpu, scratch) = pool.core(s);
+                let mut runner = SoloRunner { cpu, scratch, cache, opts: inner };
                 let r = step_layer(&mut runner, &layers[li], &tensors[k], act)?;
                 segs.push(Segment::of_layer(&r));
                 nets[f].layers.push(r);
@@ -852,6 +928,36 @@ pub(crate) fn run_streaming_on(
     for net in nets {
         res.outputs.push(net.layers.last().map(|l| l.out.clone()).unwrap_or_default());
         res.frames.push(net);
+    }
+
+    // FC weight residency (LayerOp::resident_param_stream): a stage's
+    // repeating schedule keeps parameter tiles resident in DM across
+    // frames when they fit, so frames after the first drop those
+    // transfers — payload bytes AND the elided descriptors' DRAM
+    // latency — from their steady-state DMA. The fill pass (f == 0)
+    // keeps the full stream (the tiles must arrive once); the gated-
+    // I/O halving mirrors the executor's packed-transfer accounting.
+    // Residency is only credited when the layer OWNS its stage: every
+    // layer's DM map packs from the same base addresses, so any
+    // co-staged layer would overwrite the resident tiles each frame.
+    let n_frames = inputs.len();
+    for (s, &(l0, l1)) in stages.iter().enumerate() {
+        if l1 - l0 != 1 {
+            continue;
+        }
+        let (mut bytes, reqs) = layers[l0].op().resident_param_stream();
+        if spec.opts.gate_bits <= 8 {
+            bytes /= 2;
+        }
+        if bytes == 0 {
+            continue;
+        }
+        let lat = reqs * crate::mem::EXT_LATENCY_CYCLES;
+        for f in 1..n_frames {
+            let seg = &mut frame_segs[s][f][0];
+            seg.bytes = seg.bytes.saturating_sub(bytes);
+            seg.lat = seg.lat.saturating_sub(lat);
+        }
     }
 
     // bus pricing: the shared divisor is the fixed point over the
@@ -873,7 +979,6 @@ pub(crate) fn run_streaming_on(
     // schedule repeats and the whole-stage overlap applies
     // (`stage_interval`). The steady-state metric is always the
     // interval view — it is what a long stream converges to.
-    let n_frames = inputs.len();
     let priced = |segs: &[Segment], f: usize, div: u64| {
         if f == 0 {
             stage_first_pass(segs, div)
@@ -890,9 +995,15 @@ pub(crate) fn run_streaming_on(
         .iter()
         .map(|fs| fs.iter().enumerate().map(|(f, segs)| priced(segs, f, 1)).sum())
         .collect();
+    // Steady state is what a long stream converges to, so it is read
+    // off each stage's LAST frame — with weight residency the first
+    // frame's segments still carry the full parameter stream and must
+    // not cap the steady interval. (Without residency every frame's
+    // segments are identical, so this matches the 0.4 max-over-frames.)
     res.steady_interval_cycles = frame_segs
         .iter()
-        .flat_map(|fs| fs.iter().map(|segs| stage_interval(segs, d)))
+        .filter_map(|fs| fs.last())
+        .map(|segs| stage_interval(segs, d))
         .max()
         .unwrap_or(0);
 
@@ -921,6 +1032,21 @@ mod tests {
     use crate::coordinator::executor::{conv_layer, pool_layer};
     use crate::util::XorShift;
 
+    /// Single-core reference run with a private (fresh) cache/scratch.
+    fn solo_conv(cpu: &mut Cpu, l: &ConvLayer, x: &[i16], w: &[i16], b: &[i32]) -> LayerResult {
+        let cache = PlanCache::new();
+        let mut scratch = Scratch::default();
+        conv_layer(cpu, l, x, w, b, ExecOptions::default(), &mut ExecCtx::new(&cache, &mut scratch))
+            .unwrap()
+    }
+
+    fn solo_pool(cpu: &mut Cpu, l: &PoolLayer, x: &[i16]) -> LayerResult {
+        let cache = PlanCache::new();
+        let mut scratch = Scratch::default();
+        pool_layer(cpu, l, x, ExecOptions::default(), &mut ExecCtx::new(&cache, &mut scratch))
+            .unwrap()
+    }
+
     fn tensors(l: &ConvLayer, seed: u64) -> (Vec<i16>, Vec<i16>, Vec<i32>) {
         let mut rng = XorShift::new(seed);
         (
@@ -935,7 +1061,7 @@ mod tests {
         let l = ConvLayer::new("mc", 8, 16, 16, 64, 3, 3, 1, 1, 1);
         let (x, w, b) = tensors(&l, 3);
         let mut solo = Cpu::new(1 << 22);
-        let base = conv_layer(&mut solo, &l, &x, &w, &b, ExecOptions::default()).unwrap();
+        let base = solo_conv(&mut solo, &l, &x, &w, &b);
         for policy in [ShardPolicy::OcTile, ShardPolicy::RowBand, ShardPolicy::Auto] {
             for cores in [2usize, 4] {
                 let mut engine =
@@ -959,7 +1085,7 @@ mod tests {
         let l = ConvLayer::new("mcg", 8, 13, 13, 32, 3, 3, 1, 1, 2);
         let (x, w, b) = tensors(&l, 5);
         let mut solo = Cpu::new(1 << 22);
-        let base = conv_layer(&mut solo, &l, &x, &w, &b, ExecOptions::default()).unwrap();
+        let base = solo_conv(&mut solo, &l, &x, &w, &b);
         for policy in [ShardPolicy::OcTile, ShardPolicy::RowBand] {
             let mut engine =
                 EngineConfig::new().cores(4).shard(policy).ext_capacity(1 << 22).build();
@@ -975,7 +1101,7 @@ mod tests {
         let mut rng = XorShift::new(9);
         let x = rng.i16_vec(l.ic * l.ih * l.iw, -30000, 30000);
         let mut solo = Cpu::new(1 << 22);
-        let base = pool_layer(&mut solo, &l, &x, ExecOptions::default()).unwrap();
+        let base = solo_pool(&mut solo, &l, &x);
         for policy in [ShardPolicy::OcTile, ShardPolicy::RowBand, ShardPolicy::Auto] {
             let mut engine =
                 EngineConfig::new().cores(3).shard(policy).ext_capacity(1 << 22).build();
@@ -1241,6 +1367,84 @@ mod tests {
             assert!(u <= shared.stage_cycles[s], "stage {s}: useful above occupied");
             assert!(u <= shared.makespan_cycles, "stage {s}: useful above makespan");
         }
+    }
+
+    #[test]
+    fn fc_weight_residency_lifts_steady_state_only() {
+        // One pipeline stage holding one DM-resident FC head: frame 0
+        // (the fill pass) pays the full weight stream; every later
+        // frame keeps the tiles resident and runs strictly faster. A
+        // conv stage has no resident parameters, so its steady frames
+        // price exactly like its first.
+        use crate::coordinator::ops::LayerOp;
+        let fc = FcLayer::new("head", 256, 10);
+        assert!(LayerOp::resident_param_stream(&fc).0 > 0, "head must be DM-resident");
+        let fc_net = vec![NetLayer::Fc(fc.clone())];
+        let inputs: Vec<Vec<i16>> = (0..2).map(|_| vec![5i16; 256]).collect();
+        let cfg = || {
+            EngineConfig::new()
+                .mode(ExecMode::TileAnalytic)
+                .seed(4)
+                .ext_capacity(1 << 22)
+        };
+        let pr = cfg().pool_mode(PoolMode::Pipelined).build()
+            .run_streaming("head", &fc_net, &inputs)
+            .unwrap();
+        assert_eq!(pr.stages.len(), 1);
+        // fill-pass timing is unchanged by residency: it equals the
+        // single-core frame latency exactly (partitioned bus)
+        let solo = cfg().build().run_network("head", &fc_net, &inputs[0]).unwrap();
+        assert_eq!(pr.fill_cycles, solo.cycles(), "residency must not touch the fill pass");
+        // steady frame strictly cheaper than the fill frame
+        let steady = pr.makespan_cycles - pr.fill_cycles;
+        assert!(
+            steady < pr.fill_cycles,
+            "resident FC steady frame {steady} must beat fill {}",
+            pr.fill_cycles
+        );
+        assert_eq!(pr.steady_interval_cycles, steady, "steady interval reads the warm frame");
+
+        // contrast: a conv stage streams identically every frame
+        let conv_net = vec![NetLayer::Conv(ConvLayer::new("c", 4, 12, 12, 16, 3, 3, 1, 1, 1))];
+        let conv_inputs: Vec<Vec<i16>> = (0..2).map(|_| vec![0i16; 4 * 12 * 12]).collect();
+        let cr = cfg().pool_mode(PoolMode::Pipelined).build()
+            .run_streaming("conv", &conv_net, &conv_inputs)
+            .unwrap();
+        assert_eq!(
+            cr.makespan_cycles - cr.fill_cycles,
+            cr.fill_cycles,
+            "a non-resident stage's steady frame must price like its fill frame"
+        );
+
+        // and a stage the FC does NOT own alone gets no residency: the
+        // conv's per-frame staging would overwrite the tiles in DM, so
+        // the steady interval must equal the full-stream overlap value
+        // reconstructable from the solo per-layer results
+        let shared_fc = FcLayer { in_features: 16 * 8 * 8, ..fc.clone() };
+        assert!(
+            LayerOp::resident_param_stream(&shared_fc).0 > 0,
+            "the shared-stage FC must be resident-sized for this test to bite"
+        );
+        let shared_net = vec![
+            NetLayer::Conv(ConvLayer::new("c", 4, 8, 8, 16, 3, 3, 1, 1, 1)),
+            NetLayer::Fc(shared_fc),
+        ];
+        let shared_inputs: Vec<Vec<i16>> = (0..2).map(|_| vec![3i16; 4 * 8 * 8]).collect();
+        let sr = cfg().pool_mode(PoolMode::Pipelined).build()
+            .run_streaming("shared", &shared_net, &shared_inputs)
+            .unwrap();
+        assert_eq!(sr.stages.len(), 1, "one core => conv and fc share the stage");
+        let solo2 = cfg().build().run_network("shared", &shared_net, &shared_inputs[0]).unwrap();
+        let (compute, dma): (u64, u64) = solo2
+            .layers
+            .iter()
+            .map(|r| (r.compute_cycles, r.dma_cycles))
+            .fold((0, 0), |(c, d), (lc, ld)| (c + lc, d + ld));
+        assert_eq!(
+            sr.steady_interval_cycles,
+            compute.max(dma),
+            "a shared stage must keep the FULL weight stream in its steady interval"
+        );
     }
 
     #[test]

@@ -10,7 +10,9 @@ use super::bus::BusModel;
 /// Result of executing one layer.
 #[derive(Debug, Clone, Default)]
 pub struct LayerResult {
-    pub name: String,
+    /// Layer name (model tables carry static names; borrowing them
+    /// keeps the per-call result path allocation-free).
+    pub name: &'static str,
     /// Total cycles including DMA-bound segments (max(compute, dma)).
     pub cycles: u64,
     /// Pure compute cycles on the core.

@@ -20,6 +20,13 @@
 //! contention model are all kind-agnostic. The 0.2 free-function API
 //! (and its 0.3 `#[deprecated]` shims) is gone; `tools/
 //! check-deprecated.sh` keeps it from coming back.
+//!
+//! Since 0.5.0 execution is **compile-once**: the engine holds a
+//! shape-keyed [`PlanCache`] of compiled layers (layout plan + task
+//! programs + tile-analytic profile) and each core owns a [`Scratch`]
+//! staging arena, threaded into the executors through [`ExecCtx`] —
+//! steady-state batched/streaming frames perform zero codegen and
+//! near-zero allocation (see `codegen::compiled`).
 
 pub mod bus;
 pub mod engine;
@@ -27,8 +34,9 @@ pub mod executor;
 pub mod metrics;
 pub mod ops;
 
+pub use crate::codegen::compiled::{CacheStats, PlanCache, Scratch};
 pub use bus::BusModel;
 pub use engine::{BatchedResult, CorePool, Engine, EngineConfig, PoolMode, ShardPolicy};
-pub use executor::{ExecMode, ExecOptions, NetLayer};
+pub use executor::{ExecCtx, ExecMode, ExecOptions, NetLayer};
 pub use metrics::{LayerResult, NetworkResult, PipelineResult};
 pub use ops::LayerOp;

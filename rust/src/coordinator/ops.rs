@@ -23,7 +23,7 @@ use crate::util::XorShift;
 
 use super::bus::BusModel;
 use super::engine::ShardPolicy;
-use super::executor::{conv_layer, fc_layer, pool_layer, ExecError, ExecMode, ExecOptions};
+use super::executor::{conv_layer, fc_layer, pool_layer, ExecCtx, ExecError, ExecMode, ExecOptions};
 use super::metrics::LayerResult;
 
 /// SFU pool tile: 16 channels per vector.
@@ -78,7 +78,9 @@ pub trait LayerOp {
     }
 
     /// Execute the whole layer on one core. `w`/`b` are empty slices
-    /// for weightless layers.
+    /// for weightless layers. `ctx` carries the engine's compile-once
+    /// plan cache and the core's scratch arena — implementations
+    /// derive plans/programs through it instead of compiling per call.
     fn run_solo(
         &self,
         cpu: &mut Cpu,
@@ -86,6 +88,7 @@ pub trait LayerOp {
         w: &[i16],
         b: &[i32],
         opts: ExecOptions,
+        ctx: &mut ExecCtx<'_>,
     ) -> Result<LayerResult, ExecError>;
 
     /// Split the layer into shards for (at most) `want` cores under
@@ -99,6 +102,21 @@ pub trait LayerOp {
     fn layer_cost(&self) -> u64 {
         let (i, w, o) = self.tensor_footprints();
         conv_cost(self.macs(), i, w, o).max(1)
+    }
+
+    /// `(bytes, dma requests)` of this layer's per-frame parameter
+    /// stream that a pipeline stage's *repeating* schedule can keep
+    /// resident in DM across frames — `(0, 0)` when the parameters
+    /// don't fit next to the working set (or the layer streams none).
+    /// Streaming timing drops both the payload bytes and the elided
+    /// requests' DRAM latency from steady-state frames; the fill pass
+    /// (first frame through a stage) always pays the full stream. The
+    /// engine only credits residency to layers that own their stage
+    /// alone: every DM map packs from the same base addresses, so any
+    /// co-resident layer's staging would overwrite the tiles each
+    /// frame.
+    fn resident_param_stream(&self) -> (u64, u64) {
+        (0, 0)
     }
 
     /// Merge executed shard results into the layer's [`LayerResult`]:
@@ -421,7 +439,7 @@ fn resolve_pool_policy(policy: ShardPolicy, layer: &PoolLayer, cores: usize) -> 
 /// is the makespan of the slowest core.
 #[allow(clippy::too_many_arguments)]
 fn merge_shards(
-    name: &str,
+    name: &'static str,
     out_len: usize,
     results: Vec<LayerResult>,
     placements: &[Vec<(usize, usize)>],
@@ -433,7 +451,7 @@ fn merge_shards(
     use super::bus::{core_busy, Segment};
     use super::metrics::add_stats;
 
-    let mut res = LayerResult { name: name.to_string(), ..Default::default() };
+    let mut res = LayerResult { name, ..Default::default() };
     // only FullCycle produces shard outputs worth merging
     let mut out = if mode == ExecMode::FullCycle { vec![0i16; out_len] } else { Vec::new() };
     let mut segs: Vec<Vec<Segment>> = (0..cores).map(|_| Vec::new()).collect();
@@ -507,8 +525,9 @@ impl LayerOp for ConvLayer {
         w: &[i16],
         b: &[i32],
         opts: ExecOptions,
+        ctx: &mut ExecCtx<'_>,
     ) -> Result<LayerResult, ExecError> {
-        conv_layer(cpu, self, x, w, b, opts)
+        conv_layer(cpu, self, x, w, b, opts, ctx)
     }
 
     fn shard(&self, x: &[i16], policy: ShardPolicy, want: usize) -> Vec<Shard> {
@@ -557,8 +576,9 @@ impl LayerOp for PoolLayer {
         _w: &[i16],
         _b: &[i32],
         opts: ExecOptions,
+        ctx: &mut ExecCtx<'_>,
     ) -> Result<LayerResult, ExecError> {
-        pool_layer(cpu, self, x, opts)
+        pool_layer(cpu, self, x, opts, ctx)
     }
 
     fn shard(&self, x: &[i16], policy: ShardPolicy, want: usize) -> Vec<Shard> {
@@ -608,8 +628,36 @@ impl LayerOp for FcLayer {
         w: &[i16],
         b: &[i32],
         opts: ExecOptions,
+        ctx: &mut ExecCtx<'_>,
     ) -> Result<LayerResult, ExecError> {
-        fc_layer(cpu, self, x, w, b, opts)
+        fc_layer(cpu, self, x, w, b, opts, ctx)
+    }
+
+    /// FC weight residency for pipelined stages: when every
+    /// (neuron-tile, slice) filter block of the 1×1 lowering fits in
+    /// DM *next to* one task's full working map, a stage's repeating
+    /// schedule keeps the whole weight set resident across frames and
+    /// steady-state frames skip the re-stream. Returns the per-frame
+    /// filter+bias stream bytes the executor would charge
+    /// ([`crate::codegen::ConvPlan::filter_stream_bytes`] — the bytes
+    /// saved) plus the elided stream's descriptor count (one per
+    /// (tile, slice) block — their DRAM latency disappears with them),
+    /// or `(0, 0)` when the tiles don't fit: fc6-scale layers never
+    /// fit the 128 KB DM, small heads (e.g. a 256→10 classifier) do.
+    fn resident_param_stream(&self) -> (u64, u64) {
+        let Ok(p) = layout::plan(&self.as_conv()) else { return (0, 0) };
+        // The per-frame stream the executor charges for filters+bias
+        // (the 1×1 map has one band, so each block streams once). The
+        // same number is each staged block's DM footprint — filter
+        // vectors + the 2 FIFO slack vectors + the 32 B bias — so it
+        // doubles as the residency fit check, conservatively on top of
+        // the full one-task DM map (which already holds one block).
+        let bytes =
+            p.n_tiles as u64 * (0..p.m).map(|mi| p.filter_stream_bytes(mi)).sum::<u64>();
+        if p.dm.end as u64 + bytes > crate::mem::DM_BYTES as u64 {
+            return (0, 0);
+        }
+        (bytes, (p.n_tiles * p.m) as u64)
     }
 
     /// Neuron tiles — the oc-tile machinery on the 1×1 lowering. Every
@@ -731,6 +779,31 @@ mod tests {
         assert!(layers[1].op().draw(&mut rng).is_none());
         let (w, b) = layers[2].op().draw(&mut rng).unwrap();
         assert_eq!((w.len(), b.len()), (2560, 10));
+    }
+
+    #[test]
+    fn fc_weight_residency_gates_on_dm_fit() {
+        // a small head's weight tiles fit in DM next to the working
+        // set: residency saves exactly the per-frame filter+bias
+        // stream (the executor's own formula) and its descriptors
+        let small = FcLayer::new("head", 256, 10);
+        let p = layout::plan(&small.as_conv()).unwrap();
+        assert_eq!(p.m, 1, "a 256-feature head must not slice");
+        let bytes: u64 =
+            p.n_tiles as u64 * (0..p.m).map(|mi| p.filter_stream_bytes(mi)).sum::<u64>();
+        assert!(bytes > 0);
+        assert_eq!(
+            LayerOp::resident_param_stream(&small),
+            (bytes, (p.n_tiles * p.m) as u64)
+        );
+        // fc6-scale weights can never sit in the 128 KB DM
+        let fc6 = FcLayer::new("fc6", 9216, 4096);
+        assert_eq!(LayerOp::resident_param_stream(&fc6), (0, 0));
+        // conv and pool layers keep the streaming default
+        let conv = ConvLayer::new("c", 8, 16, 16, 16, 3, 3, 1, 1, 1);
+        assert_eq!(LayerOp::resident_param_stream(&conv), (0, 0));
+        let pool = PoolLayer { name: "p", ic: 16, ih: 8, iw: 8, size: 2, stride: 2 };
+        assert_eq!(LayerOp::resident_param_stream(&pool), (0, 0));
     }
 
     #[test]

@@ -68,8 +68,10 @@ impl Default for CsrFile {
 /// Cycle and activity statistics — the inputs to the utilization metric
 /// (Table II) and the activity-based power model (Fig. 3c). Equality
 /// is field-wise: the energy-composition tests compare aggregated
-/// counter sets directly.
-#[derive(Debug, Default, Clone, PartialEq, Eq)]
+/// counter sets directly. `Copy` (it is a flat block of counters) so
+/// per-run snapshots and the analytic sample caches move it without
+/// allocator or clone churn.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct CoreStats {
     pub cycles: u64,
     pub bundles: u64,
@@ -219,7 +221,9 @@ impl Cpu {
     /// Run `program` to completion (Halt) and return per-run stats.
     /// Cumulative stats accumulate in `self.stats`.
     pub fn run(&mut self, pm: &ProgramMem) -> Result<CoreStats, SimError> {
-        let before = self.stats.clone();
+        // plain copy snapshot: CoreStats is Copy, so the per-run diff
+        // costs two stack copies, not a clone per task invocation
+        let before = self.stats;
         self.reset_for_run();
         let prog = pm.program();
         while !self.halted {
@@ -239,17 +243,20 @@ impl Cpu {
 
     /// Execute the bundle at pc (with stalls), advance pc.
     fn step(&mut self, prog: &Program) -> Result<(), SimError> {
-        let bundle = prog.bundles[self.pc];
+        // borrow, don't copy: the interpreter loop touches every bundle
+        // once per dynamic instruction, and the per-slot ops below are
+        // small `Copy` reads anyway
+        let bundle = &prog.bundles[self.pc];
 
         // ---- hazard scan: how long must issue wait? --------------------
-        let stall = self.issue_stall(&bundle)?;
+        let stall = self.issue_stall(bundle)?;
         for _ in 0..stall {
             self.stats.hazard_stalls += 1;
             self.advance_cycle();
         }
 
         // ---- line-buffer interlock ------------------------------------
-        self.wait_lb_operands(&bundle)?;
+        self.wait_lb_operands(bundle)?;
 
         // ---- execute the three vector slots ----------------------------
         let mut any_mac = false;

@@ -18,7 +18,9 @@
 //!   exactly) with the JAX/Pallas golden model.
 //! * [`codegen`] — the "compiler": generates VLIW kernels for conv /
 //!   pooling / FC layers using the Fig. 2 dataflow (depth slicing,
-//!   row-wise processing, DMA double buffering).
+//!   row-wise processing, DMA double buffering), plus the compile-once
+//!   layer cache ([`codegen::compiled`]): shape-keyed plans/programs/
+//!   analytic profiles and the per-core staging arenas.
 //! * [`model`] — AlexNet / VGG-16 workload tables: the paper's conv
 //!   stacks and the full end-to-end nets (pools interleaved, fc6/fc7/
 //!   fc8 tails with the implicit conv→FC flatten).

@@ -17,6 +17,17 @@ fn gops_per_w(macs: u64, cycles: u64, stats: &convaix::core::CoreStats) -> f64 {
     power::energy_eff_gops_per_w(macs, secs, p.total_mw())
 }
 
+/// Tolerance around the paper's published operating point.
+///
+/// Still the pre-toolchain band: every session so far (PR 2–5
+/// containers) shipped without a Rust toolchain, so the model's actual
+/// operating point has never been *measured* — only re-derived by
+/// review. Once tier-1 runs somewhere, record the measured GOP/s/W and
+/// mW in EXPERIMENTS.md (§ "Energy operating point") and tighten this
+/// toward ±2 % of that pinned value. Tightening blindly would turn an
+/// unmeasured constant into a tripwire for the next session.
+const OPERATING_POINT_TOL: f64 = 0.15;
+
 /// The paper's VGG-16 energy-efficiency operating point: 497 GOP/s/W
 /// at 28 nm / 1 V, conv stack, optimized (8-bit gated) word width.
 #[test]
@@ -32,16 +43,22 @@ fn single_core_vgg_operating_point_matches_paper() {
     let eff = gops_per_w(r.macs(), r.cycles(), &r.stats());
     let rel = (eff - 497.0).abs() / 497.0;
     assert!(
-        rel < 0.15,
+        rel < OPERATING_POINT_TOL,
         "single-core VGG-16 energy efficiency {eff:.0} GOP/s/W drifted {:.1}% from the \
-         paper's 497 GOP/s/W anchor",
-        rel * 100.0
+         paper's 497 GOP/s/W anchor (band: {:.0}% — see EXPERIMENTS.md before tightening)",
+        rel * 100.0,
+        OPERATING_POINT_TOL * 100.0
     );
     // and the power level itself stays near the published 223.9 mW
     let secs = r.cycles() as f64 / convaix::CLOCK_HZ as f64;
     let p = power::network_power(&r.stats(), secs);
     let prel = (p.total_mw() - 223.9).abs() / 223.9;
-    assert!(prel < 0.15, "VGG-16 power {:.1} mW drifted {:.1}%", p.total_mw(), prel * 100.0);
+    assert!(
+        prel < OPERATING_POINT_TOL,
+        "VGG-16 power {:.1} mW drifted {:.1}%",
+        p.total_mw(),
+        prel * 100.0
+    );
 }
 
 /// Multi-core efficiency composes from per-frame `CoreStats`: the

@@ -1,0 +1,213 @@
+//! Compile-once cache contract: a warm [`PlanCache`] is a pure host-
+//! side optimization — outputs, cycle counts, I/O bytes and `CoreStats`
+//! are bit-identical between cold and cached paths, across layer
+//! kinds, execution modes, shard policies, bus models and the serving
+//! entry points. Plus the key discipline: names never key, gate bits
+//! always do.
+
+use std::sync::Arc;
+
+use convaix::coordinator::{
+    BusModel, EngineConfig, ExecMode, LayerResult, NetLayer, PlanCache, PoolMode, ShardPolicy,
+};
+use convaix::model::{ConvLayer, FcLayer, PoolLayer};
+use convaix::util::XorShift;
+
+fn mixed_net() -> Vec<NetLayer> {
+    let mut logits = FcLayer::new("logits", 48, 10);
+    logits.relu = false;
+    vec![
+        NetLayer::Conv(ConvLayer::new("c1", 3, 16, 16, 32, 3, 3, 1, 1, 1)),
+        NetLayer::Pool(PoolLayer { name: "p1", ic: 32, ih: 16, iw: 16, size: 2, stride: 2 }),
+        NetLayer::Conv(ConvLayer::new("c2g", 32, 8, 8, 32, 3, 3, 1, 1, 2)),
+        NetLayer::Fc(FcLayer::new("fc1", 32 * 8 * 8, 48)),
+        NetLayer::Fc(logits),
+    ]
+}
+
+fn assert_layers_eq(a: &[LayerResult], b: &[LayerResult], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: layer count");
+    for (la, lb) in a.iter().zip(b) {
+        assert_eq!(la.out, lb.out, "{what}: layer {} output", la.name);
+        assert_eq!(la.cycles, lb.cycles, "{what}: layer {} cycles", la.name);
+        assert_eq!(la.compute_cycles, lb.compute_cycles, "{what}: layer {} compute", la.name);
+        assert_eq!(la.dma_cycles, lb.dma_cycles, "{what}: layer {} dma", la.name);
+        assert_eq!(la.macs, lb.macs, "{what}: layer {} macs", la.name);
+        assert_eq!(la.io_in, lb.io_in, "{what}: layer {} io_in", la.name);
+        assert_eq!(la.io_out, lb.io_out, "{what}: layer {} io_out", la.name);
+        assert_eq!(la.stats, lb.stats, "{what}: layer {} stats", la.name);
+        assert_eq!(la.core_cycles, lb.core_cycles, "{what}: layer {} core cycles", la.name);
+    }
+}
+
+/// Cold vs warm vs disabled-cache network runs agree to the last
+/// counter, in both execution modes and at both gate settings.
+#[test]
+fn cached_network_runs_are_bit_identical_to_cold() {
+    let layers = mixed_net();
+    let mut rng = XorShift::new(404);
+    let input = rng.i16_vec(3 * 16 * 16, -2000, 2000);
+    for mode in [ExecMode::FullCycle, ExecMode::TileAnalytic] {
+        for gate in [16u8, 8] {
+            let cfg = || {
+                EngineConfig::new().mode(mode).gate_bits(gate).seed(9).ext_capacity(1 << 23)
+            };
+            // one engine, two runs: run 1 compiles (cold), run 2 hits
+            let mut cached = cfg().build();
+            let cold = cached.run_network("net", &layers, &input).unwrap();
+            let warm = cached.run_network("net", &layers, &input).unwrap();
+            // and a cache-disabled engine recompiling every call
+            let mut off = cfg().plan_cache(false).build();
+            let fresh = off.run_network("net", &layers, &input).unwrap();
+            let what = format!("{mode:?}/gate{gate}");
+            assert_layers_eq(&cold.layers, &warm.layers, &format!("{what} warm-vs-cold"));
+            assert_layers_eq(&cold.layers, &fresh.layers, &format!("{what} off-vs-cold"));
+            let cs = cached.cache_stats();
+            assert!(cs.hits > 0, "{what}: second run must hit the cache");
+            assert!(off.cache_stats().hits == 0, "{what}: disabled cache must never hit");
+        }
+    }
+}
+
+/// Sharded execution: every policy × bus × core count reuses the same
+/// cache entries (shard sub-layers are shapes too) and stays
+/// bit-identical to a cache-disabled engine of the same config.
+#[test]
+fn cached_sharded_runs_match_uncached_across_policies_and_buses() {
+    let layers = mixed_net();
+    let mut rng = XorShift::new(505);
+    let input = rng.i16_vec(3 * 16 * 16, -2000, 2000);
+    for policy in [ShardPolicy::OcTile, ShardPolicy::RowBand, ShardPolicy::Auto] {
+        for bus in [BusModel::Partitioned, BusModel::Shared] {
+            for cores in [2usize, 4] {
+                let cfg = || {
+                    EngineConfig::new()
+                        .cores(cores)
+                        .shard(policy)
+                        .bus(bus)
+                        .seed(31)
+                        .ext_capacity(1 << 23)
+                };
+                let mut cached = cfg().build();
+                let r1 = cached.run_network("net", &layers, &input).unwrap();
+                let r2 = cached.run_network("net", &layers, &input).unwrap();
+                let mut off = cfg().plan_cache(false).build();
+                let rf = off.run_network("net", &layers, &input).unwrap();
+                let what = format!("{policy:?}/{bus:?}/{cores}c");
+                assert_layers_eq(&r1.layers, &r2.layers, &format!("{what} warm"));
+                assert_layers_eq(&r1.layers, &rf.layers, &format!("{what} off"));
+            }
+        }
+    }
+}
+
+/// The serving paths: batched fan-out and pipelined streaming give the
+/// same frames, cycles and stage/core accounting with and without the
+/// cache (the cache is hit hardest exactly here — per frame × core ×
+/// stage).
+#[test]
+fn cached_batched_and_streaming_match_uncached() {
+    let layers = mixed_net();
+    let mut rng = XorShift::new(606);
+    let inputs: Vec<Vec<i16>> =
+        (0..5).map(|_| rng.i16_vec(3 * 16 * 16, -2000, 2000)).collect();
+    let cfg = || {
+        EngineConfig::new()
+            .cores(3)
+            .batch(5)
+            .bus(BusModel::Shared)
+            .seed(77)
+            .ext_capacity(1 << 23)
+    };
+
+    let mut cached = cfg().build();
+    let bc = cached.run_batched("net", &layers, &inputs).unwrap();
+    let mut off = cfg().plan_cache(false).build();
+    let bo = off.run_batched("net", &layers, &inputs).unwrap();
+    assert_eq!(bc.outputs, bo.outputs, "batched outputs");
+    assert_eq!(bc.core_cycles, bo.core_cycles, "batched occupied cycles");
+    assert_eq!(bc.core_useful_cycles, bo.core_useful_cycles, "batched useful cycles");
+    for (fc, fo) in bc.frames.iter().zip(&bo.frames) {
+        assert_layers_eq(&fc.layers, &fo.layers, "batched frame");
+    }
+    assert!(cached.cache_stats().hits > 0, "a 5-frame batch must hit per-frame");
+
+    let mut cached = cfg().pool_mode(PoolMode::Pipelined).build();
+    let pc = cached.run_streaming("net", &layers, &inputs).unwrap();
+    let mut off = cfg().pool_mode(PoolMode::Pipelined).plan_cache(false).build();
+    let po = off.run_streaming("net", &layers, &inputs).unwrap();
+    assert_eq!(pc.outputs, po.outputs, "streamed outputs");
+    assert_eq!(pc.stages, po.stages, "stage cut");
+    assert_eq!(pc.stage_cycles, po.stage_cycles, "stage cycles");
+    assert_eq!(pc.stage_useful_cycles, po.stage_useful_cycles, "stage useful cycles");
+    assert_eq!(pc.steady_interval_cycles, po.steady_interval_cycles, "steady interval");
+    assert_eq!(pc.fill_cycles, po.fill_cycles, "fill");
+    assert_eq!(pc.makespan_cycles, po.makespan_cycles, "makespan");
+    for (fc, fo) in pc.frames.iter().zip(&po.frames) {
+        assert_layers_eq(&fc.layers, &fo.layers, "streamed frame");
+    }
+}
+
+/// Key discipline at the engine level: same shape under a different
+/// name shares an entry; the same shape at different gate bits must
+/// NOT collide (the analytic profile's gated-op counter differs).
+#[test]
+fn cache_keys_collide_on_shape_not_name_and_split_on_gate_bits() {
+    let cache = Arc::new(PlanCache::new());
+    let mut rng = XorShift::new(808);
+    let x = rng.i16_vec(4 * 10 * 10, -1000, 1000);
+    let w = rng.i16_vec(16 * 4 * 9, -128, 128);
+    let b = rng.i32_vec(16, -500, 500);
+
+    let run = |cache: &Arc<PlanCache>, name: &'static str, gate: u8| {
+        let cfg = EngineConfig::new().gate_bits(gate).ext_capacity(1 << 22);
+        let mut engine =
+            convaix::coordinator::Engine::new_with_cache(cfg, cache.clone());
+        let l = ConvLayer::new(name, 4, 10, 10, 16, 3, 3, 1, 1, 1);
+        engine.run_conv_layer(&l, &x, &w, &b).unwrap()
+    };
+
+    let r16a = run(&cache, "alpha", 16);
+    let after_first = cache.stats();
+    assert_eq!(after_first.misses, 1, "first shape compiles once");
+
+    // same shape, different name: must hit
+    let r16b = run(&cache, "beta", 16);
+    let after_alias = cache.stats();
+    assert_eq!(after_alias.misses, 1, "renamed shape must not recompile");
+    assert!(after_alias.hits >= 1);
+    assert_eq!(r16a.out, r16b.out);
+    assert_eq!(r16a.cycles, r16b.cycles);
+
+    // same shape, different gate bits: must miss (and change results)
+    let r8 = run(&cache, "alpha", 8);
+    let after_gate = cache.stats();
+    assert_eq!(after_gate.misses, 2, "gate bits are part of the key");
+    assert_ne!(r8.out, r16a.out, "gating must actually change the arithmetic");
+    assert_eq!(after_gate.conv_entries, 2);
+}
+
+/// `Engine::new_with_cache` shares compiled layers across engines: the
+/// second engine starts warm.
+#[test]
+fn engines_can_share_one_plan_cache() {
+    let layers = mixed_net();
+    let mut rng = XorShift::new(909);
+    let input = rng.i16_vec(3 * 16 * 16, -2000, 2000);
+    let cache = Arc::new(PlanCache::new());
+    let cfg = || EngineConfig::new().seed(3).ext_capacity(1 << 23);
+
+    let mut first = convaix::coordinator::Engine::new_with_cache(cfg(), cache.clone());
+    let r1 = first.run_network("net", &layers, &input).unwrap();
+    let misses_after_first = cache.stats().misses;
+    assert!(misses_after_first > 0);
+
+    let mut second = convaix::coordinator::Engine::new_with_cache(cfg(), cache.clone());
+    let r2 = second.run_network("net", &layers, &input).unwrap();
+    assert_eq!(
+        cache.stats().misses,
+        misses_after_first,
+        "a shared cache must leave the second engine fully warm"
+    );
+    assert_layers_eq(&r1.layers, &r2.layers, "shared-cache engines");
+}
