@@ -18,7 +18,9 @@ use std::collections::BTreeMap;
 use std::time::Instant;
 
 use convaix::cli::report;
-use convaix::coordinator::{BusModel, EngineConfig, ExecMode, NetLayer, PoolMode, ShardPolicy};
+use convaix::coordinator::{
+    BusModel, EngineConfig, ExecMode, NetLayer, PoolMode, ShardPolicy, StageCores,
+};
 use convaix::model::{alexnet_conv, alexnet_full, conv_stack, vgg16_conv, vgg16_full};
 use convaix::util::json::Json;
 use convaix::util::table::Table;
@@ -276,6 +278,80 @@ fn main() {
         vgg_steady_fps / vgg_fanout_fps.max(1e-9)
     );
 
+    // --- partition duel: unequal core groups vs 1-per-stage vs fan-out -------
+    // VGG-16-full on 4 cores, shared bus: the partition-DP (auto) is
+    // free to give a fat conv stage a multi-core group and leave the
+    // weight-DMA-bound FC tail on one core; per-stage is the legacy
+    // one-core-per-stage cut; frame fan-out is the non-pipelined
+    // baseline. Outputs must be bit-identical across the schedules;
+    // the acceptance target is auto's steady interval <= per-stage's.
+    let full_net = vgg16_full();
+    let frame = vec![0i16; full_net[0].op().in_elems()];
+    let inputs: Vec<Vec<i16>> = (0..STREAM).map(|_| frame.clone()).collect();
+    let pipe_with = |sc: StageCores| {
+        let mut engine = cfg_base()
+            .cores(4)
+            .batch(STREAM)
+            .pool_mode(PoolMode::Pipelined)
+            .bus(BusModel::Shared)
+            .stage_cores(sc)
+            .build();
+        engine.run_streaming("VGG-16-full", &full_net, &inputs).expect("partition duel")
+    };
+    let auto = pipe_with(StageCores::Auto);
+    let per_stage = pipe_with(StageCores::PerStage);
+    let mut fan = cfg_base().cores(4).batch(STREAM).bus(BusModel::Shared).build();
+    let fo = fan.run_batched("VGG-16-full", &full_net, &inputs).expect("fan-out");
+    assert_eq!(
+        auto.outputs, per_stage.outputs,
+        "partition-DP changed the computed outputs"
+    );
+
+    let mut t = Table::new(
+        "VGG-16-full, 5 frames on 4 cores, shared bus: partition duel",
+        &["Schedule", "Stage plan", "Steady f/s", "Steady interval", "Makespan cyc"],
+    );
+    let plan_of = |sc: &[usize]| sc.iter().map(ToString::to_string).collect::<Vec<_>>().join("+");
+    let mut duel_rows = Vec::new();
+    for (label, pr) in [("auto (partition-DP)", &auto), ("per-stage (legacy)", &per_stage)] {
+        t.row(&[
+            label.into(),
+            plan_of(&pr.stage_cores),
+            format!("{:.1}", pr.steady_state_fps()),
+            pr.steady_interval_cycles.to_string(),
+            pr.makespan_cycles.to_string(),
+        ]);
+        duel_rows.push(obj(vec![
+            ("schedule", Json::Str(label.into())),
+            ("stage_plan", Json::Arr(pr.stage_cores.iter().map(|&k| num(k as f64)).collect())),
+            ("steady_fps", num(pr.steady_state_fps())),
+            ("steady_interval_cycles", num(pr.steady_interval_cycles as f64)),
+            ("makespan_cycles", num(pr.makespan_cycles as f64)),
+        ]));
+    }
+    t.row(&[
+        "frame fan-out".into(),
+        "-".into(),
+        format!("{:.1}", fo.throughput_fps()),
+        "-".into(),
+        fo.makespan_cycles().to_string(),
+    ]);
+    duel_rows.push(obj(vec![
+        ("schedule", Json::Str("frame fan-out".into())),
+        ("fanout_fps", num(fo.throughput_fps())),
+        ("makespan_cycles", num(fo.makespan_cycles() as f64)),
+    ]));
+    t.print();
+    dump.insert("partition_duel_vgg_full_4c".into(), Json::Arr(duel_rows));
+    println!(
+        "VGG-16-full stream of {STREAM} @ 4 cores: auto partition {} steady interval \
+         {} vs per-stage {} ({:.2}x)\n",
+        plan_of(&auto.stage_cores),
+        auto.steady_interval_cycles,
+        per_stage.steady_interval_cycles,
+        per_stage.steady_interval_cycles as f64 / auto.steady_interval_cycles.max(1) as f64
+    );
+
     // Machine-readable trajectory dump for cross-PR tracking. Written
     // BEFORE the hard perf asserts below: a regression run is exactly
     // the one whose numbers must not be lost (nor masked by a stale
@@ -295,6 +371,14 @@ fn main() {
             "pipelined steady state ({vgg_steady_fps:.1} f/s) must match or beat frame \
              fan-out ({vgg_fanout_fps:.1} f/s) on the VGG-16 stream of {STREAM} at 4 cores \
              (set MULTICORE_NO_ASSERT=1 to report without asserting)"
+        );
+        assert!(
+            auto.steady_interval_cycles <= per_stage.steady_interval_cycles,
+            "partition-DP steady interval ({}) must not lose to the 1-core-per-stage cut \
+             ({}) on VGG-16-full at 4 cores \
+             (set MULTICORE_NO_ASSERT=1 to report without asserting)",
+            auto.steady_interval_cycles,
+            per_stage.steady_interval_cycles,
         );
     }
 

@@ -5,7 +5,7 @@ pub mod report;
 
 use anyhow::Result;
 
-use crate::coordinator::{BusModel, EngineConfig, PoolMode, ShardPolicy};
+use crate::coordinator::{BusModel, EngineConfig, PoolMode, ShardPolicy, StageCores};
 
 const USAGE: &str = "\
 convaix — ConvAix ASIP reproduction (ISCAS'19)
@@ -22,6 +22,13 @@ COMMANDS:
                        alexnet | vgg16           conv stacks (Table II)
                        alexnet-full | vgg16-full end-to-end nets with the
                        pools and fc6/fc7/fc8 tails (per-kind report rows)
+  run-multi <t>...   multi-tenant serving: each positional is one tenant
+                     as net[:cores[:gate]] (e.g. vgg16-full:3:8
+                     alexnet-full:1:16); the tenants stream
+                     concurrently, compete for ONE shared external bus,
+                     and share the compile-once plan cache. --batch sets
+                     the frames per tenant; --stage-cores applies to
+                     every tenant
   golden             bit-exact check: simulator vs JAX/Pallas PJRT artifacts
   asm <file.cvx>     assemble a .cvx file, report size, disassemble back
 
@@ -43,6 +50,10 @@ OPTIONS:
                      oc-tile (default) | row-band | auto
   --bus <model>      external bandwidth model for --cores > 1:
                      partitioned (default) | shared
+  --stage-cores <p>  stage-to-core mapping for --pipeline:
+                     per-stage (default, one core per stage) | auto
+                     (partition-DP: stages may own unequal core groups
+                     and shard internally) | an explicit plan like 1,2,1
   --no-cache         disable the compile-once layer cache (plans, task
                      programs and analytic profiles are then re-derived
                      on every call — the pre-0.5 behavior; results are
@@ -61,6 +72,7 @@ pub struct Args {
     pub pipeline: bool,
     pub shard: ShardPolicy,
     pub bus: BusModel,
+    pub stage_cores: StageCores,
     pub no_cache: bool,
 }
 
@@ -77,6 +89,7 @@ impl Args {
             pipeline: false,
             shard: ShardPolicy::OcTile,
             bus: BusModel::Partitioned,
+            stage_cores: StageCores::PerStage,
             no_cache: false,
         };
         let mut it = argv.iter().skip(1).peekable();
@@ -137,6 +150,13 @@ impl Args {
                         .parse()
                         .map_err(|e: String| anyhow::anyhow!("{e}"))?;
                 }
+                "--stage-cores" => {
+                    a.stage_cores = it
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("--stage-cores needs a value"))?
+                        .parse()
+                        .map_err(|e: String| anyhow::anyhow!("{e}"))?;
+                }
                 "-h" | "--help" => {
                     a.command = "help".into();
                     return Ok(a);
@@ -166,6 +186,7 @@ impl Args {
             .pool_mode(if self.pipeline { PoolMode::Pipelined } else { PoolMode::FanOut })
             .shard(self.shard)
             .bus(self.bus)
+            .stage_cores(self.stage_cores.clone())
             .plan_cache(!self.no_cache)
     }
 }
@@ -213,6 +234,16 @@ pub fn main_with(argv: &[String]) -> Result<i32> {
             } else {
                 print!("{}", report::run_net(net, &cfg)?);
             }
+            Ok(0)
+        }
+        "run-multi" => {
+            // default episode: the two full nets contending for one bus
+            let tenants: Vec<String> = if args.positional.is_empty() {
+                vec!["vgg16-full:2".into(), "alexnet-full:1".into()]
+            } else {
+                args.positional.clone()
+            };
+            print!("{}", report::run_multi(&tenants, &args)?);
             Ok(0)
         }
         "golden" => {

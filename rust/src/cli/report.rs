@@ -3,11 +3,14 @@
 //! Everything executes through [`Engine`]; the run shape (cores, batch,
 //! shard policy, bus model, mode) comes in as an [`EngineConfig`].
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::baselines::published;
 use crate::coordinator::{
-    BatchedResult, Engine, EngineConfig, NetLayer, NetworkResult, PipelineResult,
+    run_multi_streaming, BatchedResult, BusModel, Engine, EngineConfig, NetLayer, NetworkResult,
+    PipelineResult, PlanCache, PoolMode, TenantRun,
 };
 use crate::energy::{area, power};
 use crate::model::{alexnet_conv, alexnet_full, conv_stack, vgg16_conv, vgg16_full};
@@ -170,7 +173,10 @@ pub fn streaming(net: &str, cfg: &EngineConfig) -> Result<String> {
 
 /// Render a [`PipelineResult`] as the per-stage table + summary lines.
 /// `Useful frac` is private-bandwidth stage time over the stream
-/// makespan — the occupied-vs-useful split, never above 1.0.
+/// makespan — the occupied-vs-useful split, never above 1.0. The
+/// `Cores` column shows each stage's core group: `1` for legacy
+/// one-core stages, `k (policy)` when the stage shards its layers
+/// across a k-core group.
 pub fn streaming_report(pr: &PipelineResult, layers: &[NetLayer], cfg: &EngineConfig) -> String {
     let mut t = Table::new(
         &format!(
@@ -180,7 +186,7 @@ pub fn streaming_report(pr: &PipelineResult, layers: &[NetLayer], cfg: &EngineCo
             pr.stages.len(),
             pr.bus,
         ),
-        &["Stage", "Layers", "Occupied cycles", "Useful frac"],
+        &["Stage", "Layers", "Cores", "Occupied cycles", "Useful frac"],
     );
     let util = pr.stage_utilization();
     for (s, &(l0, l1)) in pr.stages.iter().enumerate() {
@@ -189,9 +195,16 @@ pub fn streaming_report(pr: &PipelineResult, layers: &[NetLayer], cfg: &EngineCo
         } else {
             format!("{}..{}", layers[l0].name(), layers[l1 - 1].name())
         };
+        let k = pr.stage_cores.get(s).copied().unwrap_or(1);
+        let group = if k == 1 {
+            "1".to_string()
+        } else {
+            format!("{k} ({:?})", cfg.shard)
+        };
         t.row(&[
             s.to_string(),
             span,
+            group,
             pr.stage_cycles[s].to_string(),
             format!("{:.3}", util[s]),
         ]);
@@ -213,6 +226,128 @@ pub fn streaming_report(pr: &PipelineResult, layers: &[NetLayer], cfg: &EngineCo
         cfg.cores,
     ));
     s
+}
+
+/// `convaix run-multi <net[:cores[:gate]]>...` — multi-tenant serving.
+/// Every tenant pipelines its own network over its own engine's cores
+/// (partitioned per `--stage-cores`), all tenants contend for ONE
+/// Shared external bus, and all engines reuse one compile-once plan
+/// cache. Per-tenant rows are priced under the combined bus divisor,
+/// so a tenant's makespan here is >= its isolated `run --pipeline`
+/// makespan.
+pub fn run_multi(tenants: &[String], args: &super::Args) -> Result<String> {
+    struct Spec {
+        name: String,
+        layers: Vec<NetLayer>,
+        inputs: Vec<Vec<i16>>,
+        cores: usize,
+        gate: u8,
+    }
+    let mut specs = Vec::new();
+    for (i, spec) in tenants.iter().enumerate() {
+        let mut parts = spec.split(':');
+        let net = parts.next().unwrap_or_default();
+        let layers = net_layers(net)?;
+        let cores = match parts.next() {
+            Some(c) => c
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("tenant `{spec}`: bad core count `{c}`"))?,
+            None => 1,
+        };
+        if cores == 0 {
+            anyhow::bail!("tenant `{spec}`: core count must be >= 1");
+        }
+        let gate = match parts.next() {
+            Some(g) => g
+                .parse::<u8>()
+                .map_err(|_| anyhow::anyhow!("tenant `{spec}`: bad gate bits `{g}`"))?,
+            None => args.gate_bits,
+        };
+        if let Some(junk) = parts.next() {
+            anyhow::bail!("tenant `{spec}`: trailing `:{junk}` (want net[:cores[:gate]])");
+        }
+        let in_elems = layers[0].op().in_elems();
+        let mut rng = XorShift::new(0xBA7C4 + i as u64);
+        let inputs: Vec<Vec<i16>> =
+            (0..args.batch).map(|_| rng.i16_vec(in_elems, -2000, 2000)).collect();
+        specs.push(Spec { name: net.to_string(), layers, inputs, cores, gate });
+    }
+
+    // one compile-once cache for the whole zoo: tenants serving the
+    // same shapes reuse each other's compiled layers
+    let cache = Arc::new(if args.no_cache { PlanCache::disabled() } else { PlanCache::new() });
+    let mode = if args.full {
+        crate::coordinator::ExecMode::FullCycle
+    } else {
+        crate::coordinator::ExecMode::TileAnalytic
+    };
+    let mut engines: Vec<Engine> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, sp)| {
+            let cfg = EngineConfig::new()
+                .mode(mode)
+                .gate_bits(sp.gate)
+                .cores(sp.cores)
+                .batch(args.batch)
+                .pool_mode(PoolMode::Pipelined)
+                .shard(args.shard)
+                // run-multi IS the shared-bus story; --bus is ignored
+                .bus(BusModel::Shared)
+                .stage_cores(args.stage_cores.clone())
+                .seed(0xC0DE + i as u64);
+            Engine::new_with_cache(cfg, cache.clone())
+        })
+        .collect();
+    let mut runs: Vec<TenantRun<'_>> = engines
+        .iter_mut()
+        .zip(&specs)
+        .map(|(engine, sp)| TenantRun {
+            engine,
+            name: &sp.name,
+            layers: &sp.layers,
+            inputs: &sp.inputs,
+        })
+        .collect();
+    let mt = run_multi_streaming(&mut runs).map_err(|e| anyhow::anyhow!("{e}"))?;
+    drop(runs);
+
+    let mut t = Table::new(
+        &format!(
+            "multi-tenant serving: {} tenant(s) over {} core(s), one Shared bus \
+             (combined divisor {}, {} DMA-bound core(s) at the fixed point)",
+            mt.tenants.len(),
+            mt.total_cores(),
+            mt.divisor,
+            mt.contenders,
+        ),
+        &["Tenant", "Net", "Cores", "Stage plan", "Gate", "Steady f/s", "Makespan ms", "Bus share"],
+    );
+    let shares = mt.bus_shares();
+    for (i, pr) in mt.tenants.iter().enumerate() {
+        let plan =
+            pr.stage_cores.iter().map(ToString::to_string).collect::<Vec<_>>().join("+");
+        t.row(&[
+            i.to_string(),
+            pr.name.clone(),
+            mt.tenant_cores[i].to_string(),
+            plan,
+            specs[i].gate.to_string(),
+            format!("{:.1}", pr.steady_state_fps()),
+            format!("{:.2}", pr.makespan_cycles as f64 / crate::CLOCK_HZ as f64 * 1e3),
+            format!("{:.1} %", shares[i] * 100.0),
+        ]);
+    }
+    let mut s = t.render();
+    s.push_str(&format!(
+        "aggregate {:.1} frames/s steady across tenants; episode ends at {:.2} ms \
+         (slowest tenant's stream of {} frame(s))\n",
+        mt.aggregate_steady_fps(),
+        mt.makespan_cycles() as f64 / crate::CLOCK_HZ as f64 * 1e3,
+        args.batch,
+    ));
+    s.push_str(&cache_line(&engines[0]));
+    Ok(s)
 }
 
 fn net_layers(net: &str) -> Result<Vec<NetLayer>> {

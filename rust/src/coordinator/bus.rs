@@ -118,6 +118,56 @@ pub(crate) fn stage_first_pass(segs: &[Segment], d: u64) -> u64 {
     segs.iter().map(|s| s.busy(d)).sum()
 }
 
+/// Steady-state initiation interval of a **k-core** pipeline-stage
+/// frame when `d` cores contend for the bus. `layers` is the stage's
+/// per-layer shard list: each shard is `(group-relative core slot,
+/// Segment)`. Every core in the group repeats *its own* shard schedule
+/// each frame, so the cross-layer overlap of [`stage_interval`]
+/// applies per core to that core's shard timeline; the group's
+/// interval is its slowest core's. With one core (every shard on slot
+/// 0) this is exactly `stage_interval` over the stage's segments — the
+/// all-groups-of-1 partition prices bit-identically to the legacy
+/// one-core-per-stage pipeline.
+pub(crate) fn group_interval(layers: &[Vec<(usize, Segment)>], k: usize, d: u64) -> u64 {
+    (0..k.max(1))
+        .map(|c| {
+            let segs: Vec<Segment> = layers
+                .iter()
+                .flatten()
+                .filter(|(slot, _)| *slot == c)
+                .map(|(_, s)| *s)
+                .collect();
+            stage_interval(&segs, d)
+        })
+        .max()
+        .unwrap_or(0)
+}
+
+/// First pass of a **k-core** stage frame when `d` cores contend: the
+/// group's cores run each layer's shards concurrently and re-join at
+/// the layer boundary (the merge the sharded runner performs — the
+/// next layer's input is the merged output, a true dependency), so
+/// layers chain at the slowest core's busy time. With one core this is
+/// exactly [`stage_first_pass`]. Like the first pass of a 1-core
+/// stage, there is no repeating schedule to prefetch against yet.
+pub(crate) fn group_first_pass(layers: &[Vec<(usize, Segment)>], k: usize, d: u64) -> u64 {
+    layers
+        .iter()
+        .map(|shards| {
+            (0..k.max(1))
+                .map(|c| {
+                    shards
+                        .iter()
+                        .filter(|(slot, _)| *slot == c)
+                        .map(|(_, s)| s.busy(d))
+                        .sum::<u64>()
+                })
+                .max()
+                .unwrap_or(0)
+        })
+        .sum()
+}
+
 /// Per-core cycle accounting under a bus model.
 pub(crate) struct BusAccount {
     /// Occupied cycles per core (includes shared-bus wait).
@@ -131,7 +181,7 @@ pub(crate) struct BusAccount {
 }
 
 /// Is this core's timeline dominated by DMA when `d` cores contend?
-fn dma_bound(segs: &[Segment], d: u64) -> bool {
+pub(crate) fn dma_bound(segs: &[Segment], d: u64) -> bool {
     if segs.is_empty() {
         return false;
     }
@@ -366,6 +416,47 @@ mod tests {
         // residency never lifts a segment below its compute floor
         let all_resident = seg(500, 0);
         assert_eq!(stage_interval(&[all_resident], 1), 500);
+    }
+
+    #[test]
+    fn group_pricing_degenerates_to_single_core_stage() {
+        // one core slot: group pricing must equal the legacy stage
+        // pricing exactly, segment for segment
+        let a = seg(1000, 10 * E);
+        let b = seg(50, 600 * E);
+        let layers = vec![vec![(0usize, a)], vec![(0usize, b)]];
+        for d in [1u64, 3] {
+            assert_eq!(group_interval(&layers, 1, d), stage_interval(&[a, b], d));
+            assert_eq!(group_first_pass(&layers, 1, d), stage_first_pass(&[a, b], d));
+        }
+    }
+
+    #[test]
+    fn group_pricing_takes_the_slowest_core() {
+        // one layer split into two shards on two cores: the layer
+        // barrier means the stage runs at the slower shard's pace,
+        // and the interval view is per-core (each core repeats only
+        // its own shard schedule)
+        let fast = seg(100, 10 * E);
+        let slow = seg(400, 10 * E);
+        let layers = vec![vec![(0usize, fast), (1usize, slow)]];
+        assert_eq!(group_first_pass(&layers, 2, 1), 400);
+        assert_eq!(group_interval(&layers, 2, 1), 400);
+        // two layers, shards alternating cores: per-core overlap sums
+        // each core's own compute/dma streams
+        let layers2 = vec![
+            vec![(0usize, seg(1000, 10 * E)), (1usize, seg(900, 10 * E))],
+            vec![(0usize, seg(50, 600 * E)), (1usize, seg(60, 500 * E))],
+        ];
+        // core 0: max(1050, 610) = 1050; core 1: max(960, 510) = 960
+        assert_eq!(group_interval(&layers2, 2, 1), 1050);
+        // layer barriers: max(1000, 900) + max(600, 510) = 1600
+        assert_eq!(group_first_pass(&layers2, 2, 1), 1000 + 600);
+        // a core with no shards in the stage contributes nothing
+        assert_eq!(group_interval(&layers2, 3, 1), 1050);
+        // contention scales only the transfer terms
+        assert!(group_interval(&layers2, 2, 4) > group_interval(&layers2, 2, 1));
+        assert!(group_first_pass(&layers2, 2, 1) >= group_interval(&layers2, 2, 1));
     }
 
     #[test]

@@ -51,7 +51,10 @@
 //!   throughput when the batch divides evenly by the core count.
 //! * **`Pipelined`** ([`Engine::run_streaming`]) — the network is cut
 //!   into contiguous layer *stages* balanced by the predicted-makespan
-//!   cost model, one core per stage; frame `t` runs on stage `i` while
+//!   cost model, each stage owning a core *group* per [`StageCores`]
+//!   (one core per stage by default; `Auto` runs a partition-DP that
+//!   may hand a fat conv stage several cores and shard its layers
+//!   across them); frame `t` runs on stage `i` while
 //!   frame `t−1` occupies stage `i+1` (the resource-partitioning
 //!   regime of Shen et al., arXiv:1607.00064). Stage-boundary
 //!   activations cross the external bus inside the existing per-layer
@@ -68,9 +71,11 @@ use crate::codegen::compiled::{CacheStats, PlanCache, Scratch};
 use crate::core::Cpu;
 use crate::model::{ConvLayer, FcLayer, NetLayer, PoolLayer};
 
-use super::bus::{core_busy, shared_divisor, stage_first_pass, stage_interval, BusModel, Segment};
+use super::bus::{
+    core_busy, dma_bound, group_first_pass, group_interval, shared_divisor, BusModel, Segment,
+};
 use super::executor::{ExecCtx, ExecError, ExecMode, ExecOptions};
-use super::metrics::{add_stats, LayerResult, NetworkResult, PipelineResult};
+use super::metrics::{add_stats, LayerResult, MultiTenantResult, NetworkResult, PipelineResult};
 use super::ops::Shard;
 
 /// How a layer is split across the pool's cores.
@@ -122,6 +127,52 @@ impl std::str::FromStr for PoolMode {
     }
 }
 
+/// How [`PoolMode::Pipelined`] streaming maps pipeline stages onto the
+/// pool's cores.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum StageCores {
+    /// One core per stage (the legacy pipeline, and the default): the
+    /// network is cut into `min(cores, layers)` contiguous stages by
+    /// the bottleneck DP.
+    #[default]
+    PerStage,
+    /// Partition-DP over (stage cut, core count) pairs: stages may own
+    /// **unequal core groups** (a fat conv stage takes 2–3 cores and
+    /// shards its layers across them per the run's
+    /// [`ShardPolicy`]; a weight-DMA-bound FC tail keeps 1), chosen to
+    /// minimize the predicted bottleneck interval over every feasible
+    /// (cut, core-count) assignment — the resource-partitioning regime
+    /// of Shen et al. (arXiv:1607.00064) applied to the layer
+    /// pipeline. An all-groups-of-1 outcome is bit-identical to
+    /// [`StageCores::PerStage`].
+    Auto,
+    /// Explicit per-stage core counts, e.g. `vec![1, 2, 1]` = three
+    /// stages, the middle one sharding across two cores. The layer
+    /// cuts are still chosen by the bottleneck DP *given* the group
+    /// sizes; the counts must sum to at most the engine's cores.
+    Fixed(Vec<usize>),
+}
+
+impl std::str::FromStr for StageCores {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "auto" => Ok(Self::Auto),
+            "per-stage" | "one" => Ok(Self::PerStage),
+            list => {
+                let plan: Result<Vec<usize>, _> =
+                    list.split(',').map(|p| p.trim().parse::<usize>()).collect();
+                match plan {
+                    Ok(p) if !p.is_empty() && p.iter().all(|&k| k >= 1) => Ok(Self::Fixed(p)),
+                    _ => Err(format!(
+                        "unknown stage-cores plan `{list}` (auto | per-stage | k1,k2,… with every k >= 1)"
+                    )),
+                }
+            }
+        }
+    }
+}
+
 /// Builder for an [`Engine`]. Every knob has the seed-compatible
 /// default, so `EngineConfig::new().build()` is the paper's single-core
 /// full-cycle setup.
@@ -154,6 +205,10 @@ pub struct EngineConfig {
     /// pipelining. Advisory for the `run_*` entry points (each has a
     /// fixed layout); the CLI and report tooling dispatch on it.
     pub pool_mode: PoolMode,
+    /// Stage-to-core mapping for [`Engine::run_streaming`]: the legacy
+    /// one-core-per-stage pipeline (default), the partition-DP over
+    /// unequal core groups, or an explicit per-stage plan.
+    pub stage_cores: StageCores,
     /// External-bandwidth model for multi-core runs.
     pub bus: BusModel,
     /// Cycle simulation fidelity.
@@ -181,6 +236,7 @@ impl Default for EngineConfig {
             batch: 1,
             shard: ShardPolicy::OcTile,
             pool_mode: PoolMode::FanOut,
+            stage_cores: StageCores::PerStage,
             bus: BusModel::Partitioned,
             mode: ExecMode::FullCycle,
             gate_bits: 16,
@@ -213,6 +269,13 @@ impl EngineConfig {
 
     pub fn pool_mode(mut self, m: PoolMode) -> Self {
         self.pool_mode = m;
+        self
+    }
+
+    /// Stage-to-core mapping for pipelined streaming (see
+    /// [`StageCores`]).
+    pub fn stage_cores(mut self, sc: StageCores) -> Self {
+        self.stage_cores = sc;
         self
     }
 
@@ -401,13 +464,16 @@ impl Engine {
     }
 
     /// Layer-pipelined streaming ([`PoolMode::Pipelined`]): cut the
-    /// network into `min(cores, layers)` contiguous stages balanced by
-    /// the predicted-makespan cost model, one core per stage, and
-    /// stream `inputs` through them — frame `t` on stage `i` while
-    /// frame `t−1` occupies stage `i+1`. Layer outputs are
-    /// bit-identical to [`Engine::run_network`] per frame; the result
-    /// reports steady-state throughput, fill/drain latency and the
-    /// per-stage occupied-vs-useful cycle split.
+    /// network into contiguous stages balanced by the predicted-
+    /// makespan cost model, give each stage a core *group* per the
+    /// config's [`StageCores`] (one core per stage by default; the
+    /// partition-DP may assign unequal groups, inside which layers
+    /// shard per the run's [`ShardPolicy`]), and stream `inputs`
+    /// through them — frame `t` on stage `i` while frame `t−1`
+    /// occupies stage `i+1`. Layer outputs are bit-identical to
+    /// [`Engine::run_network`] per frame for every partition; the
+    /// result reports steady-state throughput, fill/drain latency and
+    /// the per-stage occupied-vs-useful cycle split.
     pub fn run_streaming(
         &mut self,
         name: &str,
@@ -415,8 +481,71 @@ impl Engine {
         inputs: &[Vec<i16>],
     ) -> Result<PipelineResult, ExecError> {
         let spec = self.cfg.run_spec();
-        run_streaming_on(&mut self.pool, &self.cache, name, layers, inputs, spec)
+        let sc = self.cfg.stage_cores.clone();
+        run_streaming_on(&mut self.pool, &self.cache, name, layers, inputs, spec, &sc)
     }
+}
+
+/// One tenant of a multi-tenant run ([`run_multi_streaming`]): an
+/// engine (its own cores, gate bits, seed, stage plan — and possibly a
+/// plan cache shared across tenants via [`Engine::new_with_cache`])
+/// plus the network and frame stream it serves.
+pub struct TenantRun<'a> {
+    pub engine: &'a mut Engine,
+    pub name: &'a str,
+    pub layers: &'a [NetLayer],
+    pub inputs: &'a [Vec<i16>],
+}
+
+/// Run several tenants concurrently on one shared external bus: each
+/// tenant pipelines its own network over its own engine's cores
+/// (partitioned per that engine's [`StageCores`]), and the shared-bus
+/// bandwidth divisor is the fixed point over **every** tenant's core
+/// timelines — tenant A's weight-DMA-bound FC tail slows tenant B's
+/// DMA-bound stages exactly as co-located accelerators on one DRAM
+/// channel would. Outputs stay bit-identical to each tenant's solo
+/// run (contention only adds wait cycles); per-tenant
+/// [`PipelineResult`]s come back priced under the combined divisor,
+/// plus the combined contention account. Engines' own `bus` configs
+/// are overridden by the episode's shared channel.
+pub fn run_multi_streaming(
+    tenants: &mut [TenantRun<'_>],
+) -> Result<MultiTenantResult, ExecError> {
+    // exec phase: each tenant walks its frames on its own cores (the
+    // bit-identical half — segments are collected, nothing priced yet)
+    let mut execs = Vec::with_capacity(tenants.len());
+    let mut tenant_cores = Vec::with_capacity(tenants.len());
+    for t in tenants.iter_mut() {
+        let eng = &mut *t.engine;
+        let spec = eng.cfg.run_spec();
+        let sc = eng.cfg.stage_cores.clone();
+        tenant_cores.push(eng.pool.cores());
+        execs.push(stream_exec(
+            &mut eng.pool,
+            &eng.cache,
+            t.name,
+            t.layers,
+            t.inputs,
+            spec,
+            &sc,
+        )?);
+    }
+    // hierarchical pricing: the fixed-point divisor over ALL tenants'
+    // per-core aggregate DMA timelines (stages feed their core groups'
+    // timelines up into one pool-wide contention account)
+    let all: Vec<Vec<Segment>> = execs.iter().flat_map(core_timelines).collect();
+    let d = shared_divisor(&all);
+    let contenders = all.iter().filter(|segs| dma_bound(segs, d)).count();
+    let mut res = MultiTenantResult {
+        tenant_cores,
+        divisor: d,
+        contenders,
+        ..Default::default()
+    };
+    for ex in execs {
+        res.tenants.push(price_stream(ex, BusModel::Shared, d));
+    }
+    Ok(res)
 }
 
 /// A pool of independent ConvAix cores (one cycle simulator each),
@@ -849,85 +978,345 @@ fn pipeline_stages(layers: &[NetLayer], want: usize) -> Vec<(usize, usize)> {
     stages
 }
 
-/// Layer-pipelined streaming on `pool`. Shared by
-/// [`Engine::run_streaming`]; see [`PipelineResult`] for what comes
-/// back.
+/// Partition-DP over (stage cut, core count) pairs: cut `layers` into
+/// contiguous stages AND give each stage a core group, spending exactly
+/// `cores` cores total, minimizing the bottleneck stage's predicted
+/// steady interval under
+/// [`LayerOp::layer_cost_on`](super::ops::LayerOp::layer_cost_on) (the
+/// k-core view of the same ~2/3-utilization estimate the `Auto` shard
+/// policy and the legacy one-core-per-stage DP consume). Returns
+/// `(l0, l1, k)` triples in layer order.
+///
+/// The per-layer DMA floor (a shard reads its full input, so the IFMap
+/// bytes do not shrink with k) is what makes heterogeneous partitions
+/// win: a stage of DMA-floored layers wastes every core past its
+/// bandwidth knee, so the DP parks those layers on thin groups and
+/// spends the freed cores where compute still scales — e.g.
+/// VGG-16-full's weight-streaming FC tail keeps 1 core while a fat
+/// mid-net conv stage takes several. Exact-`cores` usage is never
+/// wasteful because `layer_cost_on` is non-increasing in k.
+///
+/// `best[c][i]`: minimal bottleneck covering `layers[i..]` with exactly
+/// `c` cores; the first stage takes `layers[i..j)` on `k` cores and
+/// `choice[c][i]` records that `(k, j)`. Ties break toward the
+/// smallest k, then the earliest cut — deterministic, and it prefers
+/// deeper pipelines (more stages) over fatter groups when the
+/// estimate cannot tell them apart. O(cores²·len²) on CNN-sized nets.
+fn partition_auto(layers: &[NetLayer], cores: usize) -> Vec<(usize, usize, usize)> {
+    let len = layers.len();
+    if len == 0 {
+        return Vec::new();
+    }
+    let n = cores.max(1);
+    // pre[k][i]: prefix sums of layer_cost_on(k) (row 0 unused)
+    let pre: Vec<Vec<u64>> = (0..=n)
+        .map(|k| {
+            let mut p = vec![0u64; len + 1];
+            if k >= 1 {
+                for (i, l) in layers.iter().enumerate() {
+                    p[i + 1] = p[i] + l.op().layer_cost_on(k);
+                }
+            }
+            p
+        })
+        .collect();
+    let seg = |k: usize, i: usize, j: usize| pre[k][j] - pre[k][i];
+    let mut best = vec![vec![u64::MAX; len + 1]; n + 1];
+    let mut choice = vec![vec![(0usize, 0usize); len + 1]; n + 1];
+    best[0][len] = 0;
+    for c in 1..=n {
+        for i in 0..len {
+            for k in 1..=c {
+                if c - k == 0 {
+                    // last stage: must cover the remaining suffix
+                    let v = seg(k, i, len);
+                    if v < best[c][i] {
+                        best[c][i] = v;
+                        choice[c][i] = (k, len);
+                    }
+                } else {
+                    for j in (i + 1)..len {
+                        if best[c - k][j] == u64::MAX {
+                            continue;
+                        }
+                        let v = seg(k, i, j).max(best[c - k][j]);
+                        if v < best[c][i] {
+                            best[c][i] = v;
+                            choice[c][i] = (k, j);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let mut out = Vec::new();
+    let (mut c, mut i) = (n, 0usize);
+    while i < len {
+        let (k, j) = choice[c][i];
+        out.push((i, j, k));
+        c -= k;
+        i = j;
+    }
+    out
+}
+
+/// Stage-cut DP for an explicit per-stage core plan (`--stage-cores
+/// 1,2,1`): the stage count and each stage's core group are fixed by
+/// `plan`; only the cut points are optimized, minimizing the bottleneck
+/// under the same [`layer_cost_on`](super::ops::LayerOp::layer_cost_on)
+/// estimate. Structurally the legacy [`pipeline_stages`] DP with
+/// per-stage cost rows — for an all-ones plan the ranges, tie-breaks
+/// and reconstruction are identical, so the cuts are too.
+fn partition_for_plan(layers: &[NetLayer], plan: &[usize]) -> Vec<(usize, usize, usize)> {
+    let len = layers.len();
+    if len == 0 || plan.is_empty() {
+        return Vec::new();
+    }
+    let ns = plan.len().min(len);
+    let plan: Vec<usize> = plan[..ns].iter().map(|&k| k.max(1)).collect();
+    // per-stage prefix sums of layer_cost_on(plan[s])
+    let pre: Vec<Vec<u64>> = plan
+        .iter()
+        .map(|&k| {
+            let mut p = vec![0u64; len + 1];
+            for (i, l) in layers.iter().enumerate() {
+                p[i + 1] = p[i] + l.op().layer_cost_on(k);
+            }
+            p
+        })
+        .collect();
+    // best[s][i]: minimal bottleneck running layers[i..] on stages s..;
+    // cut[s][i]: where stage s ends. Ties break toward the earliest cut.
+    let mut best = vec![vec![u64::MAX; len + 1]; ns];
+    let mut cut = vec![vec![0usize; len + 1]; ns];
+    for i in 0..=len {
+        best[ns - 1][i] = pre[ns - 1][len] - pre[ns - 1][i];
+        cut[ns - 1][i] = len;
+    }
+    for s in (0..ns.saturating_sub(1)).rev() {
+        let left = ns - s; // stages s.. still to place
+        for i in 0..=(len - left) {
+            for j in (i + 1)..=(len - (left - 1)) {
+                let v = (pre[s][j] - pre[s][i]).max(best[s + 1][j]);
+                if v < best[s][i] {
+                    best[s][i] = v;
+                    cut[s][i] = j;
+                }
+            }
+        }
+    }
+    let mut out = Vec::with_capacity(ns);
+    let mut i = 0usize;
+    for (s, &k) in plan.iter().enumerate() {
+        let j = cut[s][i];
+        out.push((i, j, k));
+        i = j;
+    }
+    out
+}
+
+/// Predicted bottleneck of a `(l0, l1, k)` partition under the
+/// first-order estimate — what [`partition_auto`] minimizes. Used by
+/// the DP monotonicity test and the bench duel.
+#[cfg_attr(not(test), allow(dead_code))]
+fn partition_bottleneck(layers: &[NetLayer], stages: &[(usize, usize, usize)]) -> u64 {
+    stages
+        .iter()
+        .map(|&(l0, l1, k)| layers[l0..l1].iter().map(|l| l.op().layer_cost_on(k)).sum::<u64>())
+        .max()
+        .unwrap_or(0)
+}
+
+/// Resolve the config's [`StageCores`] into concrete `(l0, l1, k)`
+/// stages for this run. `PerStage` reproduces the legacy
+/// one-core-per-stage DP exactly (all k = 1); `Auto` runs the
+/// partition-DP; `Fixed` keeps the caller's per-stage core counts and
+/// optimizes only the cuts. A fixed plan longer than the layer list is
+/// truncated (a stage cannot be empty); one asking for more cores than
+/// the pool has is a config error, not a silent clamp.
+fn resolve_stage_partition(
+    layers: &[NetLayer],
+    pool_cores: usize,
+    spec: RunSpec,
+    stage_cores: &StageCores,
+) -> Result<Vec<(usize, usize, usize)>, ExecError> {
+    let cores = spec.opts.cores.min(pool_cores).max(1);
+    match stage_cores {
+        StageCores::PerStage => {
+            Ok(pipeline_stages(layers, cores).into_iter().map(|(l0, l1)| (l0, l1, 1)).collect())
+        }
+        StageCores::Auto => Ok(partition_auto(layers, cores)),
+        StageCores::Fixed(plan) => {
+            if plan.is_empty() {
+                return Err(ExecError::Config("empty --stage-cores plan".into()));
+            }
+            let stages = partition_for_plan(layers, plan);
+            let used: usize = stages.iter().map(|&(_, _, k)| k).sum();
+            if used > cores {
+                return Err(ExecError::Config(format!(
+                    "stage-cores plan wants {used} cores but the run has {cores}"
+                )));
+            }
+            Ok(stages)
+        }
+    }
+}
+
+/// Shards one layer across a pipeline stage's core GROUP: cores
+/// `offset..offset+k` of the pool. The sharding, placement and merge
+/// are exactly [`run_layer_sharded`]'s — the group is a k-core pool
+/// starting at a core offset — so a single stage owning the whole pool
+/// is bit-and-cycle-identical to the flat fan-out. After each `run`
+/// the per-shard `(group slot, Segment)` pairs are left in `shards`
+/// for the caller's timeline bookkeeping.
+struct GroupRunner<'a> {
+    pool: &'a mut CorePool,
+    cache: &'a PlanCache,
+    spec: RunSpec,
+    /// First pool core of this stage's group.
+    offset: usize,
+    /// Cores in the group.
+    k: usize,
+    /// Per-shard (group slot, segment) of the most recent layer.
+    shards: Vec<(usize, Segment)>,
+}
+
+impl LayerRunner for GroupRunner<'_> {
+    fn run(
+        &mut self,
+        layer: &NetLayer,
+        x: &[i16],
+        w: &[i16],
+        b: &[i32],
+    ) -> Result<LayerResult, ExecError> {
+        let op = layer.op();
+        let (k, offset, cache) = (self.k, self.offset, self.cache);
+        let inner = ExecOptions { cores: 1, batch: 1, ..self.spec.opts };
+        let shards = op.shard(x, self.spec.shard, k);
+        let n_shards = shards.len();
+        let placements: Vec<Vec<(usize, usize)>> =
+            shards.iter().map(|s| s.placement.clone()).collect();
+        let core_of: Vec<usize> = (0..n_shards).map(|i| i % k).collect();
+        let mut assignments: Vec<Vec<(usize, Shard)>> =
+            (0..self.pool.cores()).map(|_| Vec::new()).collect();
+        for (i, sh) in shards.into_iter().enumerate() {
+            assignments[offset + i % k].push((i, sh));
+        }
+        let results =
+            run_on_pool(&mut *self.pool, assignments, n_shards, |cpu, scratch, sh: &Shard| {
+                sh.sub.op().run_solo(
+                    cpu,
+                    sh.input.resolve(x),
+                    &w[sh.w.0..sh.w.1],
+                    &b[sh.b.0..sh.b.1],
+                    inner,
+                    &mut ExecCtx::new(cache, scratch),
+                )
+            })?;
+        self.shards =
+            results.iter().enumerate().map(|(i, r)| (i % k, Segment::of_layer(r))).collect();
+        Ok(op.merge(results, &placements, &core_of, k, self.spec.opts.mode, self.spec.bus))
+    }
+}
+
+/// The executed-but-unpriced half of a streaming run: every frame
+/// walked through every stage (outputs final), plus the per-cell shard
+/// segments bus pricing needs. Splitting execution from pricing lets
+/// [`run_multi_streaming`] run several tenants first and then price
+/// them all under ONE combined shared-bus divisor.
+pub(crate) struct StreamExec {
+    name: String,
+    /// `(l0, l1, k)` stages: half-open layer range on a k-core group.
+    stages: Vec<(usize, usize, usize)>,
+    frames: Vec<NetworkResult>,
+    outputs: Vec<Vec<i16>>,
+    /// `cells[s][f][l]`: stage s, frame f, in-stage layer l — that
+    /// layer's shard segments as (group slot, segment) pairs (a single
+    /// `(0, seg)` for 1-core stages).
+    cells: Vec<Vec<Vec<Vec<(usize, Segment)>>>>,
+}
+
+/// Execute a streaming run on `pool` without pricing it: resolve the
+/// stage partition, walk every frame through every stage, and collect
+/// the per-cell shard segments.
 ///
 /// Functionally each frame is the single network walk split at the
 /// stage boundaries — same weight draws, same activation threading —
-/// so outputs are bit-identical to [`Engine::run_network`]. Timing
-/// composes per-(stage, frame) steady-state intervals (the stage's
-/// repeating schedule overlaps its DMA stream with compute across
-/// layer boundaries, see `bus::stage_interval`) through the classic
-/// flow-shop recurrence: a stage starts a frame when both the frame
-/// has left the previous stage and the stage has finished the previous
-/// frame. Stage-boundary activations cross the external bus inside
-/// the per-layer DMA accounting (producer OFMap write + consumer IFMap
-/// read), and the shared-bus divisor is the fixed point over the
-/// concurrently streaming stages' aggregate timelines.
-pub(crate) fn run_streaming_on(
+/// so outputs are bit-identical to [`Engine::run_network`] for EVERY
+/// partition: 1-core stages run the layer solo on the stage's core,
+/// k-core stages re-enter the `run_layer_sharded` machinery via
+/// [`GroupRunner`] (whose merge is bit-identical to solo by the
+/// sharding invariant). The walk is stage-major: each stage draws only
+/// ITS layers' tensors (stages are contiguous layer ranges, so the
+/// lazy draws consume the one xorshift stream in exactly the global
+/// layer order) and runs every frame through them before the next
+/// stage starts — peak weight memory is one stage's tensors, not the
+/// whole net's (the FC tails alone would be ~250 MB on vgg16-full).
+/// Host execution is deliberately serial: the modeled cycles are
+/// identical either way, and wavefront host-threading would only speed
+/// up the simulation wall-clock at the cost of determinism plumbing.
+pub(crate) fn stream_exec(
     pool: &mut CorePool,
     cache: &PlanCache,
     name: &str,
     layers: &[NetLayer],
     inputs: &[Vec<i16>],
     spec: RunSpec,
-) -> Result<PipelineResult, ExecError> {
-    let stages = pipeline_stages(layers, spec.opts.cores.min(pool.cores()).max(1));
+    stage_cores: &StageCores,
+) -> Result<StreamExec, ExecError> {
+    let stages = resolve_stage_partition(layers, pool.cores(), spec, stage_cores)?;
     let n_stages = stages.len();
-    let inner = ExecOptions { cores: 1, batch: 1, ..spec.opts };
-
-    let mut res = PipelineResult {
+    let mut ex = StreamExec {
         name: name.into(),
         stages: stages.clone(),
-        bus: spec.bus,
-        ..Default::default()
+        frames: Vec::new(),
+        outputs: Vec::new(),
+        cells: (0..n_stages).map(|_| Vec::with_capacity(inputs.len())).collect(),
     };
     if n_stages == 0 || inputs.is_empty() {
-        res.stage_cycles = vec![0; n_stages];
-        res.stage_useful_cycles = vec![0; n_stages];
-        return Ok(res);
+        return Ok(ex);
     }
+    let inner = ExecOptions { cores: 1, batch: 1, ..spec.opts };
 
-    // Functional walk, stage-major: each stage draws only ITS layers'
-    // tensors (stages are contiguous layer ranges, so the lazy draws
-    // consume the one xorshift stream in exactly the global layer
-    // order) and runs every frame through them before the next stage
-    // starts — peak weight memory is one stage's tensors, not the
-    // whole net's (the FC tails alone would be ~250 MB on vgg16-full).
-    // Per core the execution sequence is identical to the frame-major
-    // walk (core `s` runs its (stage, frame) cells in frame order
-    // either way), so outputs, stats and Segments are bit-identical.
-    // Host execution is deliberately serial: each stage's layers must
-    // run on that stage's Cpu (core affinity), and the modeled cycles
-    // are identical either way — wavefront host-threading would only
-    // speed up the simulation wall-clock, at the cost of determinism
-    // plumbing across the frame×stage dependency front.
     let mut rng = crate::util::XorShift::new(spec.seed);
     let mut acts: Vec<Vec<i16>> = inputs.to_vec();
     let mut nets: Vec<NetworkResult> = (0..inputs.len())
         .map(|_| NetworkResult { name: name.into(), ..Default::default() })
         .collect();
-    let mut frame_segs: Vec<Vec<Vec<Segment>>> =
-        (0..n_stages).map(|_| Vec::with_capacity(inputs.len())).collect();
-    for (s, &(l0, l1)) in stages.iter().enumerate() {
+    let mut offset = 0usize; // first pool core of the current group
+    for (s, &(l0, l1, k)) in stages.iter().enumerate() {
         let tensors: Vec<Option<(Vec<i16>, Vec<i32>)>> =
             layers[l0..l1].iter().map(|l| l.op().draw(&mut rng)).collect();
         for (f, act) in acts.iter_mut().enumerate() {
-            let mut segs = Vec::with_capacity(l1 - l0);
-            for (k, li) in (l0..l1).enumerate() {
-                let (cpu, scratch) = pool.core(s);
-                let mut runner = SoloRunner { cpu, scratch, cache, opts: inner };
-                let r = step_layer(&mut runner, &layers[li], &tensors[k], act)?;
-                segs.push(Segment::of_layer(&r));
-                nets[f].layers.push(r);
+            let mut layer_cells = Vec::with_capacity(l1 - l0);
+            for (t, li) in (l0..l1).enumerate() {
+                if k == 1 {
+                    let (cpu, scratch) = pool.core(offset);
+                    let mut runner = SoloRunner { cpu, scratch, cache, opts: inner };
+                    let r = step_layer(&mut runner, &layers[li], &tensors[t], act)?;
+                    layer_cells.push(vec![(0usize, Segment::of_layer(&r))]);
+                    nets[f].layers.push(r);
+                } else {
+                    let mut runner = GroupRunner {
+                        pool: &mut *pool,
+                        cache,
+                        spec,
+                        offset,
+                        k,
+                        shards: Vec::new(),
+                    };
+                    let r = step_layer(&mut runner, &layers[li], &tensors[t], act)?;
+                    layer_cells.push(std::mem::take(&mut runner.shards));
+                    nets[f].layers.push(r);
+                }
             }
-            frame_segs[s].push(segs);
+            ex.cells[s].push(layer_cells);
         }
+        offset += k;
     }
     for net in nets {
-        res.outputs.push(net.layers.last().map(|l| l.out.clone()).unwrap_or_default());
-        res.frames.push(net);
+        ex.outputs.push(net.layers.last().map(|l| l.out.clone()).unwrap_or_default());
+        ex.frames.push(net);
     }
 
     // FC weight residency (LayerOp::resident_param_stream): a stage's
@@ -937,12 +1326,14 @@ pub(crate) fn run_streaming_on(
     // latency — from their steady-state DMA. The fill pass (f == 0)
     // keeps the full stream (the tiles must arrive once); the gated-
     // I/O halving mirrors the executor's packed-transfer accounting.
-    // Residency is only credited when the layer OWNS its stage: every
-    // layer's DM map packs from the same base addresses, so any
-    // co-staged layer would overwrite the resident tiles each frame.
+    // Residency is only credited when the layer OWNS its stage on ONE
+    // core: every layer's DM map packs from the same base addresses,
+    // so a co-staged layer would overwrite the resident tiles each
+    // frame, and a sharded layer re-slices its parameter tiles per
+    // shard — the conservative model keeps multi-core groups streaming.
     let n_frames = inputs.len();
-    for (s, &(l0, l1)) in stages.iter().enumerate() {
-        if l1 - l0 != 1 {
+    for (s, &(l0, l1, k)) in stages.iter().enumerate() {
+        if l1 - l0 != 1 || k != 1 {
             continue;
         }
         let (mut bytes, reqs) = layers[l0].op().resident_param_stream();
@@ -954,56 +1345,94 @@ pub(crate) fn run_streaming_on(
         }
         let lat = reqs * crate::mem::EXT_LATENCY_CYCLES;
         for f in 1..n_frames {
-            let seg = &mut frame_segs[s][f][0];
+            let seg = &mut ex.cells[s][f][0][0].1;
             seg.bytes = seg.bytes.saturating_sub(bytes);
             seg.lat = seg.lat.saturating_sub(lat);
         }
     }
+    Ok(ex)
+}
 
-    // bus pricing: the shared divisor is the fixed point over the
-    // stages' aggregate timelines (all stages stream concurrently in
-    // steady state)
-    let d = match spec.bus {
-        BusModel::Partitioned => 1,
-        BusModel::Shared => {
-            let per_stage: Vec<Vec<Segment>> =
-                frame_segs.iter().map(|fs| fs.iter().flatten().copied().collect()).collect();
-            shared_divisor(&per_stage)
+/// Flatten an executed stream into per-core aggregate DMA timelines for
+/// the shared-bus fixed point: one timeline per (stage, group slot),
+/// each the flat list of that core's segments across frames and layers.
+/// For all-1-core partitions this is exactly the legacy per-stage
+/// flattening; fatter groups contribute one timeline per member core,
+/// so a 3-core conv group presses on the bus three times (each shard
+/// re-reads its full input) — the divisor sees through the group
+/// hierarchy to physical cores.
+pub(crate) fn core_timelines(ex: &StreamExec) -> Vec<Vec<Segment>> {
+    let mut out = Vec::new();
+    for (s, &(_, _, k)) in ex.stages.iter().enumerate() {
+        for c in 0..k {
+            out.push(
+                ex.cells
+                    .get(s)
+                    .into_iter()
+                    .flatten()
+                    .flatten()
+                    .flatten()
+                    .filter(|(slot, _)| *slot == c)
+                    .map(|&(_, seg)| seg)
+                    .collect(),
+            );
         }
-    };
+    }
+    out
+}
 
-    // Per-(stage, frame) times: a stage's FIRST frame has no repeating
-    // schedule to prefetch against, so its layers chain at their
-    // individual max(compute, dma) times (`stage_first_pass` — this
-    // prices the fill phase honestly); from the second frame on the
-    // schedule repeats and the whole-stage overlap applies
-    // (`stage_interval`). The steady-state metric is always the
-    // interval view — it is what a long stream converges to.
-    let priced = |segs: &[Segment], f: usize, div: u64| {
+/// Price an executed stream under bus divisor `d`: per-(stage, frame)
+/// times via the k-core group views of the stage schedule
+/// (`bus::group_first_pass` for the fill frame, `bus::group_interval`
+/// for the repeating schedule — both degenerate to the 1-core
+/// `stage_first_pass`/`stage_interval` at k = 1), then the classic
+/// flow-shop recurrence: a stage starts a frame when both the frame
+/// has left the previous stage and the stage has finished the previous
+/// frame. The steady-state interval is read off each stage's LAST
+/// frame (weight residency makes frame 0 heavier, never lighter).
+pub(crate) fn price_stream(ex: StreamExec, bus: BusModel, d: u64) -> PipelineResult {
+    let StreamExec { name, stages, frames, outputs, cells } = ex;
+    let n_stages = stages.len();
+    let mut res = PipelineResult {
+        name,
+        stages: stages.iter().map(|&(l0, l1, _)| (l0, l1)).collect(),
+        stage_cores: stages.iter().map(|&(_, _, k)| k).collect(),
+        bus,
+        frames,
+        outputs,
+        ..Default::default()
+    };
+    let n_frames = res.frames.len();
+    if n_stages == 0 || n_frames == 0 {
+        res.stage_cycles = vec![0; n_stages];
+        res.stage_useful_cycles = vec![0; n_stages];
+        return res;
+    }
+
+    let priced = |layer_cells: &[Vec<(usize, Segment)>], k: usize, f: usize, div: u64| {
         if f == 0 {
-            stage_first_pass(segs, div)
+            group_first_pass(layer_cells, k, div)
         } else {
-            stage_interval(segs, div)
+            group_interval(layer_cells, k, div)
         }
     };
-    let t: Vec<Vec<u64>> = frame_segs
+    let t: Vec<Vec<u64>> = cells
         .iter()
-        .map(|fs| fs.iter().enumerate().map(|(f, segs)| priced(segs, f, d)).collect())
+        .zip(&stages)
+        .map(|(fs, &(_, _, k))| {
+            fs.iter().enumerate().map(|(f, lc)| priced(lc, k, f, d)).collect()
+        })
         .collect();
     res.stage_cycles = t.iter().map(|row| row.iter().sum()).collect();
-    res.stage_useful_cycles = frame_segs
+    res.stage_useful_cycles = cells
         .iter()
-        .map(|fs| fs.iter().enumerate().map(|(f, segs)| priced(segs, f, 1)).sum())
+        .zip(&stages)
+        .map(|(fs, &(_, _, k))| fs.iter().enumerate().map(|(f, lc)| priced(lc, k, f, 1)).sum())
         .collect();
-    // Steady state is what a long stream converges to, so it is read
-    // off each stage's LAST frame — with weight residency the first
-    // frame's segments still carry the full parameter stream and must
-    // not cap the steady interval. (Without residency every frame's
-    // segments are identical, so this matches the 0.4 max-over-frames.)
-    res.steady_interval_cycles = frame_segs
+    res.steady_interval_cycles = cells
         .iter()
-        .filter_map(|fs| fs.last())
-        .map(|segs| stage_interval(segs, d))
+        .zip(&stages)
+        .filter_map(|(fs, &(_, _, k))| fs.last().map(|lc| group_interval(lc, k, d)))
         .max()
         .unwrap_or(0);
 
@@ -1023,7 +1452,34 @@ pub(crate) fn run_streaming_on(
     res.fill_cycles = finish[n_stages - 1][0];
     res.makespan_cycles = finish[n_stages - 1][n_frames - 1];
     res.drain_cycles = res.makespan_cycles - last_frame_entry;
-    Ok(res)
+    res
+}
+
+/// Layer-pipelined streaming on `pool`. Shared by
+/// [`Engine::run_streaming`]; see [`PipelineResult`] for what comes
+/// back. Execution ([`stream_exec`]) and pricing ([`price_stream`])
+/// are split so multi-tenant runs can price several executed streams
+/// under one combined divisor; here the divisor is this run's own
+/// fixed point over its per-core timelines (stage groups feed their
+/// member cores' aggregate DMA into the hierarchy), or 1 on a
+/// partitioned bus. Stage-boundary activations cross the external bus
+/// inside the per-layer DMA accounting (producer OFMap write +
+/// consumer IFMap read).
+pub(crate) fn run_streaming_on(
+    pool: &mut CorePool,
+    cache: &PlanCache,
+    name: &str,
+    layers: &[NetLayer],
+    inputs: &[Vec<i16>],
+    spec: RunSpec,
+    stage_cores: &StageCores,
+) -> Result<PipelineResult, ExecError> {
+    let ex = stream_exec(pool, cache, name, layers, inputs, spec, stage_cores)?;
+    let d = match spec.bus {
+        BusModel::Partitioned => 1,
+        BusModel::Shared => shared_divisor(&core_timelines(&ex)),
+    };
+    Ok(price_stream(ex, spec.bus, d))
 }
 
 #[cfg(test)]
@@ -1445,6 +1901,294 @@ mod tests {
             compute.max(dma),
             "a shared stage must keep the FULL weight stream in its steady interval"
         );
+    }
+
+    /// The first partition-DP endpoint: an all-1-core plan must be
+    /// bit-AND-cycle-identical to the legacy one-core-per-stage
+    /// pipeline — outputs, cuts, and every timing field — at several
+    /// core counts under both bus models.
+    #[test]
+    fn all_ones_partition_reproduces_legacy_pipeline() {
+        let layers = vec![
+            NetLayer::Conv(ConvLayer::new("c1", 4, 24, 24, 16, 3, 3, 1, 1, 1)),
+            NetLayer::Pool(PoolLayer { name: "p1", ic: 16, ih: 24, iw: 24, size: 2, stride: 2 }),
+            NetLayer::Conv(ConvLayer::new("c2", 16, 12, 12, 32, 3, 3, 1, 1, 1)),
+            NetLayer::Conv(ConvLayer::new("c3", 32, 12, 12, 32, 3, 3, 1, 1, 1)),
+            NetLayer::Fc(FcLayer::new("fc", 32 * 12 * 12, 64)),
+        ];
+        let mut rng = XorShift::new(9);
+        let inputs: Vec<Vec<i16>> =
+            (0..3).map(|_| rng.i16_vec(4 * 24 * 24, -800, 800)).collect();
+        for cores in [2usize, 3, 4] {
+            for bus in [BusModel::Partitioned, BusModel::Shared] {
+                let cfg = || {
+                    EngineConfig::new()
+                        .cores(cores)
+                        .pool_mode(PoolMode::Pipelined)
+                        .bus(bus)
+                        .seed(17)
+                        .ext_capacity(1 << 22)
+                };
+                let legacy =
+                    cfg().build().run_streaming("ones", &layers, &inputs).unwrap();
+                let ones = cfg()
+                    .stage_cores(StageCores::Fixed(vec![1; cores]))
+                    .build()
+                    .run_streaming("ones", &layers, &inputs)
+                    .unwrap();
+                let tag = format!("{cores} cores {bus:?}");
+                assert_eq!(ones.stages, legacy.stages, "{tag}: cuts");
+                assert_eq!(ones.stage_cores, legacy.stage_cores, "{tag}: groups");
+                assert!(legacy.stage_cores.iter().all(|&k| k == 1), "{tag}: legacy k");
+                assert_eq!(ones.outputs, legacy.outputs, "{tag}: outputs");
+                assert_eq!(ones.fill_cycles, legacy.fill_cycles, "{tag}: fill");
+                assert_eq!(
+                    ones.steady_interval_cycles, legacy.steady_interval_cycles,
+                    "{tag}: steady"
+                );
+                assert_eq!(ones.drain_cycles, legacy.drain_cycles, "{tag}: drain");
+                assert_eq!(ones.makespan_cycles, legacy.makespan_cycles, "{tag}: makespan");
+                assert_eq!(ones.stage_cycles, legacy.stage_cycles, "{tag}: stage cycles");
+                assert_eq!(
+                    ones.stage_useful_cycles, legacy.stage_useful_cycles,
+                    "{tag}: useful"
+                );
+            }
+        }
+    }
+
+    /// The other endpoint: a single stage owning the whole pool IS the
+    /// `run_layer_sharded` fan-out — same outputs and (for one frame,
+    /// where the streaming divisor sees exactly the merge's segments)
+    /// the same priced makespan, under both bus models.
+    #[test]
+    fn single_stage_all_cores_matches_fanout() {
+        let l = ConvLayer::new("solo", 8, 16, 16, 32, 3, 3, 1, 1, 1);
+        let layers = vec![NetLayer::Conv(l.clone())];
+        let mut rng = XorShift::new(11);
+        let input = rng.i16_vec(8 * 16 * 16, -900, 900);
+        for bus in [BusModel::Partitioned, BusModel::Shared] {
+            let cfg = || {
+                EngineConfig::new()
+                    .cores(4)
+                    .shard(ShardPolicy::OcTile)
+                    .bus(bus)
+                    .seed(23)
+                    .ext_capacity(1 << 22)
+            };
+            let pr = cfg()
+                .pool_mode(PoolMode::Pipelined)
+                .stage_cores(StageCores::Fixed(vec![4]))
+                .build()
+                .run_streaming("solo", &layers, std::slice::from_ref(&input))
+                .unwrap();
+            assert_eq!(pr.stages, vec![(0, 1)], "{bus:?}: one stage");
+            assert_eq!(pr.stage_cores, vec![4], "{bus:?}: all cores");
+            // the fan-out reference, fed the same drawn tensors
+            let (w, b) = layers[0].op().draw(&mut XorShift::new(23)).unwrap();
+            let r = cfg().build().run_layer(&layers[0], &input, &w, &b).unwrap();
+            assert_eq!(pr.outputs[0], r.out, "{bus:?}: outputs");
+            assert_eq!(pr.fill_cycles, r.cycles, "{bus:?}: makespan");
+            assert_eq!(pr.makespan_cycles, r.cycles, "{bus:?}: one-frame stream");
+        }
+    }
+
+    /// The partition-DP consumes the same first-order estimate as the
+    /// Auto shard policy; its optimum must be monotone in the core
+    /// budget, and handing the bottleneck stage one more core can never
+    /// raise the predicted makespan (layer_cost_on is non-increasing
+    /// in k).
+    #[test]
+    fn partition_dp_monotone_in_cores() {
+        let layers = crate::model::nets::vgg16_full();
+        let mut prev = u64::MAX;
+        for cores in 1..=6usize {
+            let stages = partition_auto(&layers, cores);
+            // structural sanity: contiguous cover, exact core usage
+            let mut next = 0usize;
+            for &(l0, l1, k) in &stages {
+                assert_eq!(l0, next, "{cores} cores: contiguous");
+                assert!(l1 > l0 && k >= 1, "{cores} cores: empty stage/group");
+                next = l1;
+            }
+            assert_eq!(next, layers.len(), "{cores} cores: cover");
+            assert_eq!(
+                stages.iter().map(|&(_, _, k)| k).sum::<usize>(),
+                cores,
+                "{cores} cores: exact budget"
+            );
+            let b = partition_bottleneck(&layers, &stages);
+            assert!(b <= prev, "{cores} cores: bottleneck {b} worse than {prev}");
+            prev = b;
+
+            // adding a core to the bottleneck stage never hurts
+            let (bi, _) = stages
+                .iter()
+                .enumerate()
+                .map(|(i, &(l0, l1, k))| {
+                    (i, layers[l0..l1].iter().map(|l| l.op().layer_cost_on(k)).sum::<u64>())
+                })
+                .max_by_key(|&(_, c)| c)
+                .unwrap();
+            let mut fatter = stages.clone();
+            fatter[bi].2 += 1;
+            assert!(
+                partition_bottleneck(&layers, &fatter) <= b,
+                "{cores} cores: extra core raised the bottleneck"
+            );
+        }
+    }
+
+    /// The headline acceptance shape: on VGG-16-full at 4 cores the
+    /// partition-DP picks an UNEQUAL partition — the weight-DMA-bound
+    /// FC tail keeps a 1-core stage while a fat conv stage takes ≥ 2
+    /// cores — and predicts a makespan no worse than the legacy
+    /// one-core-per-stage pipeline's.
+    #[test]
+    fn partition_dp_picks_unequal_on_vgg16_full() {
+        let layers = crate::model::nets::vgg16_full();
+        let stages = partition_auto(&layers, 4);
+        assert_eq!(stages.iter().map(|&(_, _, k)| k).sum::<usize>(), 4);
+        assert!(stages.len() >= 2, "degenerated to one stage: {stages:?}");
+        assert!(
+            stages.iter().any(|&(_, _, k)| k >= 2),
+            "no fat conv stage: {stages:?}"
+        );
+        // fc6 (the 102M-weight layer) sits at index 18: 13 convs + 5
+        // interleaved pools come first
+        assert!(matches!(layers[18], NetLayer::Fc(_)), "net shape changed under the test");
+        let (_, _, fc_k) =
+            *stages.iter().find(|&&(l0, l1, _)| l0 <= 18 && 18 < l1).unwrap();
+        assert_eq!(fc_k, 1, "the DMA-floored FC tail must keep a thin group: {stages:?}");
+        assert_eq!(stages.last().unwrap().2, 1, "logits stage wants 1 core: {stages:?}");
+        // never worse than the legacy all-ones pipeline under the
+        // shared estimate
+        let legacy: Vec<(usize, usize, usize)> =
+            pipeline_stages(&layers, 4).into_iter().map(|(a, b)| (a, b, 1)).collect();
+        assert!(
+            partition_bottleneck(&layers, &stages) <= partition_bottleneck(&layers, &legacy),
+            "partition-DP lost to 1-per-stage: {stages:?} vs {legacy:?}"
+        );
+    }
+
+    #[test]
+    fn fixed_plan_validation_errors() {
+        let layers = vec![
+            NetLayer::Conv(ConvLayer::new("c1", 4, 12, 12, 8, 3, 3, 1, 1, 1)),
+            NetLayer::Conv(ConvLayer::new("c2", 8, 12, 12, 8, 3, 3, 1, 1, 1)),
+        ];
+        let inputs = vec![vec![0i16; 4 * 12 * 12]];
+        // plan wants 4 cores, run has 2
+        let err = EngineConfig::new()
+            .cores(2)
+            .pool_mode(PoolMode::Pipelined)
+            .stage_cores(StageCores::Fixed(vec![2, 2]))
+            .ext_capacity(1 << 22)
+            .build()
+            .run_streaming("over", &layers, &inputs)
+            .unwrap_err();
+        assert!(matches!(err, ExecError::Config(_)), "want Config error, got {err:?}");
+        // a longer-than-net plan truncates (stages cannot be empty)
+        let pr = EngineConfig::new()
+            .cores(3)
+            .pool_mode(PoolMode::Pipelined)
+            .stage_cores(StageCores::Fixed(vec![1, 1, 1]))
+            .ext_capacity(1 << 22)
+            .build()
+            .run_streaming("trunc", &layers, &inputs)
+            .unwrap();
+        assert_eq!(pr.stages.len(), 2);
+        assert_eq!(pr.stage_cores, vec![1, 1]);
+    }
+
+    #[test]
+    fn stage_cores_parses() {
+        assert_eq!("auto".parse::<StageCores>().unwrap(), StageCores::Auto);
+        assert_eq!("per-stage".parse::<StageCores>().unwrap(), StageCores::PerStage);
+        assert_eq!("one".parse::<StageCores>().unwrap(), StageCores::PerStage);
+        assert_eq!(
+            "1,2,1".parse::<StageCores>().unwrap(),
+            StageCores::Fixed(vec![1, 2, 1])
+        );
+        assert!("1,0,1".parse::<StageCores>().is_err());
+        assert!("".parse::<StageCores>().is_err());
+        assert!("fast".parse::<StageCores>().is_err());
+    }
+
+    /// Multi-tenancy: outputs stay bit-identical to each tenant's solo
+    /// run (the shared bus only adds wait), a lone tenant prices
+    /// exactly like its own shared-bus run, and the combined account
+    /// is self-consistent.
+    #[test]
+    fn multi_tenant_shares_bus_and_matches_solo() {
+        let conv_net = vec![
+            NetLayer::Conv(ConvLayer::new("c1", 4, 16, 16, 16, 3, 3, 1, 1, 1)),
+            NetLayer::Conv(ConvLayer::new("c2", 16, 16, 16, 16, 3, 3, 1, 1, 1)),
+        ];
+        let fc_net = vec![NetLayer::Fc(FcLayer::new("fc", 256, 64))];
+        let mut rng = XorShift::new(5);
+        let conv_inputs: Vec<Vec<i16>> =
+            (0..3).map(|_| rng.i16_vec(4 * 16 * 16, -700, 700)).collect();
+        let fc_inputs: Vec<Vec<i16>> = (0..3).map(|_| rng.i16_vec(256, -700, 700)).collect();
+        let conv_cfg = || {
+            EngineConfig::new()
+                .cores(2)
+                .pool_mode(PoolMode::Pipelined)
+                .bus(BusModel::Shared)
+                .seed(41)
+                .ext_capacity(1 << 22)
+        };
+        let fc_cfg = || {
+            EngineConfig::new()
+                .pool_mode(PoolMode::Pipelined)
+                .bus(BusModel::Shared)
+                .seed(43)
+                .ext_capacity(1 << 22)
+        };
+        let solo_conv =
+            conv_cfg().build().run_streaming("conv", &conv_net, &conv_inputs).unwrap();
+        let solo_fc = fc_cfg().build().run_streaming("fc", &fc_net, &fc_inputs).unwrap();
+
+        let mut ea = conv_cfg().build();
+        let mut eb = fc_cfg().build();
+        let mut tenants = [
+            TenantRun { engine: &mut ea, name: "conv", layers: &conv_net, inputs: &conv_inputs },
+            TenantRun { engine: &mut eb, name: "fc", layers: &fc_net, inputs: &fc_inputs },
+        ];
+        let mt = run_multi_streaming(&mut tenants).unwrap();
+        assert_eq!(mt.tenants.len(), 2);
+        assert_eq!(mt.tenant_cores, vec![2, 1]);
+        assert_eq!(mt.total_cores(), 3);
+        assert!(mt.divisor >= 1);
+        // outputs are contention-proof
+        assert_eq!(mt.tenants[0].outputs, solo_conv.outputs);
+        assert_eq!(mt.tenants[1].outputs, solo_fc.outputs);
+        // more contenders can only slow a tenant down
+        assert!(mt.tenants[0].makespan_cycles >= solo_conv.makespan_cycles);
+        assert!(mt.tenants[1].makespan_cycles >= solo_fc.makespan_cycles);
+        assert_eq!(
+            mt.makespan_cycles(),
+            mt.tenants.iter().map(|t| t.makespan_cycles).max().unwrap()
+        );
+        let shares = mt.bus_shares();
+        assert_eq!(shares.len(), 2);
+        assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-9, "shares {shares:?}");
+
+        // a lone tenant is exactly its own shared-bus streaming run
+        let mut solo_engine = conv_cfg().build();
+        let mut lone = [TenantRun {
+            engine: &mut solo_engine,
+            name: "conv",
+            layers: &conv_net,
+            inputs: &conv_inputs,
+        }];
+        let one = run_multi_streaming(&mut lone).unwrap();
+        let t = &one.tenants[0];
+        assert_eq!(t.outputs, solo_conv.outputs);
+        assert_eq!(t.fill_cycles, solo_conv.fill_cycles);
+        assert_eq!(t.steady_interval_cycles, solo_conv.steady_interval_cycles);
+        assert_eq!(t.makespan_cycles, solo_conv.makespan_cycles);
+        assert_eq!(t.stage_cycles, solo_conv.stage_cycles);
     }
 
     #[test]

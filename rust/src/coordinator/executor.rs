@@ -91,6 +91,9 @@ impl<'a> ExecCtx<'a> {
 pub enum ExecError {
     Codegen(crate::codegen::CodegenError),
     Sim(SimError),
+    /// A run configuration the scheduler cannot honor (e.g. an explicit
+    /// `--stage-cores` plan asking for more cores than the pool has).
+    Config(String),
 }
 
 impl std::fmt::Display for ExecError {
@@ -98,6 +101,7 @@ impl std::fmt::Display for ExecError {
         match self {
             ExecError::Codegen(e) => write!(f, "codegen: {e}"),
             ExecError::Sim(e) => write!(f, "sim: {e}"),
+            ExecError::Config(msg) => write!(f, "config: {msg}"),
         }
     }
 }
@@ -107,6 +111,7 @@ impl std::error::Error for ExecError {
         match self {
             ExecError::Codegen(e) => Some(e),
             ExecError::Sim(e) => Some(e),
+            ExecError::Config(_) => None,
         }
     }
 }

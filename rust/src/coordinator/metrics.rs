@@ -189,8 +189,9 @@ impl KindTotal {
 
 /// Result of a layer-pipelined streaming run
 /// ([`Engine::run_streaming`](super::engine::Engine::run_streaming)):
-/// the network is cut into contiguous layer *stages*, one core per
-/// stage, and frames stream through them — frame `t` on stage `i`
+/// the network is cut into contiguous layer *stages*, each stage owns
+/// a **group** of one or more cores (layers shard across the group
+/// in-stage), and frames stream through them — frame `t` on stage `i`
 /// while frame `t−1` occupies stage `i+1`.
 #[derive(Debug, Clone, Default)]
 pub struct PipelineResult {
@@ -201,9 +202,14 @@ pub struct PipelineResult {
     /// Final activation per frame (empty vectors in analytic mode).
     pub outputs: Vec<Vec<i16>>,
     /// Half-open layer ranges: stage `s` runs `layers[stages[s].0 ..
-    /// stages[s].1]` on core `s`. Balanced by the predicted-makespan
-    /// cost model.
+    /// stages[s].1]` on its core group. Balanced by the
+    /// predicted-makespan cost model.
     pub stages: Vec<(usize, usize)>,
+    /// Cores owned by each stage (parallel to `stages`; all 1 for the
+    /// legacy one-core-per-stage partition). A stage with `k > 1`
+    /// shards each of its layers across its group per the run's
+    /// [`ShardPolicy`](super::engine::ShardPolicy).
+    pub stage_cores: Vec<usize>,
     /// Occupied cycles per stage core over the whole stream, priced
     /// under the run's bus model (includes shared-bus wait).
     pub stage_cycles: Vec<u64>,
@@ -274,6 +280,62 @@ impl PipelineResult {
             acc = add_stats(&acc, &f.stats());
         }
         acc
+    }
+
+    /// Total off-chip bytes the stream moved (all frames, all layers)
+    /// — a tenant's demand on the shared channel.
+    pub fn dma_bytes(&self) -> u64 {
+        self.frames.iter().map(|f| f.io_bytes()).sum()
+    }
+}
+
+/// Result of a multi-tenant run
+/// ([`run_multi_streaming`](super::engine::run_multi_streaming)):
+/// several engines, each pipelining its own network over its own core
+/// group, competing for ONE shared external bus. Per-tenant metrics
+/// are full [`PipelineResult`]s (outputs bit-identical to each
+/// tenant's solo run — contention only adds wait cycles); the combined
+/// account says how the channel was split.
+#[derive(Debug, Clone, Default)]
+pub struct MultiTenantResult {
+    /// Per-tenant pipeline results, in submission order. Priced under
+    /// the **combined** shared-bus divisor, so a tenant's cycles here
+    /// are ≥ its isolated `run_streaming` cycles.
+    pub tenants: Vec<PipelineResult>,
+    /// Cores each tenant's engine contributed to the pool.
+    pub tenant_cores: Vec<usize>,
+    /// Fixed-point bandwidth divisor across ALL tenants' cores.
+    pub divisor: u64,
+    /// Cores counted as concurrently DMA-bound at the fixed point.
+    pub contenders: usize,
+}
+
+impl MultiTenantResult {
+    /// Total cores across all tenants.
+    pub fn total_cores(&self) -> usize {
+        self.tenant_cores.iter().sum()
+    }
+
+    /// The slowest tenant's stream makespan — when the whole
+    /// multi-tenant episode ends.
+    pub fn makespan_cycles(&self) -> u64 {
+        self.tenants.iter().map(|t| t.makespan_cycles).max().unwrap_or(0)
+    }
+
+    /// Each tenant's fraction of the off-chip bytes moved — the
+    /// shared-bus occupancy split (sums to 1.0 when anything moved).
+    pub fn bus_shares(&self) -> Vec<f64> {
+        let total: u64 = self.tenants.iter().map(|t| t.dma_bytes()).sum();
+        if total == 0 {
+            return vec![0.0; self.tenants.len()];
+        }
+        self.tenants.iter().map(|t| t.dma_bytes() as f64 / total as f64).collect()
+    }
+
+    /// Summed steady-state throughput across tenants (frames/s) — the
+    /// pool's aggregate serving rate once every pipe is full.
+    pub fn aggregate_steady_fps(&self) -> f64 {
+        self.tenants.iter().map(|t| t.steady_state_fps()).sum()
     }
 }
 

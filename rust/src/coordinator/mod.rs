@@ -36,7 +36,10 @@ pub mod ops;
 
 pub use crate::codegen::compiled::{CacheStats, PlanCache, Scratch};
 pub use bus::BusModel;
-pub use engine::{BatchedResult, CorePool, Engine, EngineConfig, PoolMode, ShardPolicy};
+pub use engine::{
+    run_multi_streaming, BatchedResult, CorePool, Engine, EngineConfig, PoolMode, ShardPolicy,
+    StageCores, TenantRun,
+};
 pub use executor::{ExecCtx, ExecMode, ExecOptions, NetLayer};
-pub use metrics::{LayerResult, NetworkResult, PipelineResult};
+pub use metrics::{LayerResult, MultiTenantResult, NetworkResult, PipelineResult};
 pub use ops::LayerOp;

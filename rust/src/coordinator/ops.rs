@@ -96,12 +96,39 @@ pub trait LayerOp {
     /// reproduce the single-core arithmetic bit-for-bit.
     fn shard(&self, x: &[i16], policy: ShardPolicy, want: usize) -> Vec<Shard>;
 
-    /// Predicted single-core cost for the pipeline-stage DP and the
-    /// `Auto` policy (MACs at ~2/3 utilization vs tensor footprints
-    /// over the bus width). Only the relative ranking matters.
+    /// Predicted single-core cost: MACs at a calibrated **~2/3
+    /// utilization** guess for compute vs tensor footprints over the
+    /// bus width for DMA, combined with the executor's overlap `max`
+    /// ([`conv_cost`]). This one first-order estimate feeds *three*
+    /// consumers — the `Auto` shard policy, the legacy
+    /// one-core-per-stage pipeline DP, and (through
+    /// [`LayerOp::layer_cost_on`]) the partition-DP that assigns whole
+    /// core *groups* to stages — so they all rank layers consistently.
+    /// Only the relative ranking matters.
     fn layer_cost(&self) -> u64 {
         let (i, w, o) = self.tensor_footprints();
         conv_cost(self.macs(), i, w, o).max(1)
+    }
+
+    /// Predicted per-core cost of this layer sharded across `cores`
+    /// cores — the partition-DP's cost surface, derived from the SAME
+    /// ~2/3-utilization estimate as [`LayerOp::layer_cost`] (with
+    /// `cores == 1` the two are identical by construction). Compute
+    /// divides evenly across the group; of the DMA footprint the
+    /// filter and output streams divide (each core touches only its
+    /// shard's slice under every policy) while the input stream is
+    /// conservatively charged in full per core (the oc-tile/neuron-
+    /// tile regime — row-band shards would divide it, so this
+    /// under-promises, never over-promises, group speedup on
+    /// input-heavy layers). Monotone non-increasing in `cores`, which
+    /// is what makes the partition-DP's makespan monotone in the core
+    /// budget.
+    fn layer_cost_on(&self, cores: usize) -> u64 {
+        let k = cores.max(1) as u64;
+        let (i, w, o) = self.tensor_footprints();
+        let comp = (self.macs() * 3 / (2 * crate::PEAK_MACS_PER_CYCLE)).div_ceil(k);
+        let bytes = 2 * (i as u64 + (w as u64 + o as u64).div_ceil(k));
+        comp.max(bytes / crate::mem::EXT_BYTES_PER_CYCLE as u64).max(1)
     }
 
     /// `(bytes, dma requests)` of this layer's per-frame parameter

@@ -4,9 +4,12 @@
 //! and FC layers — and the shared-bus model only ever *adds* wait
 //! cycles. Layer-pipelined streaming obeys the same contract: every
 //! frame of a pipelined stream reproduces the single-core network walk
-//! bit-exactly, including through the implicit conv→FC flatten.
+//! bit-exactly, including through the implicit conv→FC flatten — for
+//! every stage partition (one core per stage, explicit unequal core
+//! groups, or the partition-DP's `auto` plans) and for multi-tenant
+//! runs contending on one shared bus.
 
-use convaix::coordinator::{BusModel, EngineConfig, NetLayer, PoolMode, ShardPolicy};
+use convaix::coordinator::{BusModel, EngineConfig, NetLayer, PoolMode, ShardPolicy, StageCores};
 use convaix::model::{ConvLayer, FcLayer, PoolLayer};
 use convaix::util::proptest::prop;
 use convaix::util::XorShift;
@@ -292,6 +295,185 @@ fn pipelined_stream_bit_identical_to_single_core() {
             }
         }
     }
+}
+
+/// Partition-DP property: ANY stage partition — auto or an explicit
+/// unequal plan — is a pure re-timing of the single-core walk. Every
+/// (partition, shard policy, bus) combination reproduces the
+/// single-core outputs bit-exactly, on both the conv mini net and the
+/// conv→FC flatten net.
+#[test]
+fn partitioned_stream_bit_identical_across_plans_policies_and_buses() {
+    for (name, layers, in_elems) in
+        [("mini", mini_net(), 3 * 16 * 16), ("fcnet", fc_net(), 4 * 12 * 12)]
+    {
+        let mut rng = XorShift::new(9001);
+        let inputs: Vec<Vec<i16>> =
+            (0..3).map(|_| rng.i16_vec(in_elems, -2000, 2000)).collect();
+        let mut solo = EngineConfig::new().seed(31).ext_capacity(1 << 23).build();
+        let base: Vec<_> = inputs
+            .iter()
+            .map(|x| solo.run_network(name, &layers, x).unwrap())
+            .collect();
+
+        let plans: [StageCores; 5] = [
+            StageCores::Auto,
+            StageCores::Fixed(vec![2, 1]),
+            StageCores::Fixed(vec![1, 2]),
+            StageCores::Fixed(vec![2, 2]),
+            StageCores::Fixed(vec![4]),
+        ];
+        for sc in plans {
+            let cores: usize = match &sc {
+                StageCores::Fixed(p) => p.iter().sum(),
+                _ => 3,
+            };
+            for policy in POLICIES {
+                for bus in [BusModel::Partitioned, BusModel::Shared] {
+                    let mut engine = EngineConfig::new()
+                        .cores(cores)
+                        .shard(policy)
+                        .pool_mode(PoolMode::Pipelined)
+                        .bus(bus)
+                        .stage_cores(sc.clone())
+                        .seed(31)
+                        .ext_capacity(1 << 23)
+                        .build();
+                    let pr = engine.run_streaming(name, &layers, &inputs).unwrap();
+                    assert!(
+                        pr.stage_cores.iter().sum::<usize>() <= cores,
+                        "{name} {sc:?}: partition over-allocates cores"
+                    );
+                    for (f, b) in pr.frames.iter().zip(&base) {
+                        for (lp, lb) in f.layers.iter().zip(&b.layers) {
+                            assert_eq!(
+                                lp.out, lb.out,
+                                "{name} {sc:?} {policy:?} {bus:?} layer {} output",
+                                lb.name
+                            );
+                            assert_eq!(lp.macs, lb.macs, "{name} {sc:?} layer {} macs", lb.name);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Property: random explicit partitions over random core budgets stay
+/// bit-identical to the single-core walk, the cut covers the net
+/// contiguously, and the plan is echoed back verbatim.
+#[test]
+fn random_partitions_bit_identical() {
+    prop("random stage plans == single core", 8, |g| {
+        let layers = mini_net();
+        let n_stages = g.usize_in(1, 4);
+        let plan: Vec<usize> = (0..n_stages).map(|_| g.usize_in(1, 3)).collect();
+        let cores: usize = plan.iter().sum();
+        let bus = if g.bool() { BusModel::Shared } else { BusModel::Partitioned };
+        let mut rng = XorShift::new(g.int(0, i64::MAX / 2) as u64);
+        let inputs: Vec<Vec<i16>> =
+            (0..2).map(|_| rng.i16_vec(3 * 16 * 16, -2000, 2000)).collect();
+        let mut solo = EngineConfig::new().seed(17).ext_capacity(1 << 23).build();
+        let base: Vec<_> = inputs
+            .iter()
+            .map(|x| solo.run_network("mini", &layers, x).unwrap())
+            .collect();
+
+        let mut engine = EngineConfig::new()
+            .cores(cores)
+            .pool_mode(PoolMode::Pipelined)
+            .bus(bus)
+            .stage_cores(StageCores::Fixed(plan.clone()))
+            .seed(17)
+            .ext_capacity(1 << 23)
+            .build();
+        let pr = engine.run_streaming("mini", &layers, &inputs).unwrap();
+        assert_eq!(pr.stages.first().unwrap().0, 0, "plan {plan:?}: cut must start at 0");
+        assert_eq!(pr.stages.last().unwrap().1, layers.len(), "plan {plan:?}: cut must cover");
+        for w in pr.stages.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "plan {plan:?}: stages must be contiguous");
+        }
+        assert_eq!(pr.stage_cores, plan[..pr.stages.len()].to_vec());
+        for (f, b) in pr.frames.iter().zip(&base) {
+            for (lp, lb) in f.layers.iter().zip(&b.layers) {
+                assert_eq!(lp.out, lb.out, "plan {plan:?} {bus:?} layer {} output", lb.name);
+            }
+        }
+    });
+}
+
+/// Multi-tenant serving is a pure re-timing too: two tenants on one
+/// shared bus (and one shared plan cache) compute exactly what each
+/// computes alone; bus contention only ever adds cycles, and the
+/// occupancy split accounts for all traffic.
+#[test]
+fn multi_tenant_outputs_bit_identical_to_isolated_runs() {
+    use std::sync::Arc;
+
+    use convaix::coordinator::{run_multi_streaming, Engine, PlanCache, TenantRun};
+
+    let nets = [("mini", mini_net(), 3 * 16 * 16), ("fcnet", fc_net(), 4 * 12 * 12)];
+    let tenant_cores = [2usize, 1];
+    let mut rng = XorShift::new(31337);
+    let all_inputs: Vec<Vec<Vec<i16>>> = nets
+        .iter()
+        .map(|(_, _, n)| (0..2).map(|_| rng.i16_vec(*n, -2000, 2000)).collect())
+        .collect();
+
+    let cfg_for = |cores: usize, seed: u64| {
+        EngineConfig::new()
+            .cores(cores)
+            .pool_mode(PoolMode::Pipelined)
+            .bus(BusModel::Shared)
+            .stage_cores(StageCores::Auto)
+            .seed(seed)
+            .ext_capacity(1 << 23)
+    };
+
+    // isolated references: each tenant alone on its own bus
+    let mut solos = Vec::new();
+    for (i, (name, layers, _)) in nets.iter().enumerate() {
+        let mut engine = cfg_for(tenant_cores[i], 100 + i as u64).build();
+        solos.push(engine.run_streaming(name, layers, &all_inputs[i]).unwrap());
+    }
+
+    let cache = Arc::new(PlanCache::new());
+    let mut engines: Vec<Engine> = (0..nets.len())
+        .map(|i| Engine::new_with_cache(cfg_for(tenant_cores[i], 100 + i as u64), cache.clone()))
+        .collect();
+    let mut runs: Vec<TenantRun<'_>> = engines
+        .iter_mut()
+        .zip(nets.iter())
+        .zip(all_inputs.iter())
+        .map(|((engine, net), inputs)| TenantRun {
+            engine,
+            name: net.0,
+            layers: &net.1,
+            inputs,
+        })
+        .collect();
+    let mt = run_multi_streaming(&mut runs).unwrap();
+
+    assert_eq!(mt.tenants.len(), 2);
+    assert_eq!(mt.tenant_cores, tenant_cores.to_vec());
+    for ((t, s), (name, ..)) in mt.tenants.iter().zip(&solos).zip(nets.iter()) {
+        for (ft, fs) in t.frames.iter().zip(&s.frames) {
+            for (lt, ls) in ft.layers.iter().zip(&fs.layers) {
+                assert_eq!(lt.out, ls.out, "tenant {name} layer {} output", ls.name);
+            }
+        }
+        assert!(
+            t.makespan_cycles >= s.makespan_cycles,
+            "tenant {name} sped up under contention"
+        );
+        assert!(
+            t.steady_interval_cycles >= s.steady_interval_cycles,
+            "tenant {name} steady interval shrank under contention"
+        );
+    }
+    let shares = mt.bus_shares();
+    assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-9, "bus shares must sum to 1");
 }
 
 /// The shared bus can only slow a pipelined stream down, never change
