@@ -30,6 +30,10 @@ COMMANDS:
                      the frames per tenant; --stage-cores applies to
                      every tenant
   golden             bit-exact check: simulator vs JAX/Pallas PJRT artifacts
+  lint <net>         compile every task program of a net (solo + sharded
+                     sub-shapes, gates 8 and 16) and run the static
+                     verifier + cycle analyzer over each; nonzero exit
+                     if any program has findings
   asm <file.cvx>     assemble a .cvx file, report size, disassemble back
 
 OPTIONS:
@@ -54,6 +58,9 @@ OPTIONS:
                      per-stage (default, one core per stage) | auto
                      (partition-DP: stages may own unequal core groups
                      and shard internally) | an explicit plan like 1,2,1
+  --verify-programs  run the static verifier on every plan-cache insert
+                     (always on in debug builds; this flag sets ANALYZE=1
+                     so release runs verify too)
   --no-cache         disable the compile-once layer cache (plans, task
                      programs and analytic profiles are then re-derived
                      on every call — the pre-0.5 behavior; results are
@@ -74,6 +81,7 @@ pub struct Args {
     pub bus: BusModel,
     pub stage_cores: StageCores,
     pub no_cache: bool,
+    pub verify_programs: bool,
 }
 
 impl Args {
@@ -91,6 +99,7 @@ impl Args {
             bus: BusModel::Partitioned,
             stage_cores: StageCores::PerStage,
             no_cache: false,
+            verify_programs: false,
         };
         let mut it = argv.iter().skip(1).peekable();
         while let Some(arg) = it.next() {
@@ -128,6 +137,7 @@ impl Args {
                 }
                 "--pipeline" => a.pipeline = true,
                 "--no-cache" => a.no_cache = true,
+                "--verify-programs" => a.verify_programs = true,
                 "--pool-mode" => {
                     let m: PoolMode = it
                         .next()
@@ -193,6 +203,11 @@ impl Args {
 
 pub fn main_with(argv: &[String]) -> Result<i32> {
     let args = Args::parse(argv)?;
+    if args.verify_programs {
+        // opt release builds into verify-on-insert (debug builds always
+        // verify); see `isa::analysis::enabled`
+        std::env::set_var("ANALYZE", "1");
+    }
     let cfg = args.engine_config();
     match args.command.as_str() {
         "help" => {
@@ -248,6 +263,16 @@ pub fn main_with(argv: &[String]) -> Result<i32> {
         }
         "golden" => {
             let (text, ok) = report::golden(&args.artifacts)?;
+            print!("{text}");
+            Ok(if ok { 0 } else { 1 })
+        }
+        "lint" => {
+            let net = args
+                .positional
+                .first()
+                .map(String::as_str)
+                .unwrap_or("alexnet-full");
+            let (text, ok) = report::lint(net)?;
             print!("{text}");
             Ok(if ok { 0 } else { 1 })
         }

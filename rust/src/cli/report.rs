@@ -350,6 +350,137 @@ pub fn run_multi(tenants: &[String], args: &super::Args) -> Result<String> {
     Ok(s)
 }
 
+/// `convaix lint <net>` — walk every layer of the net, compile every
+/// task program it can execute (the solo per-layer shapes plus every
+/// sub-layer shape each shard policy would produce on a 4-core pool,
+/// at gate bits 8 and 16), run the static verifier (`isa::analysis`)
+/// over each program and report per-program verdicts with the static
+/// cycle analyzer's predicted counts. Returns `(report, all_clean)`.
+///
+/// Identical shapes reached through different policies/gates dedup via
+/// the plan cache (same `Arc` = one row). In debug builds the cache
+/// itself verifies on insert and a dirty program aborts compilation;
+/// in release builds `lint` is the explicit check.
+pub fn lint(net: &str) -> Result<(String, bool)> {
+    use std::collections::BTreeSet;
+
+    use crate::coordinator::ShardPolicy;
+    use crate::isa::analysis::{self, AbiSpec};
+
+    let layers = net_layers(net)?;
+    let cache = PlanCache::new();
+    let mut t = Table::new(
+        &format!("{net}: static verification of all task programs"),
+        &["Layer", "Kind", "Gate", "Task", "Bundles", "Static cycles", "Verdict"],
+    );
+    let mut findings = String::new();
+    let mut n_findings = 0usize;
+    let mut n_programs = 0usize;
+    let mut seen: BTreeSet<usize> = BTreeSet::new();
+
+    let mut lint_one = |label: &str, layer: &NetLayer, gate: u8| -> Result<()> {
+        let dense = match layer {
+            NetLayer::Conv(l) => Some(l.per_group()),
+            NetLayer::Fc(l) => Some(l.as_conv()),
+            NetLayer::Pool(_) => None,
+        };
+        if let Some(dense) = dense {
+            let cc = cache.conv(&dense, gate).map_err(|e| anyhow::anyhow!("{label}: {e}"))?;
+            if !seen.insert(Arc::as_ptr(&cc) as usize) {
+                return Ok(());
+            }
+            let timings = cc.analyzer_timing();
+            let mut progs: Vec<_> = cc.programs().collect();
+            progs.sort_by_key(|(k, _)| format!("{k:?}"));
+            for (key, pm) in progs {
+                n_programs += 1;
+                let rep = analysis::verify(pm.program(), &AbiSpec::conv());
+                let cycles = match &timings[key] {
+                    Ok(st) => st.cycles.to_string(),
+                    Err(e) => {
+                        n_findings += 1;
+                        findings
+                            .push_str(&format!("{label} {key:?}: static prediction failed: {e}\n"));
+                        "-".into()
+                    }
+                };
+                let verdict = if rep.is_clean() {
+                    "clean".to_string()
+                } else {
+                    n_findings += rep.findings.len();
+                    findings.push_str(&format!("-- {label} task {key:?} --\n{rep}\n"));
+                    format!("{} finding(s)", rep.findings.len())
+                };
+                t.row(&[
+                    label.to_string(),
+                    layer.kind().into(),
+                    gate.to_string(),
+                    format!("{key:?}"),
+                    pm.program().len().to_string(),
+                    cycles,
+                    verdict,
+                ]);
+            }
+        } else if let NetLayer::Pool(l) = layer {
+            let cp = cache.pool(l).map_err(|e| anyhow::anyhow!("{label}: {e}"))?;
+            if !seen.insert(Arc::as_ptr(&cp) as usize) {
+                return Ok(());
+            }
+            n_programs += 1;
+            let rep = analysis::verify(cp.pm.program(), &AbiSpec::pool());
+            let cycles = match cp.analyzer_timing() {
+                Ok(st) => st.cycles.to_string(),
+                Err(e) => {
+                    n_findings += 1;
+                    findings.push_str(&format!("{label}: static prediction failed: {e}\n"));
+                    "-".into()
+                }
+            };
+            let verdict = if rep.is_clean() {
+                "clean".to_string()
+            } else {
+                n_findings += rep.findings.len();
+                findings.push_str(&format!("-- {label} --\n{rep}\n"));
+                format!("{} finding(s)", rep.findings.len())
+            };
+            t.row(&[
+                label.to_string(),
+                layer.kind().into(),
+                gate.to_string(),
+                "row".into(),
+                cp.pm.program().len().to_string(),
+                cycles,
+                verdict,
+            ]);
+        }
+        Ok(())
+    };
+
+    for gate in [8u8, 16] {
+        for layer in &layers {
+            let name = layer.name();
+            lint_one(name, layer, gate)?;
+            // every sub-layer shape a sharded run could compile
+            let x = vec![0i16; layer.op().in_elems()];
+            for policy in [ShardPolicy::OcTile, ShardPolicy::RowBand, ShardPolicy::Auto] {
+                for (i, sh) in layer.op().shard(&x, policy, 4).iter().enumerate() {
+                    lint_one(&format!("{name}/{policy:?}{i}"), &sh.sub, gate)?;
+                }
+            }
+        }
+    }
+
+    let ok = n_findings == 0;
+    let mut s = t.render();
+    s.push_str(&findings);
+    s.push_str(&format!(
+        "{net}: {n_programs} program(s) verified across gates {{8, 16}} and all shard \
+         policies — {}\n",
+        if ok { "all clean".to_string() } else { format!("{n_findings} finding(s)") },
+    ));
+    Ok((s, ok))
+}
+
 fn net_layers(net: &str) -> Result<Vec<NetLayer>> {
     match net {
         "alexnet" => Ok(conv_stack(alexnet_conv())),

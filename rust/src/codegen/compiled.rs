@@ -41,6 +41,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::core::CoreStats;
+use crate::isa::analysis::predict::{predict, AbiEnv, StaticTiming};
+use crate::isa::analysis::{self, AbiSpec};
+use crate::isa::Program;
 use crate::mem::pm::ProgramMem;
 use crate::model::{ConvLayer, PoolLayer};
 
@@ -48,6 +51,23 @@ use super::conv::{build_conv_task, TaskFlavor};
 use super::layout::{self, ConvPlan};
 use super::pool::{build_pool_task, plan_pool, PoolPlan};
 use super::CodegenError;
+
+/// Verify-on-insert: every program entering the plan cache passes the
+/// static verifier (`isa::analysis`) when analysis is enabled — always
+/// in debug builds and under `cargo test`, opt-in via `ANALYZE=1` /
+/// `--verify-programs` in release. A finding is a codegen bug, not a
+/// user error, so it surfaces as [`CodegenError::Verify`].
+fn verify_on_insert(prog: &Program, abi: &AbiSpec, what: &str) -> Result<(), CodegenError> {
+    if !analysis::enabled() {
+        return Ok(());
+    }
+    let report = analysis::verify(prog, abi);
+    if report.is_clean() {
+        Ok(())
+    } else {
+        Err(CodegenError::Verify(format!("{what}: {report}")))
+    }
+}
 
 /// Program selector within one conv plan: (slice input channels,
 /// first-slice?, last-slice?) — the same key `run_dense` dispatched on
@@ -143,20 +163,31 @@ pub struct CompiledConv {
     /// that is sound). Racing first passes compute identical profiles,
     /// so whichever `set` wins is canonical.
     pub(crate) analytic: OnceLock<AnalyticProfile>,
+    /// Static cycle predictions per task program (`analysis::predict`),
+    /// computed lazily against the row-0 task ABI and cached for the
+    /// shape's lifetime. `Err` records why a program was not statically
+    /// predictable (no generated conv task is — asserted by tests).
+    analyzer: OnceLock<HashMap<TaskKey, Result<StaticTiming, String>>>,
 }
 
 impl CompiledConv {
     pub(crate) fn compile(layer: &ConvLayer) -> Result<Self, CodegenError> {
         let plan = layout::plan(layer)?;
-        let mut programs = HashMap::new();
+        let mut programs: HashMap<TaskKey, ProgramMem> = HashMap::new();
         for mi in 0..plan.m {
             let f = flavor_of(mi, plan.m);
             let key = (plan.slice_ics(mi), f.first_slice, f.last_slice);
             if !programs.contains_key(&key) {
-                programs.insert(key, build_conv_task(&plan, key.0, f)?);
+                let pm = build_conv_task(&plan, key.0, f)?;
+                verify_on_insert(
+                    pm.program(),
+                    &AbiSpec::conv(),
+                    &format!("conv task {key:?} of layer {}", layer.name),
+                )?;
+                programs.insert(key, pm);
             }
         }
-        Ok(Self { plan, programs, analytic: OnceLock::new() })
+        Ok(Self { plan, programs, analytic: OnceLock::new(), analyzer: OnceLock::new() })
     }
 
     pub(crate) fn task_key(&self, mi: usize) -> TaskKey {
@@ -166,6 +197,37 @@ impl CompiledConv {
 
     pub(crate) fn program(&self, key: &TaskKey) -> &ProgramMem {
         &self.programs[key]
+    }
+
+    /// All task programs of this shape (for the `lint` CLI walk).
+    pub(crate) fn programs(&self) -> impl Iterator<Item = (&TaskKey, &ProgramMem)> {
+        self.programs.iter()
+    }
+
+    /// The ABI environment `run_dense` establishes for the row-0 task:
+    /// r2 = staged input base (first output row), r4/r5/r6 = output /
+    /// psum / filter stream bases. Later rows differ only in r2; cycle
+    /// counts are compared at row 0 (DM bank interleaving makes other
+    /// rows' LB-fill conflicts depend on the row address).
+    pub(crate) fn abi_env(&self) -> AbiEnv {
+        AbiEnv::new(&[
+            (2, self.plan.dm.input as i32),
+            (4, self.plan.dm.out as i32),
+            (5, self.plan.dm.psum as i32),
+            (6, self.plan.dm.filt as i32),
+        ])
+    }
+
+    /// Static cycle predictions per task program, lazily computed and
+    /// cached on the compiled shape.
+    pub(crate) fn analyzer_timing(&self) -> &HashMap<TaskKey, Result<StaticTiming, String>> {
+        self.analyzer.get_or_init(|| {
+            let env = self.abi_env();
+            self.programs
+                .iter()
+                .map(|(k, pm)| (*k, predict(pm.program(), &env).map_err(|e| e.to_string())))
+                .collect()
+        })
     }
 }
 
@@ -177,6 +239,8 @@ pub struct CompiledPool {
     pub(crate) plan: PoolPlan,
     pub(crate) pm: ProgramMem,
     pub(crate) analytic: OnceLock<(u64, CoreStats)>,
+    /// Static cycle prediction for the one-row task program.
+    analyzer: OnceLock<Result<StaticTiming, String>>,
 }
 
 impl CompiledPool {
@@ -184,7 +248,25 @@ impl CompiledPool {
         let one_row = PoolLayer { ih: layer.size, ..layer.clone() };
         let plan = plan_pool(&one_row)?;
         let pm = build_pool_task(&plan)?;
-        Ok(Self { plan, pm, analytic: OnceLock::new() })
+        verify_on_insert(
+            pm.program(),
+            &AbiSpec::pool(),
+            &format!("pool task of layer {}", layer.name),
+        )?;
+        Ok(Self { plan, pm, analytic: OnceLock::new(), analyzer: OnceLock::new() })
+    }
+
+    /// The ABI environment `run_pool` establishes: r2 = staged input
+    /// base, r4 = output base.
+    pub(crate) fn abi_env(&self) -> AbiEnv {
+        AbiEnv::new(&[(2, self.plan.dm_input as i32), (4, self.plan.dm_out as i32)])
+    }
+
+    /// Static cycle prediction, lazily computed and cached.
+    pub(crate) fn analyzer_timing(&self) -> &Result<StaticTiming, String> {
+        self.analyzer.get_or_init(|| {
+            predict(self.pm.program(), &self.abi_env()).map_err(|e| e.to_string())
+        })
     }
 }
 
@@ -362,5 +444,132 @@ mod tests {
         assert!(Arc::ptr_eq(&c1, &c2), "pool plans depend on (iw, size, stride) only");
         let p3 = PoolLayer { name: "p3", ic: 16, ih: 8, iw: 13, size: 2, stride: 2 };
         assert!(!Arc::ptr_eq(&c1, &cache.pool(&p3).unwrap()));
+    }
+
+    // ---- static cycle analyzer vs. cycle simulator ---------------------
+    //
+    // The analyzer (`isa::analysis::predict`) must reproduce the
+    // simulated cycle count and every stall counter *exactly*, for every
+    // task program of every shape in the matrix below. Comparison is at
+    // the row-0 ABI (r2 = staged input base): later rows differ only in
+    // r2, and DM bank interleaving makes their LB-fill conflicts
+    // address-dependent — the same reason the tile-analytic profile
+    // samples real rows.
+
+    use crate::core::Cpu;
+    use crate::isa::SReg;
+    use crate::model::FcLayer;
+
+    /// Shapes excluded from exact static prediction. Every entry needs a
+    /// documented reason; `predict_exclusion_list_does_not_grow` pins
+    /// the list empty — the analyzer covers every generated conv, pool
+    /// and FC task program.
+    const PREDICT_EXCLUSIONS: &[&str] = &[];
+
+    fn conv_matrix() -> Vec<ConvLayer> {
+        vec![
+            // variant A (lanes = channels)
+            ConvLayer::new("va", 4, 24, 24, 16, 3, 3, 1, 1, 1),
+            // variant B (lanes = pixels)
+            ConvLayer::new("vb", 8, 13, 13, 48, 3, 3, 1, 1, 1),
+            // strided + padded (AlexNet conv2-like geometry)
+            ConvLayer::new("s2", 3, 23, 23, 16, 5, 5, 2, 2, 1),
+            // big window, stride 4, no pad (AlexNet conv1 geometry)
+            ConvLayer::new("c1", 3, 43, 43, 16, 11, 11, 4, 0, 1),
+            // grouped conv, dense per-group view
+            ConvLayer::new("grp", 8, 13, 13, 32, 3, 3, 1, 1, 2).per_group(),
+            // multi-slice (m > 1): first / middle / last task flavors
+            ConvLayer::new("ms", 768, 6, 6, 16, 3, 3, 1, 1, 1),
+            // odd channel count (partial last slice)
+            ConvLayer::new("odd", 5, 10, 10, 16, 3, 3, 1, 1, 1),
+            // partial output-channel tile
+            ConvLayer::new("ocp", 4, 10, 10, 24, 3, 3, 1, 0, 1),
+            // no fused ReLU (logits-style epilogue)
+            ConvLayer { relu: false, ..ConvLayer::new("nr", 4, 10, 10, 16, 3, 3, 1, 1, 1) },
+        ]
+    }
+
+    fn assert_conv_prediction_exact(l: &ConvLayer) {
+        assert!(!PREDICT_EXCLUSIONS.contains(&l.name), "{} is excluded", l.name);
+        let cc = CompiledConv::compile(l).unwrap();
+        let timings = cc.analyzer_timing();
+        for (key, pm) in cc.programs() {
+            let got = match &timings[key] {
+                Ok(t) => *t,
+                Err(e) => panic!("{} {key:?}: static prediction failed: {e}", l.name),
+            };
+            let mut cpu = Cpu::new(1 << 10);
+            cpu.regs.set_r(SReg(2), cc.plan.dm.input as i32);
+            cpu.regs.set_r(SReg(4), cc.plan.dm.out as i32);
+            cpu.regs.set_r(SReg(5), cc.plan.dm.psum as i32);
+            cpu.regs.set_r(SReg(6), cc.plan.dm.filt as i32);
+            let sim = cpu.run(pm).unwrap();
+            assert_eq!(
+                (got.cycles, got.bundles, got.hazard_stalls, got.lb_stalls),
+                (sim.cycles, sim.bundles, sim.hazard_stalls, sim.lb_stalls),
+                "{} {key:?}",
+                l.name
+            );
+            assert_eq!(
+                (got.branch_stalls, got.dma_wait_stalls, got.wide_ls_stalls),
+                (sim.branch_stalls, sim.dma_wait_stalls, sim.wide_ls_stalls),
+                "{} {key:?}",
+                l.name
+            );
+        }
+    }
+
+    #[test]
+    fn analyzer_cycles_match_simulator_on_conv_matrix() {
+        for l in conv_matrix() {
+            assert_conv_prediction_exact(&l);
+        }
+    }
+
+    #[test]
+    fn analyzer_cycles_match_simulator_on_fc_shapes() {
+        for (inf, outf) in [(64usize, 48usize), (37, 20), (128, 10), (2560, 16)] {
+            let fc = FcLayer::new("fc", inf, outf);
+            assert_conv_prediction_exact(&fc.as_conv());
+            let logits = FcLayer { relu: false, ..fc };
+            assert_conv_prediction_exact(&logits.as_conv());
+        }
+    }
+
+    #[test]
+    fn analyzer_cycles_match_simulator_on_pool_shapes() {
+        for (size, stride, iw, ic) in [(2usize, 2usize, 8usize, 16usize), (3, 2, 13, 16)] {
+            let l = PoolLayer { name: "p", ic, ih: size, iw, size, stride };
+            let cp = CompiledPool::compile(&l).unwrap();
+            let got = match cp.analyzer_timing() {
+                Ok(t) => *t,
+                Err(e) => panic!("pool {size}x{size}/{stride}: static prediction failed: {e}"),
+            };
+            let mut cpu = Cpu::new(1 << 10);
+            cpu.regs.set_r(SReg(2), cp.plan.dm_input as i32);
+            cpu.regs.set_r(SReg(4), cp.plan.dm_out as i32);
+            let sim = cpu.run(&cp.pm).unwrap();
+            assert_eq!(
+                (got.cycles, got.bundles, got.hazard_stalls, got.branch_stalls),
+                (sim.cycles, sim.bundles, sim.hazard_stalls, sim.branch_stalls),
+                "pool {size}x{size}/{stride}"
+            );
+        }
+    }
+
+    #[test]
+    fn predict_exclusion_list_does_not_grow() {
+        assert!(
+            PREDICT_EXCLUSIONS.is_empty(),
+            "static prediction exclusions must not grow: {PREDICT_EXCLUSIONS:?}"
+        );
+    }
+
+    #[test]
+    fn analyzer_timing_is_cached_per_shape() {
+        let cc = CompiledConv::compile(&small()).unwrap();
+        let a = cc.analyzer_timing() as *const _;
+        let b = cc.analyzer_timing() as *const _;
+        assert_eq!(a, b, "OnceLock must hand back the same map");
     }
 }

@@ -34,6 +34,25 @@
 //! | r6  | filter stream base (= dm.filt)                  |
 //!
 //! r0/r1/r3/r7..r10 are clobbered by the program.
+//!
+//! **Verified invariants.** Every program this builder emits is checked
+//! by the static verifier (`isa::analysis`, on plan-cache insert in
+//! debug builds and via the `lint` CLI) against [`AbiSpec::conv`]
+//! (r2/r4/r5/r6 predefined, `RoundMode`/`GateBits` host-owned). The
+//! load-bearing invariants the passes rely on:
+//!
+//! * `LbStride` and `FracShift` are written in the prologue, before any
+//!   line-buffer read or `InitA`/`QMov` — the dataflow pass treats them
+//!   as *undefined* at entry.
+//! * filter-FIFO pushes (`LdVF`) and FIFO-sourced MACs balance exactly
+//!   on every path: primed by 2 before the ic loop, drained by 2 after,
+//!   equal depth at every join, zero at `Halt`.
+//! * DMA is not used by task programs (staging is the coordinator's
+//!   job), so the DMA-protocol lints are trivially clean here.
+//! * every `LbLoad` extent covers the widest subsequent `Lb`/`LbVec`
+//!   read of that row under the programmed stride.
+//!
+//! [`AbiSpec::conv`]: crate::isa::analysis::AbiSpec::conv
 
 use crate::isa::*;
 use crate::mem::pm::ProgramMem;

@@ -32,6 +32,10 @@ pub enum CodegenError {
     Infeasible(String),
     Pm(crate::mem::pm::PmError),
     Internal(String),
+    /// The static verifier (`isa::analysis`) rejected a generated
+    /// program on plan-cache insert — always a codegen bug, surfaced in
+    /// debug builds / tests and under `ANALYZE=1`.
+    Verify(String),
 }
 
 impl std::fmt::Display for CodegenError {
@@ -42,6 +46,7 @@ impl std::fmt::Display for CodegenError {
             }
             CodegenError::Pm(e) => write!(f, "program does not fit PM: {e}"),
             CodegenError::Internal(what) => write!(f, "internal: {what}"),
+            CodegenError::Verify(what) => write!(f, "program verification failed: {what}"),
         }
     }
 }

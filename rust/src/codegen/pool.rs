@@ -104,7 +104,7 @@ pub fn build_pool_task(plan: &PoolPlan) -> Result<ProgramMem, CodegenError> {
         } else {
             SlotOp::AluI { f: AluFn::Add, w: Width::W32, rd: RCNT, ra: RCNT, imm: -1 }
         };
-        let v1 = if (2..n + 2).contains(&i) && i >= 2 && i - 1 >= 1 && i - 2 >= 1 {
+        let v1 = if (3..n + 2).contains(&i) {
             // fold vector loaded at bundle i-2 (skip i-2==0: that IS v4)
             VecOp::PoolMax { vd: VReg(4), va: VReg(4), vb: dest(i - 2) }
         } else {

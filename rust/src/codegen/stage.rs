@@ -14,6 +14,15 @@
 //!   variant B — OCh-major 16-pixel row chunks.
 //! * **psum row buffer**: per group, 12 accumulator entries of 64 B
 //!   (lanes-low 32 B then lanes-high 32 B, as `StA` writes them).
+//!
+//! **Invariant (checked by `isa::analysis`):** staging happens strictly
+//! *before* `Cpu::run` and the task programs never issue DMA, so no
+//! port-0 access in a task can race an in-flight transfer — the
+//! verifier's DMA-overlap lint would flag exactly that. The 2 slack
+//! vectors at the end of the filter stream are load-bearing: the FIFO
+//! prefetch reads 2 vectors past the last consumed one, and dropping
+//! them would make the generated programs read unstaged DM (caught at
+//! the FIFO-balance level, since prime/drain counts would then change).
 
 use crate::isa::LANES;
 use crate::mem::dm::DataMem;

@@ -8,7 +8,11 @@ use crate::mem::pm::ProgramMem;
 use crate::mem::MemInterface;
 
 use super::regfile::{can_access_vrl, can_read_vr, can_write_vr, own_acc_base, RegFiles, Who};
-use super::{BRANCH_BUBBLES, LOAD_USE_LATENCY, MAC_TO_QMOV_LATENCY, QMOV_TO_READ_LATENCY};
+use super::BRANCH_BUBBLES;
+use crate::isa::analysis::timing;
+
+/// Filter FIFO depth (defined by the shared timing model).
+pub use crate::isa::analysis::timing::FIFO_DEPTH;
 
 #[derive(Debug)]
 pub enum SimError {
@@ -153,19 +157,15 @@ pub struct Cpu {
     halted: bool,
     loops: Vec<LoopFrame>,
     /// Scoreboard: cycle at which each VR / VRl entry / scalar reg is
-    /// ready for a consumer.
-    vr_ready: [u64; 16],
-    vrl_ready: [u64; 12],
-    r_ready: [u64; 32],
+    /// ready for a consumer. Shared model with `isa::analysis::predict`
+    /// (the static cycle analyzer) via `isa::analysis::timing`.
+    sb: timing::Scoreboard,
     /// Filter FIFO of the operand fetch & prepare stage: (vector, cycle
     /// at which it is usable). Depth 8.
     filt_fifo: std::collections::VecDeque<([i16; LANES], u64)>,
     /// Watchdog limit.
     pub max_cycles: u64,
 }
-
-/// Filter FIFO depth.
-pub const FIFO_DEPTH: usize = 8;
 
 impl Cpu {
     pub fn new(ext_capacity: usize) -> Self {
@@ -177,9 +177,7 @@ impl Cpu {
             pc: 0,
             halted: false,
             loops: Vec::with_capacity(4),
-            vr_ready: [0; 16],
-            vrl_ready: [0; 12],
-            r_ready: [0; 32],
+            sb: timing::Scoreboard::new(),
             filt_fifo: std::collections::VecDeque::with_capacity(FIFO_DEPTH),
             max_cycles: 10_000_000_000,
         }
@@ -212,9 +210,7 @@ impl Cpu {
         self.pc = 0;
         self.halted = false;
         self.loops.clear();
-        self.vr_ready = [0; 16];
-        self.vrl_ready = [0; 12];
-        self.r_ready = [0; 32];
+        self.sb.reset();
         self.filt_fifo.clear();
     }
 
@@ -258,6 +254,10 @@ impl Cpu {
         // ---- line-buffer interlock ------------------------------------
         self.wait_lb_operands(bundle)?;
 
+        // the cycle the bundle actually issues at (post-stall); all
+        // scoreboard writes below are anchored here
+        let issue_now = self.stats.cycles;
+
         // ---- execute the three vector slots ----------------------------
         let mut any_mac = false;
         let mut fifo_used = false;
@@ -281,6 +281,9 @@ impl Cpu {
 
         // ---- execute slot 0 (may redirect pc / block) ------------------
         let next_pc = self.exec_slot0(&bundle.slot0)?;
+
+        // ---- scoreboard writes (shared rules with the analyzer) --------
+        timing::retire_bundle(bundle, issue_now, &mut self.sb);
 
         self.stats.bundles += 1;
         self.advance_cycle();
@@ -321,98 +324,19 @@ impl Cpu {
     // ------------------------------------------------------------------
 
     /// Cycles to wait before this bundle may issue (RAW on scoreboard).
+    /// The rules live in `isa::analysis::timing::issue_ready`, shared
+    /// with the static cycle analyzer.
     fn issue_stall(&self, b: &Bundle) -> Result<u64, SimError> {
         let now = self.stats.cycles;
-        let mut ready = now;
-        let need_vr = |vr: VReg, ready: &mut u64| {
-            *ready = (*ready).max(self.vr_ready[vr.0 as usize]);
-        };
-        for (i, op) in b.v.iter().enumerate() {
-            let s = i as u8 + 1;
-            match *op {
-                VecOp::Mac { a, b } | VecOp::Mul { a, b } => {
-                    match a {
-                        ASrc::VrBcast { vr, .. } => need_vr(vr, &mut ready),
-                        ASrc::VrQuad { vr } => {
-                            for k in 0..4 {
-                                need_vr(VReg(vr.0 + k), &mut ready);
-                            }
-                        }
-                        ASrc::Lb { .. } | ASrc::LbVec { .. } => {}
-                    }
-                    match b {
-                        BSrc::Vr { vr }
-                        | BSrc::VrLane { vr, .. }
-                        | BSrc::VrLaneQuad { vr, .. } => need_vr(vr, &mut ready),
-                        BSrc::VrQuad { vr } => {
-                            for k in 0..4 {
-                                need_vr(VReg(vr.0 + k), &mut ready);
-                            }
-                        }
-                        BSrc::Fifo | BSrc::FifoLaneQuad { .. } => match self.filt_fifo.front() {
-                            Some((_, rdy)) => ready = ready.max(*rdy),
-                            None => {
-                                return Err(SimError::Fault {
-                                    cycle: now,
-                                    pc: self.pc,
-                                    what: "vector MAC with empty filter FIFO".into(),
-                                })
-                            }
-                        },
-                    }
-                }
-                VecOp::QMov { j, .. } => {
-                    let a = own_acc_base(s) + j;
-                    ready = ready.max(self.vrl_ready[a as usize]);
-                }
-                VecOp::EOp { va, vb, .. } => {
-                    need_vr(va, &mut ready);
-                    need_vr(vb, &mut ready);
-                }
-                VecOp::EOpI { va, .. } => need_vr(va, &mut ready),
-                VecOp::Mov { vs, .. } | VecOp::Relu { vs, .. } | VecOp::Bcst { vs, .. } => {
-                    need_vr(vs, &mut ready)
-                }
-                VecOp::PoolMax { va, vb, .. } => {
-                    need_vr(va, &mut ready);
-                    need_vr(vb, &mut ready);
-                }
-                VecOp::InitA { vr } | VecOp::InitALane { vr, .. } => need_vr(vr, &mut ready),
-                VecOp::ClrA { .. } | VecOp::Nop => {}
-            }
+        let front = self.filt_fifo.front().map(|&(_, rdy)| rdy);
+        match timing::issue_ready(b, &self.sb, front, now) {
+            Ok(ready) => Ok(ready.saturating_sub(now)),
+            Err(timing::FifoEmpty) => Err(SimError::Fault {
+                cycle: now,
+                pc: self.pc,
+                what: "vector MAC with empty filter FIFO".into(),
+            }),
         }
-        match b.slot0 {
-            SlotOp::StV { vs, addr } => {
-                ready = ready
-                    .max(self.vr_ready[vs.0 as usize])
-                    .max(self.r_ready[addr.base.0 as usize]);
-            }
-            SlotOp::StA { as_, addr } => {
-                ready = ready
-                    .max(self.vrl_ready[as_.0 as usize])
-                    .max(self.r_ready[addr.base.0 as usize]);
-            }
-            SlotOp::Alu { ra, rb, .. } => {
-                ready = ready
-                    .max(self.r_ready[ra.0 as usize])
-                    .max(self.r_ready[rb.0 as usize]);
-            }
-            SlotOp::AluI { ra, .. } => ready = ready.max(self.r_ready[ra.0 as usize]),
-            SlotOp::Br { ra, rb, .. } => {
-                ready = ready
-                    .max(self.r_ready[ra.0 as usize])
-                    .max(self.r_ready[rb.0 as usize]);
-            }
-            SlotOp::LdS { addr, .. }
-            | SlotOp::StS { addr, .. }
-            | SlotOp::LdV { addr, .. }
-            | SlotOp::LdVF { addr }
-            | SlotOp::LdA { addr, .. } => {
-                ready = ready.max(self.r_ready[addr.base.0 as usize]);
-            }
-            _ => {}
-        }
-        Ok(ready.saturating_sub(now))
     }
 
     /// Block until every LB operand of this bundle is readable.
@@ -577,7 +501,6 @@ impl Cpu {
     }
 
     fn exec_vec(&mut self, s: u8, op: VecOp) -> Result<(), SimError> {
-        let now = self.stats.cycles;
         match op {
             VecOp::Nop => {}
             VecOp::Mac { a, b } | VecOp::Mul { a, b } => {
@@ -672,10 +595,6 @@ impl Cpu {
                         }
                     }
                 }
-                let ready = now + MAC_TO_QMOV_LATENCY;
-                for j in 0..SLICES {
-                    self.vrl_ready[base + j] = ready;
-                }
                 self.stats.vmacs += 1;
                 self.stats.mac_ops += (SLICES * LANES) as u64;
                 if gate_bits <= 8 {
@@ -688,7 +607,6 @@ impl Cpu {
                 for j in 0..SLICES as u8 {
                     if only.is_none() || only == Some(j) {
                         self.regs.vrl[(base + j) as usize] = [0; LANES];
-                        self.vrl_ready[(base + j) as usize] = now;
                     }
                 }
                 self.stats.acc_setup += 1;
@@ -705,7 +623,6 @@ impl Cpu {
                     for lane in 0..LANES {
                         acc[lane] = fixed::mac_init(bias[lane] as i32, shift);
                     }
-                    self.vrl_ready[(base + j) as usize] = now;
                 }
                 self.stats.acc_setup += 1;
                 self.stats.vr_reads += 1;
@@ -724,7 +641,6 @@ impl Cpu {
                     }
                     let v = fixed::mac_init(bias[lane] as i32, shift);
                     self.regs.vrl[(base + j) as usize] = [v; LANES];
-                    self.vrl_ready[(base + j) as usize] = now;
                 }
                 self.stats.acc_setup += 1;
                 self.stats.vr_reads += 1;
@@ -743,7 +659,6 @@ impl Cpu {
                 let out: [i16; LANES] =
                     std::array::from_fn(|l| fixed::requantize(acc[l], shift, mode, relu));
                 self.regs.vr[vd.0 as usize] = out;
-                self.vr_ready[vd.0 as usize] = now + QMOV_TO_READ_LATENCY;
                 self.stats.qmovs += 1;
                 self.stats.vr_writes += 1;
             }
@@ -758,7 +673,6 @@ impl Cpu {
                 let b = self.regs.vr[vb.0 as usize];
                 let out: [i16; LANES] = std::array::from_fn(|l| veop(f, a[l], b[l]));
                 self.regs.vr[vd.0 as usize] = out;
-                self.vr_ready[vd.0 as usize] = now + 1;
                 self.stats.veops += 1;
                 self.stats.vr_reads += 2;
                 self.stats.vr_writes += 1;
@@ -770,7 +684,6 @@ impl Cpu {
                 let a = self.regs.vr[va.0 as usize];
                 let out: [i16; LANES] = std::array::from_fn(|l| veop(f, a[l], imm));
                 self.regs.vr[vd.0 as usize] = out;
-                self.vr_ready[vd.0 as usize] = now + 1;
                 self.stats.veops += 1;
                 self.stats.vr_reads += 1;
                 self.stats.vr_writes += 1;
@@ -780,7 +693,6 @@ impl Cpu {
                     return Err(self.err_access(format!("vALU{s} mov")));
                 }
                 self.regs.vr[vd.0 as usize] = self.regs.vr[vs.0 as usize];
-                self.vr_ready[vd.0 as usize] = now + 1;
                 self.stats.veops += 1;
                 self.stats.vr_reads += 1;
                 self.stats.vr_writes += 1;
@@ -791,7 +703,6 @@ impl Cpu {
                 }
                 let v = self.regs.vr[vs.0 as usize][lane as usize % LANES];
                 self.regs.vr[vd.0 as usize] = [v; LANES];
-                self.vr_ready[vd.0 as usize] = now + 1;
                 self.stats.veops += 1;
                 self.stats.vr_reads += 1;
                 self.stats.vr_writes += 1;
@@ -806,7 +717,6 @@ impl Cpu {
                 let a = self.regs.vr[vs.0 as usize];
                 let out: [i16; LANES] = std::array::from_fn(|l| a[l].max(0));
                 self.regs.vr[vd.0 as usize] = out;
-                self.vr_ready[vd.0 as usize] = now + 1;
                 self.stats.sfu_ops += 1;
                 self.stats.vr_reads += 1;
                 self.stats.vr_writes += 1;
@@ -822,7 +732,6 @@ impl Cpu {
                 let b = self.regs.vr[vb.0 as usize];
                 let out: [i16; LANES] = std::array::from_fn(|l| a[l].max(b[l]));
                 self.regs.vr[vd.0 as usize] = out;
-                self.vr_ready[vd.0 as usize] = now + 1;
                 self.stats.sfu_ops += 1;
                 self.stats.vr_reads += 2;
                 self.stats.vr_writes += 1;
@@ -914,7 +823,6 @@ impl Cpu {
                     .read_i16_p0(a)
                     .map_err(|e| self.err_fault(e.to_string()))?;
                 self.regs.set_r(rd, v as i32);
-                self.r_ready[rd.0 as usize] = now + LOAD_USE_LATENCY;
                 self.stats.sloads += 1;
                 PcUpdate::Seq
             }
@@ -936,7 +844,6 @@ impl Cpu {
                     .read_vec_p0(a)
                     .map_err(|e| self.err_fault(e.to_string()))?;
                 self.regs.vr[vd.0 as usize] = v;
-                self.vr_ready[vd.0 as usize] = now + LOAD_USE_LATENCY;
                 self.stats.vloads += 1;
                 PcUpdate::Seq
             }
@@ -960,7 +867,7 @@ impl Cpu {
                     .dm
                     .read_vec_p0(a)
                     .map_err(|e| self.err_fault(e.to_string()))?;
-                self.filt_fifo.push_back((v, now + LOAD_USE_LATENCY));
+                self.filt_fifo.push_back((v, timing::fifo_entry_ready(now)));
                 self.stats.vloads += 1;
                 PcUpdate::Seq
             }
@@ -985,7 +892,6 @@ impl Cpu {
                 for l in 0..LANES {
                     acc[l] = (lo[l] as u16 as i32) | ((hi[l] as i32) << 16);
                 }
-                self.vrl_ready[ad.0 as usize] = now + LOAD_USE_LATENCY + 1;
                 self.stats.aloads += 1;
                 PcUpdate::Seq
             }
@@ -1091,7 +997,7 @@ enum PcUpdate {
 }
 
 #[inline]
-fn alu(f: AluFn, w: Width, a: i32, b: i32) -> i32 {
+pub(crate) fn alu(f: AluFn, w: Width, a: i32, b: i32) -> i32 {
     let v = match f {
         AluFn::Add => a.wrapping_add(b),
         AluFn::Sub => a.wrapping_sub(b),
@@ -1142,6 +1048,7 @@ fn diff_stats(before: &CoreStats, after: &CoreStats) -> CoreStats {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::MAC_TO_QMOV_LATENCY;
     use crate::isa::asm::assemble;
     use crate::mem::pm::ProgramMem;
 

@@ -31,11 +31,9 @@ pub mod regfile;
 pub use cpu::{CoreStats, Cpu, SimError};
 pub use regfile::RegFiles;
 
-/// Load-to-use latency for DM loads (cycles).
-pub const LOAD_USE_LATENCY: u64 = 2;
-/// MAC-to-requantize latency (cycles).
-pub const MAC_TO_QMOV_LATENCY: u64 = 4;
-/// Requantize-to-read latency (cycles).
-pub const QMOV_TO_READ_LATENCY: u64 = 3;
-/// Taken-branch bubbles.
-pub const BRANCH_BUBBLES: u64 = 2;
+// The latency constants live in `isa::analysis::timing` — the single
+// source of truth shared between this simulator and the static cycle
+// analyzer — and are re-exported here for the existing callers.
+pub use crate::isa::analysis::timing::{
+    BRANCH_BUBBLES, LOAD_USE_LATENCY, MAC_TO_QMOV_LATENCY, QMOV_TO_READ_LATENCY,
+};

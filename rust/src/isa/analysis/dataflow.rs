@@ -1,0 +1,285 @@
+//! Pass 2 — def-before-use dataflow.
+//!
+//! A forward *must-defined* analysis over the CFG: a register / CSR
+//! counts as defined at a program point only if it is written on every
+//! path from entry to that point (join = intersection). The entry state
+//! is the task ABI (host-written scalar registers) plus the host-owned
+//! `RoundMode`/`GateBits` CSRs; `FracShift` and `LbStride` must be
+//! written by the program itself before any dependent op.
+//!
+//! Within a bundle, uses and defs follow the interpreter's execution
+//! order: vector slots 1..=3 first (each slot's reads before its
+//! writes), then slot 0 — so a `StV` legitimately sees a same-bundle
+//! `QMov`'s definition, exactly like the hardware write path.
+//!
+//! Out-of-range register indices are skipped here (pass 3 reports them
+//! as `RegionViolation`); intersection over a finite bitset lattice
+//! guarantees the fixpoint terminates.
+
+use crate::core::regfile::own_acc_base;
+use crate::isa::{ASrc, BSrc, Bundle, Csr, Program, SReg, SlotOp, VReg, VecOp, SLICES};
+
+use super::{finding, AbiSpec, Cfg, Finding, FindingKind};
+
+const CSR_FRAC: u8 = 1 << 0;
+const CSR_ROUND: u8 = 1 << 1;
+const CSR_GATE: u8 = 1 << 2;
+const CSR_STRIDE: u8 = 1 << 3;
+
+fn csr_bit(c: Csr) -> u8 {
+    match c {
+        Csr::FracShift => CSR_FRAC,
+        Csr::RoundMode => CSR_ROUND,
+        Csr::GateBits => CSR_GATE,
+        Csr::LbStride => CSR_STRIDE,
+    }
+}
+
+fn csr_name(c: Csr) -> &'static str {
+    match c {
+        Csr::FracShift => "FracShift",
+        Csr::RoundMode => "RoundMode",
+        Csr::GateBits => "GateBits",
+        Csr::LbStride => "LbStride",
+    }
+}
+
+/// Must-defined bitsets at a program point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Defs {
+    r: u32,
+    vr: u16,
+    vrl: u16,
+    csr: u8,
+}
+
+impl Defs {
+    fn inter(a: Defs, b: Defs) -> Defs {
+        Defs { r: a.r & b.r, vr: a.vr & b.vr, vrl: a.vrl & b.vrl, csr: a.csr & b.csr }
+    }
+}
+
+fn use_r(d: &Defs, r: SReg, miss: &mut dyn FnMut(String)) {
+    if r.0 < 32 && d.r & (1u32 << r.0) == 0 {
+        miss(format!("r{} read before any definition", r.0));
+    }
+}
+
+fn def_r(d: &mut Defs, r: SReg) {
+    if r.0 < 32 {
+        d.r |= 1 << r.0;
+    }
+}
+
+fn use_vr(d: &Defs, v: VReg, miss: &mut dyn FnMut(String)) {
+    if v.0 < 16 && d.vr & (1u16 << v.0) == 0 {
+        miss(format!("v{} read before any definition", v.0));
+    }
+}
+
+fn def_vr(d: &mut Defs, v: VReg) {
+    if v.0 < 16 {
+        d.vr |= 1 << v.0;
+    }
+}
+
+fn use_acc(d: &Defs, a: u16, miss: &mut dyn FnMut(String)) {
+    if a < 12 && d.vrl & (1u16 << a) == 0 {
+        miss(format!("accumulator a{a} read before any definition"));
+    }
+}
+
+fn def_acc(d: &mut Defs, a: u16) {
+    if a < 12 {
+        d.vrl |= 1 << a;
+    }
+}
+
+fn use_csr(d: &Defs, c: Csr, miss: &mut dyn FnMut(String)) {
+    if d.csr & csr_bit(c) == 0 {
+        miss(format!("CSR {} read before written", csr_name(c)));
+    }
+}
+
+/// One bundle's transfer function; `miss` receives a message per
+/// use-before-def. The same function drives both the fixpoint (no-op
+/// sink) and the reporting sweep, so they cannot disagree.
+fn step(b: &Bundle, d: &mut Defs, miss: &mut dyn FnMut(String)) {
+    for (i, op) in b.v.iter().enumerate() {
+        let s = i as u8 + 1;
+        let base = own_acc_base(s) as u16;
+        match *op {
+            VecOp::Nop => {}
+            VecOp::Mac { a, b } | VecOp::Mul { a, b } => {
+                let accumulates = matches!(op, VecOp::Mac { .. });
+                match a {
+                    // both LB source shapes apply the per-slice/lane stride
+                    ASrc::Lb { .. } | ASrc::LbVec { .. } => use_csr(d, Csr::LbStride, miss),
+                    ASrc::VrBcast { vr, .. } => use_vr(d, vr, miss),
+                    ASrc::VrQuad { vr } => {
+                        for k in 0..SLICES as u8 {
+                            use_vr(d, VReg(vr.0.wrapping_add(k)), miss);
+                        }
+                    }
+                }
+                match b {
+                    BSrc::Vr { vr } | BSrc::VrLane { vr, .. } | BSrc::VrLaneQuad { vr, .. } => {
+                        use_vr(d, vr, miss)
+                    }
+                    BSrc::VrQuad { vr } => {
+                        for k in 0..SLICES as u8 {
+                            use_vr(d, VReg(vr.0.wrapping_add(k)), miss);
+                        }
+                    }
+                    // FIFO occupancy is pass 3's job
+                    BSrc::Fifo | BSrc::FifoLaneQuad { .. } => {}
+                }
+                use_csr(d, Csr::GateBits, miss);
+                if accumulates {
+                    for j in 0..SLICES as u16 {
+                        use_acc(d, base + j, miss);
+                    }
+                }
+                for j in 0..SLICES as u16 {
+                    def_acc(d, base + j);
+                }
+            }
+            VecOp::ClrA { only } => {
+                for j in 0..SLICES as u8 {
+                    if only.is_none() || only == Some(j) {
+                        def_acc(d, base + j as u16);
+                    }
+                }
+            }
+            VecOp::InitA { vr } | VecOp::InitALane { vr, .. } => {
+                use_vr(d, vr, miss);
+                use_csr(d, Csr::FracShift, miss);
+                for j in 0..SLICES as u16 {
+                    def_acc(d, base + j);
+                }
+            }
+            VecOp::QMov { vd, j, .. } => {
+                use_acc(d, base + j as u16, miss);
+                use_csr(d, Csr::FracShift, miss);
+                use_csr(d, Csr::RoundMode, miss);
+                def_vr(d, vd);
+            }
+            VecOp::EOp { vd, va, vb, .. } => {
+                use_vr(d, va, miss);
+                use_vr(d, vb, miss);
+                def_vr(d, vd);
+            }
+            VecOp::EOpI { vd, va, .. } => {
+                use_vr(d, va, miss);
+                def_vr(d, vd);
+            }
+            VecOp::Mov { vd, vs } | VecOp::Bcst { vd, vs, .. } | VecOp::Relu { vd, vs } => {
+                use_vr(d, vs, miss);
+                def_vr(d, vd);
+            }
+            VecOp::PoolMax { vd, va, vb } => {
+                use_vr(d, va, miss);
+                use_vr(d, vb, miss);
+                def_vr(d, vd);
+            }
+        }
+    }
+    match b.slot0 {
+        SlotOp::Nop | SlotOp::Halt | SlotOp::Jmp { .. } | SlotOp::LoopI { .. } => {}
+        SlotOp::DmaWait { .. } => {}
+        SlotOp::Li { rd, .. } => def_r(d, rd),
+        SlotOp::Alu { rd, ra, rb, .. } => {
+            use_r(d, ra, miss);
+            use_r(d, rb, miss);
+            def_r(d, rd);
+        }
+        SlotOp::AluI { rd, ra, .. } => {
+            use_r(d, ra, miss);
+            def_r(d, rd);
+        }
+        SlotOp::Br { ra, rb, .. } => {
+            use_r(d, ra, miss);
+            use_r(d, rb, miss);
+        }
+        SlotOp::Loop { n, .. } => use_r(d, n, miss),
+        SlotOp::Csrwi { csr, .. } => d.csr |= csr_bit(csr),
+        SlotOp::Csrw { csr, rs } => {
+            use_r(d, rs, miss);
+            d.csr |= csr_bit(csr);
+        }
+        SlotOp::LdS { rd, addr } => {
+            use_r(d, addr.base, miss);
+            def_r(d, rd);
+        }
+        SlotOp::StS { rs, addr } => {
+            use_r(d, rs, miss);
+            use_r(d, addr.base, miss);
+        }
+        SlotOp::LdV { vd, addr } => {
+            use_r(d, addr.base, miss);
+            def_vr(d, vd);
+        }
+        SlotOp::StV { vs, addr } => {
+            use_vr(d, vs, miss);
+            use_r(d, addr.base, miss);
+        }
+        SlotOp::LdVF { addr } => use_r(d, addr.base, miss),
+        SlotOp::LdA { ad, addr } => {
+            use_r(d, addr.base, miss);
+            def_acc(d, ad.0 as u16);
+        }
+        SlotOp::StA { as_, addr } => {
+            use_acc(d, as_.0 as u16, miss);
+            use_r(d, addr.base, miss);
+        }
+        SlotOp::DmaLoad { ext, dm, len, .. } | SlotOp::DmaStore { ext, dm, len, .. } => {
+            use_r(d, ext, miss);
+            use_r(d, dm, miss);
+            use_r(d, len, miss);
+        }
+        SlotOp::LbLoad { dm, .. } => use_r(d, dm, miss),
+    }
+}
+
+pub(crate) fn check(prog: &Program, cfg: &Cfg, abi: &AbiSpec, out: &mut Vec<Finding>) {
+    let len = prog.bundles.len();
+    if len == 0 {
+        return;
+    }
+    let mut entry = Defs { r: 0, vr: 0, vrl: 0, csr: CSR_ROUND | CSR_GATE };
+    for &r in &abi.defined_sregs {
+        if r < 32 {
+            entry.r |= 1 << r;
+        }
+    }
+    let mut instate: Vec<Option<Defs>> = vec![None; len];
+    instate[0] = Some(entry);
+    let mut work = vec![0usize];
+    while let Some(pc) = work.pop() {
+        let mut d = instate[pc].unwrap();
+        step(&prog.bundles[pc], &mut d, &mut |_| {});
+        for &succ in &cfg.succs[pc] {
+            if succ >= len {
+                continue;
+            }
+            let merged = match instate[succ] {
+                None => d,
+                Some(old) => Defs::inter(old, d),
+            };
+            if instate[succ] != Some(merged) {
+                instate[succ] = Some(merged);
+                work.push(succ);
+            }
+        }
+    }
+    // report sweep over reachable bundles only
+    for pc in 0..len {
+        let Some(mut d) = instate[pc] else { continue };
+        let mut msgs: Vec<String> = Vec::new();
+        step(&prog.bundles[pc], &mut d, &mut |m| msgs.push(m));
+        msgs.dedup();
+        for m in msgs {
+            out.push(finding(prog, FindingKind::UseBeforeDef, pc, m));
+        }
+    }
+}

@@ -1,0 +1,251 @@
+//! Static analysis over decoded VLIW [`Program`]s.
+//!
+//! Four passes, run on every program the plan cache compiles (in debug
+//! builds and under `cargo test` always; opt-in for release via
+//! `ANALYZE=1` or the CLI's `--verify-programs`) and on demand through
+//! the `lint` CLI subcommand:
+//!
+//! 1. [`structural`] — CFG/loop well-formedness: branch and jump targets
+//!    in range, hardware-loop bodies in bounds with at most one level of
+//!    nesting, no branch in or out of a loop body, a reachable `Halt` on
+//!    every path, encoded image within the 16 KB PM.
+//! 2. [`dataflow`] — forward must-defined analysis over scalar regs,
+//!    vector regs, accumulators and CSRs: every read is preceded by a
+//!    definition on *all* paths (the task ABI seeds the entry state).
+//! 3. [`resource`] — protocol lints: filter-FIFO balance (no
+//!    pop-when-empty, no push-when-full, empty at halt, equal depth at
+//!    joins), DMA channel protocol (no restart without `DmaWait`, no
+//!    port-0 access overlapping an in-flight transfer), SFU placement,
+//!    register sub-region/port rules, and `LbLoad` extents vs LB reads.
+//! 4. [`predict`] — the static cycle analyzer: an exact symbolic replay
+//!    of the scoreboard/memory timing model (shared with the simulator
+//!    via [`timing`]) yielding per-program cycle counts without
+//!    simulation.
+//!
+//! Passes 1–3 are *verification* ([`verify`] → [`Report`]); pass 4 is
+//! *measurement* and assumes a clean report.
+
+pub mod predict;
+pub mod timing;
+
+mod dataflow;
+mod resource;
+mod structural;
+
+use std::fmt;
+
+use crate::isa::{disasm, Program, SlotOp};
+
+/// What a finding is about — the stable, testable classification.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum FindingKind {
+    // structural
+    BranchTargetOutOfRange,
+    LoopBodyOutOfRange,
+    LoopNesting,
+    BranchCrossesLoop,
+    NoHaltPath,
+    RunsOffEnd,
+    PmOverflow,
+    // dataflow
+    UseBeforeDef,
+    // resource / protocol
+    FifoUnderflow,
+    FifoOverflow,
+    FifoImbalance,
+    FifoResidual,
+    DmaRestart,
+    DmaOverlap,
+    SfuSlot,
+    LbExtent,
+    RegionViolation,
+}
+
+impl fmt::Display for FindingKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            FindingKind::BranchTargetOutOfRange => "branch-target-out-of-range",
+            FindingKind::LoopBodyOutOfRange => "loop-body-out-of-range",
+            FindingKind::LoopNesting => "loop-nesting",
+            FindingKind::BranchCrossesLoop => "branch-crosses-loop",
+            FindingKind::NoHaltPath => "no-halt-path",
+            FindingKind::RunsOffEnd => "runs-off-end",
+            FindingKind::PmOverflow => "pm-overflow",
+            FindingKind::UseBeforeDef => "use-before-def",
+            FindingKind::FifoUnderflow => "fifo-underflow",
+            FindingKind::FifoOverflow => "fifo-overflow",
+            FindingKind::FifoImbalance => "fifo-imbalance",
+            FindingKind::FifoResidual => "fifo-residual",
+            FindingKind::DmaRestart => "dma-restart",
+            FindingKind::DmaOverlap => "dma-overlap",
+            FindingKind::SfuSlot => "sfu-slot",
+            FindingKind::LbExtent => "lb-extent",
+            FindingKind::RegionViolation => "region-violation",
+        };
+        f.write_str(s)
+    }
+}
+
+/// One verifier finding, anchored at a bundle with its disassembly.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub kind: FindingKind,
+    pub pc: usize,
+    pub detail: String,
+    pub disasm: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] bundle {}: {}\n    {:5}: {}", self.kind, self.pc, self.detail, self.pc, self.disasm)
+    }
+}
+
+/// The verifier's verdict on one program.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    pub fn has(&self, kind: FindingKind) -> bool {
+        self.findings.iter().any(|f| f.kind == kind)
+    }
+}
+
+impl fmt::Display for Report {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_clean() {
+            return f.write_str("clean");
+        }
+        for (i, fd) in self.findings.iter().enumerate() {
+            if i > 0 {
+                writeln!(f)?;
+            }
+            write!(f, "{fd}")?;
+        }
+        Ok(())
+    }
+}
+
+/// The host/task calling convention a program is verified against:
+/// which scalar registers the executor initializes before `Cpu::run`.
+/// `RoundMode` and `GateBits` CSRs are host-owned (the executor writes
+/// gate bits; rounding has a reset default the numerics tests pin), so
+/// they count as pre-defined; `FracShift` and `LbStride` must be written
+/// by the program before any dependent op.
+#[derive(Debug, Clone)]
+pub struct AbiSpec {
+    pub name: &'static str,
+    pub defined_sregs: Vec<u8>,
+}
+
+impl AbiSpec {
+    /// No host-initialized registers (hand-written / test programs).
+    pub fn bare() -> Self {
+        Self { name: "bare", defined_sregs: vec![] }
+    }
+
+    /// The conv/FC task ABI (`executor::run_dense`): r2 = input row
+    /// base, r4 = output base, r5 = psum base, r6 = filter base.
+    pub fn conv() -> Self {
+        Self { name: "conv", defined_sregs: vec![2, 4, 5, 6] }
+    }
+
+    /// The pool task ABI (`executor::run_pool`): r2 = input row base,
+    /// r4 = output base.
+    pub fn pool() -> Self {
+        Self { name: "pool", defined_sregs: vec![2, 4] }
+    }
+}
+
+/// Run passes 1–3 and collect every finding, sorted by bundle index.
+pub fn verify(prog: &Program, abi: &AbiSpec) -> Report {
+    let mut out = Vec::new();
+    let cfg = Cfg::build(prog);
+    structural::check(prog, &cfg, &mut out);
+    dataflow::check(prog, &cfg, abi, &mut out);
+    resource::check(prog, &cfg, &mut out);
+    out.sort_by(|a, b| (a.pc, a.kind).cmp(&(b.pc, b.kind)));
+    Report { findings: out }
+}
+
+/// Whether the plan cache verifies programs on insert: always in debug
+/// builds (hence under `cargo test`), opt-in via `ANALYZE=1` (which the
+/// CLI's `--verify-programs` flag sets) in release.
+pub fn enabled() -> bool {
+    cfg!(debug_assertions) || std::env::var_os("ANALYZE").is_some_and(|v| v != "0")
+}
+
+pub(crate) fn finding(prog: &Program, kind: FindingKind, pc: usize, detail: String) -> Finding {
+    let disasm = prog.bundles.get(pc).map(disasm::bundle).unwrap_or_default();
+    Finding { kind, pc, detail, disasm }
+}
+
+/// Control-flow graph shared by the verifier passes.
+///
+/// Successors may include `len` (= "runs off the end"); callers filter.
+/// Hardware-loop back edges are modeled as an edge from a region's last
+/// bundle to its first. When several regions share a `last` bundle only
+/// the innermost back edge is real hardware behavior (`loop_next` checks
+/// the top frame only); the CFG keeps all of them, which is conservative
+/// for reachability and only ever *weakens* the must-analyses.
+pub(crate) struct Cfg {
+    /// Successor bundle indices per pc.
+    pub succs: Vec<Vec<usize>>,
+    /// Hardware-loop body regions: (loop-instruction pc, first, last).
+    pub regions: Vec<(usize, usize, usize)>,
+}
+
+impl Cfg {
+    pub fn build(prog: &Program) -> Cfg {
+        let mut regions = Vec::new();
+        for (pc, b) in prog.bundles.iter().enumerate() {
+            if let SlotOp::Loop { body, .. } | SlotOp::LoopI { body, .. } = b.slot0 {
+                if body > 0 {
+                    regions.push((pc, pc + 1, pc + body as usize));
+                }
+            }
+        }
+        let fall = |pc: usize| -> Vec<usize> {
+            let mut v: Vec<usize> = regions
+                .iter()
+                .filter(|&&(_, _, last)| last == pc)
+                .map(|&(_, start, _)| start)
+                .collect();
+            v.push(pc + 1);
+            v
+        };
+        let succs = prog
+            .bundles
+            .iter()
+            .enumerate()
+            .map(|(pc, b)| match b.slot0 {
+                SlotOp::Halt => vec![],
+                SlotOp::Jmp { target } => vec![target as usize],
+                SlotOp::Br { target, .. } => {
+                    let mut v = fall(pc);
+                    v.push(target as usize);
+                    v
+                }
+                // a loop instruction never takes its own enclosing
+                // back edge (push_loop returns Seq with the *new* frame
+                // innermost), so plain successors suffice
+                SlotOp::Loop { body, .. } if body > 0 => vec![pc + 1, pc + 1 + body as usize],
+                SlotOp::LoopI { n, body } if body > 0 => {
+                    if n == 0 {
+                        vec![pc + 1 + body as usize]
+                    } else {
+                        vec![pc + 1]
+                    }
+                }
+                _ => fall(pc),
+            })
+            .collect();
+        Cfg { succs, regions }
+    }
+}

@@ -1,0 +1,571 @@
+//! Pass 4 — the static cycle analyzer.
+//!
+//! Walks a decoded `Program` symbolically and produces the *exact*
+//! cycle/stall counts the interpreter would report, without touching
+//! tensor data. The walk reuses the interpreter's own building blocks so
+//! the two cannot drift:
+//!
+//! * issue stalls and write latencies come from [`super::timing`] — the
+//!   same functions `core::cpu` calls per dynamic bundle;
+//! * line-buffer fill pacing, DM bank conflicts and end-of-task drain
+//!   come from a real (zero-data) [`MemInterface`] driven at the real
+//!   addresses, because fill duration depends on which banks port 0
+//!   touches each cycle.
+//!
+//! Data values never matter for timing (pinned by the simulator test
+//! `analytic_samples_are_data_independent`); *addresses* do, so the
+//! walker keeps a constant lattice over the scalar register file seeded
+//! from the task [`AbiEnv`]. Anything address- or control-relevant that
+//! is not statically known (a branch on a loaded value, a DMA transfer,
+//! an unknown `LbStride`) aborts with [`PredictError::Unsupported`] —
+//! the caller's documented exclusion list. All codegen-emitted task
+//! programs are fully supported.
+//!
+//! The walk assumes a program that passes [`super::verify`]; on broken
+//! programs it may report a fault or panic just like the simulator.
+
+use std::collections::VecDeque;
+use std::fmt;
+
+use crate::isa::{ASrc, BSrc, Bundle, Csr, Program, SReg, SlotOp, VecOp};
+use crate::mem::linebuf::LB_ROWS;
+use crate::mem::MemInterface;
+
+use super::timing::{self, Scoreboard, BRANCH_BUBBLES, FIFO_DEPTH};
+
+/// Scalar registers the host writes before `Cpu::run` — the task-ABI
+/// environment the prediction is made for. Unlisted registers are
+/// treated as *unknown*, so a program depending on them for addresses or
+/// control flow is rejected as `Unsupported` rather than silently
+/// assuming the reset value.
+#[derive(Debug, Clone, Default)]
+pub struct AbiEnv {
+    pub regs: Vec<(SReg, i32)>,
+}
+
+impl AbiEnv {
+    pub fn new(regs: &[(u8, i32)]) -> Self {
+        Self { regs: regs.iter().map(|&(r, v)| (SReg(r), v)).collect() }
+    }
+}
+
+/// The analyzer's cycle prediction — the timing-relevant subset of
+/// `CoreStats`, asserted equal field-for-field against simulation.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StaticTiming {
+    pub cycles: u64,
+    pub bundles: u64,
+    pub hazard_stalls: u64,
+    pub lb_stalls: u64,
+    pub branch_stalls: u64,
+    pub dma_wait_stalls: u64,
+    pub wide_ls_stalls: u64,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PredictError {
+    /// The program uses a construct the symbolic walk cannot bound.
+    Unsupported { pc: usize, what: String },
+    /// The walk hit a machine fault (the verifier should have caught
+    /// it first; kept as an error so `lint` can report it).
+    Fault { pc: usize, what: String },
+    Watchdog(u64),
+    RanOff { pc: usize },
+}
+
+impl fmt::Display for PredictError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PredictError::Unsupported { pc, what } => {
+                write!(f, "bundle {pc}: unsupported for static prediction: {what}")
+            }
+            PredictError::Fault { pc, what } => write!(f, "bundle {pc}: fault: {what}"),
+            PredictError::Watchdog(n) => write!(f, "watchdog: exceeded {n} cycles"),
+            PredictError::RanOff { pc } => write!(f, "ran past the last bundle (pc={pc})"),
+        }
+    }
+}
+
+impl std::error::Error for PredictError {}
+
+/// Predict the exact per-run timing of `prog` under the given ABI
+/// environment (fresh CSRs, empty FIFO/loop stack — the state
+/// `Cpu::reset_for_run` establishes).
+pub fn predict(prog: &Program, env: &AbiEnv) -> Result<StaticTiming, PredictError> {
+    let mut w = Walker::new(env);
+    while !w.halted {
+        if w.t.cycles > w.max_cycles {
+            return Err(PredictError::Watchdog(w.max_cycles));
+        }
+        if w.pc >= prog.bundles.len() {
+            return Err(PredictError::RanOff { pc: w.pc });
+        }
+        w.step(prog)?;
+    }
+    w.t.cycles += w.mem.drain();
+    Ok(w.t)
+}
+
+struct LoopFrame {
+    start: usize,
+    last: usize,
+    remaining: u32,
+}
+
+enum PcUpdate {
+    Seq,
+    Jump(usize),
+    Halt,
+}
+
+/// The symbolic machine: real memory-system timing state, constant
+/// lattice for scalars, no vector/accumulator data at all.
+struct Walker {
+    regs: [Option<i32>; 32],
+    lb_stride: u8,
+    mem: MemInterface,
+    sb: Scoreboard,
+    /// Filter FIFO: ready cycles only (contents are irrelevant).
+    fifo: VecDeque<u64>,
+    loops: Vec<LoopFrame>,
+    pc: usize,
+    halted: bool,
+    t: StaticTiming,
+    max_cycles: u64,
+}
+
+impl Walker {
+    fn new(env: &AbiEnv) -> Self {
+        let mut regs = [None; 32];
+        for &(r, v) in &env.regs {
+            if (r.0 as usize) < 32 {
+                regs[r.0 as usize] = Some(v);
+            }
+        }
+        Self {
+            regs,
+            lb_stride: 1, // CsrFile::default()
+            mem: MemInterface::new(0),
+            sb: Scoreboard::new(),
+            fifo: VecDeque::with_capacity(FIFO_DEPTH),
+            loops: Vec::with_capacity(4),
+            pc: 0,
+            halted: false,
+            t: StaticTiming::default(),
+            max_cycles: 10_000_000_000,
+        }
+    }
+
+    fn unsupported(&self, what: impl Into<String>) -> PredictError {
+        PredictError::Unsupported { pc: self.pc, what: what.into() }
+    }
+
+    fn fault(&self, what: impl Into<String>) -> PredictError {
+        PredictError::Fault { pc: self.pc, what: what.into() }
+    }
+
+    fn known(&self, r: SReg, why: &str) -> Result<i32, PredictError> {
+        self.regs[r.0 as usize]
+            .ok_or_else(|| self.unsupported(format!("{why} depends on unknown r{}", r.0)))
+    }
+
+    /// Mirror of `Cpu::advance_cycle`.
+    fn advance_cycle(&mut self) {
+        self.t.cycles += 1;
+        if self.mem.background_idle() {
+            self.mem.dm.end_cycle();
+        } else {
+            self.mem.tick();
+        }
+    }
+
+    /// Mirror of `Cpu::step`, with data replaced by the constant lattice.
+    fn step(&mut self, prog: &Program) -> Result<(), PredictError> {
+        let bundle = &prog.bundles[self.pc];
+
+        let ready = timing::issue_ready(bundle, &self.sb, self.fifo.front().copied(), self.t.cycles)
+            .map_err(|timing::FifoEmpty| self.fault("vector MAC with empty filter FIFO"))?;
+        let stall = ready.saturating_sub(self.t.cycles);
+        for _ in 0..stall {
+            self.t.hazard_stalls += 1;
+            self.advance_cycle();
+        }
+
+        self.wait_lb_operands(bundle)?;
+        let issue_now = self.t.cycles;
+
+        // vector slots: only the FIFO pop is timing-relevant (scoreboard
+        // writes are applied by retire_bundle below)
+        let fifo_used = bundle.v.iter().any(|op| {
+            matches!(
+                op,
+                VecOp::Mac { b: BSrc::Fifo | BSrc::FifoLaneQuad { .. }, .. }
+                    | VecOp::Mul { b: BSrc::Fifo | BSrc::FifoLaneQuad { .. }, .. }
+            )
+        });
+        if fifo_used {
+            self.fifo.pop_front();
+        }
+
+        let next_pc = self.exec_slot0(&bundle.slot0)?;
+        timing::retire_bundle(bundle, issue_now, &mut self.sb);
+
+        self.t.bundles += 1;
+        self.advance_cycle();
+
+        match next_pc {
+            PcUpdate::Seq => self.pc = self.loop_next(self.pc),
+            PcUpdate::Jump(t) => {
+                self.pc = t;
+                for _ in 0..BRANCH_BUBBLES {
+                    self.t.branch_stalls += 1;
+                    self.advance_cycle();
+                }
+            }
+            PcUpdate::Halt => self.halted = true,
+        }
+        Ok(())
+    }
+
+    fn loop_next(&mut self, pc: usize) -> usize {
+        if let Some(frame) = self.loops.last_mut() {
+            if pc == frame.last {
+                if frame.remaining > 0 {
+                    frame.remaining -= 1;
+                    return frame.start;
+                }
+                self.loops.pop();
+            }
+        }
+        pc + 1
+    }
+
+    /// Mirror of `Cpu::wait_lb_operands` (the LB fill-progress interlock).
+    fn wait_lb_operands(&mut self, b: &Bundle) -> Result<(), PredictError> {
+        loop {
+            let mut blocked = false;
+            for op in b.v.iter() {
+                let lb_ref = match *op {
+                    VecOp::Mac { a: ASrc::Lb { row, off }, .. }
+                    | VecOp::Mul { a: ASrc::Lb { row, off }, .. } => {
+                        Some((row, off as usize + 3 * self.lb_stride as usize))
+                    }
+                    VecOp::Mac { a: ASrc::LbVec { row, off }, .. }
+                    | VecOp::Mul { a: ASrc::LbVec { row, off }, .. } => {
+                        Some((row, off as usize + 15 * self.lb_stride as usize))
+                    }
+                    _ => None,
+                };
+                if let Some((row, max_idx)) = lb_ref {
+                    let row = row as usize;
+                    if row >= LB_ROWS {
+                        return Err(self.fault(format!("LB row {row} out of range")));
+                    }
+                    if !self.mem.lb.can_read(row, max_idx) {
+                        if self.mem.lb.filling() && self.mem.lb.fill_row() == Some(row) {
+                            blocked = true;
+                        } else {
+                            return Err(self.fault(format!(
+                                "LB read row {row} px<= {max_idx} but row not filled"
+                            )));
+                        }
+                    }
+                }
+            }
+            if !blocked {
+                return Ok(());
+            }
+            self.t.lb_stalls += 1;
+            self.mem.lb.note_read_stall();
+            self.advance_cycle();
+        }
+    }
+
+    /// `addr_of` over the constant lattice (applies post-increment).
+    fn addr_of(&mut self, a: &crate::isa::Addr) -> Result<usize, PredictError> {
+        let base = self.known(a.base, "memory address")?;
+        let addr = base.wrapping_add(a.offset);
+        if a.post_inc != 0 {
+            self.regs[a.base.0 as usize] = Some(base.wrapping_add(a.post_inc));
+        }
+        Ok(addr as usize)
+    }
+
+    fn exec_slot0(&mut self, op: &SlotOp) -> Result<PcUpdate, PredictError> {
+        let now = self.t.cycles;
+        Ok(match *op {
+            SlotOp::Nop => PcUpdate::Seq,
+            SlotOp::Halt => PcUpdate::Halt,
+            SlotOp::Li { rd, imm } => {
+                self.regs[rd.0 as usize] = Some(imm);
+                PcUpdate::Seq
+            }
+            SlotOp::Alu { f, w, rd, ra, rb } => {
+                let v = match (self.regs[ra.0 as usize], self.regs[rb.0 as usize]) {
+                    (Some(a), Some(b)) => Some(crate::core::cpu::alu(f, w, a, b)),
+                    _ => None,
+                };
+                self.regs[rd.0 as usize] = v;
+                PcUpdate::Seq
+            }
+            SlotOp::AluI { f, w, rd, ra, imm } => {
+                self.regs[rd.0 as usize] =
+                    self.regs[ra.0 as usize].map(|a| crate::core::cpu::alu(f, w, a, imm));
+                PcUpdate::Seq
+            }
+            SlotOp::Br { c, ra, rb, target } => {
+                let a = self.known(ra, "branch")?;
+                let b = self.known(rb, "branch")?;
+                let taken = match c {
+                    crate::isa::Cond::Eq => a == b,
+                    crate::isa::Cond::Ne => a != b,
+                    crate::isa::Cond::Lt => a < b,
+                    crate::isa::Cond::Ge => a >= b,
+                };
+                if taken {
+                    PcUpdate::Jump(target as usize)
+                } else {
+                    PcUpdate::Seq
+                }
+            }
+            SlotOp::Jmp { target } => PcUpdate::Jump(target as usize),
+            SlotOp::Loop { n, body } => {
+                let count = self.known(n, "loop count")?.max(0) as u32;
+                self.push_loop(count, body)?
+            }
+            SlotOp::LoopI { n, body } => self.push_loop(n, body)?,
+            SlotOp::Csrwi { csr, imm } => {
+                if csr == Csr::LbStride {
+                    self.lb_stride = (imm.max(1) & 0xF) as u8;
+                }
+                // FracShift / RoundMode / GateBits never affect timing
+                PcUpdate::Seq
+            }
+            SlotOp::Csrw { csr, rs } => {
+                if csr == Csr::LbStride {
+                    let v = self.known(rs, "LbStride CSR write")? as u32;
+                    self.lb_stride = (v.max(1) & 0xF) as u8;
+                }
+                PcUpdate::Seq
+            }
+            SlotOp::LdS { rd, addr } => {
+                let a = self.addr_of(&addr)?;
+                self.mem.dm.read_i16_p0(a).map_err(|e| self.fault(e.to_string()))?;
+                // a loaded value is data, not a static constant
+                self.regs[rd.0 as usize] = None;
+                PcUpdate::Seq
+            }
+            SlotOp::StS { rs: _, addr } => {
+                let a = self.addr_of(&addr)?;
+                self.mem.dm.write_i16_p0(a, 0).map_err(|e| self.fault(e.to_string()))?;
+                PcUpdate::Seq
+            }
+            SlotOp::LdV { vd: _, addr } => {
+                let a = self.addr_of(&addr)?;
+                self.mem.dm.read_vec_p0(a).map_err(|e| self.fault(e.to_string()))?;
+                PcUpdate::Seq
+            }
+            SlotOp::StV { vs: _, addr } => {
+                let a = self.addr_of(&addr)?;
+                self.mem.dm.write_vec_p0(a, &[0; 16]).map_err(|e| self.fault(e.to_string()))?;
+                PcUpdate::Seq
+            }
+            SlotOp::LdVF { addr } => {
+                if self.fifo.len() >= FIFO_DEPTH {
+                    return Err(self.fault("filter FIFO overflow"));
+                }
+                let a = self.addr_of(&addr)?;
+                self.mem.dm.read_vec_p0(a).map_err(|e| self.fault(e.to_string()))?;
+                self.fifo.push_back(timing::fifo_entry_ready(now));
+                PcUpdate::Seq
+            }
+            SlotOp::LdA { ad: _, addr } => {
+                let a = self.addr_of(&addr)?;
+                self.mem.dm.read_vec_p0(a).map_err(|e| self.fault(e.to_string()))?;
+                self.advance_cycle();
+                self.t.wide_ls_stalls += 1;
+                self.mem.dm.read_vec_p0(a + 32).map_err(|e| self.fault(e.to_string()))?;
+                PcUpdate::Seq
+            }
+            SlotOp::StA { as_: _, addr } => {
+                let a = self.addr_of(&addr)?;
+                self.mem.dm.write_vec_p0(a, &[0; 16]).map_err(|e| self.fault(e.to_string()))?;
+                self.advance_cycle();
+                self.t.wide_ls_stalls += 1;
+                self.mem
+                    .dm
+                    .write_vec_p0(a + 32, &[0; 16])
+                    .map_err(|e| self.fault(e.to_string()))?;
+                PcUpdate::Seq
+            }
+            SlotOp::DmaLoad { .. } | SlotOp::DmaStore { .. } => {
+                // DMA pacing depends on external-memory latency credits and
+                // per-cycle port-1 arbitration against future LB fills;
+                // modeling it symbolically is future work. No generated
+                // task program issues DMA (the host stages DM directly).
+                return Err(self.unsupported("DMA transfer"));
+            }
+            SlotOp::DmaWait { ch } => {
+                while self.mem.dma.busy(ch as usize) {
+                    self.t.dma_wait_stalls += 1;
+                    self.advance_cycle();
+                }
+                PcUpdate::Seq
+            }
+            SlotOp::LbLoad { row, dm, off, win, nrows, rstride } => {
+                while self.mem.lb.filling() {
+                    self.t.lb_stalls += 1;
+                    self.advance_cycle();
+                }
+                let a = self.known(dm, "LB fill address")? as usize + off as usize;
+                self.mem
+                    .start_lb_fill_2d(row as usize, a, win as usize, nrows as usize, rstride as usize)
+                    .map_err(|e| self.fault(e.to_string()))?;
+                PcUpdate::Seq
+            }
+        })
+    }
+
+    fn push_loop(&mut self, n: u32, body: u16) -> Result<PcUpdate, PredictError> {
+        if body == 0 {
+            return Err(self.fault("loop with empty body"));
+        }
+        if self.loops.len() >= 2 {
+            return Err(self.fault("hardware loop nesting > 2"));
+        }
+        if n == 0 {
+            return Ok(PcUpdate::Jump(self.pc + 1 + body as usize));
+        }
+        self.loops.push(LoopFrame {
+            start: self.pc + 1,
+            last: self.pc + body as usize,
+            remaining: n - 1,
+        });
+        Ok(PcUpdate::Seq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::cpu::Cpu;
+    use crate::isa::asm::assemble;
+    use crate::mem::pm::ProgramMem;
+
+    /// Run both the interpreter and the analyzer on the same program and
+    /// assert all timing fields agree.
+    fn assert_agrees(src: &str, env: &AbiEnv) -> StaticTiming {
+        let p = assemble(src).unwrap();
+        let pm = ProgramMem::load(&p).unwrap();
+        let st = predict(pm.program(), env).unwrap();
+        let mut cpu = Cpu::new(1 << 16);
+        for &(r, v) in &env.regs {
+            cpu.regs.set_r(r, v);
+        }
+        let stats = cpu.run(&pm).unwrap();
+        assert_eq!(st.cycles, stats.cycles, "cycles");
+        assert_eq!(st.bundles, stats.bundles, "bundles");
+        assert_eq!(st.hazard_stalls, stats.hazard_stalls, "hazard_stalls");
+        assert_eq!(st.lb_stalls, stats.lb_stalls, "lb_stalls");
+        assert_eq!(st.branch_stalls, stats.branch_stalls, "branch_stalls");
+        assert_eq!(st.dma_wait_stalls, stats.dma_wait_stalls, "dma_wait_stalls");
+        assert_eq!(st.wide_ls_stalls, stats.wide_ls_stalls, "wide_ls_stalls");
+        st
+    }
+
+    #[test]
+    fn straight_line_and_hardware_loop_agree() {
+        let st = assert_agrees(
+            "li r1, 0\n\
+             li r3, 1\n\
+             loopi 10, 1\n\
+             add r1, r1, r3\n\
+             halt",
+            &AbiEnv::default(),
+        );
+        assert_eq!(st.cycles, 14);
+        assert_eq!(st.bundles, 14);
+    }
+
+    #[test]
+    fn branch_loop_agrees() {
+        let st = assert_agrees(
+            "li r1, 0\n\
+             li r2, 10\n\
+             li r3, 1\n\
+             loop: add r1, r1, r3\n\
+             bne r1, r2, loop\n\
+             halt",
+            &AbiEnv::default(),
+        );
+        assert_eq!(st.branch_stalls, 18);
+    }
+
+    #[test]
+    fn lb_fill_interlock_and_mac_agree() {
+        assert_agrees(
+            "li r1, 0\n\
+             ldv v0, [r1]\n\
+             csrwi lb_stride, 1\n\
+             lbld 0, r1, 16\n\
+             nop | vmac lb:0, v0 | vnop | vnop\n\
+             halt",
+            &AbiEnv::default(),
+        );
+    }
+
+    #[test]
+    fn load_use_and_wide_ls_agree() {
+        let st = assert_agrees(
+            "li r1, 256\n\
+             li r2, 512\n\
+             ldv v4, [r1] | vnop | vnop | vnop\n\
+             stv v4, [r2]\n\
+             lda a0, [r1]\n\
+             sta a0, [r2]\n\
+             halt",
+            &AbiEnv::default(),
+        );
+        assert_eq!(st.wide_ls_stalls, 2);
+        assert!(st.hazard_stalls >= 1);
+    }
+
+    #[test]
+    fn abi_register_addresses_work() {
+        // address base comes from the environment, not the program
+        assert_agrees(
+            "ldv v0, [r2]\n\
+             stv v0, [r4]\n\
+             halt",
+            &AbiEnv::new(&[(2, 64), (4, 1024)]),
+        );
+    }
+
+    #[test]
+    fn unknown_branch_operand_is_unsupported() {
+        let p = assemble(
+            "lds r1, [r2]\n\
+             li r3, 0\n\
+             bne r1, r3, 0\n\
+             halt",
+        )
+        .unwrap();
+        let err = predict(&p, &AbiEnv::new(&[(2, 0)])).unwrap_err();
+        assert!(matches!(err, PredictError::Unsupported { .. }), "{err}");
+    }
+
+    #[test]
+    fn dma_is_unsupported() {
+        let p = assemble(
+            "li r1, 0\n\
+             li r2, 1024\n\
+             li r3, 512\n\
+             dmald 0, r1, r2, r3\n\
+             dmawait 0\n\
+             halt",
+        )
+        .unwrap();
+        let err = predict(&p, &AbiEnv::default()).unwrap_err();
+        assert!(matches!(err, PredictError::Unsupported { .. }), "{err}");
+    }
+}

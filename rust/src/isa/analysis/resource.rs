@@ -1,0 +1,588 @@
+//! Pass 3 — resource / protocol lints.
+//!
+//! Two kinds of checks live here:
+//!
+//! * **Stateless per-bundle rules** — SFU placement (`Relu`/`PoolMax`
+//!   only in vALU slot 1), VR sub-region read/write permissions, lane
+//!   and register index ranges. These mirror the simulator's `Access`
+//!   errors one-for-one but are reported statically, per bundle.
+//! * **A path-sensitive abstract interpretation** — a small forward
+//!   fixpoint tracking filter-FIFO depth, DMA channel state (busy +
+//!   known DM byte range), constant-propagated scalar registers, the
+//!   last `LbLoad` extent per LB row and the `LbStride` CSR. It reports
+//!   FIFO underflow/overflow/imbalance/residual, DMA restarts without
+//!   `DmaWait`, known port-0 accesses overlapping an in-flight DMA's DM
+//!   range, and LB reads past the filled extent.
+//!
+//! The abstract domain is deliberately modest: unknown values degrade
+//! to ⊤ (`None`) and suppress the address-dependent checks rather than
+//! false-positive. FIFO depth, by contrast, must be *equal* on every
+//! path into a join — generated programs keep it balanced and a
+//! mismatch is almost always a pop/push bug — so a disagreeing join is
+//! itself a finding (`FifoImbalance`).
+
+use std::collections::BTreeSet;
+
+use crate::core::regfile::{can_read_vr, can_write_vr, Who};
+use crate::isa::{ASrc, BSrc, Csr, Program, SlotOp, VReg, VecOp, LANES, SLICES};
+use crate::mem::linebuf::{LB_ROWS, LB_ROW_PIXELS};
+
+use super::timing::FIFO_DEPTH;
+use super::{finding, Cfg, Finding, FindingKind};
+
+const DMA_CHANNELS: usize = 2;
+
+/// Abstract machine state at a program point.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct RState {
+    /// Filter-FIFO occupancy (exact — a join mismatch is a finding).
+    fifo: u8,
+    /// Per DMA channel: a transfer is in flight.
+    busy: [bool; DMA_CHANNELS],
+    /// Per DMA channel: known DM byte range [start, end) of the
+    /// in-flight transfer, if the registers were constant.
+    range: [Option<(i64, i64)>; DMA_CHANNELS],
+    /// Constant-propagated scalar registers (None = unknown).
+    regs: [Option<i32>; 32],
+    /// Pixels filled into each LB row by the latest `LbLoad` (0 = never
+    /// filled on this path).
+    lb_ext: [u16; LB_ROWS],
+    /// `LbStride` CSR if statically known.
+    stride: Option<u8>,
+}
+
+impl RState {
+    fn entry() -> Self {
+        RState {
+            fifo: 0,
+            busy: [false; DMA_CHANNELS],
+            range: [None; DMA_CHANNELS],
+            regs: [None; 32],
+            lb_ext: [0; LB_ROWS],
+            stride: Some(1), // CSR reset value
+        }
+    }
+
+    /// Join for the must-analysis parts; returns true if the FIFO depth
+    /// disagreed (reported by the caller as `FifoImbalance`).
+    fn join(&mut self, o: &RState) -> bool {
+        let imbalance = self.fifo != o.fifo;
+        self.fifo = self.fifo.min(o.fifo);
+        for c in 0..DMA_CHANNELS {
+            self.busy[c] |= o.busy[c];
+            if self.range[c] != o.range[c] {
+                self.range[c] = None;
+            }
+        }
+        for r in 0..32 {
+            if self.regs[r] != o.regs[r] {
+                self.regs[r] = None;
+            }
+        }
+        for row in 0..LB_ROWS {
+            self.lb_ext[row] = self.lb_ext[row].min(o.lb_ext[row]);
+        }
+        if self.stride != o.stride {
+            self.stride = None;
+        }
+        imbalance
+    }
+}
+
+/// Byte footprint of a slot-0 port-0 access (for DMA overlap checks).
+fn access_bytes(op: &SlotOp) -> Option<u64> {
+    match op {
+        SlotOp::LdS { .. } | SlotOp::StS { .. } => Some(2),
+        SlotOp::LdV { .. } | SlotOp::StV { .. } | SlotOp::LdVF { .. } => Some(32),
+        SlotOp::LdA { .. } | SlotOp::StA { .. } => Some(64),
+        _ => None,
+    }
+}
+
+/// Transfer + checks for one bundle. The same function drives both the
+/// fixpoint (no-op sink) and the reporting sweep, so state and findings
+/// cannot disagree. Order mirrors the interpreter: vector slots first
+/// (all three read the same FIFO front entry — one pop per bundle),
+/// then slot 0.
+fn step(st: &mut RState, prog: &Program, pc: usize, sink: &mut dyn FnMut(FindingKind, String)) {
+    let b = &prog.bundles[pc];
+
+    // ---- vector slots: FIFO pop + LB extent ----------------------------
+    let mut pops = false;
+    for op in &b.v {
+        let (a, fifo_b) = match *op {
+            VecOp::Mac { a, b } | VecOp::Mul { a, b } => {
+                (Some(a), matches!(b, BSrc::Fifo | BSrc::FifoLaneQuad { .. }))
+            }
+            _ => (None, false),
+        };
+        pops |= fifo_b;
+        // LB read extent vs the latest fill on this path
+        if let Some(ASrc::Lb { row, off } | ASrc::LbVec { row, off }) = a {
+            if row as usize >= LB_ROWS {
+                sink(FindingKind::LbExtent, format!("LB read row {row} out of range"));
+                continue;
+            }
+            let span = match a {
+                Some(ASrc::Lb { .. }) => (SLICES - 1) as u16,
+                _ => (LANES - 1) as u16,
+            };
+            if let Some(stride) = st.stride {
+                let max_idx = off + span * stride as u16;
+                let ext = st.lb_ext[row as usize];
+                if max_idx >= ext {
+                    sink(
+                        FindingKind::LbExtent,
+                        format!(
+                            "LB read row {row} up to pixel {max_idx} but only {ext} filled on some path"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+    if pops {
+        if st.fifo == 0 {
+            sink(
+                FindingKind::FifoUnderflow,
+                "FIFO-sourced vector MAC with filter FIFO empty on some path".into(),
+            );
+        }
+        st.fifo = st.fifo.saturating_sub(1);
+    }
+
+    // ---- slot 0 --------------------------------------------------------
+    // known port-0 address (before post-increment) for DMA overlap checks
+    if let Some(bytes) = access_bytes(&b.slot0) {
+        let addr = match b.slot0 {
+            SlotOp::LdS { addr, .. }
+            | SlotOp::StS { addr, .. }
+            | SlotOp::LdV { addr, .. }
+            | SlotOp::StV { addr, .. }
+            | SlotOp::LdVF { addr }
+            | SlotOp::LdA { addr, .. }
+            | SlotOp::StA { addr, .. } => Some(addr),
+            _ => None,
+        };
+        if let Some(addr) = addr {
+            if addr.base.0 < 32 {
+                if let Some(base) = st.regs[addr.base.0 as usize] {
+                    let lo = base as i64 + addr.offset as i64;
+                    let hi = lo + bytes as i64;
+                    for c in 0..DMA_CHANNELS {
+                        if let (true, Some((dlo, dhi))) = (st.busy[c], st.range[c]) {
+                            if lo < dhi && dlo < hi {
+                                sink(
+                                    FindingKind::DmaOverlap,
+                                    format!(
+                                        "port-0 access [{lo}, {hi}) overlaps in-flight DMA ch{c} DM range [{dlo}, {dhi})"
+                                    ),
+                                );
+                            }
+                        }
+                    }
+                }
+                // post-increment updates the (known) base register
+                if addr.post_inc != 0 {
+                    st.regs[addr.base.0 as usize] =
+                        st.regs[addr.base.0 as usize].map(|v| v.wrapping_add(addr.post_inc));
+                }
+            }
+        }
+    }
+
+    let known = |st: &RState, r: u8| -> Option<i32> {
+        if r < 32 {
+            st.regs[r as usize]
+        } else {
+            None
+        }
+    };
+    match b.slot0 {
+        SlotOp::Li { rd, imm } => {
+            if rd.0 < 32 {
+                st.regs[rd.0 as usize] = Some(imm);
+            }
+        }
+        SlotOp::Alu { f, w, rd, ra, rb } => {
+            let v = match (known(st, ra.0), known(st, rb.0)) {
+                (Some(a), Some(b)) => Some(crate::core::cpu::alu(f, w, a, b)),
+                _ => None,
+            };
+            if rd.0 < 32 {
+                st.regs[rd.0 as usize] = v;
+            }
+        }
+        SlotOp::AluI { f, w, rd, ra, imm } => {
+            let v = known(st, ra.0).map(|a| crate::core::cpu::alu(f, w, a, imm as i32));
+            if rd.0 < 32 {
+                st.regs[rd.0 as usize] = v;
+            }
+        }
+        SlotOp::Csrwi { csr: Csr::LbStride, imm } => {
+            st.stride = Some((imm.max(1) & 0xF) as u8);
+        }
+        SlotOp::Csrw { csr: Csr::LbStride, rs } => {
+            st.stride = known(st, rs.0).map(|v| ((v as u32).max(1) & 0xF) as u8);
+        }
+        SlotOp::Csrwi { .. } | SlotOp::Csrw { .. } => {}
+        SlotOp::LdS { rd, .. } => {
+            // loaded value is data, not const-propagated
+            if rd.0 < 32 {
+                st.regs[rd.0 as usize] = None;
+            }
+        }
+        SlotOp::LdVF { .. } => {
+            if st.fifo as usize >= FIFO_DEPTH {
+                sink(
+                    FindingKind::FifoOverflow,
+                    format!("LdVF with filter FIFO already at depth {FIFO_DEPTH} on some path"),
+                );
+            } else {
+                st.fifo += 1;
+            }
+        }
+        SlotOp::DmaLoad { ch, ext: _, dm, len } | SlotOp::DmaStore { ch, ext: _, dm, len } => {
+            let c = ch as usize;
+            if c >= DMA_CHANNELS {
+                sink(FindingKind::RegionViolation, format!("DMA channel {ch} out of range"));
+            } else {
+                if st.busy[c] {
+                    sink(
+                        FindingKind::DmaRestart,
+                        format!("DMA ch{c} restarted without DmaWait on some path"),
+                    );
+                }
+                st.busy[c] = true;
+                st.range[c] = match (known(st, dm.0), known(st, len.0)) {
+                    // zero-length transfers complete immediately
+                    (_, Some(0)) => {
+                        st.busy[c] = false;
+                        None
+                    }
+                    (Some(d), Some(l)) => Some((d as i64, d as i64 + l as i64)),
+                    _ => None,
+                };
+            }
+        }
+        SlotOp::DmaWait { ch } => {
+            let c = ch as usize;
+            if c < DMA_CHANNELS {
+                st.busy[c] = false;
+                st.range[c] = None;
+            }
+        }
+        SlotOp::LbLoad { row, win, nrows, .. } => {
+            let len = win as u32 * nrows as u32;
+            if row as usize >= LB_ROWS {
+                sink(FindingKind::LbExtent, format!("LbLoad row {row} out of range"));
+            } else if win == 0 || nrows == 0 || len as usize > LB_ROW_PIXELS {
+                sink(
+                    FindingKind::LbExtent,
+                    format!("LbLoad fill of {len} px (win {win} x nrows {nrows}) is invalid (machine fault)"),
+                );
+            } else {
+                st.lb_ext[row as usize] = len as u16;
+            }
+        }
+        SlotOp::Halt => {
+            if st.fifo != 0 {
+                sink(
+                    FindingKind::FifoResidual,
+                    format!("halt with {} residual filter-FIFO entries", st.fifo),
+                );
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Stateless per-bundle legality: SFU placement and register
+/// sub-region/index rules, mirroring the interpreter's `Access` errors.
+fn scan_static(prog: &Program, out: &mut Vec<Finding>) {
+    for (pc, b) in prog.bundles.iter().enumerate() {
+        let mut bad = |kind: FindingKind, detail: String| {
+            out.push(finding(prog, kind, pc, detail));
+        };
+        for (i, op) in b.v.iter().enumerate() {
+            let s = i as u8 + 1;
+            let who = Who::Valu(s);
+            let rd_ok = |vr: VReg| vr.0 < 16 && can_read_vr(who, vr);
+            let wr_ok = |vr: VReg| vr.0 < 16 && can_write_vr(who, vr);
+            match *op {
+                VecOp::Relu { .. } | VecOp::PoolMax { .. } if s != 1 => {
+                    bad(FindingKind::SfuSlot, format!("SFU op in slot {s} (slot 1 only)"));
+                }
+                _ => {}
+            }
+            match *op {
+                VecOp::Nop | VecOp::ClrA { .. } => {}
+                VecOp::Mac { a, b } | VecOp::Mul { a, b } => {
+                    match a {
+                        ASrc::Lb { .. } | ASrc::LbVec { .. } => {} // row range in pass 3's LB check
+                        ASrc::VrBcast { vr, base, step } => {
+                            if !rd_ok(vr) {
+                                bad(
+                                    FindingKind::RegionViolation,
+                                    format!("vALU{s} cannot read v{}", vr.0),
+                                );
+                            }
+                            let max_lane = base as usize + (SLICES - 1) * step as usize;
+                            if max_lane >= LANES {
+                                bad(
+                                    FindingKind::RegionViolation,
+                                    format!("bcast lane {max_lane} out of range (machine fault)"),
+                                );
+                            }
+                        }
+                        ASrc::VrQuad { vr } => {
+                            for k in 0..SLICES as u8 {
+                                let e = VReg(vr.0.wrapping_add(k));
+                                if !rd_ok(e) {
+                                    bad(
+                                        FindingKind::RegionViolation,
+                                        format!("vALU{s} cannot read v{} (quad)", e.0),
+                                    );
+                                }
+                            }
+                        }
+                    }
+                    match b {
+                        BSrc::Fifo => {}
+                        // VrLane wraps its lane in hardware — no lane check
+                        BSrc::Vr { vr } | BSrc::VrLane { vr, .. } => {
+                            if !rd_ok(vr) {
+                                bad(
+                                    FindingKind::RegionViolation,
+                                    format!("vALU{s} cannot read v{}", vr.0),
+                                );
+                            }
+                        }
+                        BSrc::VrLaneQuad { vr, base } => {
+                            if !rd_ok(vr) {
+                                bad(
+                                    FindingKind::RegionViolation,
+                                    format!("vALU{s} cannot read v{}", vr.0),
+                                );
+                            }
+                            if base as usize + SLICES > LANES {
+                                bad(
+                                    FindingKind::RegionViolation,
+                                    format!("lane-quad base {base} out of range (machine fault)"),
+                                );
+                            }
+                        }
+                        BSrc::FifoLaneQuad { base } => {
+                            if base as usize + SLICES > LANES {
+                                bad(
+                                    FindingKind::RegionViolation,
+                                    format!("fifo lane base {base} out of range (machine fault)"),
+                                );
+                            }
+                        }
+                        BSrc::VrQuad { vr } => {
+                            for k in 0..SLICES as u8 {
+                                let e = VReg(vr.0.wrapping_add(k));
+                                if !rd_ok(e) {
+                                    bad(
+                                        FindingKind::RegionViolation,
+                                        format!("vALU{s} cannot read v{} (quad)", e.0),
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+                VecOp::InitA { vr } => {
+                    if !rd_ok(vr) {
+                        bad(FindingKind::RegionViolation, format!("vALU{s} cannot read v{}", vr.0));
+                    }
+                }
+                VecOp::InitALane { vr, base } => {
+                    if !rd_ok(vr) {
+                        bad(FindingKind::RegionViolation, format!("vALU{s} cannot read v{}", vr.0));
+                    }
+                    if base as usize + SLICES > LANES {
+                        bad(
+                            FindingKind::RegionViolation,
+                            format!("init lane base {base} out of range (machine fault)"),
+                        );
+                    }
+                }
+                VecOp::QMov { vd, j, .. } => {
+                    if !wr_ok(vd) {
+                        bad(FindingKind::RegionViolation, format!("vALU{s} cannot write v{}", vd.0));
+                    }
+                    if j as usize >= SLICES {
+                        bad(
+                            FindingKind::RegionViolation,
+                            format!("qmov accumulator index {j} outside own region"),
+                        );
+                    }
+                }
+                VecOp::EOp { vd, va, vb, .. } => {
+                    for v in [va, vb] {
+                        if !rd_ok(v) {
+                            bad(FindingKind::RegionViolation, format!("vALU{s} cannot read v{}", v.0));
+                        }
+                    }
+                    if !wr_ok(vd) {
+                        bad(FindingKind::RegionViolation, format!("vALU{s} cannot write v{}", vd.0));
+                    }
+                }
+                VecOp::EOpI { vd, va, .. } => {
+                    if !rd_ok(va) {
+                        bad(FindingKind::RegionViolation, format!("vALU{s} cannot read v{}", va.0));
+                    }
+                    if !wr_ok(vd) {
+                        bad(FindingKind::RegionViolation, format!("vALU{s} cannot write v{}", vd.0));
+                    }
+                }
+                // Bcst's source lane wraps in hardware — no lane check
+                VecOp::Mov { vd, vs } | VecOp::Bcst { vd, vs, .. } | VecOp::Relu { vd, vs } => {
+                    if !rd_ok(vs) {
+                        bad(FindingKind::RegionViolation, format!("vALU{s} cannot read v{}", vs.0));
+                    }
+                    if !wr_ok(vd) {
+                        bad(FindingKind::RegionViolation, format!("vALU{s} cannot write v{}", vd.0));
+                    }
+                }
+                VecOp::PoolMax { vd, va, vb } => {
+                    for v in [va, vb] {
+                        if !rd_ok(v) {
+                            bad(FindingKind::RegionViolation, format!("vALU{s} cannot read v{}", v.0));
+                        }
+                    }
+                    if !wr_ok(vd) {
+                        bad(FindingKind::RegionViolation, format!("vALU{s} cannot write v{}", vd.0));
+                    }
+                }
+            }
+        }
+        // slot 0: index ranges the simulator would hit as panics or
+        // faults. Operands are collected first and reported after the
+        // match, so `out` is only borrowed in one place.
+        let mut sregs: Vec<(u8, &str)> = Vec::new();
+        let mut extra: Vec<String> = Vec::new();
+        match b.slot0 {
+            SlotOp::Nop | SlotOp::Halt | SlotOp::Jmp { .. } | SlotOp::LoopI { .. } => {}
+            SlotOp::DmaWait { .. } => {}
+            SlotOp::Li { rd, .. } => sregs.push((rd.0, "li dest")),
+            SlotOp::Alu { rd, ra, rb, .. } => {
+                sregs.extend([(rd.0, "alu dest"), (ra.0, "alu src"), (rb.0, "alu src")]);
+            }
+            SlotOp::AluI { rd, ra, .. } => {
+                sregs.extend([(rd.0, "alui dest"), (ra.0, "alui src")]);
+            }
+            SlotOp::Br { ra, rb, .. } => {
+                sregs.extend([(ra.0, "branch src"), (rb.0, "branch src")]);
+            }
+            SlotOp::Loop { n, .. } => sregs.push((n.0, "loop count")),
+            SlotOp::Csrwi { .. } => {}
+            SlotOp::Csrw { rs, .. } => sregs.push((rs.0, "csr src")),
+            SlotOp::LdS { rd, addr } => {
+                sregs.extend([(rd.0, "lds dest"), (addr.base.0, "address base")]);
+            }
+            SlotOp::StS { rs, addr } => {
+                sregs.extend([(rs.0, "sts src"), (addr.base.0, "address base")]);
+            }
+            SlotOp::LdV { vd, addr } => {
+                sregs.push((addr.base.0, "address base"));
+                if vd.0 >= 16 {
+                    extra.push(format!("vector register v{} out of range", vd.0));
+                }
+            }
+            SlotOp::StV { vs, addr } => {
+                sregs.push((addr.base.0, "address base"));
+                if vs.0 >= 16 {
+                    extra.push(format!("vector register v{} out of range", vs.0));
+                }
+            }
+            SlotOp::LdVF { addr } => sregs.push((addr.base.0, "address base")),
+            SlotOp::LdA { ad, addr } => {
+                sregs.push((addr.base.0, "address base"));
+                if ad.0 >= 12 {
+                    extra.push(format!("accumulator a{} out of range", ad.0));
+                }
+            }
+            SlotOp::StA { as_, addr } => {
+                sregs.push((addr.base.0, "address base"));
+                if as_.0 >= 12 {
+                    extra.push(format!("accumulator a{} out of range", as_.0));
+                }
+            }
+            SlotOp::DmaLoad { ext, dm, len, .. } | SlotOp::DmaStore { ext, dm, len, .. } => {
+                sregs.extend([(ext.0, "dma ext"), (dm.0, "dma dm"), (len.0, "dma len")]);
+            }
+            SlotOp::LbLoad { dm, .. } => sregs.push((dm.0, "lbload dm")),
+        }
+        for (r, what) in sregs {
+            if r >= 32 {
+                bad(
+                    FindingKind::RegionViolation,
+                    format!("scalar register r{r} out of range ({what})"),
+                );
+            }
+        }
+        for m in extra {
+            bad(FindingKind::RegionViolation, m);
+        }
+    }
+}
+
+pub(crate) fn check(prog: &Program, cfg: &Cfg, out: &mut Vec<Finding>) {
+    scan_static(prog, out);
+
+    let len = prog.bundles.len();
+    if len == 0 {
+        return;
+    }
+    let mut instate: Vec<Option<RState>> = vec![None; len];
+    instate[0] = Some(RState::entry());
+    let mut imbalance_joins: BTreeSet<usize> = BTreeSet::new();
+    let mut work = vec![0usize];
+    while let Some(pc) = work.pop() {
+        let mut st = instate[pc].clone().unwrap();
+        step(&mut st, prog, pc, &mut |_, _| {});
+        for &succ in &cfg.succs[pc] {
+            if succ >= len {
+                continue;
+            }
+            let changed = match &mut instate[succ] {
+                slot @ None => {
+                    *slot = Some(st.clone());
+                    true
+                }
+                Some(old) => {
+                    let before = old.clone();
+                    if old.join(&st) {
+                        imbalance_joins.insert(succ);
+                    }
+                    *old != before
+                }
+            };
+            if changed {
+                work.push(succ);
+            }
+        }
+    }
+    for pc in imbalance_joins {
+        out.push(finding(
+            prog,
+            FindingKind::FifoImbalance,
+            pc,
+            "filter-FIFO depth differs between paths joining here".into(),
+        ));
+    }
+    // report sweep over reachable bundles, deduplicating identical
+    // messages per bundle
+    for pc in 0..len {
+        let Some(mut st) = instate[pc].clone() else { continue };
+        let mut msgs: Vec<(FindingKind, String)> = Vec::new();
+        step(&mut st, prog, pc, &mut |k, m| msgs.push((k, m)));
+        msgs.dedup();
+        for (k, m) in msgs {
+            out.push(finding(prog, k, pc, m));
+        }
+    }
+}

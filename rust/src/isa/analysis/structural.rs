@@ -1,0 +1,161 @@
+//! Pass 1 — structural CFG/loop verification.
+//!
+//! Everything here is a *static* property of the bundle list: branch
+//! and jump targets in range, hardware-loop bodies in bounds with at
+//! most one level of nesting (the machine faults on depth > 2), no
+//! branch crossing a loop-body boundary (the loop stack would desync
+//! from the pc), a reachable `Halt`, no reachable fall-through past the
+//! last bundle, and an encoded image that fits the 16 KB PM.
+
+use std::collections::BTreeSet;
+
+use crate::isa::{Program, SlotOp};
+use crate::mem::PM_BYTES;
+
+use super::{finding, Cfg, Finding, FindingKind};
+
+pub(crate) fn check(prog: &Program, cfg: &Cfg, out: &mut Vec<Finding>) {
+    let len = prog.bundles.len();
+    if len == 0 {
+        out.push(finding(prog, FindingKind::NoHaltPath, 0, "empty program".into()));
+        return;
+    }
+    if prog.encoded_size() > PM_BYTES {
+        out.push(finding(
+            prog,
+            FindingKind::PmOverflow,
+            0,
+            format!("encoded size {} B exceeds PM capacity {PM_BYTES} B", prog.encoded_size()),
+        ));
+    }
+
+    for (pc, b) in prog.bundles.iter().enumerate() {
+        match b.slot0 {
+            SlotOp::Br { target, .. } | SlotOp::Jmp { target } => {
+                if target as usize >= len {
+                    out.push(finding(
+                        prog,
+                        FindingKind::BranchTargetOutOfRange,
+                        pc,
+                        format!("target {target} >= program length {len}"),
+                    ));
+                }
+            }
+            SlotOp::Loop { body, .. } | SlotOp::LoopI { body, .. } => {
+                if body == 0 {
+                    out.push(finding(
+                        prog,
+                        FindingKind::LoopBodyOutOfRange,
+                        pc,
+                        "hardware loop with empty body (machine fault)".into(),
+                    ));
+                } else if pc + body as usize >= len {
+                    out.push(finding(
+                        prog,
+                        FindingKind::LoopBodyOutOfRange,
+                        pc,
+                        format!(
+                            "loop body [{}..={}] extends past program length {len}",
+                            pc + 1,
+                            pc + body as usize
+                        ),
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // nesting depth (the machine faults at depth > 2) and proper
+    // containment of nested bodies
+    for (i, &(lp, _, last)) in cfg.regions.iter().enumerate() {
+        let mut depth = 1;
+        for (j, &(_, s2, l2)) in cfg.regions.iter().enumerate() {
+            if i == j {
+                continue;
+            }
+            if s2 <= lp && lp <= l2 {
+                depth += 1;
+                if last > l2 {
+                    out.push(finding(
+                        prog,
+                        FindingKind::LoopNesting,
+                        lp,
+                        format!("inner loop body ends at {last}, past enclosing body end {l2}"),
+                    ));
+                }
+            }
+        }
+        if depth > 2 {
+            out.push(finding(
+                prog,
+                FindingKind::LoopNesting,
+                lp,
+                format!("hardware loop nesting depth {depth} > 2 (machine fault)"),
+            ));
+        }
+    }
+
+    // branches in or out of a hardware-loop body desync the loop stack
+    for (pc, b) in prog.bundles.iter().enumerate() {
+        let target = match b.slot0 {
+            SlotOp::Br { target, .. } | SlotOp::Jmp { target } => target as usize,
+            _ => continue,
+        };
+        if target >= len {
+            continue; // already reported above
+        }
+        for &(_, start, last) in &cfg.regions {
+            let src_in = (start..=last).contains(&pc);
+            let tgt_in = (start..=last).contains(&target);
+            if src_in != tgt_in {
+                out.push(finding(
+                    prog,
+                    FindingKind::BranchCrossesLoop,
+                    pc,
+                    format!("branch to {target} crosses hardware-loop body [{start}..={last}]"),
+                ));
+            }
+        }
+    }
+
+    // reachability: a Halt must be reachable, and no reachable edge may
+    // fall through past the last bundle
+    let mut seen = vec![false; len];
+    let mut stack = vec![0usize];
+    seen[0] = true;
+    let mut any_halt = false;
+    let mut ran_off = BTreeSet::new();
+    while let Some(pc) = stack.pop() {
+        if matches!(prog.bundles[pc].slot0, SlotOp::Halt) {
+            any_halt = true;
+        }
+        for &succ in &cfg.succs[pc] {
+            if succ >= len {
+                // an out-of-range branch *target* is already reported;
+                // this catches sequential / loop-skip fall-through
+                let is_br_target = matches!(
+                    prog.bundles[pc].slot0,
+                    SlotOp::Br { target, .. } | SlotOp::Jmp { target } if target as usize == succ
+                );
+                if !is_br_target {
+                    ran_off.insert(pc);
+                }
+            } else if !seen[succ] {
+                seen[succ] = true;
+                stack.push(succ);
+            }
+        }
+    }
+    for pc in ran_off {
+        out.push(finding(
+            prog,
+            FindingKind::RunsOffEnd,
+            pc,
+            "control can fall through past the last bundle (no halt)".into(),
+        ));
+    }
+    if !any_halt {
+        out.push(finding(prog, FindingKind::NoHaltPath, 0, "no reachable Halt".into()));
+    }
+}

@@ -1,0 +1,272 @@
+//! Shared issue/retire timing rules — the single source of truth for the
+//! core's scoreboard (RAW hazard) model.
+//!
+//! Both the cycle simulator (`core::cpu`) and the static cycle analyzer
+//! (`analysis::predict`) call these functions, so the stall model cannot
+//! drift between the two: the simulator consults `issue_ready` /
+//! `retire_bundle` per dynamic bundle, and the analyzer calls the very
+//! same functions while walking a program symbolically. The equality
+//! tests in `codegen::compiled` assert the resulting cycle counts match
+//! bit-for-bit.
+//!
+//! The model: every register-file entry has a "ready" cycle. A bundle
+//! issues at the max of `now` and the ready cycles of everything it
+//! reads (`issue_ready`); once it executes, its writes set new ready
+//! cycles (`retire_bundle`) using the latency constants below. Filter
+//! FIFO entries carry their own ready cycle (`fifo_entry_ready`),
+//! checked against the *front* entry only — pops are in order.
+
+use crate::core::regfile::own_acc_base;
+use crate::isa::{ASrc, BSrc, Bundle, SlotOp, VecOp, SLICES};
+
+/// DM load to dependent use (scalar, vector and filter-FIFO loads).
+pub const LOAD_USE_LATENCY: u64 = 2;
+/// Vector MAC to requantize (`QMov`) read of the same accumulator.
+pub const MAC_TO_QMOV_LATENCY: u64 = 4;
+/// Requantize (`QMov`) to dependent read of the destination VR entry.
+pub const QMOV_TO_READ_LATENCY: u64 = 3;
+/// Pipeline bubbles after a taken branch / jump.
+pub const BRANCH_BUBBLES: u64 = 2;
+/// Filter FIFO depth (operand fetch & prepare stage).
+pub const FIFO_DEPTH: usize = 8;
+
+/// Ready-cycle scoreboard for the three register files.
+#[derive(Debug, Clone)]
+pub struct Scoreboard {
+    /// Cycle at which each VR entry is ready for a consumer.
+    pub vr: [u64; 16],
+    /// Cycle at which each VRl (accumulator) entry is ready.
+    pub vrl: [u64; 12],
+    /// Cycle at which each scalar register is ready.
+    pub r: [u64; 32],
+}
+
+impl Scoreboard {
+    pub fn new() -> Self {
+        Self { vr: [0; 16], vrl: [0; 12], r: [0; 32] }
+    }
+
+    pub fn reset(&mut self) {
+        self.vr = [0; 16];
+        self.vrl = [0; 12];
+        self.r = [0; 32];
+    }
+}
+
+impl Default for Scoreboard {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A FIFO-sourced vector MAC found the filter FIFO empty — a machine
+/// fault (the simulator reports it as `SimError::Fault`, the verifier as
+/// `FindingKind::FifoUnderflow`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FifoEmpty;
+
+/// Earliest cycle `>= now` at which every operand read by `b` is ready.
+///
+/// `fifo_front_ready` is the ready cycle of the filter-FIFO front entry
+/// (None = FIFO empty). Only *reads* contribute; `Csrw`, `Loop`,
+/// `DmaLoad`/`DmaStore` operands are control-path reads that do not go
+/// through the scoreboard (they are never load destinations in practice).
+///
+/// Register indices out of range panic, exactly like the simulator's
+/// scoreboard arrays — run `analysis::verify` first for untrusted
+/// programs.
+pub fn issue_ready(
+    b: &Bundle,
+    sb: &Scoreboard,
+    fifo_front_ready: Option<u64>,
+    now: u64,
+) -> Result<u64, FifoEmpty> {
+    let mut ready = now;
+    let need_vr = |idx: u8, ready: &mut u64| {
+        *ready = (*ready).max(sb.vr[idx as usize]);
+    };
+    for (i, op) in b.v.iter().enumerate() {
+        let s = i as u8 + 1;
+        match *op {
+            VecOp::Mac { a, b } | VecOp::Mul { a, b } => {
+                match a {
+                    ASrc::VrBcast { vr, .. } => need_vr(vr.0, &mut ready),
+                    ASrc::VrQuad { vr } => {
+                        for k in 0..SLICES as u8 {
+                            need_vr(vr.0 + k, &mut ready);
+                        }
+                    }
+                    ASrc::Lb { .. } | ASrc::LbVec { .. } => {}
+                }
+                match b {
+                    BSrc::Vr { vr } | BSrc::VrLane { vr, .. } | BSrc::VrLaneQuad { vr, .. } => {
+                        need_vr(vr.0, &mut ready)
+                    }
+                    BSrc::VrQuad { vr } => {
+                        for k in 0..SLICES as u8 {
+                            need_vr(vr.0 + k, &mut ready);
+                        }
+                    }
+                    BSrc::Fifo | BSrc::FifoLaneQuad { .. } => match fifo_front_ready {
+                        Some(rdy) => ready = ready.max(rdy),
+                        None => return Err(FifoEmpty),
+                    },
+                }
+            }
+            VecOp::QMov { j, .. } => {
+                let a = own_acc_base(s) + j;
+                ready = ready.max(sb.vrl[a as usize]);
+            }
+            VecOp::EOp { va, vb, .. } => {
+                need_vr(va.0, &mut ready);
+                need_vr(vb.0, &mut ready);
+            }
+            VecOp::EOpI { va, .. } => need_vr(va.0, &mut ready),
+            VecOp::Mov { vs, .. } | VecOp::Relu { vs, .. } | VecOp::Bcst { vs, .. } => {
+                need_vr(vs.0, &mut ready)
+            }
+            VecOp::PoolMax { va, vb, .. } => {
+                need_vr(va.0, &mut ready);
+                need_vr(vb.0, &mut ready);
+            }
+            VecOp::InitA { vr } | VecOp::InitALane { vr, .. } => need_vr(vr.0, &mut ready),
+            VecOp::ClrA { .. } | VecOp::Nop => {}
+        }
+    }
+    match b.slot0 {
+        SlotOp::StV { vs, addr } => {
+            ready = ready.max(sb.vr[vs.0 as usize]).max(sb.r[addr.base.0 as usize]);
+        }
+        SlotOp::StA { as_, addr } => {
+            ready = ready.max(sb.vrl[as_.0 as usize]).max(sb.r[addr.base.0 as usize]);
+        }
+        SlotOp::Alu { ra, rb, .. } => {
+            ready = ready.max(sb.r[ra.0 as usize]).max(sb.r[rb.0 as usize]);
+        }
+        SlotOp::AluI { ra, .. } => ready = ready.max(sb.r[ra.0 as usize]),
+        SlotOp::Br { ra, rb, .. } => {
+            ready = ready.max(sb.r[ra.0 as usize]).max(sb.r[rb.0 as usize]);
+        }
+        SlotOp::LdS { addr, .. }
+        | SlotOp::StS { addr, .. }
+        | SlotOp::LdV { addr, .. }
+        | SlotOp::LdVF { addr }
+        | SlotOp::LdA { addr, .. } => {
+            ready = ready.max(sb.r[addr.base.0 as usize]);
+        }
+        _ => {}
+    }
+    Ok(ready)
+}
+
+/// Apply the scoreboard *writes* of a bundle that issued (post-stall) at
+/// cycle `now`. Write order is vector slots 1..=3 then slot 0, matching
+/// the interpreter's execution order. Note `LdA`/`StA` advance the clock
+/// mid-op for their second port-0 access; their latency is nonetheless
+/// anchored at the issue cycle (`now`), exactly as the simulator does.
+pub fn retire_bundle(b: &Bundle, now: u64, sb: &mut Scoreboard) {
+    for (i, op) in b.v.iter().enumerate() {
+        let s = i as u8 + 1;
+        let base = own_acc_base(s) as usize;
+        match *op {
+            VecOp::Mac { .. } | VecOp::Mul { .. } => {
+                let ready = now + MAC_TO_QMOV_LATENCY;
+                for j in 0..SLICES {
+                    sb.vrl[base + j] = ready;
+                }
+            }
+            VecOp::ClrA { only } => {
+                for j in 0..SLICES as u8 {
+                    if only.is_none() || only == Some(j) {
+                        sb.vrl[base + j as usize] = now;
+                    }
+                }
+            }
+            VecOp::InitA { .. } | VecOp::InitALane { .. } => {
+                for j in 0..SLICES {
+                    sb.vrl[base + j] = now;
+                }
+            }
+            VecOp::QMov { vd, .. } => sb.vr[vd.0 as usize] = now + QMOV_TO_READ_LATENCY,
+            VecOp::EOp { vd, .. }
+            | VecOp::EOpI { vd, .. }
+            | VecOp::Mov { vd, .. }
+            | VecOp::Bcst { vd, .. }
+            | VecOp::Relu { vd, .. }
+            | VecOp::PoolMax { vd, .. } => sb.vr[vd.0 as usize] = now + 1,
+            VecOp::Nop => {}
+        }
+    }
+    match b.slot0 {
+        SlotOp::LdS { rd, .. } => sb.r[rd.0 as usize] = now + LOAD_USE_LATENCY,
+        SlotOp::LdV { vd, .. } => sb.vr[vd.0 as usize] = now + LOAD_USE_LATENCY,
+        SlotOp::LdA { ad, .. } => sb.vrl[ad.0 as usize] = now + LOAD_USE_LATENCY + 1,
+        _ => {}
+    }
+}
+
+/// Ready cycle of a filter-FIFO entry pushed by an `LdVF` issued at
+/// cycle `now` (same load-use latency as `LdV`).
+pub fn fifo_entry_ready(now: u64) -> u64 {
+    now + LOAD_USE_LATENCY
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Addr, SReg, VReg};
+
+    #[test]
+    fn ldv_then_use_pays_load_use_latency() {
+        let mut sb = Scoreboard::new();
+        let ld = Bundle::s0(SlotOp::LdV { vd: VReg(4), addr: Addr::base(SReg(1)) });
+        retire_bundle(&ld, 10, &mut sb);
+        let st = Bundle::s0(SlotOp::StV { vs: VReg(4), addr: Addr::base(SReg(2)) });
+        let ready = issue_ready(&st, &sb, None, 11).unwrap();
+        assert_eq!(ready, 10 + LOAD_USE_LATENCY);
+    }
+
+    #[test]
+    fn mac_to_qmov_pays_full_latency() {
+        let mut sb = Scoreboard::new();
+        let mac = Bundle {
+            slot0: SlotOp::Nop,
+            v: [
+                VecOp::Mac {
+                    a: ASrc::VrBcast { vr: VReg(4), base: 0, step: 0 },
+                    b: BSrc::Vr { vr: VReg(0) },
+                },
+                VecOp::Nop,
+                VecOp::Nop,
+            ],
+        };
+        retire_bundle(&mac, 5, &mut sb);
+        let q = Bundle {
+            slot0: SlotOp::Nop,
+            v: [VecOp::QMov { vd: VReg(5), j: 0, relu: false }, VecOp::Nop, VecOp::Nop],
+        };
+        assert_eq!(issue_ready(&q, &sb, None, 6).unwrap(), 5 + MAC_TO_QMOV_LATENCY);
+        // a different slot's accumulators are untouched
+        let q2 = Bundle {
+            slot0: SlotOp::Nop,
+            v: [VecOp::Nop, VecOp::QMov { vd: VReg(9), j: 0, relu: false }, VecOp::Nop],
+        };
+        assert_eq!(issue_ready(&q2, &sb, None, 6).unwrap(), 6);
+    }
+
+    #[test]
+    fn fifo_sourced_mac_waits_on_front_entry() {
+        let sb = Scoreboard::new();
+        let mac = Bundle {
+            slot0: SlotOp::Nop,
+            v: [
+                VecOp::Mac { a: ASrc::Lb { row: 0, off: 0 }, b: BSrc::Fifo },
+                VecOp::Nop,
+                VecOp::Nop,
+            ],
+        };
+        assert_eq!(issue_ready(&mac, &sb, None, 0), Err(FifoEmpty));
+        assert_eq!(issue_ready(&mac, &sb, Some(fifo_entry_ready(3)), 4).unwrap(), 5);
+        assert_eq!(issue_ready(&mac, &sb, Some(2), 9).unwrap(), 9);
+    }
+}

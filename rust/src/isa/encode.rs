@@ -669,4 +669,231 @@ mod tests {
     fn pm_capacity_is_512_bundles() {
         assert_eq!(16 * 1024 / BUNDLE_BYTES, 512);
     }
+
+    // ---- exhaustive round-trip: every variant, re-encode identical -----
+    //
+    // The generators above sample the common ops; these cover every
+    // `SlotOp`/`VecOp` variant and every `ASrc`/`BSrc` addressing mode
+    // at the encoding's full legal field ranges, and additionally check
+    // that re-encoding the decoded op reproduces the exact word — i.e.
+    // the encoding has no don't-care bits that decode forgets.
+
+    const ALL_ALU: [AluFn; 10] = [
+        AluFn::Add,
+        AluFn::Sub,
+        AluFn::Mul,
+        AluFn::And,
+        AluFn::Or,
+        AluFn::Xor,
+        AluFn::Shl,
+        AluFn::Shr,
+        AluFn::Min,
+        AluFn::Max,
+    ];
+    const ALL_VFN: [VFn; 7] =
+        [VFn::Add, VFn::Sub, VFn::Mul, VFn::Max, VFn::Min, VFn::Shl, VFn::Shr];
+    const ALL_COND: [Cond; 4] = [Cond::Eq, Cond::Ne, Cond::Lt, Cond::Ge];
+    const ALL_CSR: [Csr; 4] = [Csr::FracShift, Csr::RoundMode, Csr::GateBits, Csr::LbStride];
+
+    /// Full legal `Addr` range: 24-bit signed offset, even post-inc
+    /// whose half fits i8.
+    fn arb_addr(g: &mut Gen) -> Addr {
+        Addr {
+            base: SReg(g.usize_in(0, 31) as u8),
+            offset: g.int(-(1 << 23), (1 << 23) - 1) as i32,
+            post_inc: g.int(-128, 127) as i32 * 2,
+        }
+    }
+
+    fn arb_sreg(g: &mut Gen) -> SReg {
+        SReg(g.usize_in(0, 31) as u8)
+    }
+
+    fn arb_vreg(g: &mut Gen) -> VReg {
+        VReg(g.usize_in(0, 15) as u8)
+    }
+
+    fn arb_slot0_exhaustive(g: &mut Gen) -> SlotOp {
+        match g.int(0, 21) {
+            0 => SlotOp::Nop,
+            1 => SlotOp::Li {
+                rd: arb_sreg(g),
+                imm: g.int(i32::MIN as i64, i32::MAX as i64) as i32,
+            },
+            2 => SlotOp::Alu {
+                f: *g.pick(&ALL_ALU),
+                w: if g.bool() { Width::W16 } else { Width::W32 },
+                rd: arb_sreg(g),
+                ra: arb_sreg(g),
+                rb: arb_sreg(g),
+            },
+            3 => SlotOp::AluI {
+                f: *g.pick(&ALL_ALU),
+                w: if g.bool() { Width::W16 } else { Width::W32 },
+                rd: arb_sreg(g),
+                ra: arb_sreg(g),
+                imm: g.int(-32768, 32767) as i32,
+            },
+            4 => SlotOp::Br {
+                c: *g.pick(&ALL_COND),
+                ra: arb_sreg(g),
+                rb: arb_sreg(g),
+                target: g.int(0, u32::MAX as i64) as u32,
+            },
+            5 => SlotOp::Jmp { target: g.int(0, u32::MAX as i64) as u32 },
+            6 => SlotOp::Loop { n: arb_sreg(g), body: g.int(0, 65535) as u16 },
+            7 => SlotOp::LoopI { n: g.int(0, 65535) as u32, body: g.int(0, 65535) as u16 },
+            8 => SlotOp::Halt,
+            9 => SlotOp::Csrwi {
+                csr: *g.pick(&ALL_CSR),
+                imm: g.int(0, u32::MAX as i64) as u32,
+            },
+            10 => SlotOp::Csrw { csr: *g.pick(&ALL_CSR), rs: arb_sreg(g) },
+            11 => SlotOp::LdS { rd: arb_sreg(g), addr: arb_addr(g) },
+            12 => SlotOp::StS { rs: arb_sreg(g), addr: arb_addr(g) },
+            13 => SlotOp::LdV { vd: arb_vreg(g), addr: arb_addr(g) },
+            14 => SlotOp::StV { vs: arb_vreg(g), addr: arb_addr(g) },
+            15 => SlotOp::LdA { ad: VAcc(g.usize_in(0, 11) as u8), addr: arb_addr(g) },
+            16 => SlotOp::StA { as_: VAcc(g.usize_in(0, 11) as u8), addr: arb_addr(g) },
+            17 => SlotOp::DmaLoad {
+                ch: g.int(0, 255) as u8,
+                ext: arb_sreg(g),
+                dm: arb_sreg(g),
+                len: arb_sreg(g),
+            },
+            18 => SlotOp::DmaStore {
+                ch: g.int(0, 255) as u8,
+                ext: arb_sreg(g),
+                dm: arb_sreg(g),
+                len: arb_sreg(g),
+            },
+            19 => SlotOp::DmaWait { ch: g.int(0, 255) as u8 },
+            20 => SlotOp::LbLoad {
+                row: g.int(0, 3) as u8,
+                dm: arb_sreg(g),
+                off: g.int(0, 65535) as u16,
+                win: g.int(0, 64) as u8,
+                nrows: g.int(0, 15) as u8,
+                rstride: g.int(0, 65535) as u16,
+            },
+            _ => SlotOp::LdVF { addr: arb_addr(g) },
+        }
+    }
+
+    fn arb_asrc(g: &mut Gen) -> ASrc {
+        match g.int(0, 3) {
+            0 => ASrc::Lb { row: g.int(0, 3) as u8, off: g.int(0, 1023) as u16 },
+            1 => ASrc::VrBcast {
+                vr: arb_vreg(g),
+                base: g.int(0, 31) as u8,
+                step: g.int(0, 127) as u8,
+            },
+            2 => ASrc::VrQuad { vr: arb_vreg(g) },
+            _ => ASrc::LbVec { row: g.int(0, 3) as u8, off: g.int(0, 1023) as u16 },
+        }
+    }
+
+    fn arb_bsrc(g: &mut Gen) -> BSrc {
+        match g.int(0, 5) {
+            0 => BSrc::Vr { vr: arb_vreg(g) },
+            1 => BSrc::VrLane { vr: arb_vreg(g), lane: g.int(0, 15) as u8 },
+            2 => BSrc::VrQuad { vr: arb_vreg(g) },
+            3 => BSrc::VrLaneQuad { vr: arb_vreg(g), base: g.int(0, 15) as u8 },
+            4 => BSrc::Fifo,
+            _ => BSrc::FifoLaneQuad { base: g.int(0, 15) as u8 },
+        }
+    }
+
+    fn arb_vec_exhaustive(g: &mut Gen) -> VecOp {
+        match g.int(0, 12) {
+            0 => VecOp::Nop,
+            1 => VecOp::Mac { a: arb_asrc(g), b: arb_bsrc(g) },
+            2 => VecOp::Mul { a: arb_asrc(g), b: arb_bsrc(g) },
+            // 0xFF is the encoding's None sentinel — Some(0xFF) is not
+            // representable, everything below it is
+            3 => VecOp::ClrA {
+                only: if g.bool() { None } else { Some(g.int(0, 254) as u8) },
+            },
+            4 => VecOp::InitA { vr: arb_vreg(g) },
+            5 => VecOp::InitALane { vr: arb_vreg(g), base: g.int(0, 255) as u8 },
+            6 => VecOp::QMov { vd: arb_vreg(g), j: g.int(0, 255) as u8, relu: g.bool() },
+            7 => VecOp::EOp {
+                f: *g.pick(&ALL_VFN),
+                vd: arb_vreg(g),
+                va: arb_vreg(g),
+                vb: arb_vreg(g),
+            },
+            8 => VecOp::EOpI {
+                f: *g.pick(&ALL_VFN),
+                vd: arb_vreg(g),
+                va: arb_vreg(g),
+                imm: g.int(-32768, 32767) as i16,
+            },
+            9 => VecOp::Mov { vd: arb_vreg(g), vs: arb_vreg(g) },
+            10 => VecOp::Bcst { vd: arb_vreg(g), vs: arb_vreg(g), lane: g.int(0, 255) as u8 },
+            11 => VecOp::Relu { vd: arb_vreg(g), vs: arb_vreg(g) },
+            _ => VecOp::PoolMax { vd: arb_vreg(g), va: arb_vreg(g), vb: arb_vreg(g) },
+        }
+    }
+
+    #[test]
+    fn exhaustive_slot0_roundtrip_and_reencode() {
+        prop("slot0 exhaustive roundtrip + reencode", 2000, |g| {
+            let op = arb_slot0_exhaustive(g);
+            let w = encode_slot0(&op).unwrap();
+            let back = decode_slot0(w, 0).unwrap();
+            assert_eq!(op, back, "decode mismatch for word {w:#018x}");
+            assert_eq!(
+                encode_slot0(&back).unwrap(),
+                w,
+                "re-encode of {back:?} not byte-identical"
+            );
+        });
+    }
+
+    #[test]
+    fn exhaustive_vec_roundtrip_and_reencode() {
+        prop("vec exhaustive roundtrip + reencode", 2000, |g| {
+            let op = arb_vec_exhaustive(g);
+            let w = encode_vec(&op).unwrap();
+            let back = decode_vec(w, 0).unwrap();
+            assert_eq!(op, back, "decode mismatch for word {w:#018x}");
+            assert_eq!(
+                encode_vec(&back).unwrap(),
+                w,
+                "re-encode of {back:?} not byte-identical"
+            );
+        });
+    }
+
+    #[test]
+    fn exhaustive_program_bytes_reencode_identical() {
+        prop("program bytes stable under decode/encode", 40, |g| {
+            let n = g.usize_in(1, 64);
+            let mut p = Program::default();
+            for _ in 0..n {
+                p.bundles.push(Bundle {
+                    slot0: arb_slot0_exhaustive(g),
+                    v: [arb_vec_exhaustive(g), arb_vec_exhaustive(g), arb_vec_exhaustive(g)],
+                });
+            }
+            let bytes = encode_program(&p).unwrap();
+            let back = decode_program(&bytes).unwrap();
+            assert_eq!(p.bundles, back.bundles);
+            assert_eq!(
+                encode_program(&back).unwrap(),
+                bytes,
+                "program bytes must be a decode/encode fixpoint"
+            );
+        });
+    }
+
+    #[test]
+    fn clra_some_ff_is_unrepresentable_by_design() {
+        // `only: Some(0xFF)` collides with the None sentinel; the
+        // encoder maps it to None rather than erroring (no generated
+        // program clears a single accumulator index 255 — there are 12).
+        let w = encode_vec(&VecOp::ClrA { only: Some(0xFF) }).unwrap();
+        assert_eq!(decode_vec(w, 0).unwrap(), VecOp::ClrA { only: None });
+    }
 }

@@ -27,6 +27,7 @@
 //! how "possibly strided inputs" reach the vALUs with zero slot-0 cost
 //! (the paper's Section IV).
 
+pub mod analysis;
 pub mod asm;
 pub mod disasm;
 pub mod encode;

@@ -1,0 +1,121 @@
+//! Integration tests for the static program verifier (`isa::analysis`)
+//! through the public API: hand-built broken programs must be rejected
+//! with the expected finding kind, and the CLI `lint` walk over a real
+//! network must come back clean.
+
+use convaix::isa::analysis::{verify, AbiSpec, FindingKind};
+use convaix::isa::{
+    ASrc, AluFn, BSrc, Bundle, Program, SReg, SlotOp, VecOp, Width,
+};
+
+fn prog(bundles: Vec<Bundle>) -> Program {
+    Program { bundles }
+}
+
+#[test]
+fn clean_minimal_program_passes() {
+    let p = prog(vec![
+        Bundle::s0(SlotOp::Li { rd: SReg(1), imm: 5 }),
+        Bundle::s0(SlotOp::Halt),
+    ]);
+    let r = verify(&p, &AbiSpec::bare());
+    assert!(r.is_clean(), "expected clean, got:\n{r}");
+}
+
+#[test]
+fn fifo_underflow_is_rejected() {
+    // a FIFO-sourced MAC with no LdVF ever issued
+    let p = prog(vec![
+        Bundle {
+            slot0: SlotOp::Nop,
+            v: [
+                VecOp::Mac { a: ASrc::Lb { row: 0, off: 0 }, b: BSrc::Fifo },
+                VecOp::Nop,
+                VecOp::Nop,
+            ],
+        },
+        Bundle::s0(SlotOp::Halt),
+    ]);
+    let r = verify(&p, &AbiSpec::bare());
+    assert!(r.has(FindingKind::FifoUnderflow), "missing fifo-underflow in:\n{r}");
+}
+
+#[test]
+fn loop_body_out_of_range_is_rejected() {
+    let p = prog(vec![
+        Bundle::s0(SlotOp::LoopI { n: 2, body: 5 }),
+        Bundle::s0(SlotOp::Halt),
+    ]);
+    let r = verify(&p, &AbiSpec::bare());
+    assert!(r.has(FindingKind::LoopBodyOutOfRange), "missing loop-body-out-of-range in:\n{r}");
+}
+
+#[test]
+fn dma_restart_without_wait_is_rejected() {
+    let start = SlotOp::DmaLoad { ch: 0, ext: SReg(1), dm: SReg(2), len: SReg(3) };
+    let p = prog(vec![
+        Bundle::s0(SlotOp::Li { rd: SReg(1), imm: 0 }),
+        Bundle::s0(SlotOp::Li { rd: SReg(2), imm: 0 }),
+        Bundle::s0(SlotOp::Li { rd: SReg(3), imm: 64 }),
+        Bundle::s0(start),
+        Bundle::s0(start),
+        Bundle::s0(SlotOp::DmaWait { ch: 0 }),
+        Bundle::s0(SlotOp::Halt),
+    ]);
+    let r = verify(&p, &AbiSpec::bare());
+    assert!(r.has(FindingKind::DmaRestart), "missing dma-restart in:\n{r}");
+}
+
+#[test]
+fn read_before_write_sreg_is_rejected() {
+    let p = prog(vec![
+        Bundle::s0(SlotOp::Alu {
+            f: AluFn::Add,
+            w: Width::W32,
+            rd: SReg(1),
+            ra: SReg(2),
+            rb: SReg(3),
+        }),
+        Bundle::s0(SlotOp::Halt),
+    ]);
+    let r = verify(&p, &AbiSpec::bare());
+    assert!(r.has(FindingKind::UseBeforeDef), "missing use-before-def in:\n{r}");
+    // the same program is fine under an ABI that predefines r2..r3
+    let abi = AbiSpec { name: "test", defined_sregs: vec![2, 3] };
+    assert!(verify(&p, &abi).is_clean());
+}
+
+#[test]
+fn sfu_op_outside_slot_1_is_rejected() {
+    let p = prog(vec![
+        Bundle {
+            slot0: SlotOp::Nop,
+            v: [
+                VecOp::Nop,
+                // slot 2 — the SFU lives in slot 1 only
+                VecOp::Relu { vd: convaix::isa::VReg(8), vs: convaix::isa::VReg(0) },
+                VecOp::Nop,
+            ],
+        },
+        Bundle::s0(SlotOp::Halt),
+    ]);
+    let r = verify(&p, &AbiSpec::bare());
+    assert!(r.has(FindingKind::SfuSlot), "missing sfu-slot in:\n{r}");
+}
+
+#[test]
+fn program_running_off_the_end_is_rejected() {
+    let p = prog(vec![Bundle::s0(SlotOp::Li { rd: SReg(1), imm: 1 })]);
+    let r = verify(&p, &AbiSpec::bare());
+    assert!(r.has(FindingKind::RunsOffEnd), "missing runs-off-end in:\n{r}");
+}
+
+/// The `lint` CLI walk: every task program of a real net (solo layers
+/// plus each shard policy's sub-shapes, both gate settings) verifies
+/// clean and gets an exact static cycle count.
+#[test]
+fn lint_walk_over_alexnet_is_clean() {
+    let (text, ok) = convaix::cli::report::lint("alexnet").expect("lint run");
+    assert!(ok, "lint found problems:\n{text}");
+    assert!(text.contains("all clean"), "unexpected lint summary:\n{text}");
+}

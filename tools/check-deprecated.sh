@@ -47,4 +47,20 @@ if [ -n "$hits" ]; then
   echo "$hits"
   exit 1
 fi
+
+# The static verifier (rust/src/isa/analysis) is the component that
+# polices everyone else, so it does not get to silence its own lints
+# quietly: every `#[allow(...)]` there must carry a `// lint-debt:`
+# comment on the same line explaining what is owed and why.
+allow_hits=$(grep -rnP --include='*.rs' '#\[allow\(' rust/src/isa/analysis | grep -v 'lint-debt:' || true)
+if [ -n "$allow_hits" ]; then
+  echo "ERROR: unexplained #[allow(...)] under rust/src/isa/analysis."
+  echo "The verifier's own code silences a lint without recording the debt;"
+  echo "append '// lint-debt: <reason>' on the same line or fix the lint:"
+  echo
+  echo "$allow_hits"
+  exit 1
+fi
+
 echo "OK: the retired 0.2 free-function API has not come back."
+echo "OK: no unexplained #[allow] in rust/src/isa/analysis."
