@@ -32,8 +32,10 @@ COMMANDS:
   golden             bit-exact check: simulator vs JAX/Pallas PJRT artifacts
   lint <net>         compile every task program of a net (solo + sharded
                      sub-shapes, gates 8 and 16) and run the static
-                     verifier + cycle analyzer over each; nonzero exit
-                     if any program has findings
+                     verifier, the symbolic memory-access verifier and
+                     the cycle analyzer over each; nonzero exit if any
+                     program has findings; --json emits one machine-
+                     readable object per finding
   asm <file.cvx>     assemble a .cvx file, report size, disassemble back
 
 OPTIONS:
@@ -58,6 +60,9 @@ OPTIONS:
                      per-stage (default, one core per stage) | auto
                      (partition-DP: stages may own unequal core groups
                      and shard internally) | an explicit plan like 1,2,1
+  --json             machine-readable lint output: a JSON document with
+                     one {net, layer, shard, pass, kind, location}
+                     object per finding (lint only)
   --verify-programs  run the static verifier on every plan-cache insert
                      (always on in debug builds; this flag sets ANALYZE=1
                      so release runs verify too)
@@ -82,6 +87,7 @@ pub struct Args {
     pub stage_cores: StageCores,
     pub no_cache: bool,
     pub verify_programs: bool,
+    pub json: bool,
 }
 
 impl Args {
@@ -100,6 +106,7 @@ impl Args {
             stage_cores: StageCores::PerStage,
             no_cache: false,
             verify_programs: false,
+            json: false,
         };
         let mut it = argv.iter().skip(1).peekable();
         while let Some(arg) = it.next() {
@@ -136,6 +143,7 @@ impl Args {
                     }
                 }
                 "--pipeline" => a.pipeline = true,
+                "--json" => a.json = true,
                 "--no-cache" => a.no_cache = true,
                 "--verify-programs" => a.verify_programs = true,
                 "--pool-mode" => {
@@ -272,7 +280,7 @@ pub fn main_with(argv: &[String]) -> Result<i32> {
                 .first()
                 .map(String::as_str)
                 .unwrap_or("alexnet-full");
-            let (text, ok) = report::lint(net)?;
+            let (text, ok) = report::lint(net, args.json)?;
             print!("{text}");
             Ok(if ok { 0 } else { 1 })
         }

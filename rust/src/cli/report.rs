@@ -350,22 +350,57 @@ pub fn run_multi(tenants: &[String], args: &super::Args) -> Result<String> {
     Ok(s)
 }
 
-/// `convaix lint <net>` — walk every layer of the net, compile every
-/// task program it can execute (the solo per-layer shapes plus every
-/// sub-layer shape each shard policy would produce on a 4-core pool,
-/// at gate bits 8 and 16), run the static verifier (`isa::analysis`)
-/// over each program and report per-program verdicts with the static
-/// cycle analyzer's predicted counts. Returns `(report, all_clean)`.
+/// One structured `lint` finding — the unit of `--json` output.
+struct LintFinding {
+    layer: String,
+    shard: String,
+    pass: &'static str,
+    kind: String,
+    location: String,
+}
+
+/// Minimal JSON string escaping (no serde in the offline vendor set).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// `convaix lint <net> [--json]` — walk every layer of the net, compile
+/// every task program it can execute (the solo per-layer shapes plus
+/// every sub-layer shape each shard policy would produce on a 4-core
+/// pool, at gate bits 8 and 16), run the static verifier
+/// (`isa::analysis` passes 1–3), the symbolic memory-access verifier
+/// (pass 5, at the extremal in-band row ABIs with the plan-derived
+/// region map) and the static cycle analyzer over each program, and
+/// report per-program verdicts. Returns `(report, all_clean)`.
+///
+/// With `json` the report is one JSON document: `{net, programs,
+/// clean, findings}` where `findings` holds one object per finding —
+/// `{net, layer, shard, pass, kind, location}`.
 ///
 /// Identical shapes reached through different policies/gates dedup via
 /// the plan cache (same `Arc` = one row). In debug builds the cache
 /// itself verifies on insert and a dirty program aborts compilation;
 /// in release builds `lint` is the explicit check.
-pub fn lint(net: &str) -> Result<(String, bool)> {
+pub fn lint(net: &str, json: bool) -> Result<(String, bool)> {
     use std::collections::BTreeSet;
 
+    use crate::codegen::{conv, pool, TaskFlavor};
     use crate::coordinator::ShardPolicy;
-    use crate::isa::analysis::{self, AbiSpec};
+    use crate::isa::analysis::{self, memory, AbiSpec, FindingKind};
 
     let layers = net_layers(net)?;
     let cache = PlanCache::new();
@@ -374,11 +409,20 @@ pub fn lint(net: &str) -> Result<(String, bool)> {
         &["Layer", "Kind", "Gate", "Task", "Bundles", "Static cycles", "Verdict"],
     );
     let mut findings = String::new();
-    let mut n_findings = 0usize;
+    let mut structured: Vec<LintFinding> = Vec::new();
     let mut n_programs = 0usize;
     let mut seen: BTreeSet<usize> = BTreeSet::new();
 
+    // "conv1/OcTile0" → ("conv1", "OcTile0"); solo layers have no shard
+    let split = |label: &str| -> (String, String) {
+        match label.split_once('/') {
+            Some((l, s)) => (l.to_string(), s.to_string()),
+            None => (label.to_string(), "-".into()),
+        }
+    };
+
     let mut lint_one = |label: &str, layer: &NetLayer, gate: u8| -> Result<()> {
+        let (lname, shard) = split(label);
         let dense = match layer {
             NetLayer::Conv(l) => Some(l.per_group()),
             NetLayer::Fc(l) => Some(l.as_conv()),
@@ -394,20 +438,65 @@ pub fn lint(net: &str) -> Result<(String, bool)> {
             progs.sort_by_key(|(k, _)| format!("{k:?}"));
             for (key, pm) in progs {
                 n_programs += 1;
-                let rep = analysis::verify(pm.program(), &AbiSpec::conv());
+                let mut rep = analysis::verify(pm.program(), &AbiSpec::conv());
+                // pass 5: memory — extremal rows suffice (accesses are
+                // affine in r2, see `codegen::compiled`)
+                let flavor = TaskFlavor { first_slice: key.1, last_slice: key.2 };
+                let spec = conv::mem_spec(&cc.plan, flavor);
+                let mut mem_seen: BTreeSet<(FindingKind, usize)> = BTreeSet::new();
+                let last_row = cc.plan.band_rows.saturating_sub(1);
+                let rows = if last_row == 0 { vec![0] } else { vec![0, last_row] };
+                for oh_local in rows {
+                    match memory::check(pm.program(), &cc.abi_env_for_row(oh_local), &spec) {
+                        Ok(mrep) => {
+                            for f in mrep.findings {
+                                if mem_seen.insert((f.kind, f.pc)) {
+                                    rep.findings.push(f);
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            findings.push_str(&format!(
+                                "{label} {key:?}: memory walk failed: {e}\n"
+                            ));
+                            structured.push(LintFinding {
+                                layer: lname.clone(),
+                                shard: shard.clone(),
+                                pass: "memory",
+                                kind: "walk-error".into(),
+                                location: format!("task {key:?}"),
+                            });
+                        }
+                    }
+                }
+                rep.findings.sort_by(|a, b| (a.pc, a.kind).cmp(&(b.pc, b.kind)));
                 let cycles = match &timings[key] {
                     Ok(st) => st.cycles.to_string(),
                     Err(e) => {
-                        n_findings += 1;
                         findings
                             .push_str(&format!("{label} {key:?}: static prediction failed: {e}\n"));
+                        structured.push(LintFinding {
+                            layer: lname.clone(),
+                            shard: shard.clone(),
+                            pass: "predict",
+                            kind: "predict-error".into(),
+                            location: format!("task {key:?}"),
+                        });
                         "-".into()
                     }
                 };
+                for f in &rep.findings {
+                    structured.push(LintFinding {
+                        layer: lname.clone(),
+                        shard: shard.clone(),
+                        pass: f.kind.pass(),
+                        kind: f.kind.to_string(),
+                        location: format!("task {key:?} bundle {}", f.pc),
+                    });
+                }
                 let verdict = if rep.is_clean() {
                     "clean".to_string()
                 } else {
-                    n_findings += rep.findings.len();
                     findings.push_str(&format!("-- {label} task {key:?} --\n{rep}\n"));
                     format!("{} finding(s)", rep.findings.len())
                 };
@@ -427,19 +516,47 @@ pub fn lint(net: &str) -> Result<(String, bool)> {
                 return Ok(());
             }
             n_programs += 1;
-            let rep = analysis::verify(cp.pm.program(), &AbiSpec::pool());
+            let mut rep = analysis::verify(cp.pm.program(), &AbiSpec::pool());
+            match memory::check(cp.pm.program(), &cp.abi_env(), &pool::mem_spec(&cp.plan)) {
+                Ok(mrep) => rep.findings.extend(mrep.findings),
+                Err(e) => {
+                    findings.push_str(&format!("{label}: memory walk failed: {e}\n"));
+                    structured.push(LintFinding {
+                        layer: lname.clone(),
+                        shard: shard.clone(),
+                        pass: "memory",
+                        kind: "walk-error".into(),
+                        location: "task row".into(),
+                    });
+                }
+            }
+            rep.findings.sort_by(|a, b| (a.pc, a.kind).cmp(&(b.pc, b.kind)));
             let cycles = match cp.analyzer_timing() {
                 Ok(st) => st.cycles.to_string(),
                 Err(e) => {
-                    n_findings += 1;
                     findings.push_str(&format!("{label}: static prediction failed: {e}\n"));
+                    structured.push(LintFinding {
+                        layer: lname.clone(),
+                        shard: shard.clone(),
+                        pass: "predict",
+                        kind: "predict-error".into(),
+                        location: "task row".into(),
+                    });
                     "-".into()
                 }
             };
+            for f in &rep.findings {
+                structured.push(LintFinding {
+                    layer: lname.clone(),
+                    shard: shard.clone(),
+                    pass: f.kind.pass(),
+                    kind: f.kind.to_string(),
+                    location: format!("task row bundle {}", f.pc),
+                });
+            }
             let verdict = if rep.is_clean() {
                 "clean".to_string()
             } else {
-                n_findings += rep.findings.len();
                 findings.push_str(&format!("-- {label} --\n{rep}\n"));
                 format!("{} finding(s)", rep.findings.len())
             };
@@ -470,14 +587,42 @@ pub fn lint(net: &str) -> Result<(String, bool)> {
         }
     }
 
+    let n_findings = structured.len();
     let ok = n_findings == 0;
-    let mut s = t.render();
-    s.push_str(&findings);
-    s.push_str(&format!(
-        "{net}: {n_programs} program(s) verified across gates {{8, 16}} and all shard \
-         policies — {}\n",
-        if ok { "all clean".to_string() } else { format!("{n_findings} finding(s)") },
-    ));
+    let s = if json {
+        let mut s = String::from("{\n");
+        s.push_str(&format!("  \"net\": {},\n", json_str(net)));
+        s.push_str(&format!("  \"programs\": {n_programs},\n"));
+        s.push_str(&format!("  \"clean\": {ok},\n"));
+        s.push_str("  \"findings\": [");
+        for (i, f) in structured.iter().enumerate() {
+            s.push_str(if i == 0 { "\n" } else { ",\n" });
+            s.push_str(&format!(
+                "    {{\"net\": {}, \"layer\": {}, \"shard\": {}, \"pass\": {}, \
+                 \"kind\": {}, \"location\": {}}}",
+                json_str(net),
+                json_str(&f.layer),
+                json_str(&f.shard),
+                json_str(f.pass),
+                json_str(&f.kind),
+                json_str(&f.location),
+            ));
+        }
+        if !structured.is_empty() {
+            s.push_str("\n  ");
+        }
+        s.push_str("]\n}\n");
+        s
+    } else {
+        let mut s = t.render();
+        s.push_str(&findings);
+        s.push_str(&format!(
+            "{net}: {n_programs} program(s) verified (structural/dataflow/resource/memory + \
+             cycle prediction) across gates {{8, 16}} and all shard policies — {}\n",
+            if ok { "all clean".to_string() } else { format!("{n_findings} finding(s)") },
+        ));
+        s
+    };
     Ok((s, ok))
 }
 

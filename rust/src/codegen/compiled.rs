@@ -41,6 +41,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::core::CoreStats;
+use crate::isa::analysis::memory::{self, MemSpec};
 use crate::isa::analysis::predict::{predict, AbiEnv, StaticTiming};
 use crate::isa::analysis::{self, AbiSpec};
 use crate::isa::Program;
@@ -67,6 +68,33 @@ fn verify_on_insert(prog: &Program, abi: &AbiSpec, what: &str) -> Result<(), Cod
     } else {
         Err(CodegenError::Verify(format!("{what}: {report}")))
     }
+}
+
+/// The memory pass (`analysis::memory`, pass 5) on insert: enumerate
+/// every access the program performs under each given ABI environment
+/// and check region bounds, `DmMap` aliasing and DMA hazards. Callers
+/// pass the *extremal* row environments — every access address is
+/// affine in r2 with unit coefficient and the access-site set does not
+/// depend on r2 (control flow branches only on counters), so region
+/// containment at the interval endpoints implies it for every row in
+/// between.
+fn verify_memory_on_insert(
+    prog: &Program,
+    envs: &[AbiEnv],
+    spec: &MemSpec,
+    what: &str,
+) -> Result<(), CodegenError> {
+    if !analysis::enabled() {
+        return Ok(());
+    }
+    for env in envs {
+        let report = memory::check(prog, env, spec)
+            .map_err(|e| CodegenError::Verify(format!("{what}: memory walk failed: {e}")))?;
+        if !report.is_clean() {
+            return Err(CodegenError::Verify(format!("{what}: {report}")));
+        }
+    }
+    Ok(())
 }
 
 /// Program selector within one conv plan: (slice input channels,
@@ -127,13 +155,26 @@ struct PoolKey {
     stride: usize,
 }
 
-/// One raw sampled row of a cold tile-analytic pass: the per-run
-/// `(cycles, stats)` the cycle simulator returned.
+/// One raw sampled row of a cold tile-analytic pass: the `(cycles,
+/// stats)` the cycle simulator returned, tagged with the in-band row
+/// index it ran at. The tag makes every sample independently checkable
+/// against the static analyzer: `predict` at the matching per-row ABI
+/// (`CompiledConv::abi_env_for_row`) must reproduce it field-for-field.
+pub(crate) struct RowSample {
+    /// Row index within the band (`oh_local`); determines the r2 ABI
+    /// value `dm.input + oh_local · stride · row_bytes`.
+    pub oh_local: usize,
+    pub cycles: u64,
+    pub stats: CoreStats,
+}
+
+/// The raw sampled rows of one task program from a cold tile-analytic
+/// pass.
 pub(crate) struct SampleSet {
     /// Raw per-row samples, in the schedule order the cold pass ran
     /// them (at most `ANALYTIC_SAMPLES`; fewer when the layer has fewer
     /// rows of this task).
-    pub rows: Vec<(u64, CoreStats)>,
+    pub rows: Vec<RowSample>,
     /// Sum of the sampled cycles (the cold pass's accumulator value).
     pub total_cycles: u64,
     /// Field-wise sum of the sampled stats.
@@ -179,10 +220,20 @@ impl CompiledConv {
             let key = (plan.slice_ics(mi), f.first_slice, f.last_slice);
             if !programs.contains_key(&key) {
                 let pm = build_conv_task(&plan, key.0, f)?;
-                verify_on_insert(
+                let what = format!("conv task {key:?} of layer {}", layer.name);
+                verify_on_insert(pm.program(), &AbiSpec::conv(), &what)?;
+                // Memory pass at the extremal in-band rows (r2 is the
+                // only row-dependent ABI register and every access is
+                // affine in it — see `verify_memory_on_insert`).
+                let envs = [
+                    Self::row_env(&plan, 0),
+                    Self::row_env(&plan, plan.band_rows.saturating_sub(1)),
+                ];
+                verify_memory_on_insert(
                     pm.program(),
-                    &AbiSpec::conv(),
-                    &format!("conv task {key:?} of layer {}", layer.name),
+                    &envs,
+                    &super::conv::mem_spec(&plan, f),
+                    &what,
                 )?;
                 programs.insert(key, pm);
             }
@@ -204,18 +255,42 @@ impl CompiledConv {
         self.programs.iter()
     }
 
-    /// The ABI environment `run_dense` establishes for the row-0 task:
-    /// r2 = staged input base (first output row), r4/r5/r6 = output /
-    /// psum / filter stream bases. Later rows differ only in r2; cycle
-    /// counts are compared at row 0 (DM bank interleaving makes other
-    /// rows' LB-fill conflicts depend on the row address).
-    pub(crate) fn abi_env(&self) -> AbiEnv {
+    fn row_env(plan: &ConvPlan, oh_local: usize) -> AbiEnv {
         AbiEnv::new(&[
-            (2, self.plan.dm.input as i32),
-            (4, self.plan.dm.out as i32),
-            (5, self.plan.dm.psum as i32),
-            (6, self.plan.dm.filt as i32),
+            (2, (plan.dm.input + oh_local * plan.layer.stride * plan.row_bytes) as i32),
+            (4, plan.dm.out as i32),
+            (5, plan.dm.psum as i32),
+            (6, plan.dm.filt as i32),
         ])
+    }
+
+    /// The ABI environment `run_dense` establishes for the in-band row
+    /// `oh_local`: r2 = staged input base + `oh_local · stride ·
+    /// row_bytes`, r4/r5/r6 = output / psum / filter stream bases. Only
+    /// r2 varies per row; DM bank interleaving makes the row's LB-fill
+    /// conflicts depend on that address, which is why per-row timing is
+    /// predicted per-row rather than extrapolated from row 0.
+    pub(crate) fn abi_env_for_row(&self, oh_local: usize) -> AbiEnv {
+        Self::row_env(&self.plan, oh_local)
+    }
+
+    /// The row-0 ABI environment (the `lint` walk prices row 0).
+    pub(crate) fn abi_env(&self) -> AbiEnv {
+        self.abi_env_for_row(0)
+    }
+
+    /// Static cycle prediction of one task program at one in-band row's
+    /// ABI — exact (bit-for-bit against the simulator) per row,
+    /// including the row-address-dependent DM bank conflicts of LB
+    /// fills. Uncached: callers wanting the cached row-0 map use
+    /// [`Self::analyzer_timing`].
+    pub(crate) fn predict_row(
+        &self,
+        key: &TaskKey,
+        oh_local: usize,
+    ) -> Result<StaticTiming, String> {
+        predict(self.programs[key].program(), &self.abi_env_for_row(oh_local))
+            .map_err(|e| e.to_string())
     }
 
     /// Static cycle predictions per task program, lazily computed and
@@ -248,11 +323,10 @@ impl CompiledPool {
         let one_row = PoolLayer { ih: layer.size, ..layer.clone() };
         let plan = plan_pool(&one_row)?;
         let pm = build_pool_task(&plan)?;
-        verify_on_insert(
-            pm.program(),
-            &AbiSpec::pool(),
-            &format!("pool task of layer {}", layer.name),
-        )?;
+        let what = format!("pool task of layer {}", layer.name);
+        verify_on_insert(pm.program(), &AbiSpec::pool(), &what)?;
+        let env = AbiEnv::new(&[(2, plan.dm_input as i32), (4, plan.dm_out as i32)]);
+        verify_memory_on_insert(pm.program(), &[env], &super::pool::mem_spec(&plan), &what)?;
         Ok(Self { plan, pm, analytic: OnceLock::new(), analyzer: OnceLock::new() })
     }
 
@@ -450,15 +524,23 @@ mod tests {
     //
     // The analyzer (`isa::analysis::predict`) must reproduce the
     // simulated cycle count and every stall counter *exactly*, for every
-    // task program of every shape in the matrix below. Comparison is at
-    // the row-0 ABI (r2 = staged input base): later rows differ only in
-    // r2, and DM bank interleaving makes their LB-fill conflicts
-    // address-dependent — the same reason the tile-analytic profile
-    // samples real rows.
+    // task program of every shape in the matrix below — at **every**
+    // in-band row's ABI, not just row 0. Rows differ only in r2, but DM
+    // bank interleaving makes each row's LB-fill conflicts depend on
+    // that address; the analyzer prices them per row via
+    // `abi_env_for_row`, so the comparison sweeps the extremal and a
+    // middle row of the band.
 
     use crate::core::Cpu;
     use crate::isa::SReg;
     use crate::model::FcLayer;
+
+    /// In-band rows a per-row comparison sweeps: first, middle, last.
+    fn sweep_rows(band_rows: usize) -> Vec<usize> {
+        let mut rows = vec![0, band_rows / 2, band_rows.saturating_sub(1)];
+        rows.dedup();
+        rows
+    }
 
     /// Shapes excluded from exact static prediction. Every entry needs a
     /// documented reason; `predict_exclusion_list_does_not_grow` pins
@@ -494,28 +576,35 @@ mod tests {
         let cc = CompiledConv::compile(l).unwrap();
         let timings = cc.analyzer_timing();
         for (key, pm) in cc.programs() {
-            let got = match &timings[key] {
-                Ok(t) => *t,
-                Err(e) => panic!("{} {key:?}: static prediction failed: {e}", l.name),
-            };
-            let mut cpu = Cpu::new(1 << 10);
-            cpu.regs.set_r(SReg(2), cc.plan.dm.input as i32);
-            cpu.regs.set_r(SReg(4), cc.plan.dm.out as i32);
-            cpu.regs.set_r(SReg(5), cc.plan.dm.psum as i32);
-            cpu.regs.set_r(SReg(6), cc.plan.dm.filt as i32);
-            let sim = cpu.run(pm).unwrap();
-            assert_eq!(
-                (got.cycles, got.bundles, got.hazard_stalls, got.lb_stalls),
-                (sim.cycles, sim.bundles, sim.hazard_stalls, sim.lb_stalls),
-                "{} {key:?}",
-                l.name
-            );
-            assert_eq!(
-                (got.branch_stalls, got.dma_wait_stalls, got.wide_ls_stalls),
-                (sim.branch_stalls, sim.dma_wait_stalls, sim.wide_ls_stalls),
-                "{} {key:?}",
-                l.name
-            );
+            // the cached row-0 map must agree with the per-row path
+            assert_eq!(timings[key], cc.predict_row(key, 0), "{} {key:?}", l.name);
+            for oh_local in sweep_rows(cc.plan.band_rows) {
+                let got = match cc.predict_row(key, oh_local) {
+                    Ok(t) => t,
+                    Err(e) => {
+                        panic!("{} {key:?} row {oh_local}: static prediction failed: {e}", l.name)
+                    }
+                };
+                let mut cpu = Cpu::new(1 << 10);
+                let r2 = cc.plan.dm.input + oh_local * l.stride * cc.plan.row_bytes;
+                cpu.regs.set_r(SReg(2), r2 as i32);
+                cpu.regs.set_r(SReg(4), cc.plan.dm.out as i32);
+                cpu.regs.set_r(SReg(5), cc.plan.dm.psum as i32);
+                cpu.regs.set_r(SReg(6), cc.plan.dm.filt as i32);
+                let sim = cpu.run(pm).unwrap();
+                assert_eq!(
+                    (got.cycles, got.bundles, got.hazard_stalls, got.lb_stalls),
+                    (sim.cycles, sim.bundles, sim.hazard_stalls, sim.lb_stalls),
+                    "{} {key:?} row {oh_local}",
+                    l.name
+                );
+                assert_eq!(
+                    (got.branch_stalls, got.dma_wait_stalls, got.wide_ls_stalls),
+                    (sim.branch_stalls, sim.dma_wait_stalls, sim.wide_ls_stalls),
+                    "{} {key:?} row {oh_local}",
+                    l.name
+                );
+            }
         }
     }
 
@@ -563,6 +652,24 @@ mod tests {
             PREDICT_EXCLUSIONS.is_empty(),
             "static prediction exclusions must not grow: {PREDICT_EXCLUSIONS:?}"
         );
+    }
+
+    /// The memory pass's symbolic walk resolves *every* access of every
+    /// generated conv task to a concrete (address, length, bank set) at
+    /// every swept row ABI — no unknown-address skips. (A clean `check`
+    /// with unknowns would be vacuous; this pins the walk as total.)
+    #[test]
+    fn memory_pass_resolves_every_access_on_the_matrix() {
+        for l in conv_matrix() {
+            let cc = CompiledConv::compile(&l).unwrap();
+            for (key, pm) in cc.programs() {
+                for oh_local in sweep_rows(cc.plan.band_rows) {
+                    let tr = memory::trace(pm.program(), &cc.abi_env_for_row(oh_local)).unwrap();
+                    assert_eq!(tr.unknown, 0, "{} {key:?} row {oh_local}", l.name);
+                    assert!(!tr.accesses.is_empty(), "{} {key:?} row {oh_local}", l.name);
+                }
+            }
+        }
     }
 
     #[test]

@@ -54,6 +54,7 @@
 //!
 //! [`AbiSpec::conv`]: crate::isa::analysis::AbiSpec::conv
 
+use crate::isa::analysis::memory::{MemSpec, Region};
 use crate::isa::*;
 use crate::mem::pm::ProgramMem;
 
@@ -73,6 +74,24 @@ impl TaskFlavor {
     pub fn single() -> Self {
         Self { first_slice: true, last_slice: true }
     }
+}
+
+/// The memory contract a conv task of this flavor is checked against by
+/// the `isa::analysis::memory` pass: the plan's `DmMap` regions with
+/// per-flavor permissions. Filter reads include the 64 B FIFO over-read
+/// slack (part of the `filt` region by construction); staged-input reads
+/// include the prefetch slack band (`input..end`); the PSum buffer is
+/// readable only on continuing slices and writable only on non-final
+/// ones, so a single-slice program touching it at all is a finding.
+pub fn mem_spec(plan: &ConvPlan, flavor: TaskFlavor) -> MemSpec {
+    let dm = &plan.dm;
+    MemSpec::with_regions(vec![
+        Region::new("bias", dm.bias, dm.filt, true, false),
+        Region::new("filt", dm.filt, dm.out, true, false),
+        Region::new("out", dm.out, dm.psum, false, flavor.last_slice),
+        Region::new("psum", dm.psum, dm.input, !flavor.first_slice, !flavor.last_slice),
+        Region::new("input", dm.input, dm.end, true, false),
+    ])
 }
 
 const R0: SReg = SReg(0); // zero

@@ -10,6 +10,7 @@
 //! ABI: r2 = staged input base (`size` rows, pixel-major vectors),
 //! r4 = output row base. r0/r3/r7/r9 clobbered.
 
+use crate::isa::analysis::memory::{MemSpec, Region};
 use crate::isa::*;
 use crate::mem::pm::ProgramMem;
 use crate::mem::DM_BYTES;
@@ -53,6 +54,18 @@ pub fn plan_pool(layer: &PoolLayer) -> Result<PoolPlan, CodegenError> {
         dm_input: 0,
         dm_out: input_bytes,
     })
+}
+
+/// The memory contract of a pool task for the `isa::analysis::memory`
+/// pass: staged input rows are read-only, the output row buffer is
+/// write-only, nothing else in DM may be touched. The window walk ends
+/// exactly at `dm_out` ((ow−1)·stride + size ≤ iw), which the pass
+/// verifies per compiled plan.
+pub fn mem_spec(plan: &PoolPlan) -> MemSpec {
+    MemSpec::with_regions(vec![
+        Region::new("in", plan.dm_input, plan.dm_out, true, false),
+        Region::new("out", plan.dm_out, plan.dm_out + plan.layer.ow() * 32, false, true),
+    ])
 }
 
 const R0: SReg = SReg(0);

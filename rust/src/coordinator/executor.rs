@@ -20,7 +20,7 @@
 use std::collections::HashMap;
 
 use crate::codegen::compiled::{
-    flavor_of, AnalyticProfile, CompiledConv, PlanCache, SampleSet, Scratch, TaskKey,
+    flavor_of, AnalyticProfile, CompiledConv, PlanCache, RowSample, SampleSet, Scratch, TaskKey,
 };
 use crate::codegen::layout::{LoopOrder, Variant};
 use crate::codegen::stage;
@@ -236,7 +236,7 @@ fn run_dense(
     // key, exactly the 0.4 shape — plus the raw per-row record used to
     // publish the profile, plus the warm replay cursors.
     let mut acc: HashMap<TaskKey, (u64, u64, CoreStats)> = HashMap::new();
-    let mut raw: HashMap<TaskKey, Vec<(u64, CoreStats)>> = HashMap::new();
+    let mut raw: HashMap<TaskKey, Vec<RowSample>> = HashMap::new();
     let mut cursor: HashMap<TaskKey, usize> = HashMap::new();
 
     // I/O accounting per plan.loop_order (DESIGN.md §6 ablation).
@@ -278,7 +278,7 @@ fn run_dense(
     let do_band = |cpu: &mut Cpu,
                    res: &mut LayerResult,
                    acc: &mut HashMap<TaskKey, (u64, u64, CoreStats)>,
-                   raw: &mut HashMap<TaskKey, Vec<(u64, CoreStats)>>,
+                   raw: &mut HashMap<TaskKey, Vec<RowSample>>,
                    cursor: &mut HashMap<TaskKey, usize>,
                    psum: &mut Vec<Vec<i32>>,
                    out: &mut Vec<i16>,
@@ -321,9 +321,9 @@ fn run_dense(
                 let done = cursor.entry(key).or_insert(0);
                 let mut r = 0usize;
                 while r < rows && *done < s.rows.len() {
-                    let (cyc, st) = &s.rows[*done];
-                    res.compute_cycles += *cyc;
-                    res.stats = add_stats(&res.stats, st);
+                    let sample = &s.rows[*done];
+                    res.compute_cycles += sample.cycles;
+                    res.stats = add_stats(&res.stats, &sample.stats);
                     *done += 1;
                     r += 1;
                 }
@@ -382,7 +382,9 @@ fn run_dense(
                     e.0 += 1;
                     e.1 += stats.cycles;
                     e.2 = add_stats(&e.2, &stats);
-                    raw.entry(key).or_default().push((stats.cycles, stats));
+                    raw.entry(key)
+                        .or_default()
+                        .push(RowSample { oh_local, cycles: stats.cycles, stats });
                 }
                 res.stats = add_stats(&res.stats, &stats);
             } else {
@@ -491,10 +493,10 @@ fn run_dense(
         let samples = raw
             .into_iter()
             .map(|(k, rows)| {
-                let total_cycles = rows.iter().map(|r| r.0).sum();
+                let total_cycles = rows.iter().map(|r| r.cycles).sum();
                 let mut total_stats = CoreStats::default();
                 for r in &rows {
-                    total_stats = add_stats(&total_stats, &r.1);
+                    total_stats = add_stats(&total_stats, &r.stats);
                 }
                 (k, SampleSet { rows, total_cycles, total_stats })
             })
@@ -825,6 +827,74 @@ mod tests {
             assert_eq!(hot.io_in, cold.io_in, "{}", l.name);
             assert_eq!(hot.io_out, cold.io_out, "{}", l.name);
             assert_eq!(hot.stats, cold.stats, "{}: stats drifted on replay", l.name);
+        }
+    }
+
+    #[test]
+    fn sampled_rows_match_static_prediction_per_row() {
+        // Every raw row sample a cold tile-analytic pass records must
+        // equal the static analyzer's prediction at that row's own ABI
+        // (`CompiledConv::predict_row`) — cycles, bundles and all five
+        // stall counters. The cold pass samples consecutive in-band
+        // rows, so this exercises r2 values beyond row 0, where LB-fill
+        // DM bank conflicts are address-dependent.
+        for l in [
+            ConvLayer::new("pra", 4, 24, 24, 16, 3, 3, 1, 1, 1), // variant A
+            ConvLayer::new("prb", 8, 13, 13, 48, 3, 3, 1, 1, 1), // variant B
+            ConvLayer::new("prm", 768, 6, 6, 16, 3, 3, 1, 1, 1), // m > 1
+        ] {
+            let mut rng = XorShift::new(5);
+            let x = rng.i16_vec(l.ic * l.ih * l.iw, -500, 500);
+            let w = rng.i16_vec(l.oc * l.ic * l.fh * l.fw, -100, 100);
+            let b = rng.i32_vec(l.oc, -100, 100);
+            let opts = ExecOptions { mode: ExecMode::TileAnalytic, ..Default::default() };
+            let cache = PlanCache::new();
+            let mut scratch = Scratch::default();
+            let mut cpu = Cpu::new(1 << 22);
+            conv_layer(&mut cpu, &l, &x, &w, &b, opts, &mut ExecCtx::new(&cache, &mut scratch))
+                .unwrap();
+            let cc = cache.conv(&l, opts.gate_bits).unwrap();
+            let profile = cc.analytic.get().expect("cold pass must publish a profile");
+            let mut checked = 0usize;
+            let mut rows_seen = std::collections::HashSet::new();
+            for (key, s) in &profile.samples {
+                for sample in &s.rows {
+                    let got = cc.predict_row(key, sample.oh_local).unwrap_or_else(|e| {
+                        panic!("{} {key:?} row {}: {e}", l.name, sample.oh_local)
+                    });
+                    assert_eq!(
+                        (got.cycles, got.bundles, got.hazard_stalls, got.lb_stalls),
+                        (
+                            sample.cycles,
+                            sample.stats.bundles,
+                            sample.stats.hazard_stalls,
+                            sample.stats.lb_stalls
+                        ),
+                        "{} {key:?} row {}",
+                        l.name,
+                        sample.oh_local
+                    );
+                    assert_eq!(
+                        (got.branch_stalls, got.dma_wait_stalls, got.wide_ls_stalls),
+                        (
+                            sample.stats.branch_stalls,
+                            sample.stats.dma_wait_stalls,
+                            sample.stats.wide_ls_stalls
+                        ),
+                        "{} {key:?} row {}",
+                        l.name,
+                        sample.oh_local
+                    );
+                    rows_seen.insert(sample.oh_local);
+                    checked += 1;
+                }
+            }
+            assert!(checked > 0, "{}: no samples checked", l.name);
+            assert!(
+                rows_seen.len() > 1 || cc.plan.band_rows == 1,
+                "{}: sampling covered only one distinct row",
+                l.name
+            );
         }
     }
 

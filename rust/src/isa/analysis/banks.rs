@@ -1,0 +1,85 @@
+//! DM bank geometry and the port-1 conflict rule — the single source of
+//! truth shared by the simulator ([`crate::mem::dm::DataMem`] delegates
+//! here) and the static analyzers ([`super::predict`] prices bank
+//! conflicts through the same functions via [`super::timing`], and
+//! [`super::memory`] annotates each enumerated access with its bank
+//! set). Moved out of `mem/dm.rs` — not copied — so the analyzer cannot
+//! drift from the machine (the PR 7 scoreboard discipline).
+//!
+//! Geometry (Section III of the paper): 128 KB DM in 16 dual-ported
+//! 8 KB banks; port 0 serves the pipeline, port 1 serves DMA and the
+//! line-buffer fill. A port-1 access that lands in the bank port 0
+//! already touched in the same cycle retries next cycle and counts a
+//! `bank_conflict`.
+
+use crate::mem::{DM_BANKS, DM_BANK_BYTES};
+
+/// Bank index of a DM byte address.
+#[inline]
+#[must_use]
+pub fn bank_of(addr: usize) -> usize {
+    (addr / DM_BANK_BYTES) % DM_BANKS
+}
+
+/// The port-1 retry rule: does a port-1 access at `p1_addr` collide with
+/// the bank port 0 touched this cycle (`p0_bank`, `None` when the
+/// pipeline made no DM access)? Block accesses never straddle a bank:
+/// ports are 32 B wide and banks 8 KB, so the start address decides.
+#[inline]
+#[must_use]
+pub fn p1_conflicts(p0_bank: Option<usize>, p1_addr: usize) -> bool {
+    p0_bank == Some(bank_of(p1_addr))
+}
+
+/// Bitmask of the banks a byte range `[addr, addr + len)` touches
+/// (bit *i* set ⇔ bank *i* touched). Used by the memory pass to report
+/// each access's bank set; `len == 0` touches nothing.
+#[must_use]
+pub fn bank_set(addr: usize, len: usize) -> u16 {
+    if len == 0 {
+        return 0;
+    }
+    let first = addr / DM_BANK_BYTES;
+    let last = (addr + len - 1) / DM_BANK_BYTES;
+    if last - first + 1 >= DM_BANKS {
+        return u16::MAX; // wraps the whole interleave
+    }
+    let mut mask = 0u16;
+    for b in first..=last {
+        mask |= 1 << (b % DM_BANKS);
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::DM_BYTES;
+
+    #[test]
+    fn bank_mapping() {
+        assert_eq!(bank_of(0), 0);
+        assert_eq!(bank_of(DM_BANK_BYTES - 1), 0);
+        assert_eq!(bank_of(DM_BANK_BYTES), 1);
+        assert_eq!(bank_of(DM_BYTES - 1), DM_BANKS - 1);
+    }
+
+    #[test]
+    fn conflict_rule() {
+        assert!(p1_conflicts(Some(0), 100));
+        assert!(!p1_conflicts(Some(1), 100));
+        assert!(!p1_conflicts(None, 100));
+        assert!(p1_conflicts(Some(1), DM_BANK_BYTES + 4));
+    }
+
+    #[test]
+    fn bank_sets() {
+        assert_eq!(bank_set(0, 0), 0);
+        assert_eq!(bank_set(0, 32), 1);
+        assert_eq!(bank_set(DM_BANK_BYTES - 2, 4), 0b11);
+        assert_eq!(bank_set(0, DM_BYTES), u16::MAX);
+        // spans exactly the last and first bank of the interleave
+        let m = bank_set(DM_BYTES - 2, 4);
+        assert_eq!(m, (1 << (DM_BANKS - 1)) | 1);
+    }
+}

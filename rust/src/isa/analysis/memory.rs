@@ -1,0 +1,778 @@
+//! Pass 5 — the symbolic memory-access verifier.
+//!
+//! Walks a decoded [`Program`] under a concrete [`AbiEnv`] (the same
+//! constant-lattice walk [`super::predict`] uses, minus all timing) and
+//! enumerates **every** memory access the program performs: DM port-0
+//! pipeline accesses, DM port-1 line-buffer fills and DMA ranges, and
+//! external-memory DMA endpoints — each as an [`Access`] carrying
+//! (address, length, port, read/write, bank set). On that stream it
+//! checks, per [`MemSpec`]:
+//!
+//! * **bounds** ([`FindingKind::MemBounds`]) — every DM access lies
+//!   inside DM and inside a region that permits its direction. The
+//!   region map is the plan's `DmMap` with the planner's slack included
+//!   (the 64 B filter over-read, the staged-input prefetch band), so the
+//!   checker proves the slack sufficient instead of trusting it.
+//! * **aliasing** ([`FindingKind::MemOverlap`]) — the declared regions
+//!   are pairwise disjoint and end within DM, machine-checked per
+//!   compiled plan instead of asserted by construction in `layout.rs`.
+//! * **hazards** ([`FindingKind::DmaRace`]) — between a DMA start and
+//!   its `DmaWait`, no compute access may touch a `DmaLoad`'s
+//!   destination byte range and no compute *write* may touch a
+//!   `DmaStore`'s source byte range. This refines `resource.rs`'s
+//!   channel-level protocol lint to exact byte ranges.
+//!
+//! Because the walk is driven by a concrete ABI environment, the caller
+//! parameterizes it by the *actual* per-row register file
+//! (`r2 = dm.input + oh_local·S·row_bytes`, see
+//! `codegen::compiled::CompiledConv::abi_env_for_row`) — not just row 0.
+//! Accesses whose base register is statically unknown (e.g. derived
+//! from loaded data) are skipped and counted in [`Trace::unknown`];
+//! unknown *control flow* aborts with [`MemError::Unsupported`] exactly
+//! like the cycle analyzer, since a walk that cannot follow the path
+//! cannot claim to have enumerated its accesses.
+
+use crate::isa::{Program, SReg, SlotOp};
+use crate::mem::DM_BYTES;
+
+use super::banks::bank_set;
+use super::predict::AbiEnv;
+use super::{finding, Finding, FindingKind, Report};
+
+/// Which physical port an access uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Port {
+    /// Pipeline (slot-0 load/store) accesses.
+    P0,
+    /// Background accesses: line-buffer fill and DMA.
+    P1,
+}
+
+/// Which address space an access touches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Space {
+    Dm,
+    Ext,
+}
+
+/// What issued the access (for reporting; bounds rules key off
+/// `space`/`write`/`kind == Dma`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessKind {
+    /// `LdS`/`StS` (2 B), `LdV`/`StV`/`LdVF` (32 B), `LdA`/`StA` (64 B).
+    Pipeline,
+    /// One source-row read of an `LbLoad` 2-D window fill.
+    LbFill,
+    /// A whole DMA transfer range (recorded once at start).
+    Dma,
+}
+
+/// One enumerated memory access.
+#[derive(Debug, Clone, Copy)]
+pub struct Access {
+    /// Bundle that issued it (for DMA, the `DmaLoad`/`DmaStore` bundle).
+    pub pc: usize,
+    pub space: Space,
+    pub addr: usize,
+    pub len: usize,
+    pub write: bool,
+    pub port: Port,
+    pub kind: AccessKind,
+    /// DM banks the range touches (bit *i* ⇔ bank *i*; 0 for ext).
+    pub banks: u16,
+}
+
+impl Access {
+    fn overlaps(&self, lo: usize, hi: usize) -> bool {
+        self.space == Space::Dm && self.addr < hi && lo < self.addr + self.len
+    }
+}
+
+/// An in-flight DMA transfer (from start until its `DmaWait`), used for
+/// the byte-range hazard check.
+#[derive(Debug, Clone, Copy)]
+struct Transfer {
+    pc: usize,
+    ch: u8,
+    /// DM byte range `[lo, hi)`.
+    lo: usize,
+    hi: usize,
+    /// `DmaLoad` (ext → DM, DM range is the destination) vs `DmaStore`.
+    load: bool,
+    /// Index into the access stream where the transfer started.
+    start: usize,
+    /// Index where `DmaWait` closed it (`usize::MAX` = still open at halt).
+    end: usize,
+}
+
+/// The full enumeration of a program's accesses under one ABI env.
+#[derive(Debug, Default)]
+pub struct Trace {
+    pub accesses: Vec<Access>,
+    /// Accesses skipped because their base register was unknown.
+    pub unknown: usize,
+    transfers: Vec<Transfer>,
+}
+
+/// One named `DmMap` region with its permitted access directions.
+#[derive(Debug, Clone)]
+pub struct Region {
+    pub name: &'static str,
+    /// Byte range `[start, end)`.
+    pub start: usize,
+    pub end: usize,
+    pub read: bool,
+    pub write: bool,
+}
+
+impl Region {
+    pub fn new(name: &'static str, start: usize, end: usize, read: bool, write: bool) -> Self {
+        Self { name, start, end, read, write }
+    }
+}
+
+/// The memory contract a program is checked against. With no regions,
+/// only the DM extent and DMA hazards are checked (hand-written / test
+/// programs); plan-derived specs come from
+/// `codegen::conv::mem_spec` / `codegen::pool::mem_spec`.
+#[derive(Debug, Clone, Default)]
+pub struct MemSpec {
+    pub regions: Vec<Region>,
+    pub dm_bytes: usize,
+}
+
+impl MemSpec {
+    /// No region constraints — DM extent and DMA hazards only.
+    pub fn open() -> Self {
+        Self { regions: vec![], dm_bytes: DM_BYTES }
+    }
+
+    pub fn with_regions(regions: Vec<Region>) -> Self {
+        Self { regions, dm_bytes: DM_BYTES }
+    }
+
+    /// The aliasing check: regions pairwise disjoint, each within DM.
+    /// Returns one message per violation (empty = disjoint).
+    pub fn region_violations(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for r in &self.regions {
+            if r.start > r.end {
+                out.push(format!("region {} is inverted ({:#x}..{:#x})", r.name, r.start, r.end));
+            }
+            if r.end > self.dm_bytes {
+                out.push(format!(
+                    "region {} ends at {:#x}, past DM ({:#x} bytes)",
+                    r.name, r.end, self.dm_bytes
+                ));
+            }
+        }
+        for (i, a) in self.regions.iter().enumerate() {
+            for b in &self.regions[i + 1..] {
+                if a.start < b.end && b.start < a.end {
+                    out.push(format!(
+                        "regions {} ({:#x}..{:#x}) and {} ({:#x}..{:#x}) overlap",
+                        a.name, a.start, a.end, b.name, b.start, b.end
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Why a walk could not complete.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MemError {
+    /// Control flow (or a DMA operand, which the hazard check must
+    /// know) depends on a statically unknown register.
+    Unsupported { pc: usize, what: String },
+    /// Walk exceeded the step/access budget (runaway loop).
+    Watchdog,
+    /// Ran past the last bundle (the structural pass reports this too).
+    RanOff { pc: usize },
+}
+
+impl std::fmt::Display for MemError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MemError::Unsupported { pc, what } => {
+                write!(f, "bundle {pc}: unsupported for memory analysis: {what}")
+            }
+            MemError::Watchdog => write!(f, "watchdog: memory walk exceeded its step budget"),
+            MemError::RanOff { pc } => write!(f, "ran past the last bundle (pc={pc})"),
+        }
+    }
+}
+
+impl std::error::Error for MemError {}
+
+const MAX_STEPS: u64 = 50_000_000;
+const MAX_ACCESSES: usize = 4_000_000;
+
+/// Enumerate every access of `prog` under `env` (program order).
+pub fn trace(prog: &Program, env: &AbiEnv) -> Result<Trace, MemError> {
+    let mut w = Walker::new(env);
+    let mut steps = 0u64;
+    while !w.halted {
+        steps += 1;
+        if steps > MAX_STEPS || w.tr.accesses.len() > MAX_ACCESSES {
+            return Err(MemError::Watchdog);
+        }
+        if w.pc >= prog.bundles.len() {
+            return Err(MemError::RanOff { pc: w.pc });
+        }
+        w.step(prog)?;
+    }
+    Ok(w.tr)
+}
+
+/// Run the full pass: enumerate accesses, then check region aliasing,
+/// per-access bounds and DMA–compute hazards. Findings are deduplicated
+/// per (kind, bundle) — loop iterations repeat the same access sites.
+pub fn check(prog: &Program, env: &AbiEnv, spec: &MemSpec) -> Result<Report, MemError> {
+    let tr = trace(prog, env)?;
+    let mut out: Vec<Finding> = Vec::new();
+    let mut seen = std::collections::BTreeSet::new();
+    let mut push = |out: &mut Vec<Finding>, kind: FindingKind, pc: usize, detail: String| {
+        if seen.insert((kind, pc)) {
+            out.push(finding(prog, kind, pc, detail));
+        }
+    };
+
+    for v in spec.region_violations() {
+        push(&mut out, FindingKind::MemOverlap, 0, v);
+    }
+
+    for a in &tr.accesses {
+        if a.space != Space::Dm {
+            continue;
+        }
+        if a.addr + a.len > spec.dm_bytes {
+            push(
+                &mut out,
+                FindingKind::MemBounds,
+                a.pc,
+                format!("access {:#x}+{} runs past DM ({:#x} bytes)", a.addr, a.len, spec.dm_bytes),
+            );
+            continue;
+        }
+        // DMA ranges target host-staging territory, not the task's
+        // region map; they are covered by the extent check above and
+        // the hazard check below.
+        if a.kind == AccessKind::Dma || spec.regions.is_empty() {
+            continue;
+        }
+        match spec.regions.iter().find(|r| a.addr >= r.start && a.addr + a.len <= r.end) {
+            None => push(
+                &mut out,
+                FindingKind::MemBounds,
+                a.pc,
+                format!(
+                    "{} {:#x}+{} outside every declared region",
+                    if a.write { "write" } else { "read" },
+                    a.addr,
+                    a.len
+                ),
+            ),
+            Some(r) => {
+                let ok = if a.write { r.write } else { r.read };
+                if !ok {
+                    push(
+                        &mut out,
+                        FindingKind::MemBounds,
+                        a.pc,
+                        format!(
+                            "region {} is not {} ({:#x}+{})",
+                            r.name,
+                            if a.write { "writable" } else { "readable" },
+                            a.addr,
+                            a.len
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    for t in &tr.transfers {
+        let end = t.end.min(tr.accesses.len());
+        for a in &tr.accesses[t.start..end] {
+            if a.kind == AccessKind::Dma && a.pc == t.pc {
+                continue; // the transfer's own range records
+            }
+            let races = if t.load {
+                // ext -> DM: nothing may touch the landing zone
+                a.overlaps(t.lo, t.hi)
+            } else {
+                // DM -> ext: writes would corrupt the outgoing data
+                a.write && a.overlaps(t.lo, t.hi)
+            };
+            if races {
+                push(
+                    &mut out,
+                    FindingKind::DmaRace,
+                    a.pc,
+                    format!(
+                        "{} {:#x}+{} intersects DMA ch{} {} range {:#x}..{:#x} (started at bundle {})",
+                        if a.write { "write" } else { "read" },
+                        a.addr,
+                        a.len,
+                        t.ch,
+                        if t.load { "destination" } else { "source" },
+                        t.lo,
+                        t.hi,
+                        t.pc
+                    ),
+                );
+            }
+        }
+    }
+
+    out.sort_by(|a, b| (a.pc, a.kind).cmp(&(b.pc, b.kind)));
+    Ok(Report { findings: out })
+}
+
+struct LoopFrame {
+    start: usize,
+    last: usize,
+    remaining: u32,
+}
+
+enum PcUpdate {
+    Seq,
+    Jump(usize),
+    Halt,
+}
+
+/// The untimed symbolic machine: the same constant lattice as
+/// `predict::Walker`, recording accesses instead of pricing them. Kept
+/// separate because this walker must *accept* DMA programs (the hazard
+/// check exists for them) while the cycle analyzer rejects them.
+struct Walker {
+    regs: [Option<i32>; 32],
+    loops: Vec<LoopFrame>,
+    pc: usize,
+    halted: bool,
+    tr: Trace,
+    /// Open transfer per DMA channel (index into `tr.transfers`).
+    open: [Option<usize>; 2],
+}
+
+impl Walker {
+    fn new(env: &AbiEnv) -> Self {
+        let mut regs = [None; 32];
+        for &(r, v) in &env.regs {
+            if (r.0 as usize) < 32 {
+                regs[r.0 as usize] = Some(v);
+            }
+        }
+        Self { regs, loops: Vec::with_capacity(4), pc: 0, halted: false, tr: Trace::default(), open: [None; 2] }
+    }
+
+    fn unsupported(&self, what: impl Into<String>) -> MemError {
+        MemError::Unsupported { pc: self.pc, what: what.into() }
+    }
+
+    fn known(&self, r: SReg, why: &str) -> Result<i32, MemError> {
+        self.regs[r.0 as usize]
+            .ok_or_else(|| self.unsupported(format!("{why} depends on unknown r{}", r.0)))
+    }
+
+    /// `addr_of` over the constant lattice (applies post-increment).
+    /// Unknown base → `None` (the access is skipped, counted).
+    fn addr_of(&mut self, a: &crate::isa::Addr) -> Option<usize> {
+        let base = self.regs[a.base.0 as usize];
+        if a.post_inc != 0 {
+            self.regs[a.base.0 as usize] = base.map(|b| b.wrapping_add(a.post_inc));
+        }
+        match base {
+            Some(b) => Some(b.wrapping_add(a.offset) as usize),
+            None => {
+                self.tr.unknown += 1;
+                None
+            }
+        }
+    }
+
+    fn record(&mut self, space: Space, addr: usize, len: usize, write: bool, port: Port, kind: AccessKind) {
+        let banks = if space == Space::Dm { bank_set(addr, len) } else { 0 };
+        self.tr.accesses.push(Access { pc: self.pc, space, addr, len, write, port, kind, banks });
+    }
+
+    fn p0(&mut self, addr: &crate::isa::Addr, len: usize, write: bool) {
+        if let Some(a) = self.addr_of(addr) {
+            self.record(Space::Dm, a, len, write, Port::P0, AccessKind::Pipeline);
+        }
+    }
+
+    fn step(&mut self, prog: &Program) -> Result<(), MemError> {
+        let bundle = &prog.bundles[self.pc];
+        // vector slots never touch memory (LB reads come from the fill,
+        // which LbLoad records); only slot 0 matters here
+        let next_pc = self.exec_slot0(&bundle.slot0)?;
+        match next_pc {
+            PcUpdate::Seq => self.pc = self.loop_next(self.pc),
+            PcUpdate::Jump(t) => self.pc = t,
+            PcUpdate::Halt => self.halted = true,
+        }
+        Ok(())
+    }
+
+    fn loop_next(&mut self, pc: usize) -> usize {
+        if let Some(frame) = self.loops.last_mut() {
+            if pc == frame.last {
+                if frame.remaining > 0 {
+                    frame.remaining -= 1;
+                    return frame.start;
+                }
+                self.loops.pop();
+            }
+        }
+        pc + 1
+    }
+
+    fn exec_slot0(&mut self, op: &SlotOp) -> Result<PcUpdate, MemError> {
+        Ok(match *op {
+            SlotOp::Nop | SlotOp::Csrwi { .. } => PcUpdate::Seq,
+            SlotOp::Halt => PcUpdate::Halt,
+            SlotOp::Li { rd, imm } => {
+                self.regs[rd.0 as usize] = Some(imm);
+                PcUpdate::Seq
+            }
+            SlotOp::Alu { f, w, rd, ra, rb } => {
+                let v = match (self.regs[ra.0 as usize], self.regs[rb.0 as usize]) {
+                    (Some(a), Some(b)) => Some(crate::core::cpu::alu(f, w, a, b)),
+                    _ => None,
+                };
+                self.regs[rd.0 as usize] = v;
+                PcUpdate::Seq
+            }
+            SlotOp::AluI { f, w, rd, ra, imm } => {
+                self.regs[rd.0 as usize] =
+                    self.regs[ra.0 as usize].map(|a| crate::core::cpu::alu(f, w, a, imm));
+                PcUpdate::Seq
+            }
+            SlotOp::Br { c, ra, rb, target } => {
+                let a = self.known(ra, "branch")?;
+                let b = self.known(rb, "branch")?;
+                let taken = match c {
+                    crate::isa::Cond::Eq => a == b,
+                    crate::isa::Cond::Ne => a != b,
+                    crate::isa::Cond::Lt => a < b,
+                    crate::isa::Cond::Ge => a >= b,
+                };
+                if taken {
+                    PcUpdate::Jump(target as usize)
+                } else {
+                    PcUpdate::Seq
+                }
+            }
+            SlotOp::Jmp { target } => PcUpdate::Jump(target as usize),
+            SlotOp::Loop { n, body } => {
+                let count = self.known(n, "loop count")?.max(0) as u32;
+                self.push_loop(count, body)?
+            }
+            SlotOp::LoopI { n, body } => self.push_loop(n, body)?,
+            SlotOp::Csrw { csr: _, rs: _ } => PcUpdate::Seq,
+            SlotOp::LdS { rd, addr } => {
+                self.p0(&addr, 2, false);
+                // a loaded value is data, not a static constant
+                self.regs[rd.0 as usize] = None;
+                PcUpdate::Seq
+            }
+            SlotOp::StS { rs: _, addr } => {
+                self.p0(&addr, 2, true);
+                PcUpdate::Seq
+            }
+            SlotOp::LdV { vd: _, addr } | SlotOp::LdVF { addr } => {
+                self.p0(&addr, 32, false);
+                PcUpdate::Seq
+            }
+            SlotOp::StV { vs: _, addr } => {
+                self.p0(&addr, 32, true);
+                PcUpdate::Seq
+            }
+            SlotOp::LdA { ad: _, addr } => {
+                self.p0(&addr, 64, false);
+                PcUpdate::Seq
+            }
+            SlotOp::StA { as_: _, addr } => {
+                self.p0(&addr, 64, true);
+                PcUpdate::Seq
+            }
+            SlotOp::DmaLoad { ch, ext, dm, len } | SlotOp::DmaStore { ch, ext, dm, len } => {
+                let load = matches!(op, SlotOp::DmaLoad { .. });
+                // the hazard check is meaningless with an unknown range,
+                // so DMA operands must be statically known
+                let e = self.known(ext, "DMA ext address")?.max(0) as usize;
+                let d = self.known(dm, "DMA dm address")?.max(0) as usize;
+                let n = self.known(len, "DMA length")?.max(0) as usize;
+                let start = self.tr.accesses.len();
+                self.record(Space::Dm, d, n, load, Port::P1, AccessKind::Dma);
+                self.record(Space::Ext, e, n, !load, Port::P1, AccessKind::Dma);
+                if n > 0 {
+                    let idx = self.tr.transfers.len();
+                    self.tr.transfers.push(Transfer {
+                        pc: self.pc,
+                        ch,
+                        lo: d,
+                        hi: d + n,
+                        load,
+                        start,
+                        end: usize::MAX,
+                    });
+                    // a restart without DmaWait is resource.rs's lint;
+                    // track the newest transfer per channel here
+                    self.open[(ch & 1) as usize] = Some(idx);
+                }
+                PcUpdate::Seq
+            }
+            SlotOp::DmaWait { ch } => {
+                if let Some(idx) = self.open[(ch & 1) as usize].take() {
+                    self.tr.transfers[idx].end = self.tr.accesses.len();
+                }
+                PcUpdate::Seq
+            }
+            SlotOp::LbLoad { row: _, dm, off, win, nrows, rstride } => {
+                if let Some(base) = self.regs[dm.0 as usize] {
+                    let base = base.wrapping_add(off as i32) as usize;
+                    for r in 0..nrows as usize {
+                        let a = base + r * rstride as usize;
+                        self.record(Space::Dm, a, win as usize * 2, false, Port::P1, AccessKind::LbFill);
+                    }
+                } else {
+                    self.tr.unknown += 1;
+                }
+                PcUpdate::Seq
+            }
+        })
+    }
+
+    fn push_loop(&mut self, n: u32, body: u16) -> Result<PcUpdate, MemError> {
+        if body == 0 {
+            return Err(self.unsupported("loop with empty body"));
+        }
+        if self.loops.len() >= 2 {
+            return Err(self.unsupported("hardware loop nesting > 2"));
+        }
+        if n == 0 {
+            return Ok(PcUpdate::Jump(self.pc + 1 + body as usize));
+        }
+        self.loops.push(LoopFrame {
+            start: self.pc + 1,
+            last: self.pc + body as usize,
+            remaining: n - 1,
+        });
+        Ok(PcUpdate::Seq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::asm::assemble;
+
+    fn run(src: &str, env: &AbiEnv, spec: &MemSpec) -> Report {
+        let p = assemble(src).unwrap();
+        check(&p, env, spec).unwrap()
+    }
+
+    #[test]
+    fn accesses_are_enumerated_with_banks() {
+        let p = assemble(
+            "li r1, 8192\n\
+             ldv v0, [r1]\n\
+             stv v0, [r1+32]\n\
+             halt",
+        )
+        .unwrap();
+        let tr = trace(&p, &AbiEnv::default()).unwrap();
+        assert_eq!(tr.accesses.len(), 2);
+        assert_eq!(tr.accesses[0].banks, 1 << 1);
+        assert!(!tr.accesses[0].write);
+        assert!(tr.accesses[1].write);
+        assert_eq!(tr.unknown, 0);
+    }
+
+    #[test]
+    fn bounds_respected_inside_region() {
+        let spec = MemSpec::with_regions(vec![
+            Region::new("in", 0, 1024, true, false),
+            Region::new("out", 1024, 2048, false, true),
+        ]);
+        let r = run(
+            "li r1, 0\n\
+             li r2, 1024\n\
+             ldv v0, [r1]\n\
+             stv v0, [r2]\n\
+             halt",
+            &AbiEnv::default(),
+            &spec,
+        );
+        assert!(r.is_clean(), "{r}");
+    }
+
+    #[test]
+    fn read_outside_regions_is_flagged() {
+        let spec = MemSpec::with_regions(vec![Region::new("in", 0, 64, true, false)]);
+        let r = run("li r1, 64\nldv v0, [r1]\nhalt", &AbiEnv::default(), &spec);
+        assert!(r.has(FindingKind::MemBounds), "{r}");
+    }
+
+    #[test]
+    fn write_to_read_only_region_is_flagged() {
+        let spec = MemSpec::with_regions(vec![Region::new("in", 0, 1024, true, false)]);
+        let r = run("li r1, 0\nli r2, 1\nsts r2, [r1]\nhalt", &AbiEnv::default(), &spec);
+        assert!(r.has(FindingKind::MemBounds), "{r}");
+    }
+
+    #[test]
+    fn overlapping_regions_are_flagged() {
+        let spec = MemSpec::with_regions(vec![
+            Region::new("a", 0, 128, true, false),
+            Region::new("b", 96, 256, true, true),
+        ]);
+        let r = run("halt", &AbiEnv::default(), &spec);
+        assert!(r.has(FindingKind::MemOverlap), "{r}");
+    }
+
+    #[test]
+    fn region_past_dm_end_is_flagged() {
+        let spec = MemSpec::with_regions(vec![Region::new("a", 0, DM_BYTES + 1, true, true)]);
+        let r = run("halt", &AbiEnv::default(), &spec);
+        assert!(r.has(FindingKind::MemOverlap), "{r}");
+    }
+
+    #[test]
+    fn access_past_dm_is_flagged_without_regions() {
+        let a = DM_BYTES as i32 - 8;
+        let r = run(&format!("li r1, {a}\nldv v0, [r1]\nhalt"), &AbiEnv::default(), &MemSpec::open());
+        assert!(r.has(FindingKind::MemBounds), "{r}");
+    }
+
+    #[test]
+    fn compute_read_into_dma_destination_races() {
+        let r = run(
+            "li r1, 0\n\
+             li r2, 4096\n\
+             li r3, 512\n\
+             dmald 0, r1, r2, r3\n\
+             ldv v0, [r2+64]\n\
+             dmawait 0\n\
+             halt",
+            &AbiEnv::default(),
+            &MemSpec::open(),
+        );
+        assert!(r.has(FindingKind::DmaRace), "{r}");
+    }
+
+    #[test]
+    fn access_after_dmawait_is_fine() {
+        let r = run(
+            "li r1, 0\n\
+             li r2, 4096\n\
+             li r3, 512\n\
+             dmald 0, r1, r2, r3\n\
+             dmawait 0\n\
+             ldv v0, [r2+64]\n\
+             halt",
+            &AbiEnv::default(),
+            &MemSpec::open(),
+        );
+        assert!(r.is_clean(), "{r}");
+    }
+
+    #[test]
+    fn disjoint_access_during_dma_is_fine() {
+        let r = run(
+            "li r1, 0\n\
+             li r2, 4096\n\
+             li r3, 512\n\
+             li r4, 16384\n\
+             dmald 0, r1, r2, r3\n\
+             ldv v0, [r4]\n\
+             dmawait 0\n\
+             halt",
+            &AbiEnv::default(),
+            &MemSpec::open(),
+        );
+        assert!(r.is_clean(), "{r}");
+    }
+
+    #[test]
+    fn write_into_dma_store_source_races() {
+        let r = run(
+            "li r1, 0\n\
+             li r2, 4096\n\
+             li r3, 512\n\
+             dmast 0, r1, r2, r3\n\
+             sts r3, [r2]\n\
+             dmawait 0\n\
+             halt",
+            &AbiEnv::default(),
+            &MemSpec::open(),
+        );
+        assert!(r.has(FindingKind::DmaRace), "{r}");
+    }
+
+    #[test]
+    fn read_of_dma_store_source_is_fine() {
+        let r = run(
+            "li r1, 0\n\
+             li r2, 4096\n\
+             li r3, 512\n\
+             dmast 0, r1, r2, r3\n\
+             ldv v0, [r2]\n\
+             dmawait 0\n\
+             halt",
+            &AbiEnv::default(),
+            &MemSpec::open(),
+        );
+        assert!(r.is_clean(), "{r}");
+    }
+
+    #[test]
+    fn lb_fill_rows_are_recorded_per_row() {
+        let p = assemble(
+            "li r1, 256\n\
+             lbld 0, r1, 16\n\
+             halt",
+        )
+        .unwrap();
+        let tr = trace(&p, &AbiEnv::default()).unwrap();
+        let fills: Vec<_> =
+            tr.accesses.iter().filter(|a| a.kind == AccessKind::LbFill).collect();
+        assert_eq!(fills.len(), 1);
+        assert_eq!(fills[0].addr, 256);
+        assert_eq!(fills[0].len, 32);
+        assert_eq!(fills[0].port, Port::P1);
+    }
+
+    #[test]
+    fn unknown_address_is_skipped_not_flagged() {
+        let r = assemble(
+            "li r1, 0\n\
+             lds r2, [r1]\n\
+             ldv v0, [r2]\n\
+             halt",
+        )
+        .unwrap();
+        let tr = trace(&r, &AbiEnv::default()).unwrap();
+        assert_eq!(tr.unknown, 1);
+        let rep = check(&r, &AbiEnv::default(), &MemSpec::open()).unwrap();
+        assert!(rep.is_clean());
+    }
+
+    #[test]
+    fn unknown_branch_is_unsupported() {
+        let p = assemble(
+            "lds r1, [r2]\n\
+             li r3, 0\n\
+             bne r1, r3, 0\n\
+             halt",
+        )
+        .unwrap();
+        let err = check(&p, &AbiEnv::new(&[(2, 0)]), &MemSpec::open()).unwrap_err();
+        assert!(matches!(err, MemError::Unsupported { .. }), "{err}");
+    }
+}

@@ -1,6 +1,6 @@
 //! Static analysis over decoded VLIW [`Program`]s.
 //!
-//! Four passes, run on every program the plan cache compiles (in debug
+//! Five passes, run on every program the plan cache compiles (in debug
 //! builds and under `cargo test` always; opt-in for release via
 //! `ANALYZE=1` or the CLI's `--verify-programs`) and on demand through
 //! the `lint` CLI subcommand:
@@ -19,12 +19,38 @@
 //!    register sub-region/port rules, and `LbLoad` extents vs LB reads.
 //! 4. [`predict`] — the static cycle analyzer: an exact symbolic replay
 //!    of the scoreboard/memory timing model (shared with the simulator
-//!    via [`timing`]) yielding per-program cycle counts without
-//!    simulation.
+//!    via [`timing`], bank-conflict rules included via [`banks`])
+//!    yielding per-program cycle counts without simulation.
+//! 5. [`memory`] — the symbolic memory-access verifier: enumerates every
+//!    DM/LB/ext access (address, length, port, read/write, bank set)
+//!    under a concrete ABI environment and checks region **bounds**,
+//!    `DmMap` **aliasing** (pairwise-disjoint regions inside DM) and
+//!    byte-range **DMA–compute hazards** per channel.
 //!
-//! Passes 1–3 are *verification* ([`verify`] → [`Report`]); pass 4 is
-//! *measurement* and assumes a clean report.
+//! Passes 1–3 and 5 are *verification* ([`verify`] → [`Report`], pass 5
+//! via [`memory::check`] since it needs the plan's region map); pass 4
+//! is *measurement* and assumes a clean report.
 
+// clippy::pedantic is BLOCKING for this module tree (see ci.yml): the
+// verifier polices everyone else's programs, so it holds itself to the
+// strictest lint tier. These inner allows cover the children too
+// (predict.rs, memory.rs, banks.rs, timing.rs, ...) and are the
+// recorded debt; tools/check-deprecated.sh rejects any allow here that
+// lacks its `// lint-debt:` marker.
+#![allow(clippy::cast_possible_truncation)] // lint-debt: u64/usize/i32 cycle+address casts pervade the walkers; each site is bounded by DM/PM sizes
+#![allow(clippy::cast_possible_wrap)] // lint-debt: DM addresses round-trip through i32 ABI registers by ISA design (< 2^17, never wraps)
+#![allow(clippy::cast_sign_loss)] // lint-debt: the same ABI round-trip back to usize; negative values are rejected before the cast
+#![allow(clippy::missing_errors_doc)] // lint-debt: error enums are self-describing; per-fn `# Errors` sections owed
+#![allow(clippy::missing_panics_doc)] // lint-debt: panics are internal-invariant asserts, not caller contracts
+#![allow(clippy::must_use_candidate)] // lint-debt: annotate the pure accessors module-wide in one dedicated sweep
+#![allow(clippy::module_name_repetitions)] // lint-debt: MemSpec/MemError et al. read better fully qualified at call sites
+#![allow(clippy::doc_markdown)] // lint-debt: prose names ISA items (DmaWait, LbLoad) bare in places; backtick sweep owed
+#![allow(clippy::too_many_lines)] // lint-debt: the slot-0 walkers are long matches mirroring the interpreter; splitting hurts diffability
+#![allow(clippy::match_same_arms)] // lint-debt: semantically distinct ISA cases kept as separate arms even when bodies coincide
+#![allow(clippy::similar_names)] // lint-debt: operand idiom (ra/rb, va/vb) mirrors the ISA mnemonics
+
+pub mod banks;
+pub mod memory;
 pub mod predict;
 pub mod timing;
 
@@ -59,6 +85,39 @@ pub enum FindingKind {
     SfuSlot,
     LbExtent,
     RegionViolation,
+    // memory (pass 5)
+    MemBounds,
+    MemOverlap,
+    DmaRace,
+}
+
+impl FindingKind {
+    /// The analysis pass that emits this kind — the stable `pass` label
+    /// of machine-readable (`lint --json`) output.
+    #[must_use]
+    pub fn pass(self) -> &'static str {
+        use FindingKind as K;
+        match self {
+            K::BranchTargetOutOfRange
+            | K::LoopBodyOutOfRange
+            | K::LoopNesting
+            | K::BranchCrossesLoop
+            | K::NoHaltPath
+            | K::RunsOffEnd
+            | K::PmOverflow => "structural",
+            K::UseBeforeDef => "dataflow",
+            K::FifoUnderflow
+            | K::FifoOverflow
+            | K::FifoImbalance
+            | K::FifoResidual
+            | K::DmaRestart
+            | K::DmaOverlap
+            | K::SfuSlot
+            | K::LbExtent
+            | K::RegionViolation => "resource",
+            K::MemBounds | K::MemOverlap | K::DmaRace => "memory",
+        }
+    }
 }
 
 impl fmt::Display for FindingKind {
@@ -81,6 +140,9 @@ impl fmt::Display for FindingKind {
             FindingKind::SfuSlot => "sfu-slot",
             FindingKind::LbExtent => "lb-extent",
             FindingKind::RegionViolation => "region-violation",
+            FindingKind::MemBounds => "mem-bounds",
+            FindingKind::MemOverlap => "mem-overlap",
+            FindingKind::DmaRace => "dma-race",
         };
         f.write_str(s)
     }

@@ -19,6 +19,12 @@
 use crate::core::regfile::own_acc_base;
 use crate::isa::{ASrc, BSrc, Bundle, SlotOp, VecOp, SLICES};
 
+/// DM bank geometry + the port-1 conflict rule live in [`super::banks`]
+/// and are re-exported here so every shared timing rule — scoreboard
+/// *and* memory — is reachable from one module. `mem::dm::DataMem`
+/// delegates to the same functions (moved, not copied).
+pub use super::banks::{bank_of, bank_set, p1_conflicts};
+
 /// DM load to dependent use (scalar, vector and filter-FIFO loads).
 pub const LOAD_USE_LATENCY: u64 = 2;
 /// Vector MAC to requantize (`QMov`) read of the same accumulator.

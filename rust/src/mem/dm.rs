@@ -6,7 +6,9 @@
 //! the bank the pipeline is using in the same cycle) and charge stalls.
 //! Counters feed the activity-based energy model (Fig. 3c).
 
-use super::{DM_BANKS, DM_BANK_BYTES, DM_BYTES, DM_PORT_BYTES};
+use crate::isa::analysis::banks;
+
+use super::{DM_BYTES, DM_PORT_BYTES};
 
 #[derive(Debug)]
 pub enum DmError {
@@ -62,9 +64,12 @@ impl DataMem {
         Self { bytes: vec![0; DM_BYTES], stats: DmStats::default(), p0_bank: None }
     }
 
+    /// Bank index of an address. The geometry and conflict rule live in
+    /// `isa::analysis::banks` (shared with the static analyzers — moved
+    /// there, not copied); this forwards for the simulator's callers.
     #[inline]
     pub fn bank_of(addr: usize) -> usize {
-        (addr / DM_BANK_BYTES) % DM_BANKS
+        banks::bank_of(addr)
     }
 
     fn check(&self, addr: usize, len: usize, align: usize) -> Result<(), DmError> {
@@ -120,7 +125,7 @@ impl DataMem {
     pub fn try_read_block_p1(&mut self, addr: usize, len: usize) -> Result<Option<Vec<u8>>, DmError> {
         let len = len.min(DM_PORT_BYTES);
         self.check(addr, len, 1)?;
-        if self.p0_bank == Some(Self::bank_of(addr)) {
+        if banks::p1_conflicts(self.p0_bank, addr) {
             self.stats.bank_conflicts += 1;
             return Ok(None);
         }
@@ -131,7 +136,7 @@ impl DataMem {
     pub fn try_write_block_p1(&mut self, addr: usize, data: &[u8]) -> Result<bool, DmError> {
         let len = data.len().min(DM_PORT_BYTES);
         self.check(addr, len, 1)?;
-        if self.p0_bank == Some(Self::bank_of(addr)) {
+        if banks::p1_conflicts(self.p0_bank, addr) {
             self.stats.bank_conflicts += 1;
             return Ok(false);
         }

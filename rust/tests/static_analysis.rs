@@ -1,12 +1,20 @@
 //! Integration tests for the static program verifier (`isa::analysis`)
 //! through the public API: hand-built broken programs must be rejected
-//! with the expected finding kind, and the CLI `lint` walk over a real
+//! with the expected finding kind — including the symbolic memory-access
+//! pass (`isa::analysis::memory`) — and the CLI `lint` walk over a real
 //! network must come back clean.
 
+use convaix::codegen::{conv, layout, TaskFlavor};
+use convaix::isa::analysis::memory::{self, MemSpec, Region};
+use convaix::isa::analysis::predict::AbiEnv;
 use convaix::isa::analysis::{verify, AbiSpec, FindingKind};
+use convaix::isa::asm::assemble;
 use convaix::isa::{
     ASrc, AluFn, BSrc, Bundle, Program, SReg, SlotOp, VecOp, Width,
 };
+use convaix::mem::DM_BYTES;
+use convaix::model::ConvLayer;
+use convaix::util::proptest::prop;
 
 fn prog(bundles: Vec<Bundle>) -> Program {
     Program { bundles }
@@ -110,12 +118,128 @@ fn program_running_off_the_end_is_rejected() {
     assert!(r.has(FindingKind::RunsOffEnd), "missing runs-off-end in:\n{r}");
 }
 
+// ---- pass 5: the symbolic memory-access verifier ----------------------
+
+/// A filter-pointer read that walks one vector past the `filt` region
+/// lands in the write-only `out` region — the memory pass flags it
+/// against the real conv `DmMap`.
+#[test]
+fn conv_filter_read_past_its_region_is_rejected() {
+    let l = ConvLayer::new("t", 4, 8, 8, 16, 3, 3, 1, 1, 1);
+    let plan = layout::plan(&l).expect("plan");
+    let spec = conv::mem_spec(&plan, TaskFlavor { first_slice: true, last_slice: true });
+    let src = format!("li r6, {}\nldv v0, [r6]\nhalt", plan.dm.out);
+    let p = assemble(&src).expect("assemble");
+    let r = memory::check(&p, &AbiEnv::new(&[]), &spec).expect("walk");
+    assert!(r.has(FindingKind::MemBounds), "missing mem-bounds in:\n{r}");
+    // the same read one region earlier (inside filt) is fine
+    let src = format!("li r6, {}\nldv v0, [r6]\nhalt", plan.dm.filt);
+    let p = assemble(&src).expect("assemble");
+    assert!(memory::check(&p, &AbiEnv::new(&[]), &spec).expect("walk").is_clean());
+}
+
+/// Two overlapping `DmMap` regions are a planner bug regardless of what
+/// the program touches.
+#[test]
+fn overlapping_dm_regions_are_rejected() {
+    let spec = MemSpec::with_regions(vec![
+        Region::new("a", 0, 128, true, false),
+        Region::new("b", 64, 256, true, true),
+    ]);
+    let p = assemble("halt").expect("assemble");
+    let r = memory::check(&p, &AbiEnv::new(&[]), &spec).expect("walk");
+    assert!(r.has(FindingKind::MemOverlap), "missing mem-overlap in:\n{r}");
+}
+
+/// A DMA load whose destination range is read by the pipeline before
+/// the matching `dmawait` is a byte-range hazard, even though the DMA
+/// channel protocol (pass 3) is followed to the letter.
+#[test]
+fn dma_landing_on_live_compute_read_is_rejected() {
+    let src = "\
+li r1, 0
+li r2, 4096
+li r3, 64
+dmald 0, r1, r2, r3
+ldv v0, [r2+32]
+dmawait 0
+halt";
+    let p = assemble(src).expect("assemble");
+    let r = memory::check(&p, &AbiEnv::new(&[]), &MemSpec::open()).expect("walk");
+    assert!(r.has(FindingKind::DmaRace), "missing dma-race in:\n{r}");
+    // moving the read after the wait clears it
+    let src = "\
+li r1, 0
+li r2, 4096
+li r3, 64
+dmald 0, r1, r2, r3
+dmawait 0
+ldv v0, [r2+32]
+halt";
+    let p = assemble(src).expect("assemble");
+    assert!(memory::check(&p, &AbiEnv::new(&[]), &MemSpec::open()).expect("walk").is_clean());
+}
+
+/// Property: every feasible `layout::plan` over a randomized layer
+/// matrix (strides, grouped, multi-slice, partial tiles) produces a
+/// `DmMap` whose regions are pairwise disjoint and end within DM — the
+/// aliasing checker and the planner agree for every task flavor.
+#[test]
+fn planned_dm_regions_are_always_disjoint_and_in_bounds() {
+    prop("DmMap regions disjoint and inside DM", 60, |g| {
+        let fh = g.usize_in(1, 5);
+        let fw = g.usize_in(1, 5);
+        let stride = g.usize_in(1, 4);
+        let pad = g.usize_in(0, 2);
+        let ih = g.usize_in(fh.max(4), 32);
+        let iw = g.usize_in(fw.max(4), 32);
+        let groups = *g.pick(&[1usize, 2]);
+        let ic = *g.pick(&[1usize, 3, 4, 5, 8, 64, 256, 768]) * groups;
+        let oc = g.usize_in(1, 3) * 16 * groups + g.usize_in(0, 1) * 8;
+        let l = ConvLayer::new("prop", ic, ih, iw, oc, fh, fw, stride, pad, groups);
+        if l.ihp() < fh || l.iwp() < fw || l.oc % l.groups != 0 {
+            return;
+        }
+        let dense = l.per_group();
+        let Ok(plan) = layout::plan(&dense) else { return };
+        assert!(plan.dm.end <= DM_BYTES, "plan end {} past DM", plan.dm.end);
+        for flavor in [
+            TaskFlavor { first_slice: true, last_slice: true },
+            TaskFlavor { first_slice: true, last_slice: false },
+            TaskFlavor { first_slice: false, last_slice: false },
+            TaskFlavor { first_slice: false, last_slice: true },
+        ] {
+            let spec = conv::mem_spec(&plan, flavor);
+            let v = spec.region_violations();
+            assert!(v.is_empty(), "{flavor:?} of {:?}: {v:?}", plan.dm);
+        }
+    });
+}
+
 /// The `lint` CLI walk: every task program of a real net (solo layers
 /// plus each shard policy's sub-shapes, both gate settings) verifies
-/// clean and gets an exact static cycle count.
+/// clean — including the memory pass — and gets an exact static cycle
+/// count.
 #[test]
 fn lint_walk_over_alexnet_is_clean() {
-    let (text, ok) = convaix::cli::report::lint("alexnet").expect("lint run");
+    let (text, ok) = convaix::cli::report::lint("alexnet", false).expect("lint run");
     assert!(ok, "lint found problems:\n{text}");
     assert!(text.contains("all clean"), "unexpected lint summary:\n{text}");
+}
+
+/// `lint --json` emits one machine-readable document: clean nets have
+/// an empty findings array, and the envelope carries net + program
+/// count.
+#[test]
+fn lint_json_output_is_machine_readable() {
+    let (text, ok) = convaix::cli::report::lint("alexnet", true).expect("lint run");
+    assert!(ok, "lint found problems:\n{text}");
+    let doc = convaix::util::json::Json::parse(&text).expect("lint --json must parse");
+    assert_eq!(doc.s("net"), "alexnet");
+    assert!(doc.u("programs") > 0);
+    assert_eq!(
+        doc.get("findings").and_then(|f| f.as_arr()).map(<[_]>::len),
+        Some(0),
+        "clean net must report zero findings:\n{text}"
+    );
 }
