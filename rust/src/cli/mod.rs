@@ -70,6 +70,11 @@ OPTIONS:
                      programs and analytic profiles are then re-derived
                      on every call — the pre-0.5 behavior; results are
                      bit-identical, only the host wall-clock changes)
+  --no-rotation      forbid DM double buffering: every layer's DMA
+                     stream is priced serialized against compute
+                     (compute + dma per iteration) instead of the
+                     fill/steady rotated timeline — outputs are
+                     bit-identical, only cycles change
 ";
 
 /// Tiny argv parser (clap is not in the offline vendor set).
@@ -86,6 +91,7 @@ pub struct Args {
     pub bus: BusModel,
     pub stage_cores: StageCores,
     pub no_cache: bool,
+    pub no_rotation: bool,
     pub verify_programs: bool,
     pub json: bool,
 }
@@ -105,6 +111,7 @@ impl Args {
             bus: BusModel::Partitioned,
             stage_cores: StageCores::PerStage,
             no_cache: false,
+            no_rotation: false,
             verify_programs: false,
             json: false,
         };
@@ -145,6 +152,7 @@ impl Args {
                 "--pipeline" => a.pipeline = true,
                 "--json" => a.json = true,
                 "--no-cache" => a.no_cache = true,
+                "--no-rotation" => a.no_rotation = true,
                 "--verify-programs" => a.verify_programs = true,
                 "--pool-mode" => {
                     let m: PoolMode = it
@@ -206,6 +214,7 @@ impl Args {
             .bus(self.bus)
             .stage_cores(self.stage_cores.clone())
             .plan_cache(!self.no_cache)
+            .dma_rotation(!self.no_rotation)
     }
 }
 

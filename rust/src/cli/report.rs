@@ -295,6 +295,7 @@ pub fn run_multi(tenants: &[String], args: &super::Args) -> Result<String> {
                 // run-multi IS the shared-bus story; --bus is ignored
                 .bus(BusModel::Shared)
                 .stage_cores(args.stage_cores.clone())
+                .dma_rotation(!args.no_rotation)
                 .seed(0xC0DE + i as u64);
             Engine::new_with_cache(cfg, cache.clone())
         })
@@ -384,7 +385,9 @@ fn json_str(s: &str) -> String {
 /// pool, at gate bits 8 and 16), run the static verifier
 /// (`isa::analysis` passes 1–3), the symbolic memory-access verifier
 /// (pass 5, at the extremal in-band row ABIs with the plan-derived
-/// region map) and the static cycle analyzer over each program, and
+/// region map — in BOTH rotation phases when the plan double-buffers,
+/// so a compute access into the in-flight prefetch shadow is flagged
+/// as a DMA race) and the static cycle analyzer over each program, and
 /// report per-program verdicts. Returns `(report, all_clean)`.
 ///
 /// With `json` the report is one JSON document: `{net, programs,
@@ -429,7 +432,8 @@ pub fn lint(net: &str, json: bool) -> Result<(String, bool)> {
             NetLayer::Pool(_) => None,
         };
         if let Some(dense) = dense {
-            let cc = cache.conv(&dense, gate).map_err(|e| anyhow::anyhow!("{label}: {e}"))?;
+            let cc =
+                cache.conv(&dense, gate, true).map_err(|e| anyhow::anyhow!("{label}: {e}"))?;
             if !seen.insert(Arc::as_ptr(&cc) as usize) {
                 return Ok(());
             }
@@ -440,32 +444,45 @@ pub fn lint(net: &str, json: bool) -> Result<(String, bool)> {
                 n_programs += 1;
                 let mut rep = analysis::verify(pm.program(), &AbiSpec::conv());
                 // pass 5: memory — extremal rows suffice (accesses are
-                // affine in r2, see `codegen::compiled`)
+                // affine in r2, see `codegen::compiled`), checked in
+                // BOTH rotation phases when the plan carries a shadow:
+                // phase A runs at the primary ABI with the shadow as
+                // the no-access prefetch target, phase B at the
+                // shadow-slot ABI with the primary pair inactive.
                 let flavor = TaskFlavor { first_slice: key.1, last_slice: key.2 };
                 let spec = conv::mem_spec(&cc.plan, flavor);
+                let spec_b = conv::mem_spec_phase_b(&cc.plan, flavor);
                 let mut mem_seen: BTreeSet<(FindingKind, usize)> = BTreeSet::new();
                 let last_row = cc.plan.band_rows.saturating_sub(1);
                 let rows = if last_row == 0 { vec![0] } else { vec![0, last_row] };
-                for oh_local in rows {
-                    match memory::check(pm.program(), &cc.abi_env_for_row(oh_local), &spec) {
-                        Ok(mrep) => {
-                            for f in mrep.findings {
-                                if mem_seen.insert((f.kind, f.pc)) {
-                                    rep.findings.push(f);
+                for &oh_local in &rows {
+                    let mut phases = vec![(cc.abi_env_for_row(oh_local), &spec)];
+                    if let (Some(env_b), Some(sb)) =
+                        (cc.abi_env_for_row_rot(oh_local), spec_b.as_ref())
+                    {
+                        phases.push((env_b, sb));
+                    }
+                    for (env, phase_spec) in phases {
+                        match memory::check(pm.program(), &env, phase_spec) {
+                            Ok(mrep) => {
+                                for f in mrep.findings {
+                                    if mem_seen.insert((f.kind, f.pc)) {
+                                        rep.findings.push(f);
+                                    }
                                 }
                             }
-                        }
-                        Err(e) => {
-                            findings.push_str(&format!(
-                                "{label} {key:?}: memory walk failed: {e}\n"
-                            ));
-                            structured.push(LintFinding {
-                                layer: lname.clone(),
-                                shard: shard.clone(),
-                                pass: "memory",
-                                kind: "walk-error".into(),
-                                location: format!("task {key:?}"),
-                            });
+                            Err(e) => {
+                                findings.push_str(&format!(
+                                    "{label} {key:?}: memory walk failed: {e}\n"
+                                ));
+                                structured.push(LintFinding {
+                                    layer: lname.clone(),
+                                    shard: shard.clone(),
+                                    pass: "memory",
+                                    kind: "walk-error".into(),
+                                    location: format!("task {key:?}"),
+                                });
+                            }
                         }
                     }
                 }
@@ -511,23 +528,31 @@ pub fn lint(net: &str, json: bool) -> Result<(String, bool)> {
                 ]);
             }
         } else if let NetLayer::Pool(l) = layer {
-            let cp = cache.pool(l).map_err(|e| anyhow::anyhow!("{label}: {e}"))?;
+            let cp = cache.pool(l, true).map_err(|e| anyhow::anyhow!("{label}: {e}"))?;
             if !seen.insert(Arc::as_ptr(&cp) as usize) {
                 return Ok(());
             }
             n_programs += 1;
             let mut rep = analysis::verify(cp.pm.program(), &AbiSpec::pool());
-            match memory::check(cp.pm.program(), &cp.abi_env(), &pool::mem_spec(&cp.plan)) {
-                Ok(mrep) => rep.findings.extend(mrep.findings),
-                Err(e) => {
-                    findings.push_str(&format!("{label}: memory walk failed: {e}\n"));
-                    structured.push(LintFinding {
-                        layer: lname.clone(),
-                        shard: shard.clone(),
-                        pass: "memory",
-                        kind: "walk-error".into(),
-                        location: "task row".into(),
-                    });
+            let mut phases = vec![(cp.abi_env(), pool::mem_spec(&cp.plan))];
+            if let (Some(env_b), Some(spec_b)) =
+                (cp.abi_env_rot(), pool::mem_spec_phase_b(&cp.plan))
+            {
+                phases.push((env_b, spec_b));
+            }
+            for (env, spec) in &phases {
+                match memory::check(cp.pm.program(), env, spec) {
+                    Ok(mrep) => rep.findings.extend(mrep.findings),
+                    Err(e) => {
+                        findings.push_str(&format!("{label}: memory walk failed: {e}\n"));
+                        structured.push(LintFinding {
+                            layer: lname.clone(),
+                            shard: shard.clone(),
+                            pass: "memory",
+                            kind: "walk-error".into(),
+                            location: "task row".into(),
+                        });
+                    }
                 }
             }
             rep.findings.sort_by(|a, b| (a.pc, a.kind).cmp(&(b.pc, b.kind)));
@@ -883,19 +908,21 @@ pub fn run_net(net: &str, cfg: &EngineConfig) -> Result<String> {
 
     let mut t = Table::new(
         &format!("{net}: per-layer breakdown"),
-        &["Layer", "Kind", "Time [ms]", "Util", "GOP/s", "I/O [MB]"],
+        &["Layer", "Kind", "Time [ms]", "Util %", "GOP/s", "I/O [MB]"],
     );
     for (d, l) in layers.iter().zip(&r.layers) {
         t.row(&[
             l.name.to_string(),
             d.kind().into(),
             format!("{:.3}", l.time_ms()),
-            format!("{:.3}", l.utilization()),
+            format!("{:.1}", l.utilization() * 100.0),
             format!("{:.1}", l.gops()),
             format!("{:.2}", l.io_total() as f64 / 1e6),
         ]);
     }
-    // per-kind rollups: one row per layer kind present in the net
+    // per-kind rollups: one row per layer kind present in the net; the
+    // Util % cell is the kind's aggregate ALU utilization (ideal MAC
+    // cycles over busy core cycles — see `KindTotal::utilization`)
     for kt in r.kind_totals(&layers) {
         let gops = if kt.cycles == 0 {
             0.0
@@ -906,7 +933,7 @@ pub fn run_net(net: &str, cfg: &EngineConfig) -> Result<String> {
             format!("== {} x{} ==", kt.kind, kt.layers),
             kt.kind.into(),
             format!("{:.3}", kt.time_ms()),
-            "-".into(),
+            if kt.macs > 0 { format!("{:.1}", kt.utilization() * 100.0) } else { "-".into() },
             format!("{gops:.1}"),
             format!("{:.2}", kt.io_bytes as f64 / 1e6),
         ]);
@@ -924,6 +951,13 @@ pub fn run_net(net: &str, cfg: &EngineConfig) -> Result<String> {
         p.total_mw(),
         power::energy_eff_gops_per_w(r.macs(), secs, p.total_mw()),
     ));
+    if let Some(conv) = r.kind_totals(&layers).iter().find(|kt| kt.kind == "conv") {
+        s.push_str(&format!(
+            "conv ALU utilization: {:.1} % (paper: 72.5 % average across AlexNet+VGG-16 \
+             16-bit conv layers)\n",
+            conv.utilization() * 100.0,
+        ));
+    }
     Ok(s)
 }
 

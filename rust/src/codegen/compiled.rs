@@ -50,7 +50,7 @@ use crate::model::{ConvLayer, PoolLayer};
 
 use super::conv::{build_conv_task, TaskFlavor};
 use super::layout::{self, ConvPlan};
-use super::pool::{build_pool_task, plan_pool, PoolPlan};
+use super::pool::{build_pool_task, plan_pool_with, PoolPlan};
 use super::CodegenError;
 
 /// Verify-on-insert: every program entering the plan cache passes the
@@ -108,7 +108,10 @@ pub(crate) fn flavor_of(mi: usize, m: usize) -> TaskFlavor {
 }
 
 /// Conv cache key: the dense (per-group) layer's geometry and datapath
-/// knobs plus the run's gate bits. Deliberately excludes the name.
+/// knobs plus the run's gate bits and rotation knob. Deliberately
+/// excludes the name. `rot` is the *requested* knob, not the plan's
+/// feasibility outcome — a shape planned with and without rotation may
+/// produce different `DmMap`s, so the two must not share an entry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 struct ConvKey {
     ic: usize,
@@ -122,10 +125,11 @@ struct ConvKey {
     frac_shift: u8,
     relu: bool,
     gate_bits: u8,
+    rot: bool,
 }
 
 impl ConvKey {
-    fn of(l: &ConvLayer, gate_bits: u8) -> Self {
+    fn of(l: &ConvLayer, gate_bits: u8, rot: bool) -> Self {
         debug_assert_eq!(l.groups, 1, "conv cache keys are per-group dense views");
         Self {
             ic: l.ic,
@@ -139,6 +143,7 @@ impl ConvKey {
             frac_shift: l.frac_shift,
             relu: l.relu,
             gate_bits,
+            rot,
         }
     }
 }
@@ -153,6 +158,7 @@ struct PoolKey {
     iw: usize,
     size: usize,
     stride: usize,
+    rot: bool,
 }
 
 /// One raw sampled row of a cold tile-analytic pass: the `(cycles,
@@ -213,7 +219,11 @@ pub struct CompiledConv {
 
 impl CompiledConv {
     pub(crate) fn compile(layer: &ConvLayer) -> Result<Self, CodegenError> {
-        let plan = layout::plan(layer)?;
+        Self::compile_with(layer, true)
+    }
+
+    pub(crate) fn compile_with(layer: &ConvLayer, rotate: bool) -> Result<Self, CodegenError> {
+        let plan = layout::plan_with(layer, rotate)?;
         let mut programs: HashMap<TaskKey, ProgramMem> = HashMap::new();
         for mi in 0..plan.m {
             let f = flavor_of(mi, plan.m);
@@ -235,6 +245,25 @@ impl CompiledConv {
                     &super::conv::mem_spec(&plan, f),
                     &what,
                 )?;
+                // Phase B of a rotated plan: the same program runs with
+                // r2/r6 re-based into the shadow slots while the primary
+                // pair is the in-flight prefetch target (no-access). The
+                // DmaRace discipline for host-staged transfers is
+                // checked as region containment in both phases.
+                if plan.rot.is_some() {
+                    let spec_b = super::conv::mem_spec_phase_b(&plan, f)
+                        .expect("rotated plan has a phase-B spec");
+                    let envs_b = [
+                        Self::row_env_rot(&plan, 0),
+                        Self::row_env_rot(&plan, plan.band_rows.saturating_sub(1)),
+                    ];
+                    verify_memory_on_insert(
+                        pm.program(),
+                        &envs_b,
+                        &spec_b,
+                        &format!("{what} (rotation phase B)"),
+                    )?;
+                }
                 programs.insert(key, pm);
             }
         }
@@ -264,6 +293,20 @@ impl CompiledConv {
         ])
     }
 
+    /// Rotation phase B's ABI for the in-band row `oh_local`: input and
+    /// filter bases point into the shadow slots, out/psum stay primary
+    /// (the row buffer and PSum spill are not doubled — only the
+    /// DMA-staged streams rotate). Callers must hold `plan.rot.is_some()`.
+    fn row_env_rot(plan: &ConvPlan, oh_local: usize) -> AbiEnv {
+        let r = plan.rot.as_ref().expect("phase-B env of an un-rotated plan");
+        AbiEnv::new(&[
+            (2, (r.input + oh_local * plan.layer.stride * plan.row_bytes) as i32),
+            (4, plan.dm.out as i32),
+            (5, plan.dm.psum as i32),
+            (6, r.filt as i32),
+        ])
+    }
+
     /// The ABI environment `run_dense` establishes for the in-band row
     /// `oh_local`: r2 = staged input base + `oh_local · stride ·
     /// row_bytes`, r4/r5/r6 = output / psum / filter stream bases. Only
@@ -272,6 +315,13 @@ impl CompiledConv {
     /// predicted per-row rather than extrapolated from row 0.
     pub(crate) fn abi_env_for_row(&self, oh_local: usize) -> AbiEnv {
         Self::row_env(&self.plan, oh_local)
+    }
+
+    /// Phase-B (shadow-slot) ABI for the in-band row `oh_local`, when
+    /// the plan rotates (for the `lint` walk's phase-B memory checks).
+    pub(crate) fn abi_env_for_row_rot(&self, oh_local: usize) -> Option<AbiEnv> {
+        self.plan.rot.as_ref()?;
+        Some(Self::row_env_rot(&self.plan, oh_local))
     }
 
     /// The row-0 ABI environment (the `lint` walk prices row 0).
@@ -320,13 +370,30 @@ pub struct CompiledPool {
 
 impl CompiledPool {
     pub(crate) fn compile(layer: &PoolLayer) -> Result<Self, CodegenError> {
+        Self::compile_with(layer, true)
+    }
+
+    pub(crate) fn compile_with(layer: &PoolLayer, rotate: bool) -> Result<Self, CodegenError> {
         let one_row = PoolLayer { ih: layer.size, ..layer.clone() };
-        let plan = plan_pool(&one_row)?;
+        let plan = plan_pool_with(&one_row, rotate)?;
         let pm = build_pool_task(&plan)?;
         let what = format!("pool task of layer {}", layer.name);
         verify_on_insert(pm.program(), &AbiSpec::pool(), &what)?;
         let env = AbiEnv::new(&[(2, plan.dm_input as i32), (4, plan.dm_out as i32)]);
         verify_memory_on_insert(pm.program(), &[env], &super::pool::mem_spec(&plan), &what)?;
+        // Phase B of a rotated plan: shadow input/output live, primary
+        // pair is the inactive prefetch target (no-access).
+        if let (Some(ri), Some(ro)) = (plan.rot_input(), plan.rot_out()) {
+            let spec_b =
+                super::pool::mem_spec_phase_b(&plan).expect("rotated plan has a phase-B spec");
+            let env_b = AbiEnv::new(&[(2, ri as i32), (4, ro as i32)]);
+            verify_memory_on_insert(
+                pm.program(),
+                &[env_b],
+                &spec_b,
+                &format!("{what} (rotation phase B)"),
+            )?;
+        }
         Ok(Self { plan, pm, analytic: OnceLock::new(), analyzer: OnceLock::new() })
     }
 
@@ -334,6 +401,13 @@ impl CompiledPool {
     /// base, r4 = output base.
     pub(crate) fn abi_env(&self) -> AbiEnv {
         AbiEnv::new(&[(2, self.plan.dm_input as i32), (4, self.plan.dm_out as i32)])
+    }
+
+    /// Phase-B (shadow-slot) ABI when the plan rotates (for the `lint`
+    /// walk's phase-B memory checks).
+    pub(crate) fn abi_env_rot(&self) -> Option<AbiEnv> {
+        let (ri, ro) = (self.plan.rot_input()?, self.plan.rot_out()?);
+        Some(AbiEnv::new(&[(2, ri as i32), (4, ro as i32)]))
     }
 
     /// Static cycle prediction, lazily computed and cached.
@@ -393,12 +467,13 @@ impl PlanCache {
         &self,
         layer: &ConvLayer,
         gate_bits: u8,
+        rotate: bool,
     ) -> Result<Arc<CompiledConv>, CodegenError> {
         if !self.enabled {
             self.misses.fetch_add(1, Ordering::Relaxed);
-            return CompiledConv::compile(layer).map(Arc::new);
+            return CompiledConv::compile_with(layer, rotate).map(Arc::new);
         }
-        let key = ConvKey::of(layer, gate_bits);
+        let key = ConvKey::of(layer, gate_bits, rotate);
         // Compiling under the lock serializes racing first compiles of
         // one shape — cheaper than letting every core compile it.
         let mut map = self.conv.lock().expect("plan cache poisoned");
@@ -406,25 +481,29 @@ impl PlanCache {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(cc.clone());
         }
-        let cc = Arc::new(CompiledConv::compile(layer)?);
+        let cc = Arc::new(CompiledConv::compile_with(layer, rotate)?);
         map.insert(key, cc.clone());
         self.misses.fetch_add(1, Ordering::Relaxed);
         Ok(cc)
     }
 
     /// Compiled artifact for a pool layer shape.
-    pub(crate) fn pool(&self, layer: &PoolLayer) -> Result<Arc<CompiledPool>, CodegenError> {
+    pub(crate) fn pool(
+        &self,
+        layer: &PoolLayer,
+        rotate: bool,
+    ) -> Result<Arc<CompiledPool>, CodegenError> {
         if !self.enabled {
             self.misses.fetch_add(1, Ordering::Relaxed);
-            return CompiledPool::compile(layer).map(Arc::new);
+            return CompiledPool::compile_with(layer, rotate).map(Arc::new);
         }
-        let key = PoolKey { iw: layer.iw, size: layer.size, stride: layer.stride };
+        let key = PoolKey { iw: layer.iw, size: layer.size, stride: layer.stride, rot: rotate };
         let mut map = self.pool.lock().expect("plan cache poisoned");
         if let Some(cp) = map.get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(cp.clone());
         }
-        let cp = Arc::new(CompiledPool::compile(layer)?);
+        let cp = Arc::new(CompiledPool::compile_with(layer, rotate)?);
         map.insert(key, cp.clone());
         self.misses.fetch_add(1, Ordering::Relaxed);
         Ok(cp)
@@ -476,21 +555,36 @@ mod tests {
         let cache = PlanCache::new();
         let a = ConvLayer { name: "a", ..small() };
         let b = ConvLayer { name: "b", ..small() };
-        let c1 = cache.conv(&a, 16).unwrap();
-        let c2 = cache.conv(&b, 16).unwrap();
+        let c1 = cache.conv(&a, 16, true).unwrap();
+        let c2 = cache.conv(&b, 16, true).unwrap();
         assert!(Arc::ptr_eq(&c1, &c2), "same shape, different name must hit");
-        let c3 = cache.conv(&a, 8).unwrap();
+        let c3 = cache.conv(&a, 8, true).unwrap();
         assert!(!Arc::ptr_eq(&c1, &c3), "same shape, different gate bits must miss");
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.conv_entries), (1, 2, 2));
     }
 
     #[test]
+    fn rotation_knob_is_part_of_both_cache_keys() {
+        let cache = PlanCache::new();
+        let l = small();
+        let on = cache.conv(&l, 16, true).unwrap();
+        let off = cache.conv(&l, 16, false).unwrap();
+        assert!(!Arc::ptr_eq(&on, &off), "rotation knob must miss");
+        assert!(on.plan.rot.is_some() && off.plan.rot.is_none());
+        let p = PoolLayer { name: "p", ic: 16, ih: 8, iw: 8, size: 2, stride: 2 };
+        let pon = cache.pool(&p, true).unwrap();
+        let poff = cache.pool(&p, false).unwrap();
+        assert!(!Arc::ptr_eq(&pon, &poff), "rotation knob must miss");
+        assert!(pon.plan.rot.is_some() && poff.plan.rot.is_none());
+    }
+
+    #[test]
     fn disabled_cache_compiles_fresh_every_call() {
         let cache = PlanCache::disabled();
         let l = small();
-        let c1 = cache.conv(&l, 16).unwrap();
-        let c2 = cache.conv(&l, 16).unwrap();
+        let c1 = cache.conv(&l, 16, true).unwrap();
+        let c2 = cache.conv(&l, 16, true).unwrap();
         assert!(!Arc::ptr_eq(&c1, &c2));
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.conv_entries), (0, 2, 0));
@@ -513,11 +607,11 @@ mod tests {
         let cache = PlanCache::new();
         let p1 = PoolLayer { name: "p1", ic: 16, ih: 8, iw: 8, size: 2, stride: 2 };
         let p2 = PoolLayer { name: "p2", ic: 48, ih: 12, iw: 8, size: 2, stride: 2 };
-        let c1 = cache.pool(&p1).unwrap();
-        let c2 = cache.pool(&p2).unwrap();
+        let c1 = cache.pool(&p1, true).unwrap();
+        let c2 = cache.pool(&p2, true).unwrap();
         assert!(Arc::ptr_eq(&c1, &c2), "pool plans depend on (iw, size, stride) only");
         let p3 = PoolLayer { name: "p3", ic: 16, ih: 8, iw: 13, size: 2, stride: 2 };
-        assert!(!Arc::ptr_eq(&c1, &cache.pool(&p3).unwrap()));
+        assert!(!Arc::ptr_eq(&c1, &cache.pool(&p3, true).unwrap()));
     }
 
     // ---- static cycle analyzer vs. cycle simulator ---------------------

@@ -83,15 +83,46 @@ impl TaskFlavor {
 /// include the prefetch slack band (`input..end`); the PSum buffer is
 /// readable only on continuing slices and writable only on non-final
 /// ones, so a single-slice program touching it at all is a finding.
+/// When the plan rotates ([`ConvPlan::rot`]), the inactive shadow
+/// buffers are a no-access region: the host prefetches the next
+/// (tile, slice, band) stream into them while this task runs, so a
+/// compute access landing there is a DMA race and the pass flags it
+/// ([`mem_spec_phase_b`] is the other rotation phase, with the
+/// active/inactive roles swapped).
 pub fn mem_spec(plan: &ConvPlan, flavor: TaskFlavor) -> MemSpec {
     let dm = &plan.dm;
-    MemSpec::with_regions(vec![
+    let mut regions = vec![
         Region::new("bias", dm.bias, dm.filt, true, false),
         Region::new("filt", dm.filt, dm.out, true, false),
         Region::new("out", dm.out, dm.psum, false, flavor.last_slice),
         Region::new("psum", dm.psum, dm.input, !flavor.first_slice, !flavor.last_slice),
         Region::new("input", dm.input, dm.end, true, false),
-    ])
+    ];
+    if let Some(r) = &plan.rot {
+        regions.push(Region::new("rot_filt", r.bias, r.input, false, false));
+        regions.push(Region::new("rot_input", r.input, r.end, false, false));
+    }
+    MemSpec::with_regions(regions)
+}
+
+/// Phase-B memory contract of a rotated plan: the shadow bias/filter/
+/// input slots are the live ones (the task ABI re-bases r2/r6 onto
+/// them) and the PRIMARY bias/filter/input regions are the inactive
+/// prefetch target (no access). The out/psum row buffers are shared
+/// between phases — rows commit from the same buffers either way.
+/// `None` when the plan does not rotate.
+pub fn mem_spec_phase_b(plan: &ConvPlan, flavor: TaskFlavor) -> Option<MemSpec> {
+    let dm = &plan.dm;
+    let r = plan.rot.as_ref()?;
+    Some(MemSpec::with_regions(vec![
+        Region::new("inactive_filt", dm.bias, dm.out, false, false),
+        Region::new("out", dm.out, dm.psum, false, flavor.last_slice),
+        Region::new("psum", dm.psum, dm.input, !flavor.first_slice, !flavor.last_slice),
+        Region::new("inactive_input", dm.input, dm.end, false, false),
+        Region::new("bias", r.bias, r.filt, true, false),
+        Region::new("filt", r.filt, r.input, true, false),
+        Region::new("input", r.input, r.end, true, false),
+    ]))
 }
 
 const R0: SReg = SReg(0); // zero

@@ -76,6 +76,29 @@ pub struct DmMap {
     pub end: usize,
 }
 
+/// Double-buffer rotation shadow appended past [`DmMap::end`] when it
+/// fits: a second bias+filter slot and a second staged-input band, so
+/// the coordinator can prefetch the NEXT (tile, slice, band) stream
+/// while the current one computes. Shadow regions mirror the primary
+/// layout byte-for-byte ([`DmRot::bias`] is 32-aligned so vector
+/// accesses keep the primary phase's DM alignment); the out/psum row
+/// buffers are NOT doubled — rows commit from the same buffers in both
+/// phases. The memory verifier checks both phases: in each phase the
+/// inactive buffer pair is a no-access region, so any compute access
+/// into the in-flight prefetch target is flagged (the DmaRace
+/// discipline for the host-staged transfers).
+#[derive(Debug, Clone)]
+pub struct DmRot {
+    /// Shadow bias vector (32 B).
+    pub bias: usize,
+    /// Shadow filter stream (same size as `[dm.filt, dm.out)`).
+    pub filt: usize,
+    /// Shadow staged input band (same size as `[dm.input, dm.end)`).
+    pub input: usize,
+    /// First byte past the rotation shadow (`<= DM_BYTES`).
+    pub end: usize,
+}
+
 /// Complete plan for one dense conv layer.
 #[derive(Debug, Clone)]
 pub struct ConvPlan {
@@ -104,8 +127,15 @@ pub struct ConvPlan {
     /// Bytes between consecutive input channels in the staged band.
     pub ic_stride: usize,
     pub dm: DmMap,
+    /// Double-buffer rotation shadow — `Some` when DM holds a second
+    /// filter-block + input-band slot beside the working map, `None`
+    /// when the stream must serialize against compute. Derived purely
+    /// from the layer *shape* (plus the planner's `rotate` knob), so
+    /// the compiled-plan cache key stays shape-only.
+    pub rot: Option<DmRot>,
     pub loop_order: LoopOrder,
-    /// Planner cost estimate: max(compute, dma) cycles for the layer.
+    /// Planner cost estimate in cycles: `max(compute, dma)` when the
+    /// plan rotates, `compute + dma` when it serializes.
     pub est_cost: f64,
 }
 
@@ -175,9 +205,17 @@ impl ConvPlan {
 /// that influences planning or codegen MUST also be added to the
 /// cache key, or same-key layers would share a stale plan.
 pub fn plan(layer: &ConvLayer) -> Result<ConvPlan, CodegenError> {
+    plan_with(layer, true)
+}
+
+/// [`plan`] with an explicit rotation knob: `rotate = false` forbids
+/// the double-buffer shadow, so every candidate is priced with its
+/// stream serialized (`compute + dma`) — the honest no-double-buffering
+/// baseline the rotation-identity tests and `--no-rotation` use.
+pub fn plan_with(layer: &ConvLayer, rotate: bool) -> Result<ConvPlan, CodegenError> {
     assert_eq!(layer.groups, 1, "plan() takes per-group dense views");
-    let a = plan_variant(layer, Variant::A);
-    let b = plan_variant(layer, Variant::B);
+    let a = plan_variant_with(layer, Variant::A, rotate);
+    let b = plan_variant_with(layer, Variant::B, rotate);
     match (a, b) {
         (Ok(pa), Ok(pb)) => Ok(if pa.est_cost <= pb.est_cost { pa } else { pb }),
         (Ok(pa), Err(_)) => Ok(pa),
@@ -186,10 +224,24 @@ pub fn plan(layer: &ConvLayer) -> Result<ConvPlan, CodegenError> {
     }
 }
 
-/// Plan a specific variant (public for the ablation bench): joint search
-/// over (ics, band_rows, loop order) minimizing the estimated layer time
-/// `max(compute, dma)` — the double-buffered overlap model.
+/// Plan a specific variant with rotation allowed (public for the
+/// ablation bench).
 pub fn plan_variant(layer: &ConvLayer, variant: Variant) -> Result<ConvPlan, CodegenError> {
+    plan_variant_with(layer, variant, true)
+}
+
+/// Plan a specific variant: joint search over (ics, band_rows,
+/// rotation, loop order) minimizing the estimated layer time. A
+/// candidate whose DM also fits the [`DmRot`] shadow prices at
+/// `max(compute, dma)` (steady-state double-buffered overlap); one
+/// that does not prices at `compute + dma` (the stream serializes
+/// against compute) — so the search trades staged-band size against
+/// overlap instead of assuming overlap for free.
+pub fn plan_variant_with(
+    layer: &ConvLayer,
+    variant: Variant,
+    rotate: bool,
+) -> Result<ConvPlan, CodegenError> {
     let l = layer;
     let s = l.stride;
     let pix = variant.pix();
@@ -221,91 +273,119 @@ pub fn plan_variant(layer: &ConvLayer, variant: Variant) -> Result<ConvPlan, Cod
             ics /= 2;
             continue;
         }
-        // max feasible band_rows for this ics
+        // max feasible band_rows for this ics, once per rotation mode:
+        // a rotated candidate must also fit the DmRot shadow (second
+        // filter block + second input band), so it may settle on a
+        // smaller band than the serialized one.
         let filt = ics * l.fh * l.fw * 32 + 64;
-        let mut band_rows = l.oh();
-        let found = loop {
-            if band_rows == 0 {
-                break None;
+        for rotated in [false, true] {
+            if rotated && !rotate {
+                continue;
             }
-            let in_rows = (band_rows - 1) * s + l.fh;
-            let ic_stride = in_rows * row_bytes;
-            // u16 LbLoad offset limit: prefetch offsets go up to 2·ic_stride
-            if 2 * ic_stride <= u16::MAX as usize {
-                let input = ics * ic_stride;
-                let slack = 2 * ic_stride + win * 2; // prefetch over-read
-                let total = 32 + filt + out_row + psum_row + input + slack;
-                if total <= DM_BYTES {
-                    break Some((band_rows, in_rows, ic_stride, total));
+            let mut band_rows = l.oh();
+            let found = loop {
+                if band_rows == 0 {
+                    break None;
                 }
-            }
-            band_rows = if band_rows > 8 { band_rows / 2 } else { band_rows - 1 };
-        };
-        let Some((band_rows, in_rows, ic_stride, total)) = found else {
-            ics /= 2;
-            continue;
-        };
-        let n_bands = l.oh().div_ceil(band_rows);
-        // I/O estimate (ring accounting: band overlap rows are not
-        // re-fetched within one streaming pass)
-        let input_once = (l.ic * l.ihp().max(in_rows) * row_bytes) as f64;
-        let filt_once = (n_tiles * (l.ic * l.fh * l.fw + 2 * m) * 32 + 32 * n_tiles * m) as f64;
-        let psum_io = if m > 1 {
-            (2 * (m - 1) * l.oh() * psum_row * n_tiles) as f64
-        } else {
-            0.0
-        };
-        let out_io = (l.oh() * n_tiles) as f64
-            * match variant {
-                Variant::A => (l.ow() * 32) as f64,
-                Variant::B => (l.ow() * 2 * ocs) as f64,
+                let in_rows = (band_rows - 1) * s + l.fh;
+                let ic_stride = in_rows * row_bytes;
+                // u16 LbLoad offset limit: prefetch offsets go up to 2·ic_stride
+                if 2 * ic_stride <= u16::MAX as usize {
+                    let input = ics * ic_stride;
+                    let slack = 2 * ic_stride + win * 2; // prefetch over-read
+                    let total = 32 + filt + out_row + psum_row + input + slack;
+                    // shadow = 32-aligned base + bias + filt + input band
+                    let footprint = if rotated {
+                        total.div_ceil(32) * 32 + 32 + filt + input + slack
+                    } else {
+                        total
+                    };
+                    if footprint <= DM_BYTES {
+                        break Some((band_rows, in_rows, ic_stride, total));
+                    }
+                }
+                band_rows = if band_rows > 8 { band_rows / 2 } else { band_rows - 1 };
             };
-        // compute estimate from the bundle model
-        let rows_cycles = {
-            let per2ic = body as f64;
-            let groups = g as f64;
-            let per_row = groups * (per2ic * (ics as f64 / 2.0) + 36.0);
-            per_row * (l.oh() * n_tiles * m) as f64
-        };
-        for order in [LoopOrder::TileOuter, LoopOrder::BandOuter] {
-            let (input_io, filt_io) = match order {
-                LoopOrder::TileOuter => (input_once * n_tiles as f64, filt_once),
-                LoopOrder::BandOuter => (input_once, filt_once * n_bands as f64),
+            let Some((band_rows, in_rows, ic_stride, total)) = found else {
+                continue;
             };
-            let io = input_io + filt_io + psum_io + out_io;
-            let dma_est = io / crate::mem::EXT_BYTES_PER_CYCLE as f64;
-            let cost = rows_cycles.max(dma_est);
-            if best.as_ref().is_none_or(|(c, _)| cost < *c) {
-                let dm = DmMap {
-                    bias: 0,
-                    filt: 32,
-                    out: 32 + filt,
-                    psum: 32 + filt + out_row,
-                    input: 32 + filt + out_row + psum_row,
-                    end: total,
+            let n_bands = l.oh().div_ceil(band_rows);
+            // I/O estimate (ring accounting: band overlap rows are not
+            // re-fetched within one streaming pass)
+            let input_once = (l.ic * l.ihp().max(in_rows) * row_bytes) as f64;
+            let filt_once =
+                (n_tiles * (l.ic * l.fh * l.fw + 2 * m) * 32 + 32 * n_tiles * m) as f64;
+            let psum_io = if m > 1 {
+                (2 * (m - 1) * l.oh() * psum_row * n_tiles) as f64
+            } else {
+                0.0
+            };
+            let out_io = (l.oh() * n_tiles) as f64
+                * match variant {
+                    Variant::A => (l.ow() * 32) as f64,
+                    Variant::B => (l.ow() * 2 * ocs) as f64,
                 };
-                best = Some((
-                    cost,
-                    ConvPlan {
-                        layer: l.clone(),
-                        variant,
-                        ics,
-                        m,
-                        band_rows,
-                        n_bands,
-                        n_tiles,
-                        g,
-                        win,
-                        fused_rows,
-                        iwp_stage,
-                        row_bytes,
-                        in_rows_band: in_rows,
-                        ic_stride,
-                        dm,
-                        loop_order: order,
-                        est_cost: cost,
-                    },
-                ));
+            // compute estimate from the bundle model
+            let rows_cycles = {
+                let per2ic = body as f64;
+                let groups = g as f64;
+                let per_row = groups * (per2ic * (ics as f64 / 2.0) + 36.0);
+                per_row * (l.oh() * n_tiles * m) as f64
+            };
+            let input_sz = ics * ic_stride;
+            let slack = 2 * ic_stride + win * 2;
+            let rot = rotated.then(|| {
+                let base = total.div_ceil(32) * 32;
+                DmRot {
+                    bias: base,
+                    filt: base + 32,
+                    input: base + 32 + filt,
+                    end: base + 32 + filt + input_sz + slack,
+                }
+            });
+            for order in [LoopOrder::TileOuter, LoopOrder::BandOuter] {
+                let (input_io, filt_io) = match order {
+                    LoopOrder::TileOuter => (input_once * n_tiles as f64, filt_once),
+                    LoopOrder::BandOuter => (input_once, filt_once * n_bands as f64),
+                };
+                let io = input_io + filt_io + psum_io + out_io;
+                let dma_est = io / crate::mem::EXT_BYTES_PER_CYCLE as f64;
+                // rotated: steady-state overlap; serialized: honest sum
+                let cost =
+                    if rotated { rows_cycles.max(dma_est) } else { rows_cycles + dma_est };
+                if best.as_ref().is_none_or(|(c, _)| cost < *c) {
+                    let dm = DmMap {
+                        bias: 0,
+                        filt: 32,
+                        out: 32 + filt,
+                        psum: 32 + filt + out_row,
+                        input: 32 + filt + out_row + psum_row,
+                        end: total,
+                    };
+                    best = Some((
+                        cost,
+                        ConvPlan {
+                            layer: l.clone(),
+                            variant,
+                            ics,
+                            m,
+                            band_rows,
+                            n_bands,
+                            n_tiles,
+                            g,
+                            win,
+                            fused_rows,
+                            iwp_stage,
+                            row_bytes,
+                            in_rows_band: in_rows,
+                            ic_stride,
+                            dm,
+                            rot: rot.clone(),
+                            loop_order: order,
+                            est_cost: cost,
+                        },
+                    ));
+                }
             }
         }
         ics /= 2;
@@ -325,7 +405,51 @@ mod tests {
             let d = l.per_group();
             let p = plan(&d).unwrap_or_else(|e| panic!("{}: {e}", l.name));
             assert!(p.dm.end <= DM_BYTES, "{} overflows DM", l.name);
+            if let Some(r) = &p.rot {
+                assert!(r.end <= DM_BYTES, "{} rotation shadow overflows DM", l.name);
+            }
             assert!(p.util_estimate() > 0.3, "{}: est {}", l.name, p.util_estimate());
+        }
+    }
+
+    /// Every AlexNet/VGG-16 conv layer fits a rotation shadow at SOME
+    /// (ics, band_rows) point, and the shadow mirrors the primary
+    /// filter/input regions byte-for-byte at a 32-aligned base past
+    /// `dm.end` — the pairwise-disjointness the memory verifier
+    /// machine-checks holds by construction.
+    #[test]
+    fn benchmark_layers_rotate_with_shadow_in_bounds() {
+        for l in alexnet_conv().iter().chain(vgg16_conv().iter()) {
+            let p = plan(&l.per_group()).unwrap();
+            let r = p.rot.as_ref().unwrap_or_else(|| panic!("{} should rotate", l.name));
+            assert!(r.end <= DM_BYTES, "{}: shadow end {}", l.name, r.end);
+            assert!(r.bias >= p.dm.end, "{}: shadow under dm.end", l.name);
+            assert_eq!(r.bias % 32, 0, "{}: shadow base unaligned", l.name);
+            assert_eq!(r.filt - r.bias, p.dm.filt - p.dm.bias, "{}: bias slot", l.name);
+            assert_eq!(r.input - r.filt, p.dm.out - p.dm.filt, "{}: filter slot", l.name);
+            assert_eq!(r.end - r.input, p.dm.end - p.dm.input, "{}: input slot", l.name);
+        }
+    }
+
+    /// A layer whose base map fills DM past the point where a shadow
+    /// could ever fit (single input channel, so `ics` cannot shrink;
+    /// one output row, so `band_rows` cannot shrink) must plan WITHOUT
+    /// rotation — the executor prices its stream serialized.
+    #[test]
+    fn tall_filter_wide_row_layer_cannot_rotate() {
+        let l = ConvLayer::new("tall", 1, 31, 350, 16, 31, 1, 1, 0, 1);
+        let p = plan(&l.per_group()).unwrap();
+        assert!(p.rot.is_none(), "unexpected rotation: {:?}", p.rot);
+        assert!(p.dm.end <= DM_BYTES);
+    }
+
+    /// `plan_with(_, false)` never allocates a shadow, even for layers
+    /// that could rotate — the `--no-rotation` baseline.
+    #[test]
+    fn rotation_knob_disables_the_shadow() {
+        for l in alexnet_conv().iter().chain(vgg16_conv().iter()) {
+            let p = plan_with(&l.per_group(), false).unwrap();
+            assert!(p.rot.is_none(), "{}", l.name);
         }
     }
 

@@ -30,29 +30,60 @@ pub struct PoolPlan {
     pub dm_input: usize,
     /// DM address of the output row buffer.
     pub dm_out: usize,
+    /// Double-buffer rotation shadow: DM address of a second
+    /// input-rows + output-row slot (same sizes, 32-aligned base by
+    /// construction) when one fits beside the primary pair, `None`
+    /// when the per-row stream must serialize against compute.
+    pub rot: Option<usize>,
+}
+
+impl PoolPlan {
+    /// Shadow input base (phase B's `r2`). Only when `rot` is `Some`.
+    pub fn rot_input(&self) -> Option<usize> {
+        self.rot
+    }
+    /// Shadow output base (phase B's `r4`). Only when `rot` is `Some`.
+    pub fn rot_out(&self) -> Option<usize> {
+        self.rot.map(|r| r + (self.dm_out - self.dm_input))
+    }
+    /// First byte past the rotation shadow.
+    pub fn rot_end(&self) -> Option<usize> {
+        self.rot.map(|r| r + self.dm_out + self.layer.ow() * 32)
+    }
 }
 
 /// Plan a pooling layer (callers pass a one-row view, `ih == size`).
 ///
 /// The plan's DM map and the task program depend only on
-/// `(iw, size, stride)` — exactly the `codegen::compiled` pool cache
-/// key. `n_tiles` is derived from `ic` and is NOT part of that key:
-/// the executor recomputes it per layer, so a cached plan's `n_tiles`
-/// must never be read across layers. A new `ic`/`ih`-dependent plan
-/// field would have to widen the cache key.
+/// `(iw, size, stride)` plus the rotation knob — exactly the
+/// `codegen::compiled` pool cache key. `n_tiles` is derived from `ic`
+/// and is NOT part of that key: the executor recomputes it per layer,
+/// so a cached plan's `n_tiles` must never be read across layers. A
+/// new `ic`/`ih`-dependent plan field would have to widen the cache
+/// key.
 pub fn plan_pool(layer: &PoolLayer) -> Result<PoolPlan, CodegenError> {
+    plan_pool_with(layer, true)
+}
+
+/// [`plan_pool`] with an explicit rotation knob (`false` = the honest
+/// no-double-buffering baseline).
+pub fn plan_pool_with(layer: &PoolLayer, rotate: bool) -> Result<PoolPlan, CodegenError> {
     let in_row_bytes = layer.iw * 32;
     let input_bytes = layer.size * in_row_bytes;
     let out_bytes = layer.ow() * 32;
     if input_bytes + out_bytes > DM_BYTES {
         return Err(CodegenError::Infeasible(format!("pool {}", layer.name)));
     }
+    // both slots are whole 32 B vectors, so the shadow base is aligned
+    let rot = (rotate && 2 * (input_bytes + out_bytes) <= DM_BYTES)
+        .then_some(input_bytes + out_bytes);
     Ok(PoolPlan {
         layer: layer.clone(),
         n_tiles: layer.ic.div_ceil(16),
         in_row_bytes,
         dm_input: 0,
         dm_out: input_bytes,
+        rot,
     })
 }
 
@@ -60,12 +91,33 @@ pub fn plan_pool(layer: &PoolLayer) -> Result<PoolPlan, CodegenError> {
 /// pass: staged input rows are read-only, the output row buffer is
 /// write-only, nothing else in DM may be touched. The window walk ends
 /// exactly at `dm_out` ((ow−1)·stride + size ≤ iw), which the pass
-/// verifies per compiled plan.
+/// verifies per compiled plan. When the plan rotates, the inactive
+/// shadow slot is a no-access region — a compute access landing in the
+/// in-flight prefetch target is flagged (the DmaRace discipline for
+/// host-staged transfers); [`mem_spec_phase_b`] is the same contract
+/// with the active/inactive roles swapped.
 pub fn mem_spec(plan: &PoolPlan) -> MemSpec {
-    MemSpec::with_regions(vec![
+    let mut regions = vec![
         Region::new("in", plan.dm_input, plan.dm_out, true, false),
         Region::new("out", plan.dm_out, plan.dm_out + plan.layer.ow() * 32, false, true),
-    ])
+    ];
+    if let (Some(ri), Some(re)) = (plan.rot_input(), plan.rot_end()) {
+        regions.push(Region::new("rot", ri, re, false, false));
+    }
+    MemSpec::with_regions(regions)
+}
+
+/// Phase-B memory contract of a rotated pool plan: the shadow slots
+/// are live (input readable, output writable) and the primary pair is
+/// the inactive no-access prefetch target. `None` when the plan does
+/// not rotate.
+pub fn mem_spec_phase_b(plan: &PoolPlan) -> Option<MemSpec> {
+    let (ri, ro, re) = (plan.rot_input()?, plan.rot_out()?, plan.rot_end()?);
+    Some(MemSpec::with_regions(vec![
+        Region::new("primary", plan.dm_input, plan.dm_out + plan.layer.ow() * 32, false, false),
+        Region::new("in", ri, ro, true, false),
+        Region::new("out", ro, re, false, true),
+    ]))
 }
 
 const R0: SReg = SReg(0);
@@ -187,6 +239,25 @@ mod tests {
             let plan = plan_pool(&one_row).unwrap();
             let pm = build_pool_task(&plan).unwrap();
             assert!(pm.bundle_count() < 100, "{}", l.name);
+        }
+    }
+
+    /// Every benchmark pool fits the rotation shadow (two row-window +
+    /// output-row pairs are tiny next to DM), both phases' region maps
+    /// are disjoint and in bounds, and the knob disables the shadow.
+    #[test]
+    fn pool_plans_rotate_with_disjoint_phase_specs() {
+        for l in crate::model::alexnet_pools().iter().chain(crate::model::vgg16_pools().iter()) {
+            let one_row = PoolLayer { ih: l.size, ..l.clone() };
+            let p = plan_pool(&one_row).unwrap();
+            assert!(p.rot.is_some(), "{} should rotate", l.name);
+            assert!(p.rot_end().unwrap() <= DM_BYTES, "{}", l.name);
+            assert!(mem_spec(&p).region_violations().is_empty(), "{}", l.name);
+            let pb = mem_spec_phase_b(&p).expect("rotated plan has a phase B");
+            assert!(pb.region_violations().is_empty(), "{}", l.name);
+            let np = plan_pool_with(&one_row, false).unwrap();
+            assert!(np.rot.is_none(), "{}", l.name);
+            assert!(mem_spec_phase_b(&np).is_none(), "{}", l.name);
         }
     }
 }

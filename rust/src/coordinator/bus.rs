@@ -51,42 +51,94 @@ impl std::str::FromStr for BusModel {
 
 /// One schedulable unit of a core's timeline (a shard or a layer):
 /// its compute time and the decomposed DMA terms needed to re-price the
-/// transfer under contention.
-#[derive(Debug, Clone, Copy)]
+/// transfer under contention. The DMA stream splits into three
+/// portions per the executor's fill/steady/serialized timeline:
+/// `fill_*` is the serialized first-iteration stream of a rotated
+/// (double-buffered) plan, `serial_*` is the whole stream of a plan
+/// that cannot rotate, and `bytes`/`lat` hold the **steady** remainder
+/// — the only portion compute can hide.
+#[derive(Debug, Clone, Copy, Default)]
 pub(crate) struct Segment {
     /// Pure compute cycles of the unit.
     pub compute: u64,
-    /// Off-chip payload bytes moved by the unit.
+    /// Steady (overlappable) off-chip payload bytes of the unit.
     pub bytes: u64,
-    /// Per-request DRAM latency cycles (the bandwidth-independent term).
+    /// Per-request DRAM latency cycles of the steady portion (the
+    /// bandwidth-independent term).
     pub lat: u64,
+    /// Serialized first-iteration fill of a rotated plan.
+    pub fill_bytes: u64,
+    pub fill_lat: u64,
+    /// Never-overlapped stream of an un-rotatable plan.
+    pub serial_bytes: u64,
+    pub serial_lat: u64,
     /// Cycles of the unit at full private bandwidth: the executor's
-    /// `max(compute, dma)` overlap result, including per-group rounding
+    /// fill/steady timeline result, including per-iteration rounding
     /// the aggregate terms cannot reconstruct.
     pub part: u64,
 }
 
+/// Transfer-plus-latency cycles of one DMA portion when `d` cores
+/// contend (the latency term is pipelined per bank and does not scale).
+fn portion(bytes: u64, lat: u64, d: u64) -> u64 {
+    lat + (bytes * d).div_ceil(EXT_BYTES_PER_CYCLE as u64)
+}
+
 impl Segment {
     /// Decompose an executed layer/shard result into bus-model terms.
+    /// Each portion's latency term is recovered as its cycles minus its
+    /// full-bandwidth transfer time, so `fill(1)`/`serial(1)`/
+    /// `steady(1)` reproduce the executor's portion cycles exactly and
+    /// `busy(1) == part` — the 1-contender boundary stays bit-identical
+    /// to private-bus pricing.
     pub fn of_layer(r: &LayerResult) -> Self {
-        let bytes = r.io_in + r.io_out;
+        let e = EXT_BYTES_PER_CYCLE as u64;
+        let fill_lat = r.dma_fill_cycles.saturating_sub(r.dma_fill_bytes.div_ceil(e));
+        let serial_lat = r.dma_serial_cycles.saturating_sub(r.dma_serial_bytes.div_ceil(e));
+        let bytes = (r.io_in + r.io_out).saturating_sub(r.dma_fill_bytes + r.dma_serial_bytes);
+        let steady_cycles =
+            r.dma_cycles.saturating_sub(r.dma_fill_cycles + r.dma_serial_cycles);
         Self {
             compute: r.compute_cycles,
             bytes,
-            lat: r.dma_cycles.saturating_sub(bytes.div_ceil(EXT_BYTES_PER_CYCLE as u64)),
+            lat: steady_cycles.saturating_sub(bytes.div_ceil(e)),
+            fill_bytes: r.dma_fill_bytes,
+            fill_lat,
+            serial_bytes: r.dma_serial_bytes,
+            serial_lat,
             part: r.cycles,
         }
     }
 
-    /// Transfer-plus-latency DMA cycles when `d` cores contend.
-    fn dma(&self, d: u64) -> u64 {
-        self.lat + (self.bytes * d).div_ceil(EXT_BYTES_PER_CYCLE as u64)
+    /// Contended fill cycles (serialized ahead of the unit's compute).
+    fn fill(&self, d: u64) -> u64 {
+        portion(self.fill_bytes, self.fill_lat, d)
     }
 
-    /// Occupied cycles when `d` cores contend for the bus: the private
-    /// result, extended only if the contended transfer outgrows it.
+    /// Contended serialized-stream cycles (never overlapped).
+    fn serial(&self, d: u64) -> u64 {
+        portion(self.serial_bytes, self.serial_lat, d)
+    }
+
+    /// Contended steady-stream cycles (overlappable with compute).
+    fn steady(&self, d: u64) -> u64 {
+        portion(self.bytes, self.lat, d)
+    }
+
+    /// Transfer-plus-latency DMA cycles when `d` cores contend.
+    fn dma(&self, d: u64) -> u64 {
+        self.fill(d) + self.steady(d) + self.serial(d)
+    }
+
+    /// Occupied cycles when `d` cores contend for the bus: the
+    /// serialized portions always pay their contended price, and the
+    /// overlapped remainder of the private result is extended only if
+    /// the contended steady stream outgrows it. At `d = 1` this is
+    /// exactly `part`; with no fill/serial portions it degenerates to
+    /// `part.max(dma(d))`.
     fn busy(&self, d: u64) -> u64 {
-        self.part.max(self.dma(d))
+        let overlapped = self.part.saturating_sub(self.fill(1) + self.serial(1));
+        self.fill(d) + self.serial(d) + overlapped.max(self.steady(d))
     }
 }
 
@@ -98,14 +150,21 @@ impl Segment {
 /// them during the current interval), so the double-buffered DMA stream
 /// never drains at layer boundaries: filters and input bands for the
 /// next (layer, frame) prefetch under the current compute. The stage
-/// interval is therefore `max(Σ compute, Σ dma)` across the whole stage
-/// — unlike a frame fan-out core, whose next layer's *input* is the
-/// output it is still computing (a true dependency), pinning it to the
-/// per-layer `max(compute, dma)` sum.
+/// interval is therefore `Σ serial + max(Σ compute, Σ fill+steady)`
+/// across the whole stage: fill portions overlap across frames in
+/// steady state (the next frame's first stream prefetches under the
+/// current frame's tail compute, though its bytes still press the
+/// bus), while a `serial` portion — a stream whose DM cannot hold a
+/// rotation shadow — drains the pipeline every frame by construction
+/// and never hides under any compute. Unlike a frame fan-out core,
+/// whose next layer's *input* is the output it is still computing (a
+/// true dependency), a stage is not pinned to the per-layer overlap
+/// sum.
 pub(crate) fn stage_interval(segs: &[Segment], d: u64) -> u64 {
     let compute: u64 = segs.iter().map(|s| s.compute).sum();
-    let dma: u64 = segs.iter().map(|s| s.dma(d)).sum();
-    compute.max(dma)
+    let overlappable: u64 = segs.iter().map(|s| s.fill(d) + s.steady(d)).sum();
+    let serial: u64 = segs.iter().map(|s| s.serial(d)).sum();
+    serial + compute.max(overlappable)
 }
 
 /// A stage's *first* pass over a frame when `d` cores contend: the
@@ -236,9 +295,16 @@ mod tests {
 
     const E: u64 = EXT_BYTES_PER_CYCLE as u64;
 
-    /// A latency-free segment: `part` is the executor's overlap max.
+    /// A latency-free, fully-steady segment (no fill or serial
+    /// portion): `part` is the executor's overlap max.
     fn seg(compute: u64, bytes: u64) -> Segment {
-        Segment { compute, bytes, lat: 0, part: compute.max(bytes.div_ceil(E)) }
+        Segment {
+            compute,
+            bytes,
+            lat: 0,
+            part: compute.max(bytes.div_ceil(E)),
+            ..Default::default()
+        }
     }
 
     #[test]
@@ -350,7 +416,7 @@ mod tests {
 
     #[test]
     fn latency_term_does_not_scale() {
-        let s = Segment { compute: 0, bytes: 10 * E, lat: 400, part: 410 };
+        let s = Segment { compute: 0, bytes: 10 * E, lat: 400, part: 410, ..Default::default() };
         let cores = vec![vec![s], vec![s]];
         let acct = core_busy(&cores, BusModel::Shared);
         // transfer doubles (10 -> 20); the 400-cycle latency term doesn't
@@ -465,6 +531,55 @@ mod tests {
         let acct = core_busy(&cores, BusModel::Shared);
         assert_eq!(acct.contenders, 1);
         assert_eq!(acct.busy[1], 0);
+    }
+
+    #[test]
+    fn of_layer_decomposes_fill_steady_and_serial_portions() {
+        // rotated layer: 1000E bytes over 5 requests, a 100E/1-request
+        // fill carved out, the steady remainder hidden under compute
+        let rot = LayerResult {
+            compute_cycles: 5000,
+            io_in: 900 * E,
+            io_out: 100 * E,
+            dma_fill_bytes: 100 * E,
+            dma_fill_cycles: 100 + 40,
+            dma_cycles: 1000 + 5 * 40,
+            cycles: 5140, // fill + compute (steady stream fully hidden)
+            ..Default::default()
+        };
+        let s = Segment::of_layer(&rot);
+        assert_eq!((s.fill_bytes, s.fill_lat), (100 * E, 40));
+        assert_eq!((s.bytes, s.lat), (900 * E, 160));
+        assert_eq!((s.serial_bytes, s.serial_lat), (0, 0));
+        assert_eq!(s.busy(1), 5140, "d=1 must reproduce the private result exactly");
+        assert_eq!(s.dma(1), 1200);
+        // contention scales the fill's transfer term too (its bytes
+        // press the bus) but the overlapped compute absorbs the
+        // doubled steady stream
+        assert_eq!(s.busy(2), (40 + 200) + 5000);
+        assert_eq!(stage_interval(&[s], 1), 5000 + 0);
+
+        // un-rotatable layer: the whole 2000E/3-request stream serial
+        let ser = LayerResult {
+            compute_cycles: 500,
+            io_in: 2000 * E,
+            dma_serial_bytes: 2000 * E,
+            dma_serial_cycles: 2000 + 120,
+            dma_cycles: 2000 + 120,
+            cycles: 500 + 2120,
+            ..Default::default()
+        };
+        let t = Segment::of_layer(&ser);
+        assert_eq!((t.serial_bytes, t.serial_lat), (2000 * E, 120));
+        assert_eq!((t.bytes, t.lat, t.fill_bytes), (0, 0, 0));
+        assert_eq!(t.busy(1), 2620);
+        // the serialized stream never hides under stage compute: the
+        // interval strictly exceeds the old max-of-sums overlap
+        assert_eq!(stage_interval(&[t], 1), 2120 + 500);
+        assert!(stage_interval(&[t], 1) > 500u64.max(2120));
+        assert_eq!(t.busy(2), (120 + 4000) + 500);
+        // mixed stage: serial portions add, the rest overlaps
+        assert_eq!(stage_interval(&[s, t], 1), 2120 + 5500u64.max(1200));
     }
 
     #[test]

@@ -227,6 +227,13 @@ pub struct EngineConfig {
     /// counts and stats are bit-identical either way (locked by
     /// `tests/plan_cache.rs`).
     pub plan_cache: bool,
+    /// DMA double buffering (default on): plans allocate a DM rotation
+    /// shadow where capacity permits, so steady-state iterations
+    /// overlap compute with the next iteration's stream. `false` is
+    /// the honest no-overlap baseline (CLI: `--no-rotation`). Outputs
+    /// are bit-identical either way — only cycles move (locked by
+    /// `tests/rotation_identity.rs`).
+    pub dma_rotation: bool,
 }
 
 impl Default for EngineConfig {
@@ -243,6 +250,7 @@ impl Default for EngineConfig {
             seed: 0xC0FFEE,
             ext_capacity: 1 << 24,
             plan_cache: true,
+            dma_rotation: true,
         }
     }
 }
@@ -310,6 +318,12 @@ impl EngineConfig {
         self
     }
 
+    /// Enable/disable DMA double buffering (see the field doc).
+    pub fn dma_rotation(mut self, on: bool) -> Self {
+        self.dma_rotation = on;
+        self
+    }
+
     /// Finish the builder: allocate the core pool and return the engine.
     pub fn build(self) -> Engine {
         Engine::new(self)
@@ -322,6 +336,7 @@ impl EngineConfig {
                 gate_bits: self.gate_bits,
                 cores: self.cores,
                 batch: self.batch,
+                rotation: self.dma_rotation,
             },
             shard: self.shard,
             bus: self.bus,
@@ -1860,29 +1875,38 @@ mod tests {
         );
         assert_eq!(pr.steady_interval_cycles, steady, "steady interval reads the warm frame");
 
-        // contrast: a conv stage streams identically every frame
+        // contrast: a conv stage has no resident parameters, so its
+        // steady frames can only beat the fill frame through pipeline
+        // prefetch — the rotated plan's first-iteration fill hides
+        // under the previous frame's tail compute in steady state —
+        // never through residency elision (its byte stream repeats in
+        // full every frame)
         let conv_net = vec![NetLayer::Conv(ConvLayer::new("c", 4, 12, 12, 16, 3, 3, 1, 1, 1))];
         let conv_inputs: Vec<Vec<i16>> = (0..2).map(|_| vec![0i16; 4 * 12 * 12]).collect();
         let cr = cfg().pool_mode(PoolMode::Pipelined).build()
             .run_streaming("conv", &conv_net, &conv_inputs)
             .unwrap();
-        assert_eq!(
-            cr.makespan_cycles - cr.fill_cycles,
-            cr.fill_cycles,
-            "a non-resident stage's steady frame must price like its fill frame"
+        let conv_steady = cr.makespan_cycles - cr.fill_cycles;
+        assert!(
+            conv_steady <= cr.fill_cycles,
+            "a non-resident stage's steady frame {conv_steady} cannot exceed its fill frame {}",
+            cr.fill_cycles
         );
+        assert_eq!(cr.steady_interval_cycles, conv_steady, "interval reads the warm frame");
 
         // and a stage the FC does NOT own alone gets no residency: the
         // conv's per-frame staging would overwrite the tiles in DM, so
         // the steady interval must equal the full-stream overlap value
-        // reconstructable from the solo per-layer results
-        let shared_fc = FcLayer { in_features: 16 * 8 * 8, ..fc.clone() };
+        // reconstructable from the solo per-layer results (512 input
+        // features — small enough that the weight tiles fit beside the
+        // rotated working map, so residency WOULD apply on a solo stage)
+        let shared_fc = FcLayer { in_features: 8 * 8 * 8, ..fc.clone() };
         assert!(
             LayerOp::resident_param_stream(&shared_fc).0 > 0,
             "the shared-stage FC must be resident-sized for this test to bite"
         );
         let shared_net = vec![
-            NetLayer::Conv(ConvLayer::new("c", 4, 8, 8, 16, 3, 3, 1, 1, 1)),
+            NetLayer::Conv(ConvLayer::new("c", 4, 8, 8, 8, 3, 3, 1, 1, 1)),
             NetLayer::Fc(shared_fc),
         ];
         let shared_inputs: Vec<Vec<i16>> = (0..2).map(|_| vec![3i16; 4 * 8 * 8]).collect();

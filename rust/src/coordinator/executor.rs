@@ -62,11 +62,18 @@ pub struct ExecOptions {
     /// Frames per batched run (1 = latency mode). Ignored by the
     /// single-layer executors.
     pub batch: usize,
+    /// DMA double buffering: when `true` (default) plans allocate a
+    /// rotation shadow where DM capacity permits, so steady-state
+    /// iterations overlap compute with the next iteration's stream.
+    /// `false` is the honest no-overlap baseline (every stream
+    /// serializes). Outputs are identical either way — only cycles
+    /// move — pinned by `tests/rotation_identity.rs`.
+    pub rotation: bool,
 }
 
 impl Default for ExecOptions {
     fn default() -> Self {
-        Self { mode: ExecMode::FullCycle, gate_bits: 16, cores: 1, batch: 1 }
+        Self { mode: ExecMode::FullCycle, gate_bits: 16, cores: 1, batch: 1, rotation: true }
     }
 }
 
@@ -139,6 +146,71 @@ pub(crate) fn dma_cycles(bytes: u64, requests: u64) -> u64 {
     bytes.div_ceil(EXT_BYTES_PER_CYCLE as u64) + requests * EXT_LATENCY_CYCLES
 }
 
+/// One (tile, slice, band) iteration of a layer's staging schedule:
+/// the compute cycles its rows cost and the off-chip stream (bytes,
+/// descriptors) that must land in DM before those rows can run.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct IterRec {
+    pub compute: u64,
+    pub bytes: u64,
+    pub reqs: u64,
+}
+
+/// A layer's DMA timeline under the feasibility-gated overlap model.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct DmaTimeline {
+    /// Total layer cycles (compute + exposed DMA).
+    pub cycles: u64,
+    /// Total DMA transfer cycles (Σ per-iteration streams).
+    pub dma_cycles: u64,
+    /// Serialized first-iteration fill (rotated plans only).
+    pub fill_bytes: u64,
+    pub fill_cycles: u64,
+    /// Never-overlapped stream (un-rotatable plans only).
+    pub serial_bytes: u64,
+    pub serial_cycles: u64,
+}
+
+/// Price a layer's iteration schedule. With a rotation shadow
+/// (`rotated`), iteration `i`'s compute overlaps iteration `i+1`'s
+/// stream into the inactive buffer pair — only the first stream is
+/// exposed (`fill`), and every steady iteration costs
+/// `max(compute_i, dma_{i+1})`. Without one, every stream serializes
+/// against compute: `Σ (compute_i + dma_i)`. Either way
+/// `cycles ≥ max(Σ compute, Σ dma)` — overlap can hide latency, never
+/// create bandwidth.
+pub(crate) fn price_iters(iters: &[IterRec], rotated: bool) -> DmaTimeline {
+    let d: Vec<u64> = iters.iter().map(|it| dma_cycles(it.bytes, it.reqs)).collect();
+    let dma: u64 = d.iter().sum();
+    let compute: u64 = iters.iter().map(|it| it.compute).sum();
+    if iters.is_empty() {
+        return DmaTimeline::default();
+    }
+    if rotated {
+        let mut cycles = d[0];
+        for (i, it) in iters.iter().enumerate() {
+            cycles += it.compute.max(d.get(i + 1).copied().unwrap_or(0));
+        }
+        DmaTimeline {
+            cycles,
+            dma_cycles: dma,
+            fill_bytes: iters[0].bytes,
+            fill_cycles: d[0],
+            serial_bytes: 0,
+            serial_cycles: 0,
+        }
+    } else {
+        DmaTimeline {
+            cycles: compute + dma,
+            dma_cycles: dma,
+            fill_bytes: 0,
+            fill_cycles: 0,
+            serial_bytes: iters.iter().map(|it| it.bytes).sum(),
+            serial_cycles: dma,
+        }
+    }
+}
+
 /// Run a (possibly grouped) conv layer. `x`: (ic, ih, iw), `w`:
 /// (oc, ic/groups, fh, fw), `b`: (oc,). Returns metrics and (in
 /// FullCycle mode) the output tensor (oc, oh, ow).
@@ -153,12 +225,12 @@ pub(crate) fn conv_layer(
 ) -> Result<LayerResult, ExecError> {
     let g = layer.groups;
     if g == 1 {
-        let cc = ctx.cache.conv(layer, opts.gate_bits)?;
+        let cc = ctx.cache.conv(layer, opts.gate_bits, opts.rotation)?;
         return run_dense(cpu, &cc, layer.name, x, w, b, opts, ctx.scratch);
     }
     let lg = layer.per_group();
     // one compiled artifact serves every group (identical dense shape)
-    let cc = ctx.cache.conv(&lg, opts.gate_bits)?;
+    let cc = ctx.cache.conv(&lg, opts.gate_bits, opts.rotation)?;
     let (icg, ocg) = (lg.ic, lg.oc);
     let ohw = layer.oh() * layer.ow();
     let mut total = LayerResult { name: layer.name, ..Default::default() };
@@ -177,6 +249,10 @@ pub(crate) fn conv_layer(
         total.cycles += r.cycles;
         total.compute_cycles += r.compute_cycles;
         total.dma_cycles += r.dma_cycles;
+        total.dma_fill_bytes += r.dma_fill_bytes;
+        total.dma_fill_cycles += r.dma_fill_cycles;
+        total.dma_serial_bytes += r.dma_serial_bytes;
+        total.dma_serial_cycles += r.dma_serial_cycles;
         total.macs += r.macs;
         total.io_in += r.io_in;
         total.io_out += r.io_out;
@@ -417,12 +493,28 @@ fn run_dense(
         Ok(())
     };
 
+    // Per-iteration timeline record: one entry per (tile, slice, band),
+    // in schedule order. Compute and byte charges are captured as
+    // running deltas of the accumulators, so staging charges stay
+    // exactly where the accounting above puts them (the band charge
+    // lands in the tile-0 iteration under BandOuter, the filter charge
+    // in the band-0 iteration under TileOuter). Each iteration is one
+    // descriptor; the per-tile readback descriptor rides the tile's
+    // last (slice, band) iteration — Σ reqs equals the pre-timeline
+    // whole-layer request count.
+    let mut iters: Vec<IterRec> =
+        Vec::with_capacity(plan.n_tiles * plan.m * plan.n_bands);
+    let iter_reqs = |mi: usize, bi: usize| -> u64 {
+        1 + u64::from(mi + 1 == plan.m && bi + 1 == plan.n_bands)
+    };
+
     if band_outer {
         // input streamed once per slice; filters re-loaded per band
         for mi in 0..plan.m {
             let key = cc.task_key(mi);
             for bi in 0..plan.n_bands {
                 let oh0 = bi * plan.band_rows;
+                let mut io0 = res.io_in + res.io_out;
                 if live(&acc, &key) {
                     if !xp_ready {
                         stage::pad_input_into(l, x, &mut scratch.xp);
@@ -433,6 +525,7 @@ fn run_dense(
                 }
                 res.io_in += band_in_bytes(mi, bi);
                 for tile in 0..plan.n_tiles {
+                    let c0 = res.compute_cycles;
                     if live(&acc, &key) {
                         stage_filters(cpu, cc, w, b, tile, mi, &mut scratch.filt);
                     }
@@ -441,6 +534,12 @@ fn run_dense(
                         cpu, &mut res, &mut acc, &mut raw, &mut cursor, &mut psum, &mut out,
                         &mut scratch.row, tile, mi, bi,
                     )?;
+                    iters.push(IterRec {
+                        compute: res.compute_cycles - c0,
+                        bytes: res.io_in + res.io_out - io0,
+                        reqs: iter_reqs(mi, bi),
+                    });
+                    io0 = res.io_in + res.io_out;
                 }
             }
         }
@@ -449,12 +548,14 @@ fn run_dense(
         for tile in 0..plan.n_tiles {
             for mi in 0..plan.m {
                 let key = cc.task_key(mi);
+                let mut io0 = res.io_in + res.io_out;
                 if live(&acc, &key) {
                     stage_filters(cpu, cc, w, b, tile, mi, &mut scratch.filt);
                 }
                 res.io_in += filt_bytes(mi);
                 for bi in 0..plan.n_bands {
                     let oh0 = bi * plan.band_rows;
+                    let c0 = res.compute_cycles;
                     if live(&acc, &key) {
                         if !xp_ready {
                             stage::pad_input_into(l, x, &mut scratch.xp);
@@ -468,6 +569,12 @@ fn run_dense(
                         cpu, &mut res, &mut acc, &mut raw, &mut cursor, &mut psum, &mut out,
                         &mut scratch.row, tile, mi, bi,
                     )?;
+                    iters.push(IterRec {
+                        compute: res.compute_cycles - c0,
+                        bytes: res.io_in + res.io_out - io0,
+                        reqs: iter_reqs(mi, bi),
+                    });
+                    io0 = res.io_in + res.io_out;
                 }
             }
         }
@@ -475,15 +582,28 @@ fn run_dense(
 
     // Precision-gated off-chip transfers are packed: at <=8 effective
     // bits, tensors move at 1 byte/element (Table II footnote: values
-    // are reported "with optimized word width").
+    // are reported "with optimized word width"). Every per-iteration
+    // byte charge is a sum of even row quantities, so halving each
+    // iteration tiles the halved totals exactly.
     if opts.gate_bits <= 8 {
         res.io_in /= 2;
         res.io_out /= 2;
+        for it in &mut iters {
+            it.bytes /= 2;
+        }
     }
-    // DMA overlap: one double-buffered stream alongside compute.
-    let reqs = (plan.n_tiles * plan.m * plan.n_bands) as u64 + plan.n_tiles as u64;
-    res.dma_cycles = dma_cycles(res.io_in + res.io_out, reqs);
-    res.cycles = res.compute_cycles.max(res.dma_cycles);
+    // DMA timeline: when the plan carries a rotation shadow
+    // (`plan.rot`), iteration i's compute overlaps iteration i+1's
+    // stream into the inactive buffer pair and only the first stream
+    // serializes (fill); without one, DM cannot hold the next stream
+    // alongside the live one, so every stream serializes honestly.
+    let t = price_iters(&iters, plan.rot.is_some());
+    res.dma_cycles = t.dma_cycles;
+    res.dma_fill_bytes = t.fill_bytes;
+    res.dma_fill_cycles = t.fill_cycles;
+    res.dma_serial_bytes = t.serial_bytes;
+    res.dma_serial_cycles = t.serial_cycles;
+    res.cycles = t.cycles;
     if full {
         res.out = out;
     } else if warm.is_none() {
@@ -530,7 +650,7 @@ pub(crate) fn pool_layer(
     opts: ExecOptions,
     ctx: &mut ExecCtx<'_>,
 ) -> Result<LayerResult, ExecError> {
-    let cp = ctx.cache.pool(layer)?;
+    let cp = ctx.cache.pool(layer, opts.rotation)?;
     let plan = &cp.plan;
     let (oh, ow) = (layer.oh(), layer.ow());
     let full = opts.mode == ExecMode::FullCycle;
@@ -541,59 +661,76 @@ pub(crate) fn pool_layer(
     // (and, via the compiled artifact, every later analytic pass)
     let mut analytic: Option<(u64, CoreStats)> =
         if full { None } else { cp.analytic.get().copied() };
+    // one iteration = one (tile, output row): its window rows stream
+    // in, its output row streams out, one descriptor each way folded
+    // into one request (matching the pre-timeline request count)
+    let iter_bytes = ((layer.size * layer.iw + ow) * 32) as u64;
+    let mut iters: Vec<IterRec> = Vec::with_capacity(n_tiles * oh);
 
     for tile in 0..n_tiles {
         for oy in 0..oh {
-            if !full {
-                if let Some((cyc, stats)) = &analytic {
-                    res.compute_cycles += cyc;
-                    res.stats = add_stats(&res.stats, stats);
-                    continue;
-                }
-            }
-            // stage `size` input rows as pixel-major 16-ch vectors
-            for r in 0..layer.size {
-                let y = oy * layer.stride + r;
-                for px in 0..layer.iw {
-                    let mut v = [0i16; 16];
-                    for (cl, vv) in v.iter_mut().enumerate() {
-                        let c = tile * 16 + cl;
-                        if c < layer.ic {
-                            *vv = x[(c * layer.ih + y) * layer.iw + px];
+            let c0 = res.compute_cycles;
+            let cached = if full { None } else { analytic };
+            if let Some((cyc, stats)) = &cached {
+                res.compute_cycles += cyc;
+                res.stats = add_stats(&res.stats, stats);
+            } else {
+                // stage `size` input rows as pixel-major 16-ch vectors
+                for r in 0..layer.size {
+                    let y = oy * layer.stride + r;
+                    for px in 0..layer.iw {
+                        let mut v = [0i16; 16];
+                        for (cl, vv) in v.iter_mut().enumerate() {
+                            let c = tile * 16 + cl;
+                            if c < layer.ic {
+                                *vv = x[(c * layer.ih + y) * layer.iw + px];
+                            }
                         }
-                    }
-                    cpu.mem
-                        .dm
-                        .poke_i16_slice(plan.dm_input + r * plan.in_row_bytes + px * 32, &v);
-                }
-            }
-            cpu.regs.set_r(SReg(2), plan.dm_input as i32);
-            cpu.regs.set_r(SReg(4), plan.dm_out as i32);
-            let stats = cpu.run(&cp.pm)?;
-            res.compute_cycles += stats.cycles;
-            if !full {
-                analytic = Some((stats.cycles, stats));
-                let _ = cp.analytic.set((stats.cycles, stats));
-            }
-            res.stats = add_stats(&res.stats, &stats);
-            if full {
-                for px in 0..ow {
-                    let v = cpu.mem.dm.peek_i16_slice(plan.dm_out + px * 32, 16);
-                    for cl in 0..16 {
-                        let c = tile * 16 + cl;
-                        if c < layer.ic {
-                            out[(c * oh + oy) * ow + px] = v[cl];
-                        }
+                        cpu.mem
+                            .dm
+                            .poke_i16_slice(plan.dm_input + r * plan.in_row_bytes + px * 32, &v);
                     }
                 }
+                cpu.regs.set_r(SReg(2), plan.dm_input as i32);
+                cpu.regs.set_r(SReg(4), plan.dm_out as i32);
+                let stats = cpu.run(&cp.pm)?;
+                res.compute_cycles += stats.cycles;
+                if !full {
+                    analytic = Some((stats.cycles, stats));
+                    let _ = cp.analytic.set((stats.cycles, stats));
+                }
+                res.stats = add_stats(&res.stats, &stats);
+                if full {
+                    for px in 0..ow {
+                        let v = cpu.mem.dm.peek_i16_slice(plan.dm_out + px * 32, 16);
+                        for cl in 0..16 {
+                            let c = tile * 16 + cl;
+                            if c < layer.ic {
+                                out[(c * oh + oy) * ow + px] = v[cl];
+                            }
+                        }
+                    }
+                }
             }
+            iters.push(IterRec {
+                compute: res.compute_cycles - c0,
+                bytes: iter_bytes,
+                reqs: 1,
+            });
         }
     }
     // I/O: rows in (with window overlap), rows out
     res.io_in = (n_tiles * oh * layer.size * layer.iw * 32) as u64;
     res.io_out = (n_tiles * oh * ow * 32) as u64;
-    res.dma_cycles = dma_cycles(res.io_in + res.io_out, (n_tiles * oh) as u64);
-    res.cycles = res.compute_cycles.max(res.dma_cycles);
+    // DMA timeline: pool windows are tiny, so every benchmark pool
+    // rotates — but the feasibility gate is the plan's, not assumed
+    let t = price_iters(&iters, plan.rot.is_some());
+    res.dma_cycles = t.dma_cycles;
+    res.dma_fill_bytes = t.fill_bytes;
+    res.dma_fill_cycles = t.fill_cycles;
+    res.dma_serial_bytes = t.serial_bytes;
+    res.dma_serial_cycles = t.serial_cycles;
+    res.cycles = t.cycles;
     if full {
         res.out = out;
     }
@@ -853,7 +990,7 @@ mod tests {
             let mut cpu = Cpu::new(1 << 22);
             conv_layer(&mut cpu, &l, &x, &w, &b, opts, &mut ExecCtx::new(&cache, &mut scratch))
                 .unwrap();
-            let cc = cache.conv(&l, opts.gate_bits).unwrap();
+            let cc = cache.conv(&l, opts.gate_bits, opts.rotation).unwrap();
             let profile = cc.analytic.get().expect("cold pass must publish a profile");
             let mut checked = 0usize;
             let mut rows_seen = std::collections::HashSet::new();
@@ -927,6 +1064,97 @@ mod tests {
         assert_eq!(dma_cycles(7 * bus + 5, 3), 8 + 3 * lat);
         // requests scale the latency term linearly
         assert_eq!(dma_cycles(bus, 10), 1 + 10 * lat);
+    }
+
+    #[test]
+    fn price_iters_is_exact_in_both_directions() {
+        let iters = [
+            IterRec { compute: 100, bytes: 80, reqs: 1 },
+            IterRec { compute: 50, bytes: 800, reqs: 1 },
+            IterRec { compute: 200, bytes: 8, reqs: 2 },
+        ];
+        let d: Vec<u64> = iters.iter().map(|i| dma_cycles(i.bytes, i.reqs)).collect();
+        assert_eq!(d, [50, 140, 81]);
+        // un-rotatable: every stream serializes against compute
+        let ser = price_iters(&iters, false);
+        assert_eq!(ser.cycles, 350 + 271);
+        assert_eq!(ser.dma_cycles, 271);
+        assert_eq!((ser.serial_bytes, ser.serial_cycles), (888, 271));
+        assert_eq!((ser.fill_bytes, ser.fill_cycles), (0, 0));
+        // rotated: serialized fill, then max(compute_i, dma_{i+1})
+        let rot = price_iters(&iters, true);
+        assert_eq!(rot.cycles, 50 + 140 + 81 + 200);
+        assert_eq!(rot.dma_cycles, 271);
+        assert_eq!((rot.fill_bytes, rot.fill_cycles), (80, 50));
+        assert_eq!((rot.serial_bytes, rot.serial_cycles), (0, 0));
+        // overlap hides latency, never bandwidth
+        assert!(rot.cycles >= 350 && rot.cycles >= 271);
+        assert!(rot.cycles <= ser.cycles);
+        assert_eq!(price_iters(&[], true).cycles, 0);
+        assert_eq!(price_iters(&[], false).cycles, 0);
+    }
+
+    #[test]
+    fn rotated_conv_pays_a_fill_then_overlaps_steady_state() {
+        let l = ConvLayer::new("va", 4, 24, 24, 16, 3, 3, 1, 1, 1);
+        assert!(layout::plan(&l).unwrap().rot.is_some());
+        let mut rng = XorShift::new(41);
+        let x = rng.i16_vec(l.ic * l.ih * l.iw, -2000, 2000);
+        let w = rng.i16_vec(l.oc * l.ic * 9, -256, 256);
+        let b = rng.i32_vec(l.oc, -500, 500);
+        let mut cpu = Cpu::new(1 << 20);
+        let r = run_conv(&mut cpu, &l, &x, &w, &b, ExecOptions::default());
+        assert!(r.dma_fill_bytes > 0 && r.dma_fill_cycles > 0, "fill must be strictly > 0");
+        assert_eq!((r.dma_serial_bytes, r.dma_serial_cycles), (0, 0));
+        // the fill is serialized ahead of compute; overlap never hides bandwidth
+        assert!(r.cycles >= r.compute_cycles + r.dma_fill_cycles);
+        assert!(r.cycles >= r.dma_cycles);
+        // knob off: identical outputs, honestly serialized stream
+        let mut cpu2 = Cpu::new(1 << 20);
+        let off = ExecOptions { rotation: false, ..Default::default() };
+        let ro = run_conv(&mut cpu2, &l, &x, &w, &b, off);
+        assert_eq!(ro.out, r.out, "rotation may move cycles, never values");
+        assert_eq!(ro.cycles, ro.compute_cycles + ro.dma_cycles);
+        assert_eq!(ro.dma_serial_cycles, ro.dma_cycles);
+        assert_eq!((ro.dma_fill_bytes, ro.dma_fill_cycles), (0, 0));
+    }
+
+    #[test]
+    fn unrotatable_conv_serializes_its_stream() {
+        // ic=1 (the slice cannot shrink) and oh=1 (the band cannot
+        // shrink): the base footprint fits DM but no shadow does, so
+        // the plan cannot rotate even with the knob on.
+        let l = ConvLayer::new("tall", 1, 31, 350, 16, 31, 1, 1, 0, 1);
+        assert!(layout::plan(&l).unwrap().rot.is_none());
+        let mut rng = XorShift::new(43);
+        let x = rng.i16_vec(l.ic * l.ih * l.iw, -500, 500);
+        let w = rng.i16_vec(l.oc * l.ic * l.fh * l.fw, -100, 100);
+        let b = rng.i32_vec(l.oc, -100, 100);
+        let mut cpu = Cpu::new(1 << 22);
+        let opts = ExecOptions { mode: ExecMode::TileAnalytic, ..Default::default() };
+        let r = run_conv(&mut cpu, &l, &x, &w, &b, opts);
+        assert!(r.dma_cycles > 0);
+        assert_eq!(r.cycles, r.compute_cycles + r.dma_cycles);
+        assert_eq!(r.dma_serial_cycles, r.dma_cycles);
+        assert_eq!(r.dma_serial_bytes, r.io_total());
+        assert_eq!((r.dma_fill_bytes, r.dma_fill_cycles), (0, 0));
+    }
+
+    #[test]
+    fn pool_stream_rotates_and_fills() {
+        let l = PoolLayer { name: "p", ic: 24, ih: 13, iw: 13, size: 3, stride: 2 };
+        let mut rng = XorShift::new(44);
+        let x = rng.i16_vec(l.ic * l.ih * l.iw, -30000, 30000);
+        let mut cpu = Cpu::new(1 << 20);
+        let r = run_pool(&mut cpu, &l, &x, ExecOptions::default());
+        assert!(r.dma_fill_cycles > 0);
+        assert_eq!((r.dma_serial_bytes, r.dma_serial_cycles), (0, 0));
+        assert!(r.cycles >= r.compute_cycles + r.dma_fill_cycles);
+        let mut cpu2 = Cpu::new(1 << 20);
+        let off = ExecOptions { rotation: false, ..Default::default() };
+        let ro = run_pool(&mut cpu2, &l, &x, off);
+        assert_eq!(ro.out, r.out);
+        assert_eq!(ro.cycles, ro.compute_cycles + ro.dma_cycles);
     }
 
     #[test]

@@ -13,12 +13,25 @@ pub struct LayerResult {
     /// Layer name (model tables carry static names; borrowing them
     /// keeps the per-call result path allocation-free).
     pub name: &'static str,
-    /// Total cycles including DMA-bound segments (max(compute, dma)).
+    /// Total cycles under the per-iteration fill/steady DMA timeline:
+    /// a rotated (double-buffered) plan pays a serialized first-stream
+    /// fill then `max(compute, next stream)` per iteration; an
+    /// un-rotatable plan pays `compute + stream` per iteration.
     pub cycles: u64,
     /// Pure compute cycles on the core.
     pub compute_cycles: u64,
-    /// Analytic DMA transfer cycles (overlapped with compute).
+    /// Analytic DMA transfer cycles (sum over per-iteration streams).
     pub dma_cycles: u64,
+    /// Bytes of the serialized first-iteration fill (rotated plans;
+    /// 0 when the layer's stream serializes instead).
+    pub dma_fill_bytes: u64,
+    /// Cycles of the serialized first-iteration fill.
+    pub dma_fill_cycles: u64,
+    /// Bytes of a stream that cannot be double-buffered and therefore
+    /// never overlaps compute (un-rotatable plans; 0 when rotated).
+    pub dma_serial_bytes: u64,
+    /// Cycles of the serialized (never-overlapped) stream.
+    pub dma_serial_cycles: u64,
     /// Useful MACs (the layer's arithmetic, not garbage lanes).
     pub macs: u64,
     /// Off-chip bytes read (weights, IFMaps, PSums back in).
@@ -160,6 +173,9 @@ impl NetworkResult {
             t.cycles += r.cycles;
             t.macs += r.macs;
             t.io_bytes += r.io_total();
+            if r.macs > 0 {
+                t.busy_core_cycles += r.cycles * r.parallel_cores() as u64;
+            }
         }
         out
     }
@@ -179,11 +195,26 @@ pub struct KindTotal {
     pub macs: u64,
     /// Summed off-chip bytes.
     pub io_bytes: u64,
+    /// Σ cycles × parallel cores over the kind's MAC-carrying layers —
+    /// the denominator of the kind's aggregate utilization.
+    pub busy_core_cycles: u64,
 }
 
 impl KindTotal {
     pub fn time_ms(&self) -> f64 {
         self.cycles as f64 / crate::CLOCK_HZ as f64 * 1e3
+    }
+
+    /// Aggregate ALU utilization of the kind's MAC-carrying layers:
+    /// ideal cycles over occupied core-cycles (MAC-weighted, same
+    /// definition as [`NetworkResult::utilization`] restricted to the
+    /// kind). 0.0 for kinds without MACs (pool).
+    pub fn utilization(&self) -> f64 {
+        if self.busy_core_cycles == 0 {
+            return 0.0;
+        }
+        let ideal = self.macs as f64 / crate::PEAK_MACS_PER_CYCLE as f64;
+        ideal / self.busy_core_cycles as f64
     }
 }
 

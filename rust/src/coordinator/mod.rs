@@ -1,14 +1,30 @@
 //! The coordinator: schedules whole CNN layers onto the core, per the
 //! Fig. 2 dataflow — output-channel tiles × input-depth slices × row
-//! bands, with PSum spilling and double-buffered DMA streaming.
+//! bands, with PSum spilling and feasibility-gated DMA double
+//! buffering.
 //!
 //! The coordinator is the paper's "software" half: on the silicon ASIP
 //! this logic is compiled C code running in slot 0 between kernels; here
 //! it is host rust that (a) stages tensors into DM (untimed pokes — the
-//! transfer *time* is charged through the analytic DMA overlap model,
+//! transfer *time* is charged through the per-iteration DMA timeline,
 //! and the *bytes* through the off-chip I/O counters), (b) presets the
 //! task ABI registers, (c) runs the generated kernels on the
 //! cycle-accurate core, and (d) aggregates metrics.
+//!
+//! DMA double buffering is **feasibility-gated**, not assumed: the
+//! layout planner ([`crate::codegen::layout`]) only allocates a
+//! rotation region (`ConvPlan::rot` / `PoolPlan::rot`) when a second
+//! filter-block + input-band slot actually fits in the 128 KiB DM
+//! beside the working set. When it fits, the executor prices the layer
+//! as a serialized **fill** for iteration 0 followed by a **steady**
+//! state of `Σ_iter max(compute_iter, dma_next_iter)`; when it does not
+//! fit, the stream is honestly serialized as
+//! `Σ_iter (compute_iter + dma_iter)`. The fill/steady/serial split is
+//! carried through [`metrics::LayerResult`], the [`bus`] contention
+//! segments, and [`ops::LayerOp::layer_cost_on`] (which keeps both
+//! regimes monotone in cores for the pipeline partition-DP).
+//! `EngineConfig::dma_rotation(false)` (CLI `--no-rotation`) forbids
+//! rotation globally — outputs are bit-identical, only cycles change.
 //!
 //! The public entry point is the [`engine`] module: build an [`Engine`]
 //! from an [`EngineConfig`] (cores, batch, [`ShardPolicy`],

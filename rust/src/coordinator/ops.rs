@@ -98,16 +98,18 @@ pub trait LayerOp {
 
     /// Predicted single-core cost: MACs at a calibrated **~2/3
     /// utilization** guess for compute vs tensor footprints over the
-    /// bus width for DMA, combined with the executor's overlap `max`
-    /// ([`conv_cost`]). This one first-order estimate feeds *three*
-    /// consumers — the `Auto` shard policy, the legacy
-    /// one-core-per-stage pipeline DP, and (through
+    /// bus width for DMA. The two terms combine with the executor's
+    /// overlap `max` when the layer's DM plan rotates (the
+    /// double-buffered stream hides under compute) and with an honest
+    /// `+` when it cannot ([`LayerOp::dma_serialized`]), mirroring the
+    /// executor's fill/steady vs serialized pricing. This one
+    /// first-order estimate feeds *three* consumers — the `Auto` shard
+    /// policy, the legacy one-core-per-stage pipeline DP, and (through
     /// [`LayerOp::layer_cost_on`]) the partition-DP that assigns whole
     /// core *groups* to stages — so they all rank layers consistently.
     /// Only the relative ranking matters.
     fn layer_cost(&self) -> u64 {
-        let (i, w, o) = self.tensor_footprints();
-        conv_cost(self.macs(), i, w, o).max(1)
+        self.layer_cost_on(1)
     }
 
     /// Predicted per-core cost of this layer sharded across `cores`
@@ -120,15 +122,28 @@ pub trait LayerOp {
     /// conservatively charged in full per core (the oc-tile/neuron-
     /// tile regime — row-band shards would divide it, so this
     /// under-promises, never over-promises, group speedup on
-    /// input-heavy layers). Monotone non-increasing in `cores`, which
-    /// is what makes the partition-DP's makespan monotone in the core
-    /// budget.
+    /// input-heavy layers). Serialized layers add their DMA term
+    /// instead of overlapping it; both terms are individually monotone
+    /// non-increasing in `cores`, so their sum and their max both are
+    /// — the partition-DP's makespan stays monotone in the core budget
+    /// in either regime.
     fn layer_cost_on(&self, cores: usize) -> u64 {
         let k = cores.max(1) as u64;
         let (i, w, o) = self.tensor_footprints();
         let comp = (self.macs() * 3 / (2 * crate::PEAK_MACS_PER_CYCLE)).div_ceil(k);
         let bytes = 2 * (i as u64 + (w as u64 + o as u64).div_ceil(k));
-        comp.max(bytes / crate::mem::EXT_BYTES_PER_CYCLE as u64).max(1)
+        let dma = bytes / crate::mem::EXT_BYTES_PER_CYCLE as u64;
+        if self.dma_serialized() { (comp + dma).max(1) } else { comp.max(dma).max(1) }
+    }
+
+    /// Does this layer's DMA stream fail to overlap its compute? `true`
+    /// when the layer's DM plan cannot hold a rotation shadow (the
+    /// second filter-block + input-band staging slot), so the executor
+    /// prices its stream serially (`compute + dma`) rather than with
+    /// the double-buffered overlap `max`. Kinds with a plan consult it;
+    /// the default covers weightless streaming kinds.
+    fn dma_serialized(&self) -> bool {
+        false
     }
 
     /// `(bytes, dma requests)` of this layer's per-frame parameter
@@ -485,6 +500,10 @@ fn merge_shards(
     for (idx, r) in results.into_iter().enumerate() {
         res.compute_cycles += r.compute_cycles;
         res.dma_cycles += r.dma_cycles;
+        res.dma_fill_bytes += r.dma_fill_bytes;
+        res.dma_fill_cycles += r.dma_fill_cycles;
+        res.dma_serial_bytes += r.dma_serial_bytes;
+        res.dma_serial_cycles += r.dma_serial_cycles;
         res.macs += r.macs;
         res.io_in += r.io_in;
         res.io_out += r.io_out;
@@ -563,6 +582,14 @@ impl LayerOp for ConvLayer {
             _ => conv_shards_octile(self, want),
         }
     }
+
+    /// A conv stream serializes when its per-group DM plan cannot hold
+    /// the rotation shadow next to the working map (the executor then
+    /// charges `compute + dma`). Unplannable layers keep the overlap
+    /// estimate — they cannot execute at all, so the ranking is moot.
+    fn dma_serialized(&self) -> bool {
+        layout::plan(&self.per_group()).is_ok_and(|p| p.rot.is_none())
+    }
 }
 
 impl LayerOp for PoolLayer {
@@ -613,6 +640,12 @@ impl LayerOp for PoolLayer {
             ShardPolicy::RowBand => pool_shards_rowband(self, x, want),
             _ => pool_shards_slab(self, want),
         }
+    }
+
+    /// A pool stream serializes when DM cannot hold a second
+    /// input-rows + output-row staging pair.
+    fn dma_serialized(&self) -> bool {
+        crate::codegen::pool::plan_pool(self).is_ok_and(|p| p.rot.is_none())
     }
 }
 
@@ -678,13 +711,24 @@ impl LayerOp for FcLayer {
         // same number is each staged block's DM footprint — filter
         // vectors + the 2 FIFO slack vectors + the 32 B bias — so it
         // doubles as the residency fit check, conservatively on top of
-        // the full one-task DM map (which already holds one block).
+        // the full one-task DM map (which already holds one block —
+        // two when the plan carries a rotation shadow, hence the
+        // rot-aware end).
         let bytes =
             p.n_tiles as u64 * (0..p.m).map(|mi| p.filter_stream_bytes(mi)).sum::<u64>();
-        if p.dm.end as u64 + bytes > crate::mem::DM_BYTES as u64 {
+        let end = p.rot.as_ref().map_or(p.dm.end, |r| r.end);
+        if end as u64 + bytes > crate::mem::DM_BYTES as u64 {
             return (0, 0);
         }
         (bytes, (p.n_tiles * p.m) as u64)
+    }
+
+    /// FC streams serialize exactly when the 1×1 lowering's plan cannot
+    /// rotate. fc6-scale filter blocks are sliced to fit DM, so even
+    /// they double-buffer; the override exists so an FC that ever
+    /// out-sizes the shadow prices honestly.
+    fn dma_serialized(&self) -> bool {
+        layout::plan(&self.as_conv()).is_ok_and(|p| p.rot.is_none())
     }
 
     /// Neuron tiles — the oc-tile machinery on the 1×1 lowering. Every
@@ -831,6 +875,39 @@ mod tests {
         assert_eq!(LayerOp::resident_param_stream(&conv), (0, 0));
         let pool = PoolLayer { name: "p", ic: 16, ih: 8, iw: 8, size: 2, stride: 2 };
         assert_eq!(LayerOp::resident_param_stream(&pool), (0, 0));
+    }
+
+    #[test]
+    fn serialized_streams_price_as_compute_plus_dma() {
+        // the tall-filter/wide-row witness cannot hold a rotation
+        // shadow in DM, so its cost estimate adds the stream instead
+        // of hiding it under compute
+        let tall = ConvLayer::new("tall", 1, 31, 350, 16, 31, 1, 1, 0, 1);
+        assert!(LayerOp::dma_serialized(&tall), "witness must serialize");
+        let (i, w, o) = LayerOp::tensor_footprints(&tall);
+        let comp = LayerOp::macs(&tall) * 3 / (2 * crate::PEAK_MACS_PER_CYCLE);
+        let dma = 2 * (i + w + o) as u64 / crate::mem::EXT_BYTES_PER_CYCLE as u64;
+        assert_eq!(LayerOp::layer_cost(&tall), (comp + dma).max(1));
+        assert!(LayerOp::layer_cost(&tall) > comp.max(dma), "sum must exceed the overlap max");
+        // the serialized branch stays monotone non-increasing in cores
+        // (the partition-DP's correctness precondition)
+        let mut prev = u64::MAX;
+        for k in 1..=6usize {
+            let c = LayerOp::layer_cost_on(&tall, k);
+            assert!(c <= prev, "{k} cores: cost {c} rose above {prev}");
+            prev = c;
+        }
+        // a rotatable conv keeps the overlap max
+        let conv = ConvLayer::new("c", 64, 56, 56, 64, 3, 3, 1, 1, 1);
+        assert!(!LayerOp::dma_serialized(&conv));
+        let (ci, cw, co) = LayerOp::tensor_footprints(&conv);
+        assert_eq!(LayerOp::layer_cost(&conv), conv_cost(LayerOp::macs(&conv), ci, cw, co).max(1));
+        // fc6's sliced filter blocks double-buffer, so the FC tail
+        // keeps its DMA-bound overlap estimate
+        assert!(!LayerOp::dma_serialized(&FcLayer::new("fc6", 9216, 4096)));
+        // benchmark pools rotate too
+        let pool = PoolLayer { name: "p", ic: 64, ih: 112, iw: 112, size: 2, stride: 2 };
+        assert!(!LayerOp::dma_serialized(&pool));
     }
 
     #[test]

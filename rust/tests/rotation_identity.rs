@@ -1,0 +1,132 @@
+//! Integration: DMA double buffering is a *pricing* feature — rotating
+//! the DM staging slots can never change what is computed. For every
+//! shard policy × bus model × gate setting, and for cold, warm and
+//! cache-disabled engines, `dma_rotation(false)` produces bit-identical
+//! output tensors and MAC counts; only the cycle counts move (and only
+//! downward when rotation is allowed, since per-iteration
+//! `max(compute, dma)` never exceeds `compute + dma`).
+
+use convaix::codegen::layout;
+use convaix::coordinator::{BusModel, EngineConfig, ExecMode, NetLayer, ShardPolicy};
+use convaix::model::{ConvLayer, FcLayer, PoolLayer};
+use convaix::util::XorShift;
+
+fn mini_net() -> Vec<NetLayer> {
+    vec![
+        NetLayer::Conv(ConvLayer::new("c1", 3, 16, 16, 32, 3, 3, 1, 1, 1)),
+        NetLayer::Pool(PoolLayer { name: "p1", ic: 32, ih: 16, iw: 16, size: 2, stride: 2 }),
+        NetLayer::Conv(ConvLayer::new("c2", 32, 8, 8, 48, 3, 3, 1, 1, 1)),
+        NetLayer::Fc(FcLayer::new("fc", 48 * 8 * 8, 32)),
+    ]
+}
+
+/// Full-cycle network runs across the engine's scheduling axes: the
+/// rotation knob never changes outputs, and allowing rotation never
+/// costs cycles.
+#[test]
+fn rotation_never_changes_outputs_across_policies_and_buses() {
+    let layers = mini_net();
+    // the identity only bites if something in the net actually rotates
+    let NetLayer::Conv(c1) = &layers[0] else { unreachable!() };
+    assert!(
+        layout::plan(&c1.per_group()).expect("plan c1").rot.is_some(),
+        "mini net's first conv must rotate for this test to bite"
+    );
+    let mut rng = XorShift::new(0x0707);
+    let input = rng.i16_vec(3 * 16 * 16, -2000, 2000);
+
+    for gate in [8u8, 16] {
+        for shard in [ShardPolicy::OcTile, ShardPolicy::RowBand, ShardPolicy::Auto] {
+            for bus in [BusModel::Partitioned, BusModel::Shared] {
+                let run = |rotation: bool| {
+                    let mut engine = EngineConfig::new()
+                        .gate_bits(gate)
+                        .cores(2)
+                        .shard(shard)
+                        .bus(bus)
+                        .dma_rotation(rotation)
+                        .build();
+                    engine.run_network("mini", &layers, &input).expect("run")
+                };
+                let on = run(true);
+                let off = run(false);
+                assert_eq!(on.layers.len(), off.layers.len());
+                for (a, b) in on.layers.iter().zip(&off.layers) {
+                    assert_eq!(
+                        a.out, b.out,
+                        "{gate}-bit {shard:?} {bus:?}: rotation changed layer {} output",
+                        a.name
+                    );
+                    assert_eq!(a.macs, b.macs, "rotation changed layer {} work", a.name);
+                }
+                assert!(
+                    on.cycles() <= off.cycles(),
+                    "{gate}-bit {shard:?} {bus:?}: rotation may not cost cycles \
+                     ({} rotated vs {} serialized)",
+                    on.cycles(),
+                    off.cycles(),
+                );
+            }
+        }
+    }
+}
+
+/// Cold compile, warm plan-cache replay and `--no-cache` re-derivation
+/// agree bit-for-bit within each rotation setting, and the two settings
+/// agree with each other on outputs — in tile-analytic mode, where warm
+/// replays skip simulation entirely.
+#[test]
+fn rotation_identity_holds_cold_warm_and_uncached() {
+    let layers = mini_net();
+    let mut rng = XorShift::new(0x0808);
+    let input = rng.i16_vec(3 * 16 * 16, -2000, 2000);
+
+    let mut per_rotation = Vec::new();
+    for rotation in [true, false] {
+        let cfg = EngineConfig::new()
+            .mode(ExecMode::TileAnalytic)
+            .gate_bits(8)
+            .dma_rotation(rotation);
+        let mut engine = cfg.clone().build();
+        let cold = engine.run_network("mini", &layers, &input).expect("cold");
+        let warm = engine.run_network("mini", &layers, &input).expect("warm");
+        let mut uncached = cfg.plan_cache(false).build();
+        let nocache = uncached.run_network("mini", &layers, &input).expect("no-cache");
+        for (label, r) in [("warm", &warm), ("no-cache", &nocache)] {
+            assert_eq!(r.cycles(), cold.cycles(), "rotation={rotation}: {label} cycles drifted");
+            for (a, b) in cold.layers.iter().zip(&r.layers) {
+                assert_eq!(a.out, b.out, "rotation={rotation}: {label} layer {}", a.name);
+            }
+        }
+        per_rotation.push(cold);
+    }
+    let (on, off) = (&per_rotation[0], &per_rotation[1]);
+    for (a, b) in on.layers.iter().zip(&off.layers) {
+        assert_eq!(a.out, b.out, "rotation changed layer {} output", a.name);
+    }
+    assert!(on.cycles() <= off.cycles(), "rotation may not cost cycles");
+}
+
+/// A layer whose shadow slots do NOT fit serializes under both settings
+/// — the knob is then a no-op: identical outputs AND identical cycles.
+#[test]
+fn unrotatable_layer_is_knob_invariant() {
+    let l = ConvLayer::new("tall", 1, 31, 350, 16, 31, 1, 1, 0, 1);
+    assert!(
+        layout::plan(&l.per_group()).expect("plan tall").rot.is_none(),
+        "witness layer must not fit a rotation shadow"
+    );
+    let mut rng = XorShift::new(0x0909);
+    let x = rng.i16_vec(l.ic * l.ih * l.iw, -500, 500);
+    let w = rng.i16_vec(l.oc * l.ic * l.fh * l.fw, -100, 100);
+    let b = rng.i32_vec(l.oc, -100, 100);
+    let run = |rotation: bool| {
+        let mut engine = EngineConfig::new().dma_rotation(rotation).build();
+        engine.run_conv_layer(&l, &x, &w, &b).expect("tall layer")
+    };
+    let on = run(true);
+    let off = run(false);
+    assert_eq!(on.out, off.out);
+    assert_eq!(on.cycles, off.cycles, "a serialized stream must price identically");
+    assert!(on.dma_serial_cycles > 0, "the witness stream must be priced serialized");
+}

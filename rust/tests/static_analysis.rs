@@ -183,7 +183,12 @@ halt";
 /// Property: every feasible `layout::plan` over a randomized layer
 /// matrix (strides, grouped, multi-slice, partial tiles) produces a
 /// `DmMap` whose regions are pairwise disjoint and end within DM — the
-/// aliasing checker and the planner agree for every task flavor.
+/// aliasing checker and the planner agree for every task flavor. When
+/// the plan rotates, the shadow (phase-B) slots join the same contract:
+/// the rotation region ends inside DM, the phase-A spec proves the
+/// shadow slots disjoint from the working map (they are listed as
+/// no-access regions), and the phase-B spec is itself violation-free
+/// for every flavor. A `plan_with(…, false)` plan never rotates.
 #[test]
 fn planned_dm_regions_are_always_disjoint_and_in_bounds() {
     prop("DmMap regions disjoint and inside DM", 60, |g| {
@@ -203,16 +208,35 @@ fn planned_dm_regions_are_always_disjoint_and_in_bounds() {
         let dense = l.per_group();
         let Ok(plan) = layout::plan(&dense) else { return };
         assert!(plan.dm.end <= DM_BYTES, "plan end {} past DM", plan.dm.end);
+        if let Some(rot) = &plan.rot {
+            assert!(rot.end <= DM_BYTES, "rotation end {} past DM", rot.end);
+            assert!(rot.end >= plan.dm.end, "shadow slots must sit past the working map");
+        }
         for flavor in [
             TaskFlavor { first_slice: true, last_slice: true },
             TaskFlavor { first_slice: true, last_slice: false },
             TaskFlavor { first_slice: false, last_slice: false },
             TaskFlavor { first_slice: false, last_slice: true },
         ] {
+            // phase A: the working map, with the shadow slots present as
+            // no-access regions — region_violations proves the whole set
+            // (working + shadow) pairwise disjoint.
             let spec = conv::mem_spec(&plan, flavor);
             let v = spec.region_violations();
             assert!(v.is_empty(), "{flavor:?} of {:?}: {v:?}", plan.dm);
+            // phase B: the same program runs out of the shadow slots.
+            if let Some(spec_b) = conv::mem_spec_phase_b(&plan, flavor) {
+                let v = spec_b.region_violations();
+                assert!(v.is_empty(), "phase B {flavor:?} of {:?}: {v:?}", plan.rot);
+            } else {
+                assert!(plan.rot.is_none(), "rotated plan must yield a phase-B spec");
+            }
         }
+        // forbidding rotation must still plan (a rotated layer always
+        // fits un-rotated too — the shadow is freed), just without rot
+        let flat = layout::plan_with(&dense, false).expect("serialized plan");
+        assert!(flat.rot.is_none(), "plan_with(rotate=false) may not rotate");
+        assert!(flat.dm.end <= DM_BYTES, "serialized plan end {} past DM", flat.dm.end);
     });
 }
 
