@@ -5,7 +5,7 @@ pub mod report;
 
 use anyhow::Result;
 
-use crate::coordinator::{BusModel, EngineConfig, PoolMode, ShardPolicy, StageCores};
+use crate::coordinator::{BusModel, EngineConfig, FaultPlan, PoolMode, ShardPolicy, StageCores};
 
 const USAGE: &str = "\
 convaix — ConvAix ASIP reproduction (ISCAS'19)
@@ -75,6 +75,19 @@ OPTIONS:
                      (compute + dma per iteration) instead of the
                      fill/steady rotated timeline — outputs are
                      bit-identical, only cycles change
+  --inject <spec>    seeded fault-injection campaign, seed[:rate[:kinds]]
+                     (seed decimal or 0x… hex; rate a fraction in [0,1],
+                     default 0.05; kinds a comma list of bitflip |
+                     dma-corrupt | dma-drop | hang | fail | all | silent
+                     — default: every transient kind, detection on).
+                     With detection on, faults are detected, priced and
+                     retried: outputs stay bit-identical to the
+                     fault-free run (the run verifies this) and the
+                     report shows retry/recovery counts; `silent`
+                     disables detection so faults corrupt outputs —
+                     the unprotected baseline. `fail` exhausts core
+                     retry budgets: with spare --cores the run degrades
+                     onto the survivors instead of crashing
 ";
 
 /// Tiny argv parser (clap is not in the offline vendor set).
@@ -94,6 +107,7 @@ pub struct Args {
     pub no_rotation: bool,
     pub verify_programs: bool,
     pub json: bool,
+    pub inject: Option<FaultPlan>,
 }
 
 impl Args {
@@ -114,6 +128,7 @@ impl Args {
             no_rotation: false,
             verify_programs: false,
             json: false,
+            inject: None,
         };
         let mut it = argv.iter().skip(1).peekable();
         while let Some(arg) = it.next() {
@@ -183,6 +198,16 @@ impl Args {
                         .parse()
                         .map_err(|e: String| anyhow::anyhow!("{e}"))?;
                 }
+                "--inject" => {
+                    let plan: FaultPlan = it
+                        .next()
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("--inject needs a seed[:rate[:kinds]] spec")
+                        })?
+                        .parse()
+                        .map_err(|e: String| anyhow::anyhow!("{e}"))?;
+                    a.inject = Some(plan);
+                }
                 "-h" | "--help" => {
                     a.command = "help".into();
                     return Ok(a);
@@ -204,7 +229,7 @@ impl Args {
         } else {
             crate::coordinator::ExecMode::TileAnalytic
         };
-        EngineConfig::new()
+        let cfg = EngineConfig::new()
             .mode(mode)
             .gate_bits(self.gate_bits)
             .cores(self.cores)
@@ -214,7 +239,11 @@ impl Args {
             .bus(self.bus)
             .stage_cores(self.stage_cores.clone())
             .plan_cache(!self.no_cache)
-            .dma_rotation(!self.no_rotation)
+            .dma_rotation(!self.no_rotation);
+        match self.inject {
+            Some(plan) => cfg.faults(plan),
+            None => cfg,
+        }
     }
 }
 

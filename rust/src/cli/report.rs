@@ -9,8 +9,8 @@ use anyhow::Result;
 
 use crate::baselines::published;
 use crate::coordinator::{
-    run_multi_streaming, BatchedResult, BusModel, Engine, EngineConfig, NetLayer, NetworkResult,
-    PipelineResult, PlanCache, PoolMode, TenantRun,
+    run_multi_streaming, BatchedResult, BusModel, Engine, EngineConfig, FaultPlan, FaultReport,
+    NetLayer, NetworkResult, PipelineResult, PlanCache, PoolMode, TenantRun,
 };
 use crate::energy::{area, power};
 use crate::model::{alexnet_conv, alexnet_full, conv_stack, vgg16_conv, vgg16_full};
@@ -45,8 +45,17 @@ pub fn bench_network(
 /// kind labels and per-core utilization and speedup columns.
 pub fn run_net_mc(net: &str, cfg: &EngineConfig) -> Result<String> {
     let layers = net_layers(net)?;
-    let serial = bench_network(net, &layers, &cfg.clone().cores(1).batch(1))?;
-    let sharded = bench_network(net, &layers, cfg)?;
+    // the serial baseline always runs fault-free: its cycle column is
+    // the undisturbed cost, and (outputs being core-count-invariant by
+    // design) it doubles as the clean reference for an injected run
+    let mut serial_cfg = cfg.clone().cores(1).batch(1);
+    serial_cfg.faults = None;
+    let serial = bench_network(net, &layers, &serial_cfg)?;
+    let mut engine = engine_for(cfg);
+    let input = vec![0i16; layers[0].op().in_elems()];
+    let sharded = engine
+        .run_network(net, &layers, &input)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
 
     let mut t = Table::new(
         &format!(
@@ -78,6 +87,22 @@ pub fn run_net_mc(net: &str, cfg: &EngineConfig) -> Result<String> {
         serial.time_ms(),
         total_speedup,
     ));
+    if let Some(plan) = cfg.faults {
+        // layer-level degrade waste is already folded into the layers'
+        // fault_recovery_cycles by the engine, so the report sums those
+        s.push_str(&fault_lines(&FaultReport {
+            retries: sharded.fault_retries(),
+            recovery_cycles: sharded.fault_recovery_cycles(),
+            blacklisted_cores: engine.blacklisted_cores().to_vec(),
+            degrade_waste_cycles: 0,
+        }));
+        s.push_str(&verify_against_clean(
+            &plan,
+            net,
+            std::slice::from_ref(&sharded),
+            std::slice::from_ref(&serial),
+        )?);
+    }
     Ok(s)
 }
 
@@ -95,6 +120,14 @@ pub fn throughput(net: &str, cfg: &EngineConfig) -> Result<String> {
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     let mut s = throughput_report(&br, cfg);
     s.push_str(&cache_line(&engine));
+    if let Some(plan) = cfg.faults {
+        let mut clean_cfg = cfg.clone();
+        clean_cfg.faults = None;
+        let clean = engine_for(&clean_cfg)
+            .run_batched(net, &layers, &inputs)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        s.push_str(&verify_against_clean(&plan, net, &br.frames, &clean.frames)?);
+    }
     Ok(s)
 }
 
@@ -110,6 +143,76 @@ fn cache_line(engine: &Engine) -> String {
         cs.pool_entries,
         if engine.plan_cache().is_enabled() { "" } else { "; cache disabled" },
     )
+}
+
+/// Fault-campaign summary lines shared by every serving report: what
+/// the detection machinery caught, what the recovery priced in, and —
+/// when cores exhausted their budgets — the degraded topology.
+fn fault_lines(fr: &FaultReport) -> String {
+    let mut s = format!(
+        "faults: {} detected-and-retried transfer(s), {} recovery cycle(s) \
+         ({:.3} ms) priced into the run\n",
+        fr.retries,
+        fr.recovery_cycles,
+        fr.recovery_cycles as f64 / crate::CLOCK_HZ as f64 * 1e3,
+    );
+    if fr.degraded() {
+        s.push_str(&format!(
+            "degraded onto survivors: core(s) {:?} blacklisted",
+            fr.blacklisted_cores,
+        ));
+        if fr.degrade_waste_cycles > 0 {
+            s.push_str(&format!(
+                ", {} discarded re-execution cycle(s) absorbed into the makespan",
+                fr.degrade_waste_cycles,
+            ));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// Clean-reference bit-identity check. `frames` came from an injected
+/// run; `clean` is the same run with the fault plan stripped. With
+/// detection on, any divergence means recovery failed to mask an
+/// injected fault — that's a bug, so the report errors out (nonzero
+/// CLI exit; the CI fault smoke step leans on this). With detection
+/// off (`silent`), corruption is the expected observation, so the
+/// divergence is reported rather than fatal.
+fn verify_against_clean(
+    plan: &FaultPlan,
+    what: &str,
+    frames: &[NetworkResult],
+    clean: &[NetworkResult],
+) -> Result<String> {
+    let identical = frames.len() == clean.len()
+        && frames.iter().zip(clean).all(|(a, b)| {
+            a.layers.len() == b.layers.len()
+                && a.layers
+                    .iter()
+                    .zip(&b.layers)
+                    .all(|(x, y)| x.out == y.out && x.macs == y.macs)
+        });
+    if plan.detect {
+        if !identical {
+            anyhow::bail!(
+                "fault campaign seed {:#x}: {what} outputs DIVERGED from the fault-free \
+                 reference despite detection — recovery failed to mask an injected fault",
+                plan.seed,
+            );
+        }
+        Ok(format!(
+            "fault campaign seed {:#x}: outputs verified bit-identical to the \
+             fault-free run\n",
+            plan.seed,
+        ))
+    } else {
+        Ok(format!(
+            "silent campaign seed {:#x} (detection off): outputs {} the fault-free run\n",
+            plan.seed,
+            if identical { "match" } else { "DIVERGED from" },
+        ))
+    }
 }
 
 /// Render a [`BatchedResult`] as the throughput table + summary lines.
@@ -149,6 +252,9 @@ pub fn throughput_report(br: &BatchedResult, cfg: &EngineConfig) -> String {
         br.speedup(),
         br.serial_cycles() as f64 / crate::CLOCK_HZ as f64 * 1e3,
     ));
+    if br.faults.any() {
+        s.push_str(&fault_lines(&br.faults));
+    }
     s
 }
 
@@ -168,6 +274,14 @@ pub fn streaming(net: &str, cfg: &EngineConfig) -> Result<String> {
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     let mut s = streaming_report(&pr, &layers, cfg);
     s.push_str(&cache_line(&engine));
+    if let Some(plan) = cfg.faults {
+        let mut clean_cfg = cfg.clone();
+        clean_cfg.faults = None;
+        let clean = engine_for(&clean_cfg)
+            .run_streaming(net, &layers, &inputs)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        s.push_str(&verify_against_clean(&plan, net, &pr.frames, &clean.frames)?);
+    }
     Ok(s)
 }
 
@@ -225,6 +339,9 @@ pub fn streaming_report(pr: &PipelineResult, layers: &[NetLayer], cfg: &EngineCo
         pr.speedup(),
         cfg.cores,
     ));
+    if pr.faults.any() {
+        s.push_str(&fault_lines(&pr.faults));
+    }
     s
 }
 
@@ -281,25 +398,32 @@ pub fn run_multi(tenants: &[String], args: &super::Args) -> Result<String> {
     } else {
         crate::coordinator::ExecMode::TileAnalytic
     };
-    let mut engines: Vec<Engine> = specs
-        .iter()
-        .enumerate()
-        .map(|(i, sp)| {
-            let cfg = EngineConfig::new()
-                .mode(mode)
-                .gate_bits(sp.gate)
-                .cores(sp.cores)
-                .batch(args.batch)
-                .pool_mode(PoolMode::Pipelined)
-                .shard(args.shard)
-                // run-multi IS the shared-bus story; --bus is ignored
-                .bus(BusModel::Shared)
-                .stage_cores(args.stage_cores.clone())
-                .dma_rotation(!args.no_rotation)
-                .seed(0xC0DE + i as u64);
-            Engine::new_with_cache(cfg, cache.clone())
-        })
-        .collect();
+    let build_engines = |inject: Option<FaultPlan>| -> Vec<Engine> {
+        specs
+            .iter()
+            .enumerate()
+            .map(|(i, sp)| {
+                let cfg = EngineConfig::new()
+                    .mode(mode)
+                    .gate_bits(sp.gate)
+                    .cores(sp.cores)
+                    .batch(args.batch)
+                    .pool_mode(PoolMode::Pipelined)
+                    .shard(args.shard)
+                    // run-multi IS the shared-bus story; --bus is ignored
+                    .bus(BusModel::Shared)
+                    .stage_cores(args.stage_cores.clone())
+                    .dma_rotation(!args.no_rotation)
+                    .seed(0xC0DE + i as u64);
+                let cfg = match inject {
+                    Some(plan) => cfg.faults(plan),
+                    None => cfg,
+                };
+                Engine::new_with_cache(cfg, cache.clone())
+            })
+            .collect()
+    };
+    let mut engines = build_engines(args.inject);
     let mut runs: Vec<TenantRun<'_>> = engines
         .iter_mut()
         .zip(&specs)
@@ -348,6 +472,27 @@ pub fn run_multi(tenants: &[String], args: &super::Args) -> Result<String> {
         args.batch,
     ));
     s.push_str(&cache_line(&engines[0]));
+    if mt.faults.any() {
+        s.push_str(&fault_lines(&mt.faults));
+    }
+    if let Some(plan) = args.inject {
+        let mut clean_engines = build_engines(None);
+        let mut clean_runs: Vec<TenantRun<'_>> = clean_engines
+            .iter_mut()
+            .zip(&specs)
+            .map(|(engine, sp)| TenantRun {
+                engine,
+                name: &sp.name,
+                layers: &sp.layers,
+                inputs: &sp.inputs,
+            })
+            .collect();
+        let clean = run_multi_streaming(&mut clean_runs).map_err(|e| anyhow::anyhow!("{e}"))?;
+        drop(clean_runs);
+        for (pr, cp) in mt.tenants.iter().zip(&clean.tenants) {
+            s.push_str(&verify_against_clean(&plan, &pr.name, &pr.frames, &cp.frames)?);
+        }
+    }
     Ok(s)
 }
 
@@ -957,6 +1102,22 @@ pub fn run_net(net: &str, cfg: &EngineConfig) -> Result<String> {
              16-bit conv layers)\n",
             conv.utilization() * 100.0,
         ));
+    }
+    if let Some(plan) = cfg.faults {
+        s.push_str(&fault_lines(&FaultReport {
+            retries: r.fault_retries(),
+            recovery_cycles: r.fault_recovery_cycles(),
+            ..Default::default()
+        }));
+        let mut clean_cfg = cfg.clone();
+        clean_cfg.faults = None;
+        let clean = bench_network(net, &layers, &clean_cfg)?;
+        s.push_str(&verify_against_clean(
+            &plan,
+            net,
+            std::slice::from_ref(&r),
+            std::slice::from_ref(&clean),
+        )?);
     }
     Ok(s)
 }

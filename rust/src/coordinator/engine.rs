@@ -75,6 +75,7 @@ use super::bus::{
     core_busy, dma_bound, group_first_pass, group_interval, shared_divisor, BusModel, Segment,
 };
 use super::executor::{ExecCtx, ExecError, ExecMode, ExecOptions};
+use super::faults::{apply_layer_faults, layer_key, FaultPlan, FaultReport};
 use super::metrics::{add_stats, LayerResult, MultiTenantResult, NetworkResult, PipelineResult};
 use super::ops::Shard;
 
@@ -234,6 +235,13 @@ pub struct EngineConfig {
     /// are bit-identical either way — only cycles move (locked by
     /// `tests/rotation_identity.rs`).
     pub dma_rotation: bool,
+    /// Seeded fault-injection campaign (`None` = the perfect substrate
+    /// every pre-0.10 run assumed). With detection on, injected faults
+    /// are recovered transparently — outputs stay bit-identical to the
+    /// fault-free run, only cycles move; with detection off they
+    /// silently corrupt outputs (see [`super::faults`]). CLI:
+    /// `--inject seed[:rate[:kinds]]`.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for EngineConfig {
@@ -251,6 +259,7 @@ impl Default for EngineConfig {
             ext_capacity: 1 << 24,
             plan_cache: true,
             dma_rotation: true,
+            faults: None,
         }
     }
 }
@@ -324,6 +333,12 @@ impl EngineConfig {
         self
     }
 
+    /// Arm a seeded fault-injection campaign (see the field doc).
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
     /// Finish the builder: allocate the core pool and return the engine.
     pub fn build(self) -> Engine {
         Engine::new(self)
@@ -341,6 +356,7 @@ impl EngineConfig {
             shard: self.shard,
             bus: self.bus,
             seed: self.seed,
+            faults: self.faults,
         }
     }
 }
@@ -353,6 +369,7 @@ pub(crate) struct RunSpec {
     pub shard: ShardPolicy,
     pub bus: BusModel,
     pub seed: u64,
+    pub faults: Option<FaultPlan>,
 }
 
 /// The execution engine: an [`EngineConfig`] plus its pool of
@@ -400,6 +417,13 @@ impl Engine {
     /// Hit/miss counters and entry counts of the plan cache.
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.stats()
+    }
+
+    /// Cores blacklisted by fault degrade so far (blacklist order).
+    /// Blacklists persist across `run_*` calls — a benched core stays
+    /// benched for the engine's lifetime, as a fused-off core would.
+    pub fn blacklisted_cores(&self) -> &[usize] {
+        self.pool.blacklisted()
     }
 
     /// Run one network layer (any [`LayerOp`](super::ops::LayerOp)
@@ -535,7 +559,7 @@ pub fn run_multi_streaming(
         let spec = eng.cfg.run_spec();
         let sc = eng.cfg.stage_cores.clone();
         tenant_cores.push(eng.pool.cores());
-        execs.push(stream_exec(
+        let (ex, waste) = stream_exec_degrading(
             &mut eng.pool,
             &eng.cache,
             t.name,
@@ -543,12 +567,13 @@ pub fn run_multi_streaming(
             t.inputs,
             spec,
             &sc,
-        )?);
+        )?;
+        execs.push((ex, waste, eng.pool.blacklisted().to_vec()));
     }
     // hierarchical pricing: the fixed-point divisor over ALL tenants'
     // per-core aggregate DMA timelines (stages feed their core groups'
     // timelines up into one pool-wide contention account)
-    let all: Vec<Vec<Segment>> = execs.iter().flat_map(core_timelines).collect();
+    let all: Vec<Vec<Segment>> = execs.iter().flat_map(|(ex, _, _)| core_timelines(ex)).collect();
     let d = shared_divisor(&all);
     let contenders = all.iter().filter(|segs| dma_bound(segs, d)).count();
     let mut res = MultiTenantResult {
@@ -557,8 +582,18 @@ pub fn run_multi_streaming(
         contenders,
         ..Default::default()
     };
-    for ex in execs {
-        res.tenants.push(price_stream(ex, BusModel::Shared, d));
+    for (ex, waste, dead) in execs {
+        let mut pr = price_stream(ex, BusModel::Shared, d);
+        pr.faults = FaultReport {
+            retries: pr.frames.iter().map(|f| f.fault_retries()).sum(),
+            recovery_cycles: pr.frames.iter().map(|f| f.fault_recovery_cycles()).sum::<u64>()
+                + waste,
+            blacklisted_cores: dead,
+            degrade_waste_cycles: waste,
+        };
+        pr.makespan_cycles += waste;
+        res.faults.absorb(&pr.faults);
+        res.tenants.push(pr);
     }
     Ok(res)
 }
@@ -569,6 +604,13 @@ pub fn run_multi_streaming(
 pub struct CorePool {
     cpus: Vec<Cpu>,
     scratch: Vec<Scratch>,
+    /// Liveness mask: a core that exhausted its fault retry budget is
+    /// blacklisted (`false`) and the degrade paths re-distribute work
+    /// over the survivors. All-true on a fault-free pool.
+    alive: Vec<bool>,
+    /// Blacklisted core ids in blacklist order — the degraded-topology
+    /// report surfaced through [`FaultReport::blacklisted_cores`].
+    dead: Vec<usize>,
 }
 
 impl CorePool {
@@ -579,6 +621,8 @@ impl CorePool {
         Self {
             cpus: (0..cores).map(|_| Cpu::new(ext_capacity)).collect(),
             scratch: (0..cores).map(|_| Scratch::default()).collect(),
+            alive: vec![true; cores],
+            dead: Vec::new(),
         }
     }
 
@@ -586,14 +630,34 @@ impl CorePool {
         self.cpus.len()
     }
 
+    /// Surviving (non-blacklisted) cores.
+    pub fn alive_cores(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
+    }
+
+    /// Ids of the surviving cores, ascending — the logical-slot →
+    /// physical-core map every degraded distribution indexes through.
+    pub(crate) fn alive_ids(&self) -> Vec<usize> {
+        (0..self.cpus.len()).filter(|&i| self.alive[i]).collect()
+    }
+
+    /// Blacklist core `i` (idempotent). The caller must keep at least
+    /// one core alive — the degrade loops check `alive_cores()` first.
+    pub(crate) fn blacklist(&mut self, i: usize) {
+        if self.alive[i] {
+            self.alive[i] = false;
+            self.dead.push(i);
+        }
+    }
+
+    /// Blacklisted core ids, in blacklist order.
+    pub fn blacklisted(&self) -> &[usize] {
+        &self.dead
+    }
+
     /// Core 0 — the single-core fallback path.
     pub fn cpu0(&mut self) -> &mut Cpu {
         &mut self.cpus[0]
-    }
-
-    /// Core 0 with its scratch arena (split borrow for the solo paths).
-    pub(crate) fn core0(&mut self) -> (&mut Cpu, &mut Scratch) {
-        (&mut self.cpus[0], &mut self.scratch[0])
     }
 
     /// Core `i` with its scratch arena.
@@ -625,6 +689,13 @@ pub(crate) struct SoloRunner<'a> {
     pub scratch: &'a mut Scratch,
     pub cache: &'a PlanCache,
     pub opts: ExecOptions,
+    /// Armed fault campaign, applied per layer at site
+    /// `(frame, layer, core)`.
+    pub faults: Option<FaultPlan>,
+    /// Frame index of the walk this runner executes (fault-site key).
+    pub frame: u64,
+    /// Physical pool core this runner occupies (fault-site key).
+    pub core: usize,
 }
 
 impl LayerRunner for SoloRunner<'_> {
@@ -636,7 +707,11 @@ impl LayerRunner for SoloRunner<'_> {
         b: &[i32],
     ) -> Result<LayerResult, ExecError> {
         let mut ctx = ExecCtx::new(self.cache, self.scratch);
-        layer.op().run_solo(self.cpu, x, w, b, self.opts, &mut ctx)
+        let mut r = layer.op().run_solo(self.cpu, x, w, b, self.opts, &mut ctx)?;
+        if let Some(plan) = &self.faults {
+            apply_layer_faults(plan, self.frame, layer_key(layer.name()), self.core, &mut r)?;
+        }
+        Ok(r)
     }
 }
 
@@ -726,25 +801,25 @@ pub(crate) fn run_network_on(
     input: &[i16],
     spec: RunSpec,
 ) -> Result<NetworkResult, ExecError> {
-    if spec.opts.cores.min(pool.cores()) <= 1 {
-        let (cpu, scratch) = pool.core0();
-        let mut runner = SoloRunner { cpu, scratch, cache, opts: spec.opts };
-        walk_network(&mut runner, name, layers, input, spec.seed)
-    } else {
-        let mut runner = ShardedRunner { pool, cache, spec };
-        walk_network(&mut runner, name, layers, input, spec.seed)
-    }
+    // One path for any core count: run_layer_sharded degenerates to the
+    // single-core executor at n = 1 and owns the fault degrade loop.
+    let mut runner = ShardedRunner { pool, cache, spec };
+    walk_network(&mut runner, name, layers, input, spec.seed)
 }
 
 /// Run per-core worklists on the pool's cores (one host thread per
 /// busy core) and return the shard results in shard-index order. Each
 /// thread gets its core's scratch arena; the plan cache is shared by
-/// reference inside `work`.
+/// reference inside `work`, which also receives the physical core id
+/// and the item's global index (the fault-site key halves). A worker
+/// thread that panics surfaces as [`ExecError::CoreFailure`] for that
+/// core instead of poisoning the whole process — the degrade paths
+/// treat it exactly like an exhausted retry budget.
 fn run_on_pool<W, R>(
     pool: &mut CorePool,
     assignments: Vec<Vec<(usize, W)>>,
     n_shards: usize,
-    work: impl Fn(&mut Cpu, &mut Scratch, &W) -> Result<R, ExecError> + Sync,
+    work: impl Fn(&mut Cpu, &mut Scratch, usize, usize, &W) -> Result<R, ExecError> + Sync,
 ) -> Result<Vec<R>, ExecError>
 where
     W: Send,
@@ -754,38 +829,37 @@ where
     let mut slots: Vec<Option<R>> = (0..n_shards).map(|_| None).collect();
     thread::scope(|s| -> Result<(), ExecError> {
         let mut handles = Vec::new();
-        for ((cpu, scratch), list) in
-            pool.cpus.iter_mut().zip(pool.scratch.iter_mut()).zip(assignments)
+        for (core, ((cpu, scratch), list)) in
+            pool.cpus.iter_mut().zip(pool.scratch.iter_mut()).zip(assignments).enumerate()
         {
             if list.is_empty() {
                 continue;
             }
-            handles.push(s.spawn(move || -> Result<Vec<(usize, R)>, ExecError> {
-                let mut done = Vec::with_capacity(list.len());
-                for (idx, w) in &list {
-                    done.push((*idx, work(cpu, scratch, w)?));
-                }
-                Ok(done)
-            }));
+            handles.push((
+                core,
+                s.spawn(move || -> Result<Vec<(usize, R)>, ExecError> {
+                    let mut done = Vec::with_capacity(list.len());
+                    for (idx, w) in &list {
+                        done.push((*idx, work(cpu, scratch, core, *idx, w)?));
+                    }
+                    Ok(done)
+                }),
+            ));
         }
-        for h in handles {
-            for (idx, r) in h.join().expect("core thread panicked")? {
+        for (core, h) in handles {
+            let joined = h.join().map_err(|_| ExecError::CoreFailure {
+                core,
+                layer: "<worker thread panicked>".into(),
+            })?;
+            for (idx, r) in joined? {
                 slots[idx] = Some(r);
             }
         }
         Ok(())
     })?;
+    // invariant: every shard index 0..n_shards appears in exactly one
+    // per-core list, so a clean join fills every slot.
     Ok(slots.into_iter().map(|r| r.expect("shard not executed")).collect())
-}
-
-/// Round-robin shard indices over `cores` cores. Returns per-core lists
-/// of (shard index, shard).
-fn round_robin<W>(shards: Vec<W>, cores: usize) -> Vec<Vec<(usize, W)>> {
-    let mut lists: Vec<Vec<(usize, W)>> = (0..cores).map(|_| Vec::new()).collect();
-    for (i, s) in shards.into_iter().enumerate() {
-        lists[i % cores].push((i, s));
-    }
-    lists
 }
 
 /// Run any layer sharded across the pool, kind-agnostic: the layer's
@@ -802,11 +876,62 @@ pub(crate) fn run_layer_sharded(
     b: &[i32],
     spec: RunSpec,
 ) -> Result<LayerResult, ExecError> {
+    let mut waste = 0u64;
+    loop {
+        match layer_sharded_attempt(pool, cache, layer, x, w, b, spec) {
+            Err(ExecError::CoreFailure { core, .. }) if pool.alive_cores() > 1 => {
+                // Blacklist the exhausted core, charge its watchdog-
+                // bounded wasted attempts, and re-run the layer over
+                // the survivors (slot-compacted re-distribution).
+                waste += degrade_waste(&spec.faults, layer.op().layer_cost());
+                pool.blacklist(core);
+            }
+            Ok(mut r) => {
+                r.fault_recovery_cycles += waste;
+                r.cycles += waste;
+                return Ok(r);
+            }
+            err => return err,
+        }
+    }
+}
+
+/// Cycles a run wastes per blacklist event before it can re-partition:
+/// the failed unit's watchdog-bounded attempts (`FaultPlan::fail_waste`
+/// when a campaign is armed; one watchdog interval for a bare worker
+/// panic).
+fn degrade_waste(faults: &Option<FaultPlan>, static_cycles: u64) -> u64 {
+    match faults {
+        Some(plan) => plan.fail_waste(static_cycles),
+        None => super::faults::watchdog_bound(static_cycles),
+    }
+}
+
+/// One attempt of [`run_layer_sharded`]: distribute shards over the
+/// currently-alive cores (logical slot `i % n` → physical core
+/// `alive[i % n]`) and merge. Fault sites key on the physical core id,
+/// so a re-run after a blacklist draws fresh sites on the survivors.
+fn layer_sharded_attempt(
+    pool: &mut CorePool,
+    cache: &PlanCache,
+    layer: &NetLayer,
+    x: &[i16],
+    w: &[i16],
+    b: &[i32],
+    spec: RunSpec,
+) -> Result<LayerResult, ExecError> {
     let op = layer.op();
-    let n = spec.opts.cores.min(pool.cores()).max(1);
+    let alive = pool.alive_ids();
+    let n = spec.opts.cores.min(alive.len()).max(1);
+    let lkey = layer_key(layer.name());
     if n == 1 {
-        let (cpu, scratch) = pool.core0();
-        return op.run_solo(cpu, x, w, b, spec.opts, &mut ExecCtx::new(cache, scratch));
+        let core = alive[0];
+        let (cpu, scratch) = pool.core(core);
+        let mut r = op.run_solo(cpu, x, w, b, spec.opts, &mut ExecCtx::new(cache, scratch))?;
+        if let Some(plan) = &spec.faults {
+            apply_layer_faults(plan, 0, lkey, core, &mut r)?;
+        }
+        return Ok(r);
     }
     let inner = ExecOptions { cores: 1, batch: 1, ..spec.opts };
     let shards = op.shard(x, spec.shard, n);
@@ -814,18 +939,27 @@ pub(crate) fn run_layer_sharded(
     let placements: Vec<Vec<(usize, usize)>> =
         shards.iter().map(|s| s.placement.clone()).collect();
     let core_of: Vec<usize> = (0..n_shards).map(|i| i % n).collect();
-    let assignments = round_robin(shards, n);
-    let results = run_on_pool(pool, assignments, n_shards, |cpu, scratch, sh: &Shard| {
-        sh.sub.op().run_solo(
-            cpu,
-            sh.input.resolve(x),
-            &w[sh.w.0..sh.w.1],
-            &b[sh.b.0..sh.b.1],
-            inner,
-            &mut ExecCtx::new(cache, scratch),
-        )
-    })?;
-    Ok(op.merge(results, &placements, &core_of, n, spec.opts.mode, spec.bus))
+    let mut assignments: Vec<Vec<(usize, Shard)>> =
+        (0..pool.cores()).map(|_| Vec::new()).collect();
+    for (i, sh) in shards.into_iter().enumerate() {
+        assignments[alive[i % n]].push((i, sh));
+    }
+    let results =
+        run_on_pool(pool, assignments, n_shards, |cpu, scratch, core, _idx, sh: &Shard| {
+            let mut r = sh.sub.op().run_solo(
+                cpu,
+                sh.input.resolve(x),
+                &w[sh.w.0..sh.w.1],
+                &b[sh.b.0..sh.b.1],
+                inner,
+                &mut ExecCtx::new(cache, scratch),
+            )?;
+            if let Some(plan) = &spec.faults {
+                apply_layer_faults(plan, 0, lkey, core, &mut r)?;
+            }
+            Ok(r)
+        })?;
+    op.merge(results, &placements, &core_of, n, spec.opts.mode, spec.bus, spec.faults.as_ref())
 }
 
 /// Result of a batched multi-core run.
@@ -842,10 +976,15 @@ pub struct BatchedResult {
     /// Busy cycles per core at full private bandwidth — the useful-work
     /// view. Equals `core_cycles` under a partitioned bus.
     pub core_useful_cycles: Vec<u64>,
-    /// Which core ran each frame (parallel to `frames`).
+    /// Which core slot ran each frame (parallel to `frames`). Slots are
+    /// logical: on a degraded pool slot `i` is the `i`-th *surviving*
+    /// core.
     pub frame_core: Vec<usize>,
     /// External-bus model the batch was priced under.
     pub bus: BusModel,
+    /// Fault/recovery account of the batch (empty when no campaign is
+    /// armed and nothing failed).
+    pub faults: FaultReport,
 }
 
 impl BatchedResult {
@@ -909,16 +1048,21 @@ pub(crate) fn run_batched_on(
     inputs: &[Vec<i16>],
     spec: RunSpec,
 ) -> Result<BatchedResult, ExecError> {
-    let n = spec.opts.cores.min(pool.cores()).max(1);
-    let inner = ExecOptions { cores: 1, batch: 1, ..spec.opts };
-    let frames: Vec<&Vec<i16>> = inputs.iter().collect();
-    let n_frames = frames.len();
-    let core_of: Vec<usize> = (0..n_frames).map(|i| i % n).collect();
-    let assignments = round_robin(frames, n);
-    let results = run_on_pool(pool, assignments, n_frames, |cpu, scratch, x: &&Vec<i16>| {
-        let mut runner = SoloRunner { cpu, scratch, cache, opts: inner };
-        walk_network(&mut runner, name, layers, x.as_slice(), spec.seed)
-    })?;
+    // Degrade loop: a core that exhausts its retry budget (or panics)
+    // is blacklisted and the whole batch re-fans over the survivors —
+    // the run completes slower instead of crashing. Deterministic
+    // draws make the re-run's surviving frames bit-identical.
+    let mut waste = 0u64;
+    let (results, n, core_of) = loop {
+        match batched_attempt(pool, cache, name, layers, inputs, spec) {
+            Err(ExecError::CoreFailure { core, layer }) if pool.alive_cores() > 1 => {
+                waste += degrade_waste(&spec.faults, static_layer_cost(layers, &layer));
+                pool.blacklist(core);
+            }
+            Ok(t) => break t,
+            Err(e) => return Err(e),
+        }
+    };
 
     let mut segs: Vec<Vec<Segment>> = (0..n).map(|_| Vec::new()).collect();
     let mut br = BatchedResult {
@@ -937,7 +1081,70 @@ pub(crate) fn run_batched_on(
     let acct = core_busy(&segs, spec.bus);
     br.core_cycles = acct.busy;
     br.core_useful_cycles = acct.useful;
+    // Degrade waste stalls the whole pool (the re-fan starts only after
+    // the watchdog writes the core off), so every slot's occupied — but
+    // not useful — cycles carry it; makespan and utilization degrade
+    // honestly.
+    for c in &mut br.core_cycles {
+        *c += waste;
+    }
+    br.faults = FaultReport {
+        retries: br.frames.iter().map(|f| f.fault_retries()).sum(),
+        recovery_cycles: br.frames.iter().map(|f| f.fault_recovery_cycles()).sum::<u64>()
+            + waste,
+        blacklisted_cores: pool.blacklisted().to_vec(),
+        degrade_waste_cycles: waste,
+    };
     Ok(br)
+}
+
+/// One attempt of [`run_batched_on`]'s fan-out over the currently-alive
+/// cores. Returns the per-frame results plus the slot count and the
+/// frame → slot map.
+#[allow(clippy::type_complexity)]
+fn batched_attempt(
+    pool: &mut CorePool,
+    cache: &PlanCache,
+    name: &str,
+    layers: &[NetLayer],
+    inputs: &[Vec<i16>],
+    spec: RunSpec,
+) -> Result<(Vec<NetworkResult>, usize, Vec<usize>), ExecError> {
+    let alive = pool.alive_ids();
+    let n = spec.opts.cores.min(alive.len()).max(1);
+    let inner = ExecOptions { cores: 1, batch: 1, ..spec.opts };
+    let n_frames = inputs.len();
+    let core_of: Vec<usize> = (0..n_frames).map(|i| i % n).collect();
+    let mut assignments: Vec<Vec<(usize, &Vec<i16>)>> =
+        (0..pool.cores()).map(|_| Vec::new()).collect();
+    for (i, x) in inputs.iter().enumerate() {
+        assignments[alive[i % n]].push((i, x));
+    }
+    let results =
+        run_on_pool(pool, assignments, n_frames, |cpu, scratch, core, idx, x: &&Vec<i16>| {
+            let mut runner = SoloRunner {
+                cpu,
+                scratch,
+                cache,
+                opts: inner,
+                faults: spec.faults,
+                frame: idx as u64,
+                core,
+            };
+            walk_network(&mut runner, name, layers, x.as_slice(), spec.seed)
+        })?;
+    Ok((results, n, core_of))
+}
+
+/// Static cost of the layer a [`ExecError::CoreFailure`] names, for
+/// degrade-waste pricing. Falls back to the costliest layer when the
+/// name is not in the net (e.g. a worker-thread panic marker).
+fn static_layer_cost(layers: &[NetLayer], name: &str) -> u64 {
+    layers
+        .iter()
+        .find(|l| l.name() == name)
+        .map(|l| l.op().layer_cost())
+        .unwrap_or_else(|| layers.iter().map(|l| l.op().layer_cost()).max().unwrap_or(0))
 }
 
 /// Cut `layers` into at most `want` contiguous stages minimizing the
@@ -1188,10 +1395,14 @@ struct GroupRunner<'a> {
     pool: &'a mut CorePool,
     cache: &'a PlanCache,
     spec: RunSpec,
-    /// First pool core of this stage's group.
+    /// First *logical slot* of this stage's group: slots index the
+    /// pool's alive-core list, so a degraded re-partition re-maps the
+    /// same slot ranges onto the survivors.
     offset: usize,
     /// Cores in the group.
     k: usize,
+    /// Frame index this runner is executing (fault-site key).
+    frame: u64,
     /// Per-shard (group slot, segment) of the most recent layer.
     shards: Vec<(usize, Segment)>,
 }
@@ -1206,8 +1417,12 @@ impl LayerRunner for GroupRunner<'_> {
     ) -> Result<LayerResult, ExecError> {
         let op = layer.op();
         let (k, offset, cache) = (self.k, self.offset, self.cache);
-        let inner = ExecOptions { cores: 1, batch: 1, ..self.spec.opts };
-        let shards = op.shard(x, self.spec.shard, k);
+        let spec = self.spec;
+        let frame = self.frame;
+        let lkey = layer_key(layer.name());
+        let alive = self.pool.alive_ids();
+        let inner = ExecOptions { cores: 1, batch: 1, ..spec.opts };
+        let shards = op.shard(x, spec.shard, k);
         let n_shards = shards.len();
         let placements: Vec<Vec<(usize, usize)>> =
             shards.iter().map(|s| s.placement.clone()).collect();
@@ -1215,22 +1430,30 @@ impl LayerRunner for GroupRunner<'_> {
         let mut assignments: Vec<Vec<(usize, Shard)>> =
             (0..self.pool.cores()).map(|_| Vec::new()).collect();
         for (i, sh) in shards.into_iter().enumerate() {
-            assignments[offset + i % k].push((i, sh));
+            assignments[alive[offset + i % k]].push((i, sh));
         }
-        let results =
-            run_on_pool(&mut *self.pool, assignments, n_shards, |cpu, scratch, sh: &Shard| {
-                sh.sub.op().run_solo(
+        let results = run_on_pool(
+            &mut *self.pool,
+            assignments,
+            n_shards,
+            |cpu, scratch, core, _idx, sh: &Shard| {
+                let mut r = sh.sub.op().run_solo(
                     cpu,
                     sh.input.resolve(x),
                     &w[sh.w.0..sh.w.1],
                     &b[sh.b.0..sh.b.1],
                     inner,
                     &mut ExecCtx::new(cache, scratch),
-                )
-            })?;
+                )?;
+                if let Some(plan) = &spec.faults {
+                    apply_layer_faults(plan, frame, lkey, core, &mut r)?;
+                }
+                Ok(r)
+            },
+        )?;
         self.shards =
             results.iter().enumerate().map(|(i, r)| (i % k, Segment::of_layer(r))).collect();
-        Ok(op.merge(results, &placements, &core_of, k, self.spec.opts.mode, self.spec.bus))
+        op.merge(results, &placements, &core_of, k, spec.opts.mode, spec.bus, spec.faults.as_ref())
     }
 }
 
@@ -1279,7 +1502,11 @@ pub(crate) fn stream_exec(
     spec: RunSpec,
     stage_cores: &StageCores,
 ) -> Result<StreamExec, ExecError> {
-    let stages = resolve_stage_partition(layers, pool.cores(), spec, stage_cores)?;
+    // Partition over the *surviving* cores: after a blacklist the
+    // degrade loop re-enters here and the DP re-runs on the smaller
+    // pool.
+    let alive = pool.alive_ids();
+    let stages = resolve_stage_partition(layers, alive.len(), spec, stage_cores)?;
     let n_stages = stages.len();
     let mut ex = StreamExec {
         name: name.into(),
@@ -1298,7 +1525,7 @@ pub(crate) fn stream_exec(
     let mut nets: Vec<NetworkResult> = (0..inputs.len())
         .map(|_| NetworkResult { name: name.into(), ..Default::default() })
         .collect();
-    let mut offset = 0usize; // first pool core of the current group
+    let mut offset = 0usize; // first logical slot of the current group
     for (s, &(l0, l1, k)) in stages.iter().enumerate() {
         let tensors: Vec<Option<(Vec<i16>, Vec<i32>)>> =
             layers[l0..l1].iter().map(|l| l.op().draw(&mut rng)).collect();
@@ -1306,8 +1533,17 @@ pub(crate) fn stream_exec(
             let mut layer_cells = Vec::with_capacity(l1 - l0);
             for (t, li) in (l0..l1).enumerate() {
                 if k == 1 {
-                    let (cpu, scratch) = pool.core(offset);
-                    let mut runner = SoloRunner { cpu, scratch, cache, opts: inner };
+                    let core = alive[offset];
+                    let (cpu, scratch) = pool.core(core);
+                    let mut runner = SoloRunner {
+                        cpu,
+                        scratch,
+                        cache,
+                        opts: inner,
+                        faults: spec.faults,
+                        frame: f as u64,
+                        core,
+                    };
                     let r = step_layer(&mut runner, &layers[li], &tensors[t], act)?;
                     layer_cells.push(vec![(0usize, Segment::of_layer(&r))]);
                     nets[f].layers.push(r);
@@ -1318,6 +1554,7 @@ pub(crate) fn stream_exec(
                         spec,
                         offset,
                         k,
+                        frame: f as u64,
                         shards: Vec::new(),
                     };
                     let r = step_layer(&mut runner, &layers[li], &tensors[t], act)?;
@@ -1489,12 +1726,54 @@ pub(crate) fn run_streaming_on(
     spec: RunSpec,
     stage_cores: &StageCores,
 ) -> Result<PipelineResult, ExecError> {
-    let ex = stream_exec(pool, cache, name, layers, inputs, spec, stage_cores)?;
+    let (ex, waste) = stream_exec_degrading(pool, cache, name, layers, inputs, spec, stage_cores)?;
     let d = match spec.bus {
         BusModel::Partitioned => 1,
         BusModel::Shared => shared_divisor(&core_timelines(&ex)),
     };
-    Ok(price_stream(ex, spec.bus, d))
+    let mut res = price_stream(ex, spec.bus, d);
+    res.faults = stream_fault_report(&res.frames, pool, waste);
+    res.makespan_cycles += waste;
+    Ok(res)
+}
+
+/// Execute a stream with the fault degrade loop: on
+/// [`ExecError::CoreFailure`] the exhausted core is blacklisted, its
+/// watchdog-bounded waste is charged, and the whole stream re-runs over
+/// the survivors (the partition-DP re-cuts for the smaller pool; the
+/// deterministic draws keep the re-run's outputs bit-identical). Fails
+/// only when a lone surviving core fails.
+fn stream_exec_degrading(
+    pool: &mut CorePool,
+    cache: &PlanCache,
+    name: &str,
+    layers: &[NetLayer],
+    inputs: &[Vec<i16>],
+    spec: RunSpec,
+    stage_cores: &StageCores,
+) -> Result<(StreamExec, u64), ExecError> {
+    let mut waste = 0u64;
+    loop {
+        match stream_exec(pool, cache, name, layers, inputs, spec, stage_cores) {
+            Err(ExecError::CoreFailure { core, layer }) if pool.alive_cores() > 1 => {
+                waste += degrade_waste(&spec.faults, static_layer_cost(layers, &layer));
+                pool.blacklist(core);
+            }
+            Ok(ex) => return Ok((ex, waste)),
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Fault/recovery account of a priced stream: per-layer retry sums plus
+/// the degrade waste, and the pool's bench list as the topology report.
+fn stream_fault_report(frames: &[NetworkResult], pool: &CorePool, waste: u64) -> FaultReport {
+    FaultReport {
+        retries: frames.iter().map(|f| f.fault_retries()).sum(),
+        recovery_cycles: frames.iter().map(|f| f.fault_recovery_cycles()).sum::<u64>() + waste,
+        blacklisted_cores: pool.blacklisted().to_vec(),
+        degrade_waste_cycles: waste,
+    }
 }
 
 #[cfg(test)]

@@ -101,6 +101,16 @@ pub enum ExecError {
     /// A run configuration the scheduler cannot honor (e.g. an explicit
     /// `--stage-cores` plan asking for more cores than the pool has).
     Config(String),
+    /// A pool core is gone: it exhausted its fault-retry budget on
+    /// `layer` (see [`super::faults`]), or its worker thread panicked.
+    /// The engine catches this, blacklists the core and re-runs the
+    /// shard assignment / stage partition over the survivors; it only
+    /// escapes to the caller when no survivor is left.
+    CoreFailure { core: usize, layer: String },
+    /// A shard-hand-off checksum cross-check failed at `merge_shards`:
+    /// data changed between a shard's (verified) production and its
+    /// merge — corruption the bounded retry could not see.
+    Corrupted { layer: String },
 }
 
 impl std::fmt::Display for ExecError {
@@ -109,6 +119,12 @@ impl std::fmt::Display for ExecError {
             ExecError::Codegen(e) => write!(f, "codegen: {e}"),
             ExecError::Sim(e) => write!(f, "sim: {e}"),
             ExecError::Config(msg) => write!(f, "config: {msg}"),
+            ExecError::CoreFailure { core, layer } => {
+                write!(f, "core failure: core {core} failed layer `{layer}` beyond its retry budget")
+            }
+            ExecError::Corrupted { layer } => {
+                write!(f, "detected corruption: shard output checksum mismatch in layer `{layer}`")
+            }
         }
     }
 }
@@ -118,7 +134,9 @@ impl std::error::Error for ExecError {
         match self {
             ExecError::Codegen(e) => Some(e),
             ExecError::Sim(e) => Some(e),
-            ExecError::Config(_) => None,
+            ExecError::Config(_) | ExecError::CoreFailure { .. } | ExecError::Corrupted { .. } => {
+                None
+            }
         }
     }
 }

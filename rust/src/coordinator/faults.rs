@@ -1,0 +1,583 @@
+//! Seeded, deterministic fault injection and detect/retry/degrade
+//! recovery for the execution stack.
+//!
+//! The paper's 497 GOP/s/W story assumes a perfect substrate; dense
+//! 28 nm SRAM and a single-channel LPDDR interface are not one. This
+//! module prices the gap. A [`FaultPlan`] injects the three soft-error
+//! classes such a part actually suffers — DM word bit-flips in staged
+//! tensors, corrupted/dropped DMA transfers, and core hang/fail events
+//! — at sites keyed by `(frame, layer, core)` through one xorshift
+//! draw per site, so a campaign replays **bit-identically** for a
+//! given seed regardless of host threading or shard policy.
+//!
+//! Detection is *priced, not free*: every layer attempt pays a
+//! checksum pass over its off-chip stream
+//! ([`checksum_cycles`] — the verification unit folds
+//! [`CHECKSUM_BEATS_PER_CYCLE`](crate::mem::CHECKSUM_BEATS_PER_CYCLE)
+//! bus beats per cycle plus one DRAM-latency flush for the
+//! compare/ack), shard outputs carry FNV checksums that `merge_shards`
+//! cross-checks at the hand-off, and a watchdog bounds a layer's
+//! simulated cycles at the static analyzer's exact prediction plus a
+//! margin ([`watchdog_bound`] — the tile-analytic cycle count *is*
+//! `predict.rs`'s static timing, pinned exact by
+//! `tests/static_analysis.rs`, so the bound is honest rather than a
+//! tuned constant).
+//!
+//! Recovery is bounded re-execution: a detected transient fault costs
+//! one retry (the wasted attempt plus the re-staged transfer, charged
+//! into [`LayerResult::fault_retries`] /
+//! [`LayerResult::fault_recovery_cycles`] and the layer's `cycles`,
+//! from where it flows through `merge_shards` and the bus segment
+//! decomposition unchanged — recovery time rides in the segment's
+//! `part` term, i.e. serialized on the affected core, never scaled by
+//! the shared-bus divisor). A core whose faults persist past the
+//! [`FaultPlan::retry_budget`] raises
+//! [`ExecError::CoreFailure`]; the engine blacklists it and re-runs
+//! the shard assignment / stage partition-DP over the surviving cores,
+//! charging the exhausted attempts' watchdog-bounded waste into the
+//! run's [`FaultReport`] and makespan.
+//!
+//! **Determinism contract**: with detection enabled, every recovered
+//! run's outputs are bit-identical to the fault-free run — the faulted
+//! attempt is discarded and the retry re-executes the same
+//! deterministic computation, so transparency holds *by construction*
+//! (and is locked across shard policies × buses × modes by
+//! `tests/fault_recovery.rs`). With detection disabled the injector
+//! corrupts the real output tensor and charges nothing — the
+//! measurably-wrong baseline that proves the injector is live.
+
+use crate::mem::{CHECKSUM_BEATS_PER_CYCLE, EXT_BYTES_PER_CYCLE, EXT_LATENCY_CYCLES};
+use crate::util::XorShift;
+
+use super::executor::{dma_cycles, ExecError};
+use super::metrics::LayerResult;
+
+/// One injected fault class. `CoreFail` is persistent (the site keeps
+/// failing across retries, exhausting the budget); the others are
+/// transient (one clean retry recovers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// A DM word bit-flip in a staged tensor: the attempt completes but
+    /// its output is wrong — caught by the output checksum, recovered
+    /// by re-staging the input and re-running the layer.
+    BitFlip,
+    /// A corrupted DMA transfer: caught in flight by the per-transfer
+    /// checksum, recovered by re-issuing the stream.
+    DmaCorrupt,
+    /// A dropped DMA transfer: noticed at the descriptor timeout,
+    /// recovered by re-issuing (timeout + retransfer latency).
+    DmaDrop,
+    /// A hung core: caught when the layer exceeds its watchdog bound,
+    /// recovered by resetting and re-running.
+    CoreHang,
+    /// A persistently failing core: every retry fails; the budget
+    /// exhausts and the engine degrades around the core.
+    CoreFail,
+}
+
+/// Every kind, in the deterministic pick order of [`FaultPlan::draw`].
+pub const ALL_KINDS: [FaultKind; 5] = [
+    FaultKind::BitFlip,
+    FaultKind::DmaCorrupt,
+    FaultKind::DmaDrop,
+    FaultKind::CoreHang,
+    FaultKind::CoreFail,
+];
+
+impl FaultKind {
+    /// Bit in a [`FaultPlan::kinds`] mask.
+    pub fn mask(self) -> u8 {
+        match self {
+            FaultKind::BitFlip => 0b0_0001,
+            FaultKind::DmaCorrupt => 0b0_0010,
+            FaultKind::DmaDrop => 0b0_0100,
+            FaultKind::CoreHang => 0b0_1000,
+            FaultKind::CoreFail => 0b1_0000,
+        }
+    }
+}
+
+/// Default kind mask: every transient kind. `CoreFail` is opt-in —
+/// a default campaign should stress recovery, not demand spare cores.
+pub const TRANSIENT_KINDS: u8 = 0b0_1111;
+
+/// A seeded fault-injection campaign: which faults hit which
+/// `(frame, layer, core)` sites, whether detection/recovery runs, and
+/// how many retries a core gets before it is written off.
+///
+/// `Copy` so it rides inside the engine's `RunSpec` for free.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Campaign seed: the per-site draw is
+    /// `XorShift(mix(seed, frame, layer, core))`, so two runs with the
+    /// same seed inject the exact same faults at the exact same sites.
+    pub seed: u64,
+    /// Per-site fault probability in parts per million (0..=1_000_000).
+    pub rate_ppm: u32,
+    /// Enabled [`FaultKind`] mask (see [`FaultKind::mask`]).
+    pub kinds: u8,
+    /// Detection + recovery on (the default). When `false`, injected
+    /// faults silently corrupt the output tensor and charge nothing —
+    /// the honest "no protection" baseline.
+    pub detect: bool,
+    /// Retries a core gets per layer before [`ExecError::CoreFailure`]
+    /// blacklists it. Transient faults need 1; a budget of 0 makes any
+    /// detected fault fatal for its core.
+    pub retry_budget: u32,
+}
+
+impl FaultPlan {
+    /// A detection-on campaign over the transient kinds at `rate`
+    /// (fraction of sites, clamped to [0, 1]).
+    pub fn new(seed: u64, rate: f64) -> Self {
+        Self {
+            seed,
+            rate_ppm: (rate.clamp(0.0, 1.0) * 1e6) as u32,
+            kinds: TRANSIENT_KINDS,
+            detect: true,
+            retry_budget: 3,
+        }
+    }
+
+    /// Replace the kind mask.
+    pub fn kinds(mut self, mask: u8) -> Self {
+        self.kinds = mask;
+        self
+    }
+
+    /// Enable/disable detection + recovery.
+    pub fn detect(mut self, on: bool) -> Self {
+        self.detect = on;
+        self
+    }
+
+    /// Replace the per-core retry budget.
+    pub fn retry_budget(mut self, n: u32) -> Self {
+        self.retry_budget = n;
+        self
+    }
+
+    /// The deterministic site draw: `None` (no fault) or the kind
+    /// injected at `(frame, layer, core)`. Pure in the plan and the
+    /// site key — host threading and execution order cannot move it.
+    pub fn draw(&self, frame: u64, layer: u64, core: u64) -> Option<FaultKind> {
+        self.site_rng(frame, layer, core).1
+    }
+
+    /// Site rng + drawn kind; the rng is advanced past the draw so the
+    /// corruption path can keep pulling deterministic values from it.
+    fn site_rng(&self, frame: u64, layer: u64, core: u64) -> (XorShift, Option<FaultKind>) {
+        let mut rng = XorShift::new(mix(self.seed, frame, layer, core));
+        if self.rate_ppm == 0 || self.kinds == 0 {
+            return (rng, None);
+        }
+        if rng.next_u64() % 1_000_000 >= u64::from(self.rate_ppm) {
+            return (rng, None);
+        }
+        let enabled: Vec<FaultKind> =
+            ALL_KINDS.iter().copied().filter(|k| self.kinds & k.mask() != 0).collect();
+        let pick = (rng.next_u64() % enabled.len() as u64) as usize;
+        let kind = enabled[pick];
+        (rng, Some(kind))
+    }
+
+    /// Watchdog-bounded cycles wasted by a core that exhausted its
+    /// retry budget on a layer of static cost `static_cycles`: every
+    /// attempt ran to (at worst) the watchdog bound before failing.
+    pub(crate) fn fail_waste(&self, static_cycles: u64) -> u64 {
+        (u64::from(self.retry_budget) + 1) * watchdog_bound(static_cycles)
+    }
+}
+
+/// `seed[:rate[:kinds]]` — the CLI `--inject` spec. `seed` is decimal
+/// or `0x…` hex; `rate` is a fraction in [0, 1] (default 0.05);
+/// `kinds` is a comma list of
+/// `bitflip | dma-corrupt | dma-drop | hang | fail | all | silent`
+/// (default: every transient kind, detection on; `silent` disables
+/// detection; `all` enables every kind including `fail`).
+impl std::str::FromStr for FaultPlan {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let mut parts = s.splitn(3, ':');
+        let seed_s = parts.next().unwrap_or(""); // invariant: splitn yields >= 1 part
+        let seed = if let Some(hex) = seed_s.strip_prefix("0x").or_else(|| seed_s.strip_prefix("0X")) {
+            u64::from_str_radix(hex, 16)
+        } else {
+            seed_s.parse::<u64>()
+        }
+        .map_err(|_| format!("--inject: bad seed `{seed_s}` (decimal or 0x… hex)"))?;
+        let mut plan = FaultPlan::new(seed, 0.05);
+        if let Some(rate_s) = parts.next() {
+            let rate: f64 = rate_s
+                .parse()
+                .map_err(|_| format!("--inject: bad rate `{rate_s}` (fraction in [0, 1])"))?;
+            if !(0.0..=1.0).contains(&rate) {
+                return Err(format!("--inject: rate {rate} outside [0, 1]"));
+            }
+            plan.rate_ppm = (rate * 1e6) as u32;
+        }
+        if let Some(kinds_s) = parts.next() {
+            let mut mask = 0u8;
+            for tok in kinds_s.split(',') {
+                match tok.trim() {
+                    "bitflip" | "bit-flip" => mask |= FaultKind::BitFlip.mask(),
+                    "dma-corrupt" | "corrupt" => mask |= FaultKind::DmaCorrupt.mask(),
+                    "dma-drop" | "drop" => mask |= FaultKind::DmaDrop.mask(),
+                    "hang" => mask |= FaultKind::CoreHang.mask(),
+                    "fail" => mask |= FaultKind::CoreFail.mask(),
+                    "all" => mask |= ALL_KINDS.iter().map(|k| k.mask()).sum::<u8>(),
+                    "silent" | "no-detect" => plan.detect = false,
+                    other => {
+                        return Err(format!(
+                            "--inject: unknown fault kind `{other}` (bitflip | dma-corrupt | \
+                             dma-drop | hang | fail | all | silent)"
+                        ))
+                    }
+                }
+            }
+            if mask != 0 {
+                plan.kinds = mask;
+            }
+        }
+        Ok(plan)
+    }
+}
+
+/// SplitMix64-style site-key mixer: decorrelates the per-site rng
+/// streams so neighbouring `(frame, layer, core)` sites draw
+/// independently.
+fn mix(seed: u64, frame: u64, layer: u64, core: u64) -> u64 {
+    let mut h = seed ^ 0x9E37_79B9_7F4A_7C15;
+    for v in [frame, layer, core] {
+        h ^= v.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        h = h.rotate_left(27).wrapping_mul(0x94D0_49BB_1331_11EB);
+    }
+    h
+}
+
+/// FNV-1a over a layer's static name — the deterministic `layer` half
+/// of a fault-site key (model names are unique within a net, and the
+/// key survives re-sharding / re-partitioning, which a positional
+/// index would not).
+pub fn layer_key(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a over an output tensor — the shard-level checksum
+/// `merge_shards` cross-checks at the shard hand-off.
+pub fn checksum_words(words: &[i16]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for w in words {
+        h ^= u64::from(*w as u16);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Cycles the verification unit spends checksumming a `bytes`-long
+/// off-chip stream: it keeps up with
+/// [`CHECKSUM_BEATS_PER_CYCLE`](crate::mem::CHECKSUM_BEATS_PER_CYCLE)
+/// bus beats per cycle (a wide XOR/FNV fold), plus one DRAM-latency
+/// flush for the compare/ack round trip. Zero-byte streams verify for
+/// free.
+pub fn checksum_cycles(bytes: u64) -> u64 {
+    if bytes == 0 {
+        return 0;
+    }
+    bytes.div_ceil((CHECKSUM_BEATS_PER_CYCLE * EXT_BYTES_PER_CYCLE) as u64) + EXT_LATENCY_CYCLES
+}
+
+/// The watchdog's cycle bound for a layer predicted (exactly, by the
+/// static analyzer — tile-analytic cycles ARE `predict.rs`'s timing)
+/// to take `predicted` cycles: prediction + 12.5 % margin + a 64-cycle
+/// floor. A core still running past this is hung by definition.
+pub fn watchdog_bound(predicted: u64) -> u64 {
+    predicted + predicted / 8 + 64
+}
+
+/// Inject, detect and recover at one `(frame, layer, core)` site,
+/// against the *clean* result `r` of the layer attempt.
+///
+/// Timing here is data-independent (the repo's locked invariant), so a
+/// discarded faulted attempt costs exactly what the clean attempt's
+/// accounting says — recovery is priced from `r`'s own cycle/byte
+/// numbers without executing corrupted data:
+///
+/// * detection on: every attempt pays [`checksum_cycles`] over its
+///   off-chip stream; a drawn transient fault adds one retry
+///   (`fault_retries`) and its kind-specific recovery cycles
+///   (`fault_recovery_cycles`, also added to `cycles` so the cost
+///   flows through every makespan/bus account); a drawn `CoreFail`
+///   (or any fault with a zero retry budget) raises
+///   [`ExecError::CoreFailure`] for the engine's blacklist/degrade
+///   path. The output is always the clean output — recovery is
+///   semantically transparent.
+/// * detection off: a drawn fault deterministically corrupts the real
+///   output tensor (FullCycle mode) and charges nothing.
+pub(crate) fn apply_layer_faults(
+    plan: &FaultPlan,
+    frame: u64,
+    layer: u64,
+    core: usize,
+    r: &mut LayerResult,
+) -> Result<(), ExecError> {
+    let clean_cycles = r.cycles;
+    let (mut rng, drawn) = plan.site_rng(frame, layer, core);
+    if plan.detect {
+        // every attempt verifies its streams, faulted or not
+        r.cycles += checksum_cycles(r.io_in + r.io_out);
+        r.out_checksum = checksum_words(&r.out);
+        let Some(kind) = drawn else { return Ok(()) };
+        if kind == FaultKind::CoreFail || plan.retry_budget == 0 {
+            return Err(ExecError::CoreFailure { core, layer: r.name.to_string() });
+        }
+        let recovery = match kind {
+            // wrong output caught at the output check: the whole
+            // attempt is wasted, the input re-stages, the layer re-runs
+            FaultKind::BitFlip => clean_cycles + dma_cycles(r.io_in, 1),
+            // caught in flight by the transfer checksum: re-issue only
+            FaultKind::DmaCorrupt => dma_cycles(r.io_in.max(r.io_out), 1),
+            // descriptor timeout, then re-issue
+            FaultKind::DmaDrop => dma_cycles(r.io_in, 2),
+            // watchdog fires at the bound; reset and re-run (the clean
+            // attempt already counted — this is the hung time)
+            FaultKind::CoreHang => watchdog_bound(clean_cycles),
+            FaultKind::CoreFail => unreachable!("handled above"),
+        } + checksum_cycles(r.io_in + r.io_out); // the retry re-verifies
+        r.fault_retries += 1;
+        r.fault_recovery_cycles += recovery;
+        r.cycles += recovery;
+    } else if let Some(kind) = drawn {
+        corrupt(&mut rng, kind, &mut r.out);
+    }
+    Ok(())
+}
+
+/// Deterministic output corruption for detection-off campaigns. A
+/// bit-flip/corrupt fault XORs one drawn bit of one drawn word (always
+/// changes the tensor); a drop zeroes a 16-word run; a hang/fail
+/// leaves a poisoned run. No-op on empty (analytic-mode) outputs.
+fn corrupt(rng: &mut XorShift, kind: FaultKind, out: &mut [i16]) {
+    if out.is_empty() {
+        return;
+    }
+    let i = (rng.next_u64() % out.len() as u64) as usize;
+    match kind {
+        FaultKind::BitFlip | FaultKind::DmaCorrupt => {
+            out[i] ^= 1i16 << (rng.next_u64() % 16);
+        }
+        FaultKind::DmaDrop => {
+            let end = (i + 16).min(out.len());
+            out[i..end].fill(0);
+        }
+        FaultKind::CoreHang | FaultKind::CoreFail => {
+            let end = (i + 64).min(out.len());
+            out[i..end].fill(-1);
+        }
+    }
+}
+
+/// Fault/recovery account of a whole run (batched, streaming or
+/// multi-tenant): the degraded-topology report the results carry.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultReport {
+    /// Detected-and-retried faults, including the exhausted attempts of
+    /// blacklisted cores.
+    pub retries: u64,
+    /// Total modeled recovery cycles: the per-layer
+    /// `fault_recovery_cycles` sums plus `degrade_waste_cycles`.
+    pub recovery_cycles: u64,
+    /// Pool cores blacklisted after exhausting their retry budget, in
+    /// blacklist order. Non-empty ⇒ the run finished on a degraded
+    /// topology (the partition-DP / shard assignment re-ran over the
+    /// survivors).
+    pub blacklisted_cores: Vec<usize>,
+    /// Watchdog-bounded cycles the exhausted cores wasted before each
+    /// degrade re-partition — charged on top of the degraded makespan
+    /// (the re-run starts only after the watchdog gives up).
+    pub degrade_waste_cycles: u64,
+}
+
+impl FaultReport {
+    /// Did the run lose cores and re-partition?
+    pub fn degraded(&self) -> bool {
+        !self.blacklisted_cores.is_empty()
+    }
+
+    /// Anything to report at all?
+    pub fn any(&self) -> bool {
+        self.retries > 0 || self.recovery_cycles > 0 || self.degraded()
+    }
+
+    /// Fold another report in (multi-tenant aggregation).
+    pub fn absorb(&mut self, other: &FaultReport) {
+        self.retries += other.retries;
+        self.recovery_cycles += other.recovery_cycles;
+        self.blacklisted_cores.extend_from_slice(&other.blacklisted_cores);
+        self.degrade_waste_cycles += other.degrade_waste_cycles;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn site_draws_replay_bit_identically() {
+        let plan = FaultPlan::new(0xBEEF, 0.5);
+        for frame in 0..4u64 {
+            for layer in [layer_key("conv1"), layer_key("fc6")] {
+                for core in 0..4u64 {
+                    assert_eq!(
+                        plan.draw(frame, layer, core),
+                        plan.draw(frame, layer, core),
+                        "site draw must be pure in (plan, site)"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rate_bounds_hold() {
+        let never = FaultPlan::new(7, 0.0);
+        let always = FaultPlan::new(7, 1.0);
+        let mut hits = 0;
+        for site in 0..200u64 {
+            assert_eq!(never.draw(site, 1, 2), None);
+            if always.draw(site, 1, 2).is_some() {
+                hits += 1;
+            }
+        }
+        assert_eq!(hits, 200, "rate 1.0 must hit every site");
+    }
+
+    #[test]
+    fn kind_mask_restricts_draws() {
+        let plan = FaultPlan::new(11, 1.0).kinds(FaultKind::DmaDrop.mask());
+        for site in 0..50u64 {
+            assert_eq!(plan.draw(site, 3, 0), Some(FaultKind::DmaDrop));
+        }
+    }
+
+    #[test]
+    fn parse_full_spec() {
+        let p: FaultPlan = "0xBEEF:0.25:bitflip,hang".parse().unwrap();
+        assert_eq!(p.seed, 0xBEEF);
+        assert_eq!(p.rate_ppm, 250_000);
+        assert_eq!(p.kinds, FaultKind::BitFlip.mask() | FaultKind::CoreHang.mask());
+        assert!(p.detect);
+        let q: FaultPlan = "42".parse().unwrap();
+        assert_eq!(q.seed, 42);
+        assert_eq!(q.kinds, TRANSIENT_KINDS);
+        let s: FaultPlan = "1:1.0:bitflip,silent".parse().unwrap();
+        assert!(!s.detect);
+        assert_eq!(s.kinds, FaultKind::BitFlip.mask());
+        let a: FaultPlan = "1:0.5:all".parse().unwrap();
+        assert_eq!(a.kinds, ALL_KINDS.iter().map(|k| k.mask()).sum::<u8>());
+    }
+
+    #[test]
+    fn parse_errors_name_the_flag() {
+        for bad in ["zzz", "1:2.5", "1:-0.1", "1:0.5:gamma-ray", "1:abc"] {
+            let err = bad.parse::<FaultPlan>().unwrap_err();
+            assert!(err.contains("--inject"), "`{bad}` error must name --inject: {err}");
+        }
+    }
+
+    #[test]
+    fn detection_pricing_is_charged_and_transparent() {
+        let mut r = LayerResult {
+            name: "t",
+            cycles: 10_000,
+            io_in: 4096,
+            io_out: 1024,
+            out: vec![1, 2, 3, 4],
+            ..Default::default()
+        };
+        let clean_out = r.out.clone();
+        // no fault drawn: checksum overhead only
+        let plan = FaultPlan::new(1, 0.0);
+        apply_layer_faults(&plan, 0, 0, 0, &mut r).unwrap();
+        assert_eq!(r.cycles, 10_000 + checksum_cycles(5120));
+        assert_eq!(r.fault_retries, 0);
+        assert_eq!(r.out, clean_out);
+        assert_eq!(r.out_checksum, checksum_words(&clean_out));
+        // guaranteed fault: recovery charged, output still clean
+        let mut r2 = LayerResult {
+            name: "t",
+            cycles: 10_000,
+            io_in: 4096,
+            io_out: 1024,
+            out: clean_out.clone(),
+            ..Default::default()
+        };
+        let hot = FaultPlan::new(1, 1.0);
+        apply_layer_faults(&hot, 0, 0, 0, &mut r2).unwrap();
+        assert_eq!(r2.fault_retries, 1);
+        assert!(r2.fault_recovery_cycles > 0);
+        assert_eq!(r2.cycles, 10_000 + checksum_cycles(5120) + r2.fault_recovery_cycles);
+        assert_eq!(r2.out, clean_out, "recovery must be semantically transparent");
+    }
+
+    #[test]
+    fn silent_faults_corrupt_and_cost_nothing() {
+        let mut r = LayerResult {
+            name: "t",
+            cycles: 10_000,
+            io_in: 4096,
+            io_out: 1024,
+            out: vec![7i16; 256],
+            ..Default::default()
+        };
+        let plan = FaultPlan::new(3, 1.0).kinds(FaultKind::BitFlip.mask()).detect(false);
+        apply_layer_faults(&plan, 0, 0, 0, &mut r).unwrap();
+        assert_eq!(r.cycles, 10_000, "silent faults charge nothing");
+        assert_ne!(r.out, vec![7i16; 256], "silent faults corrupt the output");
+        assert_eq!(r.fault_retries, 0);
+    }
+
+    #[test]
+    fn core_fail_exhausts_into_core_failure() {
+        let mut r = LayerResult { name: "conv9", cycles: 5_000, ..Default::default() };
+        let plan = FaultPlan::new(5, 1.0).kinds(FaultKind::CoreFail.mask());
+        match apply_layer_faults(&plan, 0, 0, 2, &mut r) {
+            Err(ExecError::CoreFailure { core, layer }) => {
+                assert_eq!(core, 2);
+                assert_eq!(layer, "conv9");
+            }
+            other => panic!("expected CoreFailure, got {other:?}"),
+        }
+        // zero budget makes transient faults fatal too
+        let mut r2 = LayerResult { name: "conv9", cycles: 5_000, ..Default::default() };
+        let strict = FaultPlan::new(5, 1.0).kinds(FaultKind::BitFlip.mask()).retry_budget(0);
+        assert!(matches!(
+            apply_layer_faults(&strict, 0, 0, 0, &mut r2),
+            Err(ExecError::CoreFailure { .. })
+        ));
+    }
+
+    #[test]
+    fn watchdog_bound_exceeds_prediction() {
+        assert_eq!(watchdog_bound(0), 64);
+        assert_eq!(watchdog_bound(8000), 8000 + 1000 + 64);
+        let plan = FaultPlan::new(1, 1.0);
+        assert_eq!(plan.fail_waste(8000), 4 * watchdog_bound(8000));
+    }
+
+    #[test]
+    fn checksums_detect_single_word_changes() {
+        let a = vec![1i16, -2, 3, 4];
+        let mut b = a.clone();
+        assert_eq!(checksum_words(&a), checksum_words(&b));
+        b[2] ^= 1;
+        assert_ne!(checksum_words(&a), checksum_words(&b));
+        assert_eq!(checksum_cycles(0), 0);
+        assert!(checksum_cycles(1) >= EXT_LATENCY_CYCLES);
+    }
+}

@@ -46,6 +46,18 @@ pub struct LayerResult {
     /// multi-core scheduler (empty for single-core runs). `cycles` is
     /// then the makespan — the maximum entry of this vector.
     pub core_cycles: Vec<u64>,
+    /// Faults detected and retried on this layer (0 when fault
+    /// injection is off — see [`super::faults`]).
+    pub fault_retries: u64,
+    /// Cycles spent detecting and recovering (wasted attempts,
+    /// re-staged transfers, watchdog waits, retry re-verification).
+    /// Already included in `cycles`; recorded separately so reports can
+    /// split clean time from recovery time.
+    pub fault_recovery_cycles: u64,
+    /// FNV checksum of `out`, stamped at (priced) verification time
+    /// when a fault plan with detection is active; 0 otherwise.
+    /// `merge_shards` cross-checks it at the shard hand-off.
+    pub out_checksum: u64,
 }
 
 impl LayerResult {
@@ -141,6 +153,15 @@ impl NetworkResult {
     }
     pub fn gops(&self) -> f64 {
         2.0 * self.macs() as f64 / (self.cycles() as f64 / crate::CLOCK_HZ as f64) / 1e9
+    }
+    /// Faults detected and retried across all layers.
+    pub fn fault_retries(&self) -> u64 {
+        self.layers.iter().map(|l| l.fault_retries).sum()
+    }
+    /// Cycles spent on fault recovery across all layers (already
+    /// inside [`NetworkResult::cycles`]).
+    pub fn fault_recovery_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.fault_recovery_cycles).sum()
     }
     /// Aggregate core stats over all layers.
     pub fn stats(&self) -> CoreStats {
@@ -257,9 +278,16 @@ pub struct PipelineResult {
     /// entering stage 0 to leaving the last stage).
     pub drain_cycles: u64,
     /// End-to-end cycles for the whole stream (flow-shop makespan).
+    /// After a mid-stream degrade this includes the blacklisted cores'
+    /// watchdog-bounded waste (`faults.degrade_waste_cycles`).
     pub makespan_cycles: u64,
     /// External-bus model the stream was priced under.
     pub bus: BusModel,
+    /// Fault/recovery account and degraded-topology report: retries,
+    /// recovery cycles, blacklisted cores. `stages`/`stage_cores`
+    /// describe the partition the stream *finished* on — after a
+    /// degrade that is the re-partition over the surviving cores.
+    pub faults: super::faults::FaultReport,
 }
 
 impl PipelineResult {
@@ -339,6 +367,9 @@ pub struct MultiTenantResult {
     pub divisor: u64,
     /// Cores counted as concurrently DMA-bound at the fixed point.
     pub contenders: usize,
+    /// Aggregate fault/recovery account over all tenants (each tenant's
+    /// own report stays on its [`PipelineResult`]).
+    pub faults: super::faults::FaultReport,
 }
 
 impl MultiTenantResult {

@@ -47,6 +47,7 @@
 pub mod bus;
 pub mod engine;
 pub mod executor;
+pub mod faults;
 pub mod metrics;
 pub mod ops;
 
@@ -57,5 +58,6 @@ pub use engine::{
     StageCores, TenantRun,
 };
 pub use executor::{ExecCtx, ExecMode, ExecOptions, NetLayer};
+pub use faults::{FaultKind, FaultPlan, FaultReport};
 pub use metrics::{LayerResult, MultiTenantResult, NetworkResult, PipelineResult};
 pub use ops::LayerOp;

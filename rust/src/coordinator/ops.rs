@@ -162,7 +162,9 @@ pub trait LayerOp {
     }
 
     /// Merge executed shard results into the layer's [`LayerResult`]:
-    /// accumulate metrics, scatter outputs through the placement runs,
+    /// accumulate metrics (fault retry/recovery counters included),
+    /// cross-check the shards' output checksums when a detecting fault
+    /// plan is active, scatter outputs through the placement runs, and
     /// price per-core busy time under the bus model. The shared default
     /// serves every kind.
     fn merge(
@@ -173,8 +175,19 @@ pub trait LayerOp {
         cores: usize,
         mode: ExecMode,
         bus: BusModel,
-    ) -> LayerResult {
-        merge_shards(self.name(), self.out_elems(), results, placements, core_of, cores, mode, bus)
+        faults: Option<&super::faults::FaultPlan>,
+    ) -> Result<LayerResult, ExecError> {
+        merge_shards(
+            self.name(),
+            self.out_elems(),
+            results,
+            placements,
+            core_of,
+            cores,
+            mode,
+            bus,
+            faults,
+        )
     }
 }
 
@@ -479,6 +492,17 @@ fn resolve_pool_policy(policy: ShardPolicy, layer: &PoolLayer, cores: usize) -> 
 /// metrics, scatters shard outputs through their placement runs, and
 /// prices per-core busy time under the bus model. The layer's latency
 /// is the makespan of the slowest core.
+///
+/// With a detecting fault plan active, each shard's output checksum
+/// (stamped at its priced verification, `faults::apply_layer_faults`)
+/// is recomputed and cross-checked here — a mismatch means the data
+/// changed between the shard's verified production and the merge
+/// hand-off, which bounded per-core retry cannot repair, so it
+/// surfaces as [`ExecError::Corrupted`]. Fault retry/recovery counters
+/// sum like every other shard metric; the recovery cycles themselves
+/// ride inside each shard's `cycles`, so they flow through the bus
+/// segment decomposition (serialized on the owning core) and the
+/// makespan without any special-casing.
 #[allow(clippy::too_many_arguments)]
 fn merge_shards(
     name: &'static str,
@@ -489,15 +513,20 @@ fn merge_shards(
     cores: usize,
     mode: ExecMode,
     bus: BusModel,
-) -> LayerResult {
+    faults: Option<&super::faults::FaultPlan>,
+) -> Result<LayerResult, ExecError> {
     use super::bus::{core_busy, Segment};
     use super::metrics::add_stats;
 
+    let check = faults.is_some_and(|p| p.detect);
     let mut res = LayerResult { name, ..Default::default() };
     // only FullCycle produces shard outputs worth merging
     let mut out = if mode == ExecMode::FullCycle { vec![0i16; out_len] } else { Vec::new() };
     let mut segs: Vec<Vec<Segment>> = (0..cores).map(|_| Vec::new()).collect();
     for (idx, r) in results.into_iter().enumerate() {
+        if check && !r.out.is_empty() && super::faults::checksum_words(&r.out) != r.out_checksum {
+            return Err(ExecError::Corrupted { layer: name.to_string() });
+        }
         res.compute_cycles += r.compute_cycles;
         res.dma_cycles += r.dma_cycles;
         res.dma_fill_bytes += r.dma_fill_bytes;
@@ -507,6 +536,8 @@ fn merge_shards(
         res.macs += r.macs;
         res.io_in += r.io_in;
         res.io_out += r.io_out;
+        res.fault_retries += r.fault_retries;
+        res.fault_recovery_cycles += r.fault_recovery_cycles;
         res.stats = add_stats(&res.stats, &r.stats);
         segs[core_of[idx]].push(Segment::of_layer(&r));
         if !r.out.is_empty() {
@@ -523,7 +554,10 @@ fn merge_shards(
     if mode == ExecMode::FullCycle {
         res.out = out;
     }
-    res
+    if check {
+        res.out_checksum = super::faults::checksum_words(&res.out);
+    }
+    Ok(res)
 }
 
 // ---------------------------------------------------------------------------

@@ -43,6 +43,11 @@ pub const PM_BYTES: usize = 16 * 1024;
 pub const EXT_BYTES_PER_CYCLE: usize = 8;
 /// Fixed DRAM request latency in cycles (row activation + controller).
 pub const EXT_LATENCY_CYCLES: u64 = 40;
+/// Checksum throughput relative to the DMA stream: the fold unit
+/// digests `CHECKSUM_BEATS_PER_CYCLE × EXT_BYTES_PER_CYCLE` bytes per
+/// cycle (it rides the existing 64-bit datapath, 8 beats deep), so
+/// verifying a transfer costs ~1/8th of streaming it.
+pub const CHECKSUM_BEATS_PER_CYCLE: usize = 8;
 /// Line-buffer capacity in pixels (i16). 2 KB — enough for a full
 /// VGG/AlexNet row chunk including filter overlap.
 pub const LB_PIXELS: usize = 1024;

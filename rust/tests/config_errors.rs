@@ -1,0 +1,151 @@
+//! Negative suite: every rejectable configuration is rejected with a
+//! message that names the offending flag — CLI parsing (`Args::parse`,
+//! `--inject` specs, the FromStr impls behind `--shard` / `--bus` /
+//! `--pool-mode` / `--stage-cores`) and the engine-side
+//! `ExecError::Config` paths (empty and oversubscribed stage plans).
+
+use convaix::cli::Args;
+use convaix::coordinator::{
+    BusModel, EngineConfig, FaultPlan, NetLayer, PoolMode, ShardPolicy, StageCores,
+};
+use convaix::model::ConvLayer;
+
+fn parse(args: &[&str]) -> Result<Args, String> {
+    let argv: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+    Args::parse(&argv).map_err(|e| format!("{e}"))
+}
+
+fn err_of(args: &[&str]) -> String {
+    match parse(args) {
+        Err(e) => e,
+        Ok(_) => panic!("parse unexpectedly succeeded for {args:?}"),
+    }
+}
+
+#[test]
+fn zero_cores_and_zero_batch_are_rejected_by_flag_name() {
+    assert!(err_of(&["convaix", "run", "--cores", "0"]).contains("--cores"));
+    assert!(err_of(&["convaix", "run", "--batch", "0"]).contains("--batch"));
+}
+
+#[test]
+fn missing_flag_values_name_the_flag() {
+    for flag in [
+        "--gate",
+        "--artifacts",
+        "--cores",
+        "--batch",
+        "--pool-mode",
+        "--shard",
+        "--bus",
+        "--stage-cores",
+        "--inject",
+    ] {
+        let msg = err_of(&["convaix", "run", flag]);
+        assert!(msg.contains(flag), "`{flag}` error should name it: {msg}");
+    }
+}
+
+#[test]
+fn bad_enum_values_list_the_alternatives() {
+    assert!(err_of(&["convaix", "run", "--shard", "zig"]).contains("oc-tile | row-band | auto"));
+    assert!(err_of(&["convaix", "run", "--bus", "token-ring"]).contains("partitioned | shared"));
+    assert!(err_of(&["convaix", "run", "--pool-mode", "warp"]).contains("fan-out | pipelined"));
+    let msg = err_of(&["convaix", "run", "--stage-cores", "1,0,2"]);
+    assert!(msg.contains("stage-cores"), "{msg}");
+    assert!(msg.contains("every k >= 1"), "{msg}");
+}
+
+#[test]
+fn bad_inject_specs_name_the_flag() {
+    let bad_seed = err_of(&["convaix", "run", "--inject", "zebra"]);
+    assert!(bad_seed.contains("--inject") && bad_seed.contains("seed"), "{bad_seed}");
+
+    let bad_rate = err_of(&["convaix", "run", "--inject", "7:pi"]);
+    assert!(bad_rate.contains("--inject") && bad_rate.contains("rate"), "{bad_rate}");
+
+    let oob_rate = err_of(&["convaix", "run", "--inject", "7:1.5"]);
+    assert!(oob_rate.contains("--inject") && oob_rate.contains("[0, 1]"), "{oob_rate}");
+
+    let bad_kind = err_of(&["convaix", "run", "--inject", "7:0.1:gamma-ray"]);
+    assert!(bad_kind.contains("--inject") && bad_kind.contains("gamma-ray"), "{bad_kind}");
+}
+
+#[test]
+fn good_inject_specs_parse_to_the_documented_plan() {
+    let a = parse(&["convaix", "run", "alexnet", "--inject", "0xBEEF"]).unwrap();
+    let plan = a.inject.expect("plan armed");
+    assert_eq!(plan.seed, 0xBEEF);
+    assert_eq!(plan.rate_ppm, 50_000, "default rate is 0.05");
+    assert!(plan.detect, "detection defaults on");
+
+    let a = parse(&["convaix", "run", "alexnet", "--inject", "9:0.5:hang,fail"]).unwrap();
+    let plan = a.inject.unwrap();
+    assert_eq!(plan.rate_ppm, 500_000);
+    assert_eq!(plan.kinds, 0b1_1000, "hang | fail only");
+
+    let a = parse(&["convaix", "run", "alexnet", "--inject", "9:0.5:silent"]).unwrap();
+    let plan = a.inject.unwrap();
+    assert!(!plan.detect, "silent disables detection");
+    assert_eq!(plan.kinds, 0b0_1111, "silent alone keeps the transient default");
+
+    // spec round-trip: FromStr is the CLI surface of FaultPlan
+    let p: FaultPlan = "12:0.25:bitflip,drop".parse().unwrap();
+    assert_eq!(p.kinds, 0b0_0101);
+}
+
+#[test]
+fn engine_config_flags_survive_into_the_run_spec() {
+    let a = parse(&[
+        "convaix", "run", "alexnet", "--cores", "3", "--batch", "2", "--shard", "row-band",
+        "--bus", "shared", "--pipeline", "--inject", "4:0.1",
+    ])
+    .unwrap();
+    let cfg = a.engine_config();
+    assert_eq!(cfg.cores, 3);
+    assert_eq!(cfg.batch, 2);
+    assert_eq!(cfg.shard, ShardPolicy::RowBand);
+    assert_eq!(cfg.bus, BusModel::Shared);
+    assert_eq!(cfg.pool_mode, PoolMode::Pipelined);
+    assert_eq!(cfg.faults.unwrap().seed, 4);
+}
+
+fn tiny_net() -> Vec<NetLayer> {
+    vec![
+        NetLayer::Conv(ConvLayer::new("t1", 3, 8, 8, 16, 3, 3, 1, 1, 1)),
+        NetLayer::Conv(ConvLayer::new("t2", 16, 8, 8, 16, 3, 3, 1, 1, 1)),
+    ]
+}
+
+#[test]
+fn empty_stage_plan_is_a_config_error() {
+    let layers = tiny_net();
+    let inputs = vec![vec![0i16; 3 * 8 * 8]];
+    let mut eng = EngineConfig::new()
+        .cores(2)
+        .pool_mode(PoolMode::Pipelined)
+        .stage_cores(StageCores::Fixed(vec![]))
+        .ext_capacity(1 << 22)
+        .build();
+    let err = eng.run_streaming("tiny", &layers, &inputs).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("empty --stage-cores plan"), "{msg}");
+}
+
+#[test]
+fn oversubscribed_stage_plan_names_the_counts() {
+    let layers = tiny_net();
+    let inputs = vec![vec![0i16; 3 * 8 * 8]];
+    let mut eng = EngineConfig::new()
+        .cores(2)
+        .pool_mode(PoolMode::Pipelined)
+        .stage_cores(StageCores::Fixed(vec![3, 2]))
+        .ext_capacity(1 << 22)
+        .build();
+    let err = eng.run_streaming("tiny", &layers, &inputs).unwrap_err();
+    let msg = format!("{err}");
+    assert!(
+        msg.contains("wants 5 cores") && msg.contains("has 2"),
+        "oversubscription should name both counts: {msg}"
+    );
+}

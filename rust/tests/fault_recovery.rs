@@ -1,0 +1,292 @@
+//! Integration: deterministic fault injection + detect/retry/degrade
+//! recovery (`coordinator::faults`). The acceptance property: every
+//! injected run with detection on is **bit-identical** to the
+//! fault-free run — across shard policies × bus models × pool modes —
+//! while the same campaign with detection off measurably corrupts
+//! outputs. Campaign seeds below are chosen so the deterministic site
+//! draw provably fires (the draw is pure in `(seed, frame, layer,
+//! core)`, so these tests are exact, not probabilistic).
+
+use convaix::coordinator::{
+    BusModel, EngineConfig, FaultKind, FaultPlan, NetLayer, PoolMode, ShardPolicy, StageCores,
+};
+use convaix::model::{ConvLayer, PoolLayer};
+use convaix::util::XorShift;
+
+fn mini_net() -> Vec<NetLayer> {
+    vec![
+        NetLayer::Conv(ConvLayer::new("c1", 3, 16, 16, 32, 3, 3, 1, 1, 1)),
+        NetLayer::Pool(PoolLayer { name: "p1", ic: 32, ih: 16, iw: 16, size: 2, stride: 2 }),
+        NetLayer::Conv(ConvLayer::new("c2", 32, 8, 8, 48, 3, 3, 1, 1, 1)),
+        NetLayer::Conv(ConvLayer::new("c3g", 48, 8, 8, 32, 3, 3, 1, 1, 2)),
+    ]
+}
+
+fn net_input() -> Vec<i16> {
+    XorShift::new(1234).i16_vec(3 * 16 * 16, -2000, 2000)
+}
+
+fn frame_inputs(n: usize) -> Vec<Vec<i16>> {
+    let mut rng = XorShift::new(1234);
+    (0..n).map(|_| rng.i16_vec(3 * 16 * 16, -2000, 2000)).collect()
+}
+
+fn base_cfg() -> EngineConfig {
+    EngineConfig::new().seed(99).ext_capacity(1 << 23)
+}
+
+/// Seed 2 at rate 0.30 over the transient kinds draws a CoreHang at
+/// site `(frame 0, layer "c1", core 0)` — a site every mode exercises
+/// (shard 0, frame 0 and pipeline stage 0 all land on core 0), so
+/// every run below is guaranteed at least one detected retry.
+const TRANSIENT_SEED: u64 = 2;
+
+#[test]
+fn injected_network_bit_identical_across_policies_and_buses() {
+    let layers = mini_net();
+    let input = net_input();
+    let plan = FaultPlan::new(TRANSIENT_SEED, 0.30);
+
+    let mut total_retries = 0u64;
+    for policy in [ShardPolicy::OcTile, ShardPolicy::RowBand, ShardPolicy::Auto] {
+        for bus in [BusModel::Partitioned, BusModel::Shared] {
+            for cores in [1usize, 2, 4] {
+                let mut clean_eng =
+                    base_cfg().cores(cores).shard(policy).bus(bus).build();
+                let clean = clean_eng.run_network("mini", &layers, &input).unwrap();
+                let mut eng =
+                    base_cfg().cores(cores).shard(policy).bus(bus).faults(plan).build();
+                let r = eng.run_network("mini", &layers, &input).unwrap();
+
+                for (lc, lf) in clean.layers.iter().zip(&r.layers) {
+                    assert_eq!(
+                        lf.out, lc.out,
+                        "{policy:?}/{bus:?}/{cores}c layer {} output diverged under \
+                         detection-on injection",
+                        lc.name
+                    );
+                    assert_eq!(lf.macs, lc.macs);
+                }
+                // recovery is priced, never free
+                assert!(
+                    r.cycles() >= clean.cycles(),
+                    "{policy:?}/{bus:?}/{cores}c: injected run cheaper than clean"
+                );
+                if r.fault_retries() > 0 {
+                    assert!(r.fault_recovery_cycles() > 0);
+                    assert!(r.cycles() > clean.cycles());
+                }
+                total_retries += r.fault_retries();
+            }
+        }
+    }
+    assert!(total_retries > 0, "campaign never fired — injector is dead");
+}
+
+#[test]
+fn injected_batched_and_streaming_bit_identical() {
+    let layers = mini_net();
+    let inputs = frame_inputs(4);
+    let plan = FaultPlan::new(TRANSIENT_SEED, 0.30);
+
+    // frame fan-out
+    let mut clean_eng = base_cfg().cores(2).batch(4).build();
+    let clean = clean_eng.run_batched("mini", &layers, &inputs).unwrap();
+    let mut eng = base_cfg().cores(2).batch(4).faults(plan).build();
+    let br = eng.run_batched("mini", &layers, &inputs).unwrap();
+    for (fc, ff) in clean.frames.iter().zip(&br.frames) {
+        for (lc, lf) in fc.layers.iter().zip(&ff.layers) {
+            assert_eq!(lf.out, lc.out, "fan-out layer {} diverged", lc.name);
+        }
+    }
+    assert!(br.faults.retries > 0, "fan-out campaign never fired");
+    assert!(br.faults.recovery_cycles > 0);
+    assert!(!br.faults.degraded(), "transient kinds must not blacklist");
+    assert!(br.makespan_cycles() > clean.makespan_cycles());
+
+    // layer pipelining (frame 0 hits stage 0 / core 0 — the pinned site)
+    let mut clean_pipe =
+        base_cfg().cores(2).batch(4).pool_mode(PoolMode::Pipelined).build();
+    let pclean = clean_pipe.run_streaming("mini", &layers, &inputs).unwrap();
+    let mut pipe = base_cfg()
+        .cores(2)
+        .batch(4)
+        .pool_mode(PoolMode::Pipelined)
+        .faults(plan)
+        .build();
+    let pr = pipe.run_streaming("mini", &layers, &inputs).unwrap();
+    for (fc, ff) in pclean.frames.iter().zip(&pr.frames) {
+        for (lc, lf) in fc.layers.iter().zip(&ff.layers) {
+            assert_eq!(lf.out, lc.out, "pipelined layer {} diverged", lc.name);
+        }
+    }
+    assert!(pr.faults.retries > 0, "streaming campaign never fired");
+    assert!(pr.makespan_cycles > pclean.makespan_cycles);
+}
+
+#[test]
+fn detection_off_measurably_corrupts_outputs() {
+    let layers = mini_net();
+    let input = net_input();
+    // seed 1 at rate 0.5 over the corrupting kinds draws a DmaDrop on
+    // "p1" and a BitFlip on "c3g" at core 0 — the solo run's sites; a
+    // bit-flip always changes the flipped word, so divergence is
+    // guaranteed, not probabilistic
+    let silent = FaultPlan::new(1, 0.5)
+        .kinds(
+            FaultKind::BitFlip.mask() | FaultKind::DmaCorrupt.mask() | FaultKind::DmaDrop.mask(),
+        )
+        .detect(false);
+
+    let mut clean_eng = base_cfg().build();
+    let clean = clean_eng.run_network("mini", &layers, &input).unwrap();
+    let mut eng = base_cfg().faults(silent).build();
+    let r = eng.run_network("mini", &layers, &input).unwrap();
+
+    assert!(
+        clean.layers.iter().zip(&r.layers).any(|(lc, lf)| lf.out != lc.out),
+        "silent campaign left every output intact — the injector is not live"
+    );
+    // silent faults charge nothing: no detection, no recovery pricing
+    assert_eq!(r.fault_retries(), 0);
+    assert_eq!(r.fault_recovery_cycles(), 0);
+}
+
+#[test]
+fn detection_pricing_is_never_free() {
+    // a rate-0 plan injects nothing but still pays the per-transfer
+    // checksum cycles — detection is modeled hardware, not a free flag
+    let layers = mini_net();
+    let input = net_input();
+    let mut clean_eng = base_cfg().build();
+    let clean = clean_eng.run_network("mini", &layers, &input).unwrap();
+    let mut eng = base_cfg().faults(FaultPlan::new(7, 0.0)).build();
+    let r = eng.run_network("mini", &layers, &input).unwrap();
+    for (lc, lf) in clean.layers.iter().zip(&r.layers) {
+        assert_eq!(lf.out, lc.out);
+        assert!(
+            lf.cycles > lc.cycles,
+            "layer {}: checksum verification must cost cycles",
+            lc.name
+        );
+    }
+    assert_eq!(r.fault_retries(), 0);
+}
+
+#[test]
+fn replaying_a_campaign_is_bit_identical() {
+    let layers = mini_net();
+    let input = net_input();
+    let plan = FaultPlan::new(TRANSIENT_SEED, 0.30);
+    let run = || {
+        let mut eng = base_cfg().cores(4).faults(plan).build();
+        eng.run_network("mini", &layers, &input).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.fault_retries(), b.fault_retries());
+    assert_eq!(a.fault_recovery_cycles(), b.fault_recovery_cycles());
+    assert_eq!(a.cycles(), b.cycles());
+    for (la, lb) in a.layers.iter().zip(&b.layers) {
+        assert_eq!(la.out, lb.out);
+        assert_eq!(la.cycles, lb.cycles);
+    }
+}
+
+#[test]
+fn core_exhaustion_degrades_sharded_network_onto_survivors() {
+    let layers = mini_net();
+    let input = net_input();
+    // seed 2 at rate 0.25 with ONLY CoreFail enabled has exactly one
+    // faulting site over the 2-core run: (layer "c3g", core 1); the
+    // survivor's sites are all clean, so the degraded re-run completes
+    let plan = FaultPlan::new(2, 0.25).kinds(FaultKind::CoreFail.mask());
+
+    let mut clean_eng = base_cfg().cores(2).build();
+    let clean = clean_eng.run_network("mini", &layers, &input).unwrap();
+
+    let mut eng = base_cfg().cores(2).faults(plan).build();
+    let r = eng.run_network("mini", &layers, &input).unwrap();
+    assert_eq!(eng.blacklisted_cores(), &[1], "core 1 must be written off");
+    for (lc, lf) in clean.layers.iter().zip(&r.layers) {
+        assert_eq!(lf.out, lc.out, "degraded layer {} diverged", lc.name);
+        assert_eq!(lf.macs, lc.macs);
+    }
+    // the wasted attempts are charged: strictly slower than clean
+    assert!(r.cycles() > clean.cycles());
+    assert!(r.fault_recovery_cycles() > 0);
+}
+
+#[test]
+fn core_exhaustion_degrades_batched_pool_and_reports_topology() {
+    let layers = mini_net();
+    let inputs = frame_inputs(6);
+    // seed 47 at rate 0.15 with ONLY CoreFail enabled: exactly one
+    // faulting site under the 3-core frame mapping — (frame 0, layer
+    // "c2", core 0) — and the survivor remapping over cores {1, 2}
+    // draws nothing, so the episode finishes on 2 cores
+    let plan = FaultPlan::new(47, 0.15).kinds(FaultKind::CoreFail.mask());
+
+    let mut clean_eng = base_cfg().cores(3).batch(6).build();
+    let clean = clean_eng.run_batched("mini", &layers, &inputs).unwrap();
+
+    let mut eng = base_cfg().cores(3).batch(6).faults(plan).build();
+    let br = eng.run_batched("mini", &layers, &inputs).unwrap();
+
+    assert!(br.faults.degraded(), "exhaustion campaign must degrade, not crash");
+    assert_eq!(br.faults.blacklisted_cores, vec![0]);
+    assert_eq!(eng.blacklisted_cores(), &[0]);
+    assert!(br.faults.degrade_waste_cycles > 0);
+    assert!(br.faults.recovery_cycles >= br.faults.degrade_waste_cycles);
+    assert!(
+        br.makespan_cycles() > clean.makespan_cycles(),
+        "a degraded episode cannot be as fast as the healthy one"
+    );
+    for (fc, ff) in clean.frames.iter().zip(&br.frames) {
+        for (lc, lf) in fc.layers.iter().zip(&ff.layers) {
+            assert_eq!(lf.out, lc.out, "degraded frame output diverged at {}", lc.name);
+        }
+    }
+}
+
+#[test]
+fn last_core_failure_is_an_error_not_a_panic() {
+    let layers = mini_net();
+    let input = net_input();
+    // rate 1.0, CoreFail only: every site faults, every core dies;
+    // when one core is left the engine must surface the failure
+    let plan = FaultPlan::new(5, 1.0).kinds(FaultKind::CoreFail.mask());
+    let mut eng = base_cfg().cores(2).faults(plan).build();
+    let err = eng.run_network("mini", &layers, &input).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("core"), "error should name the failing core: {msg}");
+}
+
+#[test]
+fn streaming_under_auto_partition_survives_injection() {
+    let layers = mini_net();
+    let inputs = frame_inputs(3);
+    let plan = FaultPlan::new(TRANSIENT_SEED, 0.30);
+    let mut clean_eng = base_cfg()
+        .cores(3)
+        .batch(3)
+        .pool_mode(PoolMode::Pipelined)
+        .stage_cores(StageCores::Auto)
+        .build();
+    let clean = clean_eng.run_streaming("mini", &layers, &inputs).unwrap();
+    let mut eng = base_cfg()
+        .cores(3)
+        .batch(3)
+        .pool_mode(PoolMode::Pipelined)
+        .stage_cores(StageCores::Auto)
+        .faults(plan)
+        .build();
+    let pr = eng.run_streaming("mini", &layers, &inputs).unwrap();
+    for (fc, ff) in clean.frames.iter().zip(&pr.frames) {
+        for (lc, lf) in fc.layers.iter().zip(&ff.layers) {
+            assert_eq!(lf.out, lc.out, "auto-partition layer {} diverged", lc.name);
+        }
+    }
+    assert!(pr.faults.retries > 0);
+    assert!(pr.makespan_cycles > clean.makespan_cycles);
+}

@@ -64,5 +64,33 @@ if [ -n "$allow_hits" ]; then
   exit 1
 fi
 
+# The coordinator and the CLI are the layers that turned panics into
+# typed errors in 0.10 (ExecError::CoreFailure routes worker-thread
+# deaths into the blacklist/degrade path instead of crashing the run),
+# so they do not get to reintroduce bare `.unwrap()` in non-test code.
+# Escape hatch: a `// invariant:` comment on the same line stating why
+# the unwrap cannot fire. Doc comments and test modules (everything
+# from `#[cfg(test)]` down — the repo convention keeps test modules at
+# the bottom of the file) are exempt.
+unwrap_hits=""
+for f in rust/src/coordinator/*.rs rust/src/cli/*.rs; do
+  hits=$(awk -v file="$f" '
+    /#\[cfg\(test\)\]/ { exit }
+    /^\s*\/\// { next }
+    /\.unwrap\(\)/ && !/invariant:/ { print file ":" FNR ": " $0 }
+  ' "$f")
+  [ -n "$hits" ] && unwrap_hits="${unwrap_hits}${hits}"$'\n'
+done
+if [ -n "$unwrap_hits" ]; then
+  echo "ERROR: bare .unwrap() in coordinator/CLI non-test code."
+  echo "Return an ExecError (CoreFailure/Config/...) or justify the"
+  echo "invariant with a '// invariant: <why this cannot fail>' comment"
+  echo "on the same line:"
+  echo
+  echo "$unwrap_hits"
+  exit 1
+fi
+
 echo "OK: the retired 0.2 free-function API has not come back."
 echo "OK: no unexplained #[allow] in rust/src/isa/analysis."
+echo "OK: no bare .unwrap() in coordinator/CLI non-test code."
